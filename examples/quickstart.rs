@@ -1,0 +1,57 @@
+//! Quickstart: compose library calls, get ONE fused kernel.
+//!
+//! The paper's core promise: write OpenCV-style code, and the library fuses
+//! the whole chain into a single launch with intermediates in registers.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use fkl::cv::{self, Context};
+use fkl::exec::Engine;
+use fkl::tensor::{DType, Tensor};
+
+fn main() -> anyhow::Result<()> {
+    let ctx = Context::new()?;
+
+    // a batch of 50 tiny camera crops (u8), like the paper's AutomaticTV feed
+    let input = Tensor::from_u8(&vec![128u8; 50 * 60 * 120], &[50, 60, 120]);
+
+    // OpenCV-style calls — each returns a lazy IOp, nothing launches yet
+    let iops = [
+        cv::convert_to(), // 8U -> 32F
+        cv::multiply(1.0 / 255.0),
+        cv::subtract(0.45),
+        cv::divide(0.226), // standard normalization
+    ];
+
+    // ... until the executor fuses the chain into ONE kernel launch
+    let out = cv::execute_operations(&ctx, &input, DType::F32, &iops)?;
+    println!("output: {:?} {:?}", out.dtype(), out.shape());
+    println!("sample: {:?}", &out.as_f32().unwrap()[..4]);
+
+    // what did the planner do?
+    let p = cv::build_pipeline(&input, DType::F32, &iops)?;
+    let plan = ctx.fused.plan_for(&p)?;
+    println!("plan tier: {} ({} launch)", plan.tier(), plan.launches());
+
+    // versus the way stock OpenCV-CUDA would run the same chain
+    let t0 = std::time::Instant::now();
+    let _ = cv::execute_operations(&ctx, &input, DType::F32, &iops)?;
+    let fused_t = t0.elapsed();
+    let t0 = std::time::Instant::now();
+    let _ = cv::execute_operations_opencv_style(&ctx, &input, DType::F32, &iops)?;
+    let unfused_t = t0.elapsed();
+    println!(
+        "fused {:.2}ms vs per-op {:.2}ms -> {:.1}x ({} launches saved)",
+        fused_t.as_secs_f64() * 1e3,
+        unfused_t.as_secs_f64() * 1e3,
+        unfused_t.as_secs_f64() / fused_t.as_secs_f64(),
+        ctx.unfused.last_launches() - 1,
+    );
+
+    // and the device memory VF avoids allocating
+    let r = fkl::fusion::memsave::report(&p);
+    println!("device memory saved: {} KB", r.saved() / 1024);
+    Ok(())
+}

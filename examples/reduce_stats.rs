@@ -1,0 +1,54 @@
+//! ReduceDPP demo (paper §IV-C): max, min, sum and mean of a matrix with a
+//! SINGLE pass over the data — the paper's motivating example for the second
+//! Data Parallel Pattern.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example reduce_stats
+//! ```
+
+use fkl::cv::Context;
+use fkl::proplite::Rng;
+use fkl::tensor::Tensor;
+
+fn main() -> anyhow::Result<()> {
+    let ctx = Context::new()?;
+    let mut rng = Rng::new(4);
+    let x = Tensor::from_f32(&rng.vec_f32(512 * 512, -100.0, 100.0), &[512, 512]);
+
+    // one fused launch computing all four statistics
+    let name = "reduce_stats_f32_512x512_pallas";
+    let out = ctx.fused.executor().run(name, &[x.clone()])?;
+    let s = out.as_f32().unwrap().to_vec();
+    println!(
+        "one-pass ReduceDPP: max={:.3} min={:.3} sum={:.1} mean={:.4}",
+        s[0], s[1], s[2], s[3]
+    );
+
+    // oracle check
+    let [mx, mn, sum, mean] = fkl::hostref::reduce_stats(&x);
+    assert!((s[0] as f64 - mx).abs() < 1e-3);
+    assert!((s[1] as f64 - mn).abs() < 1e-3);
+    assert!((s[2] as f64 - sum).abs() < sum.abs() * 1e-4 + 1.0);
+    assert!((s[3] as f64 - mean).abs() < 1e-3);
+    println!("matches hostref oracle");
+
+    // the naive alternative sweeps the matrix four times on host; compare:
+    let reps = 20;
+    let t0 = std::time::Instant::now();
+    for _ in 0..reps {
+        std::hint::black_box(ctx.fused.executor().run(name, &[x.clone()])?);
+    }
+    let one_pass = t0.elapsed().as_secs_f64() / reps as f64;
+    let t0 = std::time::Instant::now();
+    for _ in 0..reps {
+        let v = x.as_f32().unwrap();
+        let mx = v.iter().copied().fold(f32::MIN, f32::max);
+        let mn = v.iter().copied().fold(f32::MAX, f32::min);
+        let sum: f32 = v.iter().sum();
+        let mean = sum / v.len() as f32;
+        std::hint::black_box((mx, mn, sum, mean));
+    }
+    let four_pass = t0.elapsed().as_secs_f64() / reps as f64;
+    println!("fused one-pass {:.3}ms vs 4-sweep host {:.3}ms", one_pass * 1e3, four_pass * 1e3);
+    Ok(())
+}

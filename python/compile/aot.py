@@ -1,0 +1,224 @@
+"""AOT driver: lower the whole artifact family to HLO text + manifest.json.
+
+Python runs exactly once, at build time (``make artifacts``); the Rust
+coordinator is self-contained afterwards. Interchange is HLO **text** — NOT
+``lowered.compiler_ir("hlo")`` protos or ``.serialize()`` — because jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+The artifact family below is the system's "pre-instantiated template set":
+the analog of every template instantiation the paper's C++ compiler would
+produce for the evaluation section, plus the generic interpreter artifacts
+that cover chains with no exact match (DESIGN.md §3.6, §5).
+
+Experiment scale: paper-scale images (4096x2160, 66M-element vectors) make
+CPU baseline sweeps take hours; the default family is scaled down (documented
+in EXPERIMENTS.md) and ``--paper-scale`` restores the full sizes.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import jax
+
+# f64 artifacts (Fig. 23 dtype combos) require real double support; without
+# this flag jax silently computes them in f32.
+jax.config.update("jax_enable_x64", True)
+
+from compile import model
+from compile.opcodes import OPS
+
+# ---------------------------------------------------------------------------
+# Experiment geometry (single source of truth; the manifest carries it to Rust)
+# ---------------------------------------------------------------------------
+
+SCALED = {
+    # xp02 VF sweep image (paper: 4096x2160 u8)
+    "vf_shape": (512, 1024),
+    # fig1 / xp05 1-D vector (paper: 3840*2160*8 = 66.3M f32)
+    "vec_n": 4_194_304,
+    # xp07 data-size sweep (paper: 100 .. 16,654,030) — kept, it is feasible
+    "sizes": [100, 1_000, 10_000, 100_000, 282_370, 1_000_000, 3_000_000, 9_032_740, 16_654_030],
+}
+PAPER = {
+    "vf_shape": (2160, 4096),
+    "vec_n": 66_355_200,
+    "sizes": SCALED["sizes"],
+}
+
+# HF batch buckets (paper sweeps 1..1,191 by tens; log-spaced buckets here,
+# the Rust HF planner pads to the next bucket and accounts the pad)
+HF_BATCHES = [1, 2, 4, 8, 16, 25, 50, 100, 150, 200, 300, 400, 600]
+# preprocessing pipeline batch buckets (paper: 2..152)
+PREPROC_BATCHES = [2, 8, 16, 32, 50, 64, 100, 128, 152]
+# dtype in->out combos of Fig. 23
+DTYPE_COMBOS = [
+    ("u8", "u8"),
+    ("u8", "f32"),
+    ("u16", "f32"),
+    ("f32", "f32"),
+    ("f32", "f64"),
+    ("f64", "f64"),
+    ("u8", "f64"),
+    ("f32", "u8"),
+]
+# the Fig. 17/23 per-element chain: Cast -> Mul -> Sub -> Div
+CMSD = ["nop", "mul", "sub", "div"]
+# production pipeline geometry (paper: 60x120 crops resized to 64x128)
+FRAME_SHAPE = (720, 1280, 3)
+CROP_H, CROP_W = 60, 120
+DST_H, DST_W = 128, 64
+INTERP_KMAX = 16
+
+
+def family(scale):
+    """Yield (builder_fn, args, kwargs) for every artifact in the family."""
+    g = []
+    vf_shape = scale["vf_shape"]
+    vec_n = scale["vec_n"]
+
+    # -- vertical-slice smoke artifact (tiny; used by rust integration tests)
+    g.append((model.build_chain, (["mul", "add"], (4, 8), 2, "f32", "f32"), {}))
+    g.append((model.build_chain, (["mul", "add"], (4, 8), 2, "f32", "f32"), {"variant": "xla"}))
+
+    # -- Fig. 1 / xp05: staticloop over a flat f32 vector, runtime trip count
+    g.append((model.build_staticloop, (["mul"], (vec_n,), 1, "f32", "f32"), {}))
+    g.append((model.build_staticloop, (["mul", "add"], (vec_n,), 1, "f32", "f32"), {}))
+    g.append((model.build_staticloop, (["mul", "add"], (vec_n,), 1, "f32", "f32"), {"variant": "xla"}))
+
+    # -- xp02: VF sweep on the big u8 image — fused staticloop + unfused per-op
+    for ops in (["mul"], ["mul", "add"]):
+        g.append((model.build_staticloop, (ops, vf_shape, 1, "u8", "u8"), {}))
+    for op in ("mul", "add"):
+        g.append((model.build_chain, ([op], vf_shape, 1, "u8", "u8"), {}))
+
+    # -- xp03: HF sweep — the CMSD chain at every batch bucket
+    for b in HF_BATCHES:
+        g.append((model.build_chain, (CMSD, (CROP_H, CROP_W), b, "u8", "f32"), {}))
+
+    # -- xp04: VF x HF — staticloop muladd at batch 50 + per-op baselines
+    g.append((model.build_staticloop, (["mul", "add"], (CROP_H, CROP_W), 50, "u8", "u8"), {}))
+    for op in ("mul", "add"):
+        g.append((model.build_chain, ([op], (CROP_H, CROP_W), 1, "u8", "u8"), {}))
+
+    # -- xp07: data-size sweep — staticloop muladd per size bucket, plus the
+    #    per-op singles the unfused baseline launches (one kernel per op)
+    for n in scale["sizes"]:
+        g.append((model.build_staticloop, (["mul", "add"], (n,), 1, "f32", "f32"), {}))
+        for op in ("mul", "add"):
+            g.append((model.build_chain, ([op], (n,), 1, "f32", "f32"), {}))
+
+    # -- xp09: dtype combos of the CMSD chain at batch 50
+    for dtin, dtout in DTYPE_COMBOS:
+        g.append((model.build_chain, (CMSD, (CROP_H, CROP_W), 50, dtin, dtout), {}))
+        # unfused per-op vocabulary in matching dtypes (each step io in dtout
+        # domain after the cast step, like OpenCV convertTo + arithm calls)
+        g.append((model.build_chain, (["nop"], (CROP_H, CROP_W), 1, dtin, dtout), {}))
+        for op in ("mul", "sub", "div"):
+            g.append((model.build_chain, ([op], (CROP_H, CROP_W), 1, dtout, dtout), {}))
+
+    # -- ablation: same CMSD chain, XLA-lowered (no Pallas structure)
+    g.append((model.build_chain, (CMSD, (CROP_H, CROP_W), 50, "u8", "f32"), {"variant": "xla"}))
+
+    # -- xp06/xp10: fused preprocessing pipeline per batch bucket + step vocab
+    for b in PREPROC_BATCHES:
+        g.append((model.build_preproc, (FRAME_SHAPE, b, DST_H, DST_W), {}))
+    g.append((model.build_preproc, (FRAME_SHAPE, 2, DST_H, DST_W), {"variant": "xla"}))
+    for step in ("crop", "convert", "resize", "cvtcolor", "mulc", "subc", "divc", "split"):
+        g.append((model.build_preproc_step, (step, FRAME_SHAPE, CROP_H, CROP_W, DST_H, DST_W), {}))
+
+    # -- interpreter artifacts (generic runtime fusion, tier 3)
+    g.append((model.build_interp, (INTERP_KMAX, (CROP_H, CROP_W), 50, "u8", "f32"), {}))
+    g.append((model.build_interp, (INTERP_KMAX, (256, 256), 1, "f32", "f32"), {}))
+    g.append((model.build_interp, (INTERP_KMAX, (256, 256), 1, "f32", "f32"), {"variant": "xla"}))
+
+    # -- ReduceDPP artifact
+    g.append((model.build_reduce_stats, ((512, 512), "f32"), {}))
+    g.append((model.build_reduce_stats, ((512, 512), "f32"), {"variant": "xla"}))
+
+    return g
+
+
+def to_hlo_text(fn, specs) -> str:
+    """jit -> lower -> stablehlo -> XlaComputation -> HLO text."""
+    from jax._src.lib import xla_client as xc
+
+    lowered = jax.jit(fn).lower(*specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    # return_tuple=False: every artifact has exactly one output, and a plain
+    # array root lets the Rust side chain device-resident buffers between
+    # executables (a tuple root would interpose an 8-byte tuple index buffer
+    # that PJRT cannot feed to the next executable's array parameter).
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
+    )
+    return comp.as_hlo_text()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--paper-scale", action="store_true", help="full paper sizes")
+    ap.add_argument("--only", default=None, help="substring filter on artifact names")
+    ap.add_argument("--force", action="store_true", help="rebuild even if file exists")
+    args = ap.parse_args()
+
+    scale = PAPER if args.paper_scale else SCALED
+    outdir = os.path.abspath(args.out)
+    os.makedirs(outdir, exist_ok=True)
+
+    entries = []
+    built = skipped = 0
+    for builder, bargs, bkwargs in family(scale):
+        fn, specs, entry = builder(*bargs, **bkwargs)
+        name = entry["name"]
+        if args.only and args.only not in name:
+            continue
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(outdir, fname)
+        entry["file"] = fname
+        if os.path.exists(path) and not args.force:
+            skipped += 1
+        else:
+            text = to_hlo_text(fn, specs)
+            with open(path, "w") as f:
+                f.write(text)
+            built += 1
+            print(f"  [{built:3d}] {name} ({len(text)} chars)")
+        entry["sha256"] = hashlib.sha256(open(path, "rb").read()).hexdigest()[:16]
+        entries.append(entry)
+
+    manifest = {
+        "version": 1,
+        "scale": "paper" if args.paper_scale else "scaled",
+        "opcodes": {name: code for name, (code, _) in OPS.items()},
+        "geometry": {
+            "vf_shape": list(scale["vf_shape"]),
+            "vec_n": scale["vec_n"],
+            "sizes": scale["sizes"],
+            "hf_batches": HF_BATCHES,
+            "preproc_batches": PREPROC_BATCHES,
+            "dtype_combos": [list(c) for c in DTYPE_COMBOS],
+            "frame_shape": list(FRAME_SHAPE),
+            "crop": [CROP_H, CROP_W],
+            "dst": [DST_H, DST_W],
+            "interp_kmax": INTERP_KMAX,
+        },
+        "artifacts": entries,
+    }
+    mpath = os.path.join(outdir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {mpath}: {len(entries)} artifacts ({built} built, {skipped} cached)")
+
+
+if __name__ == "__main__":
+    main()

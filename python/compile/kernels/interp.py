@@ -1,0 +1,53 @@
+"""InterpDPP — the generic runtime-fusion kernel.
+
+The paper achieves "any combination of library functions fuses" through C++
+template instantiation at the *user's* compile time. Our runtime is a
+self-contained Rust binary with no Python/JAX available, so arbitrary chains
+cannot trigger a fresh AOT lowering on the request path. This kernel is the
+substitution (DESIGN.md §3.6): ONE artifact whose op chain is a runtime input.
+
+The opcode vector (i32[K]) and parameter vector (f32[K]) drive a
+``lax.switch`` inside a ``fori_loop`` *inside the Pallas kernel body*, so the
+whole interpreted chain still executes in one launch with the running value
+held in registers — Vertical Fusion with a dynamic program. Unused slots are
+``nop`` (opcode 0). The Rust fusion planner falls back to this tier whenever
+no exact or StaticLoop artifact matches the user's pipeline.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from compile.opcodes import DTYPES, N_OPS, cast_in, cast_out, switch_branches
+
+
+def make_interp(kmax, shape, batch, dtin, dtout):
+    """Build the interpreter kernel.
+
+    Returns ``f(x, opcodes, params) -> y`` with x: dtin[batch, *shape],
+    opcodes: i32[kmax], params: f32[kmax].
+    """
+    branches = switch_branches()
+
+    def kernel(x_ref, opc_ref, par_ref, o_ref):
+        v = cast_in(x_ref[...], dtin, dtout)
+
+        def body(i, v):
+            op = jnp.clip(opc_ref[i], 0, N_OPS - 1)
+            return lax.switch(op, branches, v, par_ref[i].astype(v.dtype))
+
+        v = lax.fori_loop(0, kmax, body, v)
+        o_ref[...] = cast_out(v, dtin, dtout)
+
+    # whole-array single program (see transform.make_chain PERF note)
+    def f(x, opcodes, params):
+        return pl.pallas_call(
+            kernel,
+            out_shape=jax.ShapeDtypeStruct((batch,) + tuple(shape), DTYPES[dtout]),
+            interpret=True,
+        )(x, opcodes, params)
+
+    return f

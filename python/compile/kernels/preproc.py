@@ -1,0 +1,111 @@
+"""PreprocDPP — the paper's production pipeline as one fused Pallas kernel.
+
+Fig. 25 workload: Batch(Crop -> Resize -> ColorConvert -> Multiply ->
+Subtract -> Divide -> Split). This is the kernel AutomaticTV runs in
+production per the paper; it exercises every Op class at once:
+
+* Crop + bilinear Resize  — a non-trivial ReadOp (gather pattern, Fig. 11)
+* ColorConvert            — a UnaryOp (channel swizzle)
+* Mul/Sub/Div             — BinaryOps with per-channel (float3) params
+* Split                   — a WriteOp (packed -> planar layout, Fig. 11)
+
+HF is the grid batch axis: one program per crop (the paper's blockIdx.z
+plane); each program gathers its own ROI from the shared source frame, so a
+whole batch of differently-cropped, differently-sized regions is served by a
+single launch — this is the paper's BatchRead with per-plane params.
+
+On a TPU the frame would sit in HBM with dynamic-slice gathers; under
+interpret=True the full-frame ref load is exact and cheap on CPU.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from compile.kernels.ref import bilinear_gather
+
+
+def make_preproc(frame_shape, batch, dh, dw):
+    """Build the fused preprocessing kernel.
+
+    Returns ``f(frame, rects, mulv, subv, divv) -> f32[batch, 3, dh, dw]``
+    with frame: u8[H, W, 3], rects: i32[batch, 4] (x0, y0, w, h),
+    mulv/subv/divv: f32[3].
+    """
+    fh, fw, _ = frame_shape
+
+    def kernel(frame_ref, rect_ref, mul_ref, sub_ref, div_ref, o_ref):
+        frame = frame_ref[...].astype(jnp.float32)  # ReadOp source
+        x0, y0 = rect_ref[0, 0], rect_ref[0, 1]
+        w, h = rect_ref[0, 2], rect_ref[0, 3]
+        # Crop + Resize: bilinear gather of this program's ROI
+        img = bilinear_gather(frame, x0, y0, w, h, dh, dw)  # (dh, dw, 3)
+        # ColorConvert: RGB <-> BGR
+        img = img[:, :, ::-1]
+        # Mul / Sub / Div with float3 params
+        img = (img * mul_ref[...] - sub_ref[...]) / div_ref[...]
+        # Split WOp: packed (dh, dw, 3) -> planar (3, dh, dw)
+        o_ref[...] = jnp.transpose(img, (2, 0, 1))[None]
+
+    def f(frame, rects, mulv, subv, divv):
+        return pl.pallas_call(
+            kernel,
+            grid=(batch,),
+            in_specs=[
+                pl.BlockSpec((fh, fw, 3), lambda b: (0, 0, 0)),
+                pl.BlockSpec((1, 4), lambda b: (b, 0)),
+                pl.BlockSpec((3,), lambda b: (0,)),
+                pl.BlockSpec((3,), lambda b: (0,)),
+                pl.BlockSpec((3,), lambda b: (0,)),
+            ],
+            out_specs=pl.BlockSpec((1, 3, dh, dw), lambda b: (b, 0, 0, 0)),
+            out_shape=jax.ShapeDtypeStruct((batch, 3, dh, dw), jnp.float32),
+            interpret=True,
+        )(frame, rects, mulv, subv, divv)
+
+    return f
+
+
+def make_single_steps(dh, dw, src_h, src_w):
+    """The UNFUSED baseline vocabulary for the same pipeline — one jax fn per
+    library call, exactly how OpenCV-CUDA/NPP structure it (paper Fig. 25,
+    top halves). Each returns a separately-AOT'd executable, so running the
+    pipeline costs one dispatch + one full memory pass per step.
+
+    Returns dict of name -> (fn, arg specs builder handled in model.py).
+    """
+
+    def convert(x):  # u8 HWC -> f32 HWC   (cv::convertTo / nppiConvert)
+        return x.astype(jnp.float32)
+
+    def resize(x):  # f32 (src_h,src_w,3) -> f32 (dh,dw,3)
+        h = jnp.int32(src_h)
+        w = jnp.int32(src_w)
+        return bilinear_gather(x, jnp.int32(0), jnp.int32(0), w, h, dh, dw)
+
+    def cvtcolor(x):  # BGR<->RGB
+        return x[:, :, ::-1]
+
+    def mulc(x, v):
+        return x * v
+
+    def subc(x, v):
+        return x - v
+
+    def divc(x, v):
+        return x / v
+
+    def split(x):  # packed -> planar
+        return jnp.transpose(x, (2, 0, 1))
+
+    return {
+        "convert": convert,
+        "resize": resize,
+        "cvtcolor": cvtcolor,
+        "mulc": mulc,
+        "subc": subc,
+        "divc": divc,
+        "split": split,
+    }

@@ -1,0 +1,65 @@
+"""ReduceDPP — the paper's second Data Parallel Pattern (§IV-C).
+
+The paper's motivating example: "with a ReduceDPP ... for a given matrix we
+may find the maximum value, the minimum value, the addition of all the
+elements, and the mean value, all by reading the source data only once."
+
+This kernel does exactly that: the grid walks row tiles; each program folds
+its tile into four accumulators held in the output block (max, min, sum,
+count-scaled mean). Sequential-grid accumulation is the interpret/TPU-safe
+revision of a tree reduction: Pallas guarantees grid-order execution on TPU,
+so read-modify-write of the out block across programs is well defined.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from compile.opcodes import DTYPES
+
+
+def make_reduce_stats(shape, dtin, tile_rows=64):
+    """One-pass (max, min, sum, mean) over a 2-D matrix.
+
+    Returns ``f(x) -> f32[4]``. Input x: dtin[H, W].
+    """
+    h, w = shape
+    tile = tile_rows if h % tile_rows == 0 else 1
+    n_tiles = h // tile
+    total = float(h * w)
+
+    def kernel(x_ref, o_ref):
+        r = pl.program_id(0)
+        v = x_ref[...].astype(jnp.float32)
+        tmax = jnp.max(v)
+        tmin = jnp.min(v)
+        tsum = jnp.sum(v)
+
+        @pl.when(r == 0)
+        def _init():
+            o_ref[0] = tmax
+            o_ref[1] = tmin
+            o_ref[2] = tsum
+            o_ref[3] = tsum / total
+
+        @pl.when(r != 0)
+        def _fold():
+            o_ref[0] = jnp.maximum(o_ref[0], tmax)
+            o_ref[1] = jnp.minimum(o_ref[1], tmin)
+            s = o_ref[2] + tsum
+            o_ref[2] = s
+            o_ref[3] = s / total
+
+    def f(x):
+        return pl.pallas_call(
+            kernel,
+            grid=(n_tiles,),
+            in_specs=[pl.BlockSpec((tile, w), lambda r: (r, 0))],
+            out_specs=pl.BlockSpec((4,), lambda r: (0,)),
+            out_shape=jax.ShapeDtypeStruct((4,), jnp.float32),
+            interpret=True,
+        )(x)
+
+    return f

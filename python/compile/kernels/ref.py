@@ -1,0 +1,121 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the correctness baseline: pytest asserts each Pallas kernel (run in
+interpret mode) matches its oracle to tight tolerances. They are also lowered
+to HLO as the ``variant == "xla"`` artifact family, used by the Rust planner
+ablation (Pallas-structured vs XLA-auto-fused lowering of the same chain).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from compile.opcodes import apply_op, cast_in, cast_out
+
+
+def chain_ref(x, params, ops, dtin, dtout):
+    """Fused chain semantics: one read, ops applied in order, one write.
+
+    ``params[i]`` is the scalar parameter of ``ops[i]`` (ignored by unary ops).
+    """
+    v = cast_in(x, dtin, dtout)
+    for i, name in enumerate(ops):
+        v = apply_op(name, v, params[i].astype(v.dtype))
+    return cast_out(v, dtin, dtout)
+
+
+def staticloop_ref(x, params, iters, ops, dtin, dtout):
+    """Paper's StaticLoop: the op chain body repeated ``iters`` times without
+    re-touching memory. ``iters`` is a runtime scalar."""
+    v = cast_in(x, dtin, dtout)
+    ps = params.astype(v.dtype)
+
+    def body(_, v):
+        for i, name in enumerate(ops):
+            v = apply_op(name, v, ps[i])
+        return v
+
+    v = lax.fori_loop(0, iters, body, v)
+    return cast_out(v, dtin, dtout)
+
+
+def interp_ref(x, opcodes, params):
+    """Interpreter semantics (f32 domain): apply opcodes[i] with params[i]."""
+    from compile.opcodes import switch_branches
+
+    branches = switch_branches()
+
+    def body(i, v):
+        return lax.switch(jnp.clip(opcodes[i], 0, len(branches) - 1), branches, v, params[i])
+
+    return lax.fori_loop(0, opcodes.shape[0], body, x)
+
+
+def reduce_stats_ref(x):
+    """One-pass multi-statistic reduction (paper §IV-C ReduceDPP example:
+    max, min, sum and mean of a matrix reading the source once)."""
+    xf = x.astype(jnp.float32)
+    s = jnp.sum(xf)
+    return jnp.stack([jnp.max(xf), jnp.min(xf), s, s / xf.size])
+
+
+def bilinear_gather(frame_f32, x0, y0, w, h, dh, dw):
+    """Sample a (h, w) crop of ``frame_f32`` (H, W, C) to (dh, dw, C) with
+    bilinear interpolation, half-pixel centers (matches cv2.resize LINEAR).
+
+    x0/y0/w/h are runtime scalars (i32); dh/dw are static.
+    """
+    H, W = frame_f32.shape[0], frame_f32.shape[1]
+    sy = h.astype(jnp.float32) / dh
+    sx = w.astype(jnp.float32) / dw
+    dy = (jnp.arange(dh, dtype=jnp.float32) + 0.5) * sy - 0.5
+    dx = (jnp.arange(dw, dtype=jnp.float32) + 0.5) * sx - 0.5
+    fy = jnp.clip(dy, 0.0, h.astype(jnp.float32) - 1.0)
+    fx = jnp.clip(dx, 0.0, w.astype(jnp.float32) - 1.0)
+    y0i = jnp.floor(fy).astype(jnp.int32)
+    x0i = jnp.floor(fx).astype(jnp.int32)
+    y1i = jnp.minimum(y0i + 1, h - 1)
+    x1i = jnp.minimum(x0i + 1, w - 1)
+    wy = (fy - y0i.astype(jnp.float32))[:, None, None]
+    wx = (fx - x0i.astype(jnp.float32))[None, :, None]
+
+    def at(yi, xi):
+        yy = jnp.clip(y0 + yi, 0, H - 1)
+        xx = jnp.clip(x0 + xi, 0, W - 1)
+        return frame_f32[yy[:, None], xx[None, :], :]
+
+    p00 = at(y0i, x0i)
+    p01 = at(y0i, x1i)
+    p10 = at(y1i, x0i)
+    p11 = at(y1i, x1i)
+    top = p00 * (1 - wx) + p01 * wx
+    bot = p10 * (1 - wx) + p11 * wx
+    return top * (1 - wy) + bot * wy
+
+
+def preproc_ref(frame, rects, mulv, subv, divv, dh, dw):
+    """The paper's production pipeline (Fig. 25):
+    Batch(Crop -> Resize -> ColorConvert -> Mul -> Sub -> Div -> Split).
+
+    frame: u8 [H, W, 3]; rects: i32 [B, 4] as (x0, y0, w, h);
+    mulv/subv/divv: f32 [3]; output planar f32 [B, 3, dh, dw] (the Split WOp).
+    """
+    frame_f = frame.astype(jnp.float32)
+
+    def one(rect):
+        x0, y0, w, h = rect[0], rect[1], rect[2], rect[3]
+        img = bilinear_gather(frame_f, x0, y0, w, h, dh, dw)  # (dh, dw, 3)
+        img = img[:, :, ::-1]  # ColorConvert: RGB<->BGR swizzle
+        img = (img * mulv - subv) / divv
+        return jnp.transpose(img, (2, 0, 1))  # Split: packed -> planar
+
+    return jax.vmap(one)(rects)
+
+
+def resize_ref(img_f32, dh, dw):
+    """Whole-image bilinear resize oracle (single-op NPP/OpenCV baseline)."""
+    h = jnp.int32(img_f32.shape[0])
+    w = jnp.int32(img_f32.shape[1])
+    return bilinear_gather(img_f32, jnp.int32(0), jnp.int32(0), w, h, dh, dw)

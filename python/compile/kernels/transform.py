@@ -1,0 +1,162 @@
+"""TransformDPP — the paper's central Data Parallel Pattern as a Pallas kernel.
+
+The DPP (paper §IV-C, Fig. 13) owns thread behaviour: each grid program reads
+one block from HBM into VMEM, applies the *entire fused op chain* on
+VMEM-resident values (the register-residency analog of paper Fig. 3B / §IV),
+and writes once. The chain itself is data (a list of op names baked at trace
+time = the paper's template-parameter pack), so ANY user chain lowers into
+one kernel — this is Vertical Fusion.
+
+Horizontal Fusion (paper §IV-B BatchRead/BatchWrite, Fig. 12) is the leading
+batch axis: grid dimension 0 is the batch plane (the paper's ``blockIdx.z``),
+and each program's index_map selects its own image — one launch for B inputs.
+
+Hardware adaptation (DESIGN.md §2): on a real TPU the BlockSpecs below tile
+(batch, rows) so that in-block + out-block fit VMEM with double-buffering
+headroom; we run under ``interpret=True`` because the CPU PJRT plugin cannot
+execute Mosaic custom-calls. Numerics are identical between the two paths.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from compile.opcodes import DTYPES, apply_op, cast_in, cast_out
+
+# Row-tile height used when a single image is tall enough to tile. Chosen so a
+# (ROWS_PER_TILE x 4096) f32 in+out block pair stays ~= 256 KiB — far inside a
+# TPU core's ~16 MiB VMEM, leaving >30x headroom for double buffering.
+ROWS_PER_TILE = 32
+
+
+def _chain_body(ops, dtin, dtout, n_params_axes):
+    """Build the kernel body applying ``ops`` with params from a ref.
+
+    n_params_axes == 1: params[i] scalar per op; == 2: params[i, :] length-3
+    channel vector per op (broadcast over the trailing channel axis).
+    """
+
+    def kernel(x_ref, p_ref, o_ref):
+        v = cast_in(x_ref[...], dtin, dtout)
+        for i, name in enumerate(ops):
+            if n_params_axes == 1:
+                p = p_ref[i].astype(v.dtype)
+            else:
+                p = p_ref[i, :].astype(v.dtype)  # broadcasts over channels
+            v = apply_op(name, v, p)
+        o_ref[...] = cast_out(v, dtin, dtout)
+
+    return kernel
+
+
+def make_chain(ops, shape, batch, dtin, dtout, channel_params=False):
+    """Fused-chain TransformDPP.
+
+    Returns ``f(x, params) -> y`` with x: dtin[batch, *shape],
+    params: f32[K] (or f32[K, 3] when ``channel_params``), y: dtout[batch, *shape].
+
+    PERF (EXPERIMENTS.md §Perf L1): on the CPU-PJRT substrate the kernel runs
+    as ONE whole-array program. An earlier revision used grid=(batch,) with
+    per-plane BlockSpecs — the natural TPU schedule — but interpret-mode
+    lowering turns each grid step into dynamic-slice + dynamic-update-slice
+    of the full array, serializing planes and copying the output per plane
+    (16.4ms vs 1.1ms for the CMSD f32 b50 chain). The per-plane HBM<->VMEM
+    schedule survives in :func:`make_chain_tiled` (structure tests + the TPU
+    mapping documented in DESIGN.md §2); numerics are identical.
+    """
+    kernel = _chain_body(ops, dtin, dtout, 2 if channel_params else 1)
+
+    def f(x, params):
+        return pl.pallas_call(
+            kernel,
+            out_shape=jax.ShapeDtypeStruct((batch,) + tuple(shape), DTYPES[dtout]),
+            interpret=True,
+        )(x, params)
+
+    return f
+
+
+def make_staticloop(ops, shape, batch, dtin, dtout):
+    """StaticLoop TransformDPP (paper §VI-B): the chain body repeated a
+    *runtime* number of times, keeping the value in registers throughout.
+
+    The paper uses a StaticLoop Op so 19,902 fused operations do not consume
+    kernel parameter space; here the trip count is a runtime i32[1] input so a
+    single AOT artifact covers the entire VF sweep.
+
+    Returns ``f(iters, x, params) -> y``.
+    """
+    k = len(ops)
+
+    def kernel(n_ref, x_ref, p_ref, o_ref):
+        v = cast_in(x_ref[...], dtin, dtout)
+        ps = [p_ref[i].astype(v.dtype) for i in range(k)]
+
+        def body(_, v):
+            for name, p in zip(ops, ps):
+                v = apply_op(name, v, p)
+            return v
+
+        v = lax.fori_loop(0, n_ref[0], body, v)
+        o_ref[...] = cast_out(v, dtin, dtout)
+
+    # whole-array single program (see make_chain PERF note)
+    def f(iters, x, params):
+        return pl.pallas_call(
+            kernel,
+            out_shape=jax.ShapeDtypeStruct((batch,) + tuple(shape), DTYPES[dtout]),
+            interpret=True,
+        )(iters, x, params)
+
+    return f
+
+
+def make_chain_tiled(ops, shape, batch, dtin, dtout):
+    """Row-tiled variant of :func:`make_chain` for large single images.
+
+    Demonstrates the HBM<->VMEM BlockSpec schedule a real TPU would use
+    (grid = (batch, row_tiles)); used by the L1 structure tests and the
+    block-shape perf ablation. Requires shape == (H, W) with H % tile == 0.
+    """
+    h, w = shape
+    tile = ROWS_PER_TILE if h % ROWS_PER_TILE == 0 else 1
+    kernel = _chain_body(ops, dtin, dtout, 1)
+    k = len(ops)
+
+    def f(x, params):
+        return pl.pallas_call(
+            kernel,
+            grid=(batch, h // tile),
+            in_specs=[
+                pl.BlockSpec((1, tile, w), lambda b, r: (b, r, 0)),
+                pl.BlockSpec((k,), lambda b, r: (0,)),
+            ],
+            out_specs=pl.BlockSpec((1, tile, w), lambda b, r: (b, r, 0)),
+            out_shape=jax.ShapeDtypeStruct((batch, h, w), DTYPES[dtout]),
+            interpret=True,
+        )(x, params)
+
+    return f
+
+
+def vmem_footprint_bytes(ops, shape, dtin, dtout, tiled=False):
+    """Static VMEM estimate for one program of the TransformDPP (DESIGN.md §8).
+
+    in-block + out-block + one live compute value; the op chain adds no
+    footprint because every op is applied value-to-value in registers.
+    """
+    import numpy as np
+
+    if tiled and len(shape) == 2:
+        h, w = shape
+        tile = ROWS_PER_TILE if h % ROWS_PER_TILE == 0 else 1
+        elems = tile * w
+    else:
+        elems = int(np.prod(shape))
+    in_b = elems * jnp.dtype(DTYPES[dtin]).itemsize
+    out_b = elems * jnp.dtype(DTYPES[dtout]).itemsize
+    compute_b = elems * (8 if "f64" in (dtin, dtout) else 4)
+    return in_b + out_b + compute_b

@@ -1,0 +1,266 @@
+"""L2 — artifact builders: every AOT-compiled computation in the system.
+
+Each builder returns ``(fn, arg_specs, manifest_entry)``:
+
+* ``fn``        — a jax-jittable callable (calls the L1 Pallas kernels for the
+                  ``pallas`` variant, or the pure-jnp oracles for the ``xla``
+                  variant used in the lowering ablation),
+* ``arg_specs`` — ShapeDtypeStructs to lower against (argument order == the
+                  order the Rust runtime feeds inputs at execute time),
+* ``manifest_entry`` — the metadata the Rust artifact Registry indexes on.
+
+The artifact *family* (which shapes/batches/chains get pre-AOT'd) is declared
+in :mod:`compile.aot`; this module only knows how to build one of each kind.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from compile.opcodes import DTYPES
+from compile.kernels import interp as k_interp
+from compile.kernels import preproc as k_preproc
+from compile.kernels import reduce as k_reduce
+from compile.kernels import ref as k_ref
+from compile.kernels import transform as k_transform
+
+F32 = jnp.float32
+I32 = jnp.int32
+U8 = jnp.uint8
+
+
+def _sds(shape, dt):
+    return jax.ShapeDtypeStruct(tuple(shape), dt)
+
+
+def _inp(role, dtype, shape):
+    return {"role": role, "dtype": dtype, "shape": list(shape)}
+
+
+def _shape_tag(shape):
+    return "x".join(str(s) for s in shape)
+
+
+def chain_name(ops, dtin, dtout, shape, batch, variant, kind="chain"):
+    return f"{kind}_{'-'.join(ops)}_{dtin}2{dtout}_{_shape_tag(shape)}_b{batch}_{variant}"
+
+
+def build_chain(ops, shape, batch, dtin, dtout, variant="pallas", channel_params=False, kind=None):
+    """Fused op chain (VF; batch > 1 adds HF). kind defaults to single_op for
+    1-op chains — those are the unfused-baseline vocabulary."""
+    kind = kind or ("single_op" if len(ops) == 1 else "chain")
+    k = len(ops)
+    pshape = (k, 3) if channel_params else (k,)
+    full = (batch,) + tuple(shape)
+
+    if variant == "pallas":
+        f = k_transform.make_chain(ops, shape, batch, dtin, dtout, channel_params)
+    else:
+        f = functools.partial(k_ref.chain_ref, ops=ops, dtin=dtin, dtout=dtout)
+
+    specs = [_sds(full, DTYPES[dtin]), _sds(pshape, F32)]
+    entry = {
+        "name": chain_name(ops, dtin, dtout, shape, batch, variant, kind),
+        "kind": kind,
+        "variant": variant,
+        "ops": list(ops),
+        "dtin": dtin,
+        "dtout": dtout,
+        "shape": list(shape),
+        "batch": batch,
+        "channel_params": channel_params,
+        "inputs": [_inp("data", dtin, full), _inp("params", "f32", pshape)],
+        "output": {"dtype": dtout, "shape": list(full)},
+    }
+    return f, specs, entry
+
+
+def build_staticloop(ops, shape, batch, dtin, dtout, variant="pallas"):
+    """Chain body repeated a runtime number of times (arg 0: i32[1])."""
+    k = len(ops)
+    full = (batch,) + tuple(shape)
+
+    if variant == "pallas":
+        f = k_transform.make_staticloop(ops, shape, batch, dtin, dtout)
+    else:
+
+        def f(iters, x, params):
+            return k_ref.staticloop_ref(x, params, iters[0], ops, dtin, dtout)
+
+    specs = [_sds((1,), I32), _sds(full, DTYPES[dtin]), _sds((k,), F32)]
+    entry = {
+        "name": chain_name(ops, dtin, dtout, shape, batch, variant, "staticloop"),
+        "kind": "staticloop",
+        "variant": variant,
+        "ops": list(ops),
+        "dtin": dtin,
+        "dtout": dtout,
+        "shape": list(shape),
+        "batch": batch,
+        "inputs": [
+            _inp("trip", "i32", (1,)),
+            _inp("data", dtin, full),
+            _inp("params", "f32", (k,)),
+        ],
+        "output": {"dtype": dtout, "shape": list(full)},
+    }
+    return f, specs, entry
+
+
+def build_interp(kmax, shape, batch, dtin, dtout, variant="pallas"):
+    """Generic interpreter kernel: runtime opcode/param vectors (tier 3)."""
+    full = (batch,) + tuple(shape)
+    if variant == "pallas":
+        f = k_interp.make_interp(kmax, shape, batch, dtin, dtout)
+    else:
+
+        def f(x, opcodes, params):
+            from compile.opcodes import cast_in, cast_out
+
+            v = cast_in(x, dtin, dtout)
+            v = k_ref.interp_ref(v, opcodes, params.astype(v.dtype))
+            return cast_out(v, dtin, dtout)
+
+    specs = [_sds(full, DTYPES[dtin]), _sds((kmax,), I32), _sds((kmax,), F32)]
+    entry = {
+        "name": f"interp_k{kmax}_{dtin}2{dtout}_{_shape_tag(shape)}_b{batch}_{variant}",
+        "kind": "interp",
+        "variant": variant,
+        "ops": [],
+        "kmax": kmax,
+        "dtin": dtin,
+        "dtout": dtout,
+        "shape": list(shape),
+        "batch": batch,
+        "inputs": [
+            _inp("data", dtin, full),
+            _inp("opcodes", "i32", (kmax,)),
+            _inp("params", "f32", (kmax,)),
+        ],
+        "output": {"dtype": dtout, "shape": list(full)},
+    }
+    return f, specs, entry
+
+
+def build_preproc(frame_shape, batch, dh, dw, variant="pallas"):
+    """Fused production pipeline: Batch(Crop->Resize->ColorConvert->Mul->Sub->Div->Split)."""
+    if variant == "pallas":
+        f = k_preproc.make_preproc(frame_shape, batch, dh, dw)
+    else:
+
+        def f(frame, rects, mulv, subv, divv):
+            return k_ref.preproc_ref(frame, rects, mulv, subv, divv, dh, dw)
+
+    specs = [
+        _sds(frame_shape, U8),
+        _sds((batch, 4), I32),
+        _sds((3,), F32),
+        _sds((3,), F32),
+        _sds((3,), F32),
+    ]
+    entry = {
+        "name": f"preproc_{_shape_tag(frame_shape)}_to{dh}x{dw}_b{batch}_{variant}",
+        "kind": "preproc",
+        "variant": variant,
+        "ops": ["crop", "resize", "cvtcolor", "mul", "sub", "div", "split"],
+        "dtin": "u8",
+        "dtout": "f32",
+        "shape": [dh, dw],
+        "frame_shape": list(frame_shape),
+        "batch": batch,
+        "inputs": [
+            _inp("frame", "u8", frame_shape),
+            _inp("rects", "i32", (batch, 4)),
+            _inp("vec3", "f32", (3,)),
+            _inp("vec3", "f32", (3,)),
+            _inp("vec3", "f32", (3,)),
+        ],
+        "output": {"dtype": "f32", "shape": [batch, 3, dh, dw]},
+    }
+    return f, specs, entry
+
+
+def build_preproc_step(step, frame_shape, src_h, src_w, dh, dw):
+    """One UNFUSED pipeline step (the OpenCV-CUDA/NPP baseline vocabulary).
+
+    Steps: crop (dynamic_slice from the frame), convert, resize, cvtcolor,
+    mulc, subc, divc, split — each its own executable, each a full memory pass.
+    """
+    steps = k_preproc.make_single_steps(dh, dw, src_h, src_w)
+
+    if step == "crop":
+
+        def f(frame, rect):
+            zero = jnp.zeros((), rect.dtype)
+            return jax.lax.dynamic_slice(frame, (rect[1], rect[0], zero), (src_h, src_w, 3))
+
+        specs = [_sds(frame_shape, U8), _sds((4,), I32)]
+        inputs = [_inp("frame", "u8", frame_shape), _inp("rect", "i32", (4,))]
+        out = {"dtype": "u8", "shape": [src_h, src_w, 3]}
+    elif step == "convert":
+        f = steps["convert"]
+        specs = [_sds((src_h, src_w, 3), U8)]
+        inputs = [_inp("data", "u8", (src_h, src_w, 3))]
+        out = {"dtype": "f32", "shape": [src_h, src_w, 3]}
+    elif step == "resize":
+        f = steps["resize"]
+        specs = [_sds((src_h, src_w, 3), F32)]
+        inputs = [_inp("data", "f32", (src_h, src_w, 3))]
+        out = {"dtype": "f32", "shape": [dh, dw, 3]}
+    elif step == "cvtcolor":
+        f = steps["cvtcolor"]
+        specs = [_sds((dh, dw, 3), F32)]
+        inputs = [_inp("data", "f32", (dh, dw, 3))]
+        out = {"dtype": "f32", "shape": [dh, dw, 3]}
+    elif step in ("mulc", "subc", "divc"):
+        f = steps[step]
+        specs = [_sds((dh, dw, 3), F32), _sds((3,), F32)]
+        inputs = [_inp("data", "f32", (dh, dw, 3)), _inp("vec3", "f32", (3,))]
+        out = {"dtype": "f32", "shape": [dh, dw, 3]}
+    elif step == "split":
+        f = steps["split"]
+        specs = [_sds((dh, dw, 3), F32)]
+        inputs = [_inp("data", "f32", (dh, dw, 3))]
+        out = {"dtype": "f32", "shape": [3, dh, dw]}
+    else:
+        raise ValueError(step)
+
+    entry = {
+        "name": f"prestep_{step}_{src_h}x{src_w}_to{dh}x{dw}",
+        "kind": "preproc_step",
+        "variant": "xla",
+        "step": step,
+        "ops": [step],
+        "dtin": inputs[0]["dtype"],
+        "dtout": out["dtype"],
+        "shape": out["shape"],
+        "batch": 1,
+        "inputs": inputs,
+        "output": out,
+    }
+    return f, specs, entry
+
+
+def build_reduce_stats(shape, dtin, variant="pallas"):
+    """One-pass (max, min, sum, mean) ReduceDPP artifact."""
+    if variant == "pallas":
+        f = k_reduce.make_reduce_stats(shape, dtin)
+    else:
+        f = k_ref.reduce_stats_ref
+    specs = [_sds(shape, DTYPES[dtin])]
+    entry = {
+        "name": f"reduce_stats_{dtin}_{_shape_tag(shape)}_{variant}",
+        "kind": "reduce",
+        "variant": variant,
+        "ops": ["max", "min", "sum", "mean"],
+        "dtin": dtin,
+        "dtout": "f32",
+        "shape": list(shape),
+        "batch": 1,
+        "inputs": [_inp("data", dtin, shape)],
+        "output": {"dtype": "f32", "shape": [4]},
+    }
+    return f, specs, entry

@@ -1,0 +1,110 @@
+"""Shared operation vocabulary for the FKL reproduction.
+
+This is the single source of truth for the element-wise Compute Operation
+(COp) vocabulary (paper §IV-A: Unary/Binary Operations). The Rust layer-3
+coordinator mirrors this table in ``rust/src/ops/opcodes.rs``; the generated
+``artifacts/manifest.json`` embeds it so the Rust registry can assert
+consistency at load time (no silent drift between layers).
+
+Opcode numbering is load-bearing: the generic interpreter kernel
+(``kernels/interp.py``) receives opcodes as a runtime i32 tensor and branches
+with ``lax.switch``, so the order here IS the switch table.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# name -> (opcode, takes_param)
+# Binary ops (paper: BOp) consume a scalar parameter; unary ops (UOp) ignore it.
+OPS: dict[str, tuple[int, bool]] = {
+    "nop": (0, False),  # identity; also the Cast placeholder (casts happen at the
+    #                     read/write boundary, in the compute domain cast == nop)
+    "add": (1, True),
+    "sub": (2, True),
+    "mul": (3, True),
+    "div": (4, True),
+    "abs": (5, False),
+    "neg": (6, False),
+    "min": (7, True),
+    "max": (8, True),
+    "sqrt": (9, False),
+    "exp": (10, False),
+    "log": (11, False),
+    "clamp01": (12, False),
+}
+
+N_OPS = len(OPS)
+
+# dtype name -> jnp dtype. These are the I/O dtypes of the Memory Operations
+# (paper: ROp/WOp); compute always happens in f32 (or f64 when either end is
+# f64), mirroring how integer image ops saturate through a wider type.
+DTYPES = {
+    "u8": jnp.uint8,
+    "u16": jnp.uint16,
+    "i32": jnp.int32,
+    "f32": jnp.float32,
+    "f64": jnp.float64,
+}
+
+INT_DTYPES = {"u8": 255.0, "u16": 65535.0, "i32": None}
+
+
+def compute_dtype(dtin: str, dtout: str):
+    """Compute domain for a chain: widest float that covers both ends."""
+    if "f64" in (dtin, dtout):
+        return jnp.float64
+    return jnp.float32
+
+
+def apply_op(name: str, x, p):
+    """Apply one COp in the compute domain. ``p`` is a scalar (traced)."""
+    if name == "nop":
+        return x
+    if name == "add":
+        return x + p
+    if name == "sub":
+        return x - p
+    if name == "mul":
+        return x * p
+    if name == "div":
+        return x / p
+    if name == "abs":
+        return jnp.abs(x)
+    if name == "neg":
+        return -x
+    if name == "min":
+        return jnp.minimum(x, p)
+    if name == "max":
+        return jnp.maximum(x, p)
+    if name == "sqrt":
+        return jnp.sqrt(jnp.abs(x))
+    if name == "exp":
+        return jnp.exp(x)
+    if name == "log":
+        return jnp.log(jnp.abs(x) + 1.0)
+    if name == "clamp01":
+        return jnp.clip(x, 0.0, 1.0)
+    raise ValueError(f"unknown op {name!r}")
+
+
+def cast_in(x, dtin: str, dtout: str):
+    """ReadOp boundary: load from the I/O dtype into the compute domain."""
+    return x.astype(compute_dtype(dtin, dtout))
+
+
+def cast_out(x, dtin: str, dtout: str):
+    """WriteOp boundary: saturate back to the output dtype (paper: saturating
+    stores for 8/16-bit image types, like OpenCV's convertTo)."""
+    if dtout in INT_DTYPES:
+        hi = INT_DTYPES[dtout]
+        x = jnp.round(x)
+        if hi is not None:
+            x = jnp.clip(x, 0.0, hi)
+    return x.astype(DTYPES[dtout])
+
+
+def switch_branches():
+    """The lax.switch table for the interpreter kernel, in opcode order."""
+    names = sorted(OPS, key=lambda n: OPS[n][0])
+    return [(lambda n: (lambda x, p: apply_op(n, x, p)))(n) for n in names]

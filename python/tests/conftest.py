@@ -1,0 +1,9 @@
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import jax
+
+# f64 chains (Fig. 23 dtype combos) need real double support.
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,66 @@
+"""AOT driver: manifest schema, HLO-text validity, family coverage."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+ARTIFACTS = os.path.join(REPO, "artifacts")
+
+
+def test_aot_builds_selected_artifact(tmp_path):
+    env = dict(os.environ)
+    r = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out", str(tmp_path), "--only", "chain_mul-add_f32"],
+        cwd=os.path.join(REPO, "python"),
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=300,
+    )
+    assert r.returncode == 0, r.stderr
+    manifest = json.load(open(tmp_path / "manifest.json"))
+    names = [a["name"] for a in manifest["artifacts"]]
+    assert "chain_mul-add_f322f32_4x8_b2_pallas" in names
+    hlo = (tmp_path / "chain_mul-add_f322f32_4x8_b2_pallas.hlo.txt").read_text()
+    assert hlo.startswith("HloModule"), "interchange format must be HLO text"
+    # single-output plain-array root (return_tuple=False): entry layout has
+    # no tuple in the result type
+    assert "->f32[2,4,8]" in hlo.replace(" ", ""), hlo.splitlines()[0]
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ARTIFACTS, "manifest.json")),
+                    reason="run `make artifacts` first")
+def test_manifest_covers_every_experiment():
+    m = json.load(open(os.path.join(ARTIFACTS, "manifest.json")))
+    arts = m["artifacts"]
+    kinds = {a["kind"] for a in arts}
+    assert {"chain", "single_op", "staticloop", "interp", "preproc", "preproc_step", "reduce"} <= kinds
+    # geometry block drives the Rust experiment sweeps
+    g = m["geometry"]
+    for key in ("vf_shape", "vec_n", "sizes", "hf_batches", "preproc_batches", "dtype_combos"):
+        assert key in g, key
+    # every HF bucket has its chain artifact
+    for b in g["hf_batches"]:
+        assert any(
+            a["kind"] == "chain" and a["batch"] == b and a["dtin"] == "u8" for a in arts
+        ), f"missing HF bucket {b}"
+    # every preproc batch bucket
+    for b in g["preproc_batches"]:
+        assert any(a["kind"] == "preproc" and a["batch"] == b for a in arts), b
+    # every declared file exists and is HLO text
+    for a in arts:
+        p = os.path.join(ARTIFACTS, a["file"])
+        assert os.path.exists(p), a["name"]
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ARTIFACTS, "manifest.json")),
+                    reason="run `make artifacts` first")
+def test_opcode_table_matches_python():
+    from compile.opcodes import OPS
+
+    m = json.load(open(os.path.join(ARTIFACTS, "manifest.json")))
+    assert m["opcodes"] == {k: v[0] for k, v in OPS.items()}

@@ -1,0 +1,81 @@
+"""InterpDPP: the runtime-fusion kernel must match both its oracle and the
+directly-traced chain for every opcode in the vocabulary."""
+
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from compile.kernels import interp as k_interp
+from compile.kernels import ref as k_ref
+from compile.kernels import transform as k_transform
+from compile.opcodes import N_OPS, OPS
+
+OP_NAMES = sorted(OPS, key=lambda n: OPS[n][0])
+
+
+def _encode(chain, kmax):
+    opc = np.zeros(kmax, np.int32)
+    par = np.zeros(kmax, np.float32)
+    for i, (name, p) in enumerate(chain):
+        opc[i] = OPS[name][0]
+        par[i] = p
+    return jnp.asarray(opc), jnp.asarray(par)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    chain=st.lists(
+        st.tuples(st.sampled_from(OP_NAMES), st.floats(0.25, 2.0)),
+        min_size=1,
+        max_size=12,
+    ),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_interp_matches_direct_chain(chain, seed):
+    kmax = 16
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.uniform(-2, 2, size=(2, 6, 8)), jnp.float32)
+    opc, par = _encode(chain, kmax)
+
+    f = k_interp.make_interp(kmax, (6, 8), 2, "f32", "f32")
+    got = f(x, opc, par)
+
+    ops = [c[0] for c in chain]
+    params = jnp.asarray([c[1] for c in chain], jnp.float32)
+    direct = k_transform.make_chain(ops, (6, 8), 2, "f32", "f32")(x, params)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(direct), atol=1e-4, rtol=1e-4)
+
+
+def test_all_nops_is_identity():
+    kmax = 16
+    x = jnp.asarray(np.arange(48, dtype=np.float32).reshape(1, 6, 8))
+    f = k_interp.make_interp(kmax, (6, 8), 1, "f32", "f32")
+    got = f(x, jnp.zeros(kmax, jnp.int32), jnp.zeros(kmax, jnp.float32))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(x))
+
+
+def test_out_of_range_opcode_is_clamped_not_crashed():
+    kmax = 4
+    x = jnp.ones((1, 2, 2), jnp.float32)
+    opc = jnp.asarray([999, -5, 0, 0], jnp.int32)
+    par = jnp.zeros(4, jnp.float32)
+    f = k_interp.make_interp(kmax, (2, 2), 1, "f32", "f32")
+    out = f(x, opc, par)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_interp_matches_ref_oracle():
+    kmax = 16
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.uniform(0, 1, size=(1, 4, 4)), jnp.float32)
+    chain = [("mul", 2.0), ("add", 0.5), ("abs", 0.0), ("min", 1.2)]
+    opc, par = _encode(chain, kmax)
+    got = k_interp.make_interp(kmax, (4, 4), 1, "f32", "f32")(x, opc, par)
+    want = k_ref.interp_ref(x[0], opc, par)
+    np.testing.assert_allclose(np.asarray(got[0]), np.asarray(want), atol=1e-5)
+
+
+def test_vocabulary_is_dense():
+    codes = sorted(OPS[n][0] for n in OPS)
+    assert codes == list(range(N_OPS)), "switch table must be dense"

@@ -1,0 +1,96 @@
+"""PreprocDPP (the paper's production pipeline) vs the jnp oracle, plus the
+unfused single-step vocabulary."""
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from compile.kernels import preproc as k_preproc
+from compile.kernels import ref as k_ref
+
+
+def _frame(rng, h=96, w=160):
+    return jnp.asarray(rng.integers(0, 256, size=(h, w, 3)), jnp.uint8)
+
+
+@settings(max_examples=10, deadline=None)
+@given(batch=st.integers(1, 4), seed=st.integers(0, 2**31 - 1))
+def test_preproc_kernel_matches_ref(batch, seed):
+    rng = np.random.default_rng(seed)
+    frame = _frame(rng)
+    rects = []
+    for _ in range(batch):
+        w = int(rng.integers(8, 40))
+        h = int(rng.integers(8, 30))
+        x0 = int(rng.integers(0, 160 - w))
+        y0 = int(rng.integers(0, 96 - h))
+        rects.append([x0, y0, w, h])
+    rects = jnp.asarray(rects, jnp.int32)
+    mulv = jnp.asarray(rng.uniform(0.5, 1.5, 3), jnp.float32)
+    subv = jnp.asarray(rng.uniform(0, 1, 3), jnp.float32)
+    divv = jnp.asarray(rng.uniform(0.5, 2, 3), jnp.float32)
+
+    dh, dw = 16, 12
+    f = k_preproc.make_preproc((96, 160, 3), batch, dh, dw)
+    got = f(frame, rects, mulv, subv, divv)
+    want = k_ref.preproc_ref(frame, rects, mulv, subv, divv, dh, dw)
+    assert got.shape == (batch, 3, dh, dw)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-3, rtol=1e-3)
+
+
+def test_identity_resize_recovers_crop():
+    rng = np.random.default_rng(1)
+    frame = _frame(rng)
+    # crop 12x16 resized to 16(h) x 12(w): use crop (w=12,h=16) -> dst (16,12)
+    rects = jnp.asarray([[10, 20, 12, 16]], jnp.int32)
+    one = jnp.ones(3, jnp.float32)
+    zero = jnp.zeros(3, jnp.float32)
+    f = k_preproc.make_preproc((96, 160, 3), 1, 16, 12)
+    got = np.asarray(f(frame, rects, one, zero, one))
+    crop = np.asarray(frame)[20:36, 10:22, :].astype(np.float32)
+    want = np.transpose(crop[:, :, ::-1], (2, 0, 1))[None]
+    np.testing.assert_allclose(got, want, atol=1e-3)
+
+
+def test_batch_planes_are_independent():
+    rng = np.random.default_rng(2)
+    frame = _frame(rng)
+    rects = jnp.asarray([[0, 0, 20, 20], [100, 40, 20, 20]], jnp.int32)
+    one = jnp.ones(3, jnp.float32)
+    zero = jnp.zeros(3, jnp.float32)
+    f2 = k_preproc.make_preproc((96, 160, 3), 2, 8, 8)
+    both = np.asarray(f2(frame, rects, one, zero, one))
+    f1 = k_preproc.make_preproc((96, 160, 3), 1, 8, 8)
+    a = np.asarray(f1(frame, rects[:1], one, zero, one))
+    b = np.asarray(f1(frame, rects[1:], one, zero, one))
+    np.testing.assert_allclose(both[0], a[0], atol=1e-5)
+    np.testing.assert_allclose(both[1], b[0], atol=1e-5)
+
+
+def test_single_step_vocabulary_composes_to_fused():
+    """Running the unfused step functions in sequence must equal the fused
+    kernel (this is the invariant the whole paper rests on)."""
+    rng = np.random.default_rng(3)
+    frame = _frame(rng)
+    x0, y0, w, h = 30, 10, 24, 18
+    dh, dw = 12, 10
+    steps = k_preproc.make_single_steps(dh, dw, h, w)
+    crop = jax.lax.dynamic_slice(frame, (y0, x0, 0), (h, w, 3))
+    v = steps["convert"](crop)
+    v = steps["resize"](v)
+    v = steps["cvtcolor"](v)
+    v = steps["mulc"](v, jnp.asarray([1.1, 1.0, 0.9], jnp.float32))
+    v = steps["subc"](v, jnp.asarray([0.1, 0.2, 0.3], jnp.float32))
+    v = steps["divc"](v, jnp.asarray([2.0, 2.0, 2.0], jnp.float32))
+    stepwise = steps["split"](v)
+
+    fused = k_preproc.make_preproc((96, 160, 3), 1, dh, dw)(
+        frame,
+        jnp.asarray([[x0, y0, w, h]], jnp.int32),
+        jnp.asarray([1.1, 1.0, 0.9], jnp.float32),
+        jnp.asarray([0.1, 0.2, 0.3], jnp.float32),
+        jnp.asarray([2.0, 2.0, 2.0], jnp.float32),
+    )
+    np.testing.assert_allclose(np.asarray(fused[0]), np.asarray(stepwise), atol=1e-3)

@@ -1,0 +1,78 @@
+//! Coordinator benchmarks: serving throughput/latency vs batching policy.
+//!
+//! The dynamic batcher trades latency for HF width (paper Fig. 17 at the
+//! serving layer). This bench sweeps window and max_batch and reports
+//! req/s + latency percentiles + achieved batch width.
+
+use std::time::{Duration, Instant};
+
+use fkl::coordinator::{BatchPolicy, Service, ServiceConfig};
+use fkl::ops::{Opcode, Pipeline};
+use fkl::proplite::Rng;
+use fkl::tensor::{DType, Tensor};
+
+fn pipeline() -> Pipeline {
+    Pipeline::from_opcodes(
+        &[(Opcode::Nop, 0.0), (Opcode::Mul, 0.5), (Opcode::Sub, 3.0), (Opcode::Div, 1.7)],
+        &[60, 120],
+        1,
+        DType::U8,
+        DType::F32,
+    )
+    .unwrap()
+}
+
+fn drive(policy: BatchPolicy, n: usize) -> (f64, fkl::coordinator::MetricsSnapshot) {
+    let svc = Service::start(ServiceConfig { artifact_dir: None, queue_cap: 8192, policy });
+    let p = pipeline();
+    let mut rng = Rng::new(3);
+    // warmup (compile)
+    let w = svc.submit(p.clone(), Tensor::from_u8(&rng.vec_u8(7200), &[1, 60, 120])).unwrap();
+    let _ = w.recv();
+
+    let t0 = Instant::now();
+    let mut pending = Vec::with_capacity(n);
+    for _ in 0..n {
+        let item = Tensor::from_u8(&rng.vec_u8(7200), &[1, 60, 120]);
+        if let Ok(rx) = svc.submit(p.clone(), item) {
+            pending.push(rx);
+        }
+    }
+    let mut ok = 0usize;
+    for rx in pending {
+        if rx.recv().map(|r| r.is_ok()).unwrap_or(false) {
+            ok += 1;
+        }
+    }
+    let rps = ok as f64 / t0.elapsed().as_secs_f64();
+    let m = svc.metrics().unwrap();
+    svc.shutdown();
+    (rps, m)
+}
+
+fn main() {
+    println!("# coordinator_bench (chain CMSD, 60x120 u8->f32 items)");
+    println!(
+        "{:>10} {:>12} | {:>10} {:>10} {:>8} {:>8} {:>8}",
+        "max_batch", "window_us", "req/s", "mean_bat", "p50_us", "p99_us", "launches"
+    );
+    let n = 1500;
+    for (max_batch, window_us) in
+        [(1usize, 0u64), (8, 200), (25, 500), (50, 500), (50, 2000), (150, 2000)]
+    {
+        let (rps, m) = drive(
+            BatchPolicy { max_batch, window: Duration::from_micros(window_us) },
+            n,
+        );
+        println!(
+            "{:>10} {:>12} | {:>10.0} {:>10.1} {:>8} {:>8} {:>8}",
+            max_batch,
+            window_us,
+            rps,
+            m.mean_batch(),
+            m.latency.p50,
+            m.latency.p99,
+            m.launches
+        );
+    }
+}

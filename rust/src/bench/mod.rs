@@ -1,0 +1,9 @@
+//! Measurement harness (criterion is unavailable offline; this is the
+//! repo's own timing + stats + reporting kit, matching the paper's method:
+//! repeated executions, mean and Relative Standard Deviation).
+
+mod report;
+mod timer;
+
+pub use report::{write_csv, write_markdown, Table};
+pub use timer::{calibrate, time_fn, time_fn_reps, Stats};

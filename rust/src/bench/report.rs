@@ -1,0 +1,104 @@
+//! Result tables: CSV + markdown emission for every experiment.
+
+use std::io::Write as _;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// A simple results table (one per paper figure/table).
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+    /// Free-form notes (scale factors, simulated-vs-measured labels).
+    pub notes: Vec<String>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            notes: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch in {}", self.title);
+        self.rows.push(cells);
+    }
+
+    pub fn note(&mut self, s: impl Into<String>) {
+        self.notes.push(s.into());
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut out = format!("### {}\n\n", self.title);
+        out.push_str(&format!("| {} |\n", self.headers.join(" | ")));
+        out.push_str(&format!("|{}\n", "---|".repeat(self.headers.len())));
+        for r in &self.rows {
+            out.push_str(&format!("| {} |\n", r.join(" | ")));
+        }
+        for n in &self.notes {
+            out.push_str(&format!("\n> {n}\n"));
+        }
+        out.push('\n');
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = self.headers.join(",");
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&r.join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Write a table as `<dir>/<stem>.csv`.
+pub fn write_csv(dir: &Path, stem: &str, t: &Table) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let p = dir.join(format!("{stem}.csv"));
+    let mut f = std::fs::File::create(&p).with_context(|| format!("create {}", p.display()))?;
+    f.write_all(t.to_csv().as_bytes())?;
+    Ok(())
+}
+
+/// Append tables to `<dir>/summary.md`.
+pub fn write_markdown(dir: &Path, tables: &[&Table]) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let p = dir.join("summary.md");
+    let mut f = std::fs::OpenOptions::new().create(true).append(true).open(&p)?;
+    for t in tables {
+        f.write_all(t.to_markdown().as_bytes())?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markdown_and_csv_shape() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        t.note("scaled");
+        let md = t.to_markdown();
+        assert!(md.contains("| a | b |"));
+        assert!(md.contains("| 1 | 2 |"));
+        assert!(md.contains("> scaled"));
+        assert_eq!(t.to_csv(), "a,b\n1,2\n");
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_checked() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+}

@@ -1,0 +1,143 @@
+//! Timing primitives with the paper's statistics (mean, RSD).
+
+use std::time::{Duration, Instant};
+
+use crate::fusion::cost::HwProfile;
+
+/// Summary statistics over repeated timings.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Stats {
+    pub mean_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+    /// Relative standard deviation, percent (the paper reports RSD per
+    /// series; <0.01%-25% depending on magnitude, §V).
+    pub rsd_pct: f64,
+    pub reps: usize,
+}
+
+impl Stats {
+    pub fn from_samples(samples: &[f64]) -> Stats {
+        assert!(!samples.is_empty());
+        let n = samples.len() as f64;
+        let mean = samples.iter().sum::<f64>() / n;
+        let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n;
+        let sd = var.sqrt();
+        Stats {
+            mean_s: mean,
+            min_s: samples.iter().copied().fold(f64::INFINITY, f64::min),
+            max_s: samples.iter().copied().fold(0.0, f64::max),
+            rsd_pct: if mean > 0.0 { sd / mean * 100.0 } else { 0.0 },
+            reps: samples.len(),
+        }
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_s * 1e3
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        self.mean_s * 1e6
+    }
+}
+
+/// Time `f` with a fixed repetition count (1 warmup + `reps` measured).
+pub fn time_fn_reps<T>(reps: usize, mut f: impl FnMut() -> T) -> Stats {
+    let _ = f(); // warmup (compile caches, page faults)
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        let out = f();
+        samples.push(t0.elapsed().as_secs_f64());
+        std::hint::black_box(&out);
+    }
+    Stats::from_samples(&samples)
+}
+
+/// Adaptive timing: run up to `max_reps` but stop once `budget` of wall time
+/// is spent (min 3 measured reps). The paper uses 100 reps; sweeps with
+/// multi-second baselines use the budget to stay tractable — the rep count
+/// is recorded in the stats.
+pub fn time_fn<T>(max_reps: usize, budget: Duration, mut f: impl FnMut() -> T) -> Stats {
+    let _ = f();
+    let start = Instant::now();
+    let mut samples = Vec::new();
+    while samples.len() < max_reps
+        && (samples.len() < 3 || start.elapsed() < budget)
+    {
+        let t0 = Instant::now();
+        let out = f();
+        samples.push(t0.elapsed().as_secs_f64());
+        std::hint::black_box(&out);
+    }
+    Stats::from_samples(&samples)
+}
+
+/// Measure this host's effective bandwidth / throughput / dispatch overhead
+/// to parameterize the cost model (used by predicted-vs-measured reports).
+pub fn calibrate() -> HwProfile {
+    // memory bandwidth: large memcpy-ish pass
+    let n = 32 << 20; // 32M f32 = 128MB
+    let src = vec![1.0f32; n];
+    let mut dst = vec![0.0f32; n];
+    let st = time_fn_reps(3, || {
+        dst.copy_from_slice(&src);
+        std::hint::black_box(dst[n / 2]);
+    });
+    let mem_bw = (2.0 * n as f64 * 4.0) / st.mean_s;
+
+    // scalar throughput: fused mul-add loop over a cached slab
+    let m = 1 << 16;
+    let mut v = vec![1.0f32; m];
+    let st = time_fn_reps(3, || {
+        for _ in 0..64 {
+            for x in v.iter_mut() {
+                *x = *x * 0.999 + 0.001;
+            }
+        }
+        std::hint::black_box(v[0]);
+    });
+    let flops = (64.0 * m as f64 * 2.0) / st.mean_s;
+
+    HwProfile { mem_bw, flops, launch_overhead: 30e-6 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basics() {
+        let s = Stats::from_samples(&[1.0, 1.0, 1.0]);
+        assert_eq!(s.mean_s, 1.0);
+        assert_eq!(s.rsd_pct, 0.0);
+        let s = Stats::from_samples(&[1.0, 3.0]);
+        assert_eq!(s.mean_s, 2.0);
+        assert_eq!(s.min_s, 1.0);
+        assert_eq!(s.max_s, 3.0);
+        assert!(s.rsd_pct > 0.0);
+    }
+
+    #[test]
+    fn time_fn_reps_counts() {
+        let mut calls = 0;
+        let s = time_fn_reps(5, || calls += 1);
+        assert_eq!(s.reps, 5);
+        assert_eq!(calls, 6, "warmup + reps");
+    }
+
+    #[test]
+    fn adaptive_budget_stops_early() {
+        let s = time_fn(1000, Duration::from_millis(30), || {
+            std::thread::sleep(Duration::from_millis(10))
+        });
+        assert!(s.reps >= 3 && s.reps < 100, "reps={}", s.reps);
+    }
+
+    #[test]
+    fn calibration_is_sane() {
+        let hw = calibrate();
+        assert!(hw.mem_bw > 1e9, "bandwidth {} should exceed 1GB/s", hw.mem_bw);
+        assert!(hw.flops > 1e8, "flops {}", hw.flops);
+    }
+}

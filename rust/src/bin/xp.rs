@@ -1,0 +1,80 @@
+//! `xp` — the experiment runner: regenerates every table and figure of the
+//! paper's evaluation section (DESIGN.md §6).
+//!
+//! ```text
+//! xp all            # run everything -> results/*.csv + results/summary.md
+//! xp 2 3 4          # run selected experiments
+//! xp fig1 --fast    # trimmed sweeps (CI)
+//! xp list           # list experiment ids
+//! ```
+
+use std::path::PathBuf;
+
+use fkl::bench::{write_csv, write_markdown};
+use fkl::experiments::{self, XpCtx};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let fast = args.iter().any(|a| a == "--fast");
+    let out_pos = args.iter().position(|a| a == "--out");
+    let out: PathBuf = out_pos
+        .and_then(|i| args.get(i + 1))
+        .map(PathBuf::from)
+        .unwrap_or_else(|| "results".into());
+    let out_val_idx = out_pos.map(|i| i + 1);
+    let ids: Vec<&str> = args
+        .iter()
+        .enumerate()
+        .filter(|(i, a)| !a.starts_with("--") && Some(*i) != out_val_idx)
+        .map(|(_, a)| a.as_str())
+        .collect();
+
+    if ids.first() == Some(&"list") {
+        println!("experiments: {:?}", experiments::ALL);
+        return;
+    }
+    let ids: Vec<&str> =
+        if ids.is_empty() || ids == ["all"] { experiments::ALL.to_vec() } else { ids };
+
+    let ctx = match XpCtx::new(fast) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    };
+    // fresh summary per invocation
+    let _ = std::fs::remove_file(out.join("summary.md"));
+
+    let mut failed = 0;
+    for id in &ids {
+        let t0 = std::time::Instant::now();
+        eprintln!("== running experiment {id} ==");
+        match experiments::run(id, &ctx) {
+            Ok(tables) => {
+                for (i, t) in tables.iter().enumerate() {
+                    let stem = if tables.len() == 1 {
+                        format!("xp{id}")
+                    } else {
+                        format!("xp{id}_{i}")
+                    };
+                    if let Err(e) = write_csv(&out, &stem, t) {
+                        eprintln!("  write {stem}: {e:#}");
+                    }
+                    print!("{}", t.to_markdown());
+                }
+                if let Err(e) = write_markdown(&out, &tables.iter().collect::<Vec<_>>()) {
+                    eprintln!("  summary: {e:#}");
+                }
+                eprintln!("== {id} done in {:.1}s ==", t0.elapsed().as_secs_f64());
+            }
+            Err(e) => {
+                eprintln!("experiment {id} FAILED: {e:#}");
+                failed += 1;
+            }
+        }
+    }
+    if failed > 0 {
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,174 @@
+//! Dynamic HF batcher: groups same-signature requests into bucket launches.
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+use crate::ops::Pipeline;
+use crate::tensor::Tensor;
+
+/// Batching policy knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    /// Max items fused into one launch (clamped to available buckets).
+    pub max_batch: usize,
+    /// How long the first request of a group may wait for company.
+    pub window: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 64, window: Duration::from_micros(500) }
+    }
+}
+
+/// A queued request: one item of a single-item pipeline plus its reply slot.
+pub struct PendingRequest<R> {
+    pub pipeline: Pipeline,
+    pub item: Tensor,
+    pub enqueued: Instant,
+    pub reply: R,
+}
+
+/// Accumulates pending requests per stream key and decides when a group is
+/// ready to launch. Pure data structure — no XLA, fully unit-testable.
+pub struct Batcher<R> {
+    queues: HashMap<String, Vec<PendingRequest<R>>>,
+    policy: BatchPolicy,
+}
+
+impl<R> Batcher<R> {
+    pub fn new(policy: BatchPolicy) -> Self {
+        Batcher { queues: HashMap::new(), policy }
+    }
+
+    pub fn push(&mut self, req: PendingRequest<R>) {
+        let key = crate::ops::Signature::of(&req.pipeline).stream_key();
+        self.queues.entry(key).or_default().push(req);
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queues.values().map(Vec::len).sum()
+    }
+
+    /// Pop the next group that is ready: full (>= max_batch) or aged past the
+    /// window. Returns requests in arrival order (FIFO within a stream).
+    pub fn pop_ready(&mut self, now: Instant) -> Option<Vec<PendingRequest<R>>> {
+        let policy = self.policy;
+        let key = self
+            .queues
+            .iter()
+            .filter(|(_, q)| {
+                !q.is_empty()
+                    && (q.len() >= policy.max_batch
+                        || now.duration_since(q[0].enqueued) >= policy.window)
+            })
+            // oldest head first: fairness across streams
+            .min_by_key(|(_, q)| q[0].enqueued)
+            .map(|(k, _)| k.clone())?;
+        let q = self.queues.get_mut(&key).unwrap();
+        let take = q.len().min(policy.max_batch);
+        let group: Vec<_> = q.drain(..take).collect();
+        if q.is_empty() {
+            self.queues.remove(&key);
+        }
+        Some(group)
+    }
+
+    /// Pop everything regardless of readiness (drain on shutdown).
+    pub fn drain_all(&mut self) -> Vec<Vec<PendingRequest<R>>> {
+        let mut out = Vec::new();
+        for (_, mut q) in self.queues.drain() {
+            while !q.is_empty() {
+                let take = q.len().min(self.policy.max_batch);
+                out.push(q.drain(..take).collect());
+            }
+        }
+        out
+    }
+
+    /// Deadline of the oldest pending request (service loop sleep hint).
+    pub fn next_deadline(&self) -> Option<Instant> {
+        self.queues
+            .values()
+            .filter_map(|q| q.first())
+            .map(|r| r.enqueued + self.policy.window)
+            .min()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::{Opcode, Pipeline};
+    use crate::tensor::{DType, Tensor};
+
+    fn req(mul: f64, tag: u32) -> PendingRequest<u32> {
+        let pipeline = Pipeline::from_opcodes(
+            &[(Opcode::Mul, mul)],
+            &[2, 2],
+            1,
+            DType::F32,
+            DType::F32,
+        )
+        .unwrap();
+        PendingRequest {
+            pipeline,
+            item: Tensor::from_f32(&[0.0; 4], &[1, 2, 2]),
+            enqueued: Instant::now(),
+            reply: tag,
+        }
+    }
+
+    #[test]
+    fn groups_by_stream_key_not_params() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 10, window: Duration::ZERO });
+        b.push(req(1.0, 0));
+        b.push(req(99.0, 1)); // different param, same code
+        let g = b.pop_ready(Instant::now()).unwrap();
+        assert_eq!(g.len(), 2);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn full_batch_fires_before_window() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 2, window: Duration::from_secs(60) });
+        b.push(req(1.0, 0));
+        assert!(b.pop_ready(Instant::now()).is_none(), "waits for window/company");
+        b.push(req(1.0, 1));
+        assert_eq!(b.pop_ready(Instant::now()).unwrap().len(), 2);
+    }
+
+    #[test]
+    fn window_expiry_fires_partial_batch() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 8, window: Duration::from_millis(1) });
+        b.push(req(1.0, 0));
+        let later = Instant::now() + Duration::from_millis(5);
+        assert_eq!(b.pop_ready(later).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn fifo_within_stream_and_no_loss() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 3, window: Duration::ZERO });
+        for i in 0..7 {
+            b.push(req(1.0, i));
+        }
+        let mut seen = Vec::new();
+        while let Some(g) = b.pop_ready(Instant::now()) {
+            assert!(g.len() <= 3);
+            seen.extend(g.iter().map(|r| r.reply));
+        }
+        assert_eq!(seen, (0..7).collect::<Vec<_>>(), "FIFO, nothing lost or duplicated");
+    }
+
+    #[test]
+    fn drain_all_empties() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 4, window: Duration::from_secs(9) });
+        for i in 0..9 {
+            b.push(req(1.0, i));
+        }
+        let groups = b.drain_all();
+        let total: usize = groups.iter().map(Vec::len).sum();
+        assert_eq!(total, 9);
+        assert_eq!(b.pending(), 0);
+    }
+}

@@ -1,0 +1,157 @@
+//! Coordinator metrics: throughput, latency percentiles, fusion counters.
+
+use std::time::Duration;
+
+/// Online latency reservoir (fixed capacity, overwrite-oldest) + counters.
+#[derive(Debug)]
+pub struct Metrics {
+    latencies_us: Vec<u64>,
+    cursor: usize,
+    filled: bool,
+    pub completed: u64,
+    pub rejected: u64,
+    pub failed: u64,
+    pub launches: u64,
+    pub batched_items: u64,
+    pub padded_planes: u64,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::with_capacity(4096)
+    }
+}
+
+impl Metrics {
+    pub fn with_capacity(cap: usize) -> Metrics {
+        Metrics {
+            latencies_us: vec![0; cap.max(1)],
+            cursor: 0,
+            filled: false,
+            completed: 0,
+            rejected: 0,
+            failed: 0,
+            launches: 0,
+            batched_items: 0,
+            padded_planes: 0,
+        }
+    }
+
+    pub fn observe_latency(&mut self, d: Duration) {
+        self.latencies_us[self.cursor] = d.as_micros() as u64;
+        self.cursor += 1;
+        if self.cursor == self.latencies_us.len() {
+            self.cursor = 0;
+            self.filled = true;
+        }
+        self.completed += 1;
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let n = if self.filled { self.latencies_us.len() } else { self.cursor };
+        let mut lat: Vec<u64> = self.latencies_us[..n].to_vec();
+        lat.sort_unstable();
+        MetricsSnapshot {
+            completed: self.completed,
+            rejected: self.rejected,
+            failed: self.failed,
+            launches: self.launches,
+            batched_items: self.batched_items,
+            padded_planes: self.padded_planes,
+            latency: LatencyStats::from_sorted(&lat),
+        }
+    }
+}
+
+/// Latency percentiles in microseconds.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct LatencyStats {
+    pub p50: u64,
+    pub p95: u64,
+    pub p99: u64,
+    pub max: u64,
+    pub mean: f64,
+    pub count: usize,
+}
+
+impl LatencyStats {
+    pub fn from_sorted(sorted_us: &[u64]) -> LatencyStats {
+        if sorted_us.is_empty() {
+            return LatencyStats::default();
+        }
+        let n = sorted_us.len();
+        let q = |p: f64| sorted_us[((n as f64 - 1.0) * p).floor() as usize];
+        LatencyStats {
+            p50: q(0.50),
+            p95: q(0.95),
+            p99: q(0.99),
+            max: sorted_us[n - 1],
+            mean: sorted_us.iter().sum::<u64>() as f64 / n as f64,
+            count: n,
+        }
+    }
+}
+
+/// Point-in-time copy of all counters.
+#[derive(Debug, Clone, Default)]
+pub struct MetricsSnapshot {
+    pub completed: u64,
+    pub rejected: u64,
+    pub failed: u64,
+    pub launches: u64,
+    pub batched_items: u64,
+    pub padded_planes: u64,
+    pub latency: LatencyStats,
+}
+
+impl MetricsSnapshot {
+    /// Mean items per launch — the achieved HF width.
+    pub fn mean_batch(&self) -> f64 {
+        if self.launches == 0 {
+            0.0
+        } else {
+            self.batched_items as f64 / self.launches as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_from_sorted() {
+        let v: Vec<u64> = (1..=100).collect();
+        let s = LatencyStats::from_sorted(&v);
+        assert_eq!(s.p50, 50);
+        assert_eq!(s.p95, 95);
+        assert_eq!(s.p99, 99);
+        assert_eq!(s.max, 100);
+        assert!((s.mean - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn reservoir_wraps() {
+        let mut m = Metrics::with_capacity(4);
+        for i in 0..10 {
+            m.observe_latency(Duration::from_micros(i));
+        }
+        let s = m.snapshot();
+        assert_eq!(s.completed, 10);
+        assert_eq!(s.latency.count, 4, "reservoir holds last `cap` samples");
+    }
+
+    #[test]
+    fn empty_snapshot_is_zero() {
+        let m = Metrics::default();
+        assert_eq!(m.snapshot().latency, LatencyStats::default());
+    }
+
+    #[test]
+    fn mean_batch_reports_hf_width() {
+        let mut m = Metrics::default();
+        m.launches = 4;
+        m.batched_items = 100;
+        assert_eq!(m.snapshot().mean_batch(), 25.0);
+    }
+}

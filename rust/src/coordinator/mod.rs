@@ -1,0 +1,23 @@
+//! Streaming coordinator: the serving face of the library.
+//!
+//! The paper's production deployment (AutomaticTV) feeds batches of crops
+//! from live video through fused kernels. This module is that shape of
+//! system: clients submit single-item pipeline requests; a dynamic batcher
+//! groups compatible requests (same stream key = same generated code) within
+//! a small window and executes them as ONE horizontally-fused launch on the
+//! service thread that owns the PJRT client.
+//!
+//! Design constraints it encodes:
+//! * one XLA thread per process (xla_extension is not thread-safe) — the
+//!   service thread owns Registry + engines; everything else passes messages;
+//! * bounded request queue = backpressure;
+//! * batch window/size caps = the latency/throughput trade of every dynamic
+//!   batcher (vLLM-style), measured by `benches/coordinator_bench.rs`.
+
+mod batcher;
+mod metrics;
+mod service;
+
+pub use batcher::{BatchPolicy, Batcher, PendingRequest};
+pub use metrics::{LatencyStats, Metrics, MetricsSnapshot};
+pub use service::{Service, ServiceConfig, SubmitError};

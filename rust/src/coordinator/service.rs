@@ -1,0 +1,267 @@
+//! The coordinator service: bounded ingress, batching loop, fused execution.
+
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::coordinator::{BatchPolicy, Batcher, Metrics, MetricsSnapshot, PendingRequest};
+use crate::exec::{concat_batch, slice_batch, Engine, FusedEngine};
+use crate::fusion::hfusion;
+use crate::ops::Pipeline;
+use crate::tensor::Tensor;
+
+/// Coordinator configuration.
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    /// Artifact directory (defaults to the repo's).
+    pub artifact_dir: Option<std::path::PathBuf>,
+    /// Ingress queue capacity — submissions beyond this are rejected
+    /// (backpressure; the paper's pipelines drop frames rather than lag).
+    pub queue_cap: usize,
+    pub policy: BatchPolicy,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig { artifact_dir: None, queue_cap: 1024, policy: BatchPolicy::default() }
+    }
+}
+
+enum Msg {
+    Request(PendingRequest<SyncSender<Result<Tensor, String>>>),
+    Snapshot(SyncSender<MetricsSnapshot>),
+    Shutdown,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum SubmitError {
+    #[error("coordinator queue full (backpressure)")]
+    QueueFull,
+    #[error("coordinator stopped")]
+    Stopped,
+}
+
+/// Handle to a running coordinator. Cloneable across threads; all XLA work
+/// happens on the single service thread.
+pub struct Service {
+    tx: SyncSender<Msg>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Service {
+    /// Start the service thread (loads the registry there — the PJRT client
+    /// must live on that thread).
+    pub fn start(cfg: ServiceConfig) -> Service {
+        let (tx, rx) = sync_channel::<Msg>(cfg.queue_cap);
+        let handle = std::thread::Builder::new()
+            .name("fkl-coordinator".into())
+            .spawn(move || service_loop(cfg, rx))
+            .expect("spawn coordinator thread");
+        Service { tx, handle: Some(handle) }
+    }
+
+    /// Submit one item; returns a receiver for the result. Non-blocking:
+    /// fails fast under backpressure.
+    pub fn submit(
+        &self,
+        pipeline: Pipeline,
+        item: Tensor,
+    ) -> Result<Receiver<Result<Tensor, String>>, SubmitError> {
+        let (rtx, rrx) = sync_channel(1);
+        let req =
+            PendingRequest { pipeline, item, enqueued: Instant::now(), reply: rtx };
+        match self.tx.try_send(Msg::Request(req)) {
+            Ok(()) => Ok(rrx),
+            Err(TrySendError::Full(_)) => Err(SubmitError::QueueFull),
+            Err(TrySendError::Disconnected(_)) => Err(SubmitError::Stopped),
+        }
+    }
+
+    pub fn metrics(&self) -> Option<MetricsSnapshot> {
+        let (tx, rx) = sync_channel(1);
+        self.tx.send(Msg::Snapshot(tx)).ok()?;
+        rx.recv().ok()
+    }
+
+    /// Graceful shutdown: drain pending work, then join.
+    pub fn shutdown(mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Service {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn service_loop(cfg: ServiceConfig, rx: Receiver<Msg>) {
+    let dir = cfg.artifact_dir.clone().unwrap_or_else(crate::default_artifact_dir);
+    let reg = match crate::runtime::Registry::load(&dir) {
+        Ok(r) => std::rc::Rc::new(r),
+        Err(e) => {
+            // poison: reply to every request with the load error
+            for msg in rx.iter() {
+                match msg {
+                    Msg::Request(r) => {
+                        let _ = r.reply.send(Err(format!("registry: {e}")));
+                    }
+                    Msg::Snapshot(tx) => {
+                        let _ = tx.send(MetricsSnapshot::default());
+                    }
+                    Msg::Shutdown => break,
+                }
+            }
+            return;
+        }
+    };
+    let engine = FusedEngine::new(reg.clone());
+    let buckets: Vec<usize> = reg.geometry["hf_batches"]
+        .as_usize_vec()
+        .unwrap_or_else(|| vec![1, 2, 4, 8, 16, 32, 64]);
+    let mut batcher = Batcher::new(cfg.policy);
+    let mut metrics = Metrics::default();
+
+    loop {
+        // 1. ingest: wait until something arrives or the oldest group expires
+        let timeout = batcher
+            .next_deadline()
+            .map(|d| d.saturating_duration_since(Instant::now()))
+            .unwrap_or(Duration::from_millis(50));
+        match rx.recv_timeout(timeout) {
+            Ok(Msg::Request(r)) => {
+                batcher.push(r);
+                // opportunistically drain whatever else is queued
+                while let Ok(m) = rx.try_recv() {
+                    match m {
+                        Msg::Request(r) => batcher.push(r),
+                        Msg::Snapshot(tx) => {
+                            let _ = tx.send(metrics.snapshot());
+                        }
+                        Msg::Shutdown => {
+                            flush(&mut batcher, &engine, &buckets, &mut metrics);
+                            return;
+                        }
+                    }
+                }
+            }
+            Ok(Msg::Snapshot(tx)) => {
+                let _ = tx.send(metrics.snapshot());
+            }
+            Ok(Msg::Shutdown) => {
+                flush(&mut batcher, &engine, &buckets, &mut metrics);
+                return;
+            }
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => {
+                flush(&mut batcher, &engine, &buckets, &mut metrics);
+                return;
+            }
+        }
+
+        // 2. launch every ready group
+        let now = Instant::now();
+        while let Some(group) = batcher.pop_ready(now) {
+            execute_group(group, &engine, &buckets, &mut metrics);
+        }
+    }
+}
+
+fn flush(
+    batcher: &mut Batcher<SyncSender<Result<Tensor, String>>>,
+    engine: &FusedEngine,
+    buckets: &[usize],
+    metrics: &mut Metrics,
+) {
+    for group in batcher.drain_all() {
+        execute_group(group, engine, buckets, metrics);
+    }
+}
+
+/// Execute one same-signature group as an HF-batched launch: pad the stack to
+/// a bucket, run, slice replies back out.
+fn execute_group(
+    group: Vec<PendingRequest<SyncSender<Result<Tensor, String>>>>,
+    engine: &FusedEngine,
+    buckets: &[usize],
+    metrics: &mut Metrics,
+) {
+    let m = group.len();
+    let proto = &group[0].pipeline;
+    // pick a bucket the planner can actually serve: prefer the smallest AOT
+    // bucket >= m, then the exact group size; fall back to per-item launches
+    // when only b=1 artifacts exist for this stream
+    let mut batched = None;
+    let mut candidates = vec![m];
+    if let Some(b) = hfusion::single_bucket(m, buckets) {
+        candidates.insert(0, b);
+    }
+    for bucket in candidates {
+        let cand = Pipeline::new(
+            proto.ops().to_vec(),
+            proto.shape.clone(),
+            bucket,
+            proto.dtin,
+            proto.dtout,
+        )
+        .expect("group pipeline revalidation");
+        if engine.plan_for(&cand).is_ok() {
+            batched = Some((bucket, cand));
+            break;
+        }
+    }
+    let Some((bucket, batched)) = batched else {
+        // per-item fallback: still correct, just no HF for this stream
+        for req in &group {
+            match engine.run(&req.pipeline, &req.item) {
+                Ok(t) => {
+                    metrics.launches += engine.last_launches() as u64;
+                    metrics.batched_items += 1;
+                    metrics.observe_latency(req.enqueued.elapsed());
+                    let _ = req.reply.send(Ok(t));
+                }
+                Err(e) => {
+                    metrics.failed += 1;
+                    let _ = req.reply.send(Err(format!("{e:#}")));
+                }
+            }
+        }
+        return;
+    };
+
+    // stack items (+ replicate the last item into pad planes)
+    let mut parts: Vec<Tensor> = group.iter().map(|r| r.item.clone()).collect();
+    for _ in m..bucket {
+        parts.push(parts[m - 1].clone());
+    }
+    let input = concat_batch(&parts, &proto.shape);
+
+    match engine.run(&batched, &input) {
+        Ok(out) => {
+            metrics.launches += engine.last_launches() as u64;
+            metrics.batched_items += m as u64;
+            metrics.padded_planes += (bucket - m) as u64;
+            let item_elems: usize = out.len() / bucket;
+            let item_shape: Vec<usize> = out.shape()[1..].to_vec();
+            for (b, req) in group.iter().enumerate() {
+                let t = slice_batch(&out, b, item_elems, &item_shape);
+                metrics.observe_latency(req.enqueued.elapsed());
+                let _ = req.reply.send(Ok(t));
+            }
+        }
+        Err(e) => {
+            metrics.failed += group.len() as u64;
+            for req in &group {
+                let _ = req.reply.send(Err(format!("{e:#}")));
+            }
+        }
+    }
+}

@@ -1,0 +1,178 @@
+//! cvGS — the cvGPUSpeedup-style wrapper (paper §IV-D, Fig. 15/25a).
+//!
+//! Functions mirror OpenCV-CUDA's names and argument feel but, exactly like
+//! the paper's cvGS, DO NOT launch kernels: each returns an IOp. The user
+//! hands the IOps to [`execute_operations`], which builds the validated
+//! pipeline and runs it through the fused engine — one kernel for the whole
+//! chain, no intermediate `d_temp`/`d_up` allocations.
+//!
+//! ```no_run
+//! use fkl::cv::*;
+//! use fkl::tensor::{DType, Tensor};
+//! let ctx = Context::new().unwrap();
+//! let crops = Tensor::zeros(DType::U8, &[50, 60, 120]);
+//! let out = execute_operations(
+//!     &ctx,
+//!     &crops,
+//!     DType::F32,
+//!     &[
+//!         convert_to(),            // cv::cuda::GpuMat::convertTo
+//!         multiply(0.5),           // cv::cuda::multiply
+//!         subtract(10.0),          // cv::cuda::subtract
+//!         divide(2.0),             // cv::cuda::divide
+//!     ],
+//! ).unwrap();
+//! ```
+
+use std::rc::Rc;
+
+use anyhow::{Context as _, Result};
+
+use crate::exec::{Engine, FusedEngine, GraphEngine, UnfusedEngine};
+use crate::ops::{IOp, Opcode, Pipeline};
+use crate::runtime::Registry;
+use crate::tensor::{DType, Tensor};
+
+/// Execution context: registry + the three engines (fused is the default
+/// path; unfused/graph exist for the baseline comparisons).
+pub struct Context {
+    pub fused: FusedEngine,
+    pub unfused: UnfusedEngine,
+    pub graph: GraphEngine,
+    pub registry: Rc<Registry>,
+}
+
+impl Context {
+    pub fn new() -> Result<Context> {
+        Self::with_dir(crate::default_artifact_dir())
+    }
+
+    pub fn with_dir(dir: impl AsRef<std::path::Path>) -> Result<Context> {
+        let registry = Rc::new(Registry::load(dir).context("loading artifact registry")?);
+        Ok(Context {
+            fused: FusedEngine::new(registry.clone()),
+            unfused: UnfusedEngine::new(registry.clone()),
+            graph: GraphEngine::new(registry.clone()),
+            registry,
+        })
+    }
+}
+
+// --- the OpenCV-flavored IOp constructors (lazy, no kernel launched) -------
+
+/// `convertTo` — dtype cast happens at the pipeline's read/write boundary, so
+/// the IOp itself is the identity (paper: Cast is a UOp).
+pub fn convert_to() -> IOp {
+    IOp::compute(Opcode::Nop, 0.0)
+}
+
+/// `cv::cuda::add` with a scalar.
+pub fn add(v: f64) -> IOp {
+    IOp::compute(Opcode::Add, v)
+}
+
+/// `cv::cuda::multiply` with a scalar.
+pub fn multiply(v: f64) -> IOp {
+    IOp::compute(Opcode::Mul, v)
+}
+
+/// `cv::cuda::subtract` with a scalar.
+pub fn subtract(v: f64) -> IOp {
+    IOp::compute(Opcode::Sub, v)
+}
+
+/// `cv::cuda::divide` with a scalar.
+pub fn divide(v: f64) -> IOp {
+    IOp::compute(Opcode::Div, v)
+}
+
+/// `cv::cuda::abs`.
+pub fn abs() -> IOp {
+    IOp::compute(Opcode::Abs, 0.0)
+}
+
+/// `cv::cuda::min` with a scalar.
+pub fn min(v: f64) -> IOp {
+    IOp::compute(Opcode::Min, v)
+}
+
+/// `cv::cuda::max` with a scalar.
+pub fn max(v: f64) -> IOp {
+    IOp::compute(Opcode::Max, v)
+}
+
+/// `cv::cuda::sqrt` (magnitude).
+pub fn sqrt() -> IOp {
+    IOp::compute(Opcode::Sqrt, 0.0)
+}
+
+/// `cv::cuda::exp`.
+pub fn exp() -> IOp {
+    IOp::compute(Opcode::Exp, 0.0)
+}
+
+/// Build the pipeline for a batched input tensor `[B, ...shape]`.
+pub fn build_pipeline(input: &Tensor, dtout: DType, iops: &[IOp]) -> Result<Pipeline> {
+    let shape = input.shape()[1..].to_vec();
+    let batch = input.shape()[0];
+    Pipeline::elementwise(iops.to_vec(), shape, batch, input.dtype(), dtout)
+        .map_err(|e| anyhow::anyhow!("invalid operation chain: {e}"))
+}
+
+/// The executor function (paper Fig. 15 line 7): fuse + launch ONCE.
+pub fn execute_operations(
+    ctx: &Context,
+    input: &Tensor,
+    dtout: DType,
+    iops: &[IOp],
+) -> Result<Tensor> {
+    let p = build_pipeline(input, dtout, iops)?;
+    ctx.fused.run(&p, input)
+}
+
+/// The same chain executed the way stock OpenCV-CUDA would run it: one
+/// kernel per call, intermediates in device memory (experiment baseline).
+pub fn execute_operations_opencv_style(
+    ctx: &Context,
+    input: &Tensor,
+    dtout: DType,
+    iops: &[IOp],
+) -> Result<Tensor> {
+    let p = build_pipeline(input, dtout, iops)?;
+    ctx.unfused.run(&p, input)
+}
+
+/// OpenCV-CUDA + CUDA Graphs baseline: recorded once, replayed.
+pub fn execute_operations_graph_style(
+    ctx: &Context,
+    input: &Tensor,
+    dtout: DType,
+    iops: &[IOp],
+) -> Result<Tensor> {
+    let p = build_pipeline(input, dtout, iops)?;
+    ctx.graph.run(&p, input)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn iops_are_lazy_values() {
+        // calling wrapper functions performs no GPU work and no allocation
+        // beyond the IOp value itself (paper §IV-D)
+        let ops = [convert_to(), multiply(2.0), subtract(1.0), divide(4.0)];
+        assert_eq!(ops.len(), 4);
+        assert_eq!(ops[1], IOp::compute(Opcode::Mul, 2.0));
+    }
+
+    #[test]
+    fn build_pipeline_validates() {
+        let t = Tensor::zeros(DType::U8, &[2, 4, 4]);
+        let p = build_pipeline(&t, DType::F32, &[convert_to(), multiply(2.0)]).unwrap();
+        assert_eq!(p.batch, 2);
+        assert_eq!(p.shape, vec![4, 4]);
+        assert_eq!(p.dtin, DType::U8);
+        assert_eq!(p.dtout, DType::F32);
+    }
+}

@@ -1,0 +1,306 @@
+//! Engine implementations.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::fusion::{plan_pipeline, unfused_plan, FusionPlan, PlanInputs};
+use crate::ops::{IOp, Pipeline, Signature};
+use crate::runtime::{ExecGraph, Executor, Registry};
+use crate::tensor::Tensor;
+
+/// A pipeline execution engine. Input is the batched data tensor
+/// (`[batch, *shape]` in the pipeline's dtin); output the batched result.
+pub trait Engine {
+    fn name(&self) -> &'static str;
+    fn run(&self, p: &Pipeline, input: &Tensor) -> Result<Tensor>;
+    /// Kernel launches the last `run` issued (experiment reporting).
+    fn last_launches(&self) -> usize;
+}
+
+fn body_names<'a>(p: &'a Pipeline, engine: &str) -> Result<Vec<&'a str>> {
+    p.body()
+        .iter()
+        .map(|op| match op {
+            IOp::Compute { op, .. } => Ok(op.name()),
+            other => bail!("{engine} engine only runs chains, got {}", other.sig_token()),
+        })
+        .collect()
+}
+
+fn body_param(p: &Pipeline, i: usize) -> f32 {
+    match &p.body()[i] {
+        IOp::Compute { param, .. } => *param as f32,
+        _ => 0.0,
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// The FKL engine: plan once per signature, then one launch per run.
+pub struct FusedEngine {
+    exec: Executor,
+    reg: Rc<Registry>,
+    plan_cache: RefCell<HashMap<Signature, FusionPlan>>,
+    variant: String,
+    last: RefCell<usize>,
+}
+
+impl FusedEngine {
+    pub fn new(reg: Rc<Registry>) -> FusedEngine {
+        Self::with_variant(reg, "pallas")
+    }
+
+    /// `variant` selects the artifact lowering family ("pallas" or "xla") —
+    /// the lowering ablation of DESIGN.md §3.6.
+    pub fn with_variant(reg: Rc<Registry>, variant: &str) -> FusedEngine {
+        FusedEngine {
+            exec: Executor::new(reg.clone()),
+            reg,
+            plan_cache: RefCell::new(HashMap::new()),
+            variant: variant.to_string(),
+            last: RefCell::new(0),
+        }
+    }
+
+    pub fn plan_for(&self, p: &Pipeline) -> Result<FusionPlan> {
+        let sig = Signature::of(p);
+        if let Some(plan) = self.plan_cache.borrow().get(&sig) {
+            return Ok(plan.clone());
+        }
+        let plan = plan_pipeline(p, &self.reg, &self.variant)?;
+        self.plan_cache.borrow_mut().insert(sig, plan.clone());
+        Ok(plan)
+    }
+
+    pub fn executor(&self) -> &Executor {
+        &self.exec
+    }
+
+    pub fn registry(&self) -> Rc<Registry> {
+        self.reg.clone()
+    }
+}
+
+impl Engine for FusedEngine {
+    fn name(&self) -> &'static str {
+        "fused"
+    }
+
+    fn run(&self, p: &Pipeline, input: &Tensor) -> Result<Tensor> {
+        let plan = self.plan_for(p)?;
+        *self.last.borrow_mut() = plan.launches();
+        match &plan {
+            FusionPlan::Exact { artifact } => {
+                let params = PlanInputs::chain_params(p);
+                self.exec.run(artifact, &[input.clone(), params])
+            }
+            FusionPlan::StaticLoop { artifact, iters } => {
+                let meta = self.reg.get(artifact).context("plan artifact vanished")?;
+                let (trip, params) = PlanInputs::staticloop_inputs(p, meta.ops.len(), *iters);
+                self.exec.run(artifact, &[trip, input.clone(), params])
+            }
+            FusionPlan::Interp { artifact, kmax } => {
+                let (opc, par) = PlanInputs::interp_inputs(p, *kmax);
+                self.exec.run(artifact, &[input.clone(), opc, par])
+            }
+            FusionPlan::Unfused { .. } => {
+                // planner had no fused coverage; run the per-op fallback
+                UnfusedEngine::new(self.reg.clone()).run(p, input)
+            }
+        }
+    }
+
+    fn last_launches(&self) -> usize {
+        *self.last.borrow()
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// The OpenCV-CUDA/NPP analog: one launch per op (per batch item when only
+/// b=1 artifacts exist, like OpenCV's per-crop loop), intermediates written
+/// back to device memory between launches, params re-marshaled per call.
+pub struct UnfusedEngine {
+    exec: Executor,
+    reg: Rc<Registry>,
+    last: RefCell<usize>,
+}
+
+impl UnfusedEngine {
+    pub fn new(reg: Rc<Registry>) -> UnfusedEngine {
+        UnfusedEngine { exec: Executor::new(reg.clone()), reg, last: RefCell::new(0) }
+    }
+
+    fn steps(&self, p: &Pipeline) -> Result<Vec<String>> {
+        let names = body_names(p, "unfused")?;
+        match unfused_plan(p, &self.reg, &names) {
+            Some(FusionPlan::Unfused { artifacts }) => Ok(artifacts),
+            _ => bail!("no single-op artifact coverage for {}", Signature::of(p)),
+        }
+    }
+}
+
+impl Engine for UnfusedEngine {
+    fn name(&self) -> &'static str {
+        "unfused"
+    }
+
+    fn run(&self, p: &Pipeline, input: &Tensor) -> Result<Tensor> {
+        let steps = self.steps(p)?;
+        let mut launches = 0usize;
+
+        let first = self.reg.get(&steps[0]).context("step artifact missing")?;
+        let per_item = first.batch == 1 && p.batch > 1;
+
+        let run_chain = |item: &Tensor, launches: &mut usize| -> Result<Tensor> {
+            let mut cur = item.clone();
+            for (i, name) in steps.iter().enumerate() {
+                // param literal rebuilt every call = the per-call CPU work of
+                // the original libraries (measured by Exp. 6)
+                let params = Tensor::from_f32(&[body_param(p, i)], &[1]);
+                cur = self.exec.run(name, &[cur, params])?;
+                *launches += 1;
+            }
+            Ok(cur)
+        };
+
+        let out = if per_item {
+            let item_elems = p.item_elems();
+            let mut parts: Vec<Tensor> = Vec::with_capacity(p.batch);
+            for b in 0..p.batch {
+                let item = slice_batch(input, b, item_elems, &p.shape);
+                parts.push(run_chain(&item, &mut launches)?);
+            }
+            concat_batch(&parts, &p.shape)
+        } else {
+            run_chain(input, &mut launches)?
+        };
+        *self.last.borrow_mut() = launches;
+        Ok(out)
+    }
+
+    fn last_launches(&self) -> usize {
+        *self.last.borrow()
+    }
+}
+
+/// Extract item `b` of a batched tensor as a `[1, *shape]` tensor.
+pub fn slice_batch(t: &Tensor, b: usize, item_elems: usize, shape: &[usize]) -> Tensor {
+    let mut item_shape = vec![1usize];
+    item_shape.extend_from_slice(shape);
+    let lo = b * item_elems;
+    let hi = lo + item_elems;
+    use crate::tensor::TensorData::*;
+    match t.data() {
+        U8(v) => Tensor::from_u8(&v[lo..hi], &item_shape),
+        U16(v) => Tensor::from_u16(&v[lo..hi], &item_shape),
+        I32(v) => Tensor::from_i32(&v[lo..hi], &item_shape),
+        F32(v) => Tensor::from_f32(&v[lo..hi], &item_shape),
+        F64(v) => Tensor::from_f64(&v[lo..hi], &item_shape),
+    }
+}
+
+/// Concatenate `[1, *shape]` items back into `[B, *shape]`.
+pub fn concat_batch(parts: &[Tensor], shape: &[usize]) -> Tensor {
+    assert!(!parts.is_empty());
+    let mut full_shape = vec![parts.len()];
+    full_shape.extend_from_slice(shape);
+    use crate::tensor::TensorData::*;
+    macro_rules! cat {
+        ($variant:ident, $ctor:ident, $t:ty) => {{
+            let mut v: Vec<$t> = Vec::with_capacity(parts.len() * parts[0].len());
+            for p in parts {
+                match p.data() {
+                    $variant(d) => v.extend_from_slice(d),
+                    _ => panic!("mixed dtypes in concat_batch"),
+                }
+            }
+            Tensor::$ctor(&v, &full_shape)
+        }};
+    }
+    match parts[0].data() {
+        U8(_) => cat!(U8, from_u8, u8),
+        U16(_) => cat!(U16, from_u16, u16),
+        I32(_) => cat!(I32, from_i32, i32),
+        F32(_) => cat!(F32, from_f32, f32),
+        F64(_) => cat!(F64, from_f64, f64),
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// The CUDA Graphs analog: per-op chain recorded once per signature, then
+/// replayed. Same kernels and memory traffic as [`UnfusedEngine`]; no
+/// per-step host work on replay.
+pub struct GraphEngine {
+    exec: Executor,
+    reg: Rc<Registry>,
+    graphs: RefCell<HashMap<Signature, Rc<(ExecGraph, usize)>>>,
+    last: RefCell<usize>,
+}
+
+impl GraphEngine {
+    pub fn new(reg: Rc<Registry>) -> GraphEngine {
+        GraphEngine {
+            exec: Executor::new(reg.clone()),
+            reg,
+            graphs: RefCell::new(HashMap::new()),
+            last: RefCell::new(0),
+        }
+    }
+
+    /// Returns (graph, first_step_batch).
+    fn graph_for(&self, p: &Pipeline) -> Result<Rc<(ExecGraph, usize)>> {
+        let sig = Signature::of(p);
+        if let Some(g) = self.graphs.borrow().get(&sig) {
+            return Ok(g.clone());
+        }
+        let names = body_names(p, "graph")?;
+        let Some(FusionPlan::Unfused { artifacts }) = unfused_plan(p, &self.reg, &names) else {
+            bail!("no single-op artifact coverage for {}", Signature::of(p))
+        };
+        let first_batch =
+            self.reg.get(&artifacts[0]).context("step artifact missing")?.batch;
+        let mut builder = ExecGraph::record();
+        for (i, name) in artifacts.iter().enumerate() {
+            let params = Tensor::from_f32(&[body_param(p, i)], &[1]);
+            builder = builder.launch(&self.exec, &self.reg, name, &[(1, &params)])?;
+        }
+        let g = Rc::new((builder.finish(), first_batch));
+        self.graphs.borrow_mut().insert(sig, g.clone());
+        Ok(g)
+    }
+}
+
+impl Engine for GraphEngine {
+    fn name(&self) -> &'static str {
+        "graph"
+    }
+
+    fn run(&self, p: &Pipeline, input: &Tensor) -> Result<Tensor> {
+        let g = self.graph_for(p)?;
+        let (graph, first_batch) = (&g.0, g.1);
+        let per_item = first_batch == 1 && p.batch > 1;
+        let out = if per_item {
+            let item_elems = p.item_elems();
+            let mut parts = Vec::with_capacity(p.batch);
+            for b in 0..p.batch {
+                let item = slice_batch(input, b, item_elems, &p.shape);
+                parts.push(graph.replay(&item)?);
+            }
+            *self.last.borrow_mut() = graph.len() * p.batch;
+            concat_batch(&parts, &p.shape)
+        } else {
+            *self.last.borrow_mut() = graph.len();
+            graph.replay(input)?
+        };
+        Ok(out)
+    }
+
+    fn last_launches(&self) -> usize {
+        *self.last.borrow()
+    }
+}

@@ -1,0 +1,16 @@
+//! Execution engines: the three ways a pipeline runs in the experiments.
+//!
+//! * [`FusedEngine`] — the FKL path: the planner maps the pipeline onto ONE
+//!   fused artifact launch (VF; batched artifacts add HF).
+//! * [`UnfusedEngine`] — the OpenCV-CUDA/NPP analog: one launch per op, with
+//!   intermediates round-tripping through device buffers, and per-call
+//!   host-side parameter work (paper Fig. 3A / Fig. 25 top).
+//! * [`GraphEngine`] — the CUDA Graphs analog: same per-op launches, but the
+//!   chain is recorded once and replayed without per-step host work.
+//!
+//! All three implement [`Engine`] and must agree numerically with
+//! [`crate::hostref`] (enforced by `rust/tests/engines_equivalence.rs`).
+
+mod engines;
+
+pub use engines::{concat_batch, slice_batch, Engine, FusedEngine, GraphEngine, UnfusedEngine};

@@ -1,0 +1,110 @@
+//! Shared experiment context and helpers.
+
+use std::rc::Rc;
+use std::time::Duration;
+
+use anyhow::{Context as _, Result};
+
+use crate::bench::{time_fn, Stats};
+use crate::cv::Context;
+use crate::ops::{Opcode, Pipeline};
+use crate::proplite::Rng;
+use crate::runtime::Registry;
+use crate::tensor::{DType, Tensor};
+
+/// Shared state for all experiment runners.
+pub struct XpCtx {
+    pub ctx: Context,
+    /// Max measured repetitions per point (paper: 100).
+    pub reps: usize,
+    /// Wall-time budget per measured point.
+    pub budget: Duration,
+    /// Trim sweeps (CI mode).
+    pub fast: bool,
+}
+
+impl XpCtx {
+    pub fn new(fast: bool) -> Result<XpCtx> {
+        Ok(XpCtx {
+            ctx: Context::new().context("experiments need artifacts; run `make artifacts`")?,
+            reps: if fast { 10 } else { 30 },
+            budget: if fast { Duration::from_millis(300) } else { Duration::from_secs(2) },
+            fast,
+        })
+    }
+
+    pub fn registry(&self) -> Rc<Registry> {
+        self.ctx.registry.clone()
+    }
+
+    /// Measure a closure with this context's rep/budget policy.
+    pub fn measure<T>(&self, f: impl FnMut() -> T) -> Stats {
+        time_fn(self.reps, self.budget, f)
+    }
+
+    /// Geometry list from the manifest (falls back if missing).
+    pub fn geom_usizes(&self, key: &str, fallback: &[usize]) -> Vec<usize> {
+        self.ctx.registry.geometry[key].as_usize_vec().unwrap_or_else(|| fallback.to_vec())
+    }
+}
+
+/// Deterministic random tensor for a dtype (values kept in a range where all
+/// chains stay finite and integer saturation is rare).
+pub fn rand_tensor(rng: &mut Rng, shape: &[usize], dt: DType) -> Tensor {
+    let n: usize = shape.iter().product();
+    match dt {
+        DType::U8 => Tensor::from_u8(&rng.vec_u8(n), shape),
+        DType::U16 => {
+            let v: Vec<u16> = (0..n).map(|_| (rng.next_u64() & 0xFFF) as u16).collect();
+            Tensor::from_u16(&v, shape)
+        }
+        DType::I32 => {
+            let v: Vec<i32> = (0..n).map(|_| (rng.next_u64() & 0xFFFF) as i32).collect();
+            Tensor::from_i32(&v, shape)
+        }
+        DType::F32 => Tensor::from_f32(&rng.vec_f32(n, 0.0, 1.0), shape),
+        DType::F64 => {
+            let v: Vec<f64> = (0..n).map(|_| rng.f64(0.0, 1.0)).collect();
+            Tensor::from_f64(&v, shape)
+        }
+    }
+}
+
+/// Pipeline of n (Mul a, Add b) pairs — the paper's favourite chain. Params
+/// contractive so long chains stay finite.
+pub fn muladd_pairs(n_pairs: usize, shape: &[usize], batch: usize, dtin: DType, dtout: DType) -> Pipeline {
+    let mut chain = Vec::with_capacity(n_pairs * 2);
+    for _ in 0..n_pairs {
+        chain.push((Opcode::Mul, 0.999));
+        chain.push((Opcode::Add, 0.001));
+    }
+    Pipeline::from_opcodes(&chain, shape, batch, dtin, dtout).unwrap()
+}
+
+/// The Fig. 17/23 chain: Cast -> Mul -> Sub -> Div.
+pub fn cmsd(shape: &[usize], batch: usize, dtin: DType, dtout: DType) -> Pipeline {
+    Pipeline::from_opcodes(
+        &[(Opcode::Nop, 0.0), (Opcode::Mul, 0.5), (Opcode::Sub, 3.0), (Opcode::Div, 1.7)],
+        shape,
+        batch,
+        dtin,
+        dtout,
+    )
+    .unwrap()
+}
+
+/// Format a speedup cell.
+pub fn fx(x: f64) -> String {
+    if x >= 100.0 {
+        format!("{x:.0}x")
+    } else if x >= 10.0 {
+        format!("{x:.1}x")
+    } else {
+        format!("{x:.2}x")
+    }
+}
+
+/// Format milliseconds.
+pub fn ms(s: f64) -> String {
+    format!("{:.4}", s * 1e3)
+}

@@ -1,0 +1,70 @@
+//! Fig. 1 — kernel time vs instructions per element (the MB->CB knee).
+//!
+//! Paper: RTX 4090, 66M floats, 1..1161 float adds/thread; time flat until
+//! ~260 instructions, then linear. We measure the same sweep on the CPU PJRT
+//! substrate via the StaticLoop artifact (runtime trip count — one artifact,
+//! no recompiles) and run the paper's own GPU on the simulator next to it.
+
+use anyhow::{Context, Result};
+
+use crate::bench::Table;
+use crate::proplite::Rng;
+use crate::simulator::{table_ii_systems, GpuModel};
+use crate::tensor::Tensor;
+
+use super::common::{ms, rand_tensor, XpCtx};
+
+pub fn run(xp: &XpCtx) -> Result<Vec<Table>> {
+    let reg = xp.registry();
+    // the f32 vector staticloop artifact (mul body: 1 instruction per iter)
+    let meta = reg
+        .find(|m| {
+            m.kind == "staticloop"
+                && m.variant == "pallas"
+                && m.ops == ["mul"]
+                && m.dtin == "f32"
+                && m.shape.len() == 1
+        })
+        .into_iter()
+        .max_by_key(|m| m.shape[0])
+        .context("missing staticloop_mul_f32 artifact")?
+        .clone();
+    let n = meta.shape[0];
+
+    let mut rng = Rng::new(42);
+    let x = rand_tensor(&mut rng, &[1, n], crate::tensor::DType::F32);
+    let params = Tensor::from_f32(&[0.9999], &[1]);
+    let exec = xp.ctx.fused.executor();
+
+    let points: Vec<usize> = if xp.fast {
+        vec![1, 16, 64, 256, 1024]
+    } else {
+        vec![1, 4, 16, 64, 128, 260, 380, 512, 768, 1161]
+    };
+
+    let mut t = Table::new(
+        "Fig. 1 — kernel time vs instructions per element",
+        &["instrs", "measured_ms (CPU-PJRT)", "rsd_%", "sim_rtx4090_ms", "regime"],
+    );
+    t.note(format!("vector = {n} f32 elements; measured substrate = fused StaticLoop artifact"));
+    t.note("sim column = analytical RTX 4090 model at paper scale (66.3M elems), labelled simulated");
+
+    let gpu = GpuModel::new(table_ii_systems()[4]);
+    let hw = crate::bench::calibrate();
+    for &i in &points {
+        let trip = Tensor::from_i32(&[i as i32], &[1]);
+        let st = xp.measure(|| {
+            exec.run(&meta.name, &[trip.clone(), x.clone(), params.clone()]).unwrap()
+        });
+        let sim = gpu.fig1_curve(3840.0 * 2160.0 * 8.0, 8.0, &[i as f64])[0].1;
+        let mb = crate::fusion::cost::is_memory_bound(&hw, (n * 8) as f64, n as f64, i as f64);
+        t.row(vec![
+            i.to_string(),
+            ms(st.mean_s),
+            format!("{:.2}", st.rsd_pct),
+            ms(sim),
+            if mb { "MB".into() } else { "CB".into() },
+        ]);
+    }
+    Ok(vec![t])
+}

@@ -1,0 +1,52 @@
+//! Experiment runners — one module per paper figure/table (DESIGN.md §6).
+//!
+//! Each produces a [`Table`](crate::bench::Table) written to `results/` as
+//! CSV + markdown; EXPERIMENTS.md records paper-vs-measured for each. All
+//! runners share [`XpCtx`]: the registry, engines, and a time budget knob
+//! (`--fast` trims sweeps for CI; default runs fuller sweeps).
+
+mod ablation;
+mod common;
+mod fig1;
+mod xp01_wrapper;
+mod xp02_vf;
+mod xp03_hf;
+mod xp04_vfhf;
+mod xp05_instrs;
+mod xp06_cpu;
+mod xp07_datasize;
+mod xp08_gpusize;
+mod xp09_dtype;
+mod xp10_npp;
+mod xpmem;
+
+pub use common::XpCtx;
+
+use anyhow::Result;
+
+use crate::bench::Table;
+
+/// All experiment ids in run order.
+pub const ALL: &[&str] = &[
+    "fig1", "1", "2", "3", "4", "5", "6", "7", "8", "9", "10", "mem", "ablation",
+];
+
+/// Run one experiment by id.
+pub fn run(id: &str, ctx: &XpCtx) -> Result<Vec<Table>> {
+    match id {
+        "fig1" => fig1::run(ctx),
+        "1" => xp01_wrapper::run(ctx),
+        "2" => xp02_vf::run(ctx),
+        "3" => xp03_hf::run(ctx),
+        "4" => xp04_vfhf::run(ctx),
+        "5" => xp05_instrs::run(ctx),
+        "6" => xp06_cpu::run(ctx),
+        "7" => xp07_datasize::run(ctx),
+        "8" => xp08_gpusize::run(ctx),
+        "9" => xp09_dtype::run(ctx),
+        "10" => xp10_npp::run(ctx),
+        "mem" => xpmem::run(ctx),
+        "ablation" => ablation::run(ctx),
+        other => anyhow::bail!("unknown experiment {other:?}; ids: {ALL:?}"),
+    }
+}

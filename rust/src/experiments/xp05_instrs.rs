@@ -1,0 +1,78 @@
+//! Exp. 5 (Fig. 19) — instructions per operation.
+//!
+//! Paper: 500 total instructions split into N kernels of M instructions each
+//! (N*M = 500); speedup of the single 500-instruction kernel vs the N-kernel
+//! chain decreases as M grows, with bumps where N drops by one and a rise
+//! past M=250 (the last kernel turns MB).
+//!
+//! Here both arms use the same StaticLoop artifact: fused = 1 launch with
+//! trip 500; split = ceil(500/M) launches with trip M (remainder in the last
+//! launch) — each launch is a full DRAM read+write pass, like the paper.
+
+use anyhow::{Context, Result};
+
+use crate::bench::Table;
+use crate::proplite::Rng;
+use crate::tensor::{DType, Tensor};
+
+use super::common::{fx, ms, rand_tensor, XpCtx};
+
+pub fn run(xp: &XpCtx) -> Result<Vec<Table>> {
+    let reg = xp.registry();
+    let meta = reg
+        .find(|m| {
+            m.kind == "staticloop"
+                && m.variant == "pallas"
+                && m.ops == ["mul"]
+                && m.dtin == "f32"
+                && m.shape.len() == 1
+        })
+        .into_iter()
+        .max_by_key(|m| m.shape[0])
+        .context("missing staticloop_mul_f32 artifact")?
+        .clone();
+    let n_elems = meta.shape[0];
+
+    let mut rng = Rng::new(9);
+    let x = rand_tensor(&mut rng, &[1, n_elems], DType::F32);
+    let params = Tensor::from_f32(&[0.99999], &[1]);
+    let exec = xp.ctx.fused.executor();
+
+    const TOTAL: usize = 500;
+    let per_op: Vec<usize> =
+        if xp.fast { vec![1, 25, 250] } else { vec![1, 2, 5, 10, 25, 50, 100, 125, 250, 400, 496] };
+
+    let fused = {
+        let trip = Tensor::from_i32(&[TOTAL as i32], &[1]);
+        xp.measure(|| exec.run(&meta.name, &[trip.clone(), x.clone(), params.clone()]).unwrap())
+    };
+
+    let mut t = Table::new(
+        "Fig. 19 — instructions per op (500 total), f32 vector",
+        &["instrs_per_op", "n_kernels", "fused_ms", "split_ms", "speedup"],
+    );
+    t.note(format!("vector = {n_elems} f32; fused arm = one 500-instruction kernel"));
+
+    for &m in &per_op {
+        let n_kernels = TOTAL.div_ceil(m);
+        let split = xp.measure(|| {
+            let mut left = TOTAL;
+            let mut cur = x.clone();
+            while left > 0 {
+                let step = left.min(m);
+                let trip = Tensor::from_i32(&[step as i32], &[1]);
+                cur = exec.run(&meta.name, &[trip, cur, params.clone()]).unwrap();
+                left -= step;
+            }
+            cur
+        });
+        t.row(vec![
+            m.to_string(),
+            n_kernels.to_string(),
+            ms(fused.mean_s),
+            ms(split.mean_s),
+            fx(split.mean_s / fused.mean_s),
+        ]);
+    }
+    Ok(vec![t])
+}

@@ -1,0 +1,70 @@
+//! Exp. 6 (Fig. 20) — CPU-side execution time.
+//!
+//! Paper: the host work of computing kernel parameters + issuing launches for
+//! the preprocessing chain, batch 2..152: the fused API does one parameter
+//! pack + one launch; OpenCV/NPP redo parameter work per call per crop.
+//! We time ONLY the host side: parameter tensor construction + plan lookup
+//! (fused) vs per-crop per-step parameter marshaling (baseline).
+
+use anyhow::Result;
+
+use crate::bench::Table;
+use crate::npp::{PreprocPipeline, ResizeBatchSpec};
+use crate::tensor::{Rect, Tensor};
+
+use super::common::{fx, XpCtx};
+
+pub fn run(xp: &XpCtx) -> Result<Vec<Table>> {
+    let batches: Vec<usize> = {
+        let all = xp.geom_usizes("preproc_batches", &[2, 8, 50, 152]);
+        if xp.fast {
+            all.into_iter().filter(|b| [2usize, 50, 152].contains(b)).collect()
+        } else {
+            all
+        }
+    };
+
+    let mut t = Table::new(
+        "Fig. 20 — CPU-side time: parameter computation + launch issue (preproc chain)",
+        &["batch", "fused_cpu_us", "percall_cpu_us", "speedup"],
+    );
+    t.note("host-side work only (no kernel execution): fused packs params once; the baseline re-derives them per crop per step");
+
+    for &b in &batches {
+        let rects: Vec<Rect> =
+            (0..b).map(|i| Rect::new((i as i32 * 13) % 1100, (i as i32 * 7) % 640, 120, 60)).collect();
+
+        // fused host work: one rect tensor + 3 constants + plan construction
+        let fused = xp.measure(|| {
+            let mut p = PreprocPipeline::new(
+                ResizeBatchSpec { rects: rects.clone(), dst_h: 128, dst_w: 64 },
+                [0.9, 1.0, 1.1],
+                [0.5; 3],
+                [2.0; 3],
+            );
+            p.precompute();
+            p
+        });
+
+        // baseline host work: per crop, per step, rebuild the param tensors
+        // (what nppiMulC_32f_C3R_Ctx & friends force every iteration)
+        let percall = xp.measure(|| {
+            for r in &rects {
+                let _rect = Tensor::from_i32(&[r.x0, r.y0, r.w, r.h], &[4]);
+                for _step in 0..7 {
+                    let _c = Tensor::from_f32(&[0.9, 1.0, 1.1], &[3]);
+                    std::hint::black_box(&_c);
+                }
+                std::hint::black_box(&_rect);
+            }
+        });
+
+        t.row(vec![
+            b.to_string(),
+            format!("{:.2}", fused.mean_us()),
+            format!("{:.2}", percall.mean_us()),
+            fx(percall.mean_s / fused.mean_s),
+        ]);
+    }
+    Ok(vec![t])
+}

@@ -1,0 +1,71 @@
+//! Exp. 7 (Fig. 21) — execution time vs data size.
+//!
+//! Paper: 1-D f32, 100..16,654,030 elements, 100 Mul+Add pairs; log-scale
+//! execution times of OpenCV-CUDA vs cvGS. Both rise with size; the unfused
+//! baseline is flat at small sizes (launch-bound) while the fused kernel
+//! scales from the start; near bandwidth saturation the fused curve grows
+//! more slowly (latency hiding).
+
+use anyhow::Result;
+
+use crate::bench::Table;
+use crate::exec::Engine;
+use crate::proplite::Rng;
+use crate::tensor::{DType, Tensor};
+
+use super::common::{fx, ms, muladd_pairs, rand_tensor, XpCtx};
+
+const PAIRS: usize = 100;
+
+pub fn run(xp: &XpCtx) -> Result<Vec<Table>> {
+    let sizes: Vec<usize> = {
+        let all = xp.geom_usizes(
+            "sizes",
+            &[100, 10_000, 1_000_000, 16_654_030],
+        );
+        if xp.fast {
+            all.into_iter().filter(|n| *n <= 1_000_000).collect()
+        } else {
+            all
+        }
+    };
+    let reg = xp.registry();
+    let exec = xp.ctx.fused.executor();
+
+    let mut t = Table::new(
+        "Fig. 21 — execution time vs data size (100 Mul+Add pairs, f32)",
+        &["elements", "fused_ms", "unfused_ms", "speedup"],
+    );
+    t.note("unfused = 200 single-op launches (one per Mul/Add, like OpenCV-CUDA)");
+
+    let mut rng = Rng::new(13);
+    for &n in &sizes {
+        let Some(loop_meta) = reg
+            .find(|m| {
+                m.kind == "staticloop" && m.variant == "pallas" && m.dtin == "f32" && m.shape == [n]
+            })
+            .into_iter()
+            .next()
+        else {
+            continue;
+        };
+        let x = rand_tensor(&mut rng, &[1, n], DType::F32);
+        let params = Tensor::from_f32(&[0.999, 0.001], &[2]);
+        let trip = Tensor::from_i32(&[PAIRS as i32], &[1]);
+
+        let fused = xp.measure(|| {
+            exec.run(&loop_meta.name, &[trip.clone(), x.clone(), params.clone()]).unwrap()
+        });
+
+        let p = muladd_pairs(PAIRS, &[n], 1, DType::F32, DType::F32);
+        let unfused = xp.measure(|| xp.ctx.unfused.run(&p, &x).unwrap());
+
+        t.row(vec![
+            n.to_string(),
+            ms(fused.mean_s),
+            ms(unfused.mean_s),
+            fx(unfused.mean_s / fused.mean_s),
+        ]);
+    }
+    Ok(vec![t])
+}

@@ -1,0 +1,57 @@
+//! Exp. 8 (Fig. 22) — GPU size: max VF x HF speedup vs FLOP/B.
+//!
+//! Paper: the Exp. 4 workload on the five Table II systems; max speedup
+//! correlates with FLOP per byte (up to 20.9kx on System 5). We have no
+//! GPUs: the five systems run on the analytical simulator (DESIGN.md §3.4),
+//! and the host CPU contributes a measured datum for shape validation.
+
+use anyhow::Result;
+
+use crate::bench::Table;
+use crate::simulator::{table_ii_systems, GpuModel, KernelShape};
+
+use super::common::{fx, XpCtx};
+
+pub fn run(xp: &XpCtx) -> Result<Vec<Table>> {
+    // Exp. 4 workload: 60x120 u8 (read u8 + write u8 at full fusion), batch
+    // 50, up to 10,000 Mul+Add pairs (FMA-paired: 1 issued instr per pair)
+    let k = KernelShape {
+        elems: 60.0 * 120.0,
+        bytes_per_elem: 2.0,
+        instrs_per_elem: 1.0,
+        occupancy: 1.0,
+    };
+    // occupancy of ONE 60x120 image relative to each GPU: 7200 threads vs
+    // cores; small kernels can't fill big GPUs (the HF motivation)
+    let mut t = Table::new(
+        "Fig. 22 — max VF x HF speedup vs FLOP/B (Table II systems, simulated)",
+        &["system", "FLOP/B", "max_speedup (sim)", "at_pairs"],
+    );
+    t.note("simulated substrate: analytical latency-hiding roofline with launch overhead and spill (see simulator/)");
+
+    let pairs_sweep: &[usize] = &[10, 100, 1000, 2000, 4000, 8000, 10000];
+    for spec in table_ii_systems() {
+        let m = GpuModel::new(spec);
+        let small_occ = (7200.0 / spec.compute_cores as f64).min(1.0) * 0.5;
+        let (mut best, mut best_at) = (0.0f64, 0usize);
+        for &pairs in pairs_sweep {
+            let su = m.vfhf_speedup(&k, small_occ, 50, pairs);
+            if su > best {
+                best = su;
+                best_at = pairs;
+            }
+        }
+        t.row(vec![
+            spec.name.to_string(),
+            format!("{:.2}", spec.flop_per_byte()),
+            fx(best),
+            best_at.to_string(),
+        ]);
+    }
+
+    // measured CPU datum: fused-vs-unfused from xp04 at a modest pair count
+    if !xp.fast {
+        t.note("CPU-PJRT measured shape validation lives in xp04's table (same workload)");
+    }
+    Ok(vec![t])
+}

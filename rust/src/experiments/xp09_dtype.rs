@@ -1,0 +1,47 @@
+//! Exp. 9 (Fig. 23) — speedup vs input/output data type.
+//!
+//! Paper: chain Cast-Mul-Sub-Div, batch 50 of 60x120; eight in->out combos.
+//! Speedups similar across types except double-involving combos (CB earlier,
+//! VF gains less); double->double beats float->double because it is more MB.
+
+use anyhow::Result;
+
+use crate::bench::Table;
+use crate::exec::Engine;
+use crate::proplite::Rng;
+use crate::tensor::DType;
+
+use super::common::{cmsd, fx, ms, rand_tensor, XpCtx};
+
+pub fn run(xp: &XpCtx) -> Result<Vec<Table>> {
+    let combos: Vec<(DType, DType)> = xp.ctx.registry.geometry["dtype_combos"]
+        .as_arr()
+        .map(|arr| {
+            arr.iter()
+                .filter_map(|c| {
+                    Some((DType::parse(c[0].as_str()?)?, DType::parse(c[1].as_str()?)?))
+                })
+                .collect()
+        })
+        .unwrap_or_else(|| vec![(DType::U8, DType::F32), (DType::F32, DType::F32)]);
+
+    let mut t = Table::new(
+        "Fig. 23 — dtype combos, chain Cast-Mul-Sub-Div, batch 50 of 60x120",
+        &["in->out", "fused_ms", "unfused_ms", "speedup"],
+    );
+
+    let mut rng = Rng::new(21);
+    for (dtin, dtout) in combos {
+        let input = rand_tensor(&mut rng, &[50, 60, 120], dtin);
+        let p = cmsd(&[60, 120], 50, dtin, dtout);
+        let fused = xp.measure(|| xp.ctx.fused.run(&p, &input).unwrap());
+        let unfused = xp.measure(|| xp.ctx.unfused.run(&p, &input).unwrap());
+        t.row(vec![
+            format!("{dtin}->{dtout}"),
+            ms(fused.mean_s),
+            ms(unfused.mean_s),
+            fx(unfused.mean_s / fused.mean_s),
+        ]);
+    }
+    Ok(vec![t])
+}

@@ -1,0 +1,58 @@
+//! Exp. 10 (Fig. 24) — NPP vs FastNPP on the production pipeline.
+//!
+//! Paper: Batch(Crop->Resize->ColorConvert->Mul->Sub->Div->Split), batch
+//! 10..150; FastNPP with per-iteration CPU work saturates at 61x; with
+//! precomputed IOps it reaches 136x.
+
+use anyhow::Result;
+
+use crate::bench::Table;
+use crate::npp::{PreprocPipeline, ResizeBatchSpec};
+use crate::tensor::{make_frame, Rect};
+
+use super::common::{fx, ms, XpCtx};
+
+pub fn run(xp: &XpCtx) -> Result<Vec<Table>> {
+    let batches: Vec<usize> = {
+        let all = xp.geom_usizes("preproc_batches", &[2, 8, 50, 152]);
+        if xp.fast {
+            all.into_iter().filter(|b| [2usize, 16, 50].contains(b)).collect()
+        } else {
+            all
+        }
+    };
+
+    let frame = make_frame(720, 1280, 99);
+    let mut t = Table::new(
+        "Fig. 24 — NPP-style vs FastNPP (preproc pipeline)",
+        &["batch", "npp_ms", "fastnpp_ms", "fastnpp_pre_ms", "speedup", "speedup_precomputed"],
+    );
+    t.note("npp arm: one launch per step per crop; fastnpp: one fused launch (with/without per-iteration CPU parameter work)");
+
+    for &b in &batches {
+        let rects: Vec<Rect> = (0..b)
+            .map(|i| Rect::new((i as i32 * 37) % 1100, (i as i32 * 17) % 640, 120, 60))
+            .collect();
+        let mut pipe = PreprocPipeline::new(
+            ResizeBatchSpec { rects, dst_h: 128, dst_w: 64 },
+            [0.9, 1.0, 1.1],
+            [0.5, 0.4, 0.3],
+            [2.0, 2.1, 2.2],
+        );
+
+        let npp = xp.measure(|| pipe.run_npp_style(&xp.ctx, &frame).unwrap());
+        let fast = xp.measure(|| pipe.run(&xp.ctx, &frame).unwrap());
+        pipe.precompute();
+        let fast_pre = xp.measure(|| pipe.run_precomputed(&xp.ctx, &frame).unwrap());
+
+        t.row(vec![
+            b.to_string(),
+            ms(npp.mean_s),
+            ms(fast.mean_s),
+            ms(fast_pre.mean_s),
+            fx(npp.mean_s / fast.mean_s),
+            fx(npp.mean_s / fast_pre.mean_s),
+        ]);
+    }
+    Ok(vec![t])
+}

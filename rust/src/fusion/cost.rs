@@ -1,0 +1,132 @@
+//! Roofline cost model: memory-bound vs compute-bound classification.
+//!
+//! The paper's Fig. 1 measures the defining behaviour: a kernel's time is
+//! flat in instruction count while memory-bound (latency hiding absorbs the
+//! ALU work), then grows linearly once compute-bound. This model captures
+//! that with a smooth-max roofline and is shared by the planner (is fusion
+//! worth it?), the experiments (predicted-vs-measured) and the GPU simulator
+//! (which adds launch overhead and spill effects on top).
+
+/// Hardware profile for the cost model. `effective_*` values are measured on
+/// this host by `bench::calibrate` (defaults are rough CPU numbers).
+#[derive(Debug, Clone, Copy)]
+pub struct HwProfile {
+    /// Sustained memory bandwidth, bytes/sec.
+    pub mem_bw: f64,
+    /// Sustained element-op throughput, simple ops/sec (all cores).
+    pub flops: f64,
+    /// Fixed cost of one kernel launch/dispatch, seconds.
+    pub launch_overhead: f64,
+}
+
+impl Default for HwProfile {
+    fn default() -> Self {
+        // conservative single-socket CPU defaults; calibrate() refines
+        HwProfile { mem_bw: 20e9, flops: 30e9, launch_overhead: 30e-6 }
+    }
+}
+
+/// Estimated execution time of ONE kernel moving `bytes` and executing
+/// `elems * instrs_per_elem` simple ops.
+pub fn kernel_time(hw: &HwProfile, bytes: f64, elems: f64, instrs_per_elem: f64) -> f64 {
+    let mem_t = bytes / hw.mem_bw;
+    let cmp_t = elems * instrs_per_elem / hw.flops;
+    // latency hiding: mem and compute overlap; total is max, softened so the
+    // MB->CB knee is smooth like the measured Fig. 1 curve
+    let m = mem_t.max(cmp_t);
+    let s = mem_t.min(cmp_t);
+    hw.launch_overhead + m + 0.08 * s
+}
+
+/// A kernel is memory-bound if the memory term dominates.
+pub fn is_memory_bound(hw: &HwProfile, bytes: f64, elems: f64, instrs_per_elem: f64) -> bool {
+    bytes / hw.mem_bw >= elems * instrs_per_elem / hw.flops
+}
+
+/// Instructions/element at which the kernel transitions MB -> CB given its
+/// bytes-per-element traffic (the paper's ~260 float adds on an RTX 4090).
+pub fn cb_knee(hw: &HwProfile, bytes_per_elem: f64) -> f64 {
+    bytes_per_elem / hw.mem_bw * hw.flops
+}
+
+/// Predicted time of a FUSED chain: one kernel, all body instructions.
+pub fn fused_time(hw: &HwProfile, elems: f64, io_bytes: f64, total_instrs: f64) -> f64 {
+    kernel_time(hw, io_bytes, elems, total_instrs)
+}
+
+/// Predicted time of the UNFUSED chain: one kernel per op, each doing a full
+/// read+write pass (paper Fig. 3A).
+pub fn unfused_time(
+    hw: &HwProfile,
+    elems: f64,
+    per_kernel_bytes: f64,
+    instrs_each: &[f64],
+) -> f64 {
+    instrs_each.iter().map(|&i| kernel_time(hw, per_kernel_bytes, elems, i)).sum()
+}
+
+/// Predicted VF speedup for a chain of `n_ops` 1-instruction ops.
+pub fn vf_speedup(hw: &HwProfile, elems: f64, bytes_per_elem: f64, n_ops: usize) -> f64 {
+    let io = elems * bytes_per_elem;
+    let fused = fused_time(hw, elems, io, n_ops as f64);
+    let unfused = unfused_time(hw, elems, io, &vec![1.0; n_ops]);
+    unfused / fused
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hw() -> HwProfile {
+        HwProfile { mem_bw: 100e9, flops: 1000e9, launch_overhead: 10e-6 }
+    }
+
+    #[test]
+    fn mb_kernels_are_flat_in_instructions() {
+        let h = hw();
+        let elems = 1e7;
+        let bytes = elems * 8.0;
+        let t1 = kernel_time(&h, bytes, elems, 1.0);
+        let t2 = kernel_time(&h, bytes, elems, 4.0);
+        // still MB: time changes only through the overlap softening term
+        assert!((t2 - t1) / t1 < 0.05, "t1={t1} t2={t2}");
+    }
+
+    #[test]
+    fn cb_kernels_grow_linearly() {
+        let h = hw();
+        let elems = 1e7;
+        let bytes = elems * 8.0;
+        let knee = cb_knee(&h, 8.0);
+        let t1 = kernel_time(&h, bytes, elems, knee * 4.0);
+        let t2 = kernel_time(&h, bytes, elems, knee * 8.0);
+        assert!(t2 / t1 > 1.8, "expected ~2x: {}", t2 / t1);
+    }
+
+    #[test]
+    fn knee_matches_flopb_ratio() {
+        // paper: FLOP/B 68.97 on the 4090, 8 bytes/elem r+w for f32
+        // knee ~= 8 * FLOP_per_byte in 1-instr units
+        let h = HwProfile { mem_bw: 1008e9, flops: 82.58e12 / 2.0, launch_overhead: 5e-6 };
+        let k = cb_knee(&h, 8.0);
+        assert!(k > 200.0 && k < 500.0, "knee {k} should be a few hundred like Fig. 1");
+    }
+
+    #[test]
+    fn vf_speedup_monotone_then_saturating() {
+        let h = hw();
+        let s2 = vf_speedup(&h, 1e7, 8.0, 2);
+        let s64 = vf_speedup(&h, 1e7, 8.0, 64);
+        let s4096 = vf_speedup(&h, 1e7, 8.0, 4096);
+        let s8192 = vf_speedup(&h, 1e7, 8.0, 8192);
+        assert!(s2 > 1.5 && s64 > s2, "s2={s2} s64={s64}");
+        // saturation: doubling ops no longer doubles speedup
+        assert!(s8192 / s4096 < 1.3, "saturating: {s4096} -> {s8192}");
+    }
+
+    #[test]
+    fn single_op_speedup_is_one() {
+        let s = vf_speedup(&hw(), 1e7, 8.0, 1);
+        assert!((s - 1.0).abs() < 1e-9);
+    }
+}

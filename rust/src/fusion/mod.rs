@@ -1,0 +1,27 @@
+//! Automatic fusion — the paper's core contribution, as a runtime planner.
+//!
+//! The paper fuses at C++ compile time: the user's IOp sequence instantiates
+//! a single `__global__` kernel. Our runtime is AOT (Python never runs on
+//! the request path), so "compile time" happened at `make artifacts`; this
+//! module maps an arbitrary user [`Pipeline`](crate::ops::Pipeline) onto the
+//! pre-lowered artifact family through three tiers (DESIGN.md §3.6):
+//!
+//! 1. **Exact** — a chain artifact whose op sequence/dtypes/shape/batch match.
+//! 2. **StaticLoop** — the body is a repetition of an artifact's loop body
+//!    (the paper's StaticLoop Op); the trip count becomes a runtime input.
+//! 3. **Interp** — the generic interpreter kernel executes any vocabulary
+//!    chain up to `kmax` ops with opcodes/params as runtime tensors.
+//!
+//! Horizontal Fusion is planned by [`hfusion`]: requests sharing a stream
+//! key are packed into batch buckets. [`cost`] is the roofline model that
+//! classifies kernels MB/CB and predicts fusion gain; [`memsave`] accounts
+//! the DRAM the fused plan avoids (paper §VI-L).
+
+pub mod cost;
+pub mod hfusion;
+pub mod memsave;
+mod plan;
+mod planner;
+
+pub use plan::{FusionPlan, PlanInputs};
+pub use planner::{plan_pipeline, unfused_plan, PlanError, Planner, PlannerStats};

@@ -1,0 +1,90 @@
+//! Fusion plans: the executable form of a pipeline.
+
+use crate::ops::{IOp, Pipeline};
+use crate::tensor::Tensor;
+
+/// How a pipeline will execute. Produced by [`super::plan_pipeline`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum FusionPlan {
+    /// One launch of an exact fused-chain artifact (tier 1).
+    Exact { artifact: String },
+    /// One launch of a StaticLoop artifact with a runtime trip count (tier 2).
+    StaticLoop { artifact: String, iters: usize },
+    /// One launch of the interpreter artifact; opcode/param tensors are
+    /// derived from the pipeline at RUN time (plans are cached under a
+    /// params-agnostic signature, so they must not embed parameter values).
+    Interp { artifact: String, kmax: usize },
+    /// No fused artifact covers this pipeline: one launch per op (the
+    /// baseline path; also what the unfused engine uses on purpose).
+    Unfused { artifacts: Vec<String> },
+}
+
+impl FusionPlan {
+    /// Number of kernel launches this plan issues.
+    pub fn launches(&self) -> usize {
+        match self {
+            FusionPlan::Unfused { artifacts } => artifacts.len(),
+            _ => 1,
+        }
+    }
+
+    /// True if the plan keeps all intermediates in registers (fused tiers).
+    pub fn is_fused(&self) -> bool {
+        !matches!(self, FusionPlan::Unfused { .. })
+    }
+
+    pub fn tier(&self) -> &'static str {
+        match self {
+            FusionPlan::Exact { .. } => "exact",
+            FusionPlan::StaticLoop { .. } => "staticloop",
+            FusionPlan::Interp { .. } => "interp",
+            FusionPlan::Unfused { .. } => "unfused",
+        }
+    }
+}
+
+/// Runtime input tensors for a plan, in artifact argument order.
+pub struct PlanInputs;
+
+impl PlanInputs {
+    /// Parameter vector f32[K] for a chain artifact (param per body op;
+    /// unary ops contribute their slot as 0).
+    pub fn chain_params(p: &Pipeline) -> Tensor {
+        let v: Vec<f32> = p
+            .body()
+            .iter()
+            .map(|op| match op {
+                IOp::Compute { param, .. } => *param as f32,
+                _ => 0.0,
+            })
+            .collect();
+        let k = v.len();
+        Tensor::from_f32(&v, &[k])
+    }
+
+    /// StaticLoop inputs: (trip, params-of-one-iteration).
+    pub fn staticloop_inputs(p: &Pipeline, body_len: usize, iters: usize) -> (Tensor, Tensor) {
+        let pattern = &p.body()[..body_len];
+        let v: Vec<f32> = pattern
+            .iter()
+            .map(|op| match op {
+                IOp::Compute { param, .. } => *param as f32,
+                _ => 0.0,
+            })
+            .collect();
+        (Tensor::from_i32(&[iters as i32], &[1]), Tensor::from_f32(&v, &[body_len]))
+    }
+
+    /// Interp inputs: (opcodes i32[kmax], params f32[kmax]), nop-padded.
+    pub fn interp_inputs(p: &Pipeline, kmax: usize) -> (Tensor, Tensor) {
+        let mut opc = vec![0i32; kmax];
+        let mut par = vec![0f32; kmax];
+        for (i, op) in p.body().iter().enumerate() {
+            if let IOp::Compute { op, param } = op {
+                opc[i] = op.code();
+                par[i] = *param as f32;
+            }
+        }
+        (Tensor::from_i32(&opc, &[kmax]), Tensor::from_f32(&par, &[kmax]))
+    }
+}

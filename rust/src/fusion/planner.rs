@@ -1,0 +1,225 @@
+//! The VF planner: pipeline -> FusionPlan against the artifact registry.
+
+use crate::ops::{IOp, Pipeline, Signature};
+use crate::runtime::{ArtifactMeta, Registry};
+
+use super::FusionPlan;
+
+#[derive(Debug, thiserror::Error)]
+pub enum PlanError {
+    #[error("no artifact covers pipeline {sig} (tiers tried: exact, staticloop, interp, unfused)")]
+    NoCoverage { sig: String },
+    #[error("pipeline contains non-elementwise ops; only chain pipelines are plannable: {0}")]
+    NotAChain(String),
+}
+
+/// Cumulative planner decisions (exposed as coordinator metrics and used by
+/// the tier-ablation bench).
+#[derive(Debug, Default, Clone)]
+pub struct PlannerStats {
+    pub exact: usize,
+    pub staticloop: usize,
+    pub interp: usize,
+    pub unfused: usize,
+}
+
+/// Stateless planning with stat tracking.
+pub struct Planner {
+    pub stats: PlannerStats,
+    /// artifact variant preference ("pallas" with "xla" fallback)
+    pub variant: String,
+}
+
+impl Default for Planner {
+    fn default() -> Self {
+        Planner { stats: PlannerStats::default(), variant: "pallas".to_string() }
+    }
+}
+
+impl Planner {
+    pub fn plan(&mut self, p: &Pipeline, reg: &Registry) -> Result<FusionPlan, PlanError> {
+        let plan = plan_pipeline(p, reg, &self.variant)?;
+        match &plan {
+            FusionPlan::Exact { .. } => self.stats.exact += 1,
+            FusionPlan::StaticLoop { .. } => self.stats.staticloop += 1,
+            FusionPlan::Interp { .. } => self.stats.interp += 1,
+            FusionPlan::Unfused { .. } => self.stats.unfused += 1,
+        }
+        Ok(plan)
+    }
+}
+
+fn body_opnames(p: &Pipeline) -> Result<Vec<&'static str>, PlanError> {
+    p.body()
+        .iter()
+        .map(|op| match op {
+            IOp::Compute { op, .. } => Ok(op.name()),
+            other => Err(PlanError::NotAChain(other.sig_token())),
+        })
+        .collect()
+}
+
+/// Plan one pipeline. Tier order: exact > staticloop > interp > unfused.
+pub fn plan_pipeline(
+    p: &Pipeline,
+    reg: &Registry,
+    variant: &str,
+) -> Result<FusionPlan, PlanError> {
+    let names = body_opnames(p)?;
+    let dtin = p.dtin.name();
+    let dtout = p.dtout.name();
+
+    // tier 1: exact fused chain
+    let exact = reg.find(|m| {
+        (m.kind == "chain" || m.kind == "single_op")
+            && matches_variant(m, variant)
+            && m.ops == names
+            && m.dtin == dtin
+            && m.dtout == dtout
+            && m.shape == p.shape
+            && m.batch == p.batch
+    });
+    if let Some(m) = prefer_variant(exact, variant) {
+        return Ok(FusionPlan::Exact { artifact: m.name.clone() });
+    }
+
+    // tier 2: StaticLoop — body is n repetitions of an artifact's loop body
+    // with position-uniform params (the paper reuses one Op instance)
+    let loops = reg.find(|m| {
+        m.kind == "staticloop"
+            && matches_variant(m, variant)
+            && m.dtin == dtin
+            && m.dtout == dtout
+            && m.shape == p.shape
+            && m.batch == p.batch
+    });
+    for m in prefer_variant_all(loops, variant) {
+        if let Some(iters) = repetition_count(p, &m.ops) {
+            return Ok(FusionPlan::StaticLoop { artifact: m.name.clone(), iters });
+        }
+    }
+
+    // tier 3: interpreter kernel
+    let interps = reg.find(|m| {
+        m.kind == "interp"
+            && matches_variant(m, variant)
+            && m.dtin == dtin
+            && m.dtout == dtout
+            && m.shape == p.shape
+            && m.batch == p.batch
+            && m.kmax >= names.len()
+    });
+    if let Some(m) = prefer_variant(interps, variant) {
+        return Ok(FusionPlan::Interp { artifact: m.name.clone(), kmax: m.kmax });
+    }
+
+    // tier 4: unfused fallback — per-op singles at batch width (or b=1)
+    if let Some(plan) = unfused_plan(p, reg, &names) {
+        return Ok(plan);
+    }
+
+    Err(PlanError::NoCoverage { sig: Signature::of(p).to_string() })
+}
+
+/// Build the per-op launch list of the unfused baseline: first op carries the
+/// dtin->dtout cast, the rest run dtout->dtout (the OpenCV convertTo-then-
+/// arithm structure).
+pub fn unfused_plan(p: &Pipeline, reg: &Registry, names: &[&str]) -> Option<FusionPlan> {
+    let dtout = p.dtout.name();
+    let mut artifacts = Vec::with_capacity(names.len());
+    for (i, &name) in names.iter().enumerate() {
+        let dtin = if i == 0 { p.dtin.name() } else { dtout };
+        let m = reg
+            .find(|m| {
+                m.kind == "single_op"
+                    && m.ops.len() == 1
+                    && m.ops[0] == name
+                    && m.dtin == dtin
+                    && m.dtout == dtout
+                    && m.shape == p.shape
+                    && (m.batch == p.batch || m.batch == 1)
+            })
+            .into_iter()
+            // prefer exact batch match over b=1 looping
+            .max_by_key(|m| (m.batch == p.batch) as u8)?;
+        artifacts.push(m.name.clone());
+    }
+    Some(FusionPlan::Unfused { artifacts })
+}
+
+/// If the pipeline body is exactly `pattern` repeated n >= 1 times with
+/// position-uniform params, return n.
+fn repetition_count(p: &Pipeline, pattern: &[String]) -> Option<usize> {
+    let body = p.body();
+    if pattern.is_empty() || body.len() % pattern.len() != 0 {
+        return None;
+    }
+    let n = body.len() / pattern.len();
+    let mut first_params: Vec<f64> = Vec::with_capacity(pattern.len());
+    for (i, op) in body.iter().enumerate() {
+        let IOp::Compute { op, param } = op else { return None };
+        if op.name() != pattern[i % pattern.len()] {
+            return None;
+        }
+        if i < pattern.len() {
+            first_params.push(*param);
+        } else if *param != first_params[i % pattern.len()] {
+            return None; // params must repeat with the pattern
+        }
+    }
+    Some(n)
+}
+
+fn matches_variant(m: &ArtifactMeta, variant: &str) -> bool {
+    m.variant == variant || m.variant == "pallas" || m.variant == "xla"
+}
+
+fn prefer_variant<'a>(mut v: Vec<&'a ArtifactMeta>, variant: &str) -> Option<&'a ArtifactMeta> {
+    v.sort_by_key(|m| (m.variant != variant) as u8);
+    v.into_iter().next()
+}
+
+fn prefer_variant_all<'a>(mut v: Vec<&'a ArtifactMeta>, variant: &str) -> Vec<&'a ArtifactMeta> {
+    v.sort_by_key(|m| (m.variant != variant) as u8);
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::{Opcode, Pipeline};
+    use crate::tensor::DType;
+
+    fn pipe(chain: &[(Opcode, f64)], shape: &[usize], batch: usize) -> Pipeline {
+        Pipeline::from_opcodes(chain, shape, batch, DType::F32, DType::F32).unwrap()
+    }
+
+    #[test]
+    fn repetition_detection() {
+        let p = pipe(
+            &[(Opcode::Mul, 2.0), (Opcode::Add, 1.0), (Opcode::Mul, 2.0), (Opcode::Add, 1.0)],
+            &[4],
+            1,
+        );
+        assert_eq!(repetition_count(&p, &["mul".into(), "add".into()]), Some(2));
+        // non-uniform params break the loop contract
+        let p2 = pipe(
+            &[(Opcode::Mul, 2.0), (Opcode::Add, 1.0), (Opcode::Mul, 3.0), (Opcode::Add, 1.0)],
+            &[4],
+            1,
+        );
+        assert_eq!(repetition_count(&p2, &["mul".into(), "add".into()]), None);
+        // wrong op order
+        let p3 = pipe(&[(Opcode::Add, 1.0), (Opcode::Mul, 2.0)], &[4], 1);
+        assert_eq!(repetition_count(&p3, &["mul".into(), "add".into()]), None);
+        // length not divisible
+        let p4 = pipe(&[(Opcode::Mul, 2.0), (Opcode::Add, 1.0), (Opcode::Mul, 2.0)], &[4], 1);
+        assert_eq!(repetition_count(&p4, &["mul".into(), "add".into()]), None);
+    }
+
+    #[test]
+    fn single_rep_counts_as_one() {
+        let p = pipe(&[(Opcode::Mul, 2.0), (Opcode::Add, 1.0)], &[4], 1);
+        assert_eq!(repetition_count(&p, &["mul".into(), "add".into()]), Some(1));
+    }
+}

@@ -1,0 +1,256 @@
+//! Host reference interpreter — pure-Rust semantics of every pipeline.
+//!
+//! This is the numerics oracle for the Rust integration tests (mirroring
+//! `kernels/ref.py` on the Python side): fused, unfused and graph engines
+//! must all agree with it. It is also the "CPU scalar" datum in experiment
+//! reports. Compute domain is f64 wide enough to cover both f32 and f64
+//! chains; integer boundaries saturate exactly like the kernels.
+
+use crate::ops::{IOp, Pipeline};
+use crate::tensor::{DType, Rect, Tensor};
+
+/// Execute a validated element-wise pipeline on the host.
+///
+/// Note: f32 chains are evaluated in f64 here; tests compare with an epsilon
+/// that covers the double-rounding difference.
+pub fn run_pipeline(p: &Pipeline, input: &Tensor) -> Tensor {
+    let mut vals = input.to_f64_vec();
+    for op in p.body() {
+        match op {
+            IOp::Compute { op, param } => {
+                for v in &mut vals {
+                    *v = op.apply(*v, *param);
+                }
+            }
+            IOp::ComputeC3 { op, param } => {
+                for (i, v) in vals.iter_mut().enumerate() {
+                    *v = op.apply(*v, param[i % 3] as f64);
+                }
+            }
+            IOp::CvtColor => {
+                for px in vals.chunks_mut(3) {
+                    if px.len() == 3 {
+                        px.swap(0, 2);
+                    }
+                }
+            }
+            IOp::Mem(_) => unreachable!("validated pipeline has no interior memops"),
+        }
+    }
+    let mut shape = vec![p.batch];
+    shape.extend_from_slice(&p.shape);
+    Tensor::from_f64_cast(&vals, &shape, p.dtout)
+}
+
+/// StaticLoop semantics: body applied `iters` times (one read, one write).
+pub fn run_staticloop(p: &Pipeline, input: &Tensor, iters: usize) -> Tensor {
+    let mut vals = input.to_f64_vec();
+    for _ in 0..iters {
+        for op in p.body() {
+            if let IOp::Compute { op, param } = op {
+                for v in &mut vals {
+                    *v = op.apply(*v, *param);
+                }
+            }
+        }
+    }
+    let mut shape = vec![p.batch];
+    shape.extend_from_slice(&p.shape);
+    Tensor::from_f64_cast(&vals, &shape, p.dtout)
+}
+
+/// UNFUSED semantics: each op is its own kernel, so integer dtypes saturate
+/// at EVERY step boundary (exactly like chaining OpenCV-CUDA 8U calls).
+pub fn run_unfused(p: &Pipeline, input: &Tensor) -> Tensor {
+    let mut shape = vec![p.batch];
+    shape.extend_from_slice(&p.shape);
+    // step boundary dtype: dtout for all intermediates (the OpenCV pattern:
+    // convertTo destination type first, then arithm in that type)
+    let mut cur = input.clone();
+    for op in p.body() {
+        let vals: Vec<f64> = match op {
+            IOp::Compute { op, param } => {
+                cur.to_f64_vec().into_iter().map(|v| op.apply(v, *param)).collect()
+            }
+            IOp::ComputeC3 { op, param } => cur
+                .to_f64_vec()
+                .into_iter()
+                .enumerate()
+                .map(|(i, v)| op.apply(v, param[i % 3] as f64))
+                .collect(),
+            IOp::CvtColor => {
+                let mut v = cur.to_f64_vec();
+                for px in v.chunks_mut(3) {
+                    if px.len() == 3 {
+                        px.swap(0, 2);
+                    }
+                }
+                v
+            }
+            IOp::Mem(_) => unreachable!(),
+        };
+        cur = Tensor::from_f64_cast(&vals, &shape, p.dtout);
+    }
+    cur
+}
+
+/// One-pass reduction oracle: (max, min, sum, mean) in f32 accumulation
+/// order-compatible with the ReduceDPP kernel (tile-major).
+pub fn reduce_stats(x: &Tensor) -> [f64; 4] {
+    let v = x.to_f64_vec();
+    let mut mx = f64::NEG_INFINITY;
+    let mut mn = f64::INFINITY;
+    let mut sum = 0.0;
+    for &e in &v {
+        mx = mx.max(e);
+        mn = mn.min(e);
+        sum += e;
+    }
+    [mx, mn, sum, sum / v.len() as f64]
+}
+
+/// Bilinear crop-resize oracle matching `ref.bilinear_gather` (half-pixel
+/// centers, edge clamp), on a packed u8 frame, f32 output.
+pub fn bilinear_crop_resize(frame: &Tensor, r: Rect, dh: usize, dw: usize) -> Tensor {
+    assert_eq!(frame.dtype(), DType::U8);
+    let (fh, fw) = (frame.shape()[0] as i32, frame.shape()[1] as i32);
+    let src = frame.as_u8().unwrap();
+    let sy = r.h as f64 / dh as f64;
+    let sx = r.w as f64 / dw as f64;
+    let mut out = vec![0f32; dh * dw * 3];
+    let at = |y: i32, x: i32, c: usize| -> f64 {
+        let yy = (r.y0 + y).clamp(0, fh - 1) as usize;
+        let xx = (r.x0 + x).clamp(0, fw - 1) as usize;
+        src[(yy * fw as usize + xx) * 3 + c] as f64
+    };
+    for dy in 0..dh {
+        let fy = ((dy as f64 + 0.5) * sy - 0.5).clamp(0.0, r.h as f64 - 1.0);
+        let y0 = fy.floor() as i32;
+        let y1 = (y0 + 1).min(r.h - 1);
+        let wy = fy - y0 as f64;
+        for dx in 0..dw {
+            let fx = ((dx as f64 + 0.5) * sx - 0.5).clamp(0.0, r.w as f64 - 1.0);
+            let x0 = fx.floor() as i32;
+            let x1 = (x0 + 1).min(r.w - 1);
+            let wx = fx - x0 as f64;
+            for c in 0..3 {
+                let top = at(y0, x0, c) * (1.0 - wx) + at(y0, x1, c) * wx;
+                let bot = at(y1, x0, c) * (1.0 - wx) + at(y1, x1, c) * wx;
+                out[(dy * dw + dx) * 3 + c] = (top * (1.0 - wy) + bot * wy) as f32;
+            }
+        }
+    }
+    Tensor::from_f32(&out, &[dh, dw, 3])
+}
+
+/// Full preprocessing-pipeline oracle (paper Fig. 25): planar f32 output.
+pub fn preproc(
+    frame: &Tensor,
+    rects: &[Rect],
+    mulv: [f32; 3],
+    subv: [f32; 3],
+    divv: [f32; 3],
+    dh: usize,
+    dw: usize,
+) -> Tensor {
+    let b = rects.len();
+    let mut out = vec![0f32; b * 3 * dh * dw];
+    for (bi, &r) in rects.iter().enumerate() {
+        let img = bilinear_crop_resize(frame, r, dh, dw);
+        let v = img.as_f32().unwrap();
+        for y in 0..dh {
+            for x in 0..dw {
+                for c in 0..3 {
+                    // cvtcolor: channel swizzle c -> 2-c
+                    let val = v[(y * dw + x) * 3 + (2 - c)];
+                    let val = (val * mulv[c] - subv[c]) / divv[c];
+                    out[bi * 3 * dh * dw + c * dh * dw + y * dw + x] = val;
+                }
+            }
+        }
+    }
+    Tensor::from_f32(&out, &[b, 3, dh, dw])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::{MemOp, Opcode};
+    use crate::tensor::make_frame;
+
+    #[test]
+    fn fused_vs_unfused_f32_agree() {
+        let p = Pipeline::from_opcodes(
+            &[(Opcode::Mul, 1.5), (Opcode::Add, 2.0), (Opcode::Div, 0.5)],
+            &[4, 4],
+            1,
+            DType::F32,
+            DType::F32,
+        )
+        .unwrap();
+        let x = Tensor::from_f32(&(0..16).map(|i| i as f32).collect::<Vec<_>>(), &[1, 4, 4]);
+        assert_eq!(run_pipeline(&p, &x), run_unfused(&p, &x));
+    }
+
+    #[test]
+    fn fused_vs_unfused_u8_saturation_differs() {
+        // fused saturates once, unfused at every step: 200*2=400 -> sat 255
+        // then -100 -> 155 (unfused) vs 400-100=300 -> sat 255 (fused)
+        let p = Pipeline::from_opcodes(
+            &[(Opcode::Mul, 2.0), (Opcode::Sub, 100.0)],
+            &[1],
+            1,
+            DType::U8,
+            DType::U8,
+        )
+        .unwrap();
+        let x = Tensor::from_u8(&[200], &[1, 1]);
+        assert_eq!(run_pipeline(&p, &x).as_u8().unwrap(), &[255]);
+        assert_eq!(run_unfused(&p, &x).as_u8().unwrap(), &[155]);
+    }
+
+    #[test]
+    fn staticloop_repeats_body() {
+        let p = Pipeline::from_opcodes(&[(Opcode::Mul, 2.0)], &[1], 1, DType::F32, DType::F32)
+            .unwrap();
+        let x = Tensor::from_f32(&[1.0], &[1, 1]);
+        let y = run_staticloop(&p, &x, 10);
+        assert_eq!(y.as_f32().unwrap(), &[1024.0]);
+    }
+
+    #[test]
+    fn reduce_stats_basic() {
+        let x = Tensor::from_f32(&[1.0, -2.0, 3.0, 6.0], &[2, 2]);
+        let [mx, mn, sum, mean] = reduce_stats(&x);
+        assert_eq!((mx, mn, sum, mean), (6.0, -2.0, 8.0, 2.0));
+    }
+
+    #[test]
+    fn bilinear_identity_resize() {
+        // resizing a crop to its own size must reproduce the crop exactly
+        let f = make_frame(32, 32, 3);
+        let r = Rect::new(4, 4, 8, 8);
+        let out = bilinear_crop_resize(&f, r, 8, 8);
+        let crop = crate::tensor::crop_frame(&f, r);
+        let want: Vec<f32> = crop.as_u8().unwrap().iter().map(|&b| b as f32).collect();
+        assert_eq!(out.as_f32().unwrap(), want.as_slice());
+    }
+
+    #[test]
+    fn cvtcolor_swizzles_channels() {
+        let p = Pipeline::new(
+            vec![
+                IOp::Mem(MemOp::Read { dtype: DType::F32 }),
+                IOp::CvtColor,
+                IOp::Mem(MemOp::Write { dtype: DType::F32 }),
+            ],
+            vec![1, 3],
+            1,
+            DType::F32,
+            DType::F32,
+        )
+        .unwrap();
+        let x = Tensor::from_f32(&[1.0, 2.0, 3.0], &[1, 1, 3]);
+        assert_eq!(run_pipeline(&p, &x).as_f32().unwrap(), &[3.0, 2.0, 1.0]);
+    }
+}

@@ -1,0 +1,58 @@
+//! Dependency-free JSON parser/serializer.
+//!
+//! The offline build environment has no `serde`/`serde_json`, so the artifact
+//! manifest and experiment result files are handled by this small module. It
+//! supports the full JSON grammar needed by `manifest.json` (objects, arrays,
+//! strings with escapes, numbers, bools, null) and pretty/compact emission.
+
+mod parse;
+mod value;
+
+pub use parse::{parse, ParseError};
+pub use value::Value;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_scalars() {
+        for s in ["null", "true", "false", "0", "-1.5", "3e8", "\"hi\""] {
+            let v = parse(s).unwrap();
+            let v2 = parse(&v.to_json()).unwrap();
+            assert_eq!(v, v2, "roundtrip {s}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_nested() {
+        let src = r#"{"a": [1, 2, {"b": "x\ny", "c": null}], "d": -2.25e-3, "e": {}}"#;
+        let v = parse(src).unwrap();
+        assert_eq!(v["a"][2]["b"].as_str().unwrap(), "x\ny");
+        assert_eq!(v["d"].as_f64().unwrap(), -2.25e-3);
+        let v2 = parse(&v.to_json()).unwrap();
+        assert_eq!(v, v2);
+    }
+
+    #[test]
+    fn string_escapes() {
+        let v = parse(r#""a\"b\\cA\t""#).unwrap();
+        assert_eq!(v.as_str().unwrap(), "a\"b\\cA\t");
+        let v2 = parse(&v.to_json()).unwrap();
+        assert_eq!(v, v2);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        for s in ["", "{", "[1,", "{\"a\"}", "tru", "1.2.3", "\"unterminated"] {
+            assert!(parse(s).is_err(), "should reject {s:?}");
+        }
+    }
+
+    #[test]
+    fn index_missing_returns_null() {
+        let v = parse(r#"{"a": 1}"#).unwrap();
+        assert!(v["missing"].is_null());
+        assert!(v["a"]["deep"].is_null());
+    }
+}

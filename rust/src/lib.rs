@@ -1,0 +1,50 @@
+//! # FKL — The Fused Kernel Library, reproduced in Rust + JAX + Pallas
+//!
+//! A three-layer reproduction of *"The Fused Kernel Library: A C++ API to
+//! Develop Highly-Efficient GPU Libraries"* (Amoros et al., 2025):
+//!
+//! * **Layer 3 (this crate)** — the coordination contribution: typed
+//!   pipelines of Instantiable Operations ([`ops`]), a fusion planner that
+//!   performs automatic Vertical and Horizontal Fusion ([`fusion`]), three
+//!   execution engines (fused / unfused / graph-replay, [`exec`]), a
+//!   streaming coordinator with dynamic HF batching ([`coordinator`]), and
+//!   high-level wrappers imitating OpenCV-CUDA ([`cv`]) and NPP ([`npp`]).
+//! * **Layer 2/1 (build time)** — JAX graphs calling Pallas kernels
+//!   (`python/compile/`), AOT-lowered to HLO text artifacts loaded by
+//!   [`runtime`].
+//!
+//! See DESIGN.md for the paper -> system mapping and EXPERIMENTS.md for the
+//! reproduced evaluation.
+
+pub mod bench;
+pub mod coordinator;
+pub mod cv;
+pub mod exec;
+pub mod experiments;
+pub mod fusion;
+pub mod hostref;
+pub mod jsonlite;
+pub mod npp;
+pub mod ops;
+pub mod proplite;
+pub mod runtime;
+pub mod simulator;
+pub mod tensor;
+
+/// Default artifact directory: honors `FKL_ARTIFACTS`, else walks up from the
+/// current directory looking for `artifacts/manifest.json`.
+pub fn default_artifact_dir() -> std::path::PathBuf {
+    if let Ok(dir) = std::env::var("FKL_ARTIFACTS") {
+        return dir.into();
+    }
+    let mut cur = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let cand = cur.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return cand;
+        }
+        if !cur.pop() {
+            return "artifacts".into();
+        }
+    }
+}

@@ -1,0 +1,178 @@
+//! `fkl` — the coordinator CLI.
+//!
+//! ```text
+//! fkl info                         # registry + artifact inventory
+//! fkl plan  --ops mul,add --shape 60x120 --batch 50 --dtin u8 --dtout f32
+//! fkl run   --ops mul:2.0,add:1.0 --shape 4x8 --batch 2   # run via engines
+//! fkl serve --requests 500 --batch-window-us 500          # coordinator demo
+//! fkl calibrate                    # measure this host's HwProfile
+//! ```
+
+use std::time::Duration;
+
+use fkl::coordinator::{BatchPolicy, Service, ServiceConfig};
+use fkl::cv::Context;
+use fkl::exec::Engine;
+use fkl::ops::{Opcode, Pipeline};
+use fkl::proplite::Rng;
+use fkl::tensor::DType;
+
+fn arg(args: &[String], key: &str) -> Option<String> {
+    args.iter().position(|a| a == key).and_then(|i| args.get(i + 1)).cloned()
+}
+
+fn parse_shape(s: &str) -> Vec<usize> {
+    s.split('x').map(|p| p.parse().expect("shape like 60x120")).collect()
+}
+
+fn parse_ops(s: &str) -> Vec<(Opcode, f64)> {
+    s.split(',')
+        .map(|tok| {
+            let (name, param) = tok.split_once(':').unwrap_or((tok, "1.0"));
+            (
+                Opcode::parse(name).unwrap_or_else(|| panic!("unknown op {name}")),
+                param.parse().expect("param"),
+            )
+        })
+        .collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("info") => info(),
+        Some("plan") => plan(&args),
+        Some("run") => run(&args),
+        Some("serve") => serve(&args),
+        Some("calibrate") => {
+            let hw = fkl::bench::calibrate();
+            println!(
+                "host profile: mem_bw={:.1} GB/s, throughput={:.1} Gops/s, assumed launch={:.0}us",
+                hw.mem_bw / 1e9,
+                hw.flops / 1e9,
+                hw.launch_overhead * 1e6
+            );
+            Ok(())
+        }
+        _ => {
+            eprintln!("usage: fkl <info|plan|run|serve|calibrate> [options]");
+            Ok(())
+        }
+    }
+}
+
+fn info() -> anyhow::Result<()> {
+    let reg = fkl::runtime::Registry::load(fkl::default_artifact_dir())?;
+    println!("artifact registry: {} artifacts (scale: {})", reg.len(), reg.scale);
+    let mut by_kind: std::collections::BTreeMap<String, usize> = Default::default();
+    for m in reg.iter() {
+        *by_kind.entry(m.kind.clone()).or_default() += 1;
+    }
+    for (k, n) in by_kind {
+        println!("  {k:14} {n}");
+    }
+    Ok(())
+}
+
+fn build_pipeline(args: &[String]) -> Pipeline {
+    let ops = parse_ops(&arg(args, "--ops").expect("--ops"));
+    let shape = parse_shape(&arg(args, "--shape").expect("--shape"));
+    let batch: usize = arg(args, "--batch").map(|b| b.parse().unwrap()).unwrap_or(1);
+    let dtin = DType::parse(&arg(args, "--dtin").unwrap_or("f32".into())).expect("dtin");
+    let dtout = DType::parse(&arg(args, "--dtout").unwrap_or("f32".into())).expect("dtout");
+    Pipeline::from_opcodes(&ops, &shape, batch, dtin, dtout).expect("valid pipeline")
+}
+
+fn plan(args: &[String]) -> anyhow::Result<()> {
+    let ctx = Context::new()?;
+    let p = build_pipeline(args);
+    let plan = ctx.fused.plan_for(&p)?;
+    println!("pipeline: {}", fkl::ops::Signature::of(&p));
+    println!("plan: {plan:?}");
+    println!("launches: {} (fused: {})", plan.launches(), plan.is_fused());
+    let r = fkl::fusion::memsave::report(&p);
+    println!(
+        "memory: fused {}B, unfused {}B, saved {}B",
+        r.fused_total(),
+        r.unfused_total(),
+        r.saved()
+    );
+    Ok(())
+}
+
+fn run(args: &[String]) -> anyhow::Result<()> {
+    let ctx = Context::new()?;
+    let p = build_pipeline(args);
+    let mut rng = Rng::new(1);
+    let mut full_shape = vec![p.batch];
+    full_shape.extend_from_slice(&p.shape);
+    let input = fkl::tensor::Tensor::from_f64_cast(
+        &(0..p.batch * p.item_elems()).map(|_| rng.f64(0.0, 1.0)).collect::<Vec<_>>(),
+        &full_shape,
+        p.dtin,
+    );
+    for engine in [&ctx.fused as &dyn Engine, &ctx.unfused, &ctx.graph] {
+        let t0 = std::time::Instant::now();
+        match engine.run(&p, &input) {
+            Ok(out) => println!(
+                "{:8} -> {:?} {:?} in {:.3}ms ({} launches)",
+                engine.name(),
+                out.dtype(),
+                out.shape(),
+                t0.elapsed().as_secs_f64() * 1e3,
+                engine.last_launches(),
+            ),
+            Err(e) => println!("{:8} -> not covered by the artifact family: {e}", engine.name()),
+        }
+    }
+    Ok(())
+}
+
+fn serve(args: &[String]) -> anyhow::Result<()> {
+    let n: usize = arg(args, "--requests").map(|v| v.parse().unwrap()).unwrap_or(500);
+    let window_us: u64 =
+        arg(args, "--batch-window-us").map(|v| v.parse().unwrap()).unwrap_or(500);
+    let svc = Service::start(ServiceConfig {
+        artifact_dir: None,
+        queue_cap: 1024,
+        policy: BatchPolicy { max_batch: 50, window: Duration::from_micros(window_us) },
+    });
+
+    let p = Pipeline::from_opcodes(
+        &[(Opcode::Nop, 0.0), (Opcode::Mul, 0.5), (Opcode::Sub, 3.0), (Opcode::Div, 1.7)],
+        &[60, 120],
+        1,
+        DType::U8,
+        DType::F32,
+    )
+    .unwrap();
+    let mut rng = Rng::new(2);
+    let t0 = std::time::Instant::now();
+    let mut pending = Vec::new();
+    for _ in 0..n {
+        let item = fkl::tensor::Tensor::from_u8(&rng.vec_u8(60 * 120), &[1, 60, 120]);
+        match svc.submit(p.clone(), item) {
+            Ok(rx) => pending.push(rx),
+            Err(e) => eprintln!("rejected: {e}"),
+        }
+    }
+    let mut ok = 0;
+    for rx in pending {
+        if rx.recv().map(|r| r.is_ok()).unwrap_or(false) {
+            ok += 1;
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let m = svc.metrics().unwrap_or_default();
+    println!("served {ok}/{n} in {dt:.3}s = {:.0} req/s", ok as f64 / dt);
+    println!(
+        "launches={} mean_batch={:.1} p50={}us p99={}us padded={}",
+        m.launches,
+        m.mean_batch(),
+        m.latency.p50,
+        m.latency.p99,
+        m.padded_planes
+    );
+    svc.shutdown();
+    Ok(())
+}

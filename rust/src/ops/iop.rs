@@ -1,0 +1,122 @@
+//! Instantiable Operations — the runtime values library functions return.
+
+use crate::tensor::{DType, Rect};
+
+use super::Opcode;
+
+/// The paper's four Operation classes (Table I).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpClass {
+    Read,
+    Unary,
+    Binary,
+    Write,
+}
+
+/// Memory Operations (MOps, §IV-B): the read/write ends of a pipeline,
+/// including the structured read patterns of Fig. 11.
+#[derive(Debug, Clone, PartialEq)]
+pub enum MemOp {
+    /// Per-thread read of a dense tensor (PerThreadRead).
+    Read { dtype: DType },
+    /// Crop ROI read from a shared frame (the BatchRead pattern: each batch
+    /// plane has its own rect).
+    CropRead { rect: Rect },
+    /// Bilinear-resample read (Crop+Resize fused at the read, Fig. 11).
+    ResizeRead { rect: Rect, dst_h: usize, dst_w: usize },
+    /// Per-thread write of a dense tensor.
+    Write { dtype: DType },
+    /// Packed -> planar write (the Split WOp of Fig. 11).
+    SplitWrite { dtype: DType },
+}
+
+impl MemOp {
+    pub fn class(&self) -> OpClass {
+        match self {
+            MemOp::Read { .. } | MemOp::CropRead { .. } | MemOp::ResizeRead { .. } => OpClass::Read,
+            MemOp::Write { .. } | MemOp::SplitWrite { .. } => OpClass::Write,
+        }
+    }
+}
+
+/// An Instantiable Operation: op identity + runtime parameters. This is what
+/// `cv::*` / `npp::*` wrapper functions return instead of launching kernels
+/// (paper §IV-D: lazy execution).
+#[derive(Debug, Clone, PartialEq)]
+pub enum IOp {
+    /// Element-wise compute op with a scalar parameter (ignored by unary ops).
+    Compute { op: Opcode, param: f64 },
+    /// Element-wise compute op with a per-channel float3 parameter.
+    ComputeC3 { op: Opcode, param: [f32; 3] },
+    /// Channel swizzle (ColorConvert UOp).
+    CvtColor,
+    /// Memory operation end-point.
+    Mem(MemOp),
+}
+
+impl IOp {
+    pub fn compute(op: Opcode, param: f64) -> IOp {
+        IOp::Compute { op, param }
+    }
+
+    pub fn class(&self) -> OpClass {
+        match self {
+            IOp::Compute { op, .. } => {
+                if op.takes_param() {
+                    OpClass::Binary
+                } else {
+                    OpClass::Unary
+                }
+            }
+            IOp::ComputeC3 { .. } => OpClass::Binary,
+            IOp::CvtColor => OpClass::Unary,
+            IOp::Mem(m) => m.class(),
+        }
+    }
+
+    /// Canonical token used in pipeline signatures and artifact matching.
+    pub fn sig_token(&self) -> String {
+        match self {
+            IOp::Compute { op, .. } => op.name().to_string(),
+            IOp::ComputeC3 { op, .. } => format!("{}c3", op.name()),
+            IOp::CvtColor => "cvtcolor".to_string(),
+            IOp::Mem(MemOp::Read { dtype }) => format!("read[{dtype}]"),
+            IOp::Mem(MemOp::CropRead { .. }) => "crop".to_string(),
+            IOp::Mem(MemOp::ResizeRead { dst_h, dst_w, .. }) => {
+                format!("resize[{dst_h}x{dst_w}]")
+            }
+            IOp::Mem(MemOp::Write { dtype }) => format!("write[{dtype}]"),
+            IOp::Mem(MemOp::SplitWrite { dtype }) => format!("split[{dtype}]"),
+        }
+    }
+
+    /// Per-element instruction estimate (cost model input).
+    pub fn instr_cost(&self) -> f64 {
+        match self {
+            IOp::Compute { op, .. } | IOp::ComputeC3 { op, .. } => op.instr_cost(),
+            IOp::CvtColor => 1.0,
+            IOp::Mem(_) => 0.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classes_match_table_i() {
+        assert_eq!(IOp::compute(Opcode::Mul, 2.0).class(), OpClass::Binary);
+        assert_eq!(IOp::compute(Opcode::Abs, 0.0).class(), OpClass::Unary);
+        assert_eq!(IOp::Mem(MemOp::Read { dtype: DType::U8 }).class(), OpClass::Read);
+        assert_eq!(IOp::Mem(MemOp::SplitWrite { dtype: DType::F32 }).class(), OpClass::Write);
+    }
+
+    #[test]
+    fn sig_tokens_are_param_independent() {
+        // VF artifact reuse depends on params living OUTSIDE the signature
+        let a = IOp::compute(Opcode::Mul, 2.0);
+        let b = IOp::compute(Opcode::Mul, 7.5);
+        assert_eq!(a.sig_token(), b.sig_token());
+    }
+}

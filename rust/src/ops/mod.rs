@@ -1,0 +1,20 @@
+//! The paper's component model in Rust: Operations, Instantiable Operations
+//! and Pipelines.
+//!
+//! Paper §IV defines four Operation classes (Table I): ReadType, UnaryType,
+//! BinaryType, WriteType. Library functions return *Instantiable Operations*
+//! (IOps) — values carrying the op identity plus its runtime parameters —
+//! and the user hands an ordered sequence of IOps to an executor. Our
+//! [`Pipeline`] is that sequence, with the paper's compile-time static
+//! asserts reproduced as construction-time validation (read first, write
+//! last, dtype chain agreement).
+
+mod iop;
+mod opcode;
+mod pipeline;
+mod signature;
+
+pub use iop::{IOp, MemOp, OpClass};
+pub use opcode::{Opcode, ALL_OPCODES};
+pub use pipeline::{Pipeline, PipelineError};
+pub use signature::Signature;

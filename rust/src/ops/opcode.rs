@@ -1,0 +1,161 @@
+//! Element-wise compute op vocabulary (COps — paper §IV-A).
+//!
+//! Must stay in lockstep with `python/compile/opcodes.py`; the manifest
+//! embeds the Python table and [`crate::runtime::Registry`] cross-checks it
+//! at load time, so drift is a startup error, not a silent wrong answer.
+
+/// One element-wise Compute Operation. `Binary*` ops take a scalar parameter
+/// (the paper's `params`), `Unary*` ops ignore it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Opcode {
+    Nop,
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Abs,
+    Neg,
+    Min,
+    Max,
+    Sqrt,
+    Exp,
+    Log,
+    Clamp01,
+}
+
+pub const ALL_OPCODES: [Opcode; 13] = [
+    Opcode::Nop,
+    Opcode::Add,
+    Opcode::Sub,
+    Opcode::Mul,
+    Opcode::Div,
+    Opcode::Abs,
+    Opcode::Neg,
+    Opcode::Min,
+    Opcode::Max,
+    Opcode::Sqrt,
+    Opcode::Exp,
+    Opcode::Log,
+    Opcode::Clamp01,
+];
+
+impl Opcode {
+    /// Interpreter opcode (the lax.switch index in the InterpDPP kernel).
+    pub fn code(self) -> i32 {
+        match self {
+            Opcode::Nop => 0,
+            Opcode::Add => 1,
+            Opcode::Sub => 2,
+            Opcode::Mul => 3,
+            Opcode::Div => 4,
+            Opcode::Abs => 5,
+            Opcode::Neg => 6,
+            Opcode::Min => 7,
+            Opcode::Max => 8,
+            Opcode::Sqrt => 9,
+            Opcode::Exp => 10,
+            Opcode::Log => 11,
+            Opcode::Clamp01 => 12,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Opcode::Nop => "nop",
+            Opcode::Add => "add",
+            Opcode::Sub => "sub",
+            Opcode::Mul => "mul",
+            Opcode::Div => "div",
+            Opcode::Abs => "abs",
+            Opcode::Neg => "neg",
+            Opcode::Min => "min",
+            Opcode::Max => "max",
+            Opcode::Sqrt => "sqrt",
+            Opcode::Exp => "exp",
+            Opcode::Log => "log",
+            Opcode::Clamp01 => "clamp01",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Opcode> {
+        ALL_OPCODES.iter().copied().find(|o| o.name() == s)
+    }
+
+    /// BinaryType (takes a scalar param) vs UnaryType — paper Table I.
+    pub fn takes_param(self) -> bool {
+        matches!(self, Opcode::Add | Opcode::Sub | Opcode::Mul | Opcode::Div | Opcode::Min | Opcode::Max)
+    }
+
+    /// Apply in the compute domain — the hostref semantics of this op.
+    /// Mirrors `opcodes.apply_op` exactly.
+    pub fn apply(self, x: f64, p: f64) -> f64 {
+        match self {
+            Opcode::Nop => x,
+            Opcode::Add => x + p,
+            Opcode::Sub => x - p,
+            Opcode::Mul => x * p,
+            Opcode::Div => x / p,
+            Opcode::Abs => x.abs(),
+            Opcode::Neg => -x,
+            Opcode::Min => x.min(p),
+            Opcode::Max => x.max(p),
+            Opcode::Sqrt => x.abs().sqrt(),
+            Opcode::Exp => x.exp(),
+            Opcode::Log => (x.abs() + 1.0).ln(),
+            Opcode::Clamp01 => x.clamp(0.0, 1.0),
+        }
+    }
+
+    /// Approximate per-element instruction cost (used by the roofline cost
+    /// model and the GPU simulator; mul/add == 1 like the paper's Fig. 1).
+    pub fn instr_cost(self) -> f64 {
+        match self {
+            Opcode::Nop => 0.0,
+            Opcode::Add | Opcode::Sub | Opcode::Mul | Opcode::Neg | Opcode::Abs => 1.0,
+            Opcode::Min | Opcode::Max | Opcode::Clamp01 => 1.0,
+            Opcode::Div => 4.0,
+            Opcode::Sqrt => 8.0,
+            Opcode::Exp | Opcode::Log => 16.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codes_are_dense_and_ordered() {
+        for (i, op) in ALL_OPCODES.iter().enumerate() {
+            assert_eq!(op.code(), i as i32, "opcode table must be dense (switch index)");
+        }
+    }
+
+    #[test]
+    fn name_roundtrip() {
+        for op in ALL_OPCODES {
+            assert_eq!(Opcode::parse(op.name()), Some(op));
+        }
+        assert_eq!(Opcode::parse("bogus"), None);
+    }
+
+    #[test]
+    fn apply_semantics() {
+        assert_eq!(Opcode::Mul.apply(3.0, 2.0), 6.0);
+        assert_eq!(Opcode::Div.apply(3.0, 2.0), 1.5);
+        assert_eq!(Opcode::Neg.apply(3.0, 99.0), -3.0);
+        assert_eq!(Opcode::Clamp01.apply(3.0, 99.0), 1.0);
+        assert_eq!(Opcode::Log.apply(0.0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn param_classification_matches_python() {
+        // binary ops per python OPS table
+        for op in [Opcode::Add, Opcode::Sub, Opcode::Mul, Opcode::Div, Opcode::Min, Opcode::Max] {
+            assert!(op.takes_param());
+        }
+        for op in [Opcode::Nop, Opcode::Abs, Opcode::Neg, Opcode::Sqrt, Opcode::Exp, Opcode::Log, Opcode::Clamp01] {
+            assert!(!op.takes_param());
+        }
+    }
+}

@@ -1,0 +1,211 @@
+//! Pipelines: validated, ordered IOp sequences.
+//!
+//! The paper's `__global__` executor statically asserts that the first IOp is
+//! a ReadType and the last a WriteType, and that each op's OutputType matches
+//! the next op's InputType (Fig. 10 `S_ASSERT_INPUT_OUTPUT`). Those checks
+//! happen here at pipeline construction, before anything touches the runtime.
+
+use crate::tensor::DType;
+
+use super::{IOp, MemOp, Opcode};
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum PipelineError {
+    #[error("pipeline must start with a Read operation")]
+    MissingRead,
+    #[error("pipeline must end with a Write operation")]
+    MissingWrite,
+    #[error("interior operation {index} is a memory operation ({token})")]
+    InteriorMemOp { index: usize, token: String },
+    #[error("pipeline has no compute body")]
+    Empty,
+}
+
+/// A validated chain: Read, [Compute...], Write over an element shape with an
+/// optional batch (HF) dimension.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Pipeline {
+    ops: Vec<IOp>,
+    /// Logical element shape of one batch item (excludes batch dim).
+    pub shape: Vec<usize>,
+    /// Batch size (HF width); 1 = no horizontal fusion.
+    pub batch: usize,
+    pub dtin: DType,
+    pub dtout: DType,
+}
+
+impl Pipeline {
+    /// Validate and build. `ops` must be Read, compute*, Write.
+    pub fn new(
+        ops: Vec<IOp>,
+        shape: Vec<usize>,
+        batch: usize,
+        dtin: DType,
+        dtout: DType,
+    ) -> Result<Pipeline, PipelineError> {
+        if ops.is_empty() {
+            return Err(PipelineError::Empty);
+        }
+        if !matches!(ops.first(), Some(IOp::Mem(m)) if m.class() == super::OpClass::Read) {
+            return Err(PipelineError::MissingRead);
+        }
+        if !matches!(ops.last(), Some(IOp::Mem(m)) if m.class() == super::OpClass::Write) {
+            return Err(PipelineError::MissingWrite);
+        }
+        for (index, op) in ops.iter().enumerate().skip(1).take(ops.len().saturating_sub(2)) {
+            if matches!(op, IOp::Mem(_)) {
+                return Err(PipelineError::InteriorMemOp { index, token: op.sig_token() });
+            }
+        }
+        Ok(Pipeline { ops, shape, batch, dtin, dtout })
+    }
+
+    /// Convenience: dense read -> compute chain -> dense write.
+    pub fn elementwise(
+        body: Vec<IOp>,
+        shape: Vec<usize>,
+        batch: usize,
+        dtin: DType,
+        dtout: DType,
+    ) -> Result<Pipeline, PipelineError> {
+        let mut ops = Vec::with_capacity(body.len() + 2);
+        ops.push(IOp::Mem(MemOp::Read { dtype: dtin }));
+        ops.extend(body);
+        ops.push(IOp::Mem(MemOp::Write { dtype: dtout }));
+        Pipeline::new(ops, shape, batch, dtin, dtout)
+    }
+
+    /// Convenience: a chain of (opcode, param) pairs.
+    pub fn from_opcodes(
+        chain: &[(Opcode, f64)],
+        shape: &[usize],
+        batch: usize,
+        dtin: DType,
+        dtout: DType,
+    ) -> Result<Pipeline, PipelineError> {
+        let body = chain.iter().map(|&(op, p)| IOp::compute(op, p)).collect();
+        Pipeline::elementwise(body, shape.to_vec(), batch, dtin, dtout)
+    }
+
+    pub fn ops(&self) -> &[IOp] {
+        &self.ops
+    }
+
+    /// The compute body (everything between read and write).
+    pub fn body(&self) -> &[IOp] {
+        &self.ops[1..self.ops.len() - 1]
+    }
+
+    /// Number of elements of one batch item.
+    pub fn item_elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// Per-element instruction estimate of the whole body.
+    pub fn instr_cost(&self) -> f64 {
+        self.ops.iter().map(IOp::instr_cost).sum()
+    }
+
+    /// Bytes moved by the FUSED execution: one read + one write.
+    pub fn fused_bytes(&self) -> usize {
+        self.batch
+            * self.item_elems()
+            * (self.dtin.size_bytes() + self.dtout.size_bytes())
+    }
+
+    /// Bytes moved by the UNFUSED execution: each op is its own kernel with a
+    /// full read + write pass (paper Fig. 3A). Intermediates travel at the
+    /// output dtype width.
+    pub fn unfused_bytes(&self) -> usize {
+        let n = self.batch * self.item_elems();
+        let k = self.body().len().max(1);
+        // first kernel: dtin -> inter; middle: inter -> inter; last: -> dtout
+        let inter = self.dtout.size_bytes().max(4);
+        let first = n * (self.dtin.size_bytes() + inter);
+        let middle = (k.saturating_sub(2)) * n * 2 * inter;
+        let last = if k > 1 { n * (inter + self.dtout.size_bytes()) } else { 0 };
+        first + middle + last
+    }
+
+    /// GPU memory the unfused execution must allocate for intermediates and
+    /// the fused one avoids (paper §VI-L).
+    pub fn intermediate_bytes(&self) -> usize {
+        let k = self.body().len();
+        if k <= 1 {
+            return 0;
+        }
+        let inter = self.dtout.size_bytes().max(4);
+        // double-buffered ping-pong like the paper's d_up/d_temp pair
+        2_usize.min(k - 1) * self.batch * self.item_elems() * inter
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(body: Vec<IOp>) -> Result<Pipeline, PipelineError> {
+        Pipeline::elementwise(body, vec![4, 4], 1, DType::F32, DType::F32)
+    }
+
+    #[test]
+    fn valid_pipeline() {
+        let p = mk(vec![IOp::compute(Opcode::Mul, 2.0), IOp::compute(Opcode::Add, 1.0)]).unwrap();
+        assert_eq!(p.body().len(), 2);
+        assert_eq!(p.instr_cost(), 2.0);
+    }
+
+    #[test]
+    fn rejects_interior_memop() {
+        let e = Pipeline::new(
+            vec![
+                IOp::Mem(MemOp::Read { dtype: DType::F32 }),
+                IOp::Mem(MemOp::Read { dtype: DType::F32 }),
+                IOp::Mem(MemOp::Write { dtype: DType::F32 }),
+            ],
+            vec![4],
+            1,
+            DType::F32,
+            DType::F32,
+        )
+        .unwrap_err();
+        assert!(matches!(e, PipelineError::InteriorMemOp { index: 1, .. }));
+    }
+
+    #[test]
+    fn rejects_missing_ends() {
+        let e = Pipeline::new(
+            vec![IOp::compute(Opcode::Mul, 2.0)],
+            vec![4],
+            1,
+            DType::F32,
+            DType::F32,
+        )
+        .unwrap_err();
+        assert_eq!(e, PipelineError::MissingRead);
+    }
+
+    #[test]
+    fn byte_accounting_fused_vs_unfused() {
+        let p = Pipeline::from_opcodes(
+            &[(Opcode::Mul, 2.0), (Opcode::Add, 1.0), (Opcode::Sub, 0.5)],
+            &[100],
+            1,
+            DType::F32,
+            DType::F32,
+        )
+        .unwrap();
+        assert_eq!(p.fused_bytes(), 100 * 8);
+        // 3 kernels, each 100 elems * (4 read + 4 write)
+        assert_eq!(p.unfused_bytes(), 3 * 100 * 8);
+        assert!(p.intermediate_bytes() > 0);
+    }
+
+    #[test]
+    fn single_op_has_no_intermediates() {
+        let p = Pipeline::from_opcodes(&[(Opcode::Mul, 2.0)], &[10], 1, DType::F32, DType::F32)
+            .unwrap();
+        assert_eq!(p.intermediate_bytes(), 0);
+        assert_eq!(p.fused_bytes(), p.unfused_bytes());
+    }
+}

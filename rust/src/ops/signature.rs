@@ -1,0 +1,99 @@
+//! Canonical pipeline signatures — the artifact/plan cache key.
+//!
+//! Two pipelines with the same op sequence, dtypes, shape and batch execute
+//! on the same compiled artifact regardless of parameter values (the paper's
+//! distinction between the IOp *type*, which drives codegen, and the IOp
+//! *contents*, which are runtime kernel arguments).
+
+use super::Pipeline;
+
+/// Canonical, hashable identity of a pipeline's generated code.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Signature {
+    pub ops: String,
+    pub dtin: String,
+    pub dtout: String,
+    pub shape: Vec<usize>,
+    pub batch: usize,
+}
+
+impl Signature {
+    pub fn of(p: &Pipeline) -> Signature {
+        Signature {
+            ops: p.body().iter().map(|o| o.sig_token()).collect::<Vec<_>>().join("-"),
+            dtin: p.dtin.name().to_string(),
+            dtout: p.dtout.name().to_string(),
+            shape: p.shape.clone(),
+            batch: p.batch,
+        }
+    }
+
+    /// Same code, different batch width (HF bucket lookup).
+    pub fn with_batch(&self, batch: usize) -> Signature {
+        Signature { batch, ..self.clone() }
+    }
+
+    /// Batch-agnostic key (used to group requests in the dynamic batcher).
+    pub fn stream_key(&self) -> String {
+        format!(
+            "{}|{}->{}|{}",
+            self.ops,
+            self.dtin,
+            self.dtout,
+            self.shape.iter().map(|s| s.to_string()).collect::<Vec<_>>().join("x"),
+        )
+    }
+}
+
+impl std::fmt::Display for Signature {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}@b{}", self.stream_key(), self.batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::{IOp, Opcode, Pipeline};
+    use crate::tensor::DType;
+
+    fn pipe(params: &[f64], batch: usize) -> Pipeline {
+        let body = params.iter().map(|&p| IOp::compute(Opcode::Mul, p)).collect();
+        Pipeline::elementwise(body, vec![8, 8], batch, DType::U8, DType::F32).unwrap()
+    }
+
+    #[test]
+    fn params_do_not_change_signature() {
+        assert_eq!(Signature::of(&pipe(&[1.0, 2.0], 1)), Signature::of(&pipe(&[9.0, 8.0], 1)));
+    }
+
+    #[test]
+    fn batch_changes_signature_but_not_stream_key() {
+        let a = Signature::of(&pipe(&[1.0], 1));
+        let b = Signature::of(&pipe(&[1.0], 4));
+        assert_ne!(a, b);
+        assert_eq!(a.stream_key(), b.stream_key());
+        assert_eq!(a.with_batch(4), b);
+    }
+
+    #[test]
+    fn op_order_matters() {
+        let p1 = Pipeline::from_opcodes(
+            &[(Opcode::Mul, 1.0), (Opcode::Add, 1.0)],
+            &[4],
+            1,
+            DType::F32,
+            DType::F32,
+        )
+        .unwrap();
+        let p2 = Pipeline::from_opcodes(
+            &[(Opcode::Add, 1.0), (Opcode::Mul, 1.0)],
+            &[4],
+            1,
+            DType::F32,
+            DType::F32,
+        )
+        .unwrap();
+        assert_ne!(Signature::of(&p1), Signature::of(&p2));
+    }
+}

@@ -1,0 +1,128 @@
+//! proplite — a tiny property-testing harness (proptest is unavailable in
+//! the offline vendor set).
+//!
+//! Provides a deterministic xorshift PRNG and a `forall` runner that reports
+//! the failing seed so cases are reproducible:
+//!
+//! ```no_run
+//! use fkl::proplite::{forall, Rng};
+//! forall(100, |rng: &mut Rng| {
+//!     let x = rng.range_u64(0, 100) as i64;
+//!     assert!(x >= 0 && x < 100);
+//! });
+//! ```
+
+/// Deterministic xorshift64* PRNG.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Rng {
+        Rng { state: seed.wrapping_mul(0x9E3779B97F4A7C15) | 1 }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.state = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn range_u64(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(hi > lo);
+        lo + self.next_u64() % (hi - lo)
+    }
+
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.range_u64(lo as u64, hi as u64) as usize
+    }
+
+    /// Uniform float in [lo, hi).
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64 * (hi - lo)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.next_u64() & 1 == 1
+    }
+
+    /// Pick one element of a slice.
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize(0, xs.len())]
+    }
+
+    /// Vec of f32 in [lo, hi).
+    pub fn vec_f32(&mut self, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..n).map(|_| self.f64(lo as f64, hi as f64) as f32).collect()
+    }
+
+    /// Vec of u8.
+    pub fn vec_u8(&mut self, n: usize) -> Vec<u8> {
+        (0..n).map(|_| (self.next_u64() & 0xFF) as u8).collect()
+    }
+}
+
+/// Run `body` for `cases` seeds; on panic, re-raise with the failing seed in
+/// the message.
+pub fn forall(cases: u64, body: impl Fn(&mut Rng) + std::panic::RefUnwindSafe) {
+    for seed in 1..=cases {
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Rng::new(seed);
+            body(&mut rng);
+        });
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!("property failed at seed {seed}: {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_is_deterministic() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn range_respects_bounds() {
+        let mut r = Rng::new(1);
+        for _ in 0..1000 {
+            let v = r.range_u64(10, 20);
+            assert!((10..20).contains(&v));
+            let f = r.f64(-1.0, 1.0);
+            assert!((-1.0..1.0).contains(&f));
+        }
+    }
+
+    #[test]
+    fn forall_reports_seed() {
+        let r = std::panic::catch_unwind(|| {
+            forall(50, |rng| {
+                let v = rng.range_u64(0, 10);
+                assert!(v != 3, "hit the bad value");
+            })
+        });
+        let err = r.unwrap_err();
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_else(|| format!("{err:?}"));
+        assert!(msg.contains("property failed at seed"), "{msg}");
+    }
+}

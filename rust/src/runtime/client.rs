@@ -1,0 +1,38 @@
+//! Per-thread PJRT CPU client.
+//!
+//! The `xla` crate's `PjRtClient` is reference-counted with `Rc` (not
+//! `Send`), so it cannot be shared across threads. Each thread that executes
+//! XLA computations gets its own client, created on first use. In practice
+//! the coordinator funnels all execution through one service thread (the
+//! leader/worker split of DESIGN.md §4), so one client exists per process.
+
+use std::cell::RefCell;
+
+pub type Client = xla::PjRtClient;
+
+thread_local! {
+    static CLIENT: RefCell<Option<Client>> = const { RefCell::new(None) };
+}
+
+/// This thread's CPU PJRT client (created on first use).
+pub fn client() -> anyhow::Result<Client> {
+    CLIENT.with(|c| {
+        let mut c = c.borrow_mut();
+        if c.is_none() {
+            *c = Some(
+                xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt cpu client: {e}"))?,
+            );
+        }
+        Ok(c.as_ref().unwrap().clone())
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn client_is_usable() {
+        let a = super::client().unwrap();
+        assert!(a.device_count() >= 1);
+        assert_eq!(a.platform_name(), "cpu");
+    }
+}

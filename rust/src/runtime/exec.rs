@@ -1,0 +1,156 @@
+//! Literal marshaling and the low-level executor.
+//!
+//! The marshaling boundary is the host<->device edge of the cost model
+//! (DESIGN.md §2): `tensor_to_literal` + `buffer_from_host_literal` is the
+//! H2D copy; `to_literal_sync` + `literal_to_tensor` the D2H. Engines that
+//! chain executables keep `PjRtBuffer`s device-resident between steps.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::rc::Rc;
+
+use crate::tensor::{DType, Tensor};
+
+use super::registry::ArtifactMeta;
+use super::Registry;
+
+/// Host tensor -> XLA literal (copies once).
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    xla::Literal::create_from_shape_and_untyped_data(t.dtype().xla(), t.shape(), t.raw_bytes())
+        .map_err(|e| anyhow!("literal from tensor: {e}"))
+}
+
+/// XLA literal -> host tensor.
+pub fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
+    let shape = lit.array_shape().map_err(|e| anyhow!("literal shape: {e}"))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let ty = lit.ty().map_err(|e| anyhow!("literal ty: {e}"))?;
+    Ok(match ty {
+        xla::ElementType::U8 => Tensor::from_u8(&lit.to_vec::<u8>().map_err(err)?, &dims),
+        xla::ElementType::U16 => Tensor::from_u16(&lit.to_vec::<u16>().map_err(err)?, &dims),
+        xla::ElementType::S32 => Tensor::from_i32(&lit.to_vec::<i32>().map_err(err)?, &dims),
+        xla::ElementType::F32 => Tensor::from_f32(&lit.to_vec::<f32>().map_err(err)?, &dims),
+        xla::ElementType::F64 => Tensor::from_f64(&lit.to_vec::<f64>().map_err(err)?, &dims),
+        other => bail!("unsupported output element type {other:?}"),
+    })
+}
+
+fn err(e: xla::Error) -> anyhow::Error {
+    anyhow!("literal to_vec: {e}")
+}
+
+/// A device-resident value flowing between executable launches.
+///
+/// SAFETY NOTE: `buffer_from_host_literal` on the TFRT CPU client copies the
+/// host literal *asynchronously*; the source `Literal` must outlive the copy
+/// or the transfer reads freed memory (observed as nondeterministic segfaults
+/// and size-check aborts). Uploaded values therefore keep their source
+/// literal alive for the buffer's whole lifetime; buffers produced by
+/// `execute_b` have no host source and carry `None`.
+pub struct DeviceValue {
+    pub buf: xla::PjRtBuffer,
+    _keepalive: Option<xla::Literal>,
+}
+
+impl DeviceValue {
+    /// Upload (H2D edge).
+    pub fn upload(t: &Tensor) -> Result<DeviceValue> {
+        let lit = tensor_to_literal(t)?;
+        let buf = super::client()?
+            .buffer_from_host_literal(None, &lit)
+            .map_err(|e| anyhow!("upload: {e}"))?;
+        Ok(DeviceValue { buf, _keepalive: Some(lit) })
+    }
+
+    /// Wrap an execute output (no host source).
+    pub fn from_buffer(buf: xla::PjRtBuffer) -> DeviceValue {
+        DeviceValue { buf, _keepalive: None }
+    }
+
+    /// Download (D2H edge).
+    pub fn download(&self) -> Result<Tensor> {
+        let lit = self.buf.to_literal_sync().map_err(|e| anyhow!("download: {e}"))?;
+        literal_to_tensor(&lit)
+    }
+}
+
+/// Executes artifacts by name, marshaling tensors at the boundary. All AOT
+/// artifacts are lowered with `return_tuple=False` (single plain-array
+/// output), so results chain directly between executables as device buffers.
+pub struct Executor {
+    registry: Rc<Registry>,
+}
+
+impl Executor {
+    pub fn new(registry: Rc<Registry>) -> Executor {
+        Executor { registry }
+    }
+
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    /// Host->host execution: tensors in, tensor out. One full launch
+    /// (H2D + dispatch + D2H) — the cost unit of the unfused baseline.
+    ///
+    /// Implementation note: this goes through `execute_b` with explicitly
+    /// managed input buffers rather than the crate's literal-based
+    /// `execute`, because the latter *leaks* every input device buffer (its
+    /// C++ side `release()`s the buffers to keep them alive across the async
+    /// execution and never frees them) — a ~16 MB/launch leak on the
+    /// data-size experiments. Here the final `to_literal_sync` is the sync
+    /// point after which dropping the inputs is safe.
+    pub fn run(&self, name: &str, inputs: &[Tensor]) -> Result<Tensor> {
+        let meta = self.registry.get(name).with_context(|| format!("unknown artifact {name}"))?;
+        if inputs.len() != meta.input_roles.len() {
+            bail!(
+                "{name}: expected {} inputs ({:?}), got {}",
+                meta.input_roles.len(),
+                meta.input_roles,
+                inputs.len()
+            );
+        }
+        let exe = self.registry.executable(name)?;
+        let devs: Vec<DeviceValue> =
+            inputs.iter().map(DeviceValue::upload).collect::<Result<_>>()?;
+        let refs: Vec<&xla::PjRtBuffer> = devs.iter().map(|d| &d.buf).collect();
+        let result = exe.execute_b(&refs).map_err(|e| anyhow!("execute {name}: {e}"))?;
+        let mut replica = result.into_iter().next().context("no replica output")?;
+        if replica.is_empty() {
+            bail!("{name}: empty output");
+        }
+        let out_buf = replica.remove(0);
+        let out = out_buf.to_literal_sync().map_err(|e| anyhow!("sync {name}: {e}"))?;
+        drop(devs); // inputs provably consumed after the output sync
+        // artifacts are lowered with return_tuple=False: plain array root
+        literal_to_tensor(&out)
+    }
+
+    /// Device->device execution: buffers in, buffers out, no host copies.
+    /// The cost unit of a fused/graph-chained step.
+    pub fn run_b(&self, name: &str, inputs: &[&xla::PjRtBuffer]) -> Result<xla::PjRtBuffer> {
+        let exe = self.registry.executable(name)?;
+        let result = exe.execute_b(inputs).map_err(|e| anyhow!("execute_b {name}: {e}"))?;
+        let mut replica = result.into_iter().next().context("no replica output")?;
+        // return_tuple=True artifacts yield the tuple's elements as separate
+        // buffers in PJRT; a single logical output is element 0.
+        if replica.is_empty() {
+            bail!("{name}: empty output");
+        }
+        Ok(replica.remove(0))
+    }
+
+    /// Validate a data tensor against the artifact's declared data input.
+    pub fn check_data_shape(&self, meta: &ArtifactMeta, t: &Tensor) -> Result<()> {
+        let want_dt = DType::parse(&meta.dtin)
+            .with_context(|| format!("bad dtin {} in manifest", meta.dtin))?;
+        if t.dtype() != want_dt {
+            bail!("{}: dtype {} != artifact dtin {}", meta.name, t.dtype(), want_dt);
+        }
+        let mut want_shape = vec![meta.batch];
+        want_shape.extend_from_slice(&meta.shape);
+        if t.shape() != want_shape.as_slice() {
+            bail!("{}: shape {:?} != artifact {:?}", meta.name, t.shape(), want_shape);
+        }
+        Ok(())
+    }
+}

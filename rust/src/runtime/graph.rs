@@ -1,0 +1,153 @@
+//! ExecGraph — the CUDA Graphs analog (baseline #2, DESIGN.md §3.3).
+//!
+//! CUDA Graphs record a DAG of kernel launches once, then replay it with a
+//! single runtime call: per-launch CPU overhead disappears but the kernels
+//! themselves are unchanged — no fusion, intermediates still round-trip
+//! through device memory. `ExecGraph` reproduces exactly that: executables
+//! and parameter buffers are resolved/uploaded at record time; `replay()`
+//! only issues `execute_b` calls, chaining device-resident buffers.
+
+use anyhow::{Context, Result};
+use std::rc::Rc;
+
+use crate::tensor::Tensor;
+
+use super::exec::DeviceValue;
+use super::{Executor, Registry};
+
+/// Max in-flight intermediates during a replay before forcing a sync.
+const SYNC_WINDOW: usize = 64;
+
+/// One recorded launch: an executable plus, for each argument slot, either
+/// the running value (None) or a pre-uploaded constant buffer (Some).
+pub struct GraphNode {
+    exe: Rc<xla::PjRtLoadedExecutable>,
+    /// arg slots; None = wire the previous node's output here
+    args: Vec<Option<DeviceValue>>,
+    pub name: String,
+}
+
+/// A linear recorded chain of launches (the paper's per-op kernel sequence).
+pub struct ExecGraph {
+    nodes: Vec<GraphNode>,
+}
+
+impl ExecGraph {
+    pub fn record() -> GraphBuilder {
+        GraphBuilder { nodes: Vec::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Replay the chain on a fresh input. No host work besides the final
+    /// download: this is the "single runtime call" the paper grants CUDA
+    /// Graphs.
+    ///
+    /// PJRT executions are asynchronous: an intermediate buffer must stay
+    /// alive until the final download (a sync point that transitively waits
+    /// for every producer in the chain), so intermediates are parked in
+    /// `spent` instead of dropped mid-flight.
+    pub fn replay(&self, input: &Tensor) -> Result<Tensor> {
+        let mut cur = DeviceValue::upload(input)?;
+        let mut spent: Vec<DeviceValue> = Vec::with_capacity(SYNC_WINDOW + 1);
+        for node in &self.nodes {
+            let arg_refs: Vec<&xla::PjRtBuffer> = node
+                .args
+                .iter()
+                .map(|slot| match slot {
+                    Some(c) => &c.buf,
+                    None => &cur.buf,
+                })
+                .collect();
+            let result = node
+                .exe
+                .execute_b(&arg_refs)
+                .map_err(|e| anyhow::anyhow!("graph node {}: {e}", node.name))?;
+            let mut replica = result.into_iter().next().context("no replica")?;
+            spent.push(cur);
+            cur = DeviceValue::from_buffer(replica.remove(0));
+            // bound live intermediates: long chains (the paper runs 19,902
+            // kernels) would otherwise hold every intermediate until the
+            // final sync -- O(chain) device memory. A cheap sync point every
+            // SYNC_WINDOW nodes lets the window be dropped.
+            if spent.len() >= SYNC_WINDOW {
+                let _ = cur.buf.to_literal_sync().map_err(|e| anyhow::anyhow!("sync: {e}"))?;
+                spent.clear();
+            }
+        }
+        let out = cur.download(); // sync point: all producers complete here
+        drop(spent);
+        out
+    }
+
+    /// Replay keeping the result on device (for chained graphs). Returns the
+    /// output plus the intermediate buffers, which the caller must keep alive
+    /// until it syncs on the output (see `replay`).
+    pub fn replay_device(&self, input: DeviceValue) -> Result<(DeviceValue, Vec<DeviceValue>)> {
+        let mut cur = input;
+        let mut spent: Vec<DeviceValue> = Vec::with_capacity(self.nodes.len());
+        for node in &self.nodes {
+            let arg_refs: Vec<&xla::PjRtBuffer> = node
+                .args
+                .iter()
+                .map(|slot| match slot {
+                    Some(c) => &c.buf,
+                    None => &cur.buf,
+                })
+                .collect();
+            let result = node
+                .exe
+                .execute_b(&arg_refs)
+                .map_err(|e| anyhow::anyhow!("graph node {}: {e}", node.name))?;
+            let mut replica = result.into_iter().next().context("no replica")?;
+            spent.push(cur);
+            cur = DeviceValue::from_buffer(replica.remove(0));
+        }
+        Ok((cur, spent))
+    }
+}
+
+pub struct GraphBuilder {
+    nodes: Vec<GraphNode>,
+}
+
+impl GraphBuilder {
+    /// Record one launch. `const_args[i]` provides constant tensors by arg
+    /// slot; the slot NOT present receives the running value.
+    pub fn launch(
+        mut self,
+        executor: &Executor,
+        registry: &Registry,
+        name: &str,
+        const_args: &[(usize, &Tensor)],
+    ) -> Result<GraphBuilder> {
+        let meta = registry.get(name).with_context(|| format!("unknown artifact {name}"))?;
+        let n_args = meta.input_roles.len();
+        let exe = registry.executable(name)?;
+        let mut args: Vec<Option<DeviceValue>> = Vec::with_capacity(n_args);
+        for slot in 0..n_args {
+            match const_args.iter().find(|(s, _)| *s == slot) {
+                Some((_, t)) => args.push(Some(DeviceValue::upload(t)?)),
+                None => args.push(None),
+            }
+        }
+        let n_wired = args.iter().filter(|a| a.is_none()).count();
+        anyhow::ensure!(
+            n_wired == 1,
+            "graph node {name} must wire exactly one running-value slot (got {n_wired})"
+        );
+        let _ = executor;
+        self.nodes.push(GraphNode { exe, args, name: name.to_string() });
+        Ok(self)
+    }
+
+    pub fn finish(self) -> ExecGraph {
+        ExecGraph { nodes: self.nodes }
+    }
+}

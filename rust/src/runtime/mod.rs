@@ -1,0 +1,12 @@
+//! Runtime — the PJRT bridge: load AOT HLO-text artifacts, compile once,
+//! execute from the Rust hot path. Python is never involved here.
+
+mod client;
+mod exec;
+mod graph;
+mod registry;
+
+pub use client::{client, Client};
+pub use exec::{literal_to_tensor, tensor_to_literal, DeviceValue, Executor};
+pub use graph::{ExecGraph, GraphNode};
+pub use registry::{ArtifactMeta, Registry};

@@ -1,0 +1,195 @@
+//! Artifact registry: manifest.json -> lazily compiled PJRT executables.
+//!
+//! This is the runtime face of the AOT family (DESIGN.md §5). Artifacts are
+//! compiled on first use and cached for the process lifetime, so the steady
+//! state cost of "launching a kernel" is one `execute()` call — the analog of
+//! a pre-instantiated template kernel in the paper's C++ library.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::jsonlite::{parse, Value};
+use crate::ops::{Opcode, ALL_OPCODES};
+
+/// Metadata of one AOT artifact (one manifest entry).
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub kind: String,
+    pub variant: String,
+    pub ops: Vec<String>,
+    pub dtin: String,
+    pub dtout: String,
+    pub shape: Vec<usize>,
+    pub batch: usize,
+    pub kmax: usize,
+    /// Input roles in argument order (data/params/trip/opcodes/frame/rects/vec3/rect).
+    pub input_roles: Vec<String>,
+    pub out_shape: Vec<usize>,
+    pub out_dtype: String,
+}
+
+impl ArtifactMeta {
+    fn from_json(v: &Value) -> Option<ArtifactMeta> {
+        Some(ArtifactMeta {
+            name: v["name"].as_str()?.to_string(),
+            file: v["file"].as_str()?.to_string(),
+            kind: v["kind"].as_str()?.to_string(),
+            variant: v["variant"].as_str()?.to_string(),
+            ops: v["ops"].as_str_vec().unwrap_or_default(),
+            dtin: v["dtin"].as_str().unwrap_or("f32").to_string(),
+            dtout: v["dtout"].as_str().unwrap_or("f32").to_string(),
+            shape: v["shape"].as_usize_vec().unwrap_or_default(),
+            batch: v["batch"].as_usize().unwrap_or(1),
+            kmax: v["kmax"].as_usize().unwrap_or(0),
+            input_roles: v["inputs"]
+                .as_arr()?
+                .iter()
+                .filter_map(|i| i["role"].as_str().map(str::to_string))
+                .collect(),
+            out_shape: v["output"]["shape"].as_usize_vec().unwrap_or_default(),
+            out_dtype: v["output"]["dtype"].as_str().unwrap_or("f32").to_string(),
+        })
+    }
+
+    /// Canonical chain key: `ops|dtin->dtout|shape|batch`.
+    pub fn chain_key(&self) -> String {
+        format!(
+            "{}|{}->{}|{}|b{}",
+            self.ops.join("-"),
+            self.dtin,
+            self.dtout,
+            self.shape.iter().map(|s| s.to_string()).collect::<Vec<_>>().join("x"),
+            self.batch
+        )
+    }
+}
+
+/// Loaded manifest + compile cache.
+pub struct Registry {
+    dir: PathBuf,
+    by_name: HashMap<String, ArtifactMeta>,
+    /// experiment geometry the python side baked in (bucket lists etc.)
+    pub geometry: Value,
+    pub scale: String,
+    compiled: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Registry {
+    /// Load `<dir>/manifest.json`. Verifies the embedded opcode table matches
+    /// this binary's [`Opcode`] enum (layer-drift guard).
+    pub fn load(dir: impl AsRef<Path>) -> Result<Registry> {
+        let dir = dir.as_ref().to_path_buf();
+        let mpath = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&mpath)
+            .with_context(|| format!("reading {}; run `make artifacts` first", mpath.display()))?;
+        let v = parse(&text).map_err(|e| anyhow!("manifest: {e}"))?;
+
+        // opcode drift check
+        let opcodes = v["opcodes"].as_obj().context("manifest missing opcodes table")?;
+        for op in ALL_OPCODES {
+            let got = opcodes.get(op.name()).and_then(Value::as_i64);
+            if got != Some(op.code() as i64) {
+                bail!(
+                    "opcode drift: python says {}={:?}, rust says {}",
+                    op.name(),
+                    got,
+                    op.code()
+                );
+            }
+        }
+        if opcodes.len() != ALL_OPCODES.len() {
+            bail!("opcode drift: python has {} ops, rust has {}", opcodes.len(), ALL_OPCODES.len());
+        }
+
+        let mut by_name = HashMap::new();
+        for a in v["artifacts"].as_arr().context("manifest missing artifacts")? {
+            let meta = ArtifactMeta::from_json(a).context("bad artifact entry")?;
+            // single-op entries are emitted once per dtype combo; identical
+            // names are identical artifacts, keep the first
+            by_name.entry(meta.name.clone()).or_insert(meta);
+        }
+        Ok(Registry {
+            dir,
+            by_name,
+            geometry: v["geometry"].clone(),
+            scale: v["scale"].as_str().unwrap_or("scaled").to_string(),
+            compiled: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.by_name.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_name.is_empty()
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.by_name.get(name)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &ArtifactMeta> {
+        self.by_name.values()
+    }
+
+    /// Find artifacts by predicate (planner tier lookups).
+    pub fn find(&self, pred: impl Fn(&ArtifactMeta) -> bool) -> Vec<&ArtifactMeta> {
+        let mut v: Vec<_> = self.by_name.values().filter(|m| pred(m)).collect();
+        v.sort_by(|a, b| a.name.cmp(&b.name));
+        v
+    }
+
+    /// Exact fused-chain lookup (planner tier 1).
+    pub fn find_chain(
+        &self,
+        ops: &[Opcode],
+        dtin: &str,
+        dtout: &str,
+        shape: &[usize],
+        batch: usize,
+        variant: &str,
+    ) -> Option<&ArtifactMeta> {
+        let names: Vec<&str> = ops.iter().map(|o| o.name()).collect();
+        self.by_name.values().find(|m| {
+            (m.kind == "chain" || m.kind == "single_op")
+                && m.variant == variant
+                && m.ops == names
+                && m.dtin == dtin
+                && m.dtout == dtout
+                && m.shape == shape
+                && m.batch == batch
+        })
+    }
+
+    /// Compile (or fetch the cached) executable for artifact `name`.
+    pub fn executable(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.compiled.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let meta = self.by_name.get(name).with_context(|| format!("unknown artifact {name}"))?;
+        let path = self.dir.join(&meta.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .map_err(|e| anyhow!("parse {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = super::client()?
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e}"))?;
+        let exe = Rc::new(exe);
+        self.compiled.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Number of executables compiled so far (metrics / tests).
+    pub fn compiled_count(&self) -> usize {
+        self.compiled.borrow().len()
+    }
+}

@@ -1,0 +1,18 @@
+//! Analytical GPU simulator — the substitution substrate for the paper's
+//! physical testbed (DESIGN.md §3.4).
+//!
+//! The paper evaluates on five NVIDIA systems (Table II: Jetson Nano Super,
+//! Orin AGX, RTX 3060-class PC, Grace-Hopper GH100, RTX 4090 PC). We have no
+//! GPUs, so Exp. 8 ("GPU size") and the GPU half of Fig. 1 run on this model
+//! instead: a latency-hiding roofline (Volkov) with kernel-launch overhead,
+//! warp-issue limits and a register-spill penalty for very long unrolled
+//! kernels (the paper's observed speedup ceiling in §VI-D).
+//!
+//! The model is deliberately simple and fully tested; every experiment that
+//! uses it labels its output `simulated`.
+
+mod model;
+mod systems;
+
+pub use model::{GpuModel, KernelShape, SimResult};
+pub use systems::{table_ii_systems, SystemSpec};

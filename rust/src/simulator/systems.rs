@@ -1,0 +1,103 @@
+//! Table II system catalog (paper, page 9).
+
+/// One row of the paper's Table II.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SystemSpec {
+    pub name: &'static str,
+    pub cpu: &'static str,
+    pub gpu: &'static str,
+    pub compute_cores: u32,
+    /// FP32 TFLOPS.
+    pub tflops_fp32: f64,
+    /// VRAM GB (shared on Jetson).
+    pub vram_gb: f64,
+    /// GB/s.
+    pub bandwidth_gbps: f64,
+}
+
+impl SystemSpec {
+    /// FLOP per byte transferred — Table II's last row; the paper's Fig. 22
+    /// x-axis and the predictor of combined VF x HF speedup.
+    pub fn flop_per_byte(&self) -> f64 {
+        self.tflops_fp32 * 1e12 / (self.bandwidth_gbps * 1e9)
+    }
+}
+
+/// The five systems of Table II.
+pub fn table_ii_systems() -> [SystemSpec; 5] {
+    [
+        SystemSpec {
+            name: "S1 Nano Super",
+            cpu: "Cortex A78AE",
+            gpu: "GA10B",
+            compute_cores: 1024,
+            tflops_fp32: 1.880,
+            vram_gb: 16.0,
+            bandwidth_gbps: 102.4,
+        },
+        SystemSpec {
+            name: "S2 Orin AGX",
+            cpu: "Cortex A78AE",
+            gpu: "GA10B",
+            compute_cores: 2048,
+            tflops_fp32: 5.325,
+            vram_gb: 32.0,
+            bandwidth_gbps: 204.8,
+        },
+        SystemSpec {
+            name: "S3 PC (GA106)",
+            cpu: "Ryzen 9 7945HX",
+            gpu: "GA106",
+            compute_cores: 3328,
+            tflops_fp32: 7.987,
+            vram_gb: 12.0,
+            bandwidth_gbps: 288.0,
+        },
+        SystemSpec {
+            name: "S4 Grace-Hopper",
+            cpu: "Neoverse V2",
+            gpu: "GH100",
+            compute_cores: 16384,
+            tflops_fp32: 62.08,
+            vram_gb: 96.0,
+            bandwidth_gbps: 1000.0,
+        },
+        SystemSpec {
+            name: "S5 PC (AD102)",
+            cpu: "Ryzen 7 5800X3D",
+            gpu: "AD102",
+            compute_cores: 18432,
+            tflops_fp32: 82.58,
+            vram_gb: 24.0,
+            bandwidth_gbps: 1008.0,
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flop_per_byte_matches_table_ii() {
+        let sys = table_ii_systems();
+        // paper's last row: 18.36, 26, 27.73, 62.08, 81.93-ish
+        let expect = [18.36, 26.0, 27.73, 62.08, 81.92];
+        for (s, e) in sys.iter().zip(expect) {
+            let got = s.flop_per_byte();
+            assert!(
+                (got - e).abs() / e < 0.07,
+                "{}: FLOP/B {got:.2} vs table {e:.2}",
+                s.name
+            );
+        }
+    }
+
+    #[test]
+    fn ordering_by_flopb_is_s1_to_s5() {
+        let sys = table_ii_systems();
+        for w in sys.windows(2) {
+            assert!(w[0].flop_per_byte() < w[1].flop_per_byte());
+        }
+    }
+}

@@ -1,0 +1,77 @@
+//! Element dtypes supported by the op vocabulary (manifest `dtin`/`dtout`).
+
+use xla::ElementType;
+
+/// Element type of a [`super::Tensor`]. Matches the Python `DTYPES` table.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    U8,
+    U16,
+    I32,
+    F32,
+    F64,
+}
+
+impl DType {
+    /// Canonical short name used in artifact names and the manifest.
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::U8 => "u8",
+            DType::U16 => "u16",
+            DType::I32 => "i32",
+            DType::F32 => "f32",
+            DType::F64 => "f64",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<DType> {
+        Some(match s {
+            "u8" => DType::U8,
+            "u16" => DType::U16,
+            "i32" => DType::I32,
+            "f32" => DType::F32,
+            "f64" => DType::F64,
+            _ => return None,
+        })
+    }
+
+    pub fn size_bytes(self) -> usize {
+        match self {
+            DType::U8 => 1,
+            DType::U16 => 2,
+            DType::I32 | DType::F32 => 4,
+            DType::F64 => 8,
+        }
+    }
+
+    /// The XLA element type this dtype marshals to.
+    pub fn xla(self) -> ElementType {
+        match self {
+            DType::U8 => ElementType::U8,
+            DType::U16 => ElementType::U16,
+            DType::I32 => ElementType::S32,
+            DType::F32 => ElementType::F32,
+            DType::F64 => ElementType::F64,
+        }
+    }
+
+    /// True if saturating integer store semantics apply at the write boundary.
+    pub fn is_int(self) -> bool {
+        matches!(self, DType::U8 | DType::U16 | DType::I32)
+    }
+
+    /// Saturation ceiling for integer image types (None = plain rounding).
+    pub fn saturate_max(self) -> Option<f64> {
+        match self {
+            DType::U8 => Some(255.0),
+            DType::U16 => Some(65535.0),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for DType {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}

@@ -1,0 +1,117 @@
+//! Image helpers for the cv/npp wrappers and the preprocessing pipeline.
+
+use super::{DType, Tensor};
+
+/// Packed (HWC) vs planar (CHW) pixel layout — the paper's Split WOp
+/// transforms packed to planar (Fig. 11).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ImageLayout {
+    Packed,
+    Planar,
+}
+
+/// A crop rectangle in frame coordinates: x0, y0, width, height.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Rect {
+    pub x0: i32,
+    pub y0: i32,
+    pub w: i32,
+    pub h: i32,
+}
+
+impl Rect {
+    pub fn new(x0: i32, y0: i32, w: i32, h: i32) -> Rect {
+        Rect { x0, y0, w, h }
+    }
+
+    /// Flatten a batch of rects into the i32[B, 4] tensor the preproc
+    /// artifact expects.
+    pub fn batch_tensor(rects: &[Rect]) -> Tensor {
+        let mut v = Vec::with_capacity(rects.len() * 4);
+        for r in rects {
+            v.extend_from_slice(&[r.x0, r.y0, r.w, r.h]);
+        }
+        Tensor::from_i32(&v, &[rects.len(), 4])
+    }
+
+    pub fn contains_within(&self, fw: i32, fh: i32) -> bool {
+        self.x0 >= 0 && self.y0 >= 0 && self.w > 0 && self.h > 0
+            && self.x0 + self.w <= fw
+            && self.y0 + self.h <= fh
+    }
+}
+
+/// Deterministic synthetic video frame (u8 HWC), used by examples and
+/// experiments in place of the paper's broadcast footage.
+pub fn make_frame(h: usize, w: usize, seed: u64) -> Tensor {
+    let mut data = Vec::with_capacity(h * w * 3);
+    let mut s = seed.wrapping_mul(0x9E3779B97F4A7C15) | 1;
+    for y in 0..h {
+        for x in 0..w {
+            // smooth gradients + hash noise: looks like real footage to the
+            // memory system (incompressible, spatially varying)
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            let n = (s & 0x3F) as usize;
+            data.push((((x * 255) / w + n) % 256) as u8);
+            data.push((((y * 255) / h + n) % 256) as u8);
+            data.push((((x + y) * 255 / (w + h) + n) % 256) as u8);
+        }
+    }
+    Tensor::from_u8(&data, &[h, w, 3])
+}
+
+/// CPU reference crop (u8 packed frame -> u8 packed crop), used by hostref.
+pub fn crop_frame(frame: &Tensor, r: Rect) -> Tensor {
+    let (fh, fw) = (frame.shape()[0], frame.shape()[1]);
+    assert_eq!(frame.dtype(), DType::U8);
+    assert!(r.contains_within(fw as i32, fh as i32), "rect {r:?} outside {fw}x{fh}");
+    let src = frame.as_u8().unwrap();
+    let (h, w) = (r.h as usize, r.w as usize);
+    let mut out = Vec::with_capacity(h * w * 3);
+    for y in 0..h {
+        let row = ((r.y0 as usize + y) * fw + r.x0 as usize) * 3;
+        out.extend_from_slice(&src[row..row + w * 3]);
+    }
+    Tensor::from_u8(&out, &[h, w, 3])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rect_batch_tensor_layout() {
+        let t = Rect::batch_tensor(&[Rect::new(1, 2, 3, 4), Rect::new(5, 6, 7, 8)]);
+        assert_eq!(t.shape(), &[2, 4]);
+        assert_eq!(t.as_i32().unwrap(), &[1, 2, 3, 4, 5, 6, 7, 8]);
+    }
+
+    #[test]
+    fn frame_is_deterministic() {
+        let a = make_frame(16, 16, 7);
+        let b = make_frame(16, 16, 7);
+        assert_eq!(a, b);
+        let c = make_frame(16, 16, 8);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn crop_extracts_roi() {
+        let f = make_frame(32, 32, 1);
+        let c = crop_frame(&f, Rect::new(4, 8, 10, 6));
+        assert_eq!(c.shape(), &[6, 10, 3]);
+        let fsrc = f.as_u8().unwrap();
+        let csrc = c.as_u8().unwrap();
+        // spot-check corner pixel
+        assert_eq!(csrc[0], fsrc[(8 * 32 + 4) * 3]);
+    }
+
+    #[test]
+    fn rect_bounds_check() {
+        assert!(Rect::new(0, 0, 10, 10).contains_within(10, 10));
+        assert!(!Rect::new(1, 0, 10, 10).contains_within(10, 10));
+        assert!(!Rect::new(0, 0, 0, 10).contains_within(10, 10));
+    }
+}

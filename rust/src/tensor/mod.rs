@@ -1,0 +1,71 @@
+//! Host-side tensor types: dtypes, shapes and typed storage.
+//!
+//! These are the Rust mirror of the paper's `Ptr<ND, T>` data structures
+//! (§IV-B): they carry the shape information the executor uses to infer grid
+//! dimensions / pick batched artifacts, and they marshal to/from XLA literals.
+
+mod dtype;
+mod image;
+mod tensor_impl;
+
+pub use dtype::DType;
+pub use image::{crop_frame, make_frame, ImageLayout, Rect};
+pub use tensor_impl::{Tensor, TensorData};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_sizes() {
+        assert_eq!(DType::U8.size_bytes(), 1);
+        assert_eq!(DType::U16.size_bytes(), 2);
+        assert_eq!(DType::I32.size_bytes(), 4);
+        assert_eq!(DType::F32.size_bytes(), 4);
+        assert_eq!(DType::F64.size_bytes(), 8);
+    }
+
+    #[test]
+    fn dtype_names_roundtrip() {
+        for dt in [DType::U8, DType::U16, DType::I32, DType::F32, DType::F64] {
+            assert_eq!(DType::parse(dt.name()).unwrap(), dt);
+        }
+        assert!(DType::parse("q4").is_none());
+    }
+
+    #[test]
+    fn tensor_f32_roundtrip() {
+        let t = Tensor::from_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]);
+        assert_eq!(t.shape(), &[2, 2]);
+        assert_eq!(t.len(), 4);
+        assert_eq!(t.dtype(), DType::F32);
+        assert_eq!(t.as_f32().unwrap(), &[1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn tensor_cast_saturates() {
+        let t = Tensor::from_f32(&[-5.0, 0.4, 254.6, 300.0], &[4]);
+        let u = t.cast(DType::U8);
+        assert_eq!(u.as_u8().unwrap(), &[0, 0, 255, 255]);
+    }
+
+    #[test]
+    fn tensor_to_f64_vec_from_all_dtypes() {
+        let t = Tensor::from_u8(&[0, 128, 255], &[3]);
+        assert_eq!(t.to_f64_vec(), vec![0.0, 128.0, 255.0]);
+        let t = Tensor::from_i32(&[-1, 2], &[2]);
+        assert_eq!(t.to_f64_vec(), vec![-1.0, 2.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn tensor_shape_mismatch_panics() {
+        Tensor::from_f32(&[1.0, 2.0], &[3]);
+    }
+
+    #[test]
+    fn size_bytes_accounting() {
+        let t = Tensor::zeros(DType::F32, &[10, 20]);
+        assert_eq!(t.size_bytes(), 800);
+    }
+}

@@ -1,0 +1,163 @@
+//! Typed host tensor storage.
+
+use super::DType;
+
+/// Typed storage backing a [`Tensor`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorData {
+    U8(Vec<u8>),
+    U16(Vec<u16>),
+    I32(Vec<i32>),
+    F32(Vec<f32>),
+    F64(Vec<f64>),
+}
+
+/// A host tensor: shape + typed row-major data. The unit of data exchanged
+/// with the runtime (marshaled to XLA literals at the executor boundary).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: TensorData,
+}
+
+macro_rules! ctor {
+    ($fn_name:ident, $t:ty, $variant:ident) => {
+        pub fn $fn_name(data: &[$t], shape: &[usize]) -> Tensor {
+            assert_eq!(
+                data.len(),
+                shape.iter().product::<usize>(),
+                "data length does not match shape {:?}",
+                shape
+            );
+            Tensor { shape: shape.to_vec(), data: TensorData::$variant(data.to_vec()) }
+        }
+    };
+}
+
+macro_rules! getter {
+    ($fn_name:ident, $t:ty, $variant:ident) => {
+        pub fn $fn_name(&self) -> Option<&[$t]> {
+            match &self.data {
+                TensorData::$variant(v) => Some(v),
+                _ => None,
+            }
+        }
+    };
+}
+
+impl Tensor {
+    ctor!(from_u8, u8, U8);
+    ctor!(from_u16, u16, U16);
+    ctor!(from_i32, i32, I32);
+    ctor!(from_f32, f32, F32);
+    ctor!(from_f64, f64, F64);
+
+    getter!(as_u8, u8, U8);
+    getter!(as_u16, u16, U16);
+    getter!(as_i32, i32, I32);
+    getter!(as_f32, f32, F32);
+    getter!(as_f64, f64, F64);
+
+    pub fn zeros(dt: DType, shape: &[usize]) -> Tensor {
+        let n = shape.iter().product();
+        let data = match dt {
+            DType::U8 => TensorData::U8(vec![0; n]),
+            DType::U16 => TensorData::U16(vec![0; n]),
+            DType::I32 => TensorData::I32(vec![0; n]),
+            DType::F32 => TensorData::F32(vec![0.0; n]),
+            DType::F64 => TensorData::F64(vec![0.0; n]),
+        };
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    /// Build from f64 values with the write-boundary semantics of `dt`
+    /// (round + saturate for integer image types).
+    pub fn from_f64_cast(values: &[f64], shape: &[usize], dt: DType) -> Tensor {
+        assert_eq!(values.len(), shape.iter().product::<usize>());
+        let data = match dt {
+            DType::U8 => TensorData::U8(values.iter().map(|&v| sat(v, 255.0) as u8).collect()),
+            DType::U16 => {
+                TensorData::U16(values.iter().map(|&v| sat(v, 65535.0) as u16).collect())
+            }
+            DType::I32 => TensorData::I32(values.iter().map(|&v| v.round() as i32).collect()),
+            DType::F32 => TensorData::F32(values.iter().map(|&v| v as f32).collect()),
+            DType::F64 => TensorData::F64(values.to_vec()),
+        };
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn dtype(&self) -> DType {
+        match &self.data {
+            TensorData::U8(_) => DType::U8,
+            TensorData::U16(_) => DType::U16,
+            TensorData::I32(_) => DType::I32,
+            TensorData::F32(_) => DType::F32,
+            TensorData::F64(_) => DType::F64,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.len() * self.dtype().size_bytes()
+    }
+
+    pub fn data(&self) -> &TensorData {
+        &self.data
+    }
+
+    /// Raw bytes of the storage (row-major), for literal construction.
+    pub fn raw_bytes(&self) -> &[u8] {
+        match &self.data {
+            TensorData::U8(v) => v.as_slice(),
+            TensorData::U16(v) => bytemuck_cast(v),
+            TensorData::I32(v) => bytemuck_cast(v),
+            TensorData::F32(v) => bytemuck_cast(v),
+            TensorData::F64(v) => bytemuck_cast(v),
+        }
+    }
+
+    /// Lossless widening to f64 (for oracles and assertions).
+    pub fn to_f64_vec(&self) -> Vec<f64> {
+        match &self.data {
+            TensorData::U8(v) => v.iter().map(|&x| x as f64).collect(),
+            TensorData::U16(v) => v.iter().map(|&x| x as f64).collect(),
+            TensorData::I32(v) => v.iter().map(|&x| x as f64).collect(),
+            TensorData::F32(v) => v.iter().map(|&x| x as f64).collect(),
+            TensorData::F64(v) => v.clone(),
+        }
+    }
+
+    /// Cast with write-boundary semantics (round + saturate to int types).
+    pub fn cast(&self, dt: DType) -> Tensor {
+        if dt == self.dtype() {
+            return self.clone();
+        }
+        Tensor::from_f64_cast(&self.to_f64_vec(), &self.shape, dt)
+    }
+
+    /// Same data viewed under a new shape (element count must match).
+    pub fn reshaped(&self, shape: &[usize]) -> Tensor {
+        assert_eq!(self.len(), shape.iter().product::<usize>(), "reshape element mismatch");
+        Tensor { shape: shape.to_vec(), data: self.data.clone() }
+    }
+}
+
+fn sat(v: f64, hi: f64) -> f64 {
+    v.round().clamp(0.0, hi)
+}
+
+fn bytemuck_cast<T>(v: &[T]) -> &[u8] {
+    // SAFETY: plain-old-data numeric slices; lifetime tied to `v`.
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, std::mem::size_of_val(v)) }
+}

@@ -1,0 +1,146 @@
+//! Coordinator end-to-end: submit -> dynamic HF batch -> fused launch ->
+//! reply, with correctness, ordering, metrics and backpressure checks.
+
+use std::time::Duration;
+
+use fkl::coordinator::{BatchPolicy, Service, ServiceConfig};
+use fkl::ops::{Opcode, Pipeline};
+use fkl::proplite::Rng;
+use fkl::tensor::{DType, Tensor};
+
+fn pipeline() -> Pipeline {
+    Pipeline::from_opcodes(
+        &[(Opcode::Nop, 0.0), (Opcode::Mul, 0.5), (Opcode::Sub, 3.0), (Opcode::Div, 1.7)],
+        &[60, 120],
+        1,
+        DType::U8,
+        DType::F32,
+    )
+    .unwrap()
+}
+
+#[test]
+fn requests_are_batched_and_correct() {
+    let svc = Service::start(ServiceConfig {
+        artifact_dir: None,
+        queue_cap: 512,
+        policy: BatchPolicy { max_batch: 25, window: Duration::from_micros(300) },
+    });
+    let p = pipeline();
+    let mut rng = Rng::new(1);
+    let n = 100;
+    let mut inputs = Vec::new();
+    let mut rxs = Vec::new();
+    for _ in 0..n {
+        let item = Tensor::from_u8(&rng.vec_u8(7200), &[1, 60, 120]);
+        inputs.push(item.clone());
+        rxs.push(svc.submit(p.clone(), item).unwrap());
+    }
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let out = rx.recv().expect("service alive").expect("request ok");
+        let want = fkl::hostref::run_pipeline(&p, &inputs[i]);
+        let (g, w) = (out.to_f64_vec(), want.to_f64_vec());
+        for (a, b) in g.iter().zip(&w) {
+            assert!((a - b).abs() < 1e-3, "request {i}");
+        }
+    }
+    let m = svc.metrics().unwrap();
+    assert_eq!(m.completed, n as u64);
+    assert!(m.mean_batch() > 1.5, "batching should engage: mean {}", m.mean_batch());
+    assert_eq!(m.failed, 0);
+    svc.shutdown();
+}
+
+#[test]
+fn single_item_latency_path_works() {
+    let svc = Service::start(ServiceConfig {
+        artifact_dir: None,
+        queue_cap: 16,
+        policy: BatchPolicy { max_batch: 50, window: Duration::from_micros(100) },
+    });
+    let p = pipeline();
+    let item = Tensor::from_u8(&vec![100u8; 7200], &[1, 60, 120]);
+    let rx = svc.submit(p.clone(), item.clone()).unwrap();
+    let out = rx.recv().unwrap().unwrap();
+    assert_eq!(out.shape(), &[1, 60, 120]);
+    let want = fkl::hostref::run_pipeline(&p, &item);
+    assert_eq!(out.shape(), want.shape());
+    svc.shutdown();
+}
+
+#[test]
+fn backpressure_rejects_when_full() {
+    // a tiny queue with a long window: most submissions must fail fast
+    // rather than block (the paper's production pipelines drop frames)
+    let svc = Service::start(ServiceConfig {
+        artifact_dir: None,
+        queue_cap: 2,
+        policy: BatchPolicy { max_batch: 64, window: Duration::from_secs(5) },
+    });
+    let p = pipeline();
+    let mut results = Vec::new();
+    for _ in 0..50 {
+        let item = Tensor::from_u8(&vec![1u8; 7200], &[1, 60, 120]);
+        results.push(svc.submit(p.clone(), item).is_ok());
+    }
+    let rejected = results.iter().filter(|ok| !**ok).count();
+    assert!(rejected > 0, "tiny queue + slow window must shed load");
+    svc.shutdown();
+}
+
+#[test]
+fn mixed_streams_are_not_cross_batched() {
+    let svc = Service::start(ServiceConfig {
+        artifact_dir: None,
+        queue_cap: 512,
+        policy: BatchPolicy { max_batch: 16, window: Duration::from_micros(300) },
+    });
+    // stream A: CMSD u8->f32; stream B: plain mul f32->f32 (interp tier)
+    let pa = pipeline();
+    let pb =
+        Pipeline::from_opcodes(&[(Opcode::Mul, 2.0)], &[256, 256], 1, DType::F32, DType::F32)
+            .unwrap();
+    let mut rng = Rng::new(2);
+    let mut rx_all = Vec::new();
+    for i in 0..20 {
+        if i % 2 == 0 {
+            let item = Tensor::from_u8(&rng.vec_u8(7200), &[1, 60, 120]);
+            rx_all.push(("a", svc.submit(pa.clone(), item).unwrap()));
+        } else {
+            let item = Tensor::from_f32(&rng.vec_f32(256 * 256, 0.0, 1.0), &[1, 256, 256]);
+            rx_all.push(("b", svc.submit(pb.clone(), item).unwrap()));
+        }
+    }
+    for (stream, rx) in rx_all {
+        let out = rx.recv().unwrap().unwrap_or_else(|e| panic!("stream {stream}: {e}"));
+        match stream {
+            "a" => assert_eq!(out.shape(), &[1, 60, 120]),
+            _ => assert_eq!(out.shape(), &[1, 256, 256]),
+        }
+    }
+    svc.shutdown();
+}
+
+#[test]
+fn shutdown_drains_pending_work() {
+    let svc = Service::start(ServiceConfig {
+        artifact_dir: None,
+        queue_cap: 512,
+        // huge window: requests would sit forever without the drain
+        policy: BatchPolicy { max_batch: 64, window: Duration::from_secs(60) },
+    });
+    let p = pipeline();
+    let mut rxs = Vec::new();
+    for _ in 0..10 {
+        let item = Tensor::from_u8(&vec![5u8; 7200], &[1, 60, 120]);
+        rxs.push(svc.submit(p.clone(), item).unwrap());
+    }
+    svc.shutdown(); // must flush, not drop
+    let mut ok = 0;
+    for rx in rxs {
+        if let Ok(Ok(_)) = rx.recv() {
+            ok += 1;
+        }
+    }
+    assert_eq!(ok, 10, "shutdown must drain pending requests");
+}

@@ -1,0 +1,160 @@
+//! The core semantics invariant: FUSION NEVER CHANGES NUMERICS.
+//!
+//! fused == graph == unfused == hostref for f32 chains (exact compute path);
+//! u8 chains compare with saturation-aware tolerances (the unfused engine
+//! saturates at every step boundary — exactly like OpenCV — which is a
+//! *semantic* difference the paper inherits too, so u8 equivalence is
+//! checked against the step-saturating oracle).
+
+use std::rc::Rc;
+
+use fkl::exec::Engine;
+use fkl::hostref;
+use fkl::ops::{Opcode, Pipeline};
+use fkl::proplite::Rng;
+use fkl::runtime::Registry;
+use fkl::tensor::{DType, Tensor};
+
+fn ctx() -> fkl::cv::Context {
+    fkl::cv::Context::new().expect("run `make artifacts` first")
+}
+
+fn assert_close(got: &Tensor, want: &Tensor, tol: f64, what: &str) {
+    assert_eq!(got.shape(), want.shape(), "{what}: shape");
+    let g = got.to_f64_vec();
+    let w = want.to_f64_vec();
+    for (i, (a, b)) in g.iter().zip(&w).enumerate() {
+        assert!((a - b).abs() <= tol + tol * b.abs(), "{what} elem {i}: {a} vs {b}");
+    }
+}
+
+#[test]
+fn cmsd_f32_all_engines_agree_with_hostref() {
+    let c = ctx();
+    let p = Pipeline::from_opcodes(
+        &[(Opcode::Nop, 0.0), (Opcode::Mul, 0.5), (Opcode::Sub, 3.0), (Opcode::Div, 1.7)],
+        &[60, 120],
+        50,
+        DType::F32,
+        DType::F32,
+    )
+    .unwrap();
+    let mut rng = Rng::new(17);
+    let input = Tensor::from_f32(&rng.vec_f32(50 * 60 * 120, -4.0, 4.0), &[50, 60, 120]);
+    let want = hostref::run_pipeline(&p, &input);
+    for engine in [&c.fused as &dyn Engine, &c.unfused, &c.graph] {
+        let got = engine.run(&p, &input).unwrap();
+        assert_close(&got, &want, 1e-4, engine.name());
+    }
+}
+
+#[test]
+fn u8_unfused_matches_step_saturating_oracle() {
+    let c = ctx();
+    let p = Pipeline::from_opcodes(
+        &[(Opcode::Mul, 2.0), (Opcode::Add, 7.0)],
+        &[60, 120],
+        1,
+        DType::U8,
+        DType::U8,
+    )
+    .unwrap();
+    let mut rng = Rng::new(23);
+    let input = Tensor::from_u8(&rng.vec_u8(60 * 120), &[1, 60, 120]);
+    let got = c.unfused.run(&p, &input).unwrap();
+    let want = hostref::run_unfused(&p, &input);
+    assert_close(&got, &want, 1.0, "unfused u8");
+
+    // and fused matches the single-saturation oracle
+    let gotf = c.fused.run(&p, &input).unwrap();
+    let wantf = hostref::run_pipeline(&p, &input);
+    assert_close(&gotf, &wantf, 1.0, "fused u8");
+}
+
+#[test]
+fn random_covered_chains_property() {
+    // property: for chains the artifact family covers via the interpreter
+    // tier (f32 256x256), fused == hostref on random programs
+    let c = ctx();
+    let mut rng = Rng::new(99);
+    let safe_ops =
+        [Opcode::Mul, Opcode::Add, Opcode::Sub, Opcode::Abs, Opcode::Min, Opcode::Max];
+    for case in 0..10 {
+        let k = rng.usize(1, 9);
+        let chain: Vec<(Opcode, f64)> =
+            (0..k).map(|_| (*rng.pick(&safe_ops), rng.f64(0.5, 1.5))).collect();
+        let p = Pipeline::from_opcodes(&chain, &[256, 256], 1, DType::F32, DType::F32).unwrap();
+        let input = Tensor::from_f32(&rng.vec_f32(256 * 256, -2.0, 2.0), &[1, 256, 256]);
+        let got = c.fused.run(&p, &input).unwrap();
+        let want = hostref::run_pipeline(&p, &input);
+        assert_close(&got, &want, 1e-3, &format!("case {case} chain {chain:?}"));
+    }
+}
+
+#[test]
+fn staticloop_tier_equals_explicit_chain() {
+    // mul-add repeated n times must give identical results whether planned
+    // as a StaticLoop (runtime trip) or evaluated by hostref step by step
+    let c = ctx();
+    let mut rng = Rng::new(7);
+    let input = Tensor::from_u8(&rng.vec_u8(60 * 120 * 50), &[50, 60, 120]);
+    for n in [1usize, 3, 17] {
+        let mut chain = Vec::new();
+        for _ in 0..n {
+            chain.push((Opcode::Mul, 0.95));
+            chain.push((Opcode::Add, 1.0));
+        }
+        let p = Pipeline::from_opcodes(&chain, &[60, 120], 50, DType::U8, DType::U8).unwrap();
+        let plan = c.fused.plan_for(&p).unwrap();
+        assert_eq!(plan.tier(), "staticloop", "n={n}");
+        let got = c.fused.run(&p, &input).unwrap();
+        let want = hostref::run_pipeline(&p, &input);
+        assert_close(&got, &want, 1.0, &format!("staticloop n={n}"));
+    }
+}
+
+#[test]
+fn dtype_combos_fused_matches_oracle() {
+    let c = ctx();
+    let mut rng = Rng::new(41);
+    for (dtin, dtout) in [
+        (DType::U8, DType::F32),
+        (DType::U16, DType::F32),
+        (DType::F32, DType::F64),
+        (DType::F64, DType::F64),
+        (DType::F32, DType::U8),
+    ] {
+        let p = Pipeline::from_opcodes(
+            &[(Opcode::Nop, 0.0), (Opcode::Mul, 0.5), (Opcode::Sub, 3.0), (Opcode::Div, 1.7)],
+            &[60, 120],
+            50,
+            dtin,
+            dtout,
+        )
+        .unwrap();
+        let input = match dtin {
+            DType::U8 => Tensor::from_u8(&rng.vec_u8(50 * 7200), &[50, 60, 120]),
+            DType::U16 => {
+                let v: Vec<u16> =
+                    (0..50 * 7200).map(|_| (rng.next_u64() & 0xFFF) as u16).collect();
+                Tensor::from_u16(&v, &[50, 60, 120])
+            }
+            _ => {
+                let v: Vec<f64> = (0..50 * 7200).map(|_| rng.f64(0.0, 100.0)).collect();
+                Tensor::from_f64_cast(&v, &[50, 60, 120], dtin)
+            }
+        };
+        let got = c.fused.run(&p, &input).unwrap();
+        let want = hostref::run_pipeline(&p, &input);
+        let tol = if dtout.is_int() { 1.0 } else { 1e-3 };
+        assert_close(&got, &want, tol, &format!("{dtin}->{dtout}"));
+    }
+}
+
+#[test]
+fn registry_is_shared_across_engines() {
+    let reg = Rc::new(Registry::load(fkl::default_artifact_dir()).unwrap());
+    let e1 = fkl::exec::FusedEngine::new(reg.clone());
+    let _ = e1;
+    assert!(Rc::strong_count(&reg) >= 2);
+}

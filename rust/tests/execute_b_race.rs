@@ -1,0 +1,27 @@
+//! Regression test for the async-upload lifetime bug: buffer_from_host_literal
+//! copies asynchronously, so the source Literal must be kept alive by
+//! DeviceValue. Hammering chained execute_b catches regressions.
+use fkl::runtime::{DeviceValue, Executor, Registry};
+use fkl::tensor::Tensor;
+use std::rc::Rc;
+
+#[test]
+fn chained_execute_b_hammer() {
+    let reg = Rc::new(Registry::load(fkl::default_artifact_dir()).unwrap());
+    let exec = Executor::new(reg.clone());
+    let name = "single_op_mul_u82u8_60x120_b1_pallas";
+    let x = Tensor::from_u8(&vec![7u8; 7200], &[1, 60, 120]);
+    let p = Tensor::from_f32(&[1.0], &[1]);
+    let xb = DeviceValue::upload(&x).unwrap();
+    let pb = DeviceValue::upload(&p).unwrap();
+    let o1 = exec.run_b(name, &[&xb.buf, &pb.buf]).unwrap();
+    let mut cur = DeviceValue::from_buffer(o1);
+    let mut spent = Vec::new(); // intermediates must outlive the final sync
+    for _ in 0..300 {
+        let next = DeviceValue::from_buffer(exec.run_b(name, &[&cur.buf, &pb.buf]).unwrap());
+        spent.push(std::mem::replace(&mut cur, next));
+    }
+    let out = cur.download().unwrap();
+    drop(spent);
+    assert_eq!(out.as_u8().unwrap(), x.as_u8().unwrap());
+}

@@ -1,0 +1,129 @@
+//! Failure injection: the system must fail loudly and precisely, never
+//! silently compute the wrong thing.
+
+use std::time::Duration;
+
+use fkl::coordinator::{BatchPolicy, Service, ServiceConfig};
+use fkl::exec::Engine;
+use fkl::ops::{Opcode, Pipeline};
+use fkl::runtime::Registry;
+use fkl::tensor::{DType, Tensor};
+
+#[test]
+fn missing_artifact_dir_is_a_clean_error() {
+    let err = Registry::load("/nonexistent/artifacts").err().expect("must fail");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("make artifacts"), "actionable message, got: {msg}");
+}
+
+#[test]
+fn corrupt_manifest_is_rejected() {
+    let dir = std::env::temp_dir().join("fkl_corrupt_manifest");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), "{ not json").unwrap();
+    let err = Registry::load(&dir).err().expect("must fail");
+    assert!(format!("{err:#}").contains("manifest"), "{err:#}");
+}
+
+#[test]
+fn opcode_drift_is_detected_at_load() {
+    // manifest whose opcode table disagrees with the Rust enum
+    let dir = std::env::temp_dir().join("fkl_drift_manifest");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"version":1,"scale":"scaled","opcodes":{"nop":0,"add":9},"geometry":{},"artifacts":[]}"#,
+    )
+    .unwrap();
+    let err = Registry::load(&dir).err().expect("must fail");
+    assert!(format!("{err:#}").contains("opcode drift"), "{err:#}");
+}
+
+#[test]
+fn wrong_input_arity_is_rejected() {
+    let reg = std::rc::Rc::new(Registry::load(fkl::default_artifact_dir()).unwrap());
+    let exec = fkl::runtime::Executor::new(reg);
+    let x = Tensor::from_f32(&vec![0.0; 64], &[2, 4, 8]);
+    let err = exec.run("chain_mul-add_f322f32_4x8_b2_pallas", &[x]).unwrap_err();
+    assert!(format!("{err:#}").contains("expected 2 inputs"), "{err:#}");
+}
+
+#[test]
+fn uncovered_pipeline_reports_all_tiers_tried() {
+    let ctx = fkl::cv::Context::new().unwrap();
+    // exotic shape no artifact covers, even the interpreter
+    let p = Pipeline::from_opcodes(
+        &[(Opcode::Mul, 2.0)],
+        &[7, 13],
+        3,
+        DType::F32,
+        DType::F32,
+    )
+    .unwrap();
+    let err = ctx.fused.plan_for(&p).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("no artifact covers"), "{msg}");
+}
+
+#[test]
+fn pipeline_dtype_mismatch_is_rejected_before_launch() {
+    let ctx = fkl::cv::Context::new().unwrap();
+    let p = Pipeline::from_opcodes(
+        &[(Opcode::Nop, 0.0), (Opcode::Mul, 0.5), (Opcode::Sub, 3.0), (Opcode::Div, 1.7)],
+        &[60, 120],
+        50,
+        DType::U8,
+        DType::F32,
+    )
+    .unwrap();
+    // f32 data fed to a u8 pipeline: the artifact input check must catch it
+    let wrong = Tensor::from_f32(&vec![0.0; 50 * 7200], &[50, 60, 120]);
+    let res = ctx.fused.run(&p, &wrong);
+    assert!(res.is_err(), "dtype mismatch must not silently launch");
+}
+
+#[test]
+fn coordinator_survives_failing_requests() {
+    // a pipeline with no coverage: the service must reply with an error and
+    // keep serving subsequent good requests (no poisoned worker)
+    let svc = Service::start(ServiceConfig {
+        artifact_dir: None,
+        queue_cap: 64,
+        policy: BatchPolicy { max_batch: 8, window: Duration::from_micros(100) },
+    });
+    let bad = Pipeline::from_opcodes(&[(Opcode::Mul, 1.0)], &[7, 13], 1, DType::F32, DType::F32)
+        .unwrap();
+    let bad_rx = svc.submit(bad, Tensor::from_f32(&vec![0.0; 91], &[1, 7, 13])).unwrap();
+    let bad_out = bad_rx.recv().unwrap();
+    assert!(bad_out.is_err(), "uncovered pipeline must fail");
+
+    let good = Pipeline::from_opcodes(
+        &[(Opcode::Nop, 0.0), (Opcode::Mul, 0.5), (Opcode::Sub, 3.0), (Opcode::Div, 1.7)],
+        &[60, 120],
+        1,
+        DType::U8,
+        DType::F32,
+    )
+    .unwrap();
+    let rx = svc.submit(good, Tensor::from_u8(&vec![9u8; 7200], &[1, 60, 120])).unwrap();
+    assert!(rx.recv().unwrap().is_ok(), "service must keep working after a failure");
+    let m = svc.metrics().unwrap();
+    assert!(m.failed >= 1);
+    svc.shutdown();
+}
+
+#[test]
+fn coordinator_with_bad_artifact_dir_degrades_gracefully() {
+    let svc = Service::start(ServiceConfig {
+        artifact_dir: Some("/definitely/not/here".into()),
+        queue_cap: 8,
+        policy: BatchPolicy::default(),
+    });
+    let p = Pipeline::from_opcodes(&[(Opcode::Mul, 1.0)], &[4], 1, DType::F32, DType::F32)
+        .unwrap();
+    let rx = svc.submit(p, Tensor::from_f32(&[0.0; 4], &[1, 4])).unwrap();
+    let out = rx.recv().unwrap();
+    assert!(out.is_err());
+    assert!(out.unwrap_err().contains("registry"));
+    svc.shutdown();
+}

@@ -1,0 +1,141 @@
+//! Registry lookups + planner tier selection against the real manifest.
+
+use std::rc::Rc;
+
+use fkl::fusion::{plan_pipeline, FusionPlan, Planner};
+use fkl::ops::{Opcode, Pipeline};
+use fkl::runtime::Registry;
+use fkl::tensor::DType;
+
+fn registry() -> Rc<Registry> {
+    Rc::new(Registry::load(fkl::default_artifact_dir()).expect("run `make artifacts`"))
+}
+
+#[test]
+fn find_chain_exact_lookup() {
+    let reg = registry();
+    let m = reg
+        .find_chain(
+            &[Opcode::Nop, Opcode::Mul, Opcode::Sub, Opcode::Div],
+            "u8",
+            "f32",
+            &[60, 120],
+            50,
+            "pallas",
+        )
+        .expect("CMSD b50 artifact");
+    assert_eq!(m.kind, "chain");
+    assert_eq!(m.input_roles, vec!["data", "params"]);
+    assert_eq!(m.out_shape, vec![50, 60, 120]);
+}
+
+#[test]
+fn geometry_block_is_loaded() {
+    let reg = registry();
+    let hf = reg.geometry["hf_batches"].as_usize_vec().unwrap();
+    assert!(hf.contains(&50));
+    assert!(reg.geometry["vec_n"].as_usize().unwrap() > 1_000_000);
+}
+
+#[test]
+fn tier_selection_cascade() {
+    let reg = registry();
+    // tier 1: exact
+    let p = Pipeline::from_opcodes(
+        &[(Opcode::Nop, 0.0), (Opcode::Mul, 0.5), (Opcode::Sub, 3.0), (Opcode::Div, 1.7)],
+        &[60, 120],
+        50,
+        DType::U8,
+        DType::F32,
+    )
+    .unwrap();
+    assert!(matches!(plan_pipeline(&p, &reg, "pallas").unwrap(), FusionPlan::Exact { .. }));
+
+    // tier 2: staticloop (repeated mul-add with uniform params, u8 60x120 b50)
+    let p = Pipeline::from_opcodes(
+        &[(Opcode::Mul, 0.9), (Opcode::Add, 0.1), (Opcode::Mul, 0.9), (Opcode::Add, 0.1)],
+        &[60, 120],
+        50,
+        DType::U8,
+        DType::U8,
+    )
+    .unwrap();
+    assert!(matches!(plan_pipeline(&p, &reg, "pallas").unwrap(), FusionPlan::StaticLoop { iters: 2, .. }));
+
+    // tier 3: interpreter (arbitrary chain at the interp shape)
+    let p = Pipeline::from_opcodes(
+        &[(Opcode::Sqrt, 0.0), (Opcode::Exp, 0.0), (Opcode::Min, 1.0)],
+        &[256, 256],
+        1,
+        DType::F32,
+        DType::F32,
+    )
+    .unwrap();
+    assert!(matches!(plan_pipeline(&p, &reg, "pallas").unwrap(), FusionPlan::Interp { .. }));
+
+    // tier 4: unfused fallback (chain longer than kmax at a covered shape)
+    let chain: Vec<(Opcode, f64)> = (0..20).map(|_| (Opcode::Mul, 1.01)).collect();
+    let p = Pipeline::from_opcodes(&chain, &[60, 120], 1, DType::F32, DType::F32).unwrap();
+    match plan_pipeline(&p, &reg, "pallas").unwrap() {
+        FusionPlan::Unfused { artifacts } => assert_eq!(artifacts.len(), 20),
+        other => panic!("expected unfused fallback, got {other:?}"),
+    }
+}
+
+#[test]
+fn planner_stats_accumulate() {
+    let reg = registry();
+    let mut planner = Planner::default();
+    let exact = Pipeline::from_opcodes(
+        &[(Opcode::Nop, 0.0), (Opcode::Mul, 0.5), (Opcode::Sub, 3.0), (Opcode::Div, 1.7)],
+        &[60, 120],
+        50,
+        DType::U8,
+        DType::F32,
+    )
+    .unwrap();
+    let interp = Pipeline::from_opcodes(
+        &[(Opcode::Abs, 0.0)],
+        &[256, 256],
+        1,
+        DType::F32,
+        DType::F32,
+    )
+    .unwrap();
+    planner.plan(&exact, &reg).unwrap();
+    planner.plan(&exact, &reg).unwrap();
+    planner.plan(&interp, &reg).unwrap();
+    assert_eq!(planner.stats.exact, 2);
+    // abs at 256x256: no exact/staticloop artifact -> interp tier
+    assert_eq!(planner.stats.interp, 1);
+}
+
+#[test]
+fn variant_preference_is_honored() {
+    let reg = registry();
+    let p = Pipeline::from_opcodes(
+        &[(Opcode::Mul, 1.5), (Opcode::Add, 2.0)],
+        &[4, 8],
+        2,
+        DType::F32,
+        DType::F32,
+    )
+    .unwrap();
+    let FusionPlan::Exact { artifact } = plan_pipeline(&p, &reg, "xla").unwrap() else {
+        panic!("expected exact plan")
+    };
+    assert!(artifact.ends_with("_xla"), "{artifact}");
+    let FusionPlan::Exact { artifact } = plan_pipeline(&p, &reg, "pallas").unwrap() else {
+        panic!("expected exact plan")
+    };
+    assert!(artifact.ends_with("_pallas"), "{artifact}");
+}
+
+#[test]
+fn compile_cache_counts() {
+    let reg = registry();
+    assert_eq!(reg.compiled_count(), 0);
+    let _ = reg.executable("chain_mul-add_f322f32_4x8_b2_pallas").unwrap();
+    let _ = reg.executable("chain_mul-add_f322f32_4x8_b2_pallas").unwrap();
+    assert_eq!(reg.compiled_count(), 1, "second fetch must hit the cache");
+}

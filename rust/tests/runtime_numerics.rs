@@ -1,0 +1,193 @@
+//! Vertical-slice integration: AOT HLO artifacts -> PJRT -> numerics vs hostref.
+//!
+//! Requires `make artifacts` to have run (skips with a message otherwise —
+//! CI always builds artifacts first via the Makefile).
+
+use std::rc::Rc;
+
+use fkl::hostref;
+use fkl::ops::{Opcode, Pipeline};
+use fkl::runtime::{Executor, Registry};
+use fkl::tensor::{DType, Tensor};
+
+fn registry() -> Rc<Registry> {
+    Rc::new(Registry::load(fkl::default_artifact_dir()).expect("run `make artifacts` first"))
+}
+
+fn assert_close(got: &Tensor, want: &Tensor, tol: f64) {
+    assert_eq!(got.shape(), want.shape(), "shape mismatch");
+    assert_eq!(got.dtype(), want.dtype(), "dtype mismatch");
+    let g = got.to_f64_vec();
+    let w = want.to_f64_vec();
+    for (i, (a, b)) in g.iter().zip(&w).enumerate() {
+        assert!(
+            (a - b).abs() <= tol + tol * b.abs(),
+            "elem {i}: got {a}, want {b} (tol {tol})"
+        );
+    }
+}
+
+#[test]
+fn manifest_loads_and_crosschecks_opcodes() {
+    let reg = registry();
+    assert!(reg.len() > 50, "expected a full artifact family, got {}", reg.len());
+    assert!(reg.get("chain_mul-add_f322f32_4x8_b2_pallas").is_some());
+}
+
+#[test]
+fn fused_chain_matches_hostref() {
+    let reg = registry();
+    let exec = Executor::new(reg);
+    // artifact: chain mul,add over f32[2,4,8]
+    let x: Vec<f32> = (0..64).map(|i| (i as f32) * 0.25 - 4.0).collect();
+    let xt = Tensor::from_f32(&x, &[2, 4, 8]);
+    let params = Tensor::from_f32(&[1.5, 2.0], &[2]);
+    let got = exec.run("chain_mul-add_f322f32_4x8_b2_pallas", &[xt.clone(), params]).unwrap();
+
+    let p = Pipeline::from_opcodes(
+        &[(Opcode::Mul, 1.5), (Opcode::Add, 2.0)],
+        &[4, 8],
+        2,
+        DType::F32,
+        DType::F32,
+    )
+    .unwrap();
+    let want = hostref::run_pipeline(&p, &xt);
+    assert_close(&got, &want, 1e-5);
+}
+
+#[test]
+fn pallas_and_xla_variants_agree_exactly() {
+    let reg = registry();
+    let exec = Executor::new(reg);
+    let x: Vec<f32> = (0..64).map(|i| (i as f32) * 0.5).collect();
+    let xt = Tensor::from_f32(&x, &[2, 4, 8]);
+    let params = Tensor::from_f32(&[0.75, -1.0], &[2]);
+    let a = exec.run("chain_mul-add_f322f32_4x8_b2_pallas", &[xt.clone(), params.clone()]).unwrap();
+    let b = exec.run("chain_mul-add_f322f32_4x8_b2_xla", &[xt, params]).unwrap();
+    assert_eq!(a, b, "pallas and xla lowerings of the same chain must agree bitwise");
+}
+
+#[test]
+fn staticloop_trip_count_is_runtime() {
+    let reg = registry();
+    let exec = Executor::new(reg);
+    let name = "staticloop_mul-add_u82u8_60x120_b50_pallas";
+    let n = 50 * 60 * 120;
+    let x = Tensor::from_u8(&vec![10u8; n], &[50, 60, 120]);
+    let params = Tensor::from_f32(&[1.1, 0.5], &[2]);
+    let p = Pipeline::from_opcodes(
+        &[(Opcode::Mul, 1.1f32 as f64), (Opcode::Add, 0.5)],
+        &[60, 120],
+        50,
+        DType::U8,
+        DType::U8,
+    )
+    .unwrap();
+    for iters in [0usize, 1, 7] {
+        let it = Tensor::from_i32(&[iters as i32], &[1]);
+        let got = exec.run(name, &[it, x.clone(), params.clone()]).unwrap();
+        let want = hostref::run_staticloop(&p, &x, iters);
+        assert_close(&got, &want, 1.0); // u8 rounding tolerance
+    }
+}
+
+#[test]
+fn interp_kernel_runs_arbitrary_chain() {
+    let reg = registry();
+    let exec = Executor::new(reg);
+    let name = "interp_k16_f322f32_256x256_b1_pallas";
+    let n = 256 * 256;
+    let x: Vec<f32> = (0..n).map(|i| ((i % 97) as f32) * 0.1 - 3.0).collect();
+    let xt = Tensor::from_f32(&x, &[1, 256, 256]);
+    // chain: mul 2, add 1, abs, min 4  (+ 12 nops)
+    let mut opc = vec![0i32; 16];
+    let mut par = vec![0f32; 16];
+    opc[..4].copy_from_slice(&[
+        Opcode::Mul.code(),
+        Opcode::Add.code(),
+        Opcode::Abs.code(),
+        Opcode::Min.code(),
+    ]);
+    par[..4].copy_from_slice(&[2.0, 1.0, 0.0, 4.0]);
+    let got = exec
+        .run(name, &[xt.clone(), Tensor::from_i32(&opc, &[16]), Tensor::from_f32(&par, &[16])])
+        .unwrap();
+
+    let p = Pipeline::from_opcodes(
+        &[(Opcode::Mul, 2.0), (Opcode::Add, 1.0), (Opcode::Abs, 0.0), (Opcode::Min, 4.0)],
+        &[256, 256],
+        1,
+        DType::F32,
+        DType::F32,
+    )
+    .unwrap();
+    let want = hostref::run_pipeline(&p, &xt);
+    assert_close(&got, &want, 1e-5);
+}
+
+#[test]
+fn reduce_stats_one_pass() {
+    let reg = registry();
+    let exec = Executor::new(reg);
+    let n = 512 * 512;
+    let x: Vec<f32> = (0..n).map(|i| ((i as f32) * 0.001).sin() * 10.0).collect();
+    let xt = Tensor::from_f32(&x, &[512, 512]);
+    let got = exec.run("reduce_stats_f32_512x512_pallas", &[xt.clone()]).unwrap();
+    let g = got.to_f64_vec();
+    let [mx, mn, sum, mean] = hostref::reduce_stats(&xt);
+    assert!((g[0] - mx).abs() < 1e-3, "max {} vs {}", g[0], mx);
+    assert!((g[1] - mn).abs() < 1e-3, "min {} vs {}", g[1], mn);
+    assert!((g[2] - sum).abs() < sum.abs() * 1e-4 + 1.0, "sum {} vs {}", g[2], sum);
+    assert!((g[3] - mean).abs() < 1e-3, "mean {} vs {}", g[3], mean);
+}
+
+#[test]
+fn preproc_pipeline_matches_hostref() {
+    use fkl::tensor::{make_frame, Rect};
+    let reg = registry();
+    let exec = Executor::new(reg);
+    let name = "preproc_720x1280x3_to128x64_b2_pallas";
+    let frame = make_frame(720, 1280, 42);
+    let rects = [Rect::new(100, 50, 120, 60), Rect::new(640, 300, 120, 60)];
+    let mulv = [0.9f32, 1.0, 1.1];
+    let subv = [0.5f32, 0.4, 0.3];
+    let divv = [2.0f32, 2.1, 2.2];
+    let got = exec
+        .run(
+            name,
+            &[
+                frame.clone(),
+                Rect::batch_tensor(&rects),
+                Tensor::from_f32(&mulv, &[3]),
+                Tensor::from_f32(&subv, &[3]),
+                Tensor::from_f32(&divv, &[3]),
+            ],
+        )
+        .unwrap();
+    let want = hostref::preproc(&frame, &rects, mulv, subv, divv, 128, 64);
+    assert_close(&got, &want, 1e-2);
+}
+
+#[test]
+fn graph_replay_matches_stepwise() {
+    use fkl::runtime::ExecGraph;
+    let reg = registry();
+    let exec = Executor::new(reg.clone());
+    // two mul-kernels back to back on the xp04 single-op artifact
+    let name = "single_op_mul_u82u8_60x120_b1_pallas";
+    let x = Tensor::from_u8(&vec![7u8; 60 * 120], &[1, 60, 120]);
+    let params = Tensor::from_f32(&[3.0], &[1]);
+
+    let graph = ExecGraph::record()
+        .launch(&exec, &reg, name, &[(1, &params)])
+        .unwrap()
+        .launch(&exec, &reg, name, &[(1, &params)])
+        .unwrap()
+        .finish();
+    let got = graph.replay(&x).unwrap();
+
+    let step1 = exec.run(name, &[x, params.clone()]).unwrap();
+    let want = exec.run(name, &[step1, params]).unwrap();
+    assert_eq!(got, want);
+}
