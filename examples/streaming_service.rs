@@ -38,6 +38,7 @@ fn main() -> anyhow::Result<()> {
         artifact_dir: None,
         queue_cap: 4096,
         policy: BatchPolicy { max_batch: 50, window: Duration::from_micros(800) },
+        ..ServiceConfig::default()
     });
     let p = normalize_pipeline();
 
@@ -105,6 +106,15 @@ fn main() -> anyhow::Result<()> {
         m.padded_planes
     );
     println!(
+        "fusion coverage: {:.0}% fused ({} unfused fallbacks; tiers exact={} staticloop={} interp={} host={})",
+        m.fused_coverage() * 100.0,
+        m.unfused_fallbacks,
+        m.planner.exact,
+        m.planner.staticloop,
+        m.planner.interp,
+        m.planner.host
+    );
+    println!(
         "latency us: p50={} p95={} p99={} max={}",
         m.latency.p50, m.latency.p95, m.latency.p99, m.latency.max
     );
@@ -114,6 +124,7 @@ fn main() -> anyhow::Result<()> {
         artifact_dir: None,
         queue_cap: 4096,
         policy: BatchPolicy { max_batch: 1, window: Duration::ZERO },
+        ..ServiceConfig::default()
     });
     let t0 = Instant::now();
     let mut pend1 = Vec::new();

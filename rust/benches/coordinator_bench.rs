@@ -23,7 +23,7 @@ fn pipeline() -> Pipeline {
 }
 
 fn drive(policy: BatchPolicy, n: usize) -> (f64, fkl::coordinator::MetricsSnapshot) {
-    let svc = Service::start(ServiceConfig { artifact_dir: None, queue_cap: 8192, policy });
+    let svc = Service::start(ServiceConfig { artifact_dir: None, queue_cap: 8192, policy, ..ServiceConfig::default() });
     let p = pipeline();
     let mut rng = Rng::new(3);
     // warmup (compile)

@@ -1,0 +1,229 @@
+//! Host fusion benchmark: the paper's VF claim measured on the CPU.
+//!
+//! Compares three executions of the same chain over 1080p-scale buffers:
+//!
+//! * **op-at-a-time** — `hostref::run_pipeline`: widen the whole buffer, one
+//!   read+write sweep per op (the unfused memory traffic pattern);
+//! * **fused (1 thread)** — `HostFusedEngine::with_threads(1)`: one memory
+//!   pass, intermediates in registers — the pure VF effect;
+//! * **fused (N threads)** — `HostFusedEngine::new()`: the same pass with
+//!   the element range chunked across cores — VF + the HF analog.
+//!
+//! Sweeps chain lengths 1..=16 (paper Fig. 17: speedup grows with chain
+//! depth because fused traffic is constant while unfused traffic is linear
+//! in k) and writes `BENCH_host_fusion.json` at the repo root.
+//!
+//! ```sh
+//! cargo bench --bench host_fusion_bench            # full sweep
+//! FKL_BENCH_FAST=1 cargo bench --bench host_fusion_bench   # trimmed
+//! ```
+
+use std::time::Duration;
+
+use fkl::bench::time_fn;
+use fkl::exec::{Engine, HostFusedEngine};
+use fkl::hostref;
+use fkl::jsonlite::Value;
+use fkl::ops::{Opcode, Pipeline};
+use fkl::proplite::Rng;
+use fkl::tensor::{DType, Tensor};
+
+/// Contractive mixed chain: values stay in a tame range at any depth.
+fn chain(k: usize) -> Vec<(Opcode, f64)> {
+    let cycle = [
+        (Opcode::Mul, 0.999),
+        (Opcode::Add, 0.001),
+        (Opcode::Sub, 0.0005),
+        (Opcode::Max, -1000.0),
+    ];
+    (0..k).map(|i| cycle[i % cycle.len()]).collect()
+}
+
+struct Point {
+    label: String,
+    chain_len: usize,
+    dtin: &'static str,
+    dtout: &'static str,
+    elems: usize,
+    batch: usize,
+    op_at_a_time_ms: f64,
+    fused_1t_ms: f64,
+    fused_mt_ms: f64,
+}
+
+impl Point {
+    fn speedup_1t(&self) -> f64 {
+        self.op_at_a_time_ms / self.fused_1t_ms
+    }
+
+    fn speedup_mt(&self) -> f64 {
+        self.op_at_a_time_ms / self.fused_mt_ms
+    }
+
+    fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("label", Value::str(&self.label)),
+            ("chain_len", Value::num(self.chain_len as f64)),
+            ("dtin", Value::str(self.dtin)),
+            ("dtout", Value::str(self.dtout)),
+            ("elems", Value::num(self.elems as f64)),
+            ("batch", Value::num(self.batch as f64)),
+            ("op_at_a_time_ms", Value::num(self.op_at_a_time_ms)),
+            ("fused_1t_ms", Value::num(self.fused_1t_ms)),
+            ("fused_mt_ms", Value::num(self.fused_mt_ms)),
+            ("speedup_fused_1t", Value::num(self.speedup_1t())),
+            ("speedup_fused_mt", Value::num(self.speedup_mt())),
+        ])
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn measure(
+    label: &str,
+    p: &Pipeline,
+    x: &Tensor,
+    eng_1t: &HostFusedEngine,
+    eng_mt: &HostFusedEngine,
+    reps: usize,
+    budget: Duration,
+) -> Point {
+    // correctness guard: a benchmark of a wrong answer is meaningless
+    let fused = eng_1t.run(p, x).expect("fused run");
+    let want = hostref::run_pipeline(p, x);
+    for (a, b) in fused.to_f64_vec().iter().zip(want.to_f64_vec()) {
+        assert!(
+            (a - b).abs() <= 1e-4 + 1e-4 * b.abs(),
+            "{label}: fused diverged from oracle ({a} vs {b})"
+        );
+    }
+
+    let base = time_fn(reps, budget, || hostref::run_pipeline(p, x));
+    let f1 = time_fn(reps, budget, || eng_1t.run(p, x).unwrap());
+    let fm = time_fn(reps, budget, || eng_mt.run(p, x).unwrap());
+    let pt = Point {
+        label: label.to_string(),
+        chain_len: p.body().len(),
+        dtin: p.dtin.name(),
+        dtout: p.dtout.name(),
+        elems: p.batch * p.item_elems(),
+        batch: p.batch,
+        op_at_a_time_ms: base.mean_s * 1e3,
+        fused_1t_ms: f1.mean_s * 1e3,
+        fused_mt_ms: fm.mean_s * 1e3,
+    };
+    println!(
+        "{label:32} k={:<2} {:>9} elems | op-at-a-time {:>8.3} ms | fused 1t {:>8.3} ms ({:>5.2}x) | fused {}t {:>8.3} ms ({:>5.2}x)",
+        pt.chain_len,
+        pt.elems,
+        pt.op_at_a_time_ms,
+        pt.fused_1t_ms,
+        pt.speedup_1t(),
+        eng_mt.threads(),
+        pt.fused_mt_ms,
+        pt.speedup_mt(),
+    );
+    pt
+}
+
+fn main() {
+    let fast = std::env::var("FKL_BENCH_FAST").is_ok();
+    let (reps, budget) =
+        if fast { (5, Duration::from_millis(200)) } else { (15, Duration::from_millis(700)) };
+    let eng_1t = HostFusedEngine::with_threads(1);
+    let eng_mt = HostFusedEngine::new();
+    let mut rng = Rng::new(1);
+    println!(
+        "# host_fusion_bench — single-pass fused vs op-at-a-time (threads: {})",
+        eng_mt.threads()
+    );
+
+    let mut points: Vec<Point> = Vec::new();
+
+    // --- chain-length sweep on a 1080p f32 frame ---------------------------
+    let (h, w) = (1080usize, 1920usize);
+    let f32_frame = Tensor::from_f32(&rng.vec_f32(h * w, -2.0, 2.0), &[1, h, w]);
+    let lens: &[usize] = if fast { &[1, 5, 16] } else { &[1, 2, 3, 4, 5, 6, 8, 12, 16] };
+    for &k in lens {
+        let p = Pipeline::from_opcodes(&chain(k), &[h, w], 1, DType::F32, DType::F32).unwrap();
+        points.push(measure(
+            &format!("f32/1080p/chain{k}"),
+            &p,
+            &f32_frame,
+            &eng_1t,
+            &eng_mt,
+            reps,
+            budget,
+        ));
+    }
+
+    // --- the acceptance point: f32, 5 ops, >= 1M elements ------------------
+    let (accept_elems, accept_speedup) = {
+        let pt = points
+            .iter()
+            .find(|pt| pt.dtin == "f32" && pt.chain_len == 5 && pt.elems >= 1 << 20)
+            .expect("sweep includes the acceptance point");
+        (pt.elems, pt.speedup_mt().max(pt.speedup_1t()))
+    };
+    let accept_pass = accept_speedup >= 2.0;
+
+    // --- u8 -> f32 normalization (the paper's production preprocessing) ----
+    let u8_frame = Tensor::from_u8(&rng.vec_u8(h * w), &[1, h, w]);
+    let p = Pipeline::from_opcodes(
+        &[(Opcode::Nop, 0.0), (Opcode::Mul, 1.0 / 255.0), (Opcode::Sub, 0.45), (Opcode::Div, 0.226)],
+        &[h, w],
+        1,
+        DType::U8,
+        DType::F32,
+    )
+    .unwrap();
+    points.push(measure("u8f32/1080p/normalize", &p, &u8_frame, &eng_1t, &eng_mt, reps, budget));
+
+    // --- u8 -> u8 (oracle-exact f64 accumulation path) ---------------------
+    let p = Pipeline::from_opcodes(&chain(6), &[h, w], 1, DType::U8, DType::U8).unwrap();
+    points.push(measure("u8/1080p/chain6", &p, &u8_frame, &eng_1t, &eng_mt, reps, budget));
+
+    // --- HF analog: batch of 64 camera crops -------------------------------
+    let (bh, bw, b) = (256usize, 256usize, 64usize);
+    let batch_in = Tensor::from_f32(&rng.vec_f32(b * bh * bw, -2.0, 2.0), &[b, bh, bw]);
+    let p = Pipeline::from_opcodes(&chain(5), &[bh, bw], b, DType::F32, DType::F32).unwrap();
+    points.push(measure("f32/batch64x256x256/chain5", &p, &batch_in, &eng_1t, &eng_mt, reps, budget));
+
+    // --- report ------------------------------------------------------------
+    println!(
+        "\nacceptance: f32 chain5 @ {accept_elems} elems -> {accept_speedup:.2}x (target >= 2x): {}",
+        if accept_pass { "PASS" } else { "FAIL" }
+    );
+
+    let report = Value::obj(vec![
+        ("bench", Value::str("host_fusion")),
+        ("threads", Value::num(eng_mt.threads() as f64)),
+        ("fast_mode", Value::Bool(fast)),
+        (
+            "acceptance",
+            Value::obj(vec![
+                ("criterion", Value::str("fused >= 2x op-at-a-time, f32 chain of 5 ops, >= 1M elems")),
+                ("elems", Value::num(accept_elems as f64)),
+                ("speedup", Value::num(accept_speedup)),
+                ("pass", Value::Bool(accept_pass)),
+            ]),
+        ),
+        ("series", Value::Arr(points.iter().map(Point::to_json).collect())),
+    ]);
+
+    // repo root (= parent of the crate dir), plus cwd as a convenience copy
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|p| p.join("BENCH_host_fusion.json"))
+        .unwrap_or_else(|| "BENCH_host_fusion.json".into());
+    std::fs::write(&root, report.to_json()).expect("write BENCH_host_fusion.json");
+    println!("wrote {}", root.display());
+
+    // FKL_BENCH_SOFT turns the acceptance gate into a warning — wall-clock
+    // asserts on shared CI runners are a flake source; local/bench runs keep
+    // the hard gate
+    if !accept_pass && std::env::var("FKL_BENCH_SOFT").is_ok() {
+        eprintln!("WARNING: acceptance criterion not met: {accept_speedup:.2}x < 2x (soft mode)");
+        return;
+    }
+    assert!(accept_pass, "acceptance criterion not met: {accept_speedup:.2}x < 2x");
+}

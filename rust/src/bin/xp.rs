@@ -36,13 +36,9 @@ fn main() {
     let ids: Vec<&str> =
         if ids.is_empty() || ids == ["all"] { experiments::ALL.to_vec() } else { ids };
 
-    let ctx = match XpCtx::new(fast) {
-        Ok(c) => c,
-        Err(e) => {
-            eprintln!("error: {e:#}");
-            std::process::exit(1);
-        }
-    };
+    // the registry-backed context is built lazily: host-only experiments
+    // (experiments::HOST_ONLY) run without artifacts on any machine
+    let mut ctx: Option<XpCtx> = None;
     // fresh summary per invocation
     let _ = std::fs::remove_file(out.join("summary.md"));
 
@@ -50,7 +46,21 @@ fn main() {
     for id in &ids {
         let t0 = std::time::Instant::now();
         eprintln!("== running experiment {id} ==");
-        match experiments::run(id, &ctx) {
+        let result = if experiments::HOST_ONLY.contains(id) {
+            experiments::run_host(id, fast)
+        } else {
+            if ctx.is_none() {
+                match XpCtx::new(fast) {
+                    Ok(c) => ctx = Some(c),
+                    Err(e) => {
+                        eprintln!("error: {e:#}");
+                        std::process::exit(1);
+                    }
+                }
+            }
+            experiments::run(id, ctx.as_ref().expect("context just built"))
+        };
+        match result {
             Ok(tables) => {
                 for (i, t) in tables.iter().enumerate() {
                     let stem = if tables.len() == 1 {

@@ -2,6 +2,8 @@
 
 use std::time::Duration;
 
+use crate::fusion::PlannerStats;
+
 /// Online latency reservoir (fixed capacity, overwrite-oldest) + counters.
 #[derive(Debug)]
 pub struct Metrics {
@@ -14,6 +16,12 @@ pub struct Metrics {
     pub launches: u64,
     pub batched_items: u64,
     pub padded_planes: u64,
+    /// Launches that went down the per-op fallback path (no fused coverage)
+    /// — counted separately so VF regressions show up in serving dashboards
+    /// instead of hiding inside `launches`.
+    pub unfused_fallbacks: u64,
+    /// Per-tier serve counts copied from the engine (HF/VF coverage).
+    pub planner: PlannerStats,
 }
 
 impl Default for Metrics {
@@ -34,6 +42,8 @@ impl Metrics {
             launches: 0,
             batched_items: 0,
             padded_planes: 0,
+            unfused_fallbacks: 0,
+            planner: PlannerStats::default(),
         }
     }
 
@@ -58,6 +68,8 @@ impl Metrics {
             launches: self.launches,
             batched_items: self.batched_items,
             padded_planes: self.padded_planes,
+            unfused_fallbacks: self.unfused_fallbacks,
+            planner: self.planner.clone(),
             latency: LatencyStats::from_sorted(&lat),
         }
     }
@@ -101,6 +113,8 @@ pub struct MetricsSnapshot {
     pub launches: u64,
     pub batched_items: u64,
     pub padded_planes: u64,
+    pub unfused_fallbacks: u64,
+    pub planner: PlannerStats,
     pub latency: LatencyStats,
 }
 
@@ -111,6 +125,16 @@ impl MetricsSnapshot {
             0.0
         } else {
             self.batched_items as f64 / self.launches as f64
+        }
+    }
+
+    /// Fraction of serves with fused (single-pass) coverage, 0..=1.
+    pub fn fused_coverage(&self) -> f64 {
+        let total = self.planner.total();
+        if total == 0 {
+            1.0
+        } else {
+            self.planner.fused_total() as f64 / total as f64
         }
     }
 }
@@ -153,5 +177,21 @@ mod tests {
         m.launches = 4;
         m.batched_items = 100;
         assert_eq!(m.snapshot().mean_batch(), 25.0);
+    }
+
+    #[test]
+    fn fallbacks_and_planner_tiers_surface_in_snapshot() {
+        let mut m = Metrics::default();
+        m.unfused_fallbacks = 3;
+        m.planner.exact = 6;
+        m.planner.host = 1;
+        m.planner.unfused = 3;
+        let s = m.snapshot();
+        assert_eq!(s.unfused_fallbacks, 3);
+        assert_eq!(s.planner.fused_total(), 7);
+        assert_eq!(s.planner.total(), 10);
+        assert!((s.fused_coverage() - 0.7).abs() < 1e-12);
+        // empty snapshot: coverage defaults to 1 (nothing has fallen back)
+        assert_eq!(Metrics::default().snapshot().fused_coverage(), 1.0);
     }
 }

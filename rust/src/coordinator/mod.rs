@@ -12,7 +12,10 @@
 //!   service thread owns Registry + engines; everything else passes messages;
 //! * bounded request queue = backpressure;
 //! * batch window/size caps = the latency/throughput trade of every dynamic
-//!   batcher (vLLM-style), measured by `benches/coordinator_bench.rs`.
+//!   batcher (vLLM-style), measured by `benches/coordinator_bench.rs`;
+//! * backend selection ([`EngineSelect`]): the XLA fused engine when the
+//!   artifact registry is available, the single-pass host fused engine
+//!   otherwise — the service comes up and serves correctly everywhere.
 
 mod batcher;
 mod metrics;
@@ -20,4 +23,4 @@ mod service;
 
 pub use batcher::{BatchPolicy, Batcher, PendingRequest};
 pub use metrics::{LatencyStats, Metrics, MetricsSnapshot};
-pub use service::{Service, ServiceConfig, SubmitError};
+pub use service::{EngineSelect, Service, ServiceConfig, SubmitError};

@@ -7,10 +7,25 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::coordinator::{BatchPolicy, Batcher, Metrics, MetricsSnapshot, PendingRequest};
-use crate::exec::{concat_batch, slice_batch, Engine, FusedEngine};
-use crate::fusion::hfusion;
+use crate::exec::{slice_batch, stack_batch, Engine, FusedEngine, HostFusedEngine};
+use crate::fusion::{hfusion, PlannerStats};
 use crate::ops::Pipeline;
 use crate::tensor::Tensor;
+
+/// Which execution backend the service thread builds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EngineSelect {
+    /// Prefer the XLA fused engine when the artifact registry loads; fall
+    /// back to the host fused engine otherwise — the service always comes up.
+    #[default]
+    Auto,
+    /// XLA fused engine only: a missing/corrupt registry poisons the service
+    /// (every request answered with the load error). The pre-host behavior.
+    Xla,
+    /// Host fused engine only: single-pass CPU execution, no artifacts, no
+    /// PJRT — runs everywhere.
+    HostFused,
+}
 
 /// Coordinator configuration.
 #[derive(Debug, Clone)]
@@ -21,11 +36,17 @@ pub struct ServiceConfig {
     /// (backpressure; the paper's pipelines drop frames rather than lag).
     pub queue_cap: usize,
     pub policy: BatchPolicy,
+    pub engine: EngineSelect,
 }
 
 impl Default for ServiceConfig {
     fn default() -> Self {
-        ServiceConfig { artifact_dir: None, queue_cap: 1024, policy: BatchPolicy::default() }
+        ServiceConfig {
+            artifact_dir: None,
+            queue_cap: 1024,
+            policy: BatchPolicy::default(),
+            engine: EngineSelect::default(),
+        }
     }
 }
 
@@ -103,30 +124,110 @@ impl Drop for Service {
     }
 }
 
+/// The service thread's execution backend: the XLA fused engine against the
+/// artifact registry, or the everywhere-capable host fused engine.
+enum Backend {
+    Xla { engine: FusedEngine, buckets: Vec<usize> },
+    Host { engine: HostFusedEngine, buckets: Vec<usize> },
+}
+
+const DEFAULT_BUCKETS: [usize; 7] = [1, 2, 4, 8, 16, 32, 64];
+
+impl Backend {
+    fn buckets(&self) -> &[usize] {
+        match self {
+            Backend::Xla { buckets, .. } | Backend::Host { buckets, .. } => buckets,
+        }
+    }
+
+    /// Can this backend serve the pipeline (used to pick an HF bucket)?
+    fn covers(&self, p: &Pipeline) -> bool {
+        match self {
+            Backend::Xla { engine, .. } => engine.plan_for(p).is_ok(),
+            // the host engine executes the whole element-wise vocabulary; the
+            // one thing it refuses is HF-stacking a lane-structured (3-lane
+            // pixel) stream whose items are not a whole number of pixels —
+            // stacking would shift lane indices across items, silently
+            // changing per-item results (those streams run per item instead)
+            Backend::Host { engine, .. } => {
+                let plan = engine.plan_for(p);
+                p.batch == 1 || plan.group() == 1 || p.item_elems() % plan.group() == 0
+            }
+        }
+    }
+
+    fn run(&self, p: &Pipeline, input: &Tensor) -> Result<Tensor> {
+        match self {
+            Backend::Xla { engine, .. } => engine.run(p, input),
+            Backend::Host { engine, .. } => engine.run(p, input),
+        }
+    }
+
+    fn last_launches(&self) -> usize {
+        match self {
+            Backend::Xla { engine, .. } => engine.last_launches(),
+            Backend::Host { engine, .. } => engine.last_launches(),
+        }
+    }
+
+    fn last_was_fallback(&self) -> bool {
+        match self {
+            Backend::Xla { engine, .. } => engine.last_was_fallback(),
+            Backend::Host { .. } => false,
+        }
+    }
+
+    fn planner_stats(&self) -> PlannerStats {
+        match self {
+            Backend::Xla { engine, .. } => engine.planner_stats(),
+            Backend::Host { engine, .. } => {
+                PlannerStats { host: engine.runs(), ..PlannerStats::default() }
+            }
+        }
+    }
+}
+
 fn service_loop(cfg: ServiceConfig, rx: Receiver<Msg>) {
     let dir = cfg.artifact_dir.clone().unwrap_or_else(crate::default_artifact_dir);
-    let reg = match crate::runtime::Registry::load(&dir) {
-        Ok(r) => std::rc::Rc::new(r),
-        Err(e) => {
-            // poison: reply to every request with the load error
-            for msg in rx.iter() {
-                match msg {
-                    Msg::Request(r) => {
-                        let _ = r.reply.send(Err(format!("registry: {e}")));
-                    }
-                    Msg::Snapshot(tx) => {
-                        let _ = tx.send(MetricsSnapshot::default());
-                    }
-                    Msg::Shutdown => break,
-                }
-            }
-            return;
-        }
+    let host_backend = || Backend::Host {
+        engine: HostFusedEngine::new(),
+        buckets: DEFAULT_BUCKETS.to_vec(),
     };
-    let engine = FusedEngine::new(reg.clone());
-    let buckets: Vec<usize> = reg.geometry["hf_batches"]
-        .as_usize_vec()
-        .unwrap_or_else(|| vec![1, 2, 4, 8, 16, 32, 64]);
+    let backend = match cfg.engine {
+        EngineSelect::HostFused => host_backend(),
+        // without the pjrt feature there is no XLA to prefer
+        EngineSelect::Auto if !cfg!(feature = "pjrt") => host_backend(),
+        EngineSelect::Xla | EngineSelect::Auto => match crate::runtime::Registry::load(&dir) {
+            Ok(r) => {
+                let reg = std::rc::Rc::new(r);
+                let buckets = reg.geometry["hf_batches"]
+                    .as_usize_vec()
+                    .unwrap_or_else(|| DEFAULT_BUCKETS.to_vec());
+                Backend::Xla { engine: FusedEngine::new(reg), buckets }
+            }
+            Err(e) if cfg.engine == EngineSelect::Auto => {
+                // degrade to the backend that runs everywhere, visibly
+                eprintln!("fkl-coordinator: artifact registry unavailable ({e:#}); \
+                           serving with the host fused engine");
+                host_backend()
+            }
+            Err(e) => {
+                // pinned-XLA poison: reply to every request with the error
+                for msg in rx.iter() {
+                    match msg {
+                        Msg::Request(r) => {
+                            let _ = r.reply.send(Err(format!("registry: {e}")));
+                        }
+                        Msg::Snapshot(tx) => {
+                            let _ = tx.send(MetricsSnapshot::default());
+                        }
+                        Msg::Shutdown => break,
+                    }
+                }
+                return;
+            }
+        },
+    };
     let mut batcher = Batcher::new(cfg.policy);
     let mut metrics = Metrics::default();
 
@@ -144,25 +245,25 @@ fn service_loop(cfg: ServiceConfig, rx: Receiver<Msg>) {
                     match m {
                         Msg::Request(r) => batcher.push(r),
                         Msg::Snapshot(tx) => {
-                            let _ = tx.send(metrics.snapshot());
+                            let _ = tx.send(snapshot(&mut metrics, &backend));
                         }
                         Msg::Shutdown => {
-                            flush(&mut batcher, &engine, &buckets, &mut metrics);
+                            flush(&mut batcher, &backend, &mut metrics);
                             return;
                         }
                     }
                 }
             }
             Ok(Msg::Snapshot(tx)) => {
-                let _ = tx.send(metrics.snapshot());
+                let _ = tx.send(snapshot(&mut metrics, &backend));
             }
             Ok(Msg::Shutdown) => {
-                flush(&mut batcher, &engine, &buckets, &mut metrics);
+                flush(&mut batcher, &backend, &mut metrics);
                 return;
             }
             Err(RecvTimeoutError::Timeout) => {}
             Err(RecvTimeoutError::Disconnected) => {
-                flush(&mut batcher, &engine, &buckets, &mut metrics);
+                flush(&mut batcher, &backend, &mut metrics);
                 return;
             }
         }
@@ -170,38 +271,72 @@ fn service_loop(cfg: ServiceConfig, rx: Receiver<Msg>) {
         // 2. launch every ready group
         let now = Instant::now();
         while let Some(group) = batcher.pop_ready(now) {
-            execute_group(group, &engine, &buckets, &mut metrics);
+            execute_group(group, &backend, &mut metrics);
         }
     }
 }
 
+fn snapshot(metrics: &mut Metrics, backend: &Backend) -> MetricsSnapshot {
+    metrics.planner = backend.planner_stats();
+    metrics.snapshot()
+}
+
 fn flush(
     batcher: &mut Batcher<SyncSender<Result<Tensor, String>>>,
-    engine: &FusedEngine,
-    buckets: &[usize],
+    backend: &Backend,
     metrics: &mut Metrics,
 ) {
     for group in batcher.drain_all() {
-        execute_group(group, engine, buckets, metrics);
+        execute_group(group, backend, metrics);
     }
 }
 
-/// Execute one same-signature group as an HF-batched launch: pad the stack to
-/// a bucket, run, slice replies back out.
+fn observe_launch(metrics: &mut Metrics, backend: &Backend) {
+    metrics.launches += backend.last_launches() as u64;
+    if backend.last_was_fallback() {
+        metrics.unfused_fallbacks += 1;
+    }
+}
+
+/// Execute one same-signature group as an HF-batched launch: stack the items
+/// into a bucket-sized batch (one allocation, one copy per item), run, slice
+/// replies back out.
 fn execute_group(
     group: Vec<PendingRequest<SyncSender<Result<Tensor, String>>>>,
-    engine: &FusedEngine,
-    buckets: &[usize],
+    backend: &Backend,
     metrics: &mut Metrics,
 ) {
+    // reject malformed items up front: the batcher groups by pipeline
+    // signature only, so one wrong-dtype/shape item would otherwise poison
+    // (or panic) the stacked launch for the whole group
+    let proto_dtin = group[0].pipeline.dtin;
+    let mut item_shape_want = vec![1usize];
+    item_shape_want.extend_from_slice(&group[0].pipeline.shape);
+    let (group, malformed): (Vec<_>, Vec<_>) = group.into_iter().partition(|r| {
+        r.item.dtype() == proto_dtin && r.item.shape() == item_shape_want.as_slice()
+    });
+    for req in &malformed {
+        metrics.failed += 1;
+        let _ = req.reply.send(Err(format!(
+            "item dtype {} shape {:?} does not match pipeline ({} {:?})",
+            req.item.dtype(),
+            req.item.shape(),
+            proto_dtin,
+            item_shape_want
+        )));
+    }
+    if group.is_empty() {
+        return;
+    }
+
     let m = group.len();
     let proto = &group[0].pipeline;
-    // pick a bucket the planner can actually serve: prefer the smallest AOT
+    // pick a bucket the backend can actually serve: prefer the smallest AOT
     // bucket >= m, then the exact group size; fall back to per-item launches
     // when only b=1 artifacts exist for this stream
     let mut batched = None;
     let mut candidates = vec![m];
-    if let Some(b) = hfusion::single_bucket(m, buckets) {
+    if let Some(b) = hfusion::single_bucket(m, backend.buckets()) {
         candidates.insert(0, b);
     }
     for bucket in candidates {
@@ -213,7 +348,7 @@ fn execute_group(
             proto.dtout,
         )
         .expect("group pipeline revalidation");
-        if engine.plan_for(&cand).is_ok() {
+        if backend.covers(&cand) {
             batched = Some((bucket, cand));
             break;
         }
@@ -221,9 +356,9 @@ fn execute_group(
     let Some((bucket, batched)) = batched else {
         // per-item fallback: still correct, just no HF for this stream
         for req in &group {
-            match engine.run(&req.pipeline, &req.item) {
+            match backend.run(&req.pipeline, &req.item) {
                 Ok(t) => {
-                    metrics.launches += engine.last_launches() as u64;
+                    observe_launch(metrics, backend);
                     metrics.batched_items += 1;
                     metrics.observe_latency(req.enqueued.elapsed());
                     let _ = req.reply.send(Ok(t));
@@ -237,16 +372,14 @@ fn execute_group(
         return;
     };
 
-    // stack items (+ replicate the last item into pad planes)
-    let mut parts: Vec<Tensor> = group.iter().map(|r| r.item.clone()).collect();
-    for _ in m..bucket {
-        parts.push(parts[m - 1].clone());
-    }
-    let input = concat_batch(&parts, &proto.shape);
+    // stack items into the batch buffer directly (pad planes replicate the
+    // last item) — no per-item clone + re-concat copy
+    let items: Vec<&Tensor> = group.iter().map(|r| &r.item).collect();
+    let input = stack_batch(&items, bucket, &proto.shape);
 
-    match engine.run(&batched, &input) {
+    match backend.run(&batched, &input) {
         Ok(out) => {
-            metrics.launches += engine.last_launches() as u64;
+            observe_launch(metrics, backend);
             metrics.batched_items += m as u64;
             metrics.padded_planes += (bucket - m) as u64;
             let item_elems: usize = out.len() / bucket;

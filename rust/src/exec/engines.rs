@@ -1,12 +1,12 @@
 //! Engine implementations.
 
-use std::cell::RefCell;
+use std::cell::{Cell, RefCell};
 use std::collections::HashMap;
 use std::rc::Rc;
 
 use anyhow::{bail, Context, Result};
 
-use crate::fusion::{plan_pipeline, unfused_plan, FusionPlan, PlanInputs};
+use crate::fusion::{plan_pipeline, unfused_plan, FusionPlan, PlanInputs, PlannerStats};
 use crate::ops::{IOp, Pipeline, Signature};
 use crate::runtime::{ExecGraph, Executor, Registry};
 use crate::tensor::Tensor;
@@ -46,6 +46,14 @@ pub struct FusedEngine {
     plan_cache: RefCell<HashMap<Signature, FusionPlan>>,
     variant: String,
     last: RefCell<usize>,
+    /// Lazily-built per-op fallback engine, shared across fallback runs
+    /// (building one per call re-created an Executor + allocations on the
+    /// hot path).
+    unfused_fallback: RefCell<Option<Rc<UnfusedEngine>>>,
+    /// Per-RUN tier counts: how the engine's traffic was actually served
+    /// (exposed through coordinator metrics as VF coverage).
+    stats: RefCell<PlannerStats>,
+    last_fallback: Cell<bool>,
 }
 
 impl FusedEngine {
@@ -62,6 +70,9 @@ impl FusedEngine {
             plan_cache: RefCell::new(HashMap::new()),
             variant: variant.to_string(),
             last: RefCell::new(0),
+            unfused_fallback: RefCell::new(None),
+            stats: RefCell::new(PlannerStats::default()),
+            last_fallback: Cell::new(false),
         }
     }
 
@@ -82,6 +93,22 @@ impl FusedEngine {
     pub fn registry(&self) -> Rc<Registry> {
         self.reg.clone()
     }
+
+    /// The shared per-op fallback engine (built on first fallback run).
+    fn fallback_engine(&self) -> Rc<UnfusedEngine> {
+        let mut slot = self.unfused_fallback.borrow_mut();
+        slot.get_or_insert_with(|| Rc::new(UnfusedEngine::new(self.reg.clone()))).clone()
+    }
+
+    /// Cumulative per-run tier counts (VF coverage of the served traffic).
+    pub fn planner_stats(&self) -> PlannerStats {
+        self.stats.borrow().clone()
+    }
+
+    /// True if the most recent `run` took the per-op fallback path.
+    pub fn last_was_fallback(&self) -> bool {
+        self.last_fallback.get()
+    }
 }
 
 impl Engine for FusedEngine {
@@ -92,7 +119,8 @@ impl Engine for FusedEngine {
     fn run(&self, p: &Pipeline, input: &Tensor) -> Result<Tensor> {
         let plan = self.plan_for(p)?;
         *self.last.borrow_mut() = plan.launches();
-        match &plan {
+        self.last_fallback.set(matches!(plan, FusionPlan::Unfused { .. }));
+        let result = match &plan {
             FusionPlan::Exact { artifact } => {
                 let params = PlanInputs::chain_params(p);
                 self.exec.run(artifact, &[input.clone(), params])
@@ -108,9 +136,23 @@ impl Engine for FusedEngine {
             }
             FusionPlan::Unfused { .. } => {
                 // planner had no fused coverage; run the per-op fallback
-                UnfusedEngine::new(self.reg.clone()).run(p, input)
+                // (cached: building an engine per call cost an Executor +
+                // allocations every time)
+                self.fallback_engine().run(p, input)
+            }
+        };
+        // tally tiers only for runs that actually served traffic, so
+        // fused-coverage metrics never count errored launches
+        if result.is_ok() {
+            let mut st = self.stats.borrow_mut();
+            match &plan {
+                FusionPlan::Exact { .. } => st.exact += 1,
+                FusionPlan::StaticLoop { .. } => st.staticloop += 1,
+                FusionPlan::Interp { .. } => st.interp += 1,
+                FusionPlan::Unfused { .. } => st.unfused += 1,
             }
         }
+        result
     }
 
     fn last_launches(&self) -> usize {
@@ -227,6 +269,46 @@ pub fn concat_batch(parts: &[Tensor], shape: &[usize]) -> Tensor {
         I32(_) => cat!(I32, from_i32, i32),
         F32(_) => cat!(F32, from_f32, f32),
         F64(_) => cat!(F64, from_f64, f64),
+    }
+}
+
+/// Stack `items` (each `[1, *shape]`) into one `[bucket, *shape]` batch with
+/// a SINGLE allocation and one copy per item, replicating the last item into
+/// the `bucket - items.len()` pad planes. This is the coordinator's
+/// group-stacking hot path: the clone-each-item-then-`concat_batch` pattern
+/// it replaces copied every plane twice and allocated per item.
+pub fn stack_batch(items: &[&Tensor], bucket: usize, shape: &[usize]) -> Tensor {
+    assert!(!items.is_empty(), "stack_batch needs at least one item");
+    assert!(bucket >= items.len(), "bucket {bucket} < items {}", items.len());
+    let mut full_shape = vec![bucket];
+    full_shape.extend_from_slice(shape);
+    use crate::tensor::TensorData::*;
+    macro_rules! stack {
+        ($variant:ident, $t:ty) => {{
+            let item_len = items[0].len();
+            let mut v: Vec<$t> = Vec::with_capacity(bucket * item_len);
+            for it in items {
+                match it.data() {
+                    $variant(d) => v.extend_from_slice(d),
+                    _ => panic!("mixed dtypes in stack_batch"),
+                }
+            }
+            let last = match items[items.len() - 1].data() {
+                $variant(d) => d,
+                _ => unreachable!("dtype checked above"),
+            };
+            for _ in items.len()..bucket {
+                v.extend_from_slice(last);
+            }
+            Tensor::from_data($variant(v), &full_shape)
+        }};
+    }
+    match items[0].data() {
+        U8(_) => stack!(U8, u8),
+        U16(_) => stack!(U16, u16),
+        I32(_) => stack!(I32, i32),
+        F32(_) => stack!(F32, f32),
+        F64(_) => stack!(F64, f64),
     }
 }
 

@@ -1,0 +1,503 @@
+//! HostFusedEngine — vertical fusion on the CPU: ONE memory pass per run.
+//!
+//! This is the backend that runs everywhere (no PJRT, no artifacts). It
+//! reproduces the paper's fusion story on the host: where the op-at-a-time
+//! reference ([`crate::hostref::run_pipeline`]) widens the whole buffer to
+//! f64 and sweeps it once per op (N reads + N writes of DRAM-resident
+//! intermediates), this engine reads each element once, folds the entire op
+//! chain through a register-resident accumulator, and writes each output
+//! element once — the CPU analog of keeping intermediates in GPU registers.
+//! The batch dimension is chunked across OS threads, the host analog of
+//! Horizontal Fusion filling the GPU with independent planes.
+//!
+//! Loops are monomorphized per (input dtype, output dtype, compute domain):
+//! an f32 chain never touches f64, a u8→f32 normalization chain reads bytes
+//! and writes floats with no whole-buffer widening step. Numerics contract
+//! (enforced by `rust/tests/host_fused_props.rs`): bit-compatible with the
+//! oracle on every f64-accumulated path — which includes ALL integer outputs
+//! — and within float epsilon on the f32 fast path.
+
+use std::cell::{Cell, RefCell};
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use anyhow::{ensure, Result};
+
+use crate::fusion::{HostAccum, HostPlan};
+use crate::ops::{Opcode, Pipeline, ScalarOp, Signature};
+use crate::tensor::{Tensor, TensorData};
+
+use super::Engine;
+
+/// Below this many total elements a run stays single-threaded: thread spawn
+/// costs tens of microseconds, which dwarfs small pipelines.
+const MIN_ELEMS_PER_THREAD: usize = 32 * 1024;
+
+/// The host vertical-fusion engine. Plans are cached per [`Signature`]
+/// (params are bound per run, mirroring [`super::FusedEngine::plan_for`]).
+pub struct HostFusedEngine {
+    plans: RefCell<HashMap<Signature, Rc<HostPlan>>>,
+    threads: usize,
+    runs: Cell<usize>,
+}
+
+impl HostFusedEngine {
+    /// Engine with one worker per available core.
+    pub fn new() -> HostFusedEngine {
+        let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        Self::with_threads(threads)
+    }
+
+    /// Engine with a fixed worker count (1 = the pure VF ablation: single
+    /// pass, no batch-dimension parallelism).
+    pub fn with_threads(threads: usize) -> HostFusedEngine {
+        HostFusedEngine {
+            plans: RefCell::new(HashMap::new()),
+            threads: threads.max(1),
+            runs: Cell::new(0),
+        }
+    }
+
+    /// Plan lookup/compile, cached per signature.
+    pub fn plan_for(&self, p: &Pipeline) -> Rc<HostPlan> {
+        let sig = Signature::of(p);
+        if let Some(plan) = self.plans.borrow().get(&sig) {
+            return plan.clone();
+        }
+        let plan = Rc::new(HostPlan::compile(p));
+        self.plans.borrow_mut().insert(sig, plan.clone());
+        plan
+    }
+
+    pub fn plan_cache_len(&self) -> usize {
+        self.plans.borrow().len()
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Completed runs (each is exactly one fused memory pass).
+    pub fn runs(&self) -> usize {
+        self.runs.get()
+    }
+
+    fn check_input(p: &Pipeline, input: &Tensor) -> Result<()> {
+        ensure!(
+            input.dtype() == p.dtin,
+            "host_fused: input dtype {} != pipeline dtin {}",
+            input.dtype(),
+            p.dtin
+        );
+        let mut want = vec![p.batch];
+        want.extend_from_slice(&p.shape);
+        ensure!(
+            input.shape() == want.as_slice(),
+            "host_fused: input shape {:?} != pipeline {:?}",
+            input.shape(),
+            want
+        );
+        Ok(())
+    }
+}
+
+impl Default for HostFusedEngine {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Engine for HostFusedEngine {
+    fn name(&self) -> &'static str {
+        "host_fused"
+    }
+
+    fn run(&self, p: &Pipeline, input: &Tensor) -> Result<Tensor> {
+        Self::check_input(p, input)?;
+        let plan = self.plan_for(p);
+        let mut out_shape = vec![p.batch];
+        out_shape.extend_from_slice(&p.shape);
+        let out = execute_plan(&plan, p, input, self.threads, &out_shape);
+        self.runs.set(self.runs.get() + 1);
+        Ok(out)
+    }
+
+    /// Always 1: the defining property of the fused plan.
+    fn last_launches(&self) -> usize {
+        1
+    }
+}
+
+// ---------------------------------------------------------------------------
+// monomorphized execution
+
+/// Lossless per-element read into the f32 compute domain. Only dtypes whose
+/// every value is exactly representable in f32 implement this.
+trait ReadF32: Copy + Sync {
+    fn to_f32(self) -> f32;
+}
+
+impl ReadF32 for u8 {
+    #[inline(always)]
+    fn to_f32(self) -> f32 {
+        self as f32
+    }
+}
+impl ReadF32 for u16 {
+    #[inline(always)]
+    fn to_f32(self) -> f32 {
+        self as f32
+    }
+}
+impl ReadF32 for f32 {
+    #[inline(always)]
+    fn to_f32(self) -> f32 {
+        self
+    }
+}
+
+/// Per-element read into the f64 compute domain (all dtypes, lossless).
+trait ReadF64: Copy + Sync {
+    fn to_f64(self) -> f64;
+}
+
+macro_rules! read_f64 {
+    ($($t:ty),*) => {$(
+        impl ReadF64 for $t {
+            #[inline(always)]
+            fn to_f64(self) -> f64 {
+                self as f64
+            }
+        }
+    )*};
+}
+read_f64!(u8, u16, i32, f32, f64);
+
+/// Per-element write from the f64 compute domain with the EXACT boundary
+/// semantics of [`Tensor::from_f64_cast`] (round + saturate for integer
+/// image types) — same expressions, so bit-compatibility is by construction.
+trait WriteF64: Copy + Send + Default {
+    fn from_f64(v: f64) -> Self;
+}
+
+impl WriteF64 for u8 {
+    #[inline(always)]
+    fn from_f64(v: f64) -> u8 {
+        v.round().clamp(0.0, 255.0) as u8
+    }
+}
+impl WriteF64 for u16 {
+    #[inline(always)]
+    fn from_f64(v: f64) -> u16 {
+        v.round().clamp(0.0, 65535.0) as u16
+    }
+}
+impl WriteF64 for i32 {
+    #[inline(always)]
+    fn from_f64(v: f64) -> i32 {
+        v.round() as i32
+    }
+}
+impl WriteF64 for f32 {
+    #[inline(always)]
+    fn from_f64(v: f64) -> f32 {
+        v as f32
+    }
+}
+impl WriteF64 for f64 {
+    #[inline(always)]
+    fn from_f64(v: f64) -> f64 {
+        v
+    }
+}
+
+/// Split `src`/`dst` into per-thread chunks (boundaries aligned to `group`
+/// elements so lane-structured pixels never straddle threads) and run `f`
+/// on each. `f` receives the chunk's global element offset — results are
+/// bitwise identical regardless of the thread count because the work is a
+/// pure element-group map.
+fn par_chunks<S, W>(
+    threads: usize,
+    group: usize,
+    src: &[S],
+    dst: &mut [W],
+    f: impl Fn(usize, &[S], &mut [W]) + Sync,
+) where
+    S: Sync,
+    W: Send,
+{
+    let n = src.len();
+    debug_assert_eq!(n, dst.len());
+    let threads = threads.min(n / MIN_ELEMS_PER_THREAD).max(1);
+    if threads <= 1 {
+        f(0, src, dst);
+        return;
+    }
+    let per = n.div_ceil(threads).div_ceil(group) * group;
+    std::thread::scope(|scope| {
+        let f = &f;
+        let mut rest: &mut [W] = dst;
+        let mut base = 0usize;
+        for chunk in src.chunks(per) {
+            let (head, tail) = rest.split_at_mut(chunk.len());
+            rest = tail;
+            let start = base;
+            scope.spawn(move || f(start, chunk, head));
+            base += chunk.len();
+        }
+    });
+}
+
+/// The f32 fast path: fold an all-scalar chain through an f32 register.
+fn chain_pass_f32<S: ReadF32>(
+    chain: &[(Opcode, f32)],
+    threads: usize,
+    src: &[S],
+    dst: &mut [f32],
+) {
+    par_chunks(threads, 1, src, dst, |_base, s, d| {
+        for (out, &x) in d.iter_mut().zip(s) {
+            let mut acc = x.to_f32();
+            for &(op, param) in chain {
+                acc = op.apply_f32(acc, param);
+            }
+            *out = acc;
+        }
+    });
+}
+
+/// The oracle-exact chain path: fold through an f64 register, write with
+/// boundary semantics.
+fn chain_pass_f64<S: ReadF64, W: WriteF64>(
+    chain: &[(Opcode, f64)],
+    threads: usize,
+    src: &[S],
+    dst: &mut [W],
+) {
+    par_chunks(threads, 1, src, dst, |_base, s, d| {
+        for (out, &x) in d.iter_mut().zip(s) {
+            let mut acc = x.to_f64();
+            for &(op, param) in chain {
+                acc = op.apply(acc, param);
+            }
+            *out = W::from_f64(acc);
+        }
+    });
+}
+
+/// The general path for lane-structured bodies (ComputeC3 / CvtColor): each
+/// pixel group lives in a 3-wide register block while the whole body runs.
+fn group_pass<S: ReadF64, W: WriteF64>(
+    body: &[ScalarOp],
+    group: usize,
+    threads: usize,
+    src: &[S],
+    dst: &mut [W],
+) {
+    par_chunks(threads, group, src, dst, |base, s, d| {
+        let mut buf = [0f64; 3];
+        for (gi, (sg, dg)) in s.chunks(group).zip(d.chunks_mut(group)).enumerate() {
+            let len = sg.len();
+            for (b, &x) in buf.iter_mut().zip(sg) {
+                *b = x.to_f64();
+            }
+            let gbase = base + gi * group;
+            for op in body {
+                op.apply_slice_f64(&mut buf[..len], gbase);
+            }
+            for (out, &b) in dg.iter_mut().zip(&buf[..len]) {
+                *out = W::from_f64(b);
+            }
+        }
+    });
+}
+
+/// Execute one fused pass. Dispatches to the monomorphization selected by
+/// the plan's (input dtype, output dtype, accumulator) triple.
+fn execute_plan(
+    plan: &HostPlan,
+    p: &Pipeline,
+    input: &Tensor,
+    threads: usize,
+    out_shape: &[usize],
+) -> Tensor {
+    use TensorData::*;
+
+    if plan.accum() == HostAccum::F32 {
+        let chain: Vec<(Opcode, f32)> = plan
+            .bind_chain(p)
+            .expect("F32 accum implies an all-scalar chain")
+            .into_iter()
+            .map(|(op, param)| (op, param as f32))
+            .collect();
+        let mut dst = vec![0f32; input.len()];
+        match input.data() {
+            U8(v) => chain_pass_f32(&chain, threads, v, &mut dst),
+            U16(v) => chain_pass_f32(&chain, threads, v, &mut dst),
+            F32(v) => chain_pass_f32(&chain, threads, v, &mut dst),
+            _ => unreachable!("F32 accum is only planned for u8/u16/f32 inputs"),
+        }
+        return Tensor::from_data(F32(dst), out_shape);
+    }
+
+    // f64 accumulator: oracle-exact on every dtype pair
+    macro_rules! to_out {
+        ($src:expr) => {
+            match plan.dtout() {
+                crate::tensor::DType::U8 => from_to!($src, u8, U8),
+                crate::tensor::DType::U16 => from_to!($src, u16, U16),
+                crate::tensor::DType::I32 => from_to!($src, i32, I32),
+                crate::tensor::DType::F32 => from_to!($src, f32, F32),
+                crate::tensor::DType::F64 => from_to!($src, f64, F64),
+            }
+        };
+    }
+    macro_rules! from_to {
+        ($src:expr, $w:ty, $variant:ident) => {{
+            let mut dst: Vec<$w> = vec![<$w>::default(); $src.len()];
+            if let Some(chain) = plan.bind_chain(p) {
+                chain_pass_f64(&chain, threads, $src, &mut dst);
+            } else {
+                let body = plan.bind_body(p);
+                group_pass(&body, plan.group(), threads, $src, &mut dst);
+            }
+            Tensor::from_data($variant(dst), out_shape)
+        }};
+    }
+    match input.data() {
+        U8(v) => to_out!(v),
+        U16(v) => to_out!(v),
+        I32(v) => to_out!(v),
+        F32(v) => to_out!(v),
+        F64(v) => to_out!(v),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hostref;
+    use crate::ops::{IOp, MemOp};
+    use crate::proplite::Rng;
+    use crate::tensor::DType;
+
+    fn assert_close_f64(got: &Tensor, want: &Tensor, tol: f64) {
+        assert_eq!(got.shape(), want.shape());
+        assert_eq!(got.dtype(), want.dtype());
+        for (i, (a, b)) in got.to_f64_vec().iter().zip(want.to_f64_vec()).enumerate() {
+            assert!((a - b).abs() <= tol + tol * b.abs(), "elem {i}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn f32_chain_matches_oracle_within_epsilon() {
+        let p = Pipeline::from_opcodes(
+            &[(Opcode::Nop, 0.0), (Opcode::Mul, 0.5), (Opcode::Sub, 3.0), (Opcode::Div, 1.7)],
+            &[60, 120],
+            4,
+            DType::F32,
+            DType::F32,
+        )
+        .unwrap();
+        let mut rng = Rng::new(11);
+        let x = Tensor::from_f32(&rng.vec_f32(4 * 7200, -4.0, 4.0), &[4, 60, 120]);
+        let eng = HostFusedEngine::new();
+        let got = eng.run(&p, &x).unwrap();
+        assert_close_f64(&got, &hostref::run_pipeline(&p, &x), 1e-5);
+        assert_eq!(eng.last_launches(), 1);
+    }
+
+    #[test]
+    fn integer_paths_are_bit_compatible_with_oracle() {
+        let mut rng = Rng::new(5);
+        for (dtin, dtout) in [
+            (DType::U8, DType::U8),
+            (DType::U8, DType::U16),
+            (DType::U16, DType::U8),
+            (DType::I32, DType::I32),
+            (DType::F64, DType::U8),
+        ] {
+            let p = Pipeline::from_opcodes(
+                &[(Opcode::Mul, 1.7), (Opcode::Add, 11.0), (Opcode::Sub, 4.5)],
+                &[9, 7],
+                2,
+                dtin,
+                dtout,
+            )
+            .unwrap();
+            let vals: Vec<f64> = (0..126).map(|_| rng.f64(0.0, 300.0)).collect();
+            let x = Tensor::from_f64_cast(&vals, &[2, 9, 7], dtin);
+            let got = HostFusedEngine::new().run(&p, &x).unwrap();
+            assert_eq!(got, hostref::run_pipeline(&p, &x), "{dtin}->{dtout}");
+        }
+    }
+
+    #[test]
+    fn lane_structured_pipeline_matches_oracle_exactly() {
+        // cvtcolor + per-channel math, including a ragged (non-multiple-of-3)
+        // tail — the oracle's global-index lane semantics must be reproduced
+        let p = Pipeline::new(
+            vec![
+                IOp::Mem(MemOp::Read { dtype: DType::F64 }),
+                IOp::CvtColor,
+                IOp::ComputeC3 { op: Opcode::Mul, param: [2.0, 3.0, 4.0] },
+                IOp::compute(Opcode::Add, 1.0),
+                IOp::Mem(MemOp::Write { dtype: DType::F64 }),
+            ],
+            vec![5, 2],
+            2,
+            DType::F64,
+            DType::F64,
+        )
+        .unwrap();
+        let mut rng = Rng::new(3);
+        let vals: Vec<f64> = (0..20).map(|_| rng.f64(-5.0, 5.0)).collect();
+        let x = Tensor::from_f64(&vals, &[2, 5, 2]);
+        let got = HostFusedEngine::new().run(&p, &x).unwrap();
+        assert_eq!(got, hostref::run_pipeline(&p, &x));
+    }
+
+    #[test]
+    fn thread_count_never_changes_results() {
+        let p = Pipeline::from_opcodes(
+            &[(Opcode::Mul, 0.999), (Opcode::Add, 0.001), (Opcode::Sqrt, 0.0)],
+            &[257, 129], // odd sizes: ragged chunk boundaries
+            3,
+            DType::F32,
+            DType::F32,
+        )
+        .unwrap();
+        let mut rng = Rng::new(29);
+        let x = Tensor::from_f32(&rng.vec_f32(3 * 257 * 129, -2.0, 2.0), &[3, 257, 129]);
+        let want = HostFusedEngine::with_threads(1).run(&p, &x).unwrap();
+        for threads in [2, 3, 8] {
+            let got = HostFusedEngine::with_threads(threads).run(&p, &x).unwrap();
+            assert_eq!(got, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn plans_are_cached_per_signature_and_rebound_per_params() {
+        let eng = HostFusedEngine::new();
+        let a = Pipeline::from_opcodes(&[(Opcode::Mul, 2.0)], &[8], 1, DType::F32, DType::F32)
+            .unwrap();
+        let b = Pipeline::from_opcodes(&[(Opcode::Mul, 5.0)], &[8], 1, DType::F32, DType::F32)
+            .unwrap();
+        let x = Tensor::from_f32(&[1.0; 8], &[1, 8]);
+        assert_eq!(eng.run(&a, &x).unwrap().as_f32().unwrap(), &[2.0; 8]);
+        assert_eq!(eng.run(&b, &x).unwrap().as_f32().unwrap(), &[5.0; 8]);
+        assert_eq!(eng.plan_cache_len(), 1, "same signature, one plan");
+        assert_eq!(eng.runs(), 2);
+    }
+
+    #[test]
+    fn input_mismatches_are_rejected() {
+        let p = Pipeline::from_opcodes(&[(Opcode::Mul, 2.0)], &[8], 1, DType::F32, DType::F32)
+            .unwrap();
+        let eng = HostFusedEngine::new();
+        let wrong_dtype = Tensor::from_u8(&[0; 8], &[1, 8]);
+        assert!(eng.run(&p, &wrong_dtype).is_err());
+        let wrong_shape = Tensor::from_f32(&[0.0; 16], &[2, 8]);
+        assert!(eng.run(&p, &wrong_shape).is_err());
+    }
+}

@@ -1,4 +1,4 @@
-//! Execution engines: the three ways a pipeline runs in the experiments.
+//! Execution engines: the four ways a pipeline runs in the experiments.
 //!
 //! * [`FusedEngine`] — the FKL path: the planner maps the pipeline onto ONE
 //!   fused artifact launch (VF; batched artifacts add HF).
@@ -7,10 +7,18 @@
 //!   host-side parameter work (paper Fig. 3A / Fig. 25 top).
 //! * [`GraphEngine`] — the CUDA Graphs analog: same per-op launches, but the
 //!   chain is recorded once and replayed without per-step host work.
+//! * [`HostFusedEngine`] — vertical fusion compiled for the HOST (DESIGN.md
+//!   §3.5): one memory pass with register-resident intermediates, batch
+//!   chunked across threads; runs everywhere, no PJRT or artifacts required.
 //!
-//! All three implement [`Engine`] and must agree numerically with
-//! [`crate::hostref`] (enforced by `rust/tests/engines_equivalence.rs`).
+//! All implement [`Engine`] and must agree numerically with
+//! [`crate::hostref`] (enforced by `rust/tests/engines_equivalence.rs` and
+//! `rust/tests/host_fused_props.rs`).
 
 mod engines;
+mod host_fused;
 
-pub use engines::{concat_batch, slice_batch, Engine, FusedEngine, GraphEngine, UnfusedEngine};
+pub use engines::{
+    concat_batch, slice_batch, stack_batch, Engine, FusedEngine, GraphEngine, UnfusedEngine,
+};
+pub use host_fused::HostFusedEngine;

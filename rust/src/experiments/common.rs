@@ -23,12 +23,24 @@ pub struct XpCtx {
     pub fast: bool,
 }
 
+/// Measurement policy shared by every experiment entry point (registry-backed
+/// [`XpCtx`] and the artifact-free [`super::run_host`] path must measure the
+/// same way or their tables are not comparable).
+pub fn measure_policy(fast: bool) -> (usize, Duration) {
+    if fast {
+        (10, Duration::from_millis(300))
+    } else {
+        (30, Duration::from_secs(2))
+    }
+}
+
 impl XpCtx {
     pub fn new(fast: bool) -> Result<XpCtx> {
+        let (reps, budget) = measure_policy(fast);
         Ok(XpCtx {
             ctx: Context::new().context("experiments need artifacts; run `make artifacts`")?,
-            reps: if fast { 10 } else { 30 },
-            budget: if fast { Duration::from_millis(300) } else { Duration::from_secs(2) },
+            reps,
+            budget,
             fast,
         })
     }

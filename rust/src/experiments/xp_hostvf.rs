@@ -1,0 +1,77 @@
+//! Host-VF ablation — the paper's vertical fusion claim isolated on the CPU.
+//!
+//! Three arms over the same chain, 1080p f32 frame:
+//!
+//! * op-at-a-time (hostref: one whole-buffer sweep per op);
+//! * fused single pass, 1 thread (pure VF: register-resident intermediates);
+//! * fused single pass, all threads (VF + the HF analog).
+//!
+//! Unlike every other experiment this one needs NO artifacts: it runs on any
+//! machine (`xp hostvf`) and anchors the fused-engine speedups the
+//! `host_fusion_bench` acceptance criterion enforces.
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::bench::{time_fn, Table};
+use crate::exec::{Engine, HostFusedEngine};
+use crate::hostref;
+use crate::ops::{Opcode, Pipeline};
+use crate::proplite::Rng;
+use crate::tensor::{DType, Tensor};
+
+use super::common::{fx, ms, XpCtx};
+
+pub fn run(xp: &XpCtx) -> Result<Vec<Table>> {
+    run_with(xp.reps, xp.budget, xp.fast)
+}
+
+/// Artifact-free entry point (`xp hostvf` works without `make artifacts`).
+pub fn run_with(reps: usize, budget: Duration, fast: bool) -> Result<Vec<Table>> {
+    let eng_1t = HostFusedEngine::with_threads(1);
+    let eng_mt = HostFusedEngine::new();
+    let mut rng = Rng::new(7);
+    let (h, w) = (1080usize, 1920usize);
+    let x = Tensor::from_f32(&rng.vec_f32(h * w, -2.0, 2.0), &[1, h, w]);
+
+    let mut t = Table::new(
+        "Host-VF ablation — single fused pass vs op-at-a-time (1080p f32)",
+        &[
+            "chain_len",
+            "op_at_a_time_ms",
+            "fused_1t_ms",
+            "fused_mt_ms",
+            "vf_speedup",
+            "vf_hf_speedup",
+        ],
+    );
+    t.note(format!(
+        "fused_mt uses {} threads; vf_speedup = op-at-a-time / fused_1t (pure register-residency effect)",
+        eng_mt.threads()
+    ));
+
+    let lens: &[usize] = if fast { &[1, 4, 16] } else { &[1, 2, 4, 8, 12, 16] };
+    for &k in lens {
+        let chain: Vec<(Opcode, f64)> = (0..k)
+            .map(|i| match i % 3 {
+                0 => (Opcode::Mul, 0.999),
+                1 => (Opcode::Add, 0.001),
+                _ => (Opcode::Sub, 0.0005),
+            })
+            .collect();
+        let p = Pipeline::from_opcodes(&chain, &[h, w], 1, DType::F32, DType::F32)?;
+        let base = time_fn(reps, budget, || hostref::run_pipeline(&p, &x));
+        let f1 = time_fn(reps, budget, || eng_1t.run(&p, &x).unwrap());
+        let fm = time_fn(reps, budget, || eng_mt.run(&p, &x).unwrap());
+        t.row(vec![
+            k.to_string(),
+            ms(base.mean_s),
+            ms(f1.mean_s),
+            ms(fm.mean_s),
+            fx(base.mean_s / f1.mean_s),
+            fx(base.mean_s / fm.mean_s),
+        ]);
+    }
+    Ok(vec![t])
+}

@@ -1,0 +1,230 @@
+//! HostPlan — the host-engine analog of [`FusionPlan`](super::FusionPlan).
+//!
+//! Where `plan_pipeline` maps a pipeline onto pre-lowered AOT artifacts, the
+//! host planner "lowers" it directly: once per [`Signature`] it decides the
+//! fused loop's shape — element-group width, compute domain (f32 registers
+//! for f32-out chains, f64 wherever bit-exactness vs the oracle is promised)
+//! and whether the body is a dense scalar chain the monomorphized loops can
+//! fold without per-element shape dispatch. Exactly like artifact plans, a
+//! `HostPlan` is parameter-AGNOSTIC (the `Signature` cache key ignores
+//! params); the concrete op parameters are bound at run time by
+//! [`HostPlan::bind_body`] / [`HostPlan::bind_chain`] — the host analog of
+//! [`PlanInputs::chain_params`](super::PlanInputs::chain_params) building the
+//! params tensor per launch.
+
+use crate::ops::{kernel, IOp, Opcode, Pipeline, ScalarOp, Signature};
+use crate::tensor::DType;
+
+/// Compute domain of the fused single-pass loop.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HostAccum {
+    /// Narrow fast path: intermediates live in f32 registers. Only chosen
+    /// when the oracle's f64 result is reproduced within float epsilon
+    /// (f32 output, exactly-representable input domain).
+    F32,
+    /// Oracle-exact path: intermediates in f64, bit-compatible with
+    /// [`crate::hostref::run_pipeline`] on every dtype.
+    F64,
+}
+
+/// A compiled host execution plan: one fused memory pass over the data.
+#[derive(Debug, Clone)]
+pub struct HostPlan {
+    sig: Signature,
+    group: usize,
+    accum: HostAccum,
+    is_chain: bool,
+    dtin: DType,
+    dtout: DType,
+    batch: usize,
+    item_elems: usize,
+}
+
+impl HostPlan {
+    /// Lower a validated pipeline's shape. Never fails: the host backend
+    /// covers the whole element-wise vocabulary (that is its point — it is
+    /// the engine that runs everywhere).
+    pub fn compile(p: &Pipeline) -> HostPlan {
+        let body = ScalarOp::lower_body(p.body())
+            .expect("validated pipeline has no interior memops");
+        let group = kernel::group_width(&body);
+        let is_chain = p.body().iter().all(|op| matches!(op, IOp::Compute { .. }));
+        let accum = if p.dtout == DType::F32
+            && matches!(p.dtin, DType::U8 | DType::U16 | DType::F32)
+            && is_chain
+        {
+            HostAccum::F32
+        } else {
+            HostAccum::F64
+        };
+        HostPlan {
+            sig: Signature::of(p),
+            group,
+            accum,
+            is_chain,
+            dtin: p.dtin,
+            dtout: p.dtout,
+            batch: p.batch,
+            item_elems: p.item_elems(),
+        }
+    }
+
+    /// Bind this run's parameters: the full lowered body, general path.
+    pub fn bind_body(&self, p: &Pipeline) -> Vec<ScalarOp> {
+        debug_assert_eq!(Signature::of(p), self.sig, "plan bound to a foreign pipeline");
+        ScalarOp::lower_body(p.body()).expect("validated pipeline has no interior memops")
+    }
+
+    /// Bind this run's parameters as a dense scalar chain (fast path);
+    /// `None` when the body is not all-scalar.
+    pub fn bind_chain(&self, p: &Pipeline) -> Option<Vec<(Opcode, f64)>> {
+        if !self.is_chain {
+            return None;
+        }
+        debug_assert_eq!(Signature::of(p), self.sig, "plan bound to a foreign pipeline");
+        p.body()
+            .iter()
+            .map(|op| match op {
+                IOp::Compute { op, param } => Some((*op, *param)),
+                _ => None,
+            })
+            .collect()
+    }
+
+    pub fn signature(&self) -> &Signature {
+        &self.sig
+    }
+
+    /// Element-group width (3 when lane-structured ops are present).
+    pub fn group(&self) -> usize {
+        self.group
+    }
+
+    pub fn accum(&self) -> HostAccum {
+        self.accum
+    }
+
+    /// True if the body is a dense all-scalar chain.
+    pub fn is_chain(&self) -> bool {
+        self.is_chain
+    }
+
+    pub fn dtin(&self) -> DType {
+        self.dtin
+    }
+
+    pub fn dtout(&self) -> DType {
+        self.dtout
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    pub fn item_elems(&self) -> usize {
+        self.item_elems
+    }
+
+    /// Total elements one run touches.
+    pub fn total_elems(&self) -> usize {
+        self.batch * self.item_elems
+    }
+
+    /// Bytes one fused pass moves (read + write) — the host analog of
+    /// [`Pipeline::fused_bytes`].
+    pub fn fused_bytes(&self) -> usize {
+        self.total_elems() * (self.dtin.size_bytes() + self.dtout.size_bytes())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::{IOp, Opcode, Pipeline};
+    use crate::tensor::DType;
+
+    fn chain_pipe(dtin: DType, dtout: DType) -> Pipeline {
+        Pipeline::from_opcodes(
+            &[(Opcode::Mul, 2.0), (Opcode::Add, 1.0)],
+            &[4, 4],
+            3,
+            dtin,
+            dtout,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn f32_out_chains_use_narrow_accum() {
+        for dtin in [DType::U8, DType::U16, DType::F32] {
+            let plan = HostPlan::compile(&chain_pipe(dtin, DType::F32));
+            assert_eq!(plan.accum(), HostAccum::F32, "{dtin}");
+            assert!(plan.is_chain());
+            assert_eq!(plan.group(), 1);
+        }
+    }
+
+    #[test]
+    fn exactness_paths_use_f64_accum() {
+        // integer outputs must be bit-compatible with the oracle; f64 and
+        // i32 inputs exceed f32's exact range
+        for (dtin, dtout) in [
+            (DType::U8, DType::U8),
+            (DType::F32, DType::U16),
+            (DType::F64, DType::F32),
+            (DType::I32, DType::F32),
+            (DType::F64, DType::F64),
+        ] {
+            let plan = HostPlan::compile(&chain_pipe(dtin, dtout));
+            assert_eq!(plan.accum(), HostAccum::F64, "{dtin}->{dtout}");
+        }
+    }
+
+    #[test]
+    fn binding_rebinds_fresh_params_per_run() {
+        // same signature, different params: one cached plan must serve both
+        let a = chain_pipe(DType::F32, DType::F32);
+        let b = Pipeline::from_opcodes(
+            &[(Opcode::Mul, 9.0), (Opcode::Add, -4.0)],
+            &[4, 4],
+            3,
+            DType::F32,
+            DType::F32,
+        )
+        .unwrap();
+        let plan = HostPlan::compile(&a);
+        assert_eq!(Signature::of(&b), *plan.signature());
+        assert_eq!(plan.bind_chain(&a).unwrap(), vec![(Opcode::Mul, 2.0), (Opcode::Add, 1.0)]);
+        assert_eq!(plan.bind_chain(&b).unwrap(), vec![(Opcode::Mul, 9.0), (Opcode::Add, -4.0)]);
+    }
+
+    #[test]
+    fn lane_structured_bodies_disable_chain_fast_path() {
+        let p = Pipeline::elementwise(
+            vec![
+                IOp::compute(Opcode::Mul, 2.0),
+                IOp::ComputeC3 { op: Opcode::Add, param: [1.0, 2.0, 3.0] },
+            ],
+            vec![2, 3],
+            1,
+            DType::F32,
+            DType::F32,
+        )
+        .unwrap();
+        let plan = HostPlan::compile(&p);
+        assert!(!plan.is_chain());
+        assert!(plan.bind_chain(&p).is_none());
+        assert_eq!(plan.bind_body(&p).len(), 2);
+        assert_eq!(plan.group(), 3);
+        assert_eq!(plan.accum(), HostAccum::F64, "group path stays oracle-exact");
+    }
+
+    #[test]
+    fn geometry_is_recorded() {
+        let plan = HostPlan::compile(&chain_pipe(DType::U8, DType::F32));
+        assert_eq!(plan.batch(), 3);
+        assert_eq!(plan.item_elems(), 16);
+        assert_eq!(plan.total_elems(), 48);
+        assert_eq!(plan.fused_bytes(), 48 * (1 + 4));
+    }
+}

@@ -19,9 +19,11 @@
 
 pub mod cost;
 pub mod hfusion;
+mod host_plan;
 pub mod memsave;
 mod plan;
 mod planner;
 
+pub use host_plan::{HostAccum, HostPlan};
 pub use plan::{FusionPlan, PlanInputs};
 pub use planner::{plan_pipeline, unfused_plan, PlanError, Planner, PlannerStats};

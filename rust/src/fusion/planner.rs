@@ -15,12 +15,25 @@ pub enum PlanError {
 
 /// Cumulative planner decisions (exposed as coordinator metrics and used by
 /// the tier-ablation bench).
-#[derive(Debug, Default, Clone)]
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
 pub struct PlannerStats {
     pub exact: usize,
     pub staticloop: usize,
     pub interp: usize,
     pub unfused: usize,
+    /// Runs served by the host fused engine (single-pass CPU backend).
+    pub host: usize,
+}
+
+impl PlannerStats {
+    /// Runs that kept intermediates fused (any tier but the per-op fallback).
+    pub fn fused_total(&self) -> usize {
+        self.exact + self.staticloop + self.interp + self.host
+    }
+
+    pub fn total(&self) -> usize {
+        self.fused_total() + self.unfused
+    }
 }
 
 /// Stateless planning with stat tracking.

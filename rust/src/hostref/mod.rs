@@ -1,41 +1,34 @@
 //! Host reference interpreter — pure-Rust semantics of every pipeline.
 //!
 //! This is the numerics oracle for the Rust integration tests (mirroring
-//! `kernels/ref.py` on the Python side): fused, unfused and graph engines
-//! must all agree with it. It is also the "CPU scalar" datum in experiment
-//! reports. Compute domain is f64 wide enough to cover both f32 and f64
-//! chains; integer boundaries saturate exactly like the kernels.
+//! `kernels/ref.py` on the Python side): fused, unfused, graph AND host-fused
+//! engines must all agree with it. It is also the "CPU scalar" / op-at-a-time
+//! datum in experiment reports. Compute domain is f64 wide enough to cover
+//! both f32 and f64 chains; integer boundaries saturate exactly like the
+//! kernels.
+//!
+//! Op semantics are NOT defined here: every sweep below goes through the
+//! shared [`ScalarOp`] table, the same code the single-pass
+//! [`HostFusedEngine`](crate::exec::HostFusedEngine) runs per element group —
+//! so the oracle and the fused loop cannot drift.
 
-use crate::ops::{IOp, Pipeline};
+use crate::ops::{Pipeline, ScalarOp};
 use crate::tensor::{DType, Rect, Tensor};
 
-/// Execute a validated element-wise pipeline on the host.
+fn lowered_body(p: &Pipeline) -> Vec<ScalarOp> {
+    ScalarOp::lower_body(p.body()).expect("validated pipeline has no interior memops")
+}
+
+/// Execute a validated element-wise pipeline on the host, one whole-buffer
+/// sweep per op (the op-at-a-time traffic pattern the fused engine removes).
 ///
 /// Note: f32 chains are evaluated in f64 here; tests compare with an epsilon
 /// that covers the double-rounding difference.
 pub fn run_pipeline(p: &Pipeline, input: &Tensor) -> Tensor {
+    let body = lowered_body(p);
     let mut vals = input.to_f64_vec();
-    for op in p.body() {
-        match op {
-            IOp::Compute { op, param } => {
-                for v in &mut vals {
-                    *v = op.apply(*v, *param);
-                }
-            }
-            IOp::ComputeC3 { op, param } => {
-                for (i, v) in vals.iter_mut().enumerate() {
-                    *v = op.apply(*v, param[i % 3] as f64);
-                }
-            }
-            IOp::CvtColor => {
-                for px in vals.chunks_mut(3) {
-                    if px.len() == 3 {
-                        px.swap(0, 2);
-                    }
-                }
-            }
-            IOp::Mem(_) => unreachable!("validated pipeline has no interior memops"),
-        }
+    for op in &body {
+        op.apply_slice_f64(&mut vals, 0);
     }
     let mut shape = vec![p.batch];
     shape.extend_from_slice(&p.shape);
@@ -44,13 +37,12 @@ pub fn run_pipeline(p: &Pipeline, input: &Tensor) -> Tensor {
 
 /// StaticLoop semantics: body applied `iters` times (one read, one write).
 pub fn run_staticloop(p: &Pipeline, input: &Tensor, iters: usize) -> Tensor {
+    let body = lowered_body(p);
     let mut vals = input.to_f64_vec();
     for _ in 0..iters {
-        for op in p.body() {
-            if let IOp::Compute { op, param } = op {
-                for v in &mut vals {
-                    *v = op.apply(*v, *param);
-                }
+        for op in &body {
+            if let ScalarOp::Scalar { .. } = op {
+                op.apply_slice_f64(&mut vals, 0);
             }
         }
     }
@@ -62,33 +54,15 @@ pub fn run_staticloop(p: &Pipeline, input: &Tensor, iters: usize) -> Tensor {
 /// UNFUSED semantics: each op is its own kernel, so integer dtypes saturate
 /// at EVERY step boundary (exactly like chaining OpenCV-CUDA 8U calls).
 pub fn run_unfused(p: &Pipeline, input: &Tensor) -> Tensor {
+    let body = lowered_body(p);
     let mut shape = vec![p.batch];
     shape.extend_from_slice(&p.shape);
     // step boundary dtype: dtout for all intermediates (the OpenCV pattern:
     // convertTo destination type first, then arithm in that type)
     let mut cur = input.clone();
-    for op in p.body() {
-        let vals: Vec<f64> = match op {
-            IOp::Compute { op, param } => {
-                cur.to_f64_vec().into_iter().map(|v| op.apply(v, *param)).collect()
-            }
-            IOp::ComputeC3 { op, param } => cur
-                .to_f64_vec()
-                .into_iter()
-                .enumerate()
-                .map(|(i, v)| op.apply(v, param[i % 3] as f64))
-                .collect(),
-            IOp::CvtColor => {
-                let mut v = cur.to_f64_vec();
-                for px in v.chunks_mut(3) {
-                    if px.len() == 3 {
-                        px.swap(0, 2);
-                    }
-                }
-                v
-            }
-            IOp::Mem(_) => unreachable!(),
-        };
+    for op in &body {
+        let mut vals = cur.to_f64_vec();
+        op.apply_slice_f64(&mut vals, 0);
         cur = Tensor::from_f64_cast(&vals, &shape, p.dtout);
     }
     cur
@@ -175,7 +149,7 @@ pub fn preproc(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::ops::{MemOp, Opcode};
+    use crate::ops::{IOp, MemOp, Opcode};
     use crate::tensor::make_frame;
 
     #[test]

@@ -5,16 +5,18 @@
 //!
 //! * **Layer 3 (this crate)** — the coordination contribution: typed
 //!   pipelines of Instantiable Operations ([`ops`]), a fusion planner that
-//!   performs automatic Vertical and Horizontal Fusion ([`fusion`]), three
-//!   execution engines (fused / unfused / graph-replay, [`exec`]), a
-//!   streaming coordinator with dynamic HF batching ([`coordinator`]), and
-//!   high-level wrappers imitating OpenCV-CUDA ([`cv`]) and NPP ([`npp`]).
+//!   performs automatic Vertical and Horizontal Fusion ([`fusion`]), four
+//!   execution engines (fused / unfused / graph-replay / host-fused,
+//!   [`exec`]), a streaming coordinator with dynamic HF batching
+//!   ([`coordinator`]), and high-level wrappers imitating OpenCV-CUDA
+//!   ([`cv`]) and NPP ([`npp`]).
 //! * **Layer 2/1 (build time)** — JAX graphs calling Pallas kernels
 //!   (`python/compile/`), AOT-lowered to HLO text artifacts loaded by
-//!   [`runtime`].
+//!   [`runtime`] (gated behind the `pjrt` cargo feature; without it the
+//!   host fused engine executes pipelines on any machine).
 //!
-//! See DESIGN.md for the paper -> system mapping and EXPERIMENTS.md for the
-//! reproduced evaluation.
+//! See `DESIGN.md` (repo root) for the paper -> system mapping and
+//! `EXPERIMENTS.md` for the reproduced evaluation.
 
 pub mod bench;
 pub mod coordinator;

@@ -136,6 +136,7 @@ fn serve(args: &[String]) -> anyhow::Result<()> {
         artifact_dir: None,
         queue_cap: 1024,
         policy: BatchPolicy { max_batch: 50, window: Duration::from_micros(window_us) },
+        ..ServiceConfig::default()
     });
 
     let p = Pipeline::from_opcodes(
@@ -172,6 +173,12 @@ fn serve(args: &[String]) -> anyhow::Result<()> {
         m.latency.p50,
         m.latency.p99,
         m.padded_planes
+    );
+    println!(
+        "coverage={:.0}% fused (fallbacks={} host_serves={})",
+        m.fused_coverage() * 100.0,
+        m.unfused_fallbacks,
+        m.planner.host
     );
     svc.shutdown();
     Ok(())

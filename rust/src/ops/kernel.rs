@@ -1,0 +1,149 @@
+//! The shared scalar semantics table: ONE lowering from [`IOp`] to an
+//! execution-ready [`ScalarOp`], used by BOTH the hostref oracle (op-at-a-time
+//! whole-buffer sweeps) and the fused host engine (single pass, intermediates
+//! in registers). Because the two paths run the very same `apply_*` code for
+//! every op, they cannot drift semantically — the only difference the fused
+//! engine is allowed to introduce is the compute width (f32 fast path) and
+//! the traffic pattern (one memory pass instead of one per op).
+
+use super::{IOp, Opcode};
+
+/// Lowered form of one compute-body IOp. Memory operations do not lower —
+/// they are the pipeline's read/write boundary, not body semantics.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ScalarOp {
+    /// Element-wise compute with a scalar parameter.
+    Scalar { op: Opcode, param: f64 },
+    /// Element-wise compute with a per-channel parameter; the lane is the
+    /// global element index modulo 3 (packed RGB layout).
+    PerLane { op: Opcode, param: [f32; 3] },
+    /// BGR<->RGB swizzle within each packed 3-lane pixel.
+    Swizzle,
+}
+
+impl ScalarOp {
+    /// Lower one body IOp. Returns `None` for memory operations.
+    pub fn lower(op: &IOp) -> Option<ScalarOp> {
+        match op {
+            IOp::Compute { op, param } => Some(ScalarOp::Scalar { op: *op, param: *param }),
+            IOp::ComputeC3 { op, param } => Some(ScalarOp::PerLane { op: *op, param: *param }),
+            IOp::CvtColor => Some(ScalarOp::Swizzle),
+            IOp::Mem(_) => None,
+        }
+    }
+
+    /// Lower a whole validated compute body. `None` if any op is a memop
+    /// (impossible for a validated [`super::Pipeline`] body).
+    pub fn lower_body(body: &[IOp]) -> Option<Vec<ScalarOp>> {
+        body.iter().map(ScalarOp::lower).collect()
+    }
+
+    /// Apply this op to a slice of values in the f64 compute domain.
+    ///
+    /// `base` is the global element index of `vals[0]`; it only matters for
+    /// lane-structured ops. The oracle calls this once per op with the whole
+    /// buffer (`base = 0`); the fused engine calls it per pixel group with
+    /// the group's global offset — both produce identical results.
+    #[inline]
+    pub fn apply_slice_f64(&self, vals: &mut [f64], base: usize) {
+        match self {
+            ScalarOp::Scalar { op, param } => {
+                for v in vals.iter_mut() {
+                    *v = op.apply(*v, *param);
+                }
+            }
+            ScalarOp::PerLane { op, param } => {
+                for (j, v) in vals.iter_mut().enumerate() {
+                    *v = op.apply(*v, param[(base + j) % 3] as f64);
+                }
+            }
+            ScalarOp::Swizzle => {
+                for px in vals.chunks_mut(3) {
+                    if px.len() == 3 {
+                        px.swap(0, 2);
+                    }
+                }
+            }
+        }
+    }
+
+    /// True if this op needs 3-lane pixel structure (forces group width 3).
+    pub fn is_lane_structured(&self) -> bool {
+        matches!(self, ScalarOp::PerLane { .. } | ScalarOp::Swizzle)
+    }
+}
+
+/// Element-group width of a lowered body: 3 when any op is lane-structured
+/// (packed RGB pixels must stay together in registers), else 1.
+pub fn group_width(body: &[ScalarOp]) -> usize {
+    if body.iter().any(ScalarOp::is_lane_structured) {
+        3
+    } else {
+        1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::{MemOp, Pipeline};
+    use crate::tensor::DType;
+
+    #[test]
+    fn lowering_covers_every_body_op() {
+        let p = Pipeline::elementwise(
+            vec![
+                IOp::compute(Opcode::Mul, 2.0),
+                IOp::ComputeC3 { op: Opcode::Add, param: [1.0, 2.0, 3.0] },
+                IOp::CvtColor,
+            ],
+            vec![2, 3],
+            1,
+            DType::F32,
+            DType::F32,
+        )
+        .unwrap();
+        let body = ScalarOp::lower_body(p.body()).unwrap();
+        assert_eq!(body.len(), 3);
+        assert_eq!(group_width(&body), 3);
+        assert!(ScalarOp::lower(&IOp::Mem(MemOp::Write { dtype: DType::F32 })).is_none());
+    }
+
+    #[test]
+    fn scalar_chains_have_group_width_one() {
+        let body = vec![
+            ScalarOp::Scalar { op: Opcode::Mul, param: 2.0 },
+            ScalarOp::Scalar { op: Opcode::Add, param: 1.0 },
+        ];
+        assert_eq!(group_width(&body), 1);
+    }
+
+    #[test]
+    fn whole_buffer_equals_per_group_application() {
+        // the invariant the fused engine relies on: applying an op to the
+        // whole buffer at once == applying it group by group with offsets
+        let ops = [
+            ScalarOp::Scalar { op: Opcode::Mul, param: 1.5 },
+            ScalarOp::PerLane { op: Opcode::Sub, param: [1.0, 2.0, 3.0] },
+            ScalarOp::Swizzle,
+        ];
+        // 8 elements: not a multiple of 3, exercises the ragged tail
+        let src: Vec<f64> = (0..8).map(|i| i as f64).collect();
+        for op in &ops {
+            let mut whole = src.clone();
+            op.apply_slice_f64(&mut whole, 0);
+            let mut grouped = src.clone();
+            for (gi, chunk) in grouped.chunks_mut(3).enumerate() {
+                op.apply_slice_f64(chunk, gi * 3);
+            }
+            assert_eq!(whole, grouped, "{op:?}");
+        }
+    }
+
+    #[test]
+    fn swizzle_skips_ragged_tail() {
+        let mut v = vec![1.0, 2.0, 3.0, 4.0, 5.0];
+        ScalarOp::Swizzle.apply_slice_f64(&mut v, 0);
+        assert_eq!(v, vec![3.0, 2.0, 1.0, 4.0, 5.0]);
+    }
+}

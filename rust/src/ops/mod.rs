@@ -10,11 +10,13 @@
 //! last, dtype chain agreement).
 
 mod iop;
+pub mod kernel;
 mod opcode;
 mod pipeline;
 mod signature;
 
 pub use iop::{IOp, MemOp, OpClass};
+pub use kernel::ScalarOp;
 pub use opcode::{Opcode, ALL_OPCODES};
 pub use pipeline::{Pipeline, PipelineError};
 pub use signature::Signature;

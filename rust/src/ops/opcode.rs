@@ -106,6 +106,30 @@ impl Opcode {
         }
     }
 
+    /// f32 monomorphization of [`Opcode::apply`] — the fused host engine's
+    /// register-resident fast path for f32 chains. Must mirror `apply`
+    /// op-for-op (checked by `apply_f32_tracks_f64`); integer and f64
+    /// pipelines never use it, so the oracle's f64 domain stays the single
+    /// source of truth for exact semantics.
+    #[inline(always)]
+    pub fn apply_f32(self, x: f32, p: f32) -> f32 {
+        match self {
+            Opcode::Nop => x,
+            Opcode::Add => x + p,
+            Opcode::Sub => x - p,
+            Opcode::Mul => x * p,
+            Opcode::Div => x / p,
+            Opcode::Abs => x.abs(),
+            Opcode::Neg => -x,
+            Opcode::Min => x.min(p),
+            Opcode::Max => x.max(p),
+            Opcode::Sqrt => x.abs().sqrt(),
+            Opcode::Exp => x.exp(),
+            Opcode::Log => (x.abs() + 1.0).ln(),
+            Opcode::Clamp01 => x.clamp(0.0, 1.0),
+        }
+    }
+
     /// Approximate per-element instruction cost (used by the roofline cost
     /// model and the GPU simulator; mul/add == 1 like the paper's Fig. 1).
     pub fn instr_cost(self) -> f64 {
@@ -146,6 +170,35 @@ mod tests {
         assert_eq!(Opcode::Neg.apply(3.0, 99.0), -3.0);
         assert_eq!(Opcode::Clamp01.apply(3.0, 99.0), 1.0);
         assert_eq!(Opcode::Log.apply(0.0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn apply_f32_tracks_f64() {
+        // the f32 kernel must behave like the f64 kernel rounded to f32, for
+        // every opcode over a representative input/param grid — including
+        // x=200, where Exp overflows f32 (expect = (e^200 as f32) = inf) but
+        // stays finite in f64
+        let xs = [-3.5f64, -1.0, -0.25, 0.0, 0.5, 1.0, 2.75, 200.0];
+        let ps = [-2.0f64, -0.5, 0.0, 0.5, 1.5, 3.0];
+        for op in ALL_OPCODES {
+            for &x in &xs {
+                for &p in &ps {
+                    let expect = op.apply(x, p) as f32;
+                    let narrow = op.apply_f32(x as f32, p as f32);
+                    if expect.is_nan() {
+                        assert!(narrow.is_nan(), "{op:?}({x},{p})");
+                    } else if expect.is_infinite() {
+                        assert_eq!(expect, narrow, "{op:?}({x},{p})");
+                    } else {
+                        let tol = 1e-5 * (1.0 + expect.abs());
+                        assert!(
+                            (expect - narrow).abs() <= tol,
+                            "{op:?}({x},{p}): {expect} vs {narrow}"
+                        );
+                    }
+                }
+            }
+        }
     }
 
     #[test]

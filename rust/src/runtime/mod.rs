@@ -1,12 +1,28 @@
 //! Runtime — the PJRT bridge: load AOT HLO-text artifacts, compile once,
 //! execute from the Rust hot path. Python is never involved here.
+//!
+//! The registry/metadata layer is pure Rust and always available. The
+//! execution layer needs the `xla` crate (PJRT bindings) and is gated behind
+//! the `pjrt` feature: without it, [`stub`] provides the same types with
+//! run-time "built without pjrt" errors, and the host fused engine
+//! ([`crate::exec::HostFusedEngine`]) is the backend that executes pipelines.
 
+#[cfg(feature = "pjrt")]
 mod client;
+#[cfg(feature = "pjrt")]
 mod exec;
+#[cfg(feature = "pjrt")]
 mod graph;
 mod registry;
+#[cfg(not(feature = "pjrt"))]
+mod stub;
 
+#[cfg(feature = "pjrt")]
 pub use client::{client, Client};
+#[cfg(feature = "pjrt")]
 pub use exec::{literal_to_tensor, tensor_to_literal, DeviceValue, Executor};
+#[cfg(feature = "pjrt")]
 pub use graph::{ExecGraph, GraphNode};
 pub use registry::{ArtifactMeta, Registry};
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{DeviceValue, ExecGraph, Executor};

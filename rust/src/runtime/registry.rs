@@ -7,7 +7,9 @@
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+#[cfg(feature = "pjrt")]
 use std::cell::RefCell;
+#[cfg(feature = "pjrt")]
 use std::rc::Rc;
 
 use anyhow::{anyhow, bail, Context, Result};
@@ -77,6 +79,7 @@ pub struct Registry {
     /// experiment geometry the python side baked in (bucket lists etc.)
     pub geometry: Value,
     pub scale: String,
+    #[cfg(feature = "pjrt")]
     compiled: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
 }
 
@@ -119,6 +122,7 @@ impl Registry {
             by_name,
             geometry: v["geometry"].clone(),
             scale: v["scale"].as_str().unwrap_or("scaled").to_string(),
+            #[cfg(feature = "pjrt")]
             compiled: RefCell::new(HashMap::new()),
         })
     }
@@ -169,6 +173,7 @@ impl Registry {
     }
 
     /// Compile (or fetch the cached) executable for artifact `name`.
+    #[cfg(feature = "pjrt")]
     pub fn executable(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
         if let Some(exe) = self.compiled.borrow().get(name) {
             return Ok(exe.clone());
@@ -189,7 +194,14 @@ impl Registry {
     }
 
     /// Number of executables compiled so far (metrics / tests).
+    #[cfg(feature = "pjrt")]
     pub fn compiled_count(&self) -> usize {
         self.compiled.borrow().len()
+    }
+
+    /// Without PJRT nothing ever compiles.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn compiled_count(&self) -> usize {
+        0
     }
 }

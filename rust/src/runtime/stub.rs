@@ -1,0 +1,138 @@
+//! No-PJRT stand-ins for the runtime execution types.
+//!
+//! Built when the `pjrt` feature is off: the manifest/registry layer stays
+//! fully functional (it is pure Rust), while anything that would launch an
+//! XLA executable fails with a clear error at RUN time instead of at compile
+//! time. This keeps every engine, the coordinator and the experiments
+//! compiling everywhere; the host fused engine
+//! ([`crate::exec::HostFusedEngine`]) is the execution backend that actually
+//! runs in these builds.
+
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::{DType, Tensor};
+
+use super::registry::ArtifactMeta;
+use super::Registry;
+
+const NO_PJRT: &str =
+    "built without the `pjrt` feature: XLA artifact execution is unavailable \
+     (the host fused engine serves pipelines in this configuration)";
+
+/// Stand-in for the PJRT executor: artifact lookups still validate, launches
+/// fail loudly.
+pub struct Executor {
+    registry: Rc<Registry>,
+}
+
+impl Executor {
+    pub fn new(registry: Rc<Registry>) -> Executor {
+        Executor { registry }
+    }
+
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    pub fn run(&self, name: &str, inputs: &[Tensor]) -> Result<Tensor> {
+        // arity check still works (metadata is loaded) so callers get the
+        // most precise error available before the capability one
+        if let Some(meta) = self.registry.get(name) {
+            if inputs.len() != meta.input_roles.len() {
+                bail!(
+                    "{name}: expected {} inputs ({:?}), got {}",
+                    meta.input_roles.len(),
+                    meta.input_roles,
+                    inputs.len()
+                );
+            }
+        }
+        bail!("cannot execute artifact {name}: {NO_PJRT}")
+    }
+
+    /// Validate a data tensor against the artifact's declared data input
+    /// (identical to the PJRT build — pure metadata).
+    pub fn check_data_shape(&self, meta: &ArtifactMeta, t: &Tensor) -> Result<()> {
+        let want_dt = DType::parse(&meta.dtin)
+            .with_context(|| format!("bad dtin {} in manifest", meta.dtin))?;
+        if t.dtype() != want_dt {
+            bail!("{}: dtype {} != artifact dtin {}", meta.name, t.dtype(), want_dt);
+        }
+        let mut want_shape = vec![meta.batch];
+        want_shape.extend_from_slice(&meta.shape);
+        if t.shape() != want_shape.as_slice() {
+            bail!("{}: shape {:?} != artifact {:?}", meta.name, t.shape(), want_shape);
+        }
+        Ok(())
+    }
+}
+
+/// Stand-in for a device-resident value.
+pub struct DeviceValue;
+
+impl DeviceValue {
+    pub fn upload(_t: &Tensor) -> Result<DeviceValue> {
+        bail!(NO_PJRT)
+    }
+
+    pub fn download(&self) -> Result<Tensor> {
+        bail!(NO_PJRT)
+    }
+}
+
+/// Stand-in for the recorded launch chain.
+pub struct ExecGraph {
+    nodes: usize,
+}
+
+impl ExecGraph {
+    pub fn record() -> GraphBuilder {
+        GraphBuilder {}
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes == 0
+    }
+
+    pub fn replay(&self, _input: &Tensor) -> Result<Tensor> {
+        bail!(NO_PJRT)
+    }
+}
+
+pub struct GraphBuilder {}
+
+impl GraphBuilder {
+    pub fn launch(
+        self,
+        _executor: &Executor,
+        _registry: &Registry,
+        name: &str,
+        _const_args: &[(usize, &Tensor)],
+    ) -> Result<GraphBuilder> {
+        bail!("cannot record launch of {name}: {NO_PJRT}")
+    }
+
+    pub fn finish(self) -> ExecGraph {
+        ExecGraph { nodes: 0 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_fails_loudly_not_silently() {
+        assert!(DeviceValue::upload(&Tensor::zeros(DType::F32, &[1])).is_err());
+        let g = ExecGraph::record().finish();
+        assert!(g.is_empty());
+        let err = g.replay(&Tensor::zeros(DType::F32, &[1])).unwrap_err();
+        assert!(format!("{err:#}").contains("pjrt"), "{err:#}");
+    }
+}

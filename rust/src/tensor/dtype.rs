@@ -1,5 +1,6 @@
 //! Element dtypes supported by the op vocabulary (manifest `dtin`/`dtout`).
 
+#[cfg(feature = "pjrt")]
 use xla::ElementType;
 
 /// Element type of a [`super::Tensor`]. Matches the Python `DTYPES` table.
@@ -45,6 +46,7 @@ impl DType {
     }
 
     /// The XLA element type this dtype marshals to.
+    #[cfg(feature = "pjrt")]
     pub fn xla(self) -> ElementType {
         match self {
             DType::U8 => ElementType::U8,

@@ -58,6 +58,26 @@ impl Tensor {
     getter!(as_f32, f32, F32);
     getter!(as_f64, f64, F64);
 
+    /// Wrap an owned buffer without copying (hot-path constructor: the host
+    /// fused engine and the coordinator's batch stacker build their output
+    /// in place and hand the allocation over).
+    pub fn from_data(data: TensorData, shape: &[usize]) -> Tensor {
+        let len = match &data {
+            TensorData::U8(v) => v.len(),
+            TensorData::U16(v) => v.len(),
+            TensorData::I32(v) => v.len(),
+            TensorData::F32(v) => v.len(),
+            TensorData::F64(v) => v.len(),
+        };
+        assert_eq!(
+            len,
+            shape.iter().product::<usize>(),
+            "data length does not match shape {:?}",
+            shape
+        );
+        Tensor { shape: shape.to_vec(), data }
+    }
+
     pub fn zeros(dt: DType, shape: &[usize]) -> Tensor {
         let n = shape.iter().product();
         let data = match dt {

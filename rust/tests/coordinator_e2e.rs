@@ -1,9 +1,15 @@
 //! Coordinator end-to-end: submit -> dynamic HF batch -> fused launch ->
 //! reply, with correctness, ordering, metrics and backpressure checks.
+//!
+//! These tests run WITHOUT artifacts: `EngineSelect::Auto` degrades to the
+//! host fused engine when the registry is unavailable, so the coordinator's
+//! behavior (batching, backpressure, draining, numerics vs hostref) is
+//! verified on every machine; with artifacts present the same tests exercise
+//! the XLA path.
 
 use std::time::Duration;
 
-use fkl::coordinator::{BatchPolicy, Service, ServiceConfig};
+use fkl::coordinator::{BatchPolicy, EngineSelect, Service, ServiceConfig};
 use fkl::ops::{Opcode, Pipeline};
 use fkl::proplite::Rng;
 use fkl::tensor::{DType, Tensor};
@@ -25,6 +31,7 @@ fn requests_are_batched_and_correct() {
         artifact_dir: None,
         queue_cap: 512,
         policy: BatchPolicy { max_batch: 25, window: Duration::from_micros(300) },
+        ..ServiceConfig::default()
     });
     let p = pipeline();
     let mut rng = Rng::new(1);
@@ -57,6 +64,7 @@ fn single_item_latency_path_works() {
         artifact_dir: None,
         queue_cap: 16,
         policy: BatchPolicy { max_batch: 50, window: Duration::from_micros(100) },
+        ..ServiceConfig::default()
     });
     let p = pipeline();
     let item = Tensor::from_u8(&vec![100u8; 7200], &[1, 60, 120]);
@@ -76,6 +84,7 @@ fn backpressure_rejects_when_full() {
         artifact_dir: None,
         queue_cap: 2,
         policy: BatchPolicy { max_batch: 64, window: Duration::from_secs(5) },
+        ..ServiceConfig::default()
     });
     let p = pipeline();
     let mut results = Vec::new();
@@ -94,6 +103,7 @@ fn mixed_streams_are_not_cross_batched() {
         artifact_dir: None,
         queue_cap: 512,
         policy: BatchPolicy { max_batch: 16, window: Duration::from_micros(300) },
+        ..ServiceConfig::default()
     });
     // stream A: CMSD u8->f32; stream B: plain mul f32->f32 (interp tier)
     let pa = pipeline();
@@ -128,6 +138,7 @@ fn shutdown_drains_pending_work() {
         queue_cap: 512,
         // huge window: requests would sit forever without the drain
         policy: BatchPolicy { max_batch: 64, window: Duration::from_secs(60) },
+        ..ServiceConfig::default()
     });
     let p = pipeline();
     let mut rxs = Vec::new();
@@ -143,4 +154,47 @@ fn shutdown_drains_pending_work() {
         }
     }
     assert_eq!(ok, 10, "shutdown must drain pending requests");
+}
+
+#[test]
+fn host_backend_batches_any_stream_with_exact_numerics() {
+    // pinned host engine: a stream no artifact family covers (exotic shape,
+    // u8 out) is still HF-batched and must be BIT-equal to the oracle
+    let svc = Service::start(ServiceConfig {
+        artifact_dir: None,
+        queue_cap: 512,
+        policy: BatchPolicy { max_batch: 16, window: Duration::from_micros(300) },
+        engine: EngineSelect::HostFused,
+    });
+    let p = Pipeline::from_opcodes(
+        &[(Opcode::Mul, 1.9), (Opcode::Add, 7.0), (Opcode::Sub, 20.0)],
+        &[17, 23],
+        1,
+        DType::U8,
+        DType::U8,
+    )
+    .unwrap();
+    let mut rng = Rng::new(12);
+    let n = 40;
+    let mut inputs = Vec::new();
+    let mut rxs = Vec::new();
+    for _ in 0..n {
+        let item = Tensor::from_u8(&rng.vec_u8(17 * 23), &[1, 17, 23]);
+        inputs.push(item.clone());
+        rxs.push(svc.submit(p.clone(), item).unwrap());
+    }
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let out = rx.recv().expect("service alive").expect("request ok");
+        let want = fkl::hostref::run_pipeline(&p, &inputs[i]);
+        assert_eq!(out, want, "request {i}: integer dtypes must be bit-equal");
+    }
+    let m = svc.metrics().unwrap();
+    assert_eq!(m.completed, n as u64);
+    assert_eq!(m.failed, 0);
+    assert!(m.mean_batch() > 1.5, "HF batching must engage: {}", m.mean_batch());
+    assert_eq!(m.unfused_fallbacks, 0);
+    assert_eq!(m.planner.unfused, 0);
+    assert!(m.planner.host > 0, "host tier must be visible in metrics");
+    assert_eq!(m.fused_coverage(), 1.0);
+    svc.shutdown();
 }

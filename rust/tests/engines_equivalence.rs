@@ -5,6 +5,7 @@
 //! saturates at every step boundary — exactly like OpenCV — which is a
 //! *semantic* difference the paper inherits too, so u8 equivalence is
 //! checked against the step-saturating oracle).
+#![cfg(feature = "pjrt")] // drives AOT artifacts through the PJRT runtime
 
 use std::rc::Rc;
 

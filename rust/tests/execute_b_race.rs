@@ -1,6 +1,7 @@
 //! Regression test for the async-upload lifetime bug: buffer_from_host_literal
 //! copies asynchronously, so the source Literal must be kept alive by
 //! DeviceValue. Hammering chained execute_b catches regressions.
+#![cfg(feature = "pjrt")] // drives AOT artifacts through the PJRT runtime
 use fkl::runtime::{DeviceValue, Executor, Registry};
 use fkl::tensor::Tensor;
 use std::rc::Rc;

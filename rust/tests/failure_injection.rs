@@ -1,10 +1,7 @@
 //! Failure injection: the system must fail loudly and precisely, never
 //! silently compute the wrong thing.
 
-use std::time::Duration;
-
-use fkl::coordinator::{BatchPolicy, Service, ServiceConfig};
-use fkl::exec::Engine;
+use fkl::coordinator::{BatchPolicy, EngineSelect, Service, ServiceConfig};
 use fkl::ops::{Opcode, Pipeline};
 use fkl::runtime::Registry;
 use fkl::tensor::{DType, Tensor};
@@ -40,6 +37,7 @@ fn opcode_drift_is_detected_at_load() {
 }
 
 #[test]
+#[cfg(feature = "pjrt")] // needs compiled artifacts + the PJRT runtime
 fn wrong_input_arity_is_rejected() {
     let reg = std::rc::Rc::new(Registry::load(fkl::default_artifact_dir()).unwrap());
     let exec = fkl::runtime::Executor::new(reg);
@@ -49,6 +47,7 @@ fn wrong_input_arity_is_rejected() {
 }
 
 #[test]
+#[cfg(feature = "pjrt")] // needs compiled artifacts + the PJRT runtime
 fn uncovered_pipeline_reports_all_tiers_tried() {
     let ctx = fkl::cv::Context::new().unwrap();
     // exotic shape no artifact covers, even the interpreter
@@ -66,7 +65,9 @@ fn uncovered_pipeline_reports_all_tiers_tried() {
 }
 
 #[test]
+#[cfg(feature = "pjrt")] // needs compiled artifacts + the PJRT runtime
 fn pipeline_dtype_mismatch_is_rejected_before_launch() {
+    use fkl::exec::Engine;
     let ctx = fkl::cv::Context::new().unwrap();
     let p = Pipeline::from_opcodes(
         &[(Opcode::Nop, 0.0), (Opcode::Mul, 0.5), (Opcode::Sub, 3.0), (Opcode::Div, 1.7)],
@@ -83,13 +84,16 @@ fn pipeline_dtype_mismatch_is_rejected_before_launch() {
 }
 
 #[test]
+#[cfg(feature = "pjrt")] // needs compiled artifacts + the PJRT runtime
 fn coordinator_survives_failing_requests() {
+    use std::time::Duration;
     // a pipeline with no coverage: the service must reply with an error and
     // keep serving subsequent good requests (no poisoned worker)
     let svc = Service::start(ServiceConfig {
         artifact_dir: None,
         queue_cap: 64,
         policy: BatchPolicy { max_batch: 8, window: Duration::from_micros(100) },
+        engine: EngineSelect::Xla,
     });
     let bad = Pipeline::from_opcodes(&[(Opcode::Mul, 1.0)], &[7, 13], 1, DType::F32, DType::F32)
         .unwrap();
@@ -118,6 +122,7 @@ fn coordinator_with_bad_artifact_dir_degrades_gracefully() {
         artifact_dir: Some("/definitely/not/here".into()),
         queue_cap: 8,
         policy: BatchPolicy::default(),
+        engine: EngineSelect::Xla,
     });
     let p = Pipeline::from_opcodes(&[(Opcode::Mul, 1.0)], &[4], 1, DType::F32, DType::F32)
         .unwrap();
@@ -125,5 +130,32 @@ fn coordinator_with_bad_artifact_dir_degrades_gracefully() {
     let out = rx.recv().unwrap();
     assert!(out.is_err());
     assert!(out.unwrap_err().contains("registry"));
+    svc.shutdown();
+}
+
+#[test]
+fn host_engine_rejects_mismatched_inputs_loudly() {
+    // the host fused backend applies the same fail-loudly contract: a dtype
+    // mismatch is an error reply, never a silent cast, and the service keeps
+    // serving afterwards
+    let svc = Service::start(ServiceConfig {
+        artifact_dir: Some("/definitely/not/here".into()),
+        queue_cap: 8,
+        policy: BatchPolicy::default(),
+        engine: EngineSelect::HostFused,
+    });
+    let p = Pipeline::from_opcodes(&[(Opcode::Mul, 2.0)], &[4], 1, DType::U8, DType::U8)
+        .unwrap();
+    let wrong = svc.submit(p.clone(), Tensor::from_f32(&[0.0; 4], &[1, 4])).unwrap();
+    let out = wrong.recv().unwrap();
+    assert!(out.is_err(), "dtype mismatch must not silently run");
+    assert!(out.unwrap_err().contains("dtype"));
+
+    let good = svc.submit(p, Tensor::from_u8(&[100; 4], &[1, 4])).unwrap();
+    let t = good.recv().unwrap().expect("host backend keeps serving");
+    assert_eq!(t.as_u8().unwrap(), &[200, 200, 200, 200]);
+    let m = svc.metrics().unwrap();
+    assert!(m.failed >= 1);
+    assert_eq!(m.planner.host as u64 + m.failed, 2);
     svc.shutdown();
 }

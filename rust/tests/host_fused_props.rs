@@ -1,0 +1,203 @@
+//! Property tests for the host fused engine and the batch packers — pure
+//! host code (no XLA), so thousands of random cases run everywhere.
+//!
+//! Numerics contract being enforced:
+//! * every f64-accumulated path (all integer outputs, f64 anywhere, i32
+//!   input) is BIT-equal to `hostref::run_pipeline`;
+//! * the f32 fast path (u8/u16/f32 -> f32 chains) stays within the same
+//!   epsilon the engine equivalence suite grants the interpreter tier (1e-3);
+//! * `slice_batch`/`concat_batch`/`stack_batch` are lossless for all five
+//!   dtypes, and HF-stacking never changes per-item results.
+
+use fkl::exec::{concat_batch, slice_batch, stack_batch, Engine, HostFusedEngine};
+use fkl::hostref;
+use fkl::ops::{Opcode, Pipeline, ALL_OPCODES};
+use fkl::proplite::{forall, Rng};
+use fkl::tensor::{DType, Tensor};
+
+const DTYPES: [DType; 5] = [DType::U8, DType::U16, DType::I32, DType::F32, DType::F64];
+
+fn rand_tensor(rng: &mut Rng, shape: &[usize], dt: DType) -> Tensor {
+    let n: usize = shape.iter().product();
+    match dt {
+        DType::U8 => Tensor::from_u8(&rng.vec_u8(n), shape),
+        DType::U16 => {
+            let v: Vec<u16> = (0..n).map(|_| (rng.next_u64() & 0xFFF) as u16).collect();
+            Tensor::from_u16(&v, shape)
+        }
+        DType::I32 => {
+            let v: Vec<i32> =
+                (0..n).map(|_| (rng.next_u64() & 0xFFFF) as i32 - 0x8000).collect();
+            Tensor::from_i32(&v, shape)
+        }
+        DType::F32 => Tensor::from_f32(&rng.vec_f32(n, -4.0, 4.0), shape),
+        DType::F64 => {
+            let v: Vec<f64> = (0..n).map(|_| rng.f64(-4.0, 4.0)).collect();
+            Tensor::from_f64(&v, shape)
+        }
+    }
+}
+
+fn rand_chain(rng: &mut Rng, ops: &[Opcode], k: usize) -> Vec<(Opcode, f64)> {
+    (0..k)
+        .map(|_| {
+            let op = *rng.pick(ops);
+            let param = match op {
+                // keep divisors away from zero so relative error stays tame
+                Opcode::Div => {
+                    let sign = if rng.bool() { 1.0 } else { -1.0 };
+                    sign * rng.f64(0.8, 1.25)
+                }
+                _ => rng.f64(-4.0, 4.0),
+            };
+            (op, param)
+        })
+        .collect()
+}
+
+#[test]
+fn prop_slice_concat_roundtrip_all_dtypes() {
+    forall(250, |rng| {
+        let dt = *rng.pick(&DTYPES);
+        let b = rng.usize(1, 7);
+        let shape = vec![rng.usize(1, 9), rng.usize(1, 9)];
+        let mut full = vec![b];
+        full.extend_from_slice(&shape);
+        let t = rand_tensor(rng, &full, dt);
+        let item_elems: usize = shape.iter().product();
+        let parts: Vec<Tensor> =
+            (0..b).map(|i| slice_batch(&t, i, item_elems, &shape)).collect();
+        for p in &parts {
+            assert_eq!(p.shape()[0], 1);
+            assert_eq!(p.dtype(), dt);
+        }
+        let back = concat_batch(&parts, &shape);
+        assert_eq!(back, t, "{dt} b={b} slice->concat must be lossless");
+    });
+}
+
+#[test]
+fn prop_stack_batch_equals_concat_with_pad_replication() {
+    forall(250, |rng| {
+        let dt = *rng.pick(&DTYPES);
+        let m = rng.usize(1, 6);
+        let bucket = m + rng.usize(0, 4);
+        let shape = vec![rng.usize(1, 6), rng.usize(1, 6)];
+        let mut item_shape = vec![1];
+        item_shape.extend_from_slice(&shape);
+        let items: Vec<Tensor> = (0..m).map(|_| rand_tensor(rng, &item_shape, dt)).collect();
+        let refs: Vec<&Tensor> = items.iter().collect();
+        let stacked = stack_batch(&refs, bucket, &shape);
+
+        // reference semantics: clone parts, pad with the last, concat
+        let mut parts: Vec<Tensor> = items.clone();
+        for _ in m..bucket {
+            parts.push(items[m - 1].clone());
+        }
+        let want = concat_batch(&parts, &shape);
+        assert_eq!(stacked, want, "{dt} m={m} bucket={bucket}");
+    });
+}
+
+#[test]
+fn prop_f64_accum_paths_bit_exact_vs_oracle() {
+    // every dtype pair except the dedicated f32 fast path accumulates in f64
+    // and must reproduce the oracle EXACTLY — all opcodes, params, batches
+    forall(300, |rng| {
+        // built per case: the engine's interior mutability (plan cache) is
+        // not RefUnwindSafe, so it cannot be captured across catch_unwind
+        let eng = HostFusedEngine::new();
+        let dtin = *rng.pick(&DTYPES);
+        let dtout = loop {
+            let dt = *rng.pick(&DTYPES);
+            let f32_fastpath =
+                dt == DType::F32 && matches!(dtin, DType::U8 | DType::U16 | DType::F32);
+            if !f32_fastpath {
+                break dt;
+            }
+        };
+        let k = rng.usize(1, 13);
+        let chain = rand_chain(rng, &ALL_OPCODES, k);
+        let batch = rng.usize(1, 5);
+        let shape = vec![rng.usize(1, 8), rng.usize(1, 8)];
+        let p = Pipeline::from_opcodes(&chain, &shape, batch, dtin, dtout).unwrap();
+        let mut full = vec![batch];
+        full.extend_from_slice(&shape);
+        let x = rand_tensor(rng, &full, dtin);
+        let got = eng.run(&p, &x).unwrap();
+        let want = hostref::run_pipeline(&p, &x);
+        assert_eq!(got, want, "{dtin}->{dtout} chain {chain:?}");
+    });
+}
+
+#[test]
+fn prop_f32_fastpath_within_engine_epsilon() {
+    // u8/u16/f32 -> f32 chains run in f32 registers; they must stay within
+    // the 1e-3 relative epsilon the engine equivalence suite uses. Exp and
+    // Sqrt are excluded: Exp can overflow f32 where f64 stays finite, and
+    // Sqrt turns cancellation-level absolute error into sqrt-scale error —
+    // pipelines needing exactness get it from the f64 paths above.
+    let ops = [
+        Opcode::Nop,
+        Opcode::Add,
+        Opcode::Sub,
+        Opcode::Mul,
+        Opcode::Div,
+        Opcode::Abs,
+        Opcode::Neg,
+        Opcode::Min,
+        Opcode::Max,
+        Opcode::Log,
+        Opcode::Clamp01,
+    ];
+    forall(300, |rng| {
+        let eng = HostFusedEngine::new();
+        let dtin = *rng.pick(&[DType::U8, DType::U16, DType::F32]);
+        let k = rng.usize(1, 13);
+        let chain = rand_chain(rng, &ops, k);
+        let batch = rng.usize(1, 5);
+        let shape = vec![rng.usize(1, 8), rng.usize(1, 8)];
+        let p = Pipeline::from_opcodes(&chain, &shape, batch, dtin, DType::F32).unwrap();
+        let mut full = vec![batch];
+        full.extend_from_slice(&shape);
+        let x = rand_tensor(rng, &full, dtin);
+        let got = eng.run(&p, &x).unwrap();
+        let want = hostref::run_pipeline(&p, &x);
+        assert_eq!(got.shape(), want.shape());
+        for (i, (a, b)) in got.to_f64_vec().iter().zip(want.to_f64_vec()).enumerate() {
+            assert!(
+                (a - b).abs() <= 1e-3 + 1e-3 * b.abs(),
+                "{dtin}->f32 elem {i}: {a} vs {b} (chain {chain:?})"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_hf_stacking_never_changes_per_item_results() {
+    // running m items as one stacked batch then slicing must equal running
+    // each item alone — the invariant the coordinator's HF path rests on
+    forall(150, |rng| {
+        let eng = HostFusedEngine::new();
+        let dtin = *rng.pick(&DTYPES);
+        let dtout = *rng.pick(&DTYPES);
+        let k = rng.usize(1, 8);
+        let chain = rand_chain(rng, &ALL_OPCODES, k);
+        let m = rng.usize(1, 5);
+        let shape = vec![rng.usize(1, 7), rng.usize(1, 7)];
+        let mut item_shape = vec![1];
+        item_shape.extend_from_slice(&shape);
+        let items: Vec<Tensor> = (0..m).map(|_| rand_tensor(rng, &item_shape, dtin)).collect();
+
+        let p1 = Pipeline::from_opcodes(&chain, &shape, 1, dtin, dtout).unwrap();
+        let pm = Pipeline::from_opcodes(&chain, &shape, m, dtin, dtout).unwrap();
+        let refs: Vec<&Tensor> = items.iter().collect();
+        let stacked_out = eng.run(&pm, &stack_batch(&refs, m, &shape)).unwrap();
+        let item_elems: usize = shape.iter().product();
+        for (i, item) in items.iter().enumerate() {
+            let alone = eng.run(&p1, item).unwrap();
+            let sliced = slice_batch(&stacked_out, i, item_elems, &shape);
+            assert_eq!(alone, sliced, "item {i} of {m}, {dtin}->{dtout}");
+        }
+    });
+}

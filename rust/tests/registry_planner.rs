@@ -1,4 +1,5 @@
 //! Registry lookups + planner tier selection against the real manifest.
+#![cfg(feature = "pjrt")] // drives AOT artifacts through the PJRT runtime
 
 use std::rc::Rc;
 

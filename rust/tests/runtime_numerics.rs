@@ -2,6 +2,7 @@
 //!
 //! Requires `make artifacts` to have run (skips with a message otherwise —
 //! CI always builds artifacts first via the Makefile).
+#![cfg(feature = "pjrt")] // drives AOT artifacts through the PJRT runtime
 
 use std::rc::Rc;
 
