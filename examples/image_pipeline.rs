@@ -9,11 +9,14 @@
 //! ```
 
 use fkl::cv::Context;
+use fkl::exec::EngineSelect;
 use fkl::npp::{PreprocPipeline, ResizeBatchSpec};
 use fkl::tensor::{make_frame, Rect};
 
 fn main() -> anyhow::Result<()> {
-    let ctx = Context::new()?;
+    // the preproc comparison drives AOT artifacts, so the XLA backend is
+    // pinned (a missing registry is an actionable error, not a degrade)
+    let ctx = Context::with_select(EngineSelect::Xla, None)?;
     let frame = make_frame(720, 1280, 2024);
 
     // 50 detection boxes from the "previous frame" (the paper's use case:

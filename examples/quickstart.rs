@@ -1,23 +1,29 @@
-//! Quickstart: compose library calls, get ONE fused kernel.
+//! Quickstart: compose library calls, get ONE fused pass.
 //!
 //! The paper's core promise: write OpenCV-style code, and the library fuses
 //! the whole chain into a single launch with intermediates in registers.
+//! `Context::new()` performs Auto backend selection, so this runs on ANY
+//! machine: the XLA fused engine when `make artifacts` has been run, the
+//! single-pass host fused engine otherwise.
 //!
 //! ```sh
-//! make artifacts && cargo run --release --example quickstart
+//! cargo run --release --example quickstart            # host backend
+//! make artifacts && cargo run --release --example quickstart   # XLA backend
 //! ```
 
+use fkl::chain::{Chain, Div, Mul, Sub, F32, U8};
 use fkl::cv::{self, Context};
 use fkl::exec::Engine;
 use fkl::tensor::{DType, Tensor};
 
 fn main() -> anyhow::Result<()> {
     let ctx = Context::new()?;
+    println!("backend: {}", ctx.backend());
 
     // a batch of 50 tiny camera crops (u8), like the paper's AutomaticTV feed
     let input = Tensor::from_u8(&vec![128u8; 50 * 60 * 120], &[50, 60, 120]);
 
-    // OpenCV-style calls — each returns a lazy IOp, nothing launches yet
+    // OpenCV-style calls — each returns a lazy typed stage, nothing launches
     let iops = [
         cv::convert_to(), // 8U -> 32F
         cv::multiply(1.0 / 255.0),
@@ -25,30 +31,63 @@ fn main() -> anyhow::Result<()> {
         cv::divide(0.226), // standard normalization
     ];
 
-    // ... until the executor fuses the chain into ONE kernel launch
+    // ... until the executor fuses the chain into ONE pass
     let out = cv::execute_operations(&ctx, &input, DType::F32, &iops)?;
     println!("output: {:?} {:?}", out.dtype(), out.shape());
     println!("sample: {:?}", &out.as_f32().unwrap()[..4]);
 
-    // what did the planner do?
-    let p = cv::build_pipeline(&input, DType::F32, &iops)?;
-    let plan = ctx.fused.plan_for(&p)?;
-    println!("plan tier: {} ({} launch)", plan.tier(), plan.launches());
+    // the same chain through the compile-time-checked builder: an illegal
+    // chain (missing write, wrong dtype boundary) would not have compiled
+    let typed = Chain::read::<U8>(&[60, 120])
+        .batch(50)
+        .map(cv::convert_to())
+        .map(Mul(1.0 / 255.0))
+        .map(Sub(0.45))
+        .map(Div(0.226))
+        .cast::<F32>()
+        .write();
+    let host_out = typed.run_host(ctx.host(), &input)?;
+    println!("typed chain via monomorphized host loop: {:?}", host_out.shape());
 
-    // versus the way stock OpenCV-CUDA would run the same chain
-    let t0 = std::time::Instant::now();
-    let _ = cv::execute_operations(&ctx, &input, DType::F32, &iops)?;
-    let fused_t = t0.elapsed();
-    let t0 = std::time::Instant::now();
-    let _ = cv::execute_operations_opencv_style(&ctx, &input, DType::F32, &iops)?;
-    let unfused_t = t0.elapsed();
-    println!(
-        "fused {:.2}ms vs per-op {:.2}ms -> {:.1}x ({} launches saved)",
-        fused_t.as_secs_f64() * 1e3,
-        unfused_t.as_secs_f64() * 1e3,
-        unfused_t.as_secs_f64() / fused_t.as_secs_f64(),
-        ctx.unfused.last_launches() - 1,
-    );
+    let p = cv::build_pipeline(&input, DType::F32, &iops)?;
+    match ctx.fused() {
+        Ok(fused) => {
+            // what did the planner do?
+            let plan = fused.plan_for(&p)?;
+            println!("plan tier: {} ({} launch)", plan.tier(), plan.launches());
+
+            // versus the way stock OpenCV-CUDA would run the same chain
+            let t0 = std::time::Instant::now();
+            let _ = cv::execute_operations(&ctx, &input, DType::F32, &iops)?;
+            let fused_t = t0.elapsed();
+            let t0 = std::time::Instant::now();
+            let _ = cv::execute_operations_opencv_style(&ctx, &input, DType::F32, &iops)?;
+            let unfused_t = t0.elapsed();
+            println!(
+                "fused {:.2}ms vs per-op {:.2}ms -> {:.1}x ({} launches saved)",
+                fused_t.as_secs_f64() * 1e3,
+                unfused_t.as_secs_f64() * 1e3,
+                unfused_t.as_secs_f64() / fused_t.as_secs_f64(),
+                ctx.unfused()?.last_launches() - 1,
+            );
+        }
+        Err(_) => {
+            // artifact-free machine: the host backend still demonstrates VF —
+            // one fused pass vs one whole-buffer sweep per op
+            let t0 = std::time::Instant::now();
+            let _ = ctx.host().run(&p, &input)?;
+            let fused_t = t0.elapsed();
+            let t0 = std::time::Instant::now();
+            let _ = fkl::hostref::run_pipeline(&p, &input);
+            let sweep_t = t0.elapsed();
+            println!(
+                "host fused {:.2}ms vs op-at-a-time {:.2}ms -> {:.1}x",
+                fused_t.as_secs_f64() * 1e3,
+                sweep_t.as_secs_f64() * 1e3,
+                sweep_t.as_secs_f64() / fused_t.as_secs_f64(),
+            );
+        }
+    }
 
     // and the device memory VF avoids allocating
     let r = fkl::fusion::memsave::report(&p);

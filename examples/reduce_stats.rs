@@ -7,17 +7,19 @@
 //! ```
 
 use fkl::cv::Context;
+use fkl::exec::EngineSelect;
 use fkl::proplite::Rng;
 use fkl::tensor::Tensor;
 
 fn main() -> anyhow::Result<()> {
-    let ctx = Context::new()?;
+    // drives a named AOT artifact: pin the XLA backend
+    let ctx = Context::with_select(EngineSelect::Xla, None)?;
     let mut rng = Rng::new(4);
     let x = Tensor::from_f32(&rng.vec_f32(512 * 512, -100.0, 100.0), &[512, 512]);
 
     // one fused launch computing all four statistics
     let name = "reduce_stats_f32_512x512_pallas";
-    let out = ctx.fused.executor().run(name, &[x.clone()])?;
+    let out = ctx.fused()?.executor().run(name, &[&x])?;
     let s = out.as_f32().unwrap().to_vec();
     println!(
         "one-pass ReduceDPP: max={:.3} min={:.3} sum={:.1} mean={:.4}",
@@ -34,9 +36,10 @@ fn main() -> anyhow::Result<()> {
 
     // the naive alternative sweeps the matrix four times on host; compare:
     let reps = 20;
+    let exec = ctx.fused()?.executor();
     let t0 = std::time::Instant::now();
     for _ in 0..reps {
-        std::hint::black_box(ctx.fused.executor().run(name, &[x.clone()])?);
+        std::hint::black_box(exec.run(name, &[&x])?);
     }
     let one_pass = t0.elapsed().as_secs_f64() / reps as f64;
     let t0 = std::time::Instant::now();

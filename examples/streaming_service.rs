@@ -14,20 +14,23 @@
 
 use std::time::{Duration, Instant};
 
+use fkl::chain::{Chain, ConvertTo, Div, Mul, Sub, F32, U8};
 use fkl::coordinator::{BatchPolicy, Service, ServiceConfig};
-use fkl::ops::{Opcode, Pipeline};
+use fkl::ops::Pipeline;
 use fkl::proplite::Rng;
-use fkl::tensor::{DType, Tensor};
+use fkl::tensor::Tensor;
 
 fn normalize_pipeline() -> Pipeline {
-    Pipeline::from_opcodes(
-        &[(Opcode::Nop, 0.0), (Opcode::Mul, 0.5), (Opcode::Sub, 3.0), (Opcode::Div, 1.7)],
-        &[60, 120],
-        1,
-        DType::U8,
-        DType::F32,
-    )
-    .unwrap()
+    // the normalization chain through the compile-time-checked front door;
+    // the coordinator consumes the lowered IR (same signature, same plans)
+    Chain::read::<U8>(&[60, 120])
+        .map(ConvertTo)
+        .map(Mul(0.5))
+        .map(Sub(3.0))
+        .map(Div(1.7))
+        .cast::<F32>()
+        .write()
+        .into_pipeline()
 }
 
 fn main() -> anyhow::Result<()> {

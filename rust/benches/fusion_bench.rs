@@ -13,26 +13,27 @@ use fkl::bench::{time_fn, time_fn_reps};
 use fkl::cv::Context;
 use fkl::exec::Engine;
 use fkl::fusion::plan_pipeline;
-use fkl::ops::{Opcode, Pipeline};
+use fkl::ops::Opcode;
 use fkl::proplite::Rng;
 use fkl::runtime::tensor_to_literal;
 use fkl::tensor::{DType, Tensor};
 
 fn main() -> anyhow::Result<()> {
-    let ctx = Context::new()?;
+    // drives AOT artifacts: pin the XLA backend
+    let ctx = Context::with_select(fkl::exec::EngineSelect::Xla, None)?;
     let mut rng = Rng::new(1);
     println!("# fusion_bench");
 
     // --- planner throughput -------------------------------------------------
-    let p = Pipeline::from_opcodes(
+    let p = fkl::chain::build_erased_opcodes(
         &[(Opcode::Nop, 0.0), (Opcode::Mul, 0.5), (Opcode::Sub, 3.0), (Opcode::Div, 1.7)],
         &[60, 120],
         50,
         DType::U8,
         DType::F32,
-    )
-    .unwrap();
-    let st = time_fn_reps(2000, || plan_pipeline(&p, &ctx.registry, "pallas").unwrap());
+    );
+    let reg = ctx.registry()?;
+    let st = time_fn_reps(2000, || plan_pipeline(&p, &reg, "pallas").unwrap());
     println!("planner/plan_cmsd_b50:        {:>10.2} us/plan ({:.0} plans/s)", st.mean_us(), 1.0 / st.mean_s);
 
     let sl = {
@@ -41,9 +42,9 @@ fn main() -> anyhow::Result<()> {
             chain.push((Opcode::Mul, 0.999));
             chain.push((Opcode::Add, 0.001));
         }
-        Pipeline::from_opcodes(&chain, &[512, 1024], 1, DType::U8, DType::U8).unwrap()
+        fkl::chain::build_erased_opcodes(&chain, &[512, 1024], 1, DType::U8, DType::U8)
     };
-    let st = time_fn_reps(50, || plan_pipeline(&sl, &ctx.registry, "pallas").unwrap());
+    let st = time_fn_reps(50, || plan_pipeline(&sl, &reg, "pallas").unwrap());
     println!("planner/plan_muladd_2000ops:  {:>10.2} us/plan (staticloop detection)", st.mean_us());
 
     // --- literal marshaling -------------------------------------------------
@@ -56,9 +57,11 @@ fn main() -> anyhow::Result<()> {
 
     // --- engines on the canonical chain -------------------------------------
     let input = Tensor::from_u8(&rng.vec_u8(50 * 60 * 120), &[50, 60, 120]);
-    for (name, engine) in
-        [("fused", &ctx.fused as &dyn Engine), ("unfused", &ctx.unfused), ("graph", &ctx.graph)]
-    {
+    for (name, engine) in [
+        ("fused", ctx.fused()? as &dyn Engine),
+        ("unfused", ctx.unfused()? as &dyn Engine),
+        ("graph", ctx.graph()? as &dyn Engine),
+    ] {
         let st = time_fn(30, Duration::from_secs(2), || engine.run(&p, &input).unwrap());
         println!(
             "engine/cmsd_b50/{name:8}       {:>7.3} ms ({} launches, rsd {:.1}%)",
@@ -71,10 +74,10 @@ fn main() -> anyhow::Result<()> {
     // --- dispatch floor ------------------------------------------------------
     let tiny = Tensor::from_f32(&rng.vec_f32(64, 0.0, 1.0), &[2, 4, 8]);
     let params = Tensor::from_f32(&[1.5, 2.0], &[2]);
-    let exec = ctx.fused.executor();
+    let exec = ctx.fused()?.executor();
     let st = time_fn_reps(
         500,
-        || exec.run("chain_mul-add_f322f32_4x8_b2_pallas", &[tiny.clone(), params.clone()]).unwrap(),
+        || exec.run("chain_mul-add_f322f32_4x8_b2_pallas", &[&tiny, &params]).unwrap(),
     );
     println!("dispatch/single_launch_floor: {:>10.2} us", st.mean_us());
     Ok(())

@@ -21,6 +21,7 @@
 use std::time::Duration;
 
 use fkl::bench::time_fn;
+use fkl::chain::{build_erased_opcodes, Chain, ConvertTo, Div, Mul, Sub, F32, U8};
 use fkl::exec::{Engine, HostFusedEngine};
 use fkl::hostref;
 use fkl::jsonlite::Value;
@@ -144,7 +145,7 @@ fn main() {
     let f32_frame = Tensor::from_f32(&rng.vec_f32(h * w, -2.0, 2.0), &[1, h, w]);
     let lens: &[usize] = if fast { &[1, 5, 16] } else { &[1, 2, 3, 4, 5, 6, 8, 12, 16] };
     for &k in lens {
-        let p = Pipeline::from_opcodes(&chain(k), &[h, w], 1, DType::F32, DType::F32).unwrap();
+        let p = build_erased_opcodes(&chain(k), &[h, w], 1, DType::F32, DType::F32);
         points.push(measure(
             &format!("f32/1080p/chain{k}"),
             &p,
@@ -168,24 +169,24 @@ fn main() {
 
     // --- u8 -> f32 normalization (the paper's production preprocessing) ----
     let u8_frame = Tensor::from_u8(&rng.vec_u8(h * w), &[1, h, w]);
-    let p = Pipeline::from_opcodes(
-        &[(Opcode::Nop, 0.0), (Opcode::Mul, 1.0 / 255.0), (Opcode::Sub, 0.45), (Opcode::Div, 0.226)],
-        &[h, w],
-        1,
-        DType::U8,
-        DType::F32,
-    )
-    .unwrap();
+    let p = Chain::read::<U8>(&[h, w])
+        .map(ConvertTo)
+        .map(Mul(1.0 / 255.0))
+        .map(Sub(0.45))
+        .map(Div(0.226))
+        .cast::<F32>()
+        .write()
+        .into_pipeline();
     points.push(measure("u8f32/1080p/normalize", &p, &u8_frame, &eng_1t, &eng_mt, reps, budget));
 
     // --- u8 -> u8 (oracle-exact f64 accumulation path) ---------------------
-    let p = Pipeline::from_opcodes(&chain(6), &[h, w], 1, DType::U8, DType::U8).unwrap();
+    let p = build_erased_opcodes(&chain(6), &[h, w], 1, DType::U8, DType::U8);
     points.push(measure("u8/1080p/chain6", &p, &u8_frame, &eng_1t, &eng_mt, reps, budget));
 
     // --- HF analog: batch of 64 camera crops -------------------------------
     let (bh, bw, b) = (256usize, 256usize, 64usize);
     let batch_in = Tensor::from_f32(&rng.vec_f32(b * bh * bw, -2.0, 2.0), &[b, bh, bw]);
-    let p = Pipeline::from_opcodes(&chain(5), &[bh, bw], b, DType::F32, DType::F32).unwrap();
+    let p = build_erased_opcodes(&chain(5), &[bh, bw], b, DType::F32, DType::F32);
     points.push(measure("f32/batch64x256x256/chain5", &p, &batch_in, &eng_1t, &eng_mt, reps, budget));
 
     // --- report ------------------------------------------------------------

@@ -1,0 +1,762 @@
+//! The typed fusion-chain builder — ONE compile-time-checked front door for
+//! every backend.
+//!
+//! The paper's core contribution is an API: users compose fusionable
+//! components through a high-level interface, and C++17 metaprogramming
+//! statically asserts Read-first/Write-last plus per-stage type flow
+//! (Fig. 10 `S_ASSERT_INPUT_OUTPUT`) *before* a fused kernel is generated.
+//! This module is the Rust analog: a typestate builder in which an illegal
+//! chain is a **compile error**, not a `PipelineError` at run time.
+//!
+//! ```
+//! use fkl::chain::{Chain, Mul, Sub, F32, U8};
+//!
+//! // read u8 -> *0.5 -> -10 -> write f32: checked entirely by the compiler
+//! let p = Chain::read::<U8>(&[60, 120])
+//!     .batch(4)
+//!     .map(Mul(0.5))
+//!     .map(Sub(10.0))
+//!     .cast::<F32>()
+//!     .write();
+//! assert_eq!(p.pipeline().dtin, fkl::tensor::DType::U8);
+//! assert_eq!(p.pipeline().dtout, fkl::tensor::DType::F32);
+//! assert_eq!(p.pipeline().batch, 4);
+//! ```
+//!
+//! # The typestate
+//!
+//! A chain moves through three marker states, mirroring the paper's template
+//! instantiation order:
+//!
+//! * [`Reading`] — a read end has been configured ([`Chain::read`],
+//!   [`Chain::read_crop`], [`Chain::read_resize`]); structured reads are
+//!   typed stages here, not special cases.
+//! * [`Computing`] — at least one compute stage (or an explicit
+//!   [`ChainLink::cast`]) has been appended.
+//! * [`Sealed`] — a write end ([`ChainLink::write`] /
+//!   [`ChainLink::write_split`]) turned the chain into a
+//!   [`TypedPipeline<In, Out>`]. Only sealed chains execute.
+//!
+//! Alongside the state, two dtype markers flow through the builder:
+//! `In` (fixed by the read) and `Cur` (the current element type, changed
+//! only by the explicit [`ChainLink::cast`] boundary). The write end seals
+//! at `Cur`, so the output dtype of a chain is part of its compile-time
+//! type — exactly the paper's per-stage `InputType`/`OutputType` agreement.
+//!
+//! # Illegal chains do not compile
+//!
+//! Each of the following mirrors the runtime [`PipelineError`] variant the
+//! lowered IR still enforces (see `rust/tests/chain_api.rs` for the runtime
+//! pins); the typed front door rejects them at compile time.
+//!
+//! Missing write ([`PipelineError::MissingWrite`]) — an unsealed chain is
+//! not a pipeline:
+//!
+//! ```compile_fail
+//! use fkl::chain::{Chain, Mul, TypedPipeline, F32};
+//! let p: TypedPipeline<F32, F32> = Chain::read::<F32>(&[4, 4]).map(Mul(2.0));
+//! ```
+//!
+//! Missing read ([`PipelineError::MissingRead`]) — the read constructors are
+//! the only way to begin a chain; `ChainLink` cannot be assembled by hand:
+//!
+//! ```compile_fail
+//! use fkl::chain::{ChainLink, Computing, F32};
+//! let c = ChainLink::<Computing, F32, F32> {
+//!     ops: vec![],
+//!     shape: vec![4],
+//!     batch: 1,
+//!     _t: std::marker::PhantomData,
+//! };
+//! ```
+//!
+//! Interior memory op ([`PipelineError::InteriorMemOp`]) — a read is not a
+//! compute stage, so it cannot appear mid-chain:
+//!
+//! ```compile_fail
+//! use fkl::chain::{Chain, Mul, F32};
+//! let _ = Chain::read::<F32>(&[4]).map(Mul(2.0)).map(Chain::read::<F32>(&[4]));
+//! ```
+//!
+//! Mismatched dtype boundary — the write seals at the chain's *current*
+//! type; a `U8` chain with no cast can never be an `F32` pipeline:
+//!
+//! ```compile_fail
+//! use fkl::chain::{Chain, Mul, TypedPipeline, F32, U8};
+//! let p: TypedPipeline<U8, F32> = Chain::read::<U8>(&[4]).map(Mul(2.0)).write();
+//! ```
+//!
+//! # Lowering and execution
+//!
+//! A [`TypedPipeline`] *is* a validated runtime [`Pipeline`] plus its
+//! compile-time dtype evidence. The runtime `Pipeline` stays the stable IR
+//! for the XLA/unfused/graph engines and the [`Signature`] plan cache
+//! (signatures remain parameter-agnostic, so cache reuse is unchanged).
+//! On the host backend the evidence pays off directly:
+//! [`TypedPipeline::run_host`] dispatches into
+//! [`HostFusedEngine::run_mono`], whose `(input lane, output lane)` pair is
+//! fixed by the caller's *types* — the monomorphized single-pass loop is
+//! selected at compile time with zero runtime dtype dispatch, the Rust
+//! analog of the paper's compile-time kernel generation.
+//!
+//! Callers whose dtypes are data (CLI flags, manifest-driven sweeps) go
+//! through [`build_erased`], the 5x5 monomorphization table over the same
+//! typed builder — the one sanctioned dynamic entrance, so every pipeline
+//! in the system flows through this module.
+
+use std::marker::PhantomData;
+
+use anyhow::{ensure, Context as _, Result};
+
+use crate::exec::{HostFusedEngine, HostLane};
+use crate::ops::{IOp, MemOp, Opcode, Pipeline, Signature};
+#[allow(unused_imports)] // doc links
+use crate::ops::PipelineError;
+use crate::tensor::{DType, Rect, Tensor, TensorData};
+
+// ---------------------------------------------------------------------------
+// dtype markers
+
+mod sealed {
+    /// Seals [`super::Elem`]: the dtype vocabulary is exactly the five
+    /// manifest dtypes, mirroring the paper's template instantiation set.
+    pub trait SealedElem {}
+    /// Seals [`super::State`]: Reading/Computing/Sealed only.
+    pub trait SealedState {}
+}
+
+/// A compile-time element-type marker (the `T` of the paper's `Ptr2D<T>`
+/// template parameters). Ties the marker to its runtime [`DType`], its
+/// host lane type, and the tensor accessors the monomorphized loops need.
+pub trait Elem: sealed::SealedElem + 'static {
+    /// The runtime dtype this marker lowers to.
+    const DTYPE: DType;
+    /// The host lane the fused loop reads/writes for this dtype.
+    type Lane: HostLane;
+    /// View a tensor's storage as this lane type (None on dtype mismatch).
+    fn slice(t: &Tensor) -> Option<&[Self::Lane]>;
+    /// Wrap an owned lane buffer as a tensor (no copy).
+    fn from_vec(v: Vec<Self::Lane>, shape: &[usize]) -> Tensor;
+}
+
+macro_rules! elem {
+    ($(#[$m:meta])* $marker:ident, $dt:ident, $lane:ty, $as:ident, $variant:ident) => {
+        $(#[$m])*
+        #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+        pub struct $marker;
+
+        impl sealed::SealedElem for $marker {}
+
+        impl Elem for $marker {
+            const DTYPE: DType = DType::$dt;
+            type Lane = $lane;
+
+            fn slice(t: &Tensor) -> Option<&[$lane]> {
+                t.$as()
+            }
+
+            fn from_vec(v: Vec<$lane>, shape: &[usize]) -> Tensor {
+                Tensor::from_data(TensorData::$variant(v), shape)
+            }
+        }
+    };
+}
+
+elem!(
+    /// `u8` element marker (image bytes).
+    U8, U8, u8, as_u8, U8
+);
+elem!(
+    /// `u16` element marker.
+    U16, U16, u16, as_u16, U16
+);
+elem!(
+    /// `i32` element marker.
+    I32, I32, i32, as_i32, I32
+);
+elem!(
+    /// `f32` element marker.
+    F32, F32, f32, as_f32, F32
+);
+elem!(
+    /// `f64` element marker.
+    F64, F64, f64, as_f64, F64
+);
+
+// ---------------------------------------------------------------------------
+// typestate markers
+
+/// Typestate of an open (unsealed) chain. Sealed trait: the only states are
+/// [`Reading`], [`Computing`] and (via [`TypedPipeline`]) [`Sealed`].
+pub trait State: sealed::SealedState {}
+
+/// Typestate: a read end is configured, no compute stage yet.
+#[derive(Debug, Clone, Copy)]
+pub struct Reading;
+
+/// Typestate: at least one compute stage (or cast) has been appended.
+#[derive(Debug, Clone, Copy)]
+pub struct Computing;
+
+/// Typestate: the chain has its write end. [`TypedPipeline`] is the sealed
+/// form — the marker exists so the state vocabulary is nameable in bounds
+/// and docs.
+#[derive(Debug, Clone, Copy)]
+pub struct Sealed;
+
+impl sealed::SealedState for Reading {}
+impl State for Reading {}
+impl sealed::SealedState for Computing {}
+impl State for Computing {}
+impl sealed::SealedState for Sealed {}
+impl State for Sealed {}
+
+// ---------------------------------------------------------------------------
+// compute stages
+
+/// A reified compute stage — the value `cv::*` wrappers return and
+/// [`ChainLink::map`] accepts. Compute-only **by construction**: there is no
+/// constructor that wraps a memory op, so an interior read/write is
+/// unrepresentable in the typed API (the compile-time form of
+/// [`PipelineError::InteriorMemOp`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ComputeOp {
+    iop: IOp,
+}
+
+impl ComputeOp {
+    /// Element-wise op with a scalar parameter (ignored by unary ops).
+    pub fn scalar(op: Opcode, param: f64) -> ComputeOp {
+        ComputeOp { iop: IOp::compute(op, param) }
+    }
+
+    /// Element-wise op with a per-channel float3 parameter.
+    pub fn c3(op: Opcode, param: [f32; 3]) -> ComputeOp {
+        ComputeOp { iop: IOp::ComputeC3 { op, param } }
+    }
+
+    /// BGR<->RGB channel swizzle (the ColorConvert UOp).
+    pub fn cvt_color() -> ComputeOp {
+        ComputeOp { iop: IOp::CvtColor }
+    }
+
+    /// The underlying IOp (always a compute op, never a memop).
+    pub fn iop(&self) -> &IOp {
+        &self.iop
+    }
+
+    /// Lower into the runtime IOp.
+    pub fn into_iop(self) -> IOp {
+        self.iop
+    }
+}
+
+/// Anything that can be appended to a chain as one compute stage: the sugar
+/// stage structs ([`Mul`], [`Abs`], [`MulC3`], [`CvtColor`], ...) and
+/// [`ComputeOp`] itself. Memory operations deliberately do NOT implement
+/// this — reads begin chains, writes seal them.
+pub trait ComputeStage {
+    fn into_op(self) -> ComputeOp;
+}
+
+impl ComputeStage for ComputeOp {
+    fn into_op(self) -> ComputeOp {
+        self
+    }
+}
+
+macro_rules! scalar_stage {
+    ($(#[$m:meta])* $name:ident, $op:ident) => {
+        $(#[$m])*
+        #[derive(Debug, Clone, Copy, PartialEq)]
+        pub struct $name(pub f64);
+
+        impl ComputeStage for $name {
+            fn into_op(self) -> ComputeOp {
+                ComputeOp::scalar(Opcode::$op, self.0)
+            }
+        }
+    };
+}
+
+macro_rules! unit_stage {
+    ($(#[$m:meta])* $name:ident, $op:ident) => {
+        $(#[$m])*
+        #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+        pub struct $name;
+
+        impl ComputeStage for $name {
+            fn into_op(self) -> ComputeOp {
+                ComputeOp::scalar(Opcode::$op, 0.0)
+            }
+        }
+    };
+}
+
+macro_rules! c3_stage {
+    ($(#[$m:meta])* $name:ident, $op:ident) => {
+        $(#[$m])*
+        #[derive(Debug, Clone, Copy, PartialEq)]
+        pub struct $name(pub [f32; 3]);
+
+        impl ComputeStage for $name {
+            fn into_op(self) -> ComputeOp {
+                ComputeOp::c3(Opcode::$op, self.0)
+            }
+        }
+    };
+}
+
+scalar_stage!(
+    /// Multiply by a scalar (`cv::cuda::multiply`).
+    Mul, Mul
+);
+scalar_stage!(
+    /// Add a scalar (`cv::cuda::add`).
+    Add, Add
+);
+scalar_stage!(
+    /// Subtract a scalar (`cv::cuda::subtract`).
+    Sub, Sub
+);
+scalar_stage!(
+    /// Divide by a scalar (`cv::cuda::divide`).
+    Div, Div
+);
+scalar_stage!(
+    /// Element-wise min with a scalar.
+    Min, Min
+);
+scalar_stage!(
+    /// Element-wise max with a scalar.
+    Max, Max
+);
+unit_stage!(
+    /// Identity stage — the `convertTo` placeholder of the OpenCV-flavored
+    /// wrapper (the dtype change itself happens at [`ChainLink::cast`] /
+    /// the write boundary).
+    ConvertTo, Nop
+);
+unit_stage!(
+    /// Absolute value.
+    Abs, Abs
+);
+unit_stage!(
+    /// Negate.
+    Neg, Neg
+);
+unit_stage!(
+    /// `sqrt(|x|)`.
+    Sqrt, Sqrt
+);
+unit_stage!(
+    /// `exp(x)`.
+    Exp, Exp
+);
+unit_stage!(
+    /// `ln(|x| + 1)`.
+    Log, Log
+);
+unit_stage!(
+    /// Clamp into `[0, 1]`.
+    Clamp01, Clamp01
+);
+c3_stage!(
+    /// Per-channel multiply (`nppiMulC_32f_C3R`).
+    MulC3, Mul
+);
+c3_stage!(
+    /// Per-channel add.
+    AddC3, Add
+);
+c3_stage!(
+    /// Per-channel subtract (`nppiSubC_32f_C3R`).
+    SubC3, Sub
+);
+c3_stage!(
+    /// Per-channel divide (`nppiDivC_32f_C3R`).
+    DivC3, Div
+);
+
+/// BGR<->RGB channel swizzle stage (ColorConvert).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CvtColor;
+
+impl ComputeStage for CvtColor {
+    fn into_op(self) -> ComputeOp {
+        ComputeOp::cvt_color()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the builder
+
+/// The front door: associated constructors for the read end of a chain.
+/// Structured reads (crop, crop+resize) are first-class typed stages here,
+/// exactly like the paper's Fig. 11 read patterns.
+pub struct Chain;
+
+impl Chain {
+    /// Dense per-thread read of a `[batch, *shape]` tensor.
+    pub fn read<T: Elem>(shape: &[usize]) -> ChainLink<Reading, T, T> {
+        ChainLink::start(IOp::Mem(MemOp::Read { dtype: T::DTYPE }), shape.to_vec())
+    }
+
+    /// Crop-ROI read from a shared frame (BatchRead pattern). The element
+    /// shape is the packed-RGB crop `[h, w, 3]`.
+    pub fn read_crop<T: Elem>(rect: Rect) -> ChainLink<Reading, T, T> {
+        ChainLink::start(
+            IOp::Mem(MemOp::CropRead { rect }),
+            vec![rect.h as usize, rect.w as usize, 3],
+        )
+    }
+
+    /// Crop + bilinear-resize read fused at the read end (Fig. 11). The
+    /// element shape is the packed-RGB destination `[dst_h, dst_w, 3]`.
+    pub fn read_resize<T: Elem>(
+        rect: Rect,
+        dst_h: usize,
+        dst_w: usize,
+    ) -> ChainLink<Reading, T, T> {
+        ChainLink::start(
+            IOp::Mem(MemOp::ResizeRead { rect, dst_h, dst_w }),
+            vec![dst_h, dst_w, 3],
+        )
+    }
+}
+
+/// An open chain: `S` is the typestate ([`Reading`] or [`Computing`]), `In`
+/// the dtype fixed by the read end, `Cur` the current element type the next
+/// stage sees. Sealing ([`ChainLink::write`]) yields a
+/// [`TypedPipeline<In, Cur>`].
+pub struct ChainLink<S, In, Cur> {
+    ops: Vec<IOp>,
+    shape: Vec<usize>,
+    batch: usize,
+    _t: PhantomData<fn() -> (S, In, Cur)>,
+}
+
+impl<In: Elem> ChainLink<Reading, In, In> {
+    fn start(read: IOp, shape: Vec<usize>) -> ChainLink<Reading, In, In> {
+        ChainLink { ops: vec![read], shape, batch: 1, _t: PhantomData }
+    }
+}
+
+impl<S: State, In: Elem, Cur: Elem> ChainLink<S, In, Cur> {
+    /// Set the HF batch width (default 1).
+    pub fn batch(mut self, n: usize) -> ChainLink<S, In, Cur> {
+        self.batch = n.max(1);
+        self
+    }
+
+    /// Append one compute stage. The element type flows through unchanged —
+    /// compute runs in the engine's accumulator domain; only
+    /// [`ChainLink::cast`] moves the dtype boundary.
+    pub fn map(mut self, stage: impl ComputeStage) -> ChainLink<Computing, In, Cur> {
+        self.ops.push(stage.into_op().into_iop());
+        self.transition()
+    }
+
+    /// Append a slice of reified stages (the `execute_operations` shape).
+    pub fn extend(mut self, stages: &[ComputeOp]) -> ChainLink<Computing, In, Cur> {
+        self.ops.extend(stages.iter().cloned().map(ComputeOp::into_iop));
+        self.transition()
+    }
+
+    /// Move the dtype boundary: every later stage (and the write end) sees
+    /// `W`. Lowering is a no-op — the runtime IR carries dtypes only at the
+    /// read/write boundary, so the cast costs nothing and the
+    /// [`Signature`] is unchanged (plan-cache parity with the untyped IR).
+    pub fn cast<W: Elem>(self) -> ChainLink<Computing, In, W> {
+        ChainLink { ops: self.ops, shape: self.shape, batch: self.batch, _t: PhantomData }
+    }
+
+    /// Seal with a dense per-thread write of the current element type.
+    pub fn write(self) -> TypedPipeline<In, Cur> {
+        self.seal(MemOp::Write { dtype: Cur::DTYPE })
+    }
+
+    /// Seal with a packed->planar split write (the Split WOp of Fig. 11).
+    pub fn write_split(self) -> TypedPipeline<In, Cur> {
+        self.seal(MemOp::SplitWrite { dtype: Cur::DTYPE })
+    }
+
+    fn transition<S2: State>(self) -> ChainLink<S2, In, Cur> {
+        ChainLink { ops: self.ops, shape: self.shape, batch: self.batch, _t: PhantomData }
+    }
+
+    fn seal(mut self, write: MemOp) -> TypedPipeline<In, Cur> {
+        self.ops.push(IOp::Mem(write));
+        let pipeline = Pipeline::new(self.ops, self.shape, self.batch, In::DTYPE, Cur::DTYPE)
+            .expect("chain builder invariant: read first, write last, compute-only interior");
+        TypedPipeline { pipeline, _t: PhantomData }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the sealed pipeline
+
+/// A sealed, compile-time-checked pipeline: the [`Sealed`] state of the
+/// chain. Carries the validated runtime [`Pipeline`] (the stable IR every
+/// engine and the [`Signature`] plan cache consume) plus the `In`/`Out`
+/// dtype evidence the host backend uses to monomorphize.
+pub struct TypedPipeline<In, Out> {
+    pipeline: Pipeline,
+    _t: PhantomData<fn() -> (In, Out)>,
+}
+
+impl<In: Elem, Out: Elem> TypedPipeline<In, Out> {
+    /// The lowered runtime IR (what [`crate::exec::Engine::run`] consumes).
+    pub fn pipeline(&self) -> &Pipeline {
+        &self.pipeline
+    }
+
+    /// Lower by value (e.g. for [`crate::coordinator::Service::submit`]).
+    pub fn into_pipeline(self) -> Pipeline {
+        self.pipeline
+    }
+
+    /// Parameter-agnostic cache identity — unchanged vs the untyped IR, so
+    /// plan/artifact reuse is byte-for-byte the same.
+    pub fn signature(&self) -> Signature {
+        Signature::of(&self.pipeline)
+    }
+
+    /// Execute on the host fused engine through the **statically
+    /// monomorphized** single-pass loop: the `(In, Out)` markers pick the
+    /// lane pair at compile time ([`HostFusedEngine::run_mono`]), the Rust
+    /// analog of the paper's compile-time kernel instantiation. Numerics
+    /// are identical to the dynamic [`crate::exec::Engine::run`] path —
+    /// same plan, same loops.
+    pub fn run_host(&self, engine: &HostFusedEngine, input: &Tensor) -> Result<Tensor> {
+        let p = &self.pipeline;
+        ensure!(
+            matches!(p.ops().first(), Some(IOp::Mem(MemOp::Read { .. })))
+                && matches!(p.ops().last(), Some(IOp::Mem(MemOp::Write { .. }))),
+            "structured boundary stages (crop/resize read, split write) lower \
+             to the artifact backend, not the dense host loop"
+        );
+        ensure!(
+            input.dtype() == In::DTYPE,
+            "chain input dtype {} != typed In = {}",
+            input.dtype(),
+            In::DTYPE
+        );
+        let mut want = vec![p.batch];
+        want.extend_from_slice(&p.shape);
+        ensure!(
+            input.shape() == want.as_slice(),
+            "chain input shape {:?} != pipeline {:?}",
+            input.shape(),
+            want
+        );
+        let src = In::slice(input).context("dtype checked above")?;
+        let out: Vec<Out::Lane> = engine.run_mono(p, src)?;
+        Ok(Out::from_vec(out, &want))
+    }
+}
+
+impl<In: Elem, Out: Elem> Clone for TypedPipeline<In, Out> {
+    fn clone(&self) -> Self {
+        TypedPipeline { pipeline: self.pipeline.clone(), _t: PhantomData }
+    }
+}
+
+impl<In: Elem, Out: Elem> std::fmt::Debug for TypedPipeline<In, Out> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TypedPipeline")
+            .field("in", &In::DTYPE)
+            .field("out", &Out::DTYPE)
+            .field("pipeline", &self.pipeline)
+            .finish()
+    }
+}
+
+impl<In: Elem, Out: Elem> From<TypedPipeline<In, Out>> for Pipeline {
+    fn from(tp: TypedPipeline<In, Out>) -> Pipeline {
+        tp.pipeline
+    }
+}
+
+impl<In: Elem, Out: Elem> From<&TypedPipeline<In, Out>> for Pipeline {
+    fn from(tp: &TypedPipeline<In, Out>) -> Pipeline {
+        tp.pipeline.clone()
+    }
+}
+
+impl<In: Elem, Out: Elem> AsRef<Pipeline> for TypedPipeline<In, Out> {
+    fn as_ref(&self) -> &Pipeline {
+        &self.pipeline
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the dynamic entrance (dtypes as data)
+
+/// Build through the typed chain with *runtime* dtypes: the 5x5
+/// monomorphization table over [`Chain::read`]/[`ChainLink::cast`]. This is
+/// the single sanctioned dynamic entrance — CLI flags and manifest-driven
+/// sweeps lower here, so every pipeline in the system flows through the
+/// typed builder. Infallible by construction (the builder's invariants hold
+/// for every dispatch arm).
+pub fn build_erased(
+    stages: &[ComputeOp],
+    shape: &[usize],
+    batch: usize,
+    dtin: DType,
+    dtout: DType,
+) -> Pipeline {
+    fn seal_out<In: Elem>(
+        link: ChainLink<Computing, In, In>,
+        dtout: DType,
+    ) -> Pipeline {
+        match dtout {
+            DType::U8 => link.cast::<U8>().write().into_pipeline(),
+            DType::U16 => link.cast::<U16>().write().into_pipeline(),
+            DType::I32 => link.cast::<I32>().write().into_pipeline(),
+            DType::F32 => link.cast::<F32>().write().into_pipeline(),
+            DType::F64 => link.cast::<F64>().write().into_pipeline(),
+        }
+    }
+    fn build_in<In: Elem>(
+        stages: &[ComputeOp],
+        shape: &[usize],
+        batch: usize,
+        dtout: DType,
+    ) -> Pipeline {
+        seal_out::<In>(Chain::read::<In>(shape).batch(batch).extend(stages), dtout)
+    }
+    match dtin {
+        DType::U8 => build_in::<U8>(stages, shape, batch, dtout),
+        DType::U16 => build_in::<U16>(stages, shape, batch, dtout),
+        DType::I32 => build_in::<I32>(stages, shape, batch, dtout),
+        DType::F32 => build_in::<F32>(stages, shape, batch, dtout),
+        DType::F64 => build_in::<F64>(stages, shape, batch, dtout),
+    }
+}
+
+/// [`build_erased`] over `(Opcode, param)` pairs — the migration path for
+/// the experiment/bench sweeps that used `Pipeline::from_opcodes`.
+pub fn build_erased_opcodes(
+    chain: &[(Opcode, f64)],
+    shape: &[usize],
+    batch: usize,
+    dtin: DType,
+    dtout: DType,
+) -> Pipeline {
+    let stages: Vec<ComputeOp> =
+        chain.iter().map(|&(op, param)| ComputeOp::scalar(op, param)).collect();
+    build_erased(&stages, shape, batch, dtin, dtout)
+}
+
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::Engine;
+
+    #[test]
+    fn typed_chain_lowers_to_the_same_ir_as_the_untyped_builder() {
+        // plan-cache parity: identical IOps, dtypes, shape, batch, signature
+        let typed = Chain::read::<U8>(&[60, 120])
+            .batch(4)
+            .map(ConvertTo)
+            .map(Mul(0.5))
+            .map(Sub(3.0))
+            .map(Div(1.7))
+            .cast::<F32>()
+            .write();
+        let untyped = Pipeline::from_opcodes(
+            &[(Opcode::Nop, 0.0), (Opcode::Mul, 0.5), (Opcode::Sub, 3.0), (Opcode::Div, 1.7)],
+            &[60, 120],
+            4,
+            DType::U8,
+            DType::F32,
+        )
+        .unwrap();
+        assert_eq!(typed.pipeline(), &untyped);
+        assert_eq!(typed.signature(), Signature::of(&untyped));
+    }
+
+    #[test]
+    fn cast_is_free_and_signature_is_param_agnostic() {
+        let a = Chain::read::<F32>(&[8]).map(Mul(2.0)).write();
+        let b = Chain::read::<F32>(&[8]).map(Mul(9.0)).cast::<F32>().write();
+        assert_eq!(a.signature(), b.signature(), "cast adds no ops, params ignored");
+    }
+
+    #[test]
+    fn structured_reads_and_split_writes_are_typed_stages() {
+        let r = Rect::new(10, 20, 120, 60);
+        let p = Chain::read_resize::<U8>(r, 128, 64)
+            .map(CvtColor)
+            .map(MulC3([0.5, 0.4, 0.3]))
+            .cast::<F32>()
+            .write_split();
+        let sig = p.signature();
+        assert_eq!(sig.ops, "resize[128x64]-cvtcolor-mulc3-split[f32]");
+        assert_eq!(sig.dtin, "u8");
+        assert_eq!(sig.dtout, "f32");
+        assert_eq!(p.pipeline().shape, vec![128, 64, 3]);
+        // the dense host loop refuses structured reads loudly
+        let eng = HostFusedEngine::with_threads(1);
+        let frame = Tensor::zeros(DType::U8, &[1, 128, 64, 3]);
+        assert!(p.run_host(&eng, &frame).is_err());
+    }
+
+    #[test]
+    fn run_host_matches_the_dynamic_engine_bitwise() {
+        let typed = Chain::read::<U8>(&[9, 7])
+            .batch(2)
+            .map(Mul(1.7))
+            .map(Add(11.0))
+            .write();
+        let mut vals = Vec::new();
+        let mut x = 3u64;
+        for _ in 0..126 {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            vals.push((x >> 56) as u8);
+        }
+        let input = Tensor::from_u8(&vals, &[2, 9, 7]);
+        let eng = HostFusedEngine::with_threads(2);
+        let mono = typed.run_host(&eng, &input).unwrap();
+        let dynamic = eng.run(typed.pipeline(), &input).unwrap();
+        assert_eq!(mono, dynamic, "static and dynamic dispatch share the loops");
+        assert_eq!(mono, crate::hostref::run_pipeline(typed.pipeline(), &input));
+    }
+
+    #[test]
+    fn run_host_rejects_wrong_inputs_loudly() {
+        let typed = Chain::read::<F32>(&[4]).map(Mul(2.0)).write();
+        let eng = HostFusedEngine::with_threads(1);
+        let wrong_dtype = Tensor::from_u8(&[1; 4], &[1, 4]);
+        assert!(typed.run_host(&eng, &wrong_dtype).is_err());
+        let wrong_shape = Tensor::from_f32(&[0.0; 8], &[2, 4]);
+        assert!(typed.run_host(&eng, &wrong_shape).is_err());
+    }
+
+    #[test]
+    fn erased_entrance_dispatches_every_dtype_pair() {
+        const ALL: [DType; 5] =
+            [DType::U8, DType::U16, DType::I32, DType::F32, DType::F64];
+        let stages = [ComputeOp::scalar(Opcode::Mul, 2.0)];
+        for dtin in ALL {
+            for dtout in ALL {
+                let p = build_erased(&stages, &[4, 4], 3, dtin, dtout);
+                assert_eq!(p.dtin, dtin);
+                assert_eq!(p.dtout, dtout);
+                assert_eq!(p.batch, 3);
+                assert_eq!(p.body().len(), 1);
+            }
+        }
+    }
+
+    #[test]
+    fn reading_state_can_seal_directly() {
+        // a read-write passthrough is legal (the runtime IR allows an empty
+        // body); the typestate permits sealing from Reading
+        let p = Chain::read::<F32>(&[4]).write();
+        assert_eq!(p.pipeline().body().len(), 0);
+    }
+}

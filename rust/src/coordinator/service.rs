@@ -12,20 +12,10 @@ use crate::fusion::{hfusion, PlannerStats};
 use crate::ops::Pipeline;
 use crate::tensor::Tensor;
 
-/// Which execution backend the service thread builds.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
-pub enum EngineSelect {
-    /// Prefer the XLA fused engine when the artifact registry loads; fall
-    /// back to the host fused engine otherwise — the service always comes up.
-    #[default]
-    Auto,
-    /// XLA fused engine only: a missing/corrupt registry poisons the service
-    /// (every request answered with the load error). The pre-host behavior.
-    Xla,
-    /// Host fused engine only: single-pass CPU execution, no artifacts, no
-    /// PJRT — runs everywhere.
-    HostFused,
-}
+/// Which execution backend the service thread builds — the selection policy
+/// now lives in [`crate::exec`] and is shared with [`crate::cv::Context`],
+/// so every front door degrades identically.
+pub use crate::exec::EngineSelect;
 
 /// Coordinator configuration.
 #[derive(Debug, Clone)]
@@ -84,15 +74,17 @@ impl Service {
     }
 
     /// Submit one item; returns a receiver for the result. Non-blocking:
-    /// fails fast under backpressure.
+    /// fails fast under backpressure. Accepts the runtime [`Pipeline`] IR or
+    /// a typed chain ([`crate::chain::TypedPipeline`]) — the coordinator is
+    /// a chain front door like `cv`/`npp`.
     pub fn submit(
         &self,
-        pipeline: Pipeline,
+        pipeline: impl Into<Pipeline>,
         item: Tensor,
     ) -> Result<Receiver<Result<Tensor, String>>, SubmitError> {
         let (rtx, rrx) = sync_channel(1);
         let req =
-            PendingRequest { pipeline, item, enqueued: Instant::now(), reply: rtx };
+            PendingRequest { pipeline: pipeline.into(), item, enqueued: Instant::now(), reply: rtx };
         match self.tx.try_send(Msg::Request(req)) {
             Ok(()) => Ok(rrx),
             Err(TrySendError::Full(_)) => Err(SubmitError::QueueFull),
@@ -340,14 +332,8 @@ fn execute_group(
         candidates.insert(0, b);
     }
     for bucket in candidates {
-        let cand = Pipeline::new(
-            proto.ops().to_vec(),
-            proto.shape.clone(),
-            bucket,
-            proto.dtin,
-            proto.dtout,
-        )
-        .expect("group pipeline revalidation");
+        // re-batching an already-validated pipeline: same code, new HF width
+        let cand = proto.with_batch(bucket);
         if backend.covers(&cand) {
             batched = Some((bucket, cand));
             break;

@@ -1,16 +1,23 @@
 //! cvGS — the cvGPUSpeedup-style wrapper (paper §IV-D, Fig. 15/25a).
 //!
 //! Functions mirror OpenCV-CUDA's names and argument feel but, exactly like
-//! the paper's cvGS, DO NOT launch kernels: each returns an IOp. The user
-//! hands the IOps to [`execute_operations`], which builds the validated
-//! pipeline and runs it through the fused engine — one kernel for the whole
-//! chain, no intermediate `d_temp`/`d_up` allocations.
+//! the paper's cvGS, DO NOT launch kernels: each returns a typed
+//! [`ComputeOp`] stage. The user hands the stages to [`execute_operations`],
+//! which lowers them through the typed chain builder ([`crate::chain`]) and
+//! runs the validated pipeline on the context's backend — one fused pass for
+//! the whole chain, no intermediate `d_temp`/`d_up` allocations.
 //!
-//! ```no_run
+//! [`Context::new`] performs [`EngineSelect::Auto`] backend selection (the
+//! same policy as the coordinator): the XLA fused engine when the artifact
+//! registry loads, the everywhere-capable host fused engine otherwise — so
+//! this example executes on any machine, artifacts or not:
+//!
+//! ```
 //! use fkl::cv::*;
 //! use fkl::tensor::{DType, Tensor};
-//! let ctx = Context::new().unwrap();
-//! let crops = Tensor::zeros(DType::U8, &[50, 60, 120]);
+//!
+//! let ctx = Context::new().unwrap();           // Auto backend selection
+//! let crops = Tensor::from_u8(&vec![100u8; 2 * 6 * 12], &[2, 6, 12]);
 //! let out = execute_operations(
 //!     &ctx,
 //!     &crops,
@@ -21,158 +28,337 @@
 //!         subtract(10.0),          // cv::cuda::subtract
 //!         divide(2.0),             // cv::cuda::divide
 //!     ],
-//! ).unwrap();
+//! )
+//! .unwrap();
+//! assert_eq!(out.dtype(), DType::F32);
+//! assert_eq!(out.shape(), &[2, 6, 12]);
+//! // (100 * 0.5 - 10) / 2 = 20, on every backend Auto may pick
+//! assert!((out.as_f32().unwrap()[0] - 20.0).abs() < 1e-5);
+//! println!("served by {}", ctx.backend());
 //! ```
 
+use std::path::PathBuf;
 use std::rc::Rc;
 
-use anyhow::{Context as _, Result};
+use anyhow::{ensure, Context as _, Result};
 
-use crate::exec::{Engine, FusedEngine, GraphEngine, UnfusedEngine};
-use crate::ops::{IOp, Opcode, Pipeline};
+use crate::chain::{self, ComputeOp};
+use crate::exec::{
+    Engine, EngineSelect, FusedEngine, GraphEngine, HostFusedEngine, UnfusedEngine,
+};
+use crate::ops::{Opcode, Pipeline};
 use crate::runtime::Registry;
 use crate::tensor::{DType, Tensor};
 
-/// Execution context: registry + the three engines (fused is the default
-/// path; unfused/graph exist for the baseline comparisons).
-pub struct Context {
+/// Which backend [`EngineSelect`] resolution actually picked.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ActiveBackend {
+    /// The artifact registry loaded: XLA fused/unfused/graph engines.
+    Xla,
+    /// Host fused engine: single-pass CPU execution, runs everywhere.
+    HostFused,
+}
+
+impl std::fmt::Display for ActiveBackend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            ActiveBackend::Xla => "xla",
+            ActiveBackend::HostFused => "host_fused",
+        })
+    }
+}
+
+/// The artifact-backed engine set (present when the registry loaded).
+pub struct XlaEngines {
     pub fused: FusedEngine,
     pub unfused: UnfusedEngine,
     pub graph: GraphEngine,
     pub registry: Rc<Registry>,
 }
 
-impl Context {
-    pub fn new() -> Result<Context> {
-        Self::with_dir(crate::default_artifact_dir())
-    }
-
-    pub fn with_dir(dir: impl AsRef<std::path::Path>) -> Result<Context> {
-        let registry = Rc::new(Registry::load(dir).context("loading artifact registry")?);
-        Ok(Context {
+impl XlaEngines {
+    fn new(registry: Rc<Registry>) -> XlaEngines {
+        XlaEngines {
             fused: FusedEngine::new(registry.clone()),
             unfused: UnfusedEngine::new(registry.clone()),
             graph: GraphEngine::new(registry.clone()),
             registry,
-        })
+        }
     }
 }
 
-// --- the OpenCV-flavored IOp constructors (lazy, no kernel launched) -------
+/// Execution context: backend selection + the engines it resolved. The host
+/// fused engine is ALWAYS present (it is the backend that runs everywhere);
+/// the XLA engine set exists when the artifact registry loaded.
+pub struct Context {
+    xla: Option<XlaEngines>,
+    host: HostFusedEngine,
+}
 
-/// `convertTo` — dtype cast happens at the pipeline's read/write boundary, so
-/// the IOp itself is the identity (paper: Cast is a UOp).
-pub fn convert_to() -> IOp {
-    IOp::compute(Opcode::Nop, 0.0)
+impl Context {
+    /// [`EngineSelect::Auto`] on the default artifact directory: never fails
+    /// just because artifacts are absent — the host fused backend serves.
+    pub fn new() -> Result<Context> {
+        Self::with_select(EngineSelect::Auto, None)
+    }
+
+    /// XLA pinned on an explicit artifact directory (a missing registry is a
+    /// hard error — the pre-Auto behavior, used where artifacts are the
+    /// point, e.g. the experiment runners).
+    pub fn with_dir(dir: impl AsRef<std::path::Path>) -> Result<Context> {
+        Self::with_select(EngineSelect::Xla, Some(dir.as_ref().to_path_buf()))
+    }
+
+    /// Full backend selection — the same policy as
+    /// [`crate::coordinator::ServiceConfig::engine`].
+    pub fn with_select(select: EngineSelect, dir: Option<PathBuf>) -> Result<Context> {
+        let host = HostFusedEngine::new();
+        let dir = dir.unwrap_or_else(crate::default_artifact_dir);
+        let xla = match select {
+            EngineSelect::HostFused => None,
+            // without the pjrt feature there is no XLA to prefer
+            EngineSelect::Auto if !cfg!(feature = "pjrt") => None,
+            EngineSelect::Xla | EngineSelect::Auto => match Registry::load(&dir) {
+                Ok(r) => Some(XlaEngines::new(Rc::new(r))),
+                Err(e) if select == EngineSelect::Auto => {
+                    // degrade to the backend that runs everywhere, visibly
+                    eprintln!(
+                        "fkl-cv: artifact registry unavailable ({e:#}); \
+                         using the host fused backend"
+                    );
+                    None
+                }
+                Err(e) => return Err(e.context("loading artifact registry")),
+            },
+        };
+        Ok(Context { xla, host })
+    }
+
+    /// Which backend selection picked (exposed so callers can report it).
+    pub fn backend(&self) -> ActiveBackend {
+        if self.xla.is_some() {
+            ActiveBackend::Xla
+        } else {
+            ActiveBackend::HostFused
+        }
+    }
+
+    /// True when the XLA engine set is loaded.
+    pub fn has_artifacts(&self) -> bool {
+        self.xla.is_some()
+    }
+
+    /// The host fused engine (always available).
+    pub fn host(&self) -> &HostFusedEngine {
+        &self.host
+    }
+
+    /// The XLA fused engine; errors when the registry did not load.
+    pub fn fused(&self) -> Result<&FusedEngine> {
+        self.xla
+            .as_ref()
+            .map(|x| &x.fused)
+            .context("artifact registry not loaded (backend = host_fused); run `make artifacts`")
+    }
+
+    /// The per-op baseline engine; errors when the registry did not load.
+    pub fn unfused(&self) -> Result<&UnfusedEngine> {
+        self.xla
+            .as_ref()
+            .map(|x| &x.unfused)
+            .context("artifact registry not loaded (backend = host_fused); run `make artifacts`")
+    }
+
+    /// The graph-replay baseline engine; errors when the registry did not load.
+    pub fn graph(&self) -> Result<&GraphEngine> {
+        self.xla
+            .as_ref()
+            .map(|x| &x.graph)
+            .context("artifact registry not loaded (backend = host_fused); run `make artifacts`")
+    }
+
+    /// The artifact registry; errors when it did not load.
+    pub fn registry(&self) -> Result<Rc<Registry>> {
+        self.xla
+            .as_ref()
+            .map(|x| x.registry.clone())
+            .context("artifact registry not loaded (backend = host_fused); run `make artifacts`")
+    }
+
+    /// Every engine this context can drive, preferred first — the surface
+    /// `fkl run` and the examples iterate.
+    pub fn engines(&self) -> Vec<(&'static str, &dyn Engine)> {
+        let mut v: Vec<(&'static str, &dyn Engine)> = Vec::new();
+        if let Some(x) = &self.xla {
+            v.push(("fused", &x.fused));
+            v.push(("unfused", &x.unfused));
+            v.push(("graph", &x.graph));
+        }
+        v.push(("host_fused", &self.host));
+        v
+    }
+
+    /// Run a pipeline on the selected primary backend (XLA fused when
+    /// loaded, host fused otherwise).
+    pub fn run(&self, p: &Pipeline, input: &Tensor) -> Result<Tensor> {
+        match &self.xla {
+            Some(x) => x.fused.run(p, input),
+            None => self.host.run(p, input),
+        }
+    }
+}
+
+// --- the OpenCV-flavored stage constructors (lazy, no kernel launched) -----
+
+/// `convertTo` — dtype cast happens at the pipeline's read/write boundary,
+/// so the stage itself is the identity (paper: Cast is a UOp).
+pub fn convert_to() -> ComputeOp {
+    ComputeOp::scalar(Opcode::Nop, 0.0)
 }
 
 /// `cv::cuda::add` with a scalar.
-pub fn add(v: f64) -> IOp {
-    IOp::compute(Opcode::Add, v)
+pub fn add(v: f64) -> ComputeOp {
+    ComputeOp::scalar(Opcode::Add, v)
 }
 
 /// `cv::cuda::multiply` with a scalar.
-pub fn multiply(v: f64) -> IOp {
-    IOp::compute(Opcode::Mul, v)
+pub fn multiply(v: f64) -> ComputeOp {
+    ComputeOp::scalar(Opcode::Mul, v)
 }
 
 /// `cv::cuda::subtract` with a scalar.
-pub fn subtract(v: f64) -> IOp {
-    IOp::compute(Opcode::Sub, v)
+pub fn subtract(v: f64) -> ComputeOp {
+    ComputeOp::scalar(Opcode::Sub, v)
 }
 
 /// `cv::cuda::divide` with a scalar.
-pub fn divide(v: f64) -> IOp {
-    IOp::compute(Opcode::Div, v)
+pub fn divide(v: f64) -> ComputeOp {
+    ComputeOp::scalar(Opcode::Div, v)
 }
 
 /// `cv::cuda::abs`.
-pub fn abs() -> IOp {
-    IOp::compute(Opcode::Abs, 0.0)
+pub fn abs() -> ComputeOp {
+    ComputeOp::scalar(Opcode::Abs, 0.0)
 }
 
 /// `cv::cuda::min` with a scalar.
-pub fn min(v: f64) -> IOp {
-    IOp::compute(Opcode::Min, v)
+pub fn min(v: f64) -> ComputeOp {
+    ComputeOp::scalar(Opcode::Min, v)
 }
 
 /// `cv::cuda::max` with a scalar.
-pub fn max(v: f64) -> IOp {
-    IOp::compute(Opcode::Max, v)
+pub fn max(v: f64) -> ComputeOp {
+    ComputeOp::scalar(Opcode::Max, v)
 }
 
 /// `cv::cuda::sqrt` (magnitude).
-pub fn sqrt() -> IOp {
-    IOp::compute(Opcode::Sqrt, 0.0)
+pub fn sqrt() -> ComputeOp {
+    ComputeOp::scalar(Opcode::Sqrt, 0.0)
 }
 
 /// `cv::cuda::exp`.
-pub fn exp() -> IOp {
-    IOp::compute(Opcode::Exp, 0.0)
+pub fn exp() -> ComputeOp {
+    ComputeOp::scalar(Opcode::Exp, 0.0)
 }
 
-/// Build the pipeline for a batched input tensor `[B, ...shape]`.
-pub fn build_pipeline(input: &Tensor, dtout: DType, iops: &[IOp]) -> Result<Pipeline> {
+/// Lower the stage list for a batched input tensor `[B, ...shape]` through
+/// the typed chain builder (the single dynamic entrance,
+/// [`chain::build_erased`]).
+pub fn build_pipeline(input: &Tensor, dtout: DType, stages: &[ComputeOp]) -> Result<Pipeline> {
+    ensure!(
+        input.shape().len() >= 2,
+        "input must be batched: [B, ...shape], got {:?}",
+        input.shape()
+    );
     let shape = input.shape()[1..].to_vec();
     let batch = input.shape()[0];
-    Pipeline::elementwise(iops.to_vec(), shape, batch, input.dtype(), dtout)
-        .map_err(|e| anyhow::anyhow!("invalid operation chain: {e}"))
+    Ok(chain::build_erased(stages, &shape, batch, input.dtype(), dtout))
 }
 
-/// The executor function (paper Fig. 15 line 7): fuse + launch ONCE.
+/// The executor function (paper Fig. 15 line 7): fuse + launch ONCE, on
+/// whichever backend [`EngineSelect::Auto`] resolved.
 pub fn execute_operations(
     ctx: &Context,
     input: &Tensor,
     dtout: DType,
-    iops: &[IOp],
+    stages: &[ComputeOp],
 ) -> Result<Tensor> {
-    let p = build_pipeline(input, dtout, iops)?;
-    ctx.fused.run(&p, input)
+    let p = build_pipeline(input, dtout, stages)?;
+    ctx.run(&p, input)
 }
 
 /// The same chain executed the way stock OpenCV-CUDA would run it: one
-/// kernel per call, intermediates in device memory (experiment baseline).
+/// kernel per call, intermediates in device memory (experiment baseline;
+/// requires artifacts).
 pub fn execute_operations_opencv_style(
     ctx: &Context,
     input: &Tensor,
     dtout: DType,
-    iops: &[IOp],
+    stages: &[ComputeOp],
 ) -> Result<Tensor> {
-    let p = build_pipeline(input, dtout, iops)?;
-    ctx.unfused.run(&p, input)
+    let p = build_pipeline(input, dtout, stages)?;
+    ctx.unfused()?.run(&p, input)
 }
 
-/// OpenCV-CUDA + CUDA Graphs baseline: recorded once, replayed.
+/// OpenCV-CUDA + CUDA Graphs baseline: recorded once, replayed (requires
+/// artifacts).
 pub fn execute_operations_graph_style(
     ctx: &Context,
     input: &Tensor,
     dtout: DType,
-    iops: &[IOp],
+    stages: &[ComputeOp],
 ) -> Result<Tensor> {
-    let p = build_pipeline(input, dtout, iops)?;
-    ctx.graph.run(&p, input)
+    let p = build_pipeline(input, dtout, stages)?;
+    ctx.graph()?.run(&p, input)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::ops::IOp;
 
     #[test]
-    fn iops_are_lazy_values() {
+    fn stages_are_lazy_values() {
         // calling wrapper functions performs no GPU work and no allocation
-        // beyond the IOp value itself (paper §IV-D)
+        // beyond the stage value itself (paper §IV-D)
         let ops = [convert_to(), multiply(2.0), subtract(1.0), divide(4.0)];
         assert_eq!(ops.len(), 4);
-        assert_eq!(ops[1], IOp::compute(Opcode::Mul, 2.0));
+        assert_eq!(ops[1].iop(), &IOp::compute(Opcode::Mul, 2.0));
     }
 
     #[test]
-    fn build_pipeline_validates() {
+    fn build_pipeline_validates_through_the_typed_chain() {
         let t = Tensor::zeros(DType::U8, &[2, 4, 4]);
         let p = build_pipeline(&t, DType::F32, &[convert_to(), multiply(2.0)]).unwrap();
         assert_eq!(p.batch, 2);
         assert_eq!(p.shape, vec![4, 4]);
         assert_eq!(p.dtin, DType::U8);
         assert_eq!(p.dtout, DType::F32);
+        // unbatched input is rejected before lowering
+        assert!(build_pipeline(&Tensor::zeros(DType::U8, &[4]), DType::F32, &[]).is_err());
+    }
+
+    #[test]
+    fn auto_context_always_comes_up() {
+        // satellite: cv::Context::new() must not hard-fail without artifacts
+        let ctx = Context::new().expect("Auto never fails on a bare machine");
+        if cfg!(not(feature = "pjrt")) {
+            assert_eq!(ctx.backend(), ActiveBackend::HostFused);
+            assert!(!ctx.has_artifacts());
+            assert!(ctx.fused().is_err(), "XLA accessors fail loudly");
+            assert_eq!(ctx.engines().len(), 1);
+        }
+        // the host engine serves real traffic either way
+        let input = Tensor::from_u8(&[10, 20, 30, 40], &[1, 4]);
+        let out =
+            execute_operations(&ctx, &input, DType::F32, &[multiply(2.0), add(1.0)]).unwrap();
+        assert_eq!(out.as_f32().unwrap(), &[21.0, 41.0, 61.0, 81.0]);
+    }
+
+    #[test]
+    fn pinned_host_backend_ignores_artifacts() {
+        let ctx = Context::with_select(EngineSelect::HostFused, None).unwrap();
+        assert_eq!(ctx.backend(), ActiveBackend::HostFused);
+        assert_eq!(ctx.backend().to_string(), "host_fused");
     }
 }

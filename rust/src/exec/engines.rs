@@ -6,8 +6,8 @@ use std::rc::Rc;
 
 use anyhow::{bail, Context, Result};
 
-use crate::fusion::{plan_pipeline, unfused_plan, FusionPlan, PlanInputs, PlannerStats};
-use crate::ops::{IOp, Pipeline, Signature};
+use crate::fusion::{plan_pipeline, unfused_plan, FusionPlan, PlanError, PlanInputs, PlannerStats};
+use crate::ops::{IOp, MemOp, Pipeline, Signature};
 use crate::runtime::{ExecGraph, Executor, Registry};
 use crate::tensor::Tensor;
 
@@ -20,12 +20,57 @@ pub trait Engine {
     fn last_launches(&self) -> usize;
 }
 
-fn body_names<'a>(p: &'a Pipeline, engine: &str) -> Result<Vec<&'a str>> {
+/// Which execution backend a front door builds. Shared by
+/// [`crate::cv::Context`] and [`crate::coordinator::Service`], so every
+/// entry point degrades the same way.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EngineSelect {
+    /// Prefer the XLA fused engine when the artifact registry loads (and the
+    /// `pjrt` feature is compiled in); fall back to the host fused engine
+    /// otherwise — the front door always comes up.
+    #[default]
+    Auto,
+    /// XLA fused engine only: a missing/corrupt registry is a hard error.
+    Xla,
+    /// Host fused engine only: single-pass CPU execution, no artifacts, no
+    /// PJRT — runs everywhere.
+    HostFused,
+}
+
+/// Typed "this engine cannot lower that op" error. Raised by the artifact
+/// engines for bodies outside the chain vocabulary (`ComputeC3`,
+/// `CvtColor`) and for structured boundary ops; [`FusedEngine::run`] counts
+/// the detection in [`PlannerStats::unsupported`] and re-routes
+/// lane-structured bodies to the host single-pass engine (which runs them
+/// natively — see the group pass in `host_fused`) instead of failing with a
+/// stringly message.
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+#[error("{engine} engine does not support op `{token}` (chain vocabulary only)")]
+pub struct UnsupportedOp {
+    /// Engine that made the detection.
+    pub engine: &'static str,
+    /// Signature token of the offending op.
+    pub token: String,
+}
+
+fn body_names<'a>(p: &'a Pipeline, engine: &'static str) -> Result<Vec<&'a str>> {
+    // structured boundaries would silently execute as dense per-op chains —
+    // refuse with the typed error instead
+    if let Some(op) = p.ops().first() {
+        if !matches!(op, IOp::Mem(MemOp::Read { .. })) {
+            return Err(UnsupportedOp { engine, token: op.sig_token() }.into());
+        }
+    }
+    if let Some(op) = p.ops().last() {
+        if !matches!(op, IOp::Mem(MemOp::Write { .. })) {
+            return Err(UnsupportedOp { engine, token: op.sig_token() }.into());
+        }
+    }
     p.body()
         .iter()
         .map(|op| match op {
             IOp::Compute { op, .. } => Ok(op.name()),
-            other => bail!("{engine} engine only runs chains, got {}", other.sig_token()),
+            other => Err(UnsupportedOp { engine, token: other.sig_token() }.into()),
         })
         .collect()
 }
@@ -50,6 +95,11 @@ pub struct FusedEngine {
     /// (building one per call re-created an Executor + allocations on the
     /// hot path).
     unfused_fallback: RefCell<Option<Rc<UnfusedEngine>>>,
+    /// Lazily-built host single-pass engine for bodies the XLA chain
+    /// lowering cannot express (ComputeC3/CvtColor): the per-op engine
+    /// rejects those too, so the host backend — which runs them natively,
+    /// still fused — is the only fallback that can actually serve.
+    host_fallback: RefCell<Option<Rc<super::HostFusedEngine>>>,
     /// Per-RUN tier counts: how the engine's traffic was actually served
     /// (exposed through coordinator metrics as VF coverage).
     stats: RefCell<PlannerStats>,
@@ -71,6 +121,7 @@ impl FusedEngine {
             variant: variant.to_string(),
             last: RefCell::new(0),
             unfused_fallback: RefCell::new(None),
+            host_fallback: RefCell::new(None),
             stats: RefCell::new(PlannerStats::default()),
             last_fallback: Cell::new(false),
         }
@@ -100,6 +151,12 @@ impl FusedEngine {
         slot.get_or_insert_with(|| Rc::new(UnfusedEngine::new(self.reg.clone()))).clone()
     }
 
+    /// The shared host single-pass engine (built on first unsupported body).
+    fn host_engine(&self) -> Rc<super::HostFusedEngine> {
+        let mut slot = self.host_fallback.borrow_mut();
+        slot.get_or_insert_with(|| Rc::new(super::HostFusedEngine::new())).clone()
+    }
+
     /// Cumulative per-run tier counts (VF coverage of the served traffic).
     pub fn planner_stats(&self) -> PlannerStats {
         self.stats.borrow().clone()
@@ -117,22 +174,54 @@ impl Engine for FusedEngine {
     }
 
     fn run(&self, p: &Pipeline, input: &Tensor) -> Result<Tensor> {
-        let plan = self.plan_for(p)?;
+        let plan = match self.plan_for(p) {
+            Ok(plan) => plan,
+            Err(e)
+                if matches!(
+                    e.downcast_ref::<PlanError>(),
+                    Some(PlanError::NotAChain(_))
+                ) =>
+            {
+                // the XLA chain lowering cannot express this body (ComputeC3
+                // / CvtColor): typed detection, counted, and routed to the
+                // HOST single-pass engine — the per-op fallback rejects the
+                // same ops, but the host loops run them natively (still one
+                // fused memory pass, tallied under the host tier)
+                let token = p
+                    .body()
+                    .iter()
+                    .find(|op| !matches!(op, IOp::Compute { .. }))
+                    .map(|op| op.sig_token())
+                    .unwrap_or_default();
+                self.stats.borrow_mut().unsupported += 1;
+                self.last_fallback.set(false);
+                *self.last.borrow_mut() = 1;
+                let host = self.host_engine();
+                return match host.run(p, input) {
+                    Ok(t) => {
+                        self.stats.borrow_mut().host += 1;
+                        Ok(t)
+                    }
+                    Err(fe) => Err(fe.context(UnsupportedOp { engine: "fused", token })),
+                };
+            }
+            Err(e) => return Err(e),
+        };
         *self.last.borrow_mut() = plan.launches();
         self.last_fallback.set(matches!(plan, FusionPlan::Unfused { .. }));
         let result = match &plan {
             FusionPlan::Exact { artifact } => {
                 let params = PlanInputs::chain_params(p);
-                self.exec.run(artifact, &[input.clone(), params])
+                self.exec.run(artifact, &[input, &params])
             }
             FusionPlan::StaticLoop { artifact, iters } => {
                 let meta = self.reg.get(artifact).context("plan artifact vanished")?;
                 let (trip, params) = PlanInputs::staticloop_inputs(p, meta.ops.len(), *iters);
-                self.exec.run(artifact, &[trip, input.clone(), params])
+                self.exec.run(artifact, &[&trip, input, &params])
             }
             FusionPlan::Interp { artifact, kmax } => {
                 let (opc, par) = PlanInputs::interp_inputs(p, *kmax);
-                self.exec.run(artifact, &[input.clone(), opc, par])
+                self.exec.run(artifact, &[input, &opc, &par])
             }
             FusionPlan::Unfused { .. } => {
                 // planner had no fused coverage; run the per-op fallback
@@ -203,7 +292,8 @@ impl Engine for UnfusedEngine {
                 // param literal rebuilt every call = the per-call CPU work of
                 // the original libraries (measured by Exp. 6)
                 let params = Tensor::from_f32(&[body_param(p, i)], &[1]);
-                cur = self.exec.run(name, &[cur, params])?;
+                let next = self.exec.run(name, &[&cur, &params])?;
+                cur = next;
                 *launches += 1;
             }
             Ok(cur)

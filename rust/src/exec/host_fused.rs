@@ -24,10 +24,28 @@ use std::rc::Rc;
 use anyhow::{ensure, Result};
 
 use crate::fusion::{HostAccum, HostPlan};
-use crate::ops::{Opcode, Pipeline, ScalarOp, Signature};
+use crate::ops::{IOp, MemOp, Opcode, Pipeline, ScalarOp, Signature};
 use crate::tensor::{Tensor, TensorData};
 
 use super::Engine;
+
+/// The host loops execute DENSE pipelines only: structured boundary ops
+/// (crop/resize reads, split writes) lower to the AOT artifact backend.
+/// Refusing here is what keeps a split-write chain from silently coming
+/// back in packed layout.
+fn ensure_dense_boundaries(p: &Pipeline) -> Result<()> {
+    ensure!(
+        matches!(p.ops().first(), Some(IOp::Mem(MemOp::Read { .. }))),
+        "host_fused: structured read ({}) lowers to the artifact backend",
+        p.ops().first().map(|o| o.sig_token()).unwrap_or_default()
+    );
+    ensure!(
+        matches!(p.ops().last(), Some(IOp::Mem(MemOp::Write { .. }))),
+        "host_fused: structured write ({}) lowers to the artifact backend",
+        p.ops().last().map(|o| o.sig_token()).unwrap_or_default()
+    );
+    Ok(())
+}
 
 /// Below this many total elements a run stays single-threaded: thread spawn
 /// costs tens of microseconds, which dwarfs small pipelines.
@@ -82,7 +100,59 @@ impl HostFusedEngine {
         self.runs.get()
     }
 
+    /// The statically-typed entry: the `(S, W)` lane pair is fixed by the
+    /// CALLER's types, so the monomorphized loop is selected at compile time
+    /// with zero runtime dtype dispatch — the entry the typed chain front
+    /// door ([`crate::chain::TypedPipeline::run_host`]) lowers into.
+    /// Numerics are identical to [`Engine::run`]: same cached plan, same
+    /// accumulator policy, same loops.
+    pub fn run_mono<S: HostLane, W: HostLane>(
+        &self,
+        p: &Pipeline,
+        src: &[S],
+    ) -> Result<Vec<W>> {
+        ensure_dense_boundaries(p)?;
+        ensure!(
+            S::DTYPE == p.dtin,
+            "run_mono: input lane {} != pipeline dtin {}",
+            S::DTYPE,
+            p.dtin
+        );
+        ensure!(
+            W::DTYPE == p.dtout,
+            "run_mono: output lane {} != pipeline dtout {}",
+            W::DTYPE,
+            p.dtout
+        );
+        ensure!(
+            src.len() == p.batch * p.item_elems(),
+            "run_mono: {} elements != pipeline {}x{}",
+            src.len(),
+            p.batch,
+            p.item_elems()
+        );
+        let plan = self.plan_for(p);
+        let mut dst = vec![W::default(); src.len()];
+        if plan.accum() == HostAccum::F32 {
+            let chain: Vec<(Opcode, f32)> = plan
+                .bind_chain(p)
+                .expect("F32 accum implies an all-scalar chain")
+                .into_iter()
+                .map(|(op, param)| (op, param as f32))
+                .collect();
+            chain_pass_f32(&chain, self.threads, src, &mut dst);
+        } else if let Some(chain) = plan.bind_chain(p) {
+            chain_pass_f64(&chain, self.threads, src, &mut dst);
+        } else {
+            let body = plan.bind_body(p);
+            group_pass(&body, plan.group(), self.threads, src, &mut dst);
+        }
+        self.runs.set(self.runs.get() + 1);
+        Ok(dst)
+    }
+
     fn check_input(p: &Pipeline, input: &Tensor) -> Result<()> {
+        ensure_dense_boundaries(p)?;
         ensure!(
             input.dtype() == p.dtin,
             "host_fused: input dtype {} != pipeline dtin {}",
@@ -131,85 +201,65 @@ impl Engine for HostFusedEngine {
 // ---------------------------------------------------------------------------
 // monomorphized execution
 
-/// Lossless per-element read into the f32 compute domain. Only dtypes whose
-/// every value is exactly representable in f32 implement this.
-trait ReadF32: Copy + Sync {
-    fn to_f32(self) -> f32;
-}
-
-impl ReadF32 for u8 {
-    #[inline(always)]
-    fn to_f32(self) -> f32 {
-        self as f32
-    }
-}
-impl ReadF32 for u16 {
-    #[inline(always)]
-    fn to_f32(self) -> f32 {
-        self as f32
-    }
-}
-impl ReadF32 for f32 {
-    #[inline(always)]
-    fn to_f32(self) -> f32 {
-        self
-    }
-}
-
-/// Per-element read into the f64 compute domain (all dtypes, lossless).
-trait ReadF64: Copy + Sync {
+/// One tensor lane type as the monomorphized fused loops see it: per-element
+/// reads into the f32/f64 compute domains and writes back with the EXACT
+/// boundary semantics of [`Tensor::from_f64_cast`] (round + saturate for
+/// integer image types) — same expressions, so bit-compatibility with the
+/// oracle is by construction.
+///
+/// Public because the typed chain front door ([`crate::chain`]) selects the
+/// `(input lane, output lane)` pair at COMPILE time through its `Elem`
+/// markers and hands it to [`HostFusedEngine::run_mono`] — the Rust analog
+/// of the paper's template instantiation.
+pub trait HostLane: Copy + Send + Sync + Default + 'static {
+    /// The runtime dtype this lane carries (cross-checked by `run_mono`).
+    const DTYPE: crate::tensor::DType;
+    /// Read into the f64 compute domain (lossless for every lane).
     fn to_f64(self) -> f64;
+    /// Read into the f32 fast-path domain. Lossy for i32/f64 — the planner
+    /// never selects the f32 accumulator for those inputs, so the lossy
+    /// arms are statically present but dynamically unreachable.
+    fn to_f32(self) -> f32;
+    /// Write from the f64 compute domain (round + saturate boundary).
+    fn from_f64(v: f64) -> Self;
+    /// Write from the f32 fast path. Identity for f32 (the only output lane
+    /// the planner pairs with the f32 accumulator).
+    fn from_f32(v: f32) -> Self;
 }
 
-macro_rules! read_f64 {
-    ($($t:ty),*) => {$(
-        impl ReadF64 for $t {
+macro_rules! host_lane {
+    ($t:ty, $dt:ident, $from:expr) => {
+        impl HostLane for $t {
+            const DTYPE: crate::tensor::DType = crate::tensor::DType::$dt;
+
             #[inline(always)]
             fn to_f64(self) -> f64 {
                 self as f64
             }
+
+            #[inline(always)]
+            fn to_f32(self) -> f32 {
+                self as f32
+            }
+
+            #[inline(always)]
+            fn from_f64(v: f64) -> $t {
+                $from(v)
+            }
+
+            #[inline(always)]
+            fn from_f32(v: f32) -> $t {
+                <$t as HostLane>::from_f64(v as f64)
+            }
         }
-    )*};
-}
-read_f64!(u8, u16, i32, f32, f64);
-
-/// Per-element write from the f64 compute domain with the EXACT boundary
-/// semantics of [`Tensor::from_f64_cast`] (round + saturate for integer
-/// image types) — same expressions, so bit-compatibility is by construction.
-trait WriteF64: Copy + Send + Default {
-    fn from_f64(v: f64) -> Self;
+    };
 }
 
-impl WriteF64 for u8 {
-    #[inline(always)]
-    fn from_f64(v: f64) -> u8 {
-        v.round().clamp(0.0, 255.0) as u8
-    }
-}
-impl WriteF64 for u16 {
-    #[inline(always)]
-    fn from_f64(v: f64) -> u16 {
-        v.round().clamp(0.0, 65535.0) as u16
-    }
-}
-impl WriteF64 for i32 {
-    #[inline(always)]
-    fn from_f64(v: f64) -> i32 {
-        v.round() as i32
-    }
-}
-impl WriteF64 for f32 {
-    #[inline(always)]
-    fn from_f64(v: f64) -> f32 {
-        v as f32
-    }
-}
-impl WriteF64 for f64 {
-    #[inline(always)]
-    fn from_f64(v: f64) -> f64 {
-        v
-    }
-}
+host_lane!(u8, U8, |v: f64| v.round().clamp(0.0, 255.0) as u8);
+host_lane!(u16, U16, |v: f64| v.round().clamp(0.0, 65535.0) as u16);
+host_lane!(i32, I32, |v: f64| v.round() as i32);
+host_lane!(f32, F32, |v: f64| v as f32);
+host_lane!(f64, F64, |v: f64| v);
 
 /// Split `src`/`dst` into per-thread chunks (boundaries aligned to `group`
 /// elements so lane-structured pixels never straddle threads) and run `f`
@@ -249,11 +299,13 @@ fn par_chunks<S, W>(
 }
 
 /// The f32 fast path: fold an all-scalar chain through an f32 register.
-fn chain_pass_f32<S: ReadF32>(
+/// (`W` is always `f32` in practice — the planner only selects the f32
+/// accumulator for f32 outputs — and `W::from_f32` is the identity there.)
+fn chain_pass_f32<S: HostLane, W: HostLane>(
     chain: &[(Opcode, f32)],
     threads: usize,
     src: &[S],
-    dst: &mut [f32],
+    dst: &mut [W],
 ) {
     par_chunks(threads, 1, src, dst, |_base, s, d| {
         for (out, &x) in d.iter_mut().zip(s) {
@@ -261,14 +313,14 @@ fn chain_pass_f32<S: ReadF32>(
             for &(op, param) in chain {
                 acc = op.apply_f32(acc, param);
             }
-            *out = acc;
+            *out = W::from_f32(acc);
         }
     });
 }
 
 /// The oracle-exact chain path: fold through an f64 register, write with
 /// boundary semantics.
-fn chain_pass_f64<S: ReadF64, W: WriteF64>(
+fn chain_pass_f64<S: HostLane, W: HostLane>(
     chain: &[(Opcode, f64)],
     threads: usize,
     src: &[S],
@@ -287,7 +339,7 @@ fn chain_pass_f64<S: ReadF64, W: WriteF64>(
 
 /// The general path for lane-structured bodies (ComputeC3 / CvtColor): each
 /// pixel group lives in a 3-wide register block while the whole body runs.
-fn group_pass<S: ReadF64, W: WriteF64>(
+fn group_pass<S: HostLane, W: HostLane>(
     body: &[ScalarOp],
     group: usize,
     threads: usize,
@@ -377,7 +429,6 @@ fn execute_plan(
 mod tests {
     use super::*;
     use crate::hostref;
-    use crate::ops::{IOp, MemOp};
     use crate::proplite::Rng;
     use crate::tensor::DType;
 
@@ -436,20 +487,13 @@ mod tests {
     fn lane_structured_pipeline_matches_oracle_exactly() {
         // cvtcolor + per-channel math, including a ragged (non-multiple-of-3)
         // tail — the oracle's global-index lane semantics must be reproduced
-        let p = Pipeline::new(
-            vec![
-                IOp::Mem(MemOp::Read { dtype: DType::F64 }),
-                IOp::CvtColor,
-                IOp::ComputeC3 { op: Opcode::Mul, param: [2.0, 3.0, 4.0] },
-                IOp::compute(Opcode::Add, 1.0),
-                IOp::Mem(MemOp::Write { dtype: DType::F64 }),
-            ],
-            vec![5, 2],
-            2,
-            DType::F64,
-            DType::F64,
-        )
-        .unwrap();
+        let p = crate::chain::Chain::read::<crate::chain::F64>(&[5, 2])
+            .batch(2)
+            .map(crate::chain::CvtColor)
+            .map(crate::chain::MulC3([2.0, 3.0, 4.0]))
+            .map(crate::chain::Add(1.0))
+            .write()
+            .into_pipeline();
         let mut rng = Rng::new(3);
         let vals: Vec<f64> = (0..20).map(|_| rng.f64(-5.0, 5.0)).collect();
         let x = Tensor::from_f64(&vals, &[2, 5, 2]);

@@ -19,6 +19,7 @@ mod engines;
 mod host_fused;
 
 pub use engines::{
-    concat_batch, slice_batch, stack_batch, Engine, FusedEngine, GraphEngine, UnfusedEngine,
+    concat_batch, slice_batch, stack_batch, Engine, EngineSelect, FusedEngine, GraphEngine,
+    UnfusedEngine, UnsupportedOp,
 };
-pub use host_fused::HostFusedEngine;
+pub use host_fused::{HostFusedEngine, HostLane};

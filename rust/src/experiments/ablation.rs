@@ -12,7 +12,8 @@ use anyhow::Result;
 use crate::bench::Table;
 use crate::exec::{Engine, FusedEngine};
 use crate::fusion::FusionPlan;
-use crate::ops::{Opcode, Pipeline};
+use crate::chain::build_erased_opcodes;
+use crate::ops::Opcode;
 use crate::proplite::Rng;
 use crate::tensor::{DType, Tensor};
 
@@ -49,29 +50,27 @@ pub fn run(xp: &XpCtx) -> Result<Vec<Table>> {
     {
         let input = rand_tensor(&mut rng, &[1, 256, 256], DType::F32);
         // a chain the interpreter covers; no exact artifact exists for it
-        let p_interp = Pipeline::from_opcodes(
+        let p_interp = build_erased_opcodes(
             &[(Opcode::Mul, 1.1), (Opcode::Add, 0.2), (Opcode::Abs, 0.0), (Opcode::Min, 3.0)],
             &[256, 256],
             1,
             DType::F32,
             DType::F32,
-        )
-        .unwrap();
-        let plan = xp.ctx.fused.plan_for(&p_interp)?;
-        let ti = xp.measure(|| xp.ctx.fused.run(&p_interp, &input).unwrap());
+        );
+        let plan = xp.fused().plan_for(&p_interp)?;
+        let ti = xp.measure(|| xp.fused().run(&p_interp, &input).unwrap());
 
         // a chain with an exact artifact at another shape for reference:
         // use mul-add on the smoke artifact shape
-        let p_exact = Pipeline::from_opcodes(
+        let p_exact = build_erased_opcodes(
             &[(Opcode::Mul, 1.1), (Opcode::Add, 0.2)],
             &[4, 8],
             2,
             DType::F32,
             DType::F32,
-        )
-        .unwrap();
+        );
         let input2 = rand_tensor(&mut rng, &[2, 4, 8], DType::F32);
-        let te = xp.measure(|| xp.ctx.fused.run(&p_exact, &input2).unwrap());
+        let te = xp.measure(|| xp.fused().run(&p_exact, &input2).unwrap());
 
         let mut t = Table::new(
             "Ablation 2 — planner tier cost (per-launch overhead view)",
@@ -92,13 +91,13 @@ pub fn run(xp: &XpCtx) -> Result<Vec<Table>> {
         for (m, bucket) in [(25usize, 50usize), (100, 150)] {
             let input_m = rand_tensor(&mut rng, &[m, 60, 120], DType::U8);
             let p_m = cmsd(&[60, 120], m, DType::U8, DType::F32);
-            let exact = xp.measure(|| xp.ctx.fused.run(&p_m, &input_m).unwrap());
+            let exact = xp.measure(|| xp.fused().run(&p_m, &input_m).unwrap());
 
             let mut padded_input = input_m.to_f64_vec();
             padded_input.extend(vec![0.0; (bucket - m) * 60 * 120]);
             let padded_t = Tensor::from_f64_cast(&padded_input, &[bucket, 60, 120], DType::U8);
             let p_b = cmsd(&[60, 120], bucket, DType::U8, DType::F32);
-            let padded = xp.measure(|| xp.ctx.fused.run(&p_b, &padded_t).unwrap());
+            let padded = xp.measure(|| xp.fused().run(&p_b, &padded_t).unwrap());
 
             let e = exact.mean_s / m as f64;
             let pd = padded.mean_s / m as f64;
@@ -117,7 +116,7 @@ pub fn run(xp: &XpCtx) -> Result<Vec<Table>> {
     // also verify plan correctness claims used above
     {
         let p = cmsd(&[60, 120], 50, DType::U8, DType::F32);
-        let plan = xp.ctx.fused.plan_for(&p)?;
+        let plan = xp.fused().plan_for(&p)?;
         assert!(matches!(plan, FusionPlan::Exact { .. }), "CMSD b50 should hit tier 1");
     }
     Ok(tables)

@@ -6,10 +6,12 @@ use std::time::Duration;
 use anyhow::{Context as _, Result};
 
 use crate::bench::{time_fn, Stats};
+use crate::chain::{build_erased_opcodes, ComputeOp};
 use crate::cv::Context;
+use crate::exec::{EngineSelect, FusedEngine, GraphEngine, UnfusedEngine};
 use crate::ops::{Opcode, Pipeline};
 use crate::proplite::Rng;
-use crate::runtime::Registry;
+use crate::runtime::{Executor, Registry};
 use crate::tensor::{DType, Tensor};
 
 /// Shared state for all experiment runners.
@@ -38,15 +40,38 @@ impl XpCtx {
     pub fn new(fast: bool) -> Result<XpCtx> {
         let (reps, budget) = measure_policy(fast);
         Ok(XpCtx {
-            ctx: Context::new().context("experiments need artifacts; run `make artifacts`")?,
+            // experiments compare against the artifact family, so the XLA
+            // backend is pinned (Auto would silently degrade to host)
+            ctx: Context::with_select(EngineSelect::Xla, None)
+                .context("experiments need artifacts; run `make artifacts`")?,
             reps,
             budget,
             fast,
         })
     }
 
+    /// The XLA fused engine (present by construction: `new` pins Xla).
+    pub fn fused(&self) -> &FusedEngine {
+        self.ctx.fused().expect("XpCtx::new loaded the registry")
+    }
+
+    /// The per-op baseline engine.
+    pub fn unfused(&self) -> &UnfusedEngine {
+        self.ctx.unfused().expect("XpCtx::new loaded the registry")
+    }
+
+    /// The graph-replay baseline engine.
+    pub fn graph(&self) -> &GraphEngine {
+        self.ctx.graph().expect("XpCtx::new loaded the registry")
+    }
+
+    /// The raw artifact executor (for StaticLoop trip-count sweeps).
+    pub fn executor(&self) -> &Executor {
+        self.fused().executor()
+    }
+
     pub fn registry(&self) -> Rc<Registry> {
-        self.ctx.registry.clone()
+        self.ctx.registry().expect("XpCtx::new loaded the registry")
     }
 
     /// Measure a closure with this context's rep/budget policy.
@@ -56,7 +81,7 @@ impl XpCtx {
 
     /// Geometry list from the manifest (falls back if missing).
     pub fn geom_usizes(&self, key: &str, fallback: &[usize]) -> Vec<usize> {
-        self.ctx.registry.geometry[key].as_usize_vec().unwrap_or_else(|| fallback.to_vec())
+        self.registry().geometry[key].as_usize_vec().unwrap_or_else(|| fallback.to_vec())
     }
 }
 
@@ -83,26 +108,26 @@ pub fn rand_tensor(rng: &mut Rng, shape: &[usize], dt: DType) -> Tensor {
 }
 
 /// Pipeline of n (Mul a, Add b) pairs — the paper's favourite chain. Params
-/// contractive so long chains stay finite.
+/// contractive so long chains stay finite. Lowered through the typed chain's
+/// dynamic entrance (dtypes are sweep data here).
 pub fn muladd_pairs(n_pairs: usize, shape: &[usize], batch: usize, dtin: DType, dtout: DType) -> Pipeline {
     let mut chain = Vec::with_capacity(n_pairs * 2);
     for _ in 0..n_pairs {
         chain.push((Opcode::Mul, 0.999));
         chain.push((Opcode::Add, 0.001));
     }
-    Pipeline::from_opcodes(&chain, shape, batch, dtin, dtout).unwrap()
+    build_erased_opcodes(&chain, shape, batch, dtin, dtout)
 }
 
 /// The Fig. 17/23 chain: Cast -> Mul -> Sub -> Div.
 pub fn cmsd(shape: &[usize], batch: usize, dtin: DType, dtout: DType) -> Pipeline {
-    Pipeline::from_opcodes(
-        &[(Opcode::Nop, 0.0), (Opcode::Mul, 0.5), (Opcode::Sub, 3.0), (Opcode::Div, 1.7)],
-        shape,
-        batch,
-        dtin,
-        dtout,
-    )
-    .unwrap()
+    let stages = [
+        ComputeOp::scalar(Opcode::Nop, 0.0),
+        ComputeOp::scalar(Opcode::Mul, 0.5),
+        ComputeOp::scalar(Opcode::Sub, 3.0),
+        ComputeOp::scalar(Opcode::Div, 1.7),
+    ];
+    crate::chain::build_erased(&stages, shape, batch, dtin, dtout)
 }
 
 /// Format a speedup cell.

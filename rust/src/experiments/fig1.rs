@@ -34,7 +34,7 @@ pub fn run(xp: &XpCtx) -> Result<Vec<Table>> {
     let mut rng = Rng::new(42);
     let x = rand_tensor(&mut rng, &[1, n], crate::tensor::DType::F32);
     let params = Tensor::from_f32(&[0.9999], &[1]);
-    let exec = xp.ctx.fused.executor();
+    let exec = xp.executor();
 
     let points: Vec<usize> = if xp.fast {
         vec![1, 16, 64, 256, 1024]
@@ -54,7 +54,7 @@ pub fn run(xp: &XpCtx) -> Result<Vec<Table>> {
     for &i in &points {
         let trip = Tensor::from_i32(&[i as i32], &[1]);
         let st = xp.measure(|| {
-            exec.run(&meta.name, &[trip.clone(), x.clone(), params.clone()]).unwrap()
+            exec.run(&meta.name, &[&trip, &x, &params]).unwrap()
         });
         let sim = gpu.fig1_curve(3840.0 * 2160.0 * 8.0, 8.0, &[i as f64])[0].1;
         let mb = crate::fusion::cost::is_memory_bound(&hw, (n * 8) as f64, n as f64, i as f64);

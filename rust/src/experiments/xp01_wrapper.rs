@@ -29,12 +29,12 @@ pub fn run(xp: &XpCtx) -> Result<Vec<Table>> {
 
     // (b) raw engine, pipeline prebuilt
     let p = cmsd(&[60, 120], 50, DType::U8, DType::F32);
-    let raw = xp.measure(|| xp.ctx.fused.run(&p, &input).unwrap());
+    let raw = xp.measure(|| xp.fused().run(&p, &input).unwrap());
 
     // (c) wrapper-only CPU work: build + validate + plan, no launch
     let cpu_only = xp.measure(|| {
         let p = cv::build_pipeline(&input, DType::F32, &iops).unwrap();
-        xp.ctx.fused.plan_for(&p).unwrap()
+        xp.fused().plan_for(&p).unwrap()
     });
 
     let mut t = Table::new(

@@ -43,7 +43,7 @@ pub fn run(xp: &XpCtx) -> Result<Vec<Table>> {
         } else {
             Tensor::from_f32(&[0.999, 0.001], &[2])
         };
-        let exec = xp.ctx.fused.executor();
+        let exec = xp.executor();
 
         // N total fused ops ~ paper's x-axis
         let ns: Vec<usize> = if xp.fast {
@@ -68,26 +68,25 @@ pub fn run(xp: &XpCtx) -> Result<Vec<Table>> {
             let iters = n / body_len;
             let trip = Tensor::from_i32(&[iters as i32], &[1]);
             let fused = xp.measure(|| {
-                exec.run(&loop_meta.name, &[trip.clone(), x.clone(), params.clone()]).unwrap()
+                exec.run(&loop_meta.name, &[&trip, &x, &params]).unwrap()
             });
 
             // unfused: n single-op launches (alternating for mul-add)
             let p = if body_len == 1 {
-                crate::ops::Pipeline::from_opcodes(
+                crate::chain::build_erased_opcodes(
                     &vec![(crate::ops::Opcode::Mul, 1.0001); n],
                     &[h, w],
                     1,
                     DType::U8,
                     DType::U8,
                 )
-                .unwrap()
             } else {
                 muladd_pairs(iters, &[h, w], 1, DType::U8, DType::U8)
             };
             let (unfused_s, graph_s, mode) = if n <= cap {
-                let unfused = xp.measure(|| xp.ctx.unfused.run(&p, &x).unwrap());
+                let unfused = xp.measure(|| xp.unfused().run(&p, &x).unwrap());
                 // graph replay of the same chain (record once outside timing)
-                let graph = xp.measure(|| xp.ctx.graph.run(&p, &x).unwrap());
+                let graph = xp.measure(|| xp.graph().run(&p, &x).unwrap());
                 per_launch_unfused = Some(unfused.mean_s / n as f64);
                 per_launch_graph = Some(graph.mean_s / n as f64);
                 (unfused.mean_s, graph.mean_s, "measured")

@@ -34,7 +34,7 @@ pub fn run(xp: &XpCtx) -> Result<Vec<Table>> {
         let input = rand_tensor(&mut rng, &[b, 60, 120], DType::U8);
         // HF arm: one launch of the batched chain artifact
         let p_batched = cmsd(&[60, 120], b, DType::U8, DType::F32);
-        let hf = xp.measure(|| xp.ctx.fused.run(&p_batched, &input).unwrap());
+        let hf = xp.measure(|| xp.fused().run(&p_batched, &input).unwrap());
 
         // loop arm: B launches of the b=1 chain artifact
         let p_one = cmsd(&[60, 120], 1, DType::U8, DType::F32);
@@ -43,7 +43,7 @@ pub fn run(xp: &XpCtx) -> Result<Vec<Table>> {
             .collect();
         let lp = xp.measure(|| {
             for item in &items {
-                std::hint::black_box(xp.ctx.fused.run(&p_one, item).unwrap());
+                std::hint::black_box(xp.fused().run(&p_one, item).unwrap());
             }
         });
 
@@ -52,7 +52,7 @@ pub fn run(xp: &XpCtx) -> Result<Vec<Table>> {
         // zero per-step host work.
         let gr = xp.measure(|| {
             for item in &items {
-                std::hint::black_box(xp.ctx.graph.run(&p_one, item).unwrap());
+                std::hint::black_box(xp.graph().run(&p_one, item).unwrap());
             }
         });
 

@@ -31,7 +31,7 @@ pub fn run(xp: &XpCtx) -> Result<Vec<Table>> {
     let mut rng = Rng::new(3);
     let x = rand_tensor(&mut rng, &[50, 60, 120], DType::U8);
     let params = Tensor::from_f32(&[0.999, 0.001], &[2]);
-    let exec = xp.ctx.fused.executor();
+    let exec = xp.executor();
 
     let pairs: Vec<usize> =
         if xp.fast { vec![1, 50, 500] } else { vec![1, 10, 50, 200, 1000, 5000, 10000] };
@@ -49,13 +49,13 @@ pub fn run(xp: &XpCtx) -> Result<Vec<Table>> {
     for &n in &pairs {
         let trip = Tensor::from_i32(&[n as i32], &[1]);
         let fused = xp.measure(|| {
-            exec.run(&loop_meta.name, &[trip.clone(), x.clone(), params.clone()]).unwrap()
+            exec.run(&loop_meta.name, &[&trip, &x, &params]).unwrap()
         });
 
         let (unfused_s, graph_s, mode) = if n <= unfused_cap {
             let p = muladd_pairs(n, &[60, 120], 50, DType::U8, DType::U8);
-            let u = xp.measure(|| xp.ctx.unfused.run(&p, &x).unwrap());
-            let g = xp.measure(|| xp.ctx.graph.run(&p, &x).unwrap());
+            let u = xp.measure(|| xp.unfused().run(&p, &x).unwrap());
+            let g = xp.measure(|| xp.graph().run(&p, &x).unwrap());
             let launches = (2 * n * 50) as f64;
             per_launch = Some(u.mean_s / launches);
             (u.mean_s, g.mean_s, "measured")

@@ -36,7 +36,7 @@ pub fn run(xp: &XpCtx) -> Result<Vec<Table>> {
     let mut rng = Rng::new(9);
     let x = rand_tensor(&mut rng, &[1, n_elems], DType::F32);
     let params = Tensor::from_f32(&[0.99999], &[1]);
-    let exec = xp.ctx.fused.executor();
+    let exec = xp.executor();
 
     const TOTAL: usize = 500;
     let per_op: Vec<usize> =
@@ -44,7 +44,7 @@ pub fn run(xp: &XpCtx) -> Result<Vec<Table>> {
 
     let fused = {
         let trip = Tensor::from_i32(&[TOTAL as i32], &[1]);
-        xp.measure(|| exec.run(&meta.name, &[trip.clone(), x.clone(), params.clone()]).unwrap())
+        xp.measure(|| exec.run(&meta.name, &[&trip, &x, &params]).unwrap())
     };
 
     let mut t = Table::new(
@@ -61,7 +61,8 @@ pub fn run(xp: &XpCtx) -> Result<Vec<Table>> {
             while left > 0 {
                 let step = left.min(m);
                 let trip = Tensor::from_i32(&[step as i32], &[1]);
-                cur = exec.run(&meta.name, &[trip, cur, params.clone()]).unwrap();
+                let next = exec.run(&meta.name, &[&trip, &cur, &params]).unwrap();
+                cur = next;
                 left -= step;
             }
             cur

@@ -30,7 +30,7 @@ pub fn run(xp: &XpCtx) -> Result<Vec<Table>> {
         }
     };
     let reg = xp.registry();
-    let exec = xp.ctx.fused.executor();
+    let exec = xp.executor();
 
     let mut t = Table::new(
         "Fig. 21 — execution time vs data size (100 Mul+Add pairs, f32)",
@@ -54,11 +54,11 @@ pub fn run(xp: &XpCtx) -> Result<Vec<Table>> {
         let trip = Tensor::from_i32(&[PAIRS as i32], &[1]);
 
         let fused = xp.measure(|| {
-            exec.run(&loop_meta.name, &[trip.clone(), x.clone(), params.clone()]).unwrap()
+            exec.run(&loop_meta.name, &[&trip, &x, &params]).unwrap()
         });
 
         let p = muladd_pairs(PAIRS, &[n], 1, DType::F32, DType::F32);
-        let unfused = xp.measure(|| xp.ctx.unfused.run(&p, &x).unwrap());
+        let unfused = xp.measure(|| xp.unfused().run(&p, &x).unwrap());
 
         t.row(vec![
             n.to_string(),

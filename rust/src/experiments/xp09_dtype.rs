@@ -14,7 +14,7 @@ use crate::tensor::DType;
 use super::common::{cmsd, fx, ms, rand_tensor, XpCtx};
 
 pub fn run(xp: &XpCtx) -> Result<Vec<Table>> {
-    let combos: Vec<(DType, DType)> = xp.ctx.registry.geometry["dtype_combos"]
+    let combos: Vec<(DType, DType)> = xp.registry().geometry["dtype_combos"]
         .as_arr()
         .map(|arr| {
             arr.iter()
@@ -34,8 +34,8 @@ pub fn run(xp: &XpCtx) -> Result<Vec<Table>> {
     for (dtin, dtout) in combos {
         let input = rand_tensor(&mut rng, &[50, 60, 120], dtin);
         let p = cmsd(&[60, 120], 50, dtin, dtout);
-        let fused = xp.measure(|| xp.ctx.fused.run(&p, &input).unwrap());
-        let unfused = xp.measure(|| xp.ctx.unfused.run(&p, &input).unwrap());
+        let fused = xp.measure(|| xp.fused().run(&p, &input).unwrap());
+        let unfused = xp.measure(|| xp.unfused().run(&p, &input).unwrap());
         t.row(vec![
             format!("{dtin}->{dtout}"),
             ms(fused.mean_s),

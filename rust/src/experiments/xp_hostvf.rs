@@ -15,9 +15,10 @@ use std::time::Duration;
 use anyhow::Result;
 
 use crate::bench::{time_fn, Table};
+use crate::chain::build_erased_opcodes;
 use crate::exec::{Engine, HostFusedEngine};
 use crate::hostref;
-use crate::ops::{Opcode, Pipeline};
+use crate::ops::Opcode;
 use crate::proplite::Rng;
 use crate::tensor::{DType, Tensor};
 
@@ -60,7 +61,7 @@ pub fn run_with(reps: usize, budget: Duration, fast: bool) -> Result<Vec<Table>>
                 _ => (Opcode::Sub, 0.0005),
             })
             .collect();
-        let p = Pipeline::from_opcodes(&chain, &[h, w], 1, DType::F32, DType::F32)?;
+        let p = build_erased_opcodes(&chain, &[h, w], 1, DType::F32, DType::F32);
         let base = time_fn(reps, budget, || hostref::run_pipeline(&p, &x));
         let f1 = time_fn(reps, budget, || eng_1t.run(&p, &x).unwrap());
         let fm = time_fn(reps, budget, || eng_mt.run(&p, &x).unwrap());

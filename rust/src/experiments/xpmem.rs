@@ -7,8 +7,9 @@
 use anyhow::Result;
 
 use crate::bench::Table;
+use crate::chain::build_erased_opcodes;
 use crate::fusion::memsave;
-use crate::ops::{Opcode, Pipeline};
+use crate::ops::Opcode;
 use crate::tensor::DType;
 
 fn kb(b: usize) -> String {
@@ -40,14 +41,13 @@ pub fn run(_xp: &super::XpCtx) -> Result<Vec<Table>> {
         ("chain x4, 4k u8->f32", vec![2160, 4096]),
         ("chain x4, 8k u8->f32", vec![4320, 8192]),
     ] {
-        let p = Pipeline::from_opcodes(
+        let p = build_erased_opcodes(
             &[(Opcode::Nop, 0.0), (Opcode::Mul, 1.0), (Opcode::Sub, 0.0), (Opcode::Div, 1.0)],
             &shape,
             1,
             DType::U8,
             DType::F32,
-        )
-        .unwrap();
+        );
         let r = memsave::report(&p);
         t.row(vec![
             label.into(),

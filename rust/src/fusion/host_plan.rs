@@ -140,7 +140,7 @@ impl HostPlan {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::ops::{IOp, Opcode, Pipeline};
+    use crate::ops::{Opcode, Pipeline};
     use crate::tensor::DType;
 
     fn chain_pipe(dtin: DType, dtout: DType) -> Pipeline {
@@ -200,17 +200,11 @@ mod tests {
 
     #[test]
     fn lane_structured_bodies_disable_chain_fast_path() {
-        let p = Pipeline::elementwise(
-            vec![
-                IOp::compute(Opcode::Mul, 2.0),
-                IOp::ComputeC3 { op: Opcode::Add, param: [1.0, 2.0, 3.0] },
-            ],
-            vec![2, 3],
-            1,
-            DType::F32,
-            DType::F32,
-        )
-        .unwrap();
+        let p = crate::chain::Chain::read::<crate::chain::F32>(&[2, 3])
+            .map(crate::chain::Mul(2.0))
+            .map(crate::chain::AddC3([1.0, 2.0, 3.0]))
+            .write()
+            .into_pipeline();
         let plan = HostPlan::compile(&p);
         assert!(!plan.is_chain());
         assert!(plan.bind_chain(&p).is_none());

@@ -11,6 +11,11 @@ pub enum PlanError {
     NoCoverage { sig: String },
     #[error("pipeline contains non-elementwise ops; only chain pipelines are plannable: {0}")]
     NotAChain(String),
+    #[error(
+        "pipeline has a structured boundary op ({0}); dense chain artifacts cannot serve it \
+         (it needs a dedicated artifact family, like the preproc kernels)"
+    )]
+    StructuredBoundary(String),
 }
 
 /// Cumulative planner decisions (exposed as coordinator metrics and used by
@@ -23,6 +28,13 @@ pub struct PlannerStats {
     pub unfused: usize,
     /// Runs served by the host fused engine (single-pass CPU backend).
     pub host: usize,
+    /// Typed [`UnsupportedOp`](crate::exec::UnsupportedOp) detections:
+    /// bodies outside the XLA chain vocabulary (`ComputeC3`/`CvtColor`)
+    /// that [`FusedEngine`](crate::exec::FusedEngine) re-routed to the host
+    /// single-pass engine. A detection counter, not a serve tier — the
+    /// serves themselves land under `host` — so it is excluded from
+    /// [`PlannerStats::total`].
+    pub unsupported: usize,
 }
 
 impl PlannerStats {
@@ -72,12 +84,31 @@ fn body_opnames(p: &Pipeline) -> Result<Vec<&'static str>, PlanError> {
         .collect()
 }
 
+fn ensure_dense_boundaries(p: &Pipeline) -> Result<(), PlanError> {
+    use crate::ops::MemOp;
+    if let Some(op) = p.ops().first() {
+        if !matches!(op, IOp::Mem(MemOp::Read { .. })) {
+            return Err(PlanError::StructuredBoundary(op.sig_token()));
+        }
+    }
+    if let Some(op) = p.ops().last() {
+        if !matches!(op, IOp::Mem(MemOp::Write { .. })) {
+            return Err(PlanError::StructuredBoundary(op.sig_token()));
+        }
+    }
+    Ok(())
+}
+
 /// Plan one pipeline. Tier order: exact > staticloop > interp > unfused.
 pub fn plan_pipeline(
     p: &Pipeline,
     reg: &Registry,
     variant: &str,
 ) -> Result<FusionPlan, PlanError> {
+    // a structured boundary (crop/resize read, split write) changes the
+    // memory pattern of the generated code: matching the BODY against a
+    // dense chain artifact would silently execute the wrong kernel
+    ensure_dense_boundaries(p)?;
     let names = body_opnames(p)?;
     let dtin = p.dtin.name();
     let dtout = p.dtout.name();

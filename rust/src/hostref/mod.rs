@@ -149,7 +149,7 @@ pub fn preproc(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::ops::{IOp, MemOp, Opcode};
+    use crate::ops::Opcode;
     use crate::tensor::make_frame;
 
     #[test]
@@ -212,18 +212,10 @@ mod tests {
 
     #[test]
     fn cvtcolor_swizzles_channels() {
-        let p = Pipeline::new(
-            vec![
-                IOp::Mem(MemOp::Read { dtype: DType::F32 }),
-                IOp::CvtColor,
-                IOp::Mem(MemOp::Write { dtype: DType::F32 }),
-            ],
-            vec![1, 3],
-            1,
-            DType::F32,
-            DType::F32,
-        )
-        .unwrap();
+        let p = crate::chain::Chain::read::<crate::chain::F32>(&[1, 3])
+            .map(crate::chain::CvtColor)
+            .write()
+            .into_pipeline();
         let x = Tensor::from_f32(&[1.0, 2.0, 3.0], &[1, 1, 3]);
         assert_eq!(run_pipeline(&p, &x).as_f32().unwrap(), &[3.0, 2.0, 1.0]);
     }

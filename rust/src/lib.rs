@@ -3,13 +3,14 @@
 //! A three-layer reproduction of *"The Fused Kernel Library: A C++ API to
 //! Develop Highly-Efficient GPU Libraries"* (Amoros et al., 2025):
 //!
-//! * **Layer 3 (this crate)** — the coordination contribution: typed
-//!   pipelines of Instantiable Operations ([`ops`]), a fusion planner that
-//!   performs automatic Vertical and Horizontal Fusion ([`fusion`]), four
-//!   execution engines (fused / unfused / graph-replay / host-fused,
-//!   [`exec`]), a streaming coordinator with dynamic HF batching
-//!   ([`coordinator`]), and high-level wrappers imitating OpenCV-CUDA
-//!   ([`cv`]) and NPP ([`npp`]).
+//! * **Layer 3 (this crate)** — the coordination contribution: a
+//!   compile-time-checked fusion-chain builder ([`chain`] — the typestate
+//!   front door every consumer lowers through), pipelines of Instantiable
+//!   Operations ([`ops`]), a fusion planner that performs automatic
+//!   Vertical and Horizontal Fusion ([`fusion`]), four execution engines
+//!   (fused / unfused / graph-replay / host-fused, [`exec`]), a streaming
+//!   coordinator with dynamic HF batching ([`coordinator`]), and
+//!   high-level wrappers imitating OpenCV-CUDA ([`cv`]) and NPP ([`npp`]).
 //! * **Layer 2/1 (build time)** — JAX graphs calling Pallas kernels
 //!   (`python/compile/`), AOT-lowered to HLO text artifacts loaded by
 //!   [`runtime`] (gated behind the `pjrt` cargo feature; without it the
@@ -19,6 +20,7 @@
 //! `EXPERIMENTS.md` for the reproduced evaluation.
 
 pub mod bench;
+pub mod chain;
 pub mod coordinator;
 pub mod cv;
 pub mod exec;

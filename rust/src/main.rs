@@ -10,6 +10,7 @@
 
 use std::time::Duration;
 
+use fkl::chain::{self, Chain, ComputeOp, ConvertTo, Div, Mul, Sub, F32, U8};
 use fkl::coordinator::{BatchPolicy, Service, ServiceConfig};
 use fkl::cv::Context;
 use fkl::exec::Engine;
@@ -80,16 +81,34 @@ fn build_pipeline(args: &[String]) -> Pipeline {
     let batch: usize = arg(args, "--batch").map(|b| b.parse().unwrap()).unwrap_or(1);
     let dtin = DType::parse(&arg(args, "--dtin").unwrap_or("f32".into())).expect("dtin");
     let dtout = DType::parse(&arg(args, "--dtout").unwrap_or("f32".into())).expect("dtout");
-    Pipeline::from_opcodes(&ops, &shape, batch, dtin, dtout).expect("valid pipeline")
+    // CLI dtypes are data -> the sanctioned dynamic entrance of the typed chain
+    let stages: Vec<ComputeOp> =
+        ops.iter().map(|&(op, param)| ComputeOp::scalar(op, param)).collect();
+    chain::build_erased(&stages, &shape, batch, dtin, dtout)
 }
 
 fn plan(args: &[String]) -> anyhow::Result<()> {
     let ctx = Context::new()?;
     let p = build_pipeline(args);
-    let plan = ctx.fused.plan_for(&p)?;
     println!("pipeline: {}", fkl::ops::Signature::of(&p));
-    println!("plan: {plan:?}");
-    println!("launches: {} (fused: {})", plan.launches(), plan.is_fused());
+    println!("backend: {}", ctx.backend());
+    match ctx.fused() {
+        Ok(fused) => {
+            let plan = fused.plan_for(&p)?;
+            println!("plan: {plan:?}");
+            println!("launches: {} (fused: {})", plan.launches(), plan.is_fused());
+        }
+        Err(_) => {
+            let plan = ctx.host().plan_for(&p);
+            println!(
+                "plan: host single-pass (accum {:?}, group {}, chain fast path: {})",
+                plan.accum(),
+                plan.group(),
+                plan.is_chain()
+            );
+            println!("launches: 1 (fused: true)");
+        }
+    }
     let r = fkl::fusion::memsave::report(&p);
     println!(
         "memory: fused {}B, unfused {}B, saved {}B",
@@ -111,18 +130,19 @@ fn run(args: &[String]) -> anyhow::Result<()> {
         &full_shape,
         p.dtin,
     );
-    for engine in [&ctx.fused as &dyn Engine, &ctx.unfused, &ctx.graph] {
+    println!("backend: {}", ctx.backend());
+    for (name, engine) in ctx.engines() {
         let t0 = std::time::Instant::now();
         match engine.run(&p, &input) {
             Ok(out) => println!(
-                "{:8} -> {:?} {:?} in {:.3}ms ({} launches)",
-                engine.name(),
+                "{:10} -> {:?} {:?} in {:.3}ms ({} launches)",
+                name,
                 out.dtype(),
                 out.shape(),
                 t0.elapsed().as_secs_f64() * 1e3,
                 engine.last_launches(),
             ),
-            Err(e) => println!("{:8} -> not covered by the artifact family: {e}", engine.name()),
+            Err(e) => println!("{name:10} -> not covered by the artifact family: {e}"),
         }
     }
     Ok(())
@@ -139,14 +159,15 @@ fn serve(args: &[String]) -> anyhow::Result<()> {
         ..ServiceConfig::default()
     });
 
-    let p = Pipeline::from_opcodes(
-        &[(Opcode::Nop, 0.0), (Opcode::Mul, 0.5), (Opcode::Sub, 3.0), (Opcode::Div, 1.7)],
-        &[60, 120],
-        1,
-        DType::U8,
-        DType::F32,
-    )
-    .unwrap();
+    // the canonical CMSD normalization chain, compile-time checked
+    let p = Chain::read::<U8>(&[60, 120])
+        .map(ConvertTo)
+        .map(Mul(0.5))
+        .map(Sub(3.0))
+        .map(Div(1.7))
+        .cast::<F32>()
+        .write()
+        .into_pipeline();
     let mut rng = Rng::new(2);
     let t0 = std::time::Instant::now();
     let mut pending = Vec::new();

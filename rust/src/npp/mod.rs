@@ -1,19 +1,27 @@
 //! FastNPP — the NPP-style wrapper (paper §VI-J, Fig. 25b).
 //!
 //! NPP encodes dtype/channel layout in the function name
-//! (`nppiMulC_32f_C3R_Ctx`); FastNPP keeps those names but returns lazy IOps
-//! executed by one fused kernel. This module reproduces the preprocessing
-//! pipeline of the paper's NPP comparison, including the two CPU-side modes
-//! measured in Fig. 24:
+//! (`nppiMulC_32f_C3R_Ctx`); FastNPP keeps those names but returns lazy
+//! stages executed by one fused kernel. This module reproduces the
+//! preprocessing pipeline of the paper's NPP comparison, including the two
+//! CPU-side modes measured in Fig. 24:
 //!
 //! * [`PreprocPipeline::run`] — re-derives kernel parameters every call (what
 //!   NPP forces you to do);
 //! * [`PreprocPipeline::precompute`] + [`PreprocPipeline::run_precomputed`] —
-//!   the FastNPP advantage: IOps built once, kernel re-launched with the same
-//!   parameters.
+//!   the FastNPP advantage: parameters built once, kernel re-launched with
+//!   the same inputs.
+//!
+//! Since the typed-chain redesign this is a PRESET CHAIN, not a parallel
+//! implementation: [`PreprocPipeline::preset_chain`] declares the per-crop
+//! semantics through [`crate::chain`] (ResizeRead -> ColorConvert -> MulC ->
+//! SubC -> DivC -> Split, all typed stages), and the `run*` entry points
+//! launch the AOT artifact that chain lowers to. Launches BORROW the frame —
+//! no per-call tensor clones on the hot path.
 
-use anyhow::{bail, Context as _, Result};
+use anyhow::{bail, Result};
 
+use crate::chain::{Chain, CvtColor, DivC3, MulC3, SubC3, TypedPipeline, F32, U8};
 use crate::cv::Context;
 use crate::runtime::DeviceValue;
 use crate::tensor::{Rect, Tensor};
@@ -45,14 +53,30 @@ impl PreprocPipeline {
         PreprocPipeline { spec, mul, sub, div, precomputed: None }
     }
 
+    /// The per-crop semantics as a typed chain — the single declaration of
+    /// what this pipeline computes. Structured read (crop+resize fused at
+    /// the read end) and the packed->planar split write are typed stages;
+    /// the chain seals as `TypedPipeline<U8, F32>` and its parameter-
+    /// agnostic [`crate::ops::Signature`] is what tests pin the AOT artifact
+    /// family against.
+    pub fn preset_chain(&self, rect: Rect) -> TypedPipeline<U8, F32> {
+        Chain::read_resize::<U8>(rect, self.spec.dst_h, self.spec.dst_w)
+            .map(CvtColor)
+            .map(MulC3(self.mul))
+            .map(SubC3(self.sub))
+            .map(DivC3(self.div))
+            .cast::<F32>()
+            .write_split()
+    }
+
     /// Artifact name for this batch size (must be one of the AOT'd buckets).
     fn artifact(&self, ctx: &Context, batch: usize) -> Result<String> {
-        let m = ctx
-            .registry
+        let reg = ctx.registry()?;
+        let m = reg
             .find(|m| m.kind == "preproc" && m.variant == "pallas" && m.batch == batch)
             .into_iter()
             .next()
-            .with_context(|| format!("no preproc artifact for batch {batch}"))?;
+            .ok_or_else(|| anyhow::anyhow!("no preproc artifact for batch {batch}"))?;
         Ok(m.name.clone())
     }
 
@@ -66,36 +90,33 @@ impl PreprocPipeline {
     }
 
     /// FastNPP without precomputation: CPU parameter derivation every call
-    /// (rect marshaling, constant tensors) + one fused launch.
+    /// (rect marshaling, constant tensors) + one fused launch. The frame is
+    /// borrowed straight into the launch — never cloned.
     pub fn run(&self, ctx: &Context, frame: &Tensor) -> Result<Tensor> {
         let b = self.spec.rects.len();
         let name = self.artifact(ctx, b)?;
         let [rects, mul, sub, div] = self.kernel_inputs();
-        ctx.fused.executor().run(&name, &[frame.clone(), rects, mul, sub, div])
+        ctx.fused()?.executor().run(&name, &[frame, &rects, &mul, &sub, &div])
     }
 
-    /// Build the IOps once (paper: "compute the CPU part of each Op once and
-    /// iteratively call the kernel with the same parameters").
+    /// Build the parameters once (paper: "compute the CPU part of each Op
+    /// once and iteratively call the kernel with the same parameters").
     pub fn precompute(&mut self) {
         self.precomputed = Some(self.kernel_inputs());
     }
 
-    /// Launch with precomputed parameters; fails if not precomputed.
+    /// Launch with precomputed parameters; fails if not precomputed. Zero
+    /// host-tensor copies per launch: the frame AND the precomputed inputs
+    /// are borrowed.
     pub fn run_precomputed(&self, ctx: &Context, frame: &Tensor) -> Result<Tensor> {
         let Some(inputs) = &self.precomputed else {
             bail!("call precompute() first");
         };
         let b = self.spec.rects.len();
         let name = self.artifact(ctx, b)?;
-        ctx.fused.executor().run(
+        ctx.fused()?.executor().run(
             &name,
-            &[
-                frame.clone(),
-                inputs[0].clone(),
-                inputs[1].clone(),
-                inputs[2].clone(),
-                inputs[3].clone(),
-            ],
+            &[frame, &inputs[0], &inputs[1], &inputs[2], &inputs[3]],
         )
     }
 
@@ -104,14 +125,14 @@ impl PreprocPipeline {
     /// device memory.
     pub fn run_npp_style(&self, ctx: &Context, frame: &Tensor) -> Result<Tensor> {
         let (dh, dw) = (self.spec.dst_h, self.spec.dst_w);
-        let reg = &ctx.registry;
-        let exec = ctx.fused.executor();
+        let reg = ctx.registry()?;
+        let exec = ctx.fused()?.executor();
         let find = |step: &str| -> Result<String> {
             reg.find(|m| m.kind == "preproc_step" && m.ops == [step.to_string()])
                 .into_iter()
                 .next()
                 .map(|m| m.name.clone())
-                .with_context(|| format!("missing preproc step artifact {step}"))
+                .ok_or_else(|| anyhow::anyhow!("missing preproc step artifact {step}"))
         };
         let crop_a = find("crop")?;
         let conv_a = find("convert")?;
@@ -127,15 +148,19 @@ impl PreprocPipeline {
         for r in &self.spec.rects {
             // nppiConvert / nppiResize / nppiSwapChannels / nppiMulC / ...
             let rect = Tensor::from_i32(&[r.x0, r.y0, r.w, r.h], &[4]);
-            let crop = exec.run(&crop_a, &[frame.clone(), rect])?;
-            let f = exec.run(&conv_a, &[crop])?;
-            let up = exec.run(&rsz_a, &[f])?;
-            let sw = exec.run(&cvt_a, &[up])?;
-            let m = exec.run(&mul_a, &[sw, Tensor::from_f32(&self.mul, &[3])])?;
-            let s = exec.run(&sub_a, &[m, Tensor::from_f32(&self.sub, &[3])])?;
-            let d = exec.run(&div_a, &[s, Tensor::from_f32(&self.div, &[3])])?;
-            let planar = exec.run(&split_a, &[d])?;
-            out.extend_from_slice(planar.as_f32().context("planar f32")?);
+            let mulc = Tensor::from_f32(&self.mul, &[3]);
+            let subc = Tensor::from_f32(&self.sub, &[3]);
+            let divc = Tensor::from_f32(&self.div, &[3]);
+            let crop = exec.run(&crop_a, &[frame, &rect])?;
+            let f = exec.run(&conv_a, &[&crop])?;
+            let up = exec.run(&rsz_a, &[&f])?;
+            let sw = exec.run(&cvt_a, &[&up])?;
+            let m = exec.run(&mul_a, &[&sw, &mulc])?;
+            let s = exec.run(&sub_a, &[&m, &subc])?;
+            let d = exec.run(&div_a, &[&s, &divc])?;
+            let planar = exec.run(&split_a, &[&d])?;
+            let vals = planar.as_f32().ok_or_else(|| anyhow::anyhow!("planar f32"))?;
+            out.extend_from_slice(vals);
         }
         Ok(Tensor::from_f32(&out, &[b, 3, dh, dw]))
     }
@@ -158,28 +183,51 @@ impl DeviceFrame {
 mod tests {
     use super::*;
 
-    #[test]
-    fn spec_construction() {
-        let p = PreprocPipeline::new(
-            ResizeBatchSpec { rects: vec![Rect::new(0, 0, 120, 60)], dst_h: 128, dst_w: 64 },
-            [1.0; 3],
-            [0.0; 3],
-            [1.0; 3],
-        );
-        assert!(p.precomputed.is_none());
-    }
-
-    #[test]
-    fn precompute_builds_inputs_once() {
-        let mut p = PreprocPipeline::new(
+    fn preproc() -> PreprocPipeline {
+        PreprocPipeline::new(
             ResizeBatchSpec { rects: vec![Rect::new(0, 0, 120, 60)], dst_h: 128, dst_w: 64 },
             [2.0, 2.0, 2.0],
             [0.0; 3],
             [1.0; 3],
-        );
+        )
+    }
+
+    #[test]
+    fn spec_construction() {
+        assert!(preproc().precomputed.is_none());
+    }
+
+    #[test]
+    fn precompute_builds_inputs_once() {
+        let mut p = preproc();
         p.precompute();
         let inp = p.precomputed.as_ref().unwrap();
         assert_eq!(inp[0].shape(), &[1, 4]);
         assert_eq!(inp[1].as_f32().unwrap(), &[2.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn preset_chain_declares_the_preproc_semantics() {
+        // the typed chain IS the semantic declaration: its signature pins
+        // the op sequence the AOT preproc artifact family implements
+        let p = preproc();
+        let chain = p.preset_chain(p.spec.rects[0]);
+        let sig = chain.signature();
+        // boundary tokens participate: a structured chain never shares a
+        // cache key / HF stream with a dense chain of the same body
+        assert_eq!(sig.ops, "resize[128x64]-cvtcolor-mulc3-subc3-divc3-split[f32]");
+        assert_eq!(sig.dtin, "u8");
+        assert_eq!(sig.dtout, "f32");
+        assert_eq!(chain.pipeline().shape, vec![128, 64, 3]);
+        // structured read + split write survive lowering as typed memops
+        let ops = chain.pipeline().ops();
+        assert!(matches!(
+            ops.first(),
+            Some(crate::ops::IOp::Mem(crate::ops::MemOp::ResizeRead { .. }))
+        ));
+        assert!(matches!(
+            ops.last(),
+            Some(crate::ops::IOp::Mem(crate::ops::MemOp::SplitWrite { .. }))
+        ));
     }
 }

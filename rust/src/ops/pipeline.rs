@@ -91,6 +91,19 @@ impl Pipeline {
         &self.ops
     }
 
+    /// The same code at a different HF width (bucket re-batching on the
+    /// coordinator's hot path — no revalidation needed, the op sequence is
+    /// already proven).
+    pub fn with_batch(&self, batch: usize) -> Pipeline {
+        Pipeline {
+            ops: self.ops.clone(),
+            shape: self.shape.clone(),
+            batch,
+            dtin: self.dtin,
+            dtout: self.dtout,
+        }
+    }
+
     /// The compute body (everything between read and write).
     pub fn body(&self) -> &[IOp] {
         &self.ops[1..self.ops.len() - 1]

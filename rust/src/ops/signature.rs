@@ -5,7 +5,7 @@
 //! distinction between the IOp *type*, which drives codegen, and the IOp
 //! *contents*, which are runtime kernel arguments).
 
-use super::Pipeline;
+use super::{IOp, MemOp, Pipeline};
 
 /// Canonical, hashable identity of a pipeline's generated code.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
@@ -19,8 +19,27 @@ pub struct Signature {
 
 impl Signature {
     pub fn of(p: &Pipeline) -> Signature {
+        // Dense Read/Write boundaries are fully described by (dtin, dtout),
+        // which are already part of the signature, so they contribute no
+        // token (keeps cache keys byte-identical for every pre-structured
+        // pipeline). STRUCTURED boundaries (crop/resize reads, split
+        // writes) change the generated code and must distinguish the key —
+        // otherwise a resize-read chain would share a plan-cache entry and
+        // an HF batch group with a dense chain of the same body.
+        let mut toks: Vec<String> = Vec::with_capacity(p.ops().len());
+        if let Some(op) = p.ops().first() {
+            if !matches!(op, IOp::Mem(MemOp::Read { .. })) {
+                toks.push(op.sig_token());
+            }
+        }
+        toks.extend(p.body().iter().map(|o| o.sig_token()));
+        if let Some(op) = p.ops().last() {
+            if !matches!(op, IOp::Mem(MemOp::Write { .. })) {
+                toks.push(op.sig_token());
+            }
+        }
         Signature {
-            ops: p.body().iter().map(|o| o.sig_token()).collect::<Vec<_>>().join("-"),
+            ops: toks.join("-"),
             dtin: p.dtin.name().to_string(),
             dtout: p.dtout.name().to_string(),
             shape: p.shape.clone(),
@@ -74,6 +93,40 @@ mod tests {
         assert_ne!(a, b);
         assert_eq!(a.stream_key(), b.stream_key());
         assert_eq!(a.with_batch(4), b);
+    }
+
+    #[test]
+    fn structured_boundaries_change_the_signature() {
+        use crate::ops::MemOp;
+        use crate::tensor::Rect;
+        // same body, same shape/dtypes: a resize-read/split-write chain must
+        // NOT share a cache key (or HF stream) with the dense chain
+        let dense = Pipeline::from_opcodes(
+            &[(Opcode::Mul, 1.0)],
+            &[8, 4, 3],
+            1,
+            DType::U8,
+            DType::F32,
+        )
+        .unwrap();
+        let structured = Pipeline::new(
+            vec![
+                IOp::Mem(MemOp::ResizeRead { rect: Rect::new(0, 0, 16, 8), dst_h: 8, dst_w: 4 }),
+                IOp::compute(Opcode::Mul, 1.0),
+                IOp::Mem(MemOp::SplitWrite { dtype: DType::F32 }),
+            ],
+            vec![8, 4, 3],
+            1,
+            DType::U8,
+            DType::F32,
+        )
+        .unwrap();
+        let sd = Signature::of(&dense);
+        let ss = Signature::of(&structured);
+        assert_eq!(sd.ops, "mul");
+        assert_eq!(ss.ops, "resize[8x4]-mul-split[f32]");
+        assert_ne!(sd, ss);
+        assert_ne!(sd.stream_key(), ss.stream_key());
     }
 
     #[test]

@@ -91,6 +91,9 @@ impl Executor {
 
     /// Host->host execution: tensors in, tensor out. One full launch
     /// (H2D + dispatch + D2H) — the cost unit of the unfused baseline.
+    /// Inputs are BORROWED: the H2D upload is the only copy, so hot paths
+    /// (the NPP frame loop, the fused engines) never clone host tensors to
+    /// launch.
     ///
     /// Implementation note: this goes through `execute_b` with explicitly
     /// managed input buffers rather than the crate's literal-based
@@ -99,7 +102,7 @@ impl Executor {
     /// execution and never frees them) — a ~16 MB/launch leak on the
     /// data-size experiments. Here the final `to_literal_sync` is the sync
     /// point after which dropping the inputs is safe.
-    pub fn run(&self, name: &str, inputs: &[Tensor]) -> Result<Tensor> {
+    pub fn run(&self, name: &str, inputs: &[&Tensor]) -> Result<Tensor> {
         let meta = self.registry.get(name).with_context(|| format!("unknown artifact {name}"))?;
         if inputs.len() != meta.input_roles.len() {
             bail!(
@@ -111,7 +114,7 @@ impl Executor {
         }
         let exe = self.registry.executable(name)?;
         let devs: Vec<DeviceValue> =
-            inputs.iter().map(DeviceValue::upload).collect::<Result<_>>()?;
+            inputs.iter().map(|t| DeviceValue::upload(t)).collect::<Result<_>>()?;
         let refs: Vec<&xla::PjRtBuffer> = devs.iter().map(|d| &d.buf).collect();
         let result = exe.execute_b(&refs).map_err(|e| anyhow!("execute {name}: {e}"))?;
         let mut replica = result.into_iter().next().context("no replica output")?;

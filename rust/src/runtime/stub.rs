@@ -36,7 +36,9 @@ impl Executor {
         &self.registry
     }
 
-    pub fn run(&self, name: &str, inputs: &[Tensor]) -> Result<Tensor> {
+    /// Borrows its inputs (like the PJRT build): callers never clone tensors
+    /// to launch.
+    pub fn run(&self, name: &str, inputs: &[&Tensor]) -> Result<Tensor> {
         // arity check still works (metadata is loaded) so callers get the
         // most precise error available before the capability one
         if let Some(meta) = self.registry.get(name) {

@@ -1,0 +1,181 @@
+//! The typed chain front door: engine <-> oracle equivalence for pipelines
+//! built through `fkl::chain`, plus the runtime pins for the compile-fail
+//! doctests.
+//!
+//! The compile-time half of the contract lives in `src/chain/mod.rs` as
+//! `compile_fail` doctests (missing write, missing read, interior mem-op,
+//! dtype-boundary mismatch). Each of those is pinned ONE-TO-ONE here against
+//! the `PipelineError` variant the lowered runtime IR still enforces, so the
+//! typed layer can never drift ahead of the IR it lowers to.
+
+use fkl::chain::{
+    build_erased, Add, Chain, ComputeOp, ConvertTo, Div, Mul, Sub, F32 as CF32, F64 as CF64,
+    U8 as CU8,
+};
+use fkl::exec::{Engine, HostFusedEngine};
+use fkl::hostref;
+use fkl::ops::{IOp, MemOp, Opcode, Pipeline, PipelineError};
+use fkl::proplite::{forall, Rng};
+use fkl::tensor::{DType, Tensor};
+
+const DTYPES: [DType; 5] = [DType::U8, DType::U16, DType::I32, DType::F32, DType::F64];
+
+fn rand_tensor(rng: &mut Rng, shape: &[usize], dt: DType) -> Tensor {
+    let n: usize = shape.iter().product();
+    let vals: Vec<f64> = (0..n).map(|_| rng.f64(0.0, 200.0)).collect();
+    Tensor::from_f64_cast(&vals, shape, dt)
+}
+
+// --- runtime pins for the compile_fail doctests ----------------------------
+
+#[test]
+fn pin_missing_write_is_still_enforced_by_the_ir() {
+    // compile_fail twin: an unsealed chain is not a TypedPipeline
+    let e = Pipeline::new(
+        vec![IOp::Mem(MemOp::Read { dtype: DType::F32 }), IOp::compute(Opcode::Mul, 2.0)],
+        vec![4],
+        1,
+        DType::F32,
+        DType::F32,
+    )
+    .unwrap_err();
+    assert_eq!(e, PipelineError::MissingWrite);
+}
+
+#[test]
+fn pin_missing_read_is_still_enforced_by_the_ir() {
+    // compile_fail twin: ChainLink cannot be assembled without a read
+    let e = Pipeline::new(
+        vec![IOp::compute(Opcode::Mul, 2.0), IOp::Mem(MemOp::Write { dtype: DType::F32 })],
+        vec![4],
+        1,
+        DType::F32,
+        DType::F32,
+    )
+    .unwrap_err();
+    assert_eq!(e, PipelineError::MissingRead);
+}
+
+#[test]
+fn pin_interior_memop_is_still_enforced_by_the_ir() {
+    // compile_fail twin: a read is not a ComputeStage, .map() rejects it
+    let e = Pipeline::new(
+        vec![
+            IOp::Mem(MemOp::Read { dtype: DType::F32 }),
+            IOp::Mem(MemOp::Read { dtype: DType::F32 }),
+            IOp::Mem(MemOp::Write { dtype: DType::F32 }),
+        ],
+        vec![4],
+        1,
+        DType::F32,
+        DType::F32,
+    )
+    .unwrap_err();
+    assert!(matches!(e, PipelineError::InteriorMemOp { index: 1, .. }));
+}
+
+#[test]
+fn pin_dtype_boundary_is_carried_by_the_ir() {
+    // compile_fail twin: write() seals at the chain's current type — the
+    // lowered IR records exactly that dtype pair, nothing else
+    let p = Chain::read::<CU8>(&[4]).map(Mul(2.0)).cast::<CF32>().write();
+    assert_eq!(p.pipeline().dtin, DType::U8);
+    assert_eq!(p.pipeline().dtout, DType::F32);
+}
+
+// --- engine <-> oracle equivalence for chain-built pipelines ---------------
+
+#[test]
+fn chain_built_f64_paths_are_bit_exact_against_the_oracle() {
+    // every integer-output / f64 path accumulates in f64: bit-equal to
+    // hostref for chains built through the typed front door
+    forall(60, |rng| {
+        let eng = HostFusedEngine::new();
+        let dtin = DTYPES[rng.usize(0, DTYPES.len())];
+        let dtout = [DType::U8, DType::U16, DType::I32, DType::F64][rng.usize(0, 4)];
+        let k = rng.usize(1, 6);
+        let stages: Vec<ComputeOp> = (0..k)
+            .map(|_| {
+                let op = [Opcode::Mul, Opcode::Add, Opcode::Sub, Opcode::Max][rng.usize(0, 4)];
+                ComputeOp::scalar(op, rng.f64(0.5, 1.5))
+            })
+            .collect();
+        let batch = rng.usize(1, 4);
+        let p = build_erased(&stages, &[5, 7], batch, dtin, dtout);
+        let input = rand_tensor(rng, &[batch, 5, 7], dtin);
+        let got = eng.run(&p, &input).unwrap();
+        let want = hostref::run_pipeline(&p, &input);
+        assert_eq!(got, want, "{dtin}->{dtout} chain of {k}");
+    });
+}
+
+#[test]
+fn chain_built_f32_fast_path_stays_within_epsilon() {
+    let eng = HostFusedEngine::new();
+    let typed = Chain::read::<CF32>(&[32, 32])
+        .batch(2)
+        .map(Mul(0.5))
+        .map(Sub(3.0))
+        .map(Div(1.7))
+        .write();
+    let mut rng = Rng::new(77);
+    let input = Tensor::from_f32(&rng.vec_f32(2 * 32 * 32, -4.0, 4.0), &[2, 32, 32]);
+    let got = eng.run(typed.pipeline(), &input).unwrap();
+    let want = hostref::run_pipeline(typed.pipeline(), &input);
+    for (i, (a, b)) in got.to_f64_vec().iter().zip(want.to_f64_vec()).enumerate() {
+        assert!((a - b).abs() <= 1e-4 + 1e-4 * b.abs(), "elem {i}: {a} vs {b}");
+    }
+}
+
+#[test]
+fn typed_run_host_equals_dynamic_dispatch_for_every_dtype_pair() {
+    // the monomorphized entry (compile-time lane selection) and the dynamic
+    // entry (runtime dtype match) must be the SAME loops — bitwise
+    let eng = HostFusedEngine::new();
+    let mut rng = Rng::new(9);
+
+    macro_rules! case {
+        ($in:ty, $out:ty, $dtin:expr) => {{
+            let typed = Chain::read::<$in>(&[6, 5])
+                .batch(3)
+                .map(Mul(1.3))
+                .map(Add(2.0))
+                .cast::<$out>()
+                .write();
+            let input = rand_tensor(&mut rng, &[3, 6, 5], $dtin);
+            let mono = typed.run_host(&eng, &input).unwrap();
+            let dynamic = eng.run(typed.pipeline(), &input).unwrap();
+            assert_eq!(mono, dynamic);
+        }};
+    }
+    case!(CU8, CU8, DType::U8);
+    case!(CU8, CF32, DType::U8);
+    case!(CF32, CF32, DType::F32);
+    case!(CF64, CU8, DType::F64);
+    case!(CF64, CF64, DType::F64);
+}
+
+#[test]
+fn chain_and_untyped_ir_share_one_plan_cache_entry() {
+    // signatures are param-agnostic and identical across front doors: one
+    // cached plan serves both (the reuse contract of the redesign)
+    let eng = HostFusedEngine::new();
+    let typed = Chain::read::<CU8>(&[8])
+        .map(ConvertTo)
+        .map(Mul(0.5))
+        .cast::<CF32>()
+        .write();
+    let untyped = Pipeline::from_opcodes(
+        &[(Opcode::Nop, 0.0), (Opcode::Mul, 99.0)],
+        &[8],
+        1,
+        DType::U8,
+        DType::F32,
+    )
+    .unwrap();
+    assert_eq!(typed.signature(), fkl::ops::Signature::of(&untyped));
+    let x = Tensor::from_u8(&[2; 8], &[1, 8]);
+    eng.run(typed.pipeline(), &x).unwrap();
+    eng.run(&untyped, &x).unwrap();
+    assert_eq!(eng.plan_cache_len(), 1, "both front doors hit one plan");
+}

@@ -9,20 +9,22 @@
 
 use std::time::Duration;
 
+use fkl::chain::{Add, Chain, ConvertTo, Div, Mul, Sub, F32, U8};
 use fkl::coordinator::{BatchPolicy, EngineSelect, Service, ServiceConfig};
-use fkl::ops::{Opcode, Pipeline};
+use fkl::ops::Pipeline;
 use fkl::proplite::Rng;
-use fkl::tensor::{DType, Tensor};
+use fkl::tensor::Tensor;
 
 fn pipeline() -> Pipeline {
-    Pipeline::from_opcodes(
-        &[(Opcode::Nop, 0.0), (Opcode::Mul, 0.5), (Opcode::Sub, 3.0), (Opcode::Div, 1.7)],
-        &[60, 120],
-        1,
-        DType::U8,
-        DType::F32,
-    )
-    .unwrap()
+    // every coordinator stream is built through the typed chain front door
+    Chain::read::<U8>(&[60, 120])
+        .map(ConvertTo)
+        .map(Mul(0.5))
+        .map(Sub(3.0))
+        .map(Div(1.7))
+        .cast::<F32>()
+        .write()
+        .into_pipeline()
 }
 
 #[test]
@@ -107,9 +109,7 @@ fn mixed_streams_are_not_cross_batched() {
     });
     // stream A: CMSD u8->f32; stream B: plain mul f32->f32 (interp tier)
     let pa = pipeline();
-    let pb =
-        Pipeline::from_opcodes(&[(Opcode::Mul, 2.0)], &[256, 256], 1, DType::F32, DType::F32)
-            .unwrap();
+    let pb = Chain::read::<F32>(&[256, 256]).map(Mul(2.0)).write().into_pipeline();
     let mut rng = Rng::new(2);
     let mut rx_all = Vec::new();
     for i in 0..20 {
@@ -166,14 +166,10 @@ fn host_backend_batches_any_stream_with_exact_numerics() {
         policy: BatchPolicy { max_batch: 16, window: Duration::from_micros(300) },
         engine: EngineSelect::HostFused,
     });
-    let p = Pipeline::from_opcodes(
-        &[(Opcode::Mul, 1.9), (Opcode::Add, 7.0), (Opcode::Sub, 20.0)],
-        &[17, 23],
-        1,
-        DType::U8,
-        DType::U8,
-    )
-    .unwrap();
+    // submit() accepts the typed chain directly: the coordinator is a chain
+    // front door, lowering happens at the call boundary
+    let typed = Chain::read::<U8>(&[17, 23]).map(Mul(1.9)).map(Add(7.0)).map(Sub(20.0)).write();
+    let p: Pipeline = typed.pipeline().clone();
     let mut rng = Rng::new(12);
     let n = 40;
     let mut inputs = Vec::new();
@@ -181,7 +177,7 @@ fn host_backend_batches_any_stream_with_exact_numerics() {
     for _ in 0..n {
         let item = Tensor::from_u8(&rng.vec_u8(17 * 23), &[1, 17, 23]);
         inputs.push(item.clone());
-        rxs.push(svc.submit(p.clone(), item).unwrap());
+        rxs.push(svc.submit(typed.clone(), item).unwrap());
     }
     for (i, rx) in rxs.into_iter().enumerate() {
         let out = rx.recv().expect("service alive").expect("request ok");

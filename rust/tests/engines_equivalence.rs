@@ -17,7 +17,9 @@ use fkl::runtime::Registry;
 use fkl::tensor::{DType, Tensor};
 
 fn ctx() -> fkl::cv::Context {
-    fkl::cv::Context::new().expect("run `make artifacts` first")
+    // XLA pinned: these tests drive the AOT artifact family
+    fkl::cv::Context::with_select(fkl::exec::EngineSelect::Xla, None)
+        .expect("run `make artifacts` first")
 }
 
 fn assert_close(got: &Tensor, want: &Tensor, tol: f64, what: &str) {
@@ -43,7 +45,7 @@ fn cmsd_f32_all_engines_agree_with_hostref() {
     let mut rng = Rng::new(17);
     let input = Tensor::from_f32(&rng.vec_f32(50 * 60 * 120, -4.0, 4.0), &[50, 60, 120]);
     let want = hostref::run_pipeline(&p, &input);
-    for engine in [&c.fused as &dyn Engine, &c.unfused, &c.graph] {
+    for engine in [c.fused().unwrap() as &dyn Engine, c.unfused().unwrap(), c.graph().unwrap()] {
         let got = engine.run(&p, &input).unwrap();
         assert_close(&got, &want, 1e-4, engine.name());
     }
@@ -62,12 +64,12 @@ fn u8_unfused_matches_step_saturating_oracle() {
     .unwrap();
     let mut rng = Rng::new(23);
     let input = Tensor::from_u8(&rng.vec_u8(60 * 120), &[1, 60, 120]);
-    let got = c.unfused.run(&p, &input).unwrap();
+    let got = c.unfused().unwrap().run(&p, &input).unwrap();
     let want = hostref::run_unfused(&p, &input);
     assert_close(&got, &want, 1.0, "unfused u8");
 
     // and fused matches the single-saturation oracle
-    let gotf = c.fused.run(&p, &input).unwrap();
+    let gotf = c.fused().unwrap().run(&p, &input).unwrap();
     let wantf = hostref::run_pipeline(&p, &input);
     assert_close(&gotf, &wantf, 1.0, "fused u8");
 }
@@ -86,7 +88,7 @@ fn random_covered_chains_property() {
             (0..k).map(|_| (*rng.pick(&safe_ops), rng.f64(0.5, 1.5))).collect();
         let p = Pipeline::from_opcodes(&chain, &[256, 256], 1, DType::F32, DType::F32).unwrap();
         let input = Tensor::from_f32(&rng.vec_f32(256 * 256, -2.0, 2.0), &[1, 256, 256]);
-        let got = c.fused.run(&p, &input).unwrap();
+        let got = c.fused().unwrap().run(&p, &input).unwrap();
         let want = hostref::run_pipeline(&p, &input);
         assert_close(&got, &want, 1e-3, &format!("case {case} chain {chain:?}"));
     }
@@ -106,9 +108,9 @@ fn staticloop_tier_equals_explicit_chain() {
             chain.push((Opcode::Add, 1.0));
         }
         let p = Pipeline::from_opcodes(&chain, &[60, 120], 50, DType::U8, DType::U8).unwrap();
-        let plan = c.fused.plan_for(&p).unwrap();
+        let plan = c.fused().unwrap().plan_for(&p).unwrap();
         assert_eq!(plan.tier(), "staticloop", "n={n}");
-        let got = c.fused.run(&p, &input).unwrap();
+        let got = c.fused().unwrap().run(&p, &input).unwrap();
         let want = hostref::run_pipeline(&p, &input);
         assert_close(&got, &want, 1.0, &format!("staticloop n={n}"));
     }
@@ -145,11 +147,40 @@ fn dtype_combos_fused_matches_oracle() {
                 Tensor::from_f64_cast(&v, &[50, 60, 120], dtin)
             }
         };
-        let got = c.fused.run(&p, &input).unwrap();
+        let got = c.fused().unwrap().run(&p, &input).unwrap();
         let want = hostref::run_pipeline(&p, &input);
         let tol = if dtout.is_int() { 1.0 } else { 1e-3 };
         assert_close(&got, &want, tol, &format!("{dtin}->{dtout}"));
     }
+}
+
+#[test]
+fn chain_built_pipelines_agree_with_hostref_on_every_engine() {
+    // the typed front door lowers to the same IR: fused == graph == unfused
+    // == hostref for a chain built through fkl::chain (epsilon on the f32
+    // path, the same tolerance the untyped suite grants)
+    use fkl::chain::{Chain, ConvertTo, Div, Mul, Sub, F32, U8};
+    let c = ctx();
+    let typed = Chain::read::<U8>(&[60, 120])
+        .batch(50)
+        .map(ConvertTo)
+        .map(Mul(0.5))
+        .map(Sub(3.0))
+        .map(Div(1.7))
+        .cast::<F32>()
+        .write();
+    let p = typed.pipeline();
+    let mut rng = Rng::new(53);
+    let input = Tensor::from_u8(&rng.vec_u8(50 * 60 * 120), &[50, 60, 120]);
+    let want = hostref::run_pipeline(p, &input);
+    for engine in [c.fused().unwrap() as &dyn Engine, c.unfused().unwrap(), c.graph().unwrap()] {
+        let got = engine.run(p, &input).unwrap();
+        assert_close(&got, &want, 1e-3, engine.name());
+    }
+    // and the host engine's monomorphized path agrees too
+    let host = fkl::exec::HostFusedEngine::new();
+    let got = typed.run_host(&host, &input).unwrap();
+    assert_close(&got, &want, 1e-3, "host run_mono");
 }
 
 #[test]

@@ -42,14 +42,14 @@ fn wrong_input_arity_is_rejected() {
     let reg = std::rc::Rc::new(Registry::load(fkl::default_artifact_dir()).unwrap());
     let exec = fkl::runtime::Executor::new(reg);
     let x = Tensor::from_f32(&vec![0.0; 64], &[2, 4, 8]);
-    let err = exec.run("chain_mul-add_f322f32_4x8_b2_pallas", &[x]).unwrap_err();
+    let err = exec.run("chain_mul-add_f322f32_4x8_b2_pallas", &[&x]).unwrap_err();
     assert!(format!("{err:#}").contains("expected 2 inputs"), "{err:#}");
 }
 
 #[test]
 #[cfg(feature = "pjrt")] // needs compiled artifacts + the PJRT runtime
 fn uncovered_pipeline_reports_all_tiers_tried() {
-    let ctx = fkl::cv::Context::new().unwrap();
+    let ctx = fkl::cv::Context::with_select(fkl::exec::EngineSelect::Xla, None).unwrap();
     // exotic shape no artifact covers, even the interpreter
     let p = Pipeline::from_opcodes(
         &[(Opcode::Mul, 2.0)],
@@ -59,7 +59,7 @@ fn uncovered_pipeline_reports_all_tiers_tried() {
         DType::F32,
     )
     .unwrap();
-    let err = ctx.fused.plan_for(&p).unwrap_err();
+    let err = ctx.fused().unwrap().plan_for(&p).unwrap_err();
     let msg = format!("{err:#}");
     assert!(msg.contains("no artifact covers"), "{msg}");
 }
@@ -68,7 +68,7 @@ fn uncovered_pipeline_reports_all_tiers_tried() {
 #[cfg(feature = "pjrt")] // needs compiled artifacts + the PJRT runtime
 fn pipeline_dtype_mismatch_is_rejected_before_launch() {
     use fkl::exec::Engine;
-    let ctx = fkl::cv::Context::new().unwrap();
+    let ctx = fkl::cv::Context::with_select(fkl::exec::EngineSelect::Xla, None).unwrap();
     let p = Pipeline::from_opcodes(
         &[(Opcode::Nop, 0.0), (Opcode::Mul, 0.5), (Opcode::Sub, 3.0), (Opcode::Div, 1.7)],
         &[60, 120],
@@ -79,7 +79,7 @@ fn pipeline_dtype_mismatch_is_rejected_before_launch() {
     .unwrap();
     // f32 data fed to a u8 pipeline: the artifact input check must catch it
     let wrong = Tensor::from_f32(&vec![0.0; 50 * 7200], &[50, 60, 120]);
-    let res = ctx.fused.run(&p, &wrong);
+    let res = ctx.fused().unwrap().run(&p, &wrong);
     assert!(res.is_err(), "dtype mismatch must not silently launch");
 }
 
@@ -131,6 +131,84 @@ fn coordinator_with_bad_artifact_dir_degrades_gracefully() {
     assert!(out.is_err());
     assert!(out.unwrap_err().contains("registry"));
     svc.shutdown();
+}
+
+/// Minimal valid manifest (full opcode table for the drift check, zero
+/// artifacts) so a `FusedEngine` can be built without `make artifacts`.
+fn empty_registry() -> std::rc::Rc<Registry> {
+    let dir = std::env::temp_dir().join("fkl_empty_manifest");
+    std::fs::create_dir_all(&dir).unwrap();
+    let opcodes: Vec<String> = fkl::ops::ALL_OPCODES
+        .iter()
+        .map(|o| format!("\"{}\":{}", o.name(), o.code()))
+        .collect();
+    let manifest = format!(
+        "{{\"version\":1,\"scale\":\"scaled\",\"opcodes\":{{{}}},\"geometry\":{{}},\"artifacts\":[]}}",
+        opcodes.join(",")
+    );
+    std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+    std::rc::Rc::new(Registry::load(&dir).unwrap())
+}
+
+#[test]
+fn unsupported_body_is_typed_counted_and_served_by_the_host_loops() {
+    use fkl::exec::{Engine, FusedEngine, UnsupportedOp};
+    let eng = FusedEngine::new(empty_registry());
+
+    // a lane-structured body — outside the XLA chain vocabulary; the fused
+    // front door must detect it (typed + counted) and re-route to the host
+    // single-pass engine, which runs it natively
+    let p = fkl::chain::Chain::read::<fkl::chain::F32>(&[2, 3])
+        .map(fkl::chain::CvtColor)
+        .write()
+        .into_pipeline();
+    let x = Tensor::from_f32(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[1, 2, 3]);
+    let out = eng.run(&p, &x).expect("host re-route serves the body");
+    assert_eq!(out, fkl::hostref::run_pipeline(&p, &x), "served bit-exactly");
+    let st = eng.planner_stats();
+    assert_eq!(st.unsupported, 1, "the detection is counted for dashboards");
+    assert_eq!(st.host, 1, "the serve lands in the host tier");
+    assert!(!eng.last_was_fallback(), "host single-pass is fused, not per-op");
+    assert_eq!(eng.last_launches(), 1);
+
+    // the failure path stays typed: bad input -> error chain carries the
+    // UnsupportedOp marker naming the offending op
+    let wrong = Tensor::from_u8(&[0; 6], &[1, 2, 3]);
+    let err = eng.run(&p, &wrong).unwrap_err();
+    let typed =
+        err.downcast_ref::<UnsupportedOp>().expect("typed UnsupportedOp in the error chain");
+    assert_eq!(typed.engine, "fused");
+    assert_eq!(typed.token, "cvtcolor");
+
+    // the per-op engines reject the same body with the typed error directly
+    let unfused = fkl::exec::UnfusedEngine::new(empty_registry());
+    let err = unfused.run(&p, &x).unwrap_err();
+    let typed = err.downcast_ref::<UnsupportedOp>().expect("typed in unfused too");
+    assert_eq!(typed.engine, "unfused");
+}
+
+#[test]
+fn structured_boundaries_are_refused_by_every_dense_path() {
+    use fkl::exec::{Engine, FusedEngine, HostFusedEngine};
+    use fkl::tensor::Rect;
+    // a crop+resize read / split write chain: no dense engine may execute
+    // it (the layout contract would be silently violated) — it needs the
+    // dedicated preproc artifact family
+    let typed = fkl::chain::Chain::read_resize::<fkl::chain::U8>(Rect::new(0, 0, 16, 8), 8, 4)
+        .map(fkl::chain::CvtColor)
+        .cast::<fkl::chain::F32>()
+        .write_split();
+    let p = typed.pipeline().clone();
+    let input = Tensor::from_u8(&vec![1u8; 8 * 4 * 3], &[1, 8, 4, 3]);
+
+    let host = HostFusedEngine::with_threads(1);
+    let err = host.run(&p, &input).unwrap_err();
+    assert!(format!("{err:#}").contains("artifact backend"), "{err:#}");
+    assert!(typed.run_host(&host, &input).is_err());
+
+    let fused = FusedEngine::new(empty_registry());
+    let err = fused.run(&p, &input).unwrap_err();
+    assert!(format!("{err:#}").contains("structured boundary"), "{err:#}");
 }
 
 #[test]

@@ -43,7 +43,7 @@ fn fused_chain_matches_hostref() {
     let x: Vec<f32> = (0..64).map(|i| (i as f32) * 0.25 - 4.0).collect();
     let xt = Tensor::from_f32(&x, &[2, 4, 8]);
     let params = Tensor::from_f32(&[1.5, 2.0], &[2]);
-    let got = exec.run("chain_mul-add_f322f32_4x8_b2_pallas", &[xt.clone(), params]).unwrap();
+    let got = exec.run("chain_mul-add_f322f32_4x8_b2_pallas", &[&xt, &params]).unwrap();
 
     let p = Pipeline::from_opcodes(
         &[(Opcode::Mul, 1.5), (Opcode::Add, 2.0)],
@@ -64,8 +64,8 @@ fn pallas_and_xla_variants_agree_exactly() {
     let x: Vec<f32> = (0..64).map(|i| (i as f32) * 0.5).collect();
     let xt = Tensor::from_f32(&x, &[2, 4, 8]);
     let params = Tensor::from_f32(&[0.75, -1.0], &[2]);
-    let a = exec.run("chain_mul-add_f322f32_4x8_b2_pallas", &[xt.clone(), params.clone()]).unwrap();
-    let b = exec.run("chain_mul-add_f322f32_4x8_b2_xla", &[xt, params]).unwrap();
+    let a = exec.run("chain_mul-add_f322f32_4x8_b2_pallas", &[&xt, &params]).unwrap();
+    let b = exec.run("chain_mul-add_f322f32_4x8_b2_xla", &[&xt, &params]).unwrap();
     assert_eq!(a, b, "pallas and xla lowerings of the same chain must agree bitwise");
 }
 
@@ -87,7 +87,7 @@ fn staticloop_trip_count_is_runtime() {
     .unwrap();
     for iters in [0usize, 1, 7] {
         let it = Tensor::from_i32(&[iters as i32], &[1]);
-        let got = exec.run(name, &[it, x.clone(), params.clone()]).unwrap();
+        let got = exec.run(name, &[&it, &x, &params]).unwrap();
         let want = hostref::run_staticloop(&p, &x, iters);
         assert_close(&got, &want, 1.0); // u8 rounding tolerance
     }
@@ -111,9 +111,9 @@ fn interp_kernel_runs_arbitrary_chain() {
         Opcode::Min.code(),
     ]);
     par[..4].copy_from_slice(&[2.0, 1.0, 0.0, 4.0]);
-    let got = exec
-        .run(name, &[xt.clone(), Tensor::from_i32(&opc, &[16]), Tensor::from_f32(&par, &[16])])
-        .unwrap();
+    let opc_t = Tensor::from_i32(&opc, &[16]);
+    let par_t = Tensor::from_f32(&par, &[16]);
+    let got = exec.run(name, &[&xt, &opc_t, &par_t]).unwrap();
 
     let p = Pipeline::from_opcodes(
         &[(Opcode::Mul, 2.0), (Opcode::Add, 1.0), (Opcode::Abs, 0.0), (Opcode::Min, 4.0)],
@@ -134,7 +134,7 @@ fn reduce_stats_one_pass() {
     let n = 512 * 512;
     let x: Vec<f32> = (0..n).map(|i| ((i as f32) * 0.001).sin() * 10.0).collect();
     let xt = Tensor::from_f32(&x, &[512, 512]);
-    let got = exec.run("reduce_stats_f32_512x512_pallas", &[xt.clone()]).unwrap();
+    let got = exec.run("reduce_stats_f32_512x512_pallas", &[&xt]).unwrap();
     let g = got.to_f64_vec();
     let [mx, mn, sum, mean] = hostref::reduce_stats(&xt);
     assert!((g[0] - mx).abs() < 1e-3, "max {} vs {}", g[0], mx);
@@ -154,18 +154,11 @@ fn preproc_pipeline_matches_hostref() {
     let mulv = [0.9f32, 1.0, 1.1];
     let subv = [0.5f32, 0.4, 0.3];
     let divv = [2.0f32, 2.1, 2.2];
-    let got = exec
-        .run(
-            name,
-            &[
-                frame.clone(),
-                Rect::batch_tensor(&rects),
-                Tensor::from_f32(&mulv, &[3]),
-                Tensor::from_f32(&subv, &[3]),
-                Tensor::from_f32(&divv, &[3]),
-            ],
-        )
-        .unwrap();
+    let rects_t = Rect::batch_tensor(&rects);
+    let mul_t = Tensor::from_f32(&mulv, &[3]);
+    let sub_t = Tensor::from_f32(&subv, &[3]);
+    let div_t = Tensor::from_f32(&divv, &[3]);
+    let got = exec.run(name, &[&frame, &rects_t, &mul_t, &sub_t, &div_t]).unwrap();
     let want = hostref::preproc(&frame, &rects, mulv, subv, divv, 128, 64);
     assert_close(&got, &want, 1e-2);
 }
@@ -188,7 +181,7 @@ fn graph_replay_matches_stepwise() {
         .finish();
     let got = graph.replay(&x).unwrap();
 
-    let step1 = exec.run(name, &[x, params.clone()]).unwrap();
-    let want = exec.run(name, &[step1, params]).unwrap();
+    let step1 = exec.run(name, &[&x, &params]).unwrap();
+    let want = exec.run(name, &[&step1, &params]).unwrap();
     assert_eq!(got, want);
 }
