@@ -4,19 +4,24 @@
 //! execution with the fused FastNPP-style single kernel — including the
 //! syntax the paper advertises.
 //!
+//! Runs on ANY machine: with artifacts the fused arm is one AOT kernel
+//! launch; without them the host fused engine executes the same structured
+//! chain in one pass per crop (bilinear gather while reading, split while
+//! writing) against the NPP-style materialized-step baseline.
+//!
 //! ```sh
-//! make artifacts && cargo run --release --example image_pipeline
+//! cargo run --release --example image_pipeline              # host backend
+//! make artifacts && cargo run --release --example image_pipeline  # XLA
 //! ```
 
 use fkl::cv::Context;
-use fkl::exec::EngineSelect;
 use fkl::npp::{PreprocPipeline, ResizeBatchSpec};
 use fkl::tensor::{make_frame, Rect};
 
 fn main() -> anyhow::Result<()> {
-    // the preproc comparison drives AOT artifacts, so the XLA backend is
-    // pinned (a missing registry is an actionable error, not a degrade)
-    let ctx = Context::with_select(EngineSelect::Xla, None)?;
+    // Auto backend selection: the flagship workload is servable everywhere
+    let ctx = Context::new()?;
+    println!("backend: {}", ctx.backend());
     let frame = make_frame(720, 1280, 2024);
 
     // 50 detection boxes from the "previous frame" (the paper's use case:

@@ -1,0 +1,185 @@
+//! Preproc benchmark: the paper's flagship NPP comparison (Fig. 24/25)
+//! measured on the host tier — NO artifacts required, runs on any machine.
+//!
+//! The workload is the production preprocessing pipeline
+//! Batch(Crop+Resize -> ColorConvert -> MulC -> SubC -> DivC -> Split) over
+//! a 1080p frame, at several target sizes. Two arms:
+//!
+//! * **fused** — `PreprocPipeline::run` on the host fused engine: per crop,
+//!   ONE pass that gathers bilinearly while reading, folds the chain in
+//!   registers and scatters planar while writing; no intermediate ever
+//!   touches memory;
+//! * **npp-style** — `run_npp_style`: one whole-buffer pass per step per
+//!   crop (crop, convert, resize, cvtcolor, mulc, subc, divc, split), every
+//!   intermediate materialized — the op-at-a-time traffic pattern of the
+//!   original libraries.
+//!
+//! Writes `BENCH_preproc.json` at the repo root and enforces the acceptance
+//! bar: fused >= 2x op-at-a-time on the canonical point (batch 8 @ 128x128).
+//!
+//! ```sh
+//! cargo bench --bench preproc_bench            # full sweep
+//! FKL_BENCH_FAST=1 cargo bench --bench preproc_bench   # trimmed
+//! ```
+
+use std::time::Duration;
+
+use fkl::bench::time_fn;
+use fkl::cv::Context;
+use fkl::exec::EngineSelect;
+use fkl::hostref;
+use fkl::jsonlite::Value;
+use fkl::npp::{PreprocPipeline, ResizeBatchSpec};
+use fkl::tensor::{make_frame, Rect, Tensor};
+
+struct Point {
+    label: String,
+    batch: usize,
+    dst_h: usize,
+    dst_w: usize,
+    npp_style_ms: f64,
+    fused_ms: f64,
+}
+
+impl Point {
+    fn speedup(&self) -> f64 {
+        self.npp_style_ms / self.fused_ms
+    }
+
+    fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("label", Value::str(&self.label)),
+            ("batch", Value::num(self.batch as f64)),
+            ("dst_h", Value::num(self.dst_h as f64)),
+            ("dst_w", Value::num(self.dst_w as f64)),
+            ("npp_style_ms", Value::num(self.npp_style_ms)),
+            ("fused_ms", Value::num(self.fused_ms)),
+            ("speedup_fused", Value::num(self.speedup())),
+        ])
+    }
+}
+
+fn rects_for(b: usize) -> Vec<Rect> {
+    (0..b)
+        .map(|i| Rect::new((i as i32 * 131) % 1600, (i as i32 * 71) % 900, 240, 120))
+        .collect()
+}
+
+fn measure(
+    ctx: &Context,
+    frame: &Tensor,
+    b: usize,
+    dh: usize,
+    dw: usize,
+    reps: usize,
+    budget: Duration,
+) -> Point {
+    let rects = rects_for(b);
+    let pipe = PreprocPipeline::new(
+        ResizeBatchSpec { rects: rects.clone(), dst_h: dh, dst_w: dw },
+        [0.9, 1.0, 1.1],
+        [0.5, 0.4, 0.3],
+        [2.0, 2.1, 2.2],
+    );
+
+    // correctness guard: a benchmark of a wrong answer is meaningless —
+    // fused must match the independent Fig. 25 oracle within epsilon
+    let fused = pipe.run(ctx, frame).expect("fused preproc on the host tier");
+    let want =
+        hostref::preproc(frame, &rects, [0.9, 1.0, 1.1], [0.5, 0.4, 0.3], [2.0, 2.1, 2.2], dh, dw);
+    assert_eq!(fused.shape(), want.shape());
+    for (i, (a, w)) in fused.to_f64_vec().iter().zip(want.to_f64_vec()).enumerate() {
+        assert!(
+            (a - w).abs() <= 1e-3 + 1e-3 * w.abs(),
+            "b{b} {dh}x{dw} elem {i}: fused diverged from oracle ({a} vs {w})"
+        );
+    }
+
+    let npp = time_fn(reps, budget, || pipe.run_npp_style(ctx, frame).unwrap());
+    let fsd = time_fn(reps, budget, || pipe.run(ctx, frame).unwrap());
+    let pt = Point {
+        label: format!("preproc/b{b}/{dh}x{dw}"),
+        batch: b,
+        dst_h: dh,
+        dst_w: dw,
+        npp_style_ms: npp.mean_s * 1e3,
+        fused_ms: fsd.mean_s * 1e3,
+    };
+    println!(
+        "{:28} | npp-style {:>9.3} ms | fused {:>9.3} ms | {:>5.2}x",
+        pt.label,
+        pt.npp_style_ms,
+        pt.fused_ms,
+        pt.speedup()
+    );
+    pt
+}
+
+fn main() {
+    let fast = std::env::var("FKL_BENCH_FAST").is_ok();
+    let (reps, budget) =
+        if fast { (5, Duration::from_millis(300)) } else { (15, Duration::from_millis(900)) };
+    // the host tier is the point of this bench: zero artifacts anywhere
+    let ctx = Context::with_select(EngineSelect::HostFused, None)
+        .expect("host backend always comes up");
+    let frame = make_frame(1080, 1920, 42);
+    println!("# preproc_bench — fused host preproc vs NPP-style op-at-a-time (1080p frame)");
+
+    let mut points: Vec<Point> = Vec::new();
+    let sizes: &[(usize, usize)] =
+        if fast { &[(64, 64), (128, 128)] } else { &[(64, 64), (128, 128), (224, 224)] };
+    let batches: &[usize] = if fast { &[8] } else { &[2, 8, 32] };
+    for &(dh, dw) in sizes {
+        for &b in batches {
+            points.push(measure(&ctx, &frame, b, dh, dw, reps, budget));
+        }
+    }
+    // the acceptance point is part of every sweep shape
+    if !points.iter().any(|p| p.batch == 8 && p.dst_h == 128) {
+        points.push(measure(&ctx, &frame, 8, 128, 128, reps, budget));
+    }
+
+    let accept = points
+        .iter()
+        .find(|p| p.batch == 8 && p.dst_h == 128 && p.dst_w == 128)
+        .expect("sweep includes the acceptance point");
+    let (accept_label, accept_speedup) = (accept.label.clone(), accept.speedup());
+    let accept_pass = accept_speedup >= 2.0;
+    println!(
+        "\nacceptance: {accept_label} -> {accept_speedup:.2}x (target >= 2x): {}",
+        if accept_pass { "PASS" } else { "FAIL" }
+    );
+
+    let report = Value::obj(vec![
+        ("bench", Value::str("preproc")),
+        ("frame", Value::str("1080x1920x3 u8")),
+        ("fast_mode", Value::Bool(fast)),
+        (
+            "acceptance",
+            Value::obj(vec![
+                ("criterion", Value::str("fused >= 2x npp-style op-at-a-time, batch 8 @ 128x128")),
+                ("point", Value::str(&accept_label)),
+                ("speedup", Value::num(accept_speedup)),
+                ("pass", Value::Bool(accept_pass)),
+            ]),
+        ),
+        ("series", Value::Arr(points.iter().map(Point::to_json).collect())),
+    ]);
+
+    // repo root (= parent of the crate dir), plus cwd as a convenience copy
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|p| p.join("BENCH_preproc.json"))
+        .unwrap_or_else(|| "BENCH_preproc.json".into());
+    std::fs::write(&root, report.to_json()).expect("write BENCH_preproc.json");
+    println!("wrote {}", root.display());
+
+    // FKL_BENCH_SOFT turns the acceptance gate into a warning — wall-clock
+    // asserts on shared CI runners are a flake source; local/bench runs keep
+    // the hard gate
+    if !accept_pass && std::env::var("FKL_BENCH_SOFT").is_ok() {
+        eprintln!("WARNING: acceptance criterion not met: {accept_speedup:.2}x < 2x (soft mode)");
+        return;
+    }
+    assert!(accept_pass, "acceptance criterion not met: {accept_speedup:.2}x < 2x");
+}

@@ -525,34 +525,23 @@ impl<In: Elem, Out: Elem> TypedPipeline<In, Out> {
     /// Execute on the host fused engine through the **statically
     /// monomorphized** single-pass loop: the `(In, Out)` markers pick the
     /// lane pair at compile time ([`HostFusedEngine::run_mono`]), the Rust
-    /// analog of the paper's compile-time kernel instantiation. Numerics
-    /// are identical to the dynamic [`crate::exec::Engine::run`] path —
-    /// same plan, same loops.
+    /// analog of the paper's compile-time kernel instantiation. Structured
+    /// boundary stages execute natively in the same pass — a crop/resize
+    /// read gathers from `input` as the shared `[fh, fw, 3]` frame, a split
+    /// write lands planar (see [`Pipeline::out_shape`]). Numerics are
+    /// identical to the dynamic [`crate::exec::Engine::run`] path — same
+    /// plan, same loops.
     pub fn run_host(&self, engine: &HostFusedEngine, input: &Tensor) -> Result<Tensor> {
         let p = &self.pipeline;
-        ensure!(
-            matches!(p.ops().first(), Some(IOp::Mem(MemOp::Read { .. })))
-                && matches!(p.ops().last(), Some(IOp::Mem(MemOp::Write { .. }))),
-            "structured boundary stages (crop/resize read, split write) lower \
-             to the artifact backend, not the dense host loop"
-        );
         ensure!(
             input.dtype() == In::DTYPE,
             "chain input dtype {} != typed In = {}",
             input.dtype(),
             In::DTYPE
         );
-        let mut want = vec![p.batch];
-        want.extend_from_slice(&p.shape);
-        ensure!(
-            input.shape() == want.as_slice(),
-            "chain input shape {:?} != pipeline {:?}",
-            input.shape(),
-            want
-        );
         let src = In::slice(input).context("dtype checked above")?;
-        let out: Vec<Out::Lane> = engine.run_mono(p, src)?;
-        Ok(Out::from_vec(out, &want))
+        let out: Vec<Out::Lane> = engine.run_mono(p, src, input.shape())?;
+        Ok(Out::from_vec(out, &p.out_shape()))
     }
 }
 
@@ -699,10 +688,18 @@ mod tests {
         assert_eq!(sig.dtin, "u8");
         assert_eq!(sig.dtout, "f32");
         assert_eq!(p.pipeline().shape, vec![128, 64, 3]);
-        // the dense host loop refuses structured reads loudly
+        // the typed front door SERVES structured chains on the host engine:
+        // gather while reading, split while writing, one pass — bit-equal
+        // to the structured oracle
         let eng = HostFusedEngine::with_threads(1);
-        let frame = Tensor::zeros(DType::U8, &[1, 128, 64, 3]);
-        assert!(p.run_host(&eng, &frame).is_err());
+        let frame = crate::tensor::make_frame(200, 320, 31);
+        let out = p.run_host(&eng, &frame).expect("structured chains run on the host tier");
+        assert_eq!(out.shape(), &[1, 3, 128, 64]);
+        assert_eq!(out, crate::hostref::run_pipeline(p.pipeline(), &frame));
+        assert_eq!(eng.structured_runs(), 1);
+        // a batched dense tensor is NOT a frame: still refused loudly
+        let batched = Tensor::zeros(DType::U8, &[1, 128, 64, 3]);
+        assert!(p.run_host(&eng, &batched).is_err());
     }
 
     #[test]

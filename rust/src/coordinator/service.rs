@@ -76,7 +76,9 @@ impl Service {
     /// Submit one item; returns a receiver for the result. Non-blocking:
     /// fails fast under backpressure. Accepts the runtime [`Pipeline`] IR or
     /// a typed chain ([`crate::chain::TypedPipeline`]) — the coordinator is
-    /// a chain front door like `cv`/`npp`.
+    /// a chain front door like `cv`/`npp`. Dense pipelines take
+    /// `[1, *shape]` items; structured chains (crop/resize reads) take the
+    /// shared `[fh, fw, 3]` FRAME as the item and serve per request.
     pub fn submit(
         &self,
         pipeline: impl Into<Pipeline>,
@@ -172,9 +174,11 @@ impl Backend {
     fn planner_stats(&self) -> PlannerStats {
         match self {
             Backend::Xla { engine, .. } => engine.planner_stats(),
-            Backend::Host { engine, .. } => {
-                PlannerStats { host: engine.runs(), ..PlannerStats::default() }
-            }
+            Backend::Host { engine, .. } => PlannerStats {
+                host: engine.runs(),
+                structured: engine.structured_runs(),
+                ..PlannerStats::default()
+            },
         }
     }
 }
@@ -290,14 +294,57 @@ fn observe_launch(metrics: &mut Metrics, backend: &Backend) {
     }
 }
 
+/// Serve each request of a group on its own (no HF stacking): the path for
+/// structured streams and for streams whose backend only covers b=1.
+fn execute_per_item(
+    group: &[PendingRequest<SyncSender<Result<Tensor, String>>>],
+    backend: &Backend,
+    metrics: &mut Metrics,
+) {
+    for req in group {
+        match backend.run(&req.pipeline, &req.item) {
+            Ok(t) => {
+                observe_launch(metrics, backend);
+                metrics.batched_items += 1;
+                metrics.observe_latency(req.enqueued.elapsed());
+                let _ = req.reply.send(Ok(t));
+            }
+            Err(e) => {
+                metrics.failed += 1;
+                let _ = req.reply.send(Err(format!("{e:#}")));
+            }
+        }
+    }
+}
+
 /// Execute one same-signature group as an HF-batched launch: stack the items
 /// into a bucket-sized batch (one allocation, one copy per item), run, slice
-/// replies back out.
+/// replies back out. Structured streams (crop/resize reads, split writes)
+/// are servable traffic too: their items are shared FRAMES, not `[1, *shape]`
+/// planes — frames may differ per request, so they serve per item (the
+/// engine validates each frame's geometry loudly on its run).
 fn execute_group(
     group: Vec<PendingRequest<SyncSender<Result<Tensor, String>>>>,
     backend: &Backend,
     metrics: &mut Metrics,
 ) {
+    if group[0].pipeline.has_structured_boundary() {
+        // dtype is checkable up front; geometry is per-frame
+        let proto_dtin = group[0].pipeline.dtin;
+        let (group, malformed): (Vec<_>, Vec<_>) =
+            group.into_iter().partition(|r| r.item.dtype() == proto_dtin);
+        for req in &malformed {
+            metrics.failed += 1;
+            let _ = req.reply.send(Err(format!(
+                "item dtype {} does not match pipeline dtin {}",
+                req.item.dtype(),
+                proto_dtin
+            )));
+        }
+        execute_per_item(&group, backend, metrics);
+        return;
+    }
+
     // reject malformed items up front: the batcher groups by pipeline
     // signature only, so one wrong-dtype/shape item would otherwise poison
     // (or panic) the stacked launch for the whole group
@@ -341,20 +388,7 @@ fn execute_group(
     }
     let Some((bucket, batched)) = batched else {
         // per-item fallback: still correct, just no HF for this stream
-        for req in &group {
-            match backend.run(&req.pipeline, &req.item) {
-                Ok(t) => {
-                    observe_launch(metrics, backend);
-                    metrics.batched_items += 1;
-                    metrics.observe_latency(req.enqueued.elapsed());
-                    let _ = req.reply.send(Ok(t));
-                }
-                Err(e) => {
-                    metrics.failed += 1;
-                    let _ = req.reply.send(Err(format!("{e:#}")));
-                }
-            }
-        }
+        execute_per_item(&group, backend, metrics);
         return;
     };
 

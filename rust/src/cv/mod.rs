@@ -199,7 +199,10 @@ impl Context {
     }
 
     /// Run a pipeline on the selected primary backend (XLA fused when
-    /// loaded, host fused otherwise).
+    /// loaded, host fused otherwise). Structured pipelines (crop/resize
+    /// reads, split writes) are served on EITHER backend: the host engine
+    /// runs them natively, and the XLA fused engine re-routes them to its
+    /// host fallback when no dedicated artifact family covers them.
     pub fn run(&self, p: &Pipeline, input: &Tensor) -> Result<Tensor> {
         match &self.xla {
             Some(x) => x.fused.run(p, input),
@@ -360,5 +363,23 @@ mod tests {
         let ctx = Context::with_select(EngineSelect::HostFused, None).unwrap();
         assert_eq!(ctx.backend(), ActiveBackend::HostFused);
         assert_eq!(ctx.backend().to_string(), "host_fused");
+    }
+
+    #[test]
+    fn context_run_serves_structured_pipelines() {
+        // the flagship workload shape through the generic front door: a
+        // crop+resize read with a split write runs on whatever backend the
+        // context resolved — artifact-free machines included
+        use crate::tensor::{make_frame, Rect};
+        let ctx = Context::with_select(EngineSelect::HostFused, None).unwrap();
+        let p = chain::Chain::read_resize::<chain::U8>(Rect::new(2, 2, 20, 10), 8, 6)
+            .map(chain::CvtColor)
+            .cast::<chain::F32>()
+            .write_split()
+            .into_pipeline();
+        let frame = make_frame(40, 50, 77);
+        let out = ctx.run(&p, &frame).unwrap();
+        assert_eq!(out.shape(), &[1, 3, 8, 6]);
+        assert_eq!(out, crate::hostref::run_pipeline(&p, &frame));
     }
 }

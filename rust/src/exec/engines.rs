@@ -7,7 +7,7 @@ use std::rc::Rc;
 use anyhow::{bail, Context, Result};
 
 use crate::fusion::{plan_pipeline, unfused_plan, FusionPlan, PlanError, PlanInputs, PlannerStats};
-use crate::ops::{IOp, MemOp, Pipeline, Signature};
+use crate::ops::{IOp, Pipeline, Signature};
 use crate::runtime::{ExecGraph, Executor, Registry};
 use crate::tensor::Tensor;
 
@@ -39,10 +39,12 @@ pub enum EngineSelect {
 
 /// Typed "this engine cannot lower that op" error. Raised by the artifact
 /// engines for bodies outside the chain vocabulary (`ComputeC3`,
-/// `CvtColor`) and for structured boundary ops; [`FusedEngine::run`] counts
-/// the detection in [`PlannerStats::unsupported`] and re-routes
-/// lane-structured bodies to the host single-pass engine (which runs them
-/// natively — see the group pass in `host_fused`) instead of failing with a
+/// `CvtColor`) and — on the per-op engines, which are dense-only — for
+/// structured boundary ops; [`FusedEngine::run`] counts the detection in
+/// [`PlannerStats::unsupported`] / [`PlannerStats::structured`] and
+/// re-routes the pipeline to the host single-pass engine (which runs both
+/// lane-structured bodies and structured boundaries natively — see the
+/// group pass and the pixel pass in `host_fused`) instead of failing with a
 /// stringly message.
 #[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
 #[error("{engine} engine does not support op `{token}` (chain vocabulary only)")]
@@ -54,15 +56,12 @@ pub struct UnsupportedOp {
 }
 
 fn body_names<'a>(p: &'a Pipeline, engine: &'static str) -> Result<Vec<&'a str>> {
-    // structured boundaries would silently execute as dense per-op chains —
-    // refuse with the typed error instead
-    if let Some(op) = p.ops().first() {
-        if !matches!(op, IOp::Mem(MemOp::Read { .. })) {
-            return Err(UnsupportedOp { engine, token: op.sig_token() }.into());
-        }
-    }
-    if let Some(op) = p.ops().last() {
-        if !matches!(op, IOp::Mem(MemOp::Write { .. })) {
+    // dense per-op chains cannot reproduce a structured boundary's access
+    // pattern — refuse with the typed error instead of silently executing
+    // with the wrong layout (interrogate the boundary METADATA, never
+    // sig-token strings)
+    for op in [p.ops().first(), p.ops().last()].into_iter().flatten() {
+        if matches!(op, IOp::Mem(m) if m.is_structured()) {
             return Err(UnsupportedOp { engine, token: op.sig_token() }.into());
         }
     }
@@ -176,24 +175,28 @@ impl Engine for FusedEngine {
     fn run(&self, p: &Pipeline, input: &Tensor) -> Result<Tensor> {
         let plan = match self.plan_for(p) {
             Ok(plan) => plan,
-            Err(e)
-                if matches!(
-                    e.downcast_ref::<PlanError>(),
-                    Some(PlanError::NotAChain(_))
-                ) =>
-            {
-                // the XLA chain lowering cannot express this body (ComputeC3
-                // / CvtColor): typed detection, counted, and routed to the
-                // HOST single-pass engine — the per-op fallback rejects the
-                // same ops, but the host loops run them natively (still one
-                // fused memory pass, tallied under the host tier)
-                let token = p
-                    .body()
-                    .iter()
-                    .find(|op| !matches!(op, IOp::Compute { .. }))
-                    .map(|op| op.sig_token())
-                    .unwrap_or_default();
-                self.stats.borrow_mut().unsupported += 1;
+            Err(e) => {
+                // two pipeline families the ARTIFACT tiers cannot express:
+                // lane-structured bodies (ComputeC3/CvtColor — outside the
+                // XLA chain vocabulary) and structured boundaries (crop /
+                // resize reads, split writes — a dense chain artifact would
+                // execute the wrong memory pattern). The per-op fallback
+                // rejects both too; the host single-pass engine runs both
+                // NATIVELY, still one fused memory pass. Typed detection,
+                // counted, routed — tallied under the host tier.
+                let (token, structured) = match e.downcast_ref::<PlanError>() {
+                    Some(PlanError::NotAChain(t)) => (t.clone(), false),
+                    Some(PlanError::StructuredBoundary(t)) => (t.clone(), true),
+                    _ => return Err(e),
+                };
+                {
+                    let mut st = self.stats.borrow_mut();
+                    if structured {
+                        st.structured += 1;
+                    } else {
+                        st.unsupported += 1;
+                    }
+                }
                 self.last_fallback.set(false);
                 *self.last.borrow_mut() = 1;
                 let host = self.host_engine();
@@ -205,7 +208,6 @@ impl Engine for FusedEngine {
                     Err(fe) => Err(fe.context(UnsupportedOp { engine: "fused", token })),
                 };
             }
-            Err(e) => return Err(e),
         };
         *self.last.borrow_mut() = plan.launches();
         self.last_fallback.set(matches!(plan, FusionPlan::Unfused { .. }));

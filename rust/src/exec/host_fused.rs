@@ -1,21 +1,30 @@
 //! HostFusedEngine — vertical fusion on the CPU: ONE memory pass per run.
 //!
 //! This is the backend that runs everywhere (no PJRT, no artifacts). It
-//! reproduces the paper's fusion story on the host: where the op-at-a-time
+//! reproduces the paper's fusion story on the host, including its THREE-PART
+//! kernel shape (ReadOp -> compute chain -> WriteOp, Fig. 10/11): the
+//! boundary operations own the memory access pattern. A dense chain reads
+//! each element once, folds the entire op chain through a register-resident
+//! accumulator, and writes each element once — where the op-at-a-time
 //! reference ([`crate::hostref::run_pipeline`]) widens the whole buffer to
-//! f64 and sweeps it once per op (N reads + N writes of DRAM-resident
-//! intermediates), this engine reads each element once, folds the entire op
-//! chain through a register-resident accumulator, and writes each output
-//! element once — the CPU analog of keeping intermediates in GPU registers.
-//! The batch dimension is chunked across OS threads, the host analog of
+//! f64 and sweeps it once per op. A STRUCTURED boundary fuses its access
+//! pattern into the same single pass: a crop+resize read performs the
+//! bilinear gather *while reading* (the resized intermediate never exists in
+//! memory), and a split write scatters packed pixels to planar planes
+//! *while writing* (the packed result never exists either). The batch /
+//! row dimension is chunked across OS threads, the host analog of
 //! Horizontal Fusion filling the GPU with independent planes.
 //!
-//! Loops are monomorphized per (input dtype, output dtype, compute domain):
+//! Loops are monomorphized per (reader, input dtype, output dtype, writer):
 //! an f32 chain never touches f64, a u8→f32 normalization chain reads bytes
-//! and writes floats with no whole-buffer widening step. Numerics contract
-//! (enforced by `rust/tests/host_fused_props.rs`): bit-compatible with the
-//! oracle on every f64-accumulated path — which includes ALL integer outputs
-//! — and within float epsilon on the f32 fast path.
+//! and writes floats with no whole-buffer widening step, and the structured
+//! fast paths cost no runtime dispatch inside the loop. Numerics contract
+//! (enforced by `rust/tests/host_fused_props.rs` and
+//! `rust/tests/structured_props.rs`): bit-compatible with the oracle on
+//! every f64-accumulated path — which includes ALL integer outputs AND all
+//! structured passes — and within float epsilon on the f32 fast path. The
+//! structured gather itself is shared code ([`crate::ops::kernel`]'s
+//! bilinear tap table), so the oracle and this engine cannot drift.
 
 use std::cell::{Cell, RefCell};
 use std::collections::HashMap;
@@ -24,39 +33,23 @@ use std::rc::Rc;
 use anyhow::{ensure, Result};
 
 use crate::fusion::{HostAccum, HostPlan};
-use crate::ops::{IOp, MemOp, Opcode, Pipeline, ScalarOp, Signature};
-use crate::tensor::{Tensor, TensorData};
+use crate::ops::{kernel, Opcode, Pipeline, ReadPattern, ScalarOp, Signature, WritePattern};
+use crate::tensor::{Rect, Tensor, TensorData};
 
 use super::Engine;
-
-/// The host loops execute DENSE pipelines only: structured boundary ops
-/// (crop/resize reads, split writes) lower to the AOT artifact backend.
-/// Refusing here is what keeps a split-write chain from silently coming
-/// back in packed layout.
-fn ensure_dense_boundaries(p: &Pipeline) -> Result<()> {
-    ensure!(
-        matches!(p.ops().first(), Some(IOp::Mem(MemOp::Read { .. }))),
-        "host_fused: structured read ({}) lowers to the artifact backend",
-        p.ops().first().map(|o| o.sig_token()).unwrap_or_default()
-    );
-    ensure!(
-        matches!(p.ops().last(), Some(IOp::Mem(MemOp::Write { .. }))),
-        "host_fused: structured write ({}) lowers to the artifact backend",
-        p.ops().last().map(|o| o.sig_token()).unwrap_or_default()
-    );
-    Ok(())
-}
 
 /// Below this many total elements a run stays single-threaded: thread spawn
 /// costs tens of microseconds, which dwarfs small pipelines.
 const MIN_ELEMS_PER_THREAD: usize = 32 * 1024;
 
 /// The host vertical-fusion engine. Plans are cached per [`Signature`]
-/// (params are bound per run, mirroring [`super::FusedEngine::plan_for`]).
+/// (params — chain scalars AND crop rects — are bound per run, mirroring
+/// [`super::FusedEngine::plan_for`]).
 pub struct HostFusedEngine {
     plans: RefCell<HashMap<Signature, Rc<HostPlan>>>,
     threads: usize,
     runs: Cell<usize>,
+    structured: Cell<usize>,
 }
 
 impl HostFusedEngine {
@@ -73,6 +66,7 @@ impl HostFusedEngine {
             plans: RefCell::new(HashMap::new()),
             threads: threads.max(1),
             runs: Cell::new(0),
+            structured: Cell::new(0),
         }
     }
 
@@ -100,18 +94,36 @@ impl HostFusedEngine {
         self.runs.get()
     }
 
+    /// Completed runs whose pipeline carried a structured boundary (a
+    /// subset of [`HostFusedEngine::runs`]) — surfaced through
+    /// [`crate::fusion::PlannerStats::structured`] so structured traffic is
+    /// observable in serving dashboards.
+    pub fn structured_runs(&self) -> usize {
+        self.structured.get()
+    }
+
+    fn observe_run(&self, structured: bool) {
+        self.runs.set(self.runs.get() + 1);
+        if structured {
+            self.structured.set(self.structured.get() + 1);
+        }
+    }
+
     /// The statically-typed entry: the `(S, W)` lane pair is fixed by the
     /// CALLER's types, so the monomorphized loop is selected at compile time
     /// with zero runtime dtype dispatch — the entry the typed chain front
     /// door ([`crate::chain::TypedPipeline::run_host`]) lowers into.
-    /// Numerics are identical to [`Engine::run`]: same cached plan, same
-    /// accumulator policy, same loops.
+    /// `src_shape` is the caller's input shape: `[batch, *shape]` for dense
+    /// reads, the shared `[fh, fw, 3]` frame for crop-family reads. The
+    /// returned buffer is laid out per [`Pipeline::out_shape`]. Numerics are
+    /// identical to [`Engine::run`]: same cached plan, same accumulator
+    /// policy, same loops.
     pub fn run_mono<S: HostLane, W: HostLane>(
         &self,
         p: &Pipeline,
         src: &[S],
+        src_shape: &[usize],
     ) -> Result<Vec<W>> {
-        ensure_dense_boundaries(p)?;
         ensure!(
             S::DTYPE == p.dtin,
             "run_mono: input lane {} != pipeline dtin {}",
@@ -124,35 +136,48 @@ impl HostFusedEngine {
             W::DTYPE,
             p.dtout
         );
-        ensure!(
-            src.len() == p.batch * p.item_elems(),
-            "run_mono: {} elements != pipeline {}x{}",
-            src.len(),
-            p.batch,
-            p.item_elems()
-        );
         let plan = self.plan_for(p);
-        let mut dst = vec![W::default(); src.len()];
-        if plan.accum() == HostAccum::F32 {
-            let chain: Vec<(Opcode, f32)> = plan
-                .bind_chain(p)
-                .expect("F32 accum implies an all-scalar chain")
-                .into_iter()
-                .map(|(op, param)| (op, param as f32))
-                .collect();
-            chain_pass_f32(&chain, self.threads, src, &mut dst);
-        } else if let Some(chain) = plan.bind_chain(p) {
-            chain_pass_f64(&chain, self.threads, src, &mut dst);
+        let dst = if plan.is_dense() {
+            let mut want = vec![p.batch];
+            want.extend_from_slice(&p.shape);
+            ensure!(
+                src_shape == want.as_slice(),
+                "run_mono: input shape {:?} != pipeline {:?}",
+                src_shape,
+                want
+            );
+            ensure!(
+                src.len() == p.batch * p.item_elems(),
+                "run_mono: {} elements != pipeline {}x{}",
+                src.len(),
+                p.batch,
+                p.item_elems()
+            );
+            let mut dst = vec![W::default(); src.len()];
+            if plan.accum() == HostAccum::F32 {
+                let chain: Vec<(Opcode, f32)> = plan
+                    .bind_chain(p)
+                    .expect("F32 accum implies an all-scalar chain")
+                    .into_iter()
+                    .map(|(op, param)| (op, param as f32))
+                    .collect();
+                chain_pass_f32(&chain, self.threads, src, &mut dst);
+            } else if let Some(chain) = plan.bind_chain(p) {
+                chain_pass_f64(&chain, self.threads, src, &mut dst);
+            } else {
+                let body = plan.bind_body(p);
+                group_pass(&body, plan.group(), self.threads, src, &mut dst);
+            }
+            dst
         } else {
             let body = plan.bind_body(p);
-            group_pass(&body, plan.group(), self.threads, src, &mut dst);
-        }
-        self.runs.set(self.runs.get() + 1);
+            structured_pass::<S, W>(p, &body, self.threads, src, src_shape)?
+        };
+        self.observe_run(!plan.is_dense());
         Ok(dst)
     }
 
-    fn check_input(p: &Pipeline, input: &Tensor) -> Result<()> {
-        ensure_dense_boundaries(p)?;
+    fn check_dense_input(p: &Pipeline, input: &Tensor) -> Result<()> {
         ensure!(
             input.dtype() == p.dtin,
             "host_fused: input dtype {} != pipeline dtin {}",
@@ -183,12 +208,20 @@ impl Engine for HostFusedEngine {
     }
 
     fn run(&self, p: &Pipeline, input: &Tensor) -> Result<Tensor> {
-        Self::check_input(p, input)?;
         let plan = self.plan_for(p);
-        let mut out_shape = vec![p.batch];
-        out_shape.extend_from_slice(&p.shape);
-        let out = execute_plan(&plan, p, input, self.threads, &out_shape);
-        self.runs.set(self.runs.get() + 1);
+        let out = if plan.is_dense() {
+            Self::check_dense_input(p, input)?;
+            execute_plan(&plan, p, input, self.threads, &p.out_shape())
+        } else {
+            ensure!(
+                input.dtype() == p.dtin,
+                "host_fused: input dtype {} != pipeline dtin {}",
+                input.dtype(),
+                p.dtin
+            );
+            execute_structured(&plan, p, input, self.threads)?
+        };
+        self.observe_run(!plan.is_dense());
         Ok(out)
     }
 
@@ -364,8 +397,8 @@ fn group_pass<S: HostLane, W: HostLane>(
     });
 }
 
-/// Execute one fused pass. Dispatches to the monomorphization selected by
-/// the plan's (input dtype, output dtype, accumulator) triple.
+/// Execute one fused DENSE pass. Dispatches to the monomorphization selected
+/// by the plan's (input dtype, output dtype, accumulator) triple.
 fn execute_plan(
     plan: &HostPlan,
     p: &Pipeline,
@@ -425,12 +458,356 @@ fn execute_plan(
     }
 }
 
+// ---------------------------------------------------------------------------
+// structured boundaries: the Reader -> fold -> Writer pixel pass
+
+/// The read half of the structured pass: produce packed-RGB pixel `(y, x)`
+/// of the logical `[h, w, 3]` element space in the f64 compute domain.
+/// Implementations own their source view, so monomorphization covers the
+/// (reader pattern, source lane) pair.
+trait PixelRead: Sync {
+    fn read(&self, y: usize, x: usize, px: &mut [f64; 3]);
+}
+
+/// Dense reader over one packed `[h, w, 3]` batch plane.
+struct DenseRead<'a, S> {
+    src: &'a [S],
+    w: usize,
+}
+
+impl<S: HostLane> PixelRead for DenseRead<'_, S> {
+    #[inline]
+    fn read(&self, y: usize, x: usize, px: &mut [f64; 3]) {
+        let base = (y * self.w + x) * 3;
+        for (c, out) in px.iter_mut().enumerate() {
+            *out = self.src[base + c].to_f64();
+        }
+    }
+}
+
+/// Crop-ROI reader over a shared packed frame. Edge clamp comes from the
+/// shared gather table ([`kernel::clamped_frame_index`]) — the same code
+/// the oracle runs.
+struct CropRead<'a, S> {
+    frame: &'a [S],
+    fh: i32,
+    fw: i32,
+    rect: Rect,
+}
+
+impl<S: HostLane> PixelRead for CropRead<'_, S> {
+    #[inline]
+    fn read(&self, y: usize, x: usize, px: &mut [f64; 3]) {
+        let base =
+            kernel::clamped_frame_index(self.rect, y as i32, x as i32, self.fh, self.fw) * 3;
+        for (c, out) in px.iter_mut().enumerate() {
+            *out = self.frame[base + c].to_f64();
+        }
+    }
+}
+
+/// Crop + bilinear-resize reader: the gather happens WHILE reading (paper
+/// Fig. 11) — the four taps blend straight into the accumulator and the
+/// resized intermediate never exists in memory. Taps, weights and clamp are
+/// the shared [`kernel`] gather table, so this loop and the hostref oracle
+/// cannot drift: the per-row/per-column [`kernel::AxisTap`]s are pure
+/// functions of the geometry, precomputed ONCE per pass instead of once per
+/// output pixel (bitwise-identical — [`kernel::bilinear_tap`] is defined as
+/// the two axis taps combined).
+struct ResizeRead<'a, S> {
+    frame: &'a [S],
+    fh: i32,
+    fw: i32,
+    rect: Rect,
+    ytaps: Vec<kernel::AxisTap>,
+    xtaps: Vec<kernel::AxisTap>,
+}
+
+impl<'a, S: HostLane> ResizeRead<'a, S> {
+    fn new(frame: &'a [S], fh: i32, fw: i32, rect: Rect, dh: usize, dw: usize) -> Self {
+        let ytaps = (0..dh).map(|dy| kernel::axis_tap(dy, rect.h, dh)).collect();
+        let xtaps = (0..dw).map(|dx| kernel::axis_tap(dx, rect.w, dw)).collect();
+        ResizeRead { frame, fh, fw, rect, ytaps, xtaps }
+    }
+}
+
+impl<S: HostLane> PixelRead for ResizeRead<'_, S> {
+    #[inline]
+    fn read(&self, y: usize, x: usize, px: &mut [f64; 3]) {
+        let (ty, tx) = (self.ytaps[y], self.xtaps[x]);
+        let tap = kernel::BilinearTap {
+            y0: ty.i0,
+            y1: ty.i1,
+            wy: ty.w,
+            x0: tx.i0,
+            x1: tx.i1,
+            wx: tx.w,
+        };
+        for (c, out) in px.iter_mut().enumerate() {
+            *out = tap.blend(|yy, xx| {
+                let i = kernel::clamped_frame_index(self.rect, yy, xx, self.fh, self.fw);
+                self.frame[i * 3 + c].to_f64()
+            });
+        }
+    }
+}
+
+/// The write half of the structured pass: place one computed pixel into
+/// this thread's chunk of the output.
+trait PixelWrite<W>: Send {
+    fn write(&mut self, local_y: usize, x: usize, px: &[f64; 3]);
+}
+
+/// Dense packed writer: rows stay `[h, w, 3]`.
+struct PackedRows<'a, W> {
+    buf: &'a mut [W],
+    w: usize,
+}
+
+impl<W: HostLane> PixelWrite<W> for PackedRows<'_, W> {
+    #[inline]
+    fn write(&mut self, local_y: usize, x: usize, px: &[f64; 3]) {
+        let base = (local_y * self.w + x) * 3;
+        for (c, &v) in px.iter().enumerate() {
+            self.buf[base + c] = W::from_f64(v);
+        }
+    }
+}
+
+/// Split writer: packed pixels scatter to three planar row chunks WHILE
+/// writing — the packed result never exists in memory.
+struct PlanarRows<'a, W> {
+    planes: [&'a mut [W]; 3],
+    w: usize,
+}
+
+impl<W: HostLane> PixelWrite<W> for PlanarRows<'_, W> {
+    #[inline]
+    fn write(&mut self, local_y: usize, x: usize, px: &[f64; 3]) {
+        let idx = local_y * self.w + x;
+        for (plane, &v) in self.planes.iter_mut().zip(px) {
+            plane[idx] = W::from_f64(v);
+        }
+    }
+}
+
+/// Rows `y0..y1` of one output plane: gather (reader) -> fold the body
+/// through f64 registers -> place (writer), one pixel at a time. This is
+/// the paper's three-part kernel, monomorphized per (reader, lane pair,
+/// writer) so the structured fast paths carry no dispatch inside the loop.
+fn pixel_rows<R: PixelRead, W: HostLane, O: PixelWrite<W>>(
+    reader: &R,
+    body: &[ScalarOp],
+    w: usize,
+    y0: usize,
+    y1: usize,
+    mut out: O,
+) {
+    let mut px = [0f64; 3];
+    for y in y0..y1 {
+        for x in 0..w {
+            reader.read(y, x, &mut px);
+            // packed pixels start at a global element index that is a
+            // multiple of 3, so lane-structured body ops see the same lane
+            // assignment as the oracle's whole-buffer sweep
+            let gbase = (y * w + x) * 3;
+            for op in body {
+                op.apply_slice_f64(&mut px, gbase);
+            }
+            out.write(y - y0, x, &px);
+        }
+    }
+}
+
+/// One output plane (`h*w*3` elements, packed or planar), rows chunked
+/// across threads. Thread count never changes results: the pass is a pure
+/// per-pixel map.
+fn structured_plane<R: PixelRead, W: HostLane>(
+    reader: &R,
+    body: &[ScalarOp],
+    write: WritePattern,
+    threads: usize,
+    h: usize,
+    w: usize,
+    dst: &mut [W],
+) {
+    debug_assert_eq!(dst.len(), h * w * 3);
+    if h == 0 || w == 0 {
+        return;
+    }
+    let threads = threads.min((h * w * 3) / MIN_ELEMS_PER_THREAD).clamp(1, h);
+    let per = h.div_ceil(threads);
+    match write {
+        WritePattern::Dense => {
+            if threads <= 1 {
+                pixel_rows(reader, body, w, 0, h, PackedRows { buf: dst, w });
+                return;
+            }
+            std::thread::scope(|scope| {
+                for (i, chunk) in dst.chunks_mut(per * w * 3).enumerate() {
+                    let y0 = i * per;
+                    let y1 = y0 + chunk.len() / (w * 3);
+                    scope.spawn(move || {
+                        pixel_rows(reader, body, w, y0, y1, PackedRows { buf: chunk, w })
+                    });
+                }
+            });
+        }
+        WritePattern::Split => {
+            let plane = h * w;
+            let (p0, rest) = dst.split_at_mut(plane);
+            let (p1, p2) = rest.split_at_mut(plane);
+            if threads <= 1 {
+                pixel_rows(reader, body, w, 0, h, PlanarRows { planes: [p0, p1, p2], w });
+                return;
+            }
+            std::thread::scope(|scope| {
+                let rows = per * w;
+                let chunks =
+                    p0.chunks_mut(rows).zip(p1.chunks_mut(rows)).zip(p2.chunks_mut(rows));
+                for (i, ((c0, c1), c2)) in chunks.enumerate() {
+                    let y0 = i * per;
+                    let y1 = y0 + c0.len() / w;
+                    scope.spawn(move || {
+                        pixel_rows(reader, body, w, y0, y1, PlanarRows { planes: [c0, c1, c2], w })
+                    });
+                }
+            });
+        }
+    }
+}
+
+/// Pixel dims of a structured pass: the element shape must be packed RGB
+/// `[h, w, 3]` (the layout every structured boundary is defined over).
+fn pixel_dims(p: &Pipeline) -> Result<(usize, usize)> {
+    ensure!(
+        p.shape.len() == 3 && p.shape[2] == 3 && p.shape[0] > 0 && p.shape[1] > 0,
+        "host_fused: structured boundaries need a packed [h, w, 3] element shape, got {:?}",
+        p.shape
+    );
+    Ok((p.shape[0], p.shape[1]))
+}
+
+/// Validate a shared-frame input for a crop-family read: packed RGB rank-3,
+/// length-consistent storage, positive rect. Rect corners may extend past
+/// the frame — samples clamp to the edge, exactly like the oracle.
+fn frame_dims(src_len: usize, src_shape: &[usize], rect: Rect) -> Result<(i32, i32)> {
+    ensure!(
+        src_shape.len() == 3 && src_shape[2] == 3,
+        "host_fused: crop-family reads gather from a packed [fh, fw, 3] frame, got {src_shape:?}"
+    );
+    ensure!(
+        src_len == src_shape.iter().product::<usize>(),
+        "host_fused: frame storage has {src_len} elements, shape {src_shape:?} disagrees"
+    );
+    ensure!(rect.w > 0 && rect.h > 0, "host_fused: degenerate crop rect {rect:?}");
+    Ok((src_shape[0] as i32, src_shape[1] as i32))
+}
+
+/// One structured run, monomorphized per (source lane, output lane). Each
+/// output pixel is gathered by the reader, folded through the body in f64
+/// registers, and placed by the writer — one memory pass, no materialized
+/// intermediates. The returned buffer is laid out per
+/// [`Pipeline::out_shape`].
+fn structured_pass<S: HostLane, W: HostLane>(
+    p: &Pipeline,
+    body: &[ScalarOp],
+    threads: usize,
+    src: &[S],
+    src_shape: &[usize],
+) -> Result<Vec<W>> {
+    let (h, w) = pixel_dims(p)?;
+    let write = p.write_pattern();
+    let plane = h * w * 3;
+    let mut dst = vec![W::default(); p.batch * plane];
+    match p.read_pattern() {
+        ReadPattern::Dense => {
+            let mut want = vec![p.batch];
+            want.extend_from_slice(&p.shape);
+            ensure!(
+                src_shape == want.as_slice() && src.len() == p.batch * plane,
+                "host_fused: input shape {:?} ({} elements) != pipeline {:?}",
+                src_shape,
+                src.len(),
+                want
+            );
+            for (sp, dp) in src.chunks(plane).zip(dst.chunks_mut(plane)) {
+                let reader = DenseRead { src: sp, w };
+                structured_plane(&reader, body, write, threads, h, w, dp);
+            }
+        }
+        ReadPattern::Crop { rect } => {
+            let (fh, fw) = frame_dims(src.len(), src_shape, rect)?;
+            ensure!(
+                (h, w) == (rect.h as usize, rect.w as usize),
+                "host_fused: crop rect {rect:?} does not produce element shape {:?}",
+                p.shape
+            );
+            let reader = CropRead { frame: src, fh, fw, rect };
+            for dp in dst.chunks_mut(plane) {
+                structured_plane(&reader, body, write, threads, h, w, dp);
+            }
+        }
+        ReadPattern::CropResize { rect, dst_h, dst_w } => {
+            let (fh, fw) = frame_dims(src.len(), src_shape, rect)?;
+            ensure!(
+                (h, w) == (dst_h, dst_w),
+                "host_fused: resize read {dst_h}x{dst_w} does not produce element shape {:?}",
+                p.shape
+            );
+            let reader = ResizeRead::new(src, fh, fw, rect, dst_h, dst_w);
+            for dp in dst.chunks_mut(plane) {
+                structured_plane(&reader, body, write, threads, h, w, dp);
+            }
+        }
+    }
+    Ok(dst)
+}
+
+/// Dynamic-dispatch entry for structured runs: select the (input lane,
+/// output lane) monomorphization from the tensor dtypes, then run the same
+/// generic pass `run_mono` uses.
+fn execute_structured(
+    plan: &HostPlan,
+    p: &Pipeline,
+    input: &Tensor,
+    threads: usize,
+) -> Result<Tensor> {
+    use TensorData::*;
+    let body = plan.bind_body(p);
+    let out_shape = p.out_shape();
+    macro_rules! from_to {
+        ($src:expr, $w:ty, $variant:ident) => {{
+            let dst: Vec<$w> = structured_pass(p, &body, threads, $src, input.shape())?;
+            Tensor::from_data($variant(dst), &out_shape)
+        }};
+    }
+    macro_rules! to_out {
+        ($src:expr) => {
+            match plan.dtout() {
+                crate::tensor::DType::U8 => from_to!($src, u8, U8),
+                crate::tensor::DType::U16 => from_to!($src, u16, U16),
+                crate::tensor::DType::I32 => from_to!($src, i32, I32),
+                crate::tensor::DType::F32 => from_to!($src, f32, F32),
+                crate::tensor::DType::F64 => from_to!($src, f64, F64),
+            }
+        };
+    }
+    Ok(match input.data() {
+        U8(v) => to_out!(v),
+        U16(v) => to_out!(v),
+        I32(v) => to_out!(v),
+        F32(v) => to_out!(v),
+        F64(v) => to_out!(v),
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::hostref;
     use crate::proplite::Rng;
-    use crate::tensor::DType;
+    use crate::tensor::{make_frame, DType};
 
     fn assert_close_f64(got: &Tensor, want: &Tensor, tol: f64) {
         assert_eq!(got.shape(), want.shape());
@@ -532,6 +909,7 @@ mod tests {
         assert_eq!(eng.run(&b, &x).unwrap().as_f32().unwrap(), &[5.0; 8]);
         assert_eq!(eng.plan_cache_len(), 1, "same signature, one plan");
         assert_eq!(eng.runs(), 2);
+        assert_eq!(eng.structured_runs(), 0);
     }
 
     #[test]
@@ -543,5 +921,70 @@ mod tests {
         assert!(eng.run(&p, &wrong_dtype).is_err());
         let wrong_shape = Tensor::from_f32(&[0.0; 16], &[2, 8]);
         assert!(eng.run(&p, &wrong_shape).is_err());
+    }
+
+    // --- structured boundaries --------------------------------------------
+
+    #[test]
+    fn crop_read_reproduces_the_crop_oracle_bitwise() {
+        let frame = make_frame(24, 32, 5);
+        let rect = Rect::new(3, 4, 10, 7);
+        let p = crate::chain::Chain::read_crop::<crate::chain::U8>(rect)
+            .write()
+            .into_pipeline();
+        let eng = HostFusedEngine::with_threads(2);
+        let got = eng.run(&p, &frame).unwrap();
+        assert_eq!(got.shape(), &[1, 7, 10, 3]);
+        let want = crate::tensor::crop_frame(&frame, rect);
+        assert_eq!(got.as_u8().unwrap(), want.as_u8().unwrap());
+        assert_eq!(eng.structured_runs(), 1);
+    }
+
+    #[test]
+    fn resize_read_matches_the_bilinear_oracle_bitwise() {
+        let frame = make_frame(40, 48, 9);
+        let rect = Rect::new(5, 6, 21, 13);
+        let (dh, dw) = (17, 11); // odd sizes: fractional taps everywhere
+        let p = crate::chain::Chain::read_resize::<crate::chain::U8>(rect, dh, dw)
+            .cast::<crate::chain::F32>()
+            .write()
+            .into_pipeline();
+        let got = HostFusedEngine::with_threads(3).run(&p, &frame).unwrap();
+        assert_eq!(got.shape(), &[1, dh, dw, 3]);
+        let want = hostref::bilinear_crop_resize(&frame, rect, dh, dw);
+        assert_eq!(got.as_f32().unwrap(), want.as_f32().unwrap());
+    }
+
+    #[test]
+    fn preproc_style_chain_matches_the_structured_oracle_bitwise() {
+        // resize read -> cvtcolor -> c3 math -> split write: the flagship
+        // shape, bit-equal to the structured hostref oracle (f64 path)
+        let frame = make_frame(30, 40, 2);
+        let p = crate::chain::Chain::read_resize::<crate::chain::U8>(Rect::new(2, 3, 18, 9), 12, 8)
+            .map(crate::chain::CvtColor)
+            .map(crate::chain::MulC3([0.9, 1.0, 1.1]))
+            .map(crate::chain::SubC3([0.5, 0.4, 0.3]))
+            .map(crate::chain::DivC3([2.0, 2.1, 2.2]))
+            .cast::<crate::chain::F32>()
+            .write_split()
+            .into_pipeline();
+        let eng = HostFusedEngine::with_threads(2);
+        let got = eng.run(&p, &frame).unwrap();
+        assert_eq!(got.shape(), &[1, 3, 12, 8]);
+        assert_eq!(got, hostref::run_pipeline(&p, &frame));
+    }
+
+    #[test]
+    fn structured_geometry_mismatches_are_rejected() {
+        let p = crate::chain::Chain::read_crop::<crate::chain::U8>(Rect::new(0, 0, 4, 4))
+            .write()
+            .into_pipeline();
+        let eng = HostFusedEngine::with_threads(1);
+        // not a packed frame (rank 4)
+        let batched = Tensor::zeros(DType::U8, &[1, 8, 8, 3]);
+        assert!(eng.run(&p, &batched).is_err());
+        // wrong dtype
+        let f32_frame = Tensor::zeros(DType::F32, &[8, 8, 3]);
+        assert!(eng.run(&p, &f32_frame).is_err());
     }
 }

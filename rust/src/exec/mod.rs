@@ -10,6 +10,9 @@
 //! * [`HostFusedEngine`] — vertical fusion compiled for the HOST (DESIGN.md
 //!   §3.5): one memory pass with register-resident intermediates, batch
 //!   chunked across threads; runs everywhere, no PJRT or artifacts required.
+//!   Executes the paper's structured boundaries natively — crop / bilinear
+//!   crop+resize reads gather while reading, split writes scatter planar
+//!   while writing — so the flagship preproc workload serves on any machine.
 //!
 //! All implement [`Engine`] and must agree numerically with
 //! [`crate::hostref`] (enforced by `rust/tests/engines_equivalence.rs` and

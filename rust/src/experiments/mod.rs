@@ -18,6 +18,7 @@ mod xp07_datasize;
 mod xp08_gpusize;
 mod xp09_dtype;
 mod xp10_npp;
+mod xp_hostpre;
 mod xp_hostvf;
 mod xpmem;
 
@@ -30,11 +31,12 @@ use crate::bench::Table;
 /// All experiment ids in run order.
 pub const ALL: &[&str] = &[
     "fig1", "1", "2", "3", "4", "5", "6", "7", "8", "9", "10", "mem", "ablation", "hostvf",
+    "hostpre",
 ];
 
 /// Experiments that need no artifact registry (run on any machine via
 /// [`run_host`]; `xp` uses this to skip the registry requirement for them).
-pub const HOST_ONLY: &[&str] = &["hostvf"];
+pub const HOST_ONLY: &[&str] = &["hostvf", "hostpre"];
 
 /// Run one experiment by id.
 pub fn run(id: &str, ctx: &XpCtx) -> Result<Vec<Table>> {
@@ -53,6 +55,7 @@ pub fn run(id: &str, ctx: &XpCtx) -> Result<Vec<Table>> {
         "mem" => xpmem::run(ctx),
         "ablation" => ablation::run(ctx),
         "hostvf" => xp_hostvf::run(ctx),
+        "hostpre" => xp_hostpre::run(ctx),
         other => anyhow::bail!("unknown experiment {other:?}; ids: {ALL:?}"),
     }
 }
@@ -63,6 +66,7 @@ pub fn run_host(id: &str, fast: bool) -> Result<Vec<Table>> {
     let (reps, budget) = common::measure_policy(fast);
     match id {
         "hostvf" => xp_hostvf::run_with(reps, budget, fast),
+        "hostpre" => xp_hostpre::run_with(reps, budget, fast),
         other => anyhow::bail!("experiment {other:?} needs artifacts; ids without: {HOST_ONLY:?}"),
     }
 }

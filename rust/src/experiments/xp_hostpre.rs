@@ -1,0 +1,90 @@
+//! Host preproc ablation — the paper's flagship NPP workload (Fig. 24/25)
+//! isolated on the host tier, artifact-free.
+//!
+//! Three arms over the same Batch(Crop+Resize -> ColorConvert -> MulC ->
+//! SubC -> DivC -> Split) pipeline against a shared 720p frame:
+//!
+//! * NPP-style op-at-a-time ([`PreprocPipeline::run_npp_style`]): one
+//!   whole-buffer pass per step per crop, every intermediate materialized;
+//! * fused structured single pass ([`PreprocPipeline::run`]): bilinear
+//!   gather while reading, chain folded in registers, split while writing;
+//! * the same fused pass with precomputed parameters
+//!   ([`PreprocPipeline::run_precomputed`]).
+//!
+//! Like `hostvf` this needs NO artifacts: it runs on any machine
+//! (`xp hostpre`) and anchors the fused-preproc speedup the
+//! `preproc_bench` acceptance criterion enforces.
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::bench::{time_fn, Table};
+use crate::cv::Context;
+use crate::exec::EngineSelect;
+use crate::hostref;
+use crate::npp::{PreprocPipeline, ResizeBatchSpec};
+use crate::tensor::{make_frame, Rect};
+
+use super::common::{fx, ms, XpCtx};
+
+pub fn run(xp: &XpCtx) -> Result<Vec<Table>> {
+    run_with(xp.reps, xp.budget, xp.fast)
+}
+
+/// Artifact-free entry point (`xp hostpre` works without `make artifacts`).
+pub fn run_with(reps: usize, budget: Duration, fast: bool) -> Result<Vec<Table>> {
+    // the host tier is the point of this ablation: pin it so the numbers
+    // stay comparable on machines that DO have artifacts
+    let ctx = Context::with_select(EngineSelect::HostFused, None)?;
+    let frame = make_frame(720, 1280, 99);
+    let (dh, dw) = (128usize, 64usize);
+    let (mulv, subv, divv) = ([0.9, 1.0, 1.1], [0.5, 0.4, 0.3], [2.0, 2.1, 2.2]);
+
+    let mut t = Table::new(
+        "Host preproc ablation — fused structured pass vs NPP-style op-at-a-time (720p, 128x64)",
+        &["batch", "npp_style_ms", "fused_ms", "fused_pre_ms", "speedup", "speedup_precomputed"],
+    );
+    t.note(
+        "npp_style: one materialized pass per step per crop; fused: one structured pass per crop \
+         (gather while reading, split while writing) on the host fused engine — no artifacts",
+    );
+
+    let batches: &[usize] = if fast { &[2, 8] } else { &[2, 8, 24, 50] };
+    for &b in batches {
+        let rects: Vec<Rect> = (0..b)
+            .map(|i| Rect::new((i as i32 * 37) % 1100, (i as i32 * 17) % 640, 120, 60))
+            .collect();
+        let mut pipe = PreprocPipeline::new(
+            ResizeBatchSpec { rects: rects.clone(), dst_h: dh, dst_w: dw },
+            mulv,
+            subv,
+            divv,
+        );
+
+        // correctness anchor: fused matches the Fig. 25 oracle per batch
+        let fused = pipe.run(&ctx, &frame)?;
+        let want = hostref::preproc(&frame, &rects, mulv, subv, divv, dh, dw);
+        for (i, (a, w)) in fused.to_f64_vec().iter().zip(want.to_f64_vec()).enumerate() {
+            anyhow::ensure!(
+                (a - w).abs() <= 1e-3 + 1e-3 * w.abs(),
+                "b{b} elem {i}: fused diverged from oracle ({a} vs {w})"
+            );
+        }
+
+        let npp = time_fn(reps, budget, || pipe.run_npp_style(&ctx, &frame).unwrap());
+        let fsd = time_fn(reps, budget, || pipe.run(&ctx, &frame).unwrap());
+        pipe.precompute();
+        let pre = time_fn(reps, budget, || pipe.run_precomputed(&ctx, &frame).unwrap());
+
+        t.row(vec![
+            b.to_string(),
+            ms(npp.mean_s),
+            ms(fsd.mean_s),
+            ms(pre.mean_s),
+            fx(npp.mean_s / fsd.mean_s),
+            fx(npp.mean_s / pre.mean_s),
+        ]);
+    }
+    Ok(vec![t])
+}

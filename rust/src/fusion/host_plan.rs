@@ -2,17 +2,21 @@
 //!
 //! Where `plan_pipeline` maps a pipeline onto pre-lowered AOT artifacts, the
 //! host planner "lowers" it directly: once per [`Signature`] it decides the
-//! fused loop's shape — element-group width, compute domain (f32 registers
-//! for f32-out chains, f64 wherever bit-exactness vs the oracle is promised)
-//! and whether the body is a dense scalar chain the monomorphized loops can
-//! fold without per-element shape dispatch. Exactly like artifact plans, a
-//! `HostPlan` is parameter-AGNOSTIC (the `Signature` cache key ignores
-//! params); the concrete op parameters are bound at run time by
-//! [`HostPlan::bind_body`] / [`HostPlan::bind_chain`] — the host analog of
+//! fused loop's shape — the READER kind (dense, crop, crop+resize bilinear
+//! gather), element-group width, compute domain (f32 registers for f32-out
+//! chains, f64 wherever bit-exactness vs the oracle is promised), whether
+//! the body is a dense scalar chain the monomorphized loops can fold without
+//! per-element shape dispatch, and the WRITER kind (dense, packed→planar
+//! split). Exactly like artifact plans, a `HostPlan` is parameter-AGNOSTIC
+//! (the `Signature` cache key ignores params — including crop RECTS, which
+//! are runtime parameters exactly like chain params); the concrete op
+//! parameters are bound at run time by [`HostPlan::bind_body`] /
+//! [`HostPlan::bind_chain`] and the rect by the engine interrogating
+//! [`Pipeline::read_pattern`] — the host analog of
 //! [`PlanInputs::chain_params`](super::PlanInputs::chain_params) building the
 //! params tensor per launch.
 
-use crate::ops::{kernel, IOp, Opcode, Pipeline, ScalarOp, Signature};
+use crate::ops::{kernel, IOp, Opcode, Pipeline, ReadPattern, ScalarOp, Signature, WritePattern};
 use crate::tensor::DType;
 
 /// Compute domain of the fused single-pass loop.
@@ -27,6 +31,28 @@ pub enum HostAccum {
     F64,
 }
 
+/// Param-agnostic shape of a plan's read end. The crop rect is a RUNTIME
+/// parameter (outside the signature); only the pattern KIND shapes the
+/// monomorphized loop.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReaderKind {
+    /// Per-thread dense read of `[batch, *shape]`.
+    Dense,
+    /// ROI gather from a shared packed frame.
+    Crop,
+    /// Crop + bilinear-resample gather fused at the read (paper Fig. 11).
+    CropResize,
+}
+
+/// Param-agnostic shape of a plan's write end.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WriterKind {
+    /// Per-thread dense write of `[batch, *shape]`.
+    Dense,
+    /// Packed `[h, w, 3]` pixels scattered planar `[3, h, w]` while writing.
+    Split,
+}
+
 /// A compiled host execution plan: one fused memory pass over the data.
 #[derive(Debug, Clone)]
 pub struct HostPlan {
@@ -34,6 +60,8 @@ pub struct HostPlan {
     group: usize,
     accum: HostAccum,
     is_chain: bool,
+    reader: ReaderKind,
+    writer: WriterKind,
     dtin: DType,
     dtout: DType,
     batch: usize,
@@ -42,13 +70,28 @@ pub struct HostPlan {
 
 impl HostPlan {
     /// Lower a validated pipeline's shape. Never fails: the host backend
-    /// covers the whole element-wise vocabulary (that is its point — it is
-    /// the engine that runs everywhere).
+    /// covers the whole element-wise vocabulary INCLUDING the structured
+    /// boundary patterns (that is its point — it is the engine that runs
+    /// everywhere). Unservable geometry (e.g. a split write on a shape that
+    /// is not `[h, w, 3]`) is refused loudly by the engine at run time.
     pub fn compile(p: &Pipeline) -> HostPlan {
         let body = ScalarOp::lower_body(p.body())
             .expect("validated pipeline has no interior memops");
         let group = kernel::group_width(&body);
-        let is_chain = p.body().iter().all(|op| matches!(op, IOp::Compute { .. }));
+        let reader = match p.read_pattern() {
+            ReadPattern::Dense => ReaderKind::Dense,
+            ReadPattern::Crop { .. } => ReaderKind::Crop,
+            ReadPattern::CropResize { .. } => ReaderKind::CropResize,
+        };
+        let writer = match p.write_pattern() {
+            WritePattern::Dense => WriterKind::Dense,
+            WritePattern::Split => WriterKind::Split,
+        };
+        let dense = reader == ReaderKind::Dense && writer == WriterKind::Dense;
+        let is_chain =
+            dense && p.body().iter().all(|op| matches!(op, IOp::Compute { .. }));
+        // structured passes always fold in f64: the gather itself is f64,
+        // and bit-compatibility with the structured oracle is the contract
         let accum = if p.dtout == DType::F32
             && matches!(p.dtin, DType::U8 | DType::U16 | DType::F32)
             && is_chain
@@ -62,6 +105,8 @@ impl HostPlan {
             group,
             accum,
             is_chain,
+            reader,
+            writer,
             dtin: p.dtin,
             dtout: p.dtout,
             batch: p.batch,
@@ -76,7 +121,7 @@ impl HostPlan {
     }
 
     /// Bind this run's parameters as a dense scalar chain (fast path);
-    /// `None` when the body is not all-scalar.
+    /// `None` when the body is not all-scalar or a boundary is structured.
     pub fn bind_chain(&self, p: &Pipeline) -> Option<Vec<(Opcode, f64)>> {
         if !self.is_chain {
             return None;
@@ -107,6 +152,21 @@ impl HostPlan {
     /// True if the body is a dense all-scalar chain.
     pub fn is_chain(&self) -> bool {
         self.is_chain
+    }
+
+    /// The plan's read-end kind.
+    pub fn reader(&self) -> ReaderKind {
+        self.reader
+    }
+
+    /// The plan's write-end kind.
+    pub fn writer(&self) -> WriterKind {
+        self.writer
+    }
+
+    /// True when both boundaries are dense (the pre-structured loop shapes).
+    pub fn is_dense(&self) -> bool {
+        self.reader == ReaderKind::Dense && self.writer == WriterKind::Dense
     }
 
     pub fn dtin(&self) -> DType {
@@ -141,7 +201,7 @@ impl HostPlan {
 mod tests {
     use super::*;
     use crate::ops::{Opcode, Pipeline};
-    use crate::tensor::DType;
+    use crate::tensor::{DType, Rect};
 
     fn chain_pipe(dtin: DType, dtout: DType) -> Pipeline {
         Pipeline::from_opcodes(
@@ -160,6 +220,7 @@ mod tests {
             let plan = HostPlan::compile(&chain_pipe(dtin, DType::F32));
             assert_eq!(plan.accum(), HostAccum::F32, "{dtin}");
             assert!(plan.is_chain());
+            assert!(plan.is_dense());
             assert_eq!(plan.group(), 1);
         }
     }
@@ -211,6 +272,38 @@ mod tests {
         assert_eq!(plan.bind_body(&p).len(), 2);
         assert_eq!(plan.group(), 3);
         assert_eq!(plan.accum(), HostAccum::F64, "group path stays oracle-exact");
+    }
+
+    #[test]
+    fn structured_boundaries_plan_as_reader_writer_kinds() {
+        // the preproc shape: resize-read front, split-write back — planned,
+        // not refused; rects stay OUT of the plan (runtime params)
+        let p = crate::chain::Chain::read_resize::<crate::chain::U8>(Rect::new(2, 3, 20, 10), 8, 4)
+            .map(crate::chain::CvtColor)
+            .map(crate::chain::MulC3([0.5, 0.4, 0.3]))
+            .cast::<crate::chain::F32>()
+            .write_split();
+        let plan = HostPlan::compile(p.pipeline());
+        assert_eq!(plan.reader(), ReaderKind::CropResize);
+        assert_eq!(plan.writer(), WriterKind::Split);
+        assert!(!plan.is_dense());
+        assert!(!plan.is_chain(), "structured passes take the pixel loop");
+        assert!(plan.bind_chain(p.pipeline()).is_none());
+        assert_eq!(plan.accum(), HostAccum::F64, "gathers fold in f64");
+
+        // a crop read with a DIFFERENT rect shares the same cached plan:
+        // rects are bound per run, exactly like chain params
+        let a = crate::chain::Chain::read_crop::<crate::chain::U8>(Rect::new(0, 0, 4, 4))
+            .map(crate::chain::Mul(2.0))
+            .write();
+        let b = crate::chain::Chain::read_crop::<crate::chain::U8>(Rect::new(9, 7, 4, 4))
+            .map(crate::chain::Mul(3.0))
+            .write();
+        assert_eq!(a.signature(), b.signature());
+        let plan = HostPlan::compile(a.pipeline());
+        assert_eq!(plan.reader(), ReaderKind::Crop);
+        assert_eq!(plan.writer(), WriterKind::Dense);
+        assert_eq!(*plan.signature(), b.signature());
     }
 
     #[test]

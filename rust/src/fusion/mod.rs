@@ -24,6 +24,6 @@ pub mod memsave;
 mod plan;
 mod planner;
 
-pub use host_plan::{HostAccum, HostPlan};
+pub use host_plan::{HostAccum, HostPlan, ReaderKind, WriterKind};
 pub use plan::{FusionPlan, PlanInputs};
 pub use planner::{plan_pipeline, unfused_plan, PlanError, Planner, PlannerStats};

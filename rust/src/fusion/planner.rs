@@ -12,8 +12,9 @@ pub enum PlanError {
     #[error("pipeline contains non-elementwise ops; only chain pipelines are plannable: {0}")]
     NotAChain(String),
     #[error(
-        "pipeline has a structured boundary op ({0}); dense chain artifacts cannot serve it \
-         (it needs a dedicated artifact family, like the preproc kernels)"
+        "pipeline has a structured boundary op ({0}); dense chain ARTIFACTS cannot serve it \
+         (it needs a dedicated artifact family like the preproc kernels — or the host fused \
+         engine, which executes structured boundaries natively)"
     )]
     StructuredBoundary(String),
 }
@@ -35,6 +36,14 @@ pub struct PlannerStats {
     /// serves themselves land under `host` — so it is excluded from
     /// [`PlannerStats::total`].
     pub unsupported: usize,
+    /// Structured-boundary pipelines (crop/resize reads, split writes)
+    /// served by the host single-pass engine — either re-routed there by
+    /// [`FusedEngine`](crate::exec::FusedEngine) (dense artifacts cannot
+    /// express them) or run natively on the host backend. Like
+    /// `unsupported`, a sub-count of `host`, excluded from
+    /// [`PlannerStats::total`] — it makes structured traffic (the flagship
+    /// preproc workload) observable in serving dashboards.
+    pub structured: usize,
 }
 
 impl PlannerStats {
@@ -85,15 +94,14 @@ fn body_opnames(p: &Pipeline) -> Result<Vec<&'static str>, PlanError> {
 }
 
 fn ensure_dense_boundaries(p: &Pipeline) -> Result<(), PlanError> {
-    use crate::ops::MemOp;
-    if let Some(op) = p.ops().first() {
-        if !matches!(op, IOp::Mem(MemOp::Read { .. })) {
-            return Err(PlanError::StructuredBoundary(op.sig_token()));
-        }
-    }
-    if let Some(op) = p.ops().last() {
-        if !matches!(op, IOp::Mem(MemOp::Write { .. })) {
-            return Err(PlanError::StructuredBoundary(op.sig_token()));
+    // interrogate the boundary metadata (never sig-token strings): a
+    // structured boundary changes the access pattern of the generated code,
+    // which no dense artifact family can reproduce
+    if p.has_structured_boundary() {
+        for op in [p.ops().first(), p.ops().last()].into_iter().flatten() {
+            if matches!(op, IOp::Mem(m) if m.is_structured()) {
+                return Err(PlanError::StructuredBoundary(op.sig_token()));
+            }
         }
     }
     Ok(())
@@ -107,7 +115,9 @@ pub fn plan_pipeline(
 ) -> Result<FusionPlan, PlanError> {
     // a structured boundary (crop/resize read, split write) changes the
     // memory pattern of the generated code: matching the BODY against a
-    // dense chain artifact would silently execute the wrong kernel
+    // dense chain artifact would silently execute the wrong kernel. The
+    // refusal is ARTIFACT-tier only — FusedEngine re-routes these pipelines
+    // to the host fused engine, which plans and serves them natively.
     ensure_dense_boundaries(p)?;
     let names = body_opnames(p)?;
     let dtin = p.dtin.name();

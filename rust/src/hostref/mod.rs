@@ -8,31 +8,105 @@
 //! kernels.
 //!
 //! Op semantics are NOT defined here: every sweep below goes through the
-//! shared [`ScalarOp`] table, the same code the single-pass
-//! [`HostFusedEngine`](crate::exec::HostFusedEngine) runs per element group —
-//! so the oracle and the fused loop cannot drift.
+//! shared [`ScalarOp`] table, and the structured READ boundaries (crop /
+//! bilinear crop+resize) go through the shared `ops::kernel` gather table —
+//! the same code the single-pass
+//! [`HostFusedEngine`](crate::exec::HostFusedEngine) runs per element group
+//! and per gathered pixel — so the oracle and the fused loop cannot drift.
+//! The oracle's distinguishing property is its TRAFFIC pattern, not its
+//! semantics: it materializes the read (crop/resize output), sweeps the
+//! whole buffer once per op, and permutes at the write — the op-at-a-time
+//! pattern the fused engine removes.
 
-use crate::ops::{Pipeline, ScalarOp};
+use crate::ops::{kernel, Pipeline, ReadPattern, ScalarOp, WritePattern};
 use crate::tensor::{DType, Rect, Tensor};
 
 fn lowered_body(p: &Pipeline) -> Vec<ScalarOp> {
     ScalarOp::lower_body(p.body()).expect("validated pipeline has no interior memops")
 }
 
-/// Execute a validated element-wise pipeline on the host, one whole-buffer
-/// sweep per op (the op-at-a-time traffic pattern the fused engine removes).
+/// Execute a validated pipeline on the host, one whole-buffer sweep per op
+/// (the op-at-a-time traffic pattern the fused engine removes). Structured
+/// boundaries are honored: a crop/resize read materializes its gather into
+/// an f64 buffer first, a split write permutes packed → planar last — the
+/// shapes the fused engine must reproduce BITWISE on every f64-accumulated
+/// path (which includes all structured passes).
 ///
 /// Note: f32 chains are evaluated in f64 here; tests compare with an epsilon
 /// that covers the double-rounding difference.
 pub fn run_pipeline(p: &Pipeline, input: &Tensor) -> Tensor {
     let body = lowered_body(p);
-    let mut vals = input.to_f64_vec();
+
+    // read: materialize the access pattern into the f64 compute buffer
+    let mut vals = match p.read_pattern() {
+        ReadPattern::Dense => input.to_f64_vec(),
+        ReadPattern::Crop { rect } => gather_crop(input, rect, p.batch),
+        ReadPattern::CropResize { rect, dst_h, dst_w } => {
+            gather_resize(input, rect, dst_h, dst_w, p.batch)
+        }
+    };
+
+    // body: one whole-buffer sweep per op
     for op in &body {
         op.apply_slice_f64(&mut vals, 0);
     }
-    let mut shape = vec![p.batch];
-    shape.extend_from_slice(&p.shape);
-    Tensor::from_f64_cast(&vals, &shape, p.dtout)
+
+    // write: dense keeps the packed layout; split permutes packed -> planar
+    // through the shared layout contract
+    if p.write_pattern() == WritePattern::Split {
+        let item = p.item_elems();
+        let mut planar = vec![0f64; vals.len()];
+        for (src, dst) in vals.chunks(item).zip(planar.chunks_mut(item)) {
+            kernel::split_packed_to_planar(src, dst);
+        }
+        vals = planar;
+    }
+    Tensor::from_f64_cast(&vals, &p.out_shape(), p.dtout)
+}
+
+/// Materialize a crop read: one `[h, w, 3]` plane per batch item, gathered
+/// through the shared edge-clamp rule.
+fn gather_crop(frame: &Tensor, rect: Rect, batch: usize) -> Vec<f64> {
+    let (fh, fw) = (frame.shape()[0] as i32, frame.shape()[1] as i32);
+    let src = frame.to_f64_vec();
+    let (h, w) = (rect.h as usize, rect.w as usize);
+    let mut plane = Vec::with_capacity(h * w * 3);
+    for y in 0..h {
+        for x in 0..w {
+            let base = kernel::clamped_frame_index(rect, y as i32, x as i32, fh, fw) * 3;
+            plane.extend_from_slice(&src[base..base + 3]);
+        }
+    }
+    repeat_plane(plane, batch)
+}
+
+/// Materialize a crop+resize read through the shared bilinear tap table.
+fn gather_resize(frame: &Tensor, rect: Rect, dh: usize, dw: usize, batch: usize) -> Vec<f64> {
+    let (fh, fw) = (frame.shape()[0] as i32, frame.shape()[1] as i32);
+    let src = frame.to_f64_vec();
+    let mut plane = Vec::with_capacity(dh * dw * 3);
+    for y in 0..dh {
+        for x in 0..dw {
+            let tap = kernel::bilinear_tap(y, x, rect.h, rect.w, dh, dw);
+            for c in 0..3 {
+                plane.push(tap.blend(|yy, xx| {
+                    src[kernel::clamped_frame_index(rect, yy, xx, fh, fw) * 3 + c]
+                }));
+            }
+        }
+    }
+    repeat_plane(plane, batch)
+}
+
+fn repeat_plane(plane: Vec<f64>, batch: usize) -> Vec<f64> {
+    if batch <= 1 {
+        return plane;
+    }
+    let mut vals = Vec::with_capacity(plane.len() * batch);
+    for _ in 0..batch {
+        vals.extend_from_slice(&plane);
+    }
+    vals
 }
 
 /// StaticLoop semantics: body applied `iters` times (one read, one write).
@@ -84,33 +158,44 @@ pub fn reduce_stats(x: &Tensor) -> [f64; 4] {
 }
 
 /// Bilinear crop-resize oracle matching `ref.bilinear_gather` (half-pixel
-/// centers, edge clamp), on a packed u8 frame, f32 output.
+/// centers, edge clamp), on a packed u8 frame, f32 output. Taps, weights
+/// and clamp are the shared `ops::kernel` gather table — the very code the
+/// fused engine's CropResize reader runs — so the two cannot drift.
 pub fn bilinear_crop_resize(frame: &Tensor, r: Rect, dh: usize, dw: usize) -> Tensor {
     assert_eq!(frame.dtype(), DType::U8);
     let (fh, fw) = (frame.shape()[0] as i32, frame.shape()[1] as i32);
     let src = frame.as_u8().unwrap();
-    let sy = r.h as f64 / dh as f64;
-    let sx = r.w as f64 / dw as f64;
     let mut out = vec![0f32; dh * dw * 3];
-    let at = |y: i32, x: i32, c: usize| -> f64 {
-        let yy = (r.y0 + y).clamp(0, fh - 1) as usize;
-        let xx = (r.x0 + x).clamp(0, fw - 1) as usize;
-        src[(yy * fw as usize + xx) * 3 + c] as f64
-    };
     for dy in 0..dh {
-        let fy = ((dy as f64 + 0.5) * sy - 0.5).clamp(0.0, r.h as f64 - 1.0);
-        let y0 = fy.floor() as i32;
-        let y1 = (y0 + 1).min(r.h - 1);
-        let wy = fy - y0 as f64;
         for dx in 0..dw {
-            let fx = ((dx as f64 + 0.5) * sx - 0.5).clamp(0.0, r.w as f64 - 1.0);
-            let x0 = fx.floor() as i32;
-            let x1 = (x0 + 1).min(r.w - 1);
-            let wx = fx - x0 as f64;
+            let tap = kernel::bilinear_tap(dy, dx, r.h, r.w, dh, dw);
             for c in 0..3 {
-                let top = at(y0, x0, c) * (1.0 - wx) + at(y0, x1, c) * wx;
-                let bot = at(y1, x0, c) * (1.0 - wx) + at(y1, x1, c) * wx;
-                out[(dy * dw + dx) * 3 + c] = (top * (1.0 - wy) + bot * wy) as f32;
+                out[(dy * dw + dx) * 3 + c] = tap.blend(|yy, xx| {
+                    src[kernel::clamped_frame_index(r, yy, xx, fh, fw) * 3 + c] as f64
+                }) as f32;
+            }
+        }
+    }
+    Tensor::from_f32(&out, &[dh, dw, 3])
+}
+
+/// Op-at-a-time bilinear resize of a packed `[h, w, 3]` f32 image to
+/// `[dh, dw, 3]` — the standalone "resize step" of the NPP-style baseline
+/// (the fused engine never materializes this buffer). Same shared taps.
+pub fn bilinear_resize_packed(img: &Tensor, dh: usize, dw: usize) -> Tensor {
+    assert_eq!(img.dtype(), DType::F32);
+    let (h, w) = (img.shape()[0], img.shape()[1]);
+    let src = img.as_f32().unwrap();
+    let whole = Rect::new(0, 0, w as i32, h as i32);
+    let mut out = vec![0f32; dh * dw * 3];
+    for dy in 0..dh {
+        for dx in 0..dw {
+            let tap = kernel::bilinear_tap(dy, dx, h as i32, w as i32, dh, dw);
+            for c in 0..3 {
+                out[(dy * dw + dx) * 3 + c] = tap.blend(|yy, xx| {
+                    src[kernel::clamped_frame_index(whole, yy, xx, h as i32, w as i32) * 3 + c]
+                        as f64
+                }) as f32;
             }
         }
     }
@@ -208,6 +293,63 @@ mod tests {
         let crop = crate::tensor::crop_frame(&f, r);
         let want: Vec<f32> = crop.as_u8().unwrap().iter().map(|&b| b as f32).collect();
         assert_eq!(out.as_f32().unwrap(), want.as_slice());
+    }
+
+    #[test]
+    fn structured_oracle_crop_read_equals_crop_frame() {
+        let f = make_frame(20, 24, 4);
+        let r = Rect::new(2, 3, 9, 6);
+        let p = crate::chain::Chain::read_crop::<crate::chain::U8>(r).write().into_pipeline();
+        let got = run_pipeline(&p, &f);
+        assert_eq!(got.shape(), &[1, 6, 9, 3]);
+        assert_eq!(got.as_u8().unwrap(), crate::tensor::crop_frame(&f, r).as_u8().unwrap());
+    }
+
+    #[test]
+    fn structured_oracle_split_write_permutes_packed_to_planar() {
+        let p = crate::chain::Chain::read::<crate::chain::F32>(&[2, 2, 3])
+            .map(crate::chain::Mul(1.0))
+            .write_split()
+            .into_pipeline();
+        #[rustfmt::skip]
+        let x = Tensor::from_f32(
+            &[
+                1.0, 10.0, 100.0,  2.0, 20.0, 200.0,
+                3.0, 30.0, 300.0,  4.0, 40.0, 400.0,
+            ],
+            &[1, 2, 2, 3],
+        );
+        let got = run_pipeline(&p, &x);
+        assert_eq!(got.shape(), &[1, 3, 2, 2]);
+        assert_eq!(
+            got.as_f32().unwrap(),
+            &[1.0, 2.0, 3.0, 4.0, 10.0, 20.0, 30.0, 40.0, 100.0, 200.0, 300.0, 400.0]
+        );
+    }
+
+    #[test]
+    fn structured_oracle_agrees_with_the_fig25_preproc_datum() {
+        // the full flagship chain as a structured pipeline vs the
+        // independent Fig. 25 oracle (f32 step math): epsilon agreement ties
+        // the two references together
+        let f = make_frame(36, 48, 6);
+        let r = Rect::new(4, 5, 22, 14);
+        let (dh, dw) = (16, 10);
+        let (mulv, subv, divv) = ([0.9f32, 1.0, 1.1], [0.5f32, 0.4, 0.3], [2.0f32, 2.1, 2.2]);
+        let p = crate::chain::Chain::read_resize::<crate::chain::U8>(r, dh, dw)
+            .map(crate::chain::CvtColor)
+            .map(crate::chain::MulC3(mulv))
+            .map(crate::chain::SubC3(subv))
+            .map(crate::chain::DivC3(divv))
+            .cast::<crate::chain::F32>()
+            .write_split()
+            .into_pipeline();
+        let got = run_pipeline(&p, &f);
+        let want = preproc(&f, &[r], mulv, subv, divv, dh, dw);
+        assert_eq!(got.shape(), want.shape());
+        for (i, (a, b)) in got.to_f64_vec().iter().zip(want.to_f64_vec()).enumerate() {
+            assert!((a - b).abs() <= 1e-4 + 1e-4 * b.abs(), "elem {i}: {a} vs {b}");
+        }
     }
 
     #[test]

@@ -16,15 +16,20 @@
 //! implementation: [`PreprocPipeline::preset_chain`] declares the per-crop
 //! semantics through [`crate::chain`] (ResizeRead -> ColorConvert -> MulC ->
 //! SubC -> DivC -> Split, all typed stages), and the `run*` entry points
-//! launch the AOT artifact that chain lowers to. Launches BORROW the frame —
-//! no per-call tensor clones on the hot path.
+//! execute it on whichever backend the [`Context`] resolved: the AOT
+//! artifact family when the registry loaded, or the host fused engine —
+//! which runs the structured boundaries natively in one pass (gather while
+//! reading, split while writing) — on any machine with ZERO artifacts.
+//! Launches BORROW the frame — no per-call tensor clones on the hot path.
 
 use anyhow::{bail, Result};
 
 use crate::chain::{Chain, CvtColor, DivC3, MulC3, SubC3, TypedPipeline, F32, U8};
 use crate::cv::Context;
+use crate::hostref;
+use crate::ops::{Opcode, ScalarOp};
 use crate::runtime::DeviceValue;
-use crate::tensor::{Rect, Tensor};
+use crate::tensor::{crop_frame, DType, Rect, Tensor};
 
 /// `nppiResizeBatch_32f_C3R_Advanced_Ctx` analog: batch crop+resize spec.
 #[derive(Debug, Clone)]
@@ -89,10 +94,33 @@ impl PreprocPipeline {
         ]
     }
 
+    /// The host fused path: each rect is one structured single-pass run —
+    /// bilinear gather while reading, chain folded in registers, split
+    /// while writing — through the SAME preset chain the artifacts
+    /// implement. The plan is cached per signature (all rects share one);
+    /// the rect is bound per run, exactly like chain params. Runs with zero
+    /// artifacts on any machine.
+    fn run_host_fused(&self, ctx: &Context, frame: &Tensor) -> Result<Tensor> {
+        let (dh, dw) = (self.spec.dst_h, self.spec.dst_w);
+        let b = self.spec.rects.len();
+        let engine = ctx.host();
+        let mut out = Vec::with_capacity(b * 3 * dh * dw);
+        for &r in &self.spec.rects {
+            let plane = self.preset_chain(r).run_host(engine, frame)?;
+            out.extend_from_slice(plane.as_f32().expect("preset chain seals at f32"));
+        }
+        Ok(Tensor::from_f32(&out, &[b, 3, dh, dw]))
+    }
+
     /// FastNPP without precomputation: CPU parameter derivation every call
-    /// (rect marshaling, constant tensors) + one fused launch. The frame is
-    /// borrowed straight into the launch — never cloned.
+    /// (rect marshaling, constant tensors) + one fused launch per batch (one
+    /// per crop on the host tier). The frame is borrowed straight into the
+    /// launch — never cloned. Serves on EVERY backend: the AOT preproc
+    /// artifact when the registry loaded, the host fused engine otherwise.
     pub fn run(&self, ctx: &Context, frame: &Tensor) -> Result<Tensor> {
+        if !ctx.has_artifacts() {
+            return self.run_host_fused(ctx, frame);
+        }
         let b = self.spec.rects.len();
         let name = self.artifact(ctx, b)?;
         let [rects, mul, sub, div] = self.kernel_inputs();
@@ -107,11 +135,16 @@ impl PreprocPipeline {
 
     /// Launch with precomputed parameters; fails if not precomputed. Zero
     /// host-tensor copies per launch: the frame AND the precomputed inputs
-    /// are borrowed.
+    /// are borrowed. On the host tier the precomputed tensors have no
+    /// kernel to feed — the cached plan plays their role — so the fused
+    /// host path serves directly.
     pub fn run_precomputed(&self, ctx: &Context, frame: &Tensor) -> Result<Tensor> {
         let Some(inputs) = &self.precomputed else {
             bail!("call precompute() first");
         };
+        if !ctx.has_artifacts() {
+            return self.run_host_fused(ctx, frame);
+        }
         let b = self.spec.rects.len();
         let name = self.artifact(ctx, b)?;
         ctx.fused()?.executor().run(
@@ -120,10 +153,47 @@ impl PreprocPipeline {
         )
     }
 
+    /// The NPP baseline on the host tier: one whole-buffer pass per step per
+    /// crop, every intermediate MATERIALIZED (crop, convert, resize,
+    /// cvtcolor, mulc, subc, divc, split — the exact step list of the
+    /// artifact baseline), intermediates held in f32 like the step kernels.
+    /// This is the op-at-a-time traffic pattern the fused path removes.
+    fn run_npp_style_host(&self, frame: &Tensor) -> Result<Tensor> {
+        let (dh, dw) = (self.spec.dst_h, self.spec.dst_w);
+        let b = self.spec.rects.len();
+        let mut out = Vec::with_capacity(b * 3 * dh * dw);
+        // one step: sweep the packed f32 buffer with a ScalarOp, then
+        // materialize back to f32 (the step-kernel boundary)
+        let sweep = |img: &Tensor, op: ScalarOp| -> Tensor {
+            let mut vals = img.to_f64_vec();
+            op.apply_slice_f64(&mut vals, 0);
+            Tensor::from_f64_cast(&vals, img.shape(), DType::F32)
+        };
+        for &r in &self.spec.rects {
+            let crop = crop_frame(frame, r); // nppiCopy (crop)
+            let f = crop.cast(DType::F32); // nppiConvert
+            let up = hostref::bilinear_resize_packed(&f, dh, dw); // nppiResize
+            let sw = sweep(&up, ScalarOp::Swizzle); // nppiSwapChannels
+            let m = sweep(&sw, ScalarOp::PerLane { op: Opcode::Mul, param: self.mul });
+            let s = sweep(&m, ScalarOp::PerLane { op: Opcode::Sub, param: self.sub });
+            let d = sweep(&s, ScalarOp::PerLane { op: Opcode::Div, param: self.div });
+            // split: packed [dh, dw, 3] -> planar [3, dh, dw] through the
+            // shared layout contract
+            let packed = d.as_f32().expect("f32 step buffer");
+            let mut planar = vec![0f32; packed.len()];
+            crate::ops::kernel::split_packed_to_planar(packed, &mut planar);
+            out.extend_from_slice(&planar);
+        }
+        Ok(Tensor::from_f32(&out, &[b, 3, dh, dw]))
+    }
+
     /// The NPP baseline: one library call per step per crop (Fig. 25b, top).
     /// Per call: fresh parameter derivation + launch; intermediates live in
-    /// device memory.
+    /// device memory (host memory on the artifact-free host tier).
     pub fn run_npp_style(&self, ctx: &Context, frame: &Tensor) -> Result<Tensor> {
+        if !ctx.has_artifacts() {
+            return self.run_npp_style_host(frame);
+        }
         let (dh, dw) = (self.spec.dst_h, self.spec.dst_w);
         let reg = ctx.registry()?;
         let exec = ctx.fused()?.executor();
@@ -182,6 +252,7 @@ impl DeviceFrame {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::tensor::make_frame;
 
     fn preproc() -> PreprocPipeline {
         PreprocPipeline::new(
@@ -204,6 +275,53 @@ mod tests {
         let inp = p.precomputed.as_ref().unwrap();
         assert_eq!(inp[0].shape(), &[1, 4]);
         assert_eq!(inp[1].as_f32().unwrap(), &[2.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn run_serves_on_the_host_tier_with_zero_artifacts() {
+        // the flagship acceptance shape: PreprocPipeline::run under the
+        // host fused backend, no artifacts anywhere
+        let ctx = Context::with_select(crate::exec::EngineSelect::HostFused, None).unwrap();
+        let frame = make_frame(90, 160, 12);
+        let rects = vec![Rect::new(3, 5, 40, 20), Rect::new(50, 11, 24, 36)];
+        let (mulv, subv, divv) = ([0.9, 1.0, 1.1], [0.5, 0.4, 0.3], [2.0, 2.1, 2.2]);
+        let mut p = PreprocPipeline::new(
+            ResizeBatchSpec { rects: rects.clone(), dst_h: 32, dst_w: 16 },
+            mulv,
+            subv,
+            divv,
+        );
+        let got = p.run(&ctx, &frame).unwrap();
+        assert_eq!(got.shape(), &[2, 3, 32, 16]);
+
+        // bitwise vs the structured oracle per rect (f64-accumulated path)
+        let plane = 3 * 32 * 16;
+        for (bi, &r) in rects.iter().enumerate() {
+            let want = crate::hostref::run_pipeline(p.preset_chain(r).pipeline(), &frame);
+            assert_eq!(
+                &got.as_f32().unwrap()[bi * plane..(bi + 1) * plane],
+                want.as_f32().unwrap(),
+                "rect {bi}"
+            );
+        }
+
+        // epsilon vs the independent Fig. 25 oracle (f32 step math)
+        let want = crate::hostref::preproc(&frame, &rects, mulv, subv, divv, 32, 16);
+        assert_eq!(got.shape(), want.shape());
+        for (i, (a, b)) in got.to_f64_vec().iter().zip(want.to_f64_vec()).enumerate() {
+            assert!((a - b).abs() <= 1e-4 + 1e-4 * b.abs(), "elem {i}: {a} vs {b}");
+        }
+
+        // the precomputed entry serves identically on the host tier
+        p.precompute();
+        assert_eq!(p.run_precomputed(&ctx, &frame).unwrap(), got);
+
+        // the op-at-a-time baseline serves too and agrees within epsilon
+        let npp = p.run_npp_style(&ctx, &frame).unwrap();
+        assert_eq!(npp.shape(), got.shape());
+        for (i, (a, b)) in npp.to_f64_vec().iter().zip(got.to_f64_vec()).enumerate() {
+            assert!((a - b).abs() <= 1e-3 + 1e-3 * b.abs(), "elem {i}: {a} vs {b}");
+        }
     }
 
     #[test]

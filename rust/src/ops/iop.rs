@@ -30,11 +30,68 @@ pub enum MemOp {
     SplitWrite { dtype: DType },
 }
 
+/// The access pattern a pipeline's READ end performs. This is the boundary
+/// metadata planners and engines interrogate — never string-match
+/// [`IOp::sig_token`] to discover a boundary shape. Structured patterns own
+/// their memory access: a `CropResize` read performs the bilinear gather
+/// *while reading* (paper Fig. 11), so intermediates never touch DRAM.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ReadPattern {
+    /// Per-thread dense read of a `[batch, *shape]` tensor.
+    Dense,
+    /// ROI read from a shared frame; the rect is a RUNTIME parameter
+    /// (outside the signature), bound per run like chain params.
+    Crop { rect: Rect },
+    /// Crop + bilinear resample fused at the read end. `dst_h`/`dst_w`
+    /// shape the generated code (they are signature tokens); the rect is a
+    /// runtime parameter.
+    CropResize { rect: Rect, dst_h: usize, dst_w: usize },
+}
+
+/// The access pattern a pipeline's WRITE end performs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WritePattern {
+    /// Per-thread dense write of a `[batch, *shape]` tensor.
+    Dense,
+    /// Packed `[h, w, 3]` pixels scattered to planar `[3, h, w]` *while
+    /// writing* (the Split WOp of Fig. 11).
+    Split,
+}
+
 impl MemOp {
     pub fn class(&self) -> OpClass {
         match self {
             MemOp::Read { .. } | MemOp::CropRead { .. } | MemOp::ResizeRead { .. } => OpClass::Read,
             MemOp::Write { .. } | MemOp::SplitWrite { .. } => OpClass::Write,
+        }
+    }
+
+    /// True for boundary ops that own a non-dense access pattern (crop /
+    /// resize reads, split writes). Structured boundaries change the
+    /// generated code: their tokens participate in [`super::Signature`] and
+    /// dense artifact tiers refuse them.
+    pub fn is_structured(&self) -> bool {
+        !matches!(self, MemOp::Read { .. } | MemOp::Write { .. })
+    }
+
+    /// The read pattern of this op (`None` for writes).
+    pub fn read_pattern(&self) -> Option<ReadPattern> {
+        match *self {
+            MemOp::Read { .. } => Some(ReadPattern::Dense),
+            MemOp::CropRead { rect } => Some(ReadPattern::Crop { rect }),
+            MemOp::ResizeRead { rect, dst_h, dst_w } => {
+                Some(ReadPattern::CropResize { rect, dst_h, dst_w })
+            }
+            MemOp::Write { .. } | MemOp::SplitWrite { .. } => None,
+        }
+    }
+
+    /// The write pattern of this op (`None` for reads).
+    pub fn write_pattern(&self) -> Option<WritePattern> {
+        match self {
+            MemOp::Write { .. } => Some(WritePattern::Dense),
+            MemOp::SplitWrite { .. } => Some(WritePattern::Split),
+            _ => None,
         }
     }
 }
@@ -110,6 +167,31 @@ mod tests {
         assert_eq!(IOp::compute(Opcode::Abs, 0.0).class(), OpClass::Unary);
         assert_eq!(IOp::Mem(MemOp::Read { dtype: DType::U8 }).class(), OpClass::Read);
         assert_eq!(IOp::Mem(MemOp::SplitWrite { dtype: DType::F32 }).class(), OpClass::Write);
+    }
+
+    #[test]
+    fn boundary_metadata_is_interrogable() {
+        // planners branch on this metadata, never on sig-token strings
+        let dense_r = MemOp::Read { dtype: DType::U8 };
+        assert!(!dense_r.is_structured());
+        assert_eq!(dense_r.read_pattern(), Some(ReadPattern::Dense));
+        assert_eq!(dense_r.write_pattern(), None);
+
+        let rect = Rect::new(1, 2, 8, 4);
+        let crop = MemOp::CropRead { rect };
+        assert!(crop.is_structured());
+        assert_eq!(crop.read_pattern(), Some(ReadPattern::Crop { rect }));
+
+        let rsz = MemOp::ResizeRead { rect, dst_h: 16, dst_w: 8 };
+        assert_eq!(
+            rsz.read_pattern(),
+            Some(ReadPattern::CropResize { rect, dst_h: 16, dst_w: 8 })
+        );
+
+        let split = MemOp::SplitWrite { dtype: DType::F32 };
+        assert!(split.is_structured());
+        assert_eq!(split.write_pattern(), Some(WritePattern::Split));
+        assert_eq!(split.read_pattern(), None);
     }
 
     #[test]

@@ -5,6 +5,14 @@
 //! every op, they cannot drift semantically — the only difference the fused
 //! engine is allowed to introduce is the compute width (f32 fast path) and
 //! the traffic pattern (one memory pass instead of one per op).
+//!
+//! The same rule covers the structured READ boundaries: the bilinear
+//! crop-resize gather (half-pixel centers, edge clamp) is defined ONCE here
+//! ([`bilinear_tap`], [`BilinearTap::blend`], [`clamped_frame_index`]) and
+//! shared by the `hostref` oracle and the fused engine's CropResize reader,
+//! so the gather semantics cannot drift either.
+
+use crate::tensor::Rect;
 
 use super::{IOp, Opcode};
 
@@ -83,6 +91,99 @@ pub fn group_width(body: &[ScalarOp]) -> usize {
     }
 }
 
+// ---------------------------------------------------------------------------
+// boundary gather semantics (the structured-read half of the one-table rule)
+
+/// The four source taps + weights of one bilinear sample, in RECT-LOCAL
+/// coordinates (half-pixel centers, interior clamp — matching
+/// `python/compile/kernels/ref.bilinear_gather`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BilinearTap {
+    pub y0: i32,
+    pub y1: i32,
+    pub wy: f64,
+    pub x0: i32,
+    pub x1: i32,
+    pub wx: f64,
+}
+
+impl BilinearTap {
+    /// Blend the four taps through `at(y, x)` (rect-local coordinates).
+    /// The expression order is the contract: oracle and fused reader call
+    /// this same code, so they agree BITWISE.
+    #[inline]
+    pub fn blend(&self, mut at: impl FnMut(i32, i32) -> f64) -> f64 {
+        let top = at(self.y0, self.x0) * (1.0 - self.wx) + at(self.y0, self.x1) * self.wx;
+        let bot = at(self.y1, self.x0) * (1.0 - self.wx) + at(self.y1, self.x1) * self.wx;
+        top * (1.0 - self.wy) + bot * self.wy
+    }
+}
+
+/// One axis of a bilinear tap: the two source indices and the fractional
+/// weight for destination coordinate `d` of a `src` → `dst` axis resize.
+/// The tap is separable — [`bilinear_tap`] is defined as two of these — so
+/// hot loops may precompute one tap per output row/column (pure functions
+/// of the geometry; identical bitwise results).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AxisTap {
+    pub i0: i32,
+    pub i1: i32,
+    pub w: f64,
+}
+
+/// Source tap for destination coordinate `d` of a `src` → `dst` axis resize
+/// (half-pixel centers, interior clamp).
+#[inline]
+pub fn axis_tap(d: usize, src: i32, dst: usize) -> AxisTap {
+    let s = src as f64 / dst as f64;
+    let f = ((d as f64 + 0.5) * s - 0.5).clamp(0.0, src as f64 - 1.0);
+    let i0 = f.floor() as i32;
+    let i1 = (i0 + 1).min(src - 1);
+    AxisTap { i0, i1, w: f - i0 as f64 }
+}
+
+/// Source taps for destination pixel `(dy, dx)` of a `src_h`×`src_w` →
+/// `dh`×`dw` bilinear resize: the two [`axis_tap`]s combined.
+#[inline]
+pub fn bilinear_tap(
+    dy: usize,
+    dx: usize,
+    src_h: i32,
+    src_w: i32,
+    dh: usize,
+    dw: usize,
+) -> BilinearTap {
+    let y = axis_tap(dy, src_h, dh);
+    let x = axis_tap(dx, src_w, dw);
+    BilinearTap { y0: y.i0, y1: y.i1, wy: y.w, x0: x.i0, x1: x.i1, wx: x.w }
+}
+
+/// Edge-clamped PIXEL index into an `fh`×`fw` packed frame for rect-local
+/// `(y, x)` — the shared clamp rule of every crop-family read. Multiply by
+/// the lane count (3) to address packed channels.
+#[inline]
+pub fn clamped_frame_index(rect: Rect, y: i32, x: i32, fh: i32, fw: i32) -> usize {
+    let yy = (rect.y0 + y).clamp(0, fh - 1) as usize;
+    let xx = (rect.x0 + x).clamp(0, fw - 1) as usize;
+    yy * fw as usize + xx
+}
+
+/// Scatter one packed `[h*w, 3]` pixel plane into planar `[3, h*w]` order —
+/// the Split WOp's layout contract, defined ONCE for every materializing
+/// consumer (the structured oracle, the NPP-style step baseline). The fused
+/// engine's split WRITER reproduces the same contract element-by-element
+/// without ever materializing the packed side.
+pub fn split_packed_to_planar<T: Copy>(packed: &[T], planar: &mut [T]) {
+    debug_assert_eq!(packed.len(), planar.len());
+    debug_assert_eq!(packed.len() % 3, 0);
+    let pixels = packed.len() / 3;
+    for i in 0..pixels {
+        for (c, px) in packed[i * 3..i * 3 + 3].iter().enumerate() {
+            planar[c * pixels + i] = *px;
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -138,6 +239,52 @@ mod tests {
             }
             assert_eq!(whole, grouped, "{op:?}");
         }
+    }
+
+    #[test]
+    fn identity_resize_taps_are_exact() {
+        // dst size == src size: every tap must hit its own pixel with zero
+        // fractional weight, so an identity resize reproduces the crop
+        for (h, w) in [(1usize, 1usize), (3, 5), (8, 8)] {
+            for dy in 0..h {
+                for dx in 0..w {
+                    let t = bilinear_tap(dy, dx, h as i32, w as i32, h, w);
+                    assert_eq!((t.y0, t.x0), (dy as i32, dx as i32));
+                    assert_eq!((t.wy, t.wx), (0.0, 0.0), "({dy},{dx}) in {h}x{w}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bilinear_tap_is_separable() {
+        // the per-axis precompute hot loops rely on: combining two axis
+        // taps IS the pixel tap, bit-for-bit
+        for (dy, dx) in [(0usize, 0usize), (3, 1), (7, 6)] {
+            let whole = bilinear_tap(dy, dx, 9, 11, 8, 7);
+            let y = axis_tap(dy, 9, 8);
+            let x = axis_tap(dx, 11, 7);
+            assert_eq!((whole.y0, whole.y1, whole.wy), (y.i0, y.i1, y.w));
+            assert_eq!((whole.x0, whole.x1, whole.wx), (x.i0, x.i1, x.w));
+        }
+    }
+
+    #[test]
+    fn split_scatters_packed_pixels_to_planes() {
+        let packed = [1, 10, 100, 2, 20, 200, 3, 30, 300];
+        let mut planar = [0; 9];
+        split_packed_to_planar(&packed, &mut planar);
+        assert_eq!(planar, [1, 2, 3, 10, 20, 30, 100, 200, 300]);
+    }
+
+    #[test]
+    fn frame_index_clamps_at_edges() {
+        let r = Rect::new(-2, 6, 4, 4);
+        // negative origin clamps to column 0; beyond-bottom clamps to fh-1
+        assert_eq!(clamped_frame_index(r, 0, 0, 8, 8), 6 * 8);
+        assert_eq!(clamped_frame_index(r, 10, 1, 8, 8), 7 * 8);
+        // interior is untouched
+        assert_eq!(clamped_frame_index(r, 1, 3, 8, 8), 7 * 8 + 1);
     }
 
     #[test]

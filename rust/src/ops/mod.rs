@@ -15,7 +15,7 @@ mod opcode;
 mod pipeline;
 mod signature;
 
-pub use iop::{IOp, MemOp, OpClass};
+pub use iop::{IOp, MemOp, OpClass, ReadPattern, WritePattern};
 pub use kernel::ScalarOp;
 pub use opcode::{Opcode, ALL_OPCODES};
 pub use pipeline::{Pipeline, PipelineError};

@@ -109,6 +109,47 @@ impl Pipeline {
         &self.ops[1..self.ops.len() - 1]
     }
 
+    /// The access pattern of the read end (validated to exist by `new`).
+    pub fn read_pattern(&self) -> super::ReadPattern {
+        match self.ops.first() {
+            Some(IOp::Mem(m)) => m.read_pattern().expect("validated: first op is a read"),
+            _ => unreachable!("validated pipeline starts with a read"),
+        }
+    }
+
+    /// The access pattern of the write end (validated to exist by `new`).
+    pub fn write_pattern(&self) -> super::WritePattern {
+        match self.ops.last() {
+            Some(IOp::Mem(m)) => m.write_pattern().expect("validated: last op is a write"),
+            _ => unreachable!("validated pipeline ends with a write"),
+        }
+    }
+
+    /// True when either boundary owns a non-dense access pattern — the
+    /// question every planner used to answer by pattern-matching boundary
+    /// variants (or worse, sig tokens).
+    pub fn has_structured_boundary(&self) -> bool {
+        self.read_pattern() != super::ReadPattern::Dense
+            || self.write_pattern() != super::WritePattern::Dense
+    }
+
+    /// Logical output shape of one run. Dense writes produce
+    /// `[batch, *shape]`; a Split write scatters the trailing 3-lane pixel
+    /// dim to the front of the item (`[h, w, 3]` -> `[batch, 3, h, w]`).
+    pub fn out_shape(&self) -> Vec<usize> {
+        let mut out = vec![self.batch];
+        match self.write_pattern() {
+            super::WritePattern::Dense => out.extend_from_slice(&self.shape),
+            super::WritePattern::Split => {
+                out.push(3);
+                if let Some((_, rest)) = self.shape.split_last() {
+                    out.extend_from_slice(rest);
+                }
+            }
+        }
+        out
+    }
+
     /// Number of elements of one batch item.
     pub fn item_elems(&self) -> usize {
         self.shape.iter().product()
@@ -196,6 +237,39 @@ mod tests {
         )
         .unwrap_err();
         assert_eq!(e, PipelineError::MissingRead);
+    }
+
+    #[test]
+    fn boundary_patterns_and_out_shape() {
+        use super::super::{ReadPattern, WritePattern};
+        use crate::tensor::Rect;
+        let dense = mk(vec![IOp::compute(Opcode::Mul, 2.0)]).unwrap();
+        assert_eq!(dense.read_pattern(), ReadPattern::Dense);
+        assert_eq!(dense.write_pattern(), WritePattern::Dense);
+        assert!(!dense.has_structured_boundary());
+        assert_eq!(dense.out_shape(), vec![1, 4, 4]);
+
+        let rect = Rect::new(0, 0, 16, 8);
+        let structured = Pipeline::new(
+            vec![
+                IOp::Mem(MemOp::ResizeRead { rect, dst_h: 8, dst_w: 4 }),
+                IOp::compute(Opcode::Mul, 1.0),
+                IOp::Mem(MemOp::SplitWrite { dtype: DType::F32 }),
+            ],
+            vec![8, 4, 3],
+            2,
+            DType::U8,
+            DType::F32,
+        )
+        .unwrap();
+        assert_eq!(
+            structured.read_pattern(),
+            ReadPattern::CropResize { rect, dst_h: 8, dst_w: 4 }
+        );
+        assert_eq!(structured.write_pattern(), WritePattern::Split);
+        assert!(structured.has_structured_boundary());
+        // split: packed [8, 4, 3] pixels land planar as [2, 3, 8, 4]
+        assert_eq!(structured.out_shape(), vec![2, 3, 8, 4]);
     }
 
     #[test]

@@ -157,6 +157,49 @@ fn shutdown_drains_pending_work() {
 }
 
 #[test]
+fn structured_chains_are_servable_traffic() {
+    // the flagship preproc shape submitted as coordinator traffic: items are
+    // shared FRAMES (not [1, *shape] planes), served per request on the host
+    // tier, counted as structured in PlannerStats
+    use fkl::chain::{CvtColor, MulC3};
+    use fkl::tensor::{make_frame, Rect};
+    let svc = Service::start(ServiceConfig {
+        artifact_dir: None,
+        queue_cap: 64,
+        policy: BatchPolicy { max_batch: 8, window: Duration::from_micros(200) },
+        engine: EngineSelect::HostFused,
+    });
+    let typed = Chain::read_resize::<U8>(Rect::new(4, 6, 30, 18), 24, 12)
+        .map(CvtColor)
+        .map(MulC3([0.9, 1.0, 1.1]))
+        .cast::<F32>()
+        .write_split();
+    let p: Pipeline = typed.pipeline().clone();
+    let mut rxs = Vec::new();
+    let mut frames = Vec::new();
+    for i in 0..6u64 {
+        let frame = make_frame(60, 80, 100 + i);
+        frames.push(frame.clone());
+        rxs.push(svc.submit(typed.clone(), frame).unwrap());
+    }
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let out = rx.recv().expect("service alive").expect("structured request ok");
+        assert_eq!(out.shape(), &[1, 3, 24, 12]);
+        let want = fkl::hostref::run_pipeline(&p, &frames[i]);
+        assert_eq!(out, want, "request {i}: f64-accumulated path is bit-equal");
+    }
+    // a wrong-dtype frame fails loudly without poisoning the stream
+    let bad = svc.submit(p.clone(), Tensor::from_f32(&vec![0.0; 60 * 80 * 3], &[60, 80, 3]));
+    assert!(bad.unwrap().recv().unwrap().is_err());
+    let m = svc.metrics().unwrap();
+    assert_eq!(m.completed, 6);
+    assert_eq!(m.failed, 1);
+    assert!(m.planner.structured >= 6, "structured serves visible in metrics");
+    assert!(m.planner.host >= 6);
+    svc.shutdown();
+}
+
+#[test]
 fn host_backend_batches_any_stream_with_exact_numerics() {
     // pinned host engine: a stream no artifact family covers (exotic shape,
     // u8 out) is still HF-batched and must be BIT-equal to the oracle

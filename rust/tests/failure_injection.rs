@@ -188,27 +188,69 @@ fn unsupported_body_is_typed_counted_and_served_by_the_host_loops() {
 }
 
 #[test]
-fn structured_boundaries_are_refused_by_every_dense_path() {
-    use fkl::exec::{Engine, FusedEngine, HostFusedEngine};
-    use fkl::tensor::Rect;
-    // a crop+resize read / split write chain: no dense engine may execute
-    // it (the layout contract would be silently violated) — it needs the
-    // dedicated preproc artifact family
+fn structured_boundaries_still_refused_by_dense_only_engines() {
+    use fkl::exec::{Engine, GraphEngine, UnfusedEngine, UnsupportedOp};
+    use fkl::tensor::{make_frame, Rect};
+    // a crop+resize read / split write chain: the DENSE-ONLY paths (per-op
+    // artifact engines and the artifact planner) cannot reproduce its
+    // access pattern and must refuse with typed errors — silently executing
+    // as a dense chain would violate the layout contract
     let typed = fkl::chain::Chain::read_resize::<fkl::chain::U8>(Rect::new(0, 0, 16, 8), 8, 4)
         .map(fkl::chain::CvtColor)
         .cast::<fkl::chain::F32>()
         .write_split();
     let p = typed.pipeline().clone();
-    let input = Tensor::from_u8(&vec![1u8; 8 * 4 * 3], &[1, 8, 4, 3]);
+    let frame = make_frame(16, 16, 1);
+
+    let unfused = UnfusedEngine::new(empty_registry());
+    let err = unfused.run(&p, &frame).unwrap_err();
+    let t = err.downcast_ref::<UnsupportedOp>().expect("typed refusal");
+    assert_eq!(t.engine, "unfused");
+    assert_eq!(t.token, "resize[8x4]");
+
+    let graph = GraphEngine::new(empty_registry());
+    let err = graph.run(&p, &frame).unwrap_err();
+    assert_eq!(err.downcast_ref::<UnsupportedOp>().expect("typed refusal").engine, "graph");
+
+    // the ARTIFACT planner refuses too: dense chain artifacts cannot serve
+    // a structured boundary (it takes a dedicated family or the host tier)
+    let err = fkl::fusion::plan_pipeline(&p, &empty_registry(), "pallas").unwrap_err();
+    assert!(matches!(err, fkl::fusion::PlanError::StructuredBoundary(ref tok) if tok == "resize[8x4]"),
+        "{err}");
+}
+
+#[test]
+fn structured_boundaries_are_served_by_the_host_tier() {
+    use fkl::exec::{Engine, FusedEngine, HostFusedEngine};
+    use fkl::tensor::{make_frame, Rect};
+    // ... while every path that can reach the host single-pass engine
+    // SERVES the same pipeline: natively on the host backend, re-routed on
+    // the fused front door — bit-equal to the structured oracle
+    let typed = fkl::chain::Chain::read_resize::<fkl::chain::U8>(Rect::new(1, 2, 12, 6), 8, 4)
+        .map(fkl::chain::CvtColor)
+        .cast::<fkl::chain::F32>()
+        .write_split();
+    let p = typed.pipeline().clone();
+    let frame = make_frame(20, 24, 3);
+    let want = fkl::hostref::run_pipeline(&p, &frame);
 
     let host = HostFusedEngine::with_threads(1);
-    let err = host.run(&p, &input).unwrap_err();
-    assert!(format!("{err:#}").contains("artifact backend"), "{err:#}");
-    assert!(typed.run_host(&host, &input).is_err());
+    let got = host.run(&p, &frame).expect("host engine serves structured pipelines");
+    assert_eq!(got, want);
+    assert_eq!(got.shape(), &[1, 3, 8, 4]);
+    assert_eq!(typed.run_host(&host, &frame).expect("typed front door serves too"), want);
+    assert_eq!(host.structured_runs(), 2);
 
+    // the fused engine detects (typed, counted) and re-routes to its host
+    // fallback instead of failing: structured chains are servable traffic
     let fused = FusedEngine::new(empty_registry());
-    let err = fused.run(&p, &input).unwrap_err();
-    assert!(format!("{err:#}").contains("structured boundary"), "{err:#}");
+    let got = fused.run(&p, &frame).expect("fused front door re-routes to the host tier");
+    assert_eq!(got, want);
+    let st = fused.planner_stats();
+    assert_eq!(st.structured, 1, "the detection is counted for dashboards");
+    assert_eq!(st.host, 1, "the serve lands in the host tier");
+    assert!(!fused.last_was_fallback(), "host single-pass is fused, not per-op");
+    assert_eq!(fused.last_launches(), 1);
 }
 
 #[test]

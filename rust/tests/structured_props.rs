@@ -1,0 +1,183 @@
+//! Property tests for the STRUCTURED boundaries of the host fused engine:
+//! crop reads, bilinear crop+resize reads and split writes, randomized over
+//! geometry and dtypes — pure host code, runs everywhere.
+//!
+//! Contract being enforced (the structured half of the numerics story):
+//! * every structured pass accumulates in f64 and is BIT-equal to the
+//!   structured `hostref::run_pipeline` oracle;
+//! * an identity resize (dst size == rect size) reproduces the crop
+//!   bitwise — the taps hit whole pixels with zero fractional weight;
+//! * 1×1 rects broadcast their single source pixel to every output pixel;
+//! * edge-touching rects clamp exactly like the oracle;
+//! * split-write output is the exact packed→planar permutation of the
+//!   dense-write output, for all five dtypes.
+
+use fkl::chain::{Chain, F32 as CF32, U8 as CU8};
+use fkl::exec::{Engine, HostFusedEngine};
+use fkl::hostref;
+use fkl::ops::{IOp, MemOp, Opcode, Pipeline};
+use fkl::proplite::{forall, Rng};
+use fkl::tensor::{crop_frame, make_frame, DType, Rect, Tensor};
+
+const DTYPES: [DType; 5] = [DType::U8, DType::U16, DType::I32, DType::F32, DType::F64];
+
+/// Random in-bounds rect within an `fh`×`fw` frame (full-frame included).
+fn rand_rect(rng: &mut Rng, fh: usize, fw: usize) -> Rect {
+    let w = rng.usize(1, fw + 1) as i32;
+    let h = rng.usize(1, fh + 1) as i32;
+    let x0 = rng.usize(0, (fw as i32 - w) as usize + 1) as i32;
+    let y0 = rng.usize(0, (fh as i32 - h) as usize + 1) as i32;
+    Rect::new(x0, y0, w, h)
+}
+
+#[test]
+fn prop_identity_resize_reproduces_the_crop_bitwise() {
+    forall(120, |rng| {
+        let eng = HostFusedEngine::with_threads(rng.usize(1, 4));
+        let (fh, fw) = (rng.usize(4, 40), rng.usize(4, 40));
+        let frame = make_frame(fh, fw, rng.next_u64());
+        let r = rand_rect(rng, fh, fw);
+        let (h, w) = (r.h as usize, r.w as usize);
+
+        let crop = Chain::read_crop::<CU8>(r).write().into_pipeline();
+        let resize = Chain::read_resize::<CU8>(r, h, w).write().into_pipeline();
+        let via_crop = eng.run(&crop, &frame).unwrap();
+        let via_resize = eng.run(&resize, &frame).unwrap();
+        assert_eq!(via_crop, via_resize, "identity resize == crop for {r:?}");
+        // and both equal the strict crop oracle
+        let want = crop_frame(&frame, r);
+        assert_eq!(via_crop.as_u8().unwrap(), want.as_u8().unwrap(), "{r:?}");
+    });
+}
+
+#[test]
+fn prop_1x1_rects_broadcast_their_pixel() {
+    forall(80, |rng| {
+        let eng = HostFusedEngine::with_threads(1);
+        let (fh, fw) = (rng.usize(2, 24), rng.usize(2, 24));
+        let frame = make_frame(fh, fw, rng.next_u64());
+        let x0 = rng.usize(0, fw) as i32;
+        let y0 = rng.usize(0, fh) as i32;
+        let r = Rect::new(x0, y0, 1, 1);
+        let (dh, dw) = (rng.usize(1, 9), rng.usize(1, 9));
+        let p = Chain::read_resize::<CU8>(r, dh, dw).write().into_pipeline();
+        let out = eng.run(&p, &frame).unwrap();
+        let src = frame.as_u8().unwrap();
+        let px = &src[((y0 as usize) * fw + x0 as usize) * 3..][..3];
+        for pixel in out.as_u8().unwrap().chunks(3) {
+            assert_eq!(pixel, px, "1x1 rect at ({x0},{y0}) scaled to {dh}x{dw}");
+        }
+    });
+}
+
+#[test]
+fn prop_odd_even_resizes_match_the_oracle_bitwise() {
+    // odd<->even size changes exercise every fractional-tap shape; the
+    // engine gathers in f64 through the shared tap table, so the bilinear
+    // oracle must be reproduced BITWISE (f32 out = same final rounding)
+    forall(120, |rng| {
+        let eng = HostFusedEngine::with_threads(rng.usize(1, 4));
+        let (fh, fw) = (rng.usize(6, 48), rng.usize(6, 48));
+        let frame = make_frame(fh, fw, rng.next_u64());
+        let r = rand_rect(rng, fh, fw);
+        let (dh, dw) = (rng.usize(1, 33), rng.usize(1, 33));
+        let p = Chain::read_resize::<CU8>(r, dh, dw)
+            .cast::<CF32>()
+            .write()
+            .into_pipeline();
+        let got = eng.run(&p, &frame).unwrap();
+        assert_eq!(got.shape(), &[1, dh, dw, 3]);
+        let want = hostref::bilinear_crop_resize(&frame, r, dh, dw);
+        assert_eq!(got.as_f32().unwrap(), want.as_f32().unwrap(), "{r:?} -> {dh}x{dw}");
+        // and the structured pipeline oracle agrees with both
+        assert_eq!(got, hostref::run_pipeline(&p, &frame));
+    });
+}
+
+#[test]
+fn prop_edge_rects_clamp_like_the_oracle() {
+    // rects pinned to the frame borders: the (dy+0.5)*scale-0.5 half-pixel
+    // mapping samples past the rect edge there, so the clamp rule is load-
+    // bearing — engine and oracle must agree bitwise
+    forall(100, |rng| {
+        let eng = HostFusedEngine::with_threads(1);
+        let (fh, fw) = (rng.usize(4, 32), rng.usize(4, 32));
+        let frame = make_frame(fh, fw, rng.next_u64());
+        let w = rng.usize(1, fw + 1) as i32;
+        let h = rng.usize(1, fh + 1) as i32;
+        // pin to one of the four corners so the rect touches two edges
+        let (x0, y0) = match rng.usize(0, 4) {
+            0 => (0, 0),
+            1 => (fw as i32 - w, 0),
+            2 => (0, fh as i32 - h),
+            _ => (fw as i32 - w, fh as i32 - h),
+        };
+        let r = Rect::new(x0, y0, w, h);
+        let (dh, dw) = (rng.usize(1, 17), rng.usize(1, 17));
+        let p = Chain::read_resize::<CU8>(r, dh, dw)
+            .cast::<CF32>()
+            .write()
+            .into_pipeline();
+        let got = eng.run(&p, &frame).unwrap();
+        let want = hostref::bilinear_crop_resize(&frame, r, dh, dw);
+        assert_eq!(got.as_f32().unwrap(), want.as_f32().unwrap(), "{r:?} in {fh}x{fw}");
+    });
+}
+
+#[test]
+fn prop_split_write_is_the_exact_pack_permutation_all_dtypes() {
+    // dense-read chains, written packed vs split: the planar output must be
+    // the exact packed->planar permutation of the packed output (and
+    // re-packing it roundtrips), for every dtype pair's boundary semantics
+    forall(200, |rng| {
+        let eng = HostFusedEngine::with_threads(rng.usize(1, 4));
+        let dtin = *rng.pick(&DTYPES);
+        let dtout = *rng.pick(&DTYPES);
+        let (h, w) = (rng.usize(1, 9), rng.usize(1, 9));
+        let batch = rng.usize(1, 4);
+        let k = rng.usize(1, 5);
+        let body: Vec<IOp> = (0..k)
+            .map(|_| {
+                let op = *rng.pick(&[Opcode::Mul, Opcode::Add, Opcode::Sub, Opcode::Max]);
+                IOp::compute(op, rng.f64(0.5, 1.5))
+            })
+            .collect();
+        let mk = |write: MemOp| {
+            let mut ops = vec![IOp::Mem(MemOp::Read { dtype: dtin })];
+            ops.extend(body.iter().cloned());
+            ops.push(IOp::Mem(write));
+            Pipeline::new(ops, vec![h, w, 3], batch, dtin, dtout).unwrap()
+        };
+        let packed_p = mk(MemOp::Write { dtype: dtout });
+        let split_p = mk(MemOp::SplitWrite { dtype: dtout });
+
+        let n = batch * h * w * 3;
+        let vals: Vec<f64> = (0..n).map(|_| rng.f64(0.0, 200.0)).collect();
+        let x = Tensor::from_f64_cast(&vals, &[batch, h, w, 3], dtin);
+
+        let split = eng.run(&split_p, &x).unwrap();
+        assert_eq!(split.shape(), split_p.out_shape().as_slice());
+        assert_eq!(split, hostref::run_pipeline(&split_p, &x), "oracle bit-equal");
+
+        // permute the f64-path packed result and compare raw views
+        // (bit-exact: the split pass folds in f64 like the dense oracle and
+        // both sides take the same per-element write boundary)
+        let pv = hostref::run_pipeline(&packed_p, &x).to_f64_vec();
+        let sv = split.to_f64_vec();
+        let pixels = h * w;
+        for b in 0..batch {
+            for i in 0..pixels {
+                for c in 0..3 {
+                    let from = b * pixels * 3 + i * 3 + c;
+                    let to = b * pixels * 3 + c * pixels + i;
+                    assert!(
+                        pv[from] == sv[to] || (pv[from].is_nan() && sv[to].is_nan()),
+                        "{dtin}->{dtout} b={b} px={i} c={c}: {} vs {}",
+                        pv[from],
+                        sv[to]
+                    );
+                }
+            }
+        }
+    });
+}
