@@ -2,7 +2,10 @@
 //! Crop -> Resize -> ColorConvert -> Multiply -> Subtract -> Divide -> Split
 //! on a real (synthetic) 720p video frame, comparing the NPP-style per-call
 //! execution with the fused FastNPP-style single kernel — including the
-//! syntax the paper advertises.
+//! syntax the paper advertises. The second half runs the NORMALIZE stage:
+//! the same crops with DATA-DERIVED per-channel statistics (one fused
+//! reduce-while-reading pass per crop, then the preproc chain with μ/σ
+//! bound) — the full crop -> resize -> normalize -> split workload.
 //!
 //! Runs on ANY machine: with artifacts the fused arm is one AOT kernel
 //! launch; without them the host fused engine executes the same structured
@@ -82,5 +85,32 @@ fn main() -> anyhow::Result<()> {
     let max_err = g.iter().zip(&w).map(|(a, b)| (a - b).abs()).fold(0.0, f64::max);
     println!("max abs error vs hostref oracle: {max_err:.2e}");
     assert!(max_err < 1e-2);
+
+    // --- the normalize stage: crop -> resize -> normalize -> split --------
+    // per-channel μ/σ measured from THIS batch's scaled crops (one fused
+    // reduce-while-reading pass per crop — the resized crops never
+    // materialize), then the preproc chain runs with the statistics bound
+    let (mu, sigma) = pipe.channel_mean_std(&ctx, &frame)?;
+    println!("derived stats: μ={mu:.3?} σ={sigma:.3?}");
+    let normalized = pipe.run_normalized_with(&ctx, &frame, mu, sigma)?;
+    println!("normalized output: {:?} {:?}", normalized.dtype(), normalized.shape());
+
+    // the workload's defining property: each output channel lands at mean 0
+    // and unit variance across the whole batch
+    let v = normalized.as_f32().expect("planar f32 output");
+    let plane = 128 * 64;
+    for c in 0..3 {
+        let mut lane = Vec::with_capacity(50 * plane);
+        for bi in 0..50 {
+            let base = bi * 3 * plane + c * plane;
+            lane.extend(v[base..base + plane].iter().map(|&x| x as f64));
+        }
+        let n = lane.len() as f64;
+        let mean: f64 = lane.iter().sum::<f64>() / n;
+        let var: f64 = lane.iter().map(|x| x * x).sum::<f64>() / n;
+        println!("channel {c}: mean {mean:+.2e}, var {var:.6}");
+        assert!(mean.abs() < 1e-3, "channel {c} mean {mean}");
+        assert!((var - 1.0).abs() < 1e-2, "channel {c} var {var}");
+    }
     Ok(())
 }

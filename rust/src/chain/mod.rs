@@ -86,6 +86,33 @@
 //! let p: TypedPipeline<U8, F32> = Chain::read::<U8>(&[4]).map(Mul(2.0)).write();
 //! ```
 //!
+//! Reduce-shaped illegal chains do not compile either. A reduction SEALS
+//! the chain (it is the pipeline's terminator), so mapping after an
+//! unsealed reduce is a compile error:
+//!
+//! ```compile_fail
+//! use fkl::chain::{Chain, Mul, U8};
+//! use fkl::ops::ReduceKind;
+//! let p = Chain::read::<U8>(&[4, 4]).map(Mul(2.0)).reduce(ReduceKind::Mean).map(Mul(2.0));
+//! ```
+//!
+//! ... a reduce cannot precede the read (the read constructors are the only
+//! way to begin a chain — there is nothing to reduce before one):
+//!
+//! ```compile_fail
+//! use fkl::chain::Chain;
+//! use fkl::ops::ReduceKind;
+//! let p = Chain::reduce(ReduceKind::Sum);
+//! ```
+//!
+//! ... and a written (sealed) pipeline cannot grow a second terminator:
+//!
+//! ```compile_fail
+//! use fkl::chain::{Chain, F32};
+//! use fkl::ops::ReduceKind;
+//! let p = Chain::read::<F32>(&[4]).write().reduce(ReduceKind::Sum);
+//! ```
+//!
 //! # Lowering and execution
 //!
 //! A [`TypedPipeline`] *is* a validated runtime [`Pipeline`] plus its
@@ -109,7 +136,9 @@ use std::marker::PhantomData;
 use anyhow::{ensure, Context as _, Result};
 
 use crate::exec::{HostFusedEngine, HostLane};
-use crate::ops::{IOp, MemOp, Opcode, Pipeline, Signature};
+use crate::ops::{
+    kernel, IOp, MemOp, Opcode, Pipeline, ReduceAxis, ReduceKind, ReduceSpec, Signature,
+};
 #[allow(unused_imports)] // doc links
 use crate::ops::PipelineError;
 use crate::tensor::{DType, Rect, Tensor, TensorData};
@@ -481,6 +510,47 @@ impl<S: State, In: Elem, Cur: Elem> ChainLink<S, In, Cur> {
         self.seal(MemOp::SplitWrite { dtype: Cur::DTYPE })
     }
 
+    /// Seal with a full-tensor reduction terminator (the ReduceDPP of paper
+    /// §IV-C): the fused pass folds every element's chain output into the
+    /// statistic WHILE reading — no per-element write, no materialized
+    /// intermediate. Reductions seal at `F64` (the statistics domain)
+    /// regardless of the chain's current element type; like every seal this
+    /// is terminal, so `map`-after-`reduce` is a compile error.
+    pub fn reduce(self, kind: ReduceKind) -> TypedPipeline<In, F64> {
+        self.reduce_spec(ReduceSpec::single(kind, ReduceAxis::Full))
+    }
+
+    /// Seal with a per-channel reduction: one statistic per packed-RGB lane
+    /// (global element index % 3 — the same lane rule as `MulC3`/`CvtColor`
+    /// stages), output shape `[3]`.
+    pub fn reduce_per_channel(self, kind: ReduceKind) -> TypedPipeline<In, F64> {
+        self.reduce_spec(ReduceSpec::single(kind, ReduceAxis::PerChannel))
+    }
+
+    /// Seal with TWO statistics folded in the very same pass (output `[2]`)
+    /// — how normalize's pass 1 gets mean AND sum-of-squares from one read.
+    pub fn reduce_pair(self, kind: ReduceKind, extra: ReduceKind) -> TypedPipeline<In, F64> {
+        self.reduce_spec(ReduceSpec::pair(kind, extra, ReduceAxis::Full))
+    }
+
+    /// [`ChainLink::reduce_pair`] per packed-RGB channel (output `[2, 3]`).
+    pub fn reduce_pair_per_channel(
+        self,
+        kind: ReduceKind,
+        extra: ReduceKind,
+    ) -> TypedPipeline<In, F64> {
+        self.reduce_spec(ReduceSpec::pair(kind, extra, ReduceAxis::PerChannel))
+    }
+
+    /// The general reduce seal (the sugar above lowers here; also the
+    /// erased entrance's hook, [`build_erased_reduce`]).
+    pub fn reduce_spec(mut self, spec: ReduceSpec) -> TypedPipeline<In, F64> {
+        self.ops.push(IOp::Mem(MemOp::Reduce { spec }));
+        let pipeline = Pipeline::new(self.ops, self.shape, self.batch, In::DTYPE, DType::F64)
+            .expect("chain builder invariant: read first, reduce last, f64 statistics");
+        TypedPipeline { pipeline, _t: PhantomData }
+    }
+
     fn transition<S2: State>(self) -> ChainLink<S2, In, Cur> {
         ChainLink { ops: self.ops, shape: self.shape, batch: self.batch, _t: PhantomData }
     }
@@ -638,6 +708,177 @@ pub fn build_erased_opcodes(
     build_erased(&stages, shape, batch, dtin, dtout)
 }
 
+/// [`build_erased`] for reduce-terminated chains: runtime dtype, typed
+/// builder underneath — the erased entrance `cv::mean_std` and
+/// `cv::normalize` lower through. Reductions always seal at f64.
+pub fn build_erased_reduce(
+    stages: &[ComputeOp],
+    shape: &[usize],
+    batch: usize,
+    dtin: DType,
+    spec: ReduceSpec,
+) -> Pipeline {
+    fn build_in<In: Elem>(
+        stages: &[ComputeOp],
+        shape: &[usize],
+        batch: usize,
+        spec: ReduceSpec,
+    ) -> Pipeline {
+        Chain::read::<In>(shape).batch(batch).extend(stages).reduce_spec(spec).into_pipeline()
+    }
+    match dtin {
+        DType::U8 => build_in::<U8>(stages, shape, batch, spec),
+        DType::U16 => build_in::<U16>(stages, shape, batch, spec),
+        DType::I32 => build_in::<I32>(stages, shape, batch, spec),
+        DType::F32 => build_in::<F32>(stages, shape, batch, spec),
+        DType::F64 => build_in::<F64>(stages, shape, batch, spec),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the normalize preset (multi-pass fused pipelines)
+
+/// The `(x − μ) / σ` stage pair for per-lane statistics — the ONE definition
+/// of normalize pass 2's body, shared by the typed [`Normalize`] preset and
+/// the erased `cv::normalize` front door (per-channel constants are `f32`,
+/// like every C3 stage; `mu`/`sigma` must carry one value per lane of
+/// `axis`).
+pub fn normalize_stages(axis: ReduceAxis, mu: &[f64], sigma: &[f64]) -> Vec<ComputeOp> {
+    match axis {
+        ReduceAxis::Full => {
+            vec![ComputeOp::scalar(Opcode::Sub, mu[0]), ComputeOp::scalar(Opcode::Div, sigma[0])]
+        }
+        ReduceAxis::PerChannel => {
+            vec![
+                ComputeOp::c3(Opcode::Sub, [mu[0] as f32, mu[1] as f32, mu[2] as f32]),
+                ComputeOp::c3(Opcode::Div, [sigma[0] as f32, sigma[1] as f32, sigma[2] as f32]),
+            ]
+        }
+    }
+}
+
+/// The register-resident normalize workload as a TWO-PASS fused plan:
+///
+/// * **pass 1** — `read -> [map stages] -> reduce(Mean + SumSq)`: both
+///   statistics fold in ONE read (the fold-while-reading tier);
+/// * **pass 2** — `read -> [map stages] -> Sub(μ) -> Div(σ) -> write f32`:
+///   the statistics hand over as BOUND SCALARS (per-channel `f32` constants
+///   or a full-tensor `f64` param) — no intermediate tensor is ever
+///   materialized between the passes.
+///
+/// ```
+/// use fkl::chain::{Chain, Mul, U8};
+/// use fkl::exec::HostFusedEngine;
+/// use fkl::ops::ReduceAxis;
+/// use fkl::tensor::Tensor;
+///
+/// let norm = Chain::normalize::<U8>(&[4, 4], ReduceAxis::Full).map(Mul(0.5));
+/// let x = Tensor::from_u8(&(0..16).collect::<Vec<u8>>(), &[1, 4, 4]);
+/// let out = norm.run_host(&HostFusedEngine::new(), &x).unwrap();
+/// // normalized output: mean 0, std 1 (f64 statistics, f32 output)
+/// let mean: f64 = out.to_f64_vec().iter().sum::<f64>() / 16.0;
+/// assert!(mean.abs() < 1e-5);
+/// ```
+pub struct Normalize<In: Elem> {
+    shape: Vec<usize>,
+    batch: usize,
+    axis: ReduceAxis,
+    eps: f64,
+    stages: Vec<ComputeOp>,
+    _t: PhantomData<fn() -> In>,
+}
+
+impl Chain {
+    /// Begin a two-pass fused normalize over `[batch, *shape]` tensors (see
+    /// [`Normalize`]).
+    pub fn normalize<In: Elem>(shape: &[usize], axis: ReduceAxis) -> Normalize<In> {
+        Normalize {
+            shape: shape.to_vec(),
+            batch: 1,
+            axis,
+            eps: 1e-12,
+            stages: Vec::new(),
+            _t: PhantomData,
+        }
+    }
+}
+
+impl<In: Elem> Normalize<In> {
+    /// Set the HF batch width (default 1). Statistics fold over the whole
+    /// batch.
+    pub fn batch(mut self, n: usize) -> Normalize<In> {
+        self.batch = n.max(1);
+        self
+    }
+
+    /// Floor for σ (default `1e-12`), keeping pass 2's divide well-defined
+    /// on constant inputs.
+    pub fn eps(mut self, eps: f64) -> Normalize<In> {
+        self.eps = eps.max(0.0);
+        self
+    }
+
+    /// Append a compute stage shared by BOTH passes (the "map" of
+    /// map+reduce fusion): pass 1 folds its output into the statistics,
+    /// pass 2 re-applies it before subtracting μ — so the normalize is of
+    /// the *mapped* values, and the mapped tensor still never materializes.
+    pub fn map(mut self, stage: impl ComputeStage) -> Normalize<In> {
+        self.stages.push(stage.into_op());
+        self
+    }
+
+    /// The reduce spec pass 1 folds: `(Mean, SumSq)` over this preset's
+    /// axis.
+    pub fn spec(&self) -> ReduceSpec {
+        ReduceSpec::pair(ReduceKind::Mean, ReduceKind::SumSq, self.axis)
+    }
+
+    /// Pass 1: the fused map+reduce pipeline (mean and sum-of-squares in
+    /// one read).
+    pub fn stats_pass(&self) -> TypedPipeline<In, F64> {
+        let link = Chain::read::<In>(&self.shape).batch(self.batch).extend(&self.stages);
+        link.reduce_spec(self.spec())
+    }
+
+    /// Split pass 1's statistics tensor into per-lane `(μ, σ)` through the
+    /// shared [`kernel::mean_sigma_from_stats`] table.
+    pub fn mean_sigma(&self, stats: &Tensor) -> Result<(Vec<f64>, Vec<f64>)> {
+        let spec = self.spec();
+        let vals = stats.as_f64().context("stats pass seals at f64")?;
+        ensure!(
+            vals.len() == spec.out_len(),
+            "stats tensor has {} values, the (mean, sumsq) spec needs {}",
+            vals.len(),
+            spec.out_len()
+        );
+        let n = self.batch * self.shape.iter().product::<usize>();
+        Ok(kernel::mean_sigma_from_stats(spec, vals, n, self.eps))
+    }
+
+    /// Pass 2: the fused `(x - μ) / σ` map with the statistics bound as
+    /// stage params (through the shared [`normalize_stages`] definition).
+    pub fn map_pass(&self, mu: &[f64], sigma: &[f64]) -> TypedPipeline<In, F32> {
+        let lanes = self.spec().lanes();
+        assert_eq!(mu.len(), lanes, "μ must carry one value per lane");
+        assert_eq!(sigma.len(), lanes, "σ must carry one value per lane");
+        Chain::read::<In>(&self.shape)
+            .batch(self.batch)
+            .extend(&self.stages)
+            .extend(&normalize_stages(self.axis, mu, sigma))
+            .cast::<F32>()
+            .write()
+    }
+
+    /// Run both passes on the host fused engine: one fold-while-reading
+    /// pass for the statistics, one map pass for the output — two memory
+    /// passes total, nothing materialized in between.
+    pub fn run_host(&self, engine: &HostFusedEngine, input: &Tensor) -> Result<Tensor> {
+        let stats = self.stats_pass().run_host(engine, input)?;
+        let (mu, sigma) = self.mean_sigma(&stats)?;
+        self.map_pass(&mu, &sigma).run_host(engine, input)
+    }
+}
+
 // ---------------------------------------------------------------------------
 
 #[cfg(test)]
@@ -755,5 +996,72 @@ mod tests {
         // body); the typestate permits sealing from Reading
         let p = Chain::read::<F32>(&[4]).write();
         assert_eq!(p.pipeline().body().len(), 0);
+
+        // ... and a reduce can seal straight from Reading too (raw stats)
+        let r = Chain::read::<F32>(&[4]).reduce(ReduceKind::Max);
+        assert_eq!(r.pipeline().body().len(), 0);
+        assert_eq!(r.pipeline().dtout, DType::F64);
+    }
+
+    #[test]
+    fn typed_reduce_seals_lower_and_serve_on_the_host_tier() {
+        // the acceptance shape: read -> map -> reduce(Mean), served by the
+        // fold-while-reading tier, bit-equal to the hostref oracle
+        let typed = Chain::read::<U8>(&[6, 5]).batch(3).map(Mul(0.5)).reduce(ReduceKind::Mean);
+        let sig = typed.signature();
+        assert_eq!(sig.ops, "mul-reduce[mean]");
+        assert_eq!((sig.dtin.as_str(), sig.dtout.as_str()), ("u8", "f64"));
+        let spec = typed.pipeline().reduction().expect("terminator recorded");
+        assert_eq!((spec.kind, spec.axis), (ReduceKind::Mean, ReduceAxis::Full));
+
+        let mut vals = Vec::new();
+        let mut x = 7u64;
+        for _ in 0..90 {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            vals.push((x >> 56) as u8);
+        }
+        let input = Tensor::from_u8(&vals, &[3, 6, 5]);
+        let eng = HostFusedEngine::with_threads(2);
+        let got = typed.run_host(&eng, &input).unwrap();
+        assert_eq!(got.shape(), &[1]);
+        assert_eq!(got, crate::hostref::run_pipeline(typed.pipeline(), &input));
+        assert_eq!(eng.reduce_runs(), 1);
+        // the dynamic entry shares the loops bitwise
+        assert_eq!(eng.run(typed.pipeline(), &input).unwrap(), got);
+    }
+
+    #[test]
+    fn normalize_preset_is_two_fused_passes_with_bound_scalars() {
+        let norm = Chain::normalize::<U8>(&[4, 2, 3], ReduceAxis::PerChannel)
+            .batch(2)
+            .map(Mul(2.0));
+        let eng = HostFusedEngine::with_threads(1);
+        let mut vals = Vec::new();
+        let mut x = 11u64;
+        for _ in 0..48 {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            vals.push((x >> 56) as u8);
+        }
+        let input = Tensor::from_u8(&vals, &[2, 4, 2, 3]);
+        let out = norm.run_host(&eng, &input).unwrap();
+        assert_eq!(out.shape(), &[2, 4, 2, 3]);
+
+        // the preset == composing its passes through the ORACLE with the
+        // same bound scalars (bit-equal: both passes are oracle-pinned)
+        let stats = crate::hostref::run_pipeline(norm.stats_pass().pipeline(), &input);
+        let (mu, sigma) = norm.mean_sigma(&stats).unwrap();
+        let want = crate::hostref::run_pipeline(norm.map_pass(&mu, &sigma).pipeline(), &input);
+        assert_eq!(out, want, "engine normalize == oracle-composed passes");
+
+        // per-channel mean of the OUTPUT is 0 and std is 1 (the workload's
+        // defining property), up to f32 write rounding
+        let v = out.as_f32().unwrap();
+        for c in 0..3 {
+            let lane: Vec<f64> = v.iter().skip(c).step_by(3).map(|&x| x as f64).collect();
+            let mean: f64 = lane.iter().sum::<f64>() / lane.len() as f64;
+            let var: f64 = lane.iter().map(|x| x * x).sum::<f64>() / lane.len() as f64;
+            assert!(mean.abs() < 1e-5, "lane {c} mean {mean}");
+            assert!((var - 1.0).abs() < 1e-4, "lane {c} var {var}");
+        }
     }
 }

@@ -177,6 +177,7 @@ impl Backend {
             Backend::Host { engine, .. } => PlannerStats {
                 host: engine.runs(),
                 structured: engine.structured_runs(),
+                reduction: engine.reduce_runs(),
                 ..PlannerStats::default()
             },
         }
@@ -367,6 +368,17 @@ fn execute_group(
     if group.is_empty() {
         return;
     }
+
+    // the batcher groups by the param-AGNOSTIC stream key (same code, one
+    // launch — that is what HF wants), but a stacked launch binds ONE param
+    // set. Stack only the requests whose pipeline (params included) matches
+    // the head request; param-divergent company in the same window is still
+    // correct traffic — it serves per item, never silently with someone
+    // else's params.
+    let head = group[0].pipeline.clone();
+    let (group, divergent): (Vec<_>, Vec<_>) =
+        group.into_iter().partition(|r| r.pipeline == head);
+    execute_per_item(&divergent, backend, metrics);
 
     let m = group.len();
     let proto = &group[0].pipeline;

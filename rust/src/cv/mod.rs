@@ -46,7 +46,7 @@ use crate::chain::{self, ComputeOp};
 use crate::exec::{
     Engine, EngineSelect, FusedEngine, GraphEngine, HostFusedEngine, UnfusedEngine,
 };
-use crate::ops::{Opcode, Pipeline};
+use crate::ops::{kernel, Opcode, Pipeline, ReduceAxis, ReduceKind, ReduceSpec};
 use crate::runtime::Registry;
 use crate::tensor::{DType, Tensor};
 
@@ -290,6 +290,46 @@ pub fn execute_operations(
     ctx.run(&p, input)
 }
 
+/// `cv::cuda::meanStdDev` analog: per-channel (or full-tensor) mean and
+/// standard deviation of a batched `[B, ...shape]` tensor in ONE fused
+/// reduce-while-reading pass (mean and sum-of-squares fold together; no
+/// intermediate ever materializes). Serves on every backend: natively on
+/// the host tier, re-routed there by the XLA fused engine
+/// (`PlanError::Reduction` is artifact-tier-only).
+pub fn mean_std(ctx: &Context, input: &Tensor, axis: ReduceAxis) -> Result<(Vec<f64>, Vec<f64>)> {
+    ensure!(
+        input.shape().len() >= 2,
+        "input must be batched: [B, ...shape], got {:?}",
+        input.shape()
+    );
+    let shape = input.shape()[1..].to_vec();
+    let batch = input.shape()[0];
+    let spec = ReduceSpec::pair(ReduceKind::Mean, ReduceKind::SumSq, axis);
+    let p = chain::build_erased_reduce(&[], &shape, batch, input.dtype(), spec);
+    let stats = ctx.run(&p, input)?;
+    let vals = stats.as_f64().context("reduce pipelines seal at f64")?;
+    // eps 0: report σ exactly as measured (a constant channel HAS σ = 0)
+    Ok(kernel::mean_sigma_from_stats(spec, vals, input.len(), 0.0))
+}
+
+/// Fused two-pass normalize: `(x − μ) / σ` with data-derived statistics —
+/// pass 1 folds mean+sumsq while reading, pass 2 maps with μ/σ bound as
+/// stage params; the only tensor ever written is the f32 output.
+pub fn normalize(ctx: &Context, input: &Tensor, axis: ReduceAxis) -> Result<Tensor> {
+    // pass 1 IS mean_std's fused reduce; floor σ afterwards so pass 2's
+    // divide stays well-defined on constant inputs (same result as deriving
+    // with the floor in place)
+    let (mu, sigma_raw) = mean_std(ctx, input, axis)?;
+    let sigma: Vec<f64> = sigma_raw.iter().map(|s| s.max(1e-12)).collect();
+    let shape = input.shape()[1..].to_vec();
+    let batch = input.shape()[0];
+    // pass 2's body comes from the ONE shared definition (the typed
+    // Normalize preset builds the very same stages)
+    let stages = chain::normalize_stages(axis, &mu, &sigma);
+    let p2 = chain::build_erased(&stages, &shape, batch, input.dtype(), DType::F32);
+    ctx.run(&p2, input)
+}
+
 /// The same chain executed the way stock OpenCV-CUDA would run it: one
 /// kernel per call, intermediates in device memory (experiment baseline;
 /// requires artifacts).
@@ -363,6 +403,36 @@ mod tests {
         let ctx = Context::with_select(EngineSelect::HostFused, None).unwrap();
         assert_eq!(ctx.backend(), ActiveBackend::HostFused);
         assert_eq!(ctx.backend().to_string(), "host_fused");
+    }
+
+    #[test]
+    fn mean_std_and_normalize_serve_on_any_backend() {
+        let ctx = Context::with_select(EngineSelect::HostFused, None).unwrap();
+        // 2 items of [2, 3] packed pixels: per-channel stats over the batch
+        let vals: Vec<f32> =
+            vec![1.0, 10.0, 100.0, 3.0, 30.0, 300.0, 5.0, 50.0, 500.0, 7.0, 70.0, 700.0];
+        let x = Tensor::from_f32(&vals, &[2, 2, 3]);
+        let (mu, sigma) = mean_std(&ctx, &x, ReduceAxis::PerChannel).unwrap();
+        assert_eq!(mu, vec![4.0, 40.0, 400.0]);
+        // σ of {1,3,5,7} about mean 4 = sqrt(5)
+        assert!((sigma[0] - 5.0f64.sqrt()).abs() < 1e-12, "{sigma:?}");
+
+        let out = normalize(&ctx, &x, ReduceAxis::PerChannel).unwrap();
+        assert_eq!(out.shape(), x.shape());
+        assert_eq!(out.dtype(), DType::F32);
+        // each channel lands mean 0 / σ 1
+        let v = out.as_f32().unwrap();
+        let lane0: Vec<f64> = v.iter().step_by(3).map(|&a| a as f64).collect();
+        let m: f64 = lane0.iter().sum::<f64>() / lane0.len() as f64;
+        assert!(m.abs() < 1e-6, "{m}");
+
+        // full-tensor stats agree with a hand fold
+        let (mu, _) = mean_std(&ctx, &x, ReduceAxis::Full).unwrap();
+        let want: f64 = vals.iter().map(|&a| a as f64).sum::<f64>() / vals.len() as f64;
+        assert_eq!(mu, vec![want]);
+
+        // unbatched inputs are rejected before any pass runs
+        assert!(mean_std(&ctx, &Tensor::zeros(DType::F32, &[4]), ReduceAxis::Full).is_err());
     }
 
     #[test]

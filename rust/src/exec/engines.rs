@@ -176,27 +176,32 @@ impl Engine for FusedEngine {
         let plan = match self.plan_for(p) {
             Ok(plan) => plan,
             Err(e) => {
-                // two pipeline families the ARTIFACT tiers cannot express:
+                // three pipeline families the ARTIFACT tiers cannot express:
                 // lane-structured bodies (ComputeC3/CvtColor — outside the
-                // XLA chain vocabulary) and structured boundaries (crop /
+                // XLA chain vocabulary), structured boundaries (crop /
                 // resize reads, split writes — a dense chain artifact would
-                // execute the wrong memory pattern). The per-op fallback
-                // rejects both too; the host single-pass engine runs both
-                // NATIVELY, still one fused memory pass. Typed detection,
-                // counted, routed — tallied under the host tier.
-                let (token, structured) = match e.downcast_ref::<PlanError>() {
-                    Some(PlanError::NotAChain(t)) => (t.clone(), false),
-                    Some(PlanError::StructuredBoundary(t)) => (t.clone(), true),
+                // execute the wrong memory pattern) and reduce terminators
+                // (a different kernel shape entirely: nothing dense
+                // accumulates). The per-op fallback rejects all three too;
+                // the host single-pass engine runs them NATIVELY, still one
+                // fused memory pass (the fold-while-reading tier for
+                // reductions). Typed detection, counted per family, routed
+                // — tallied under the host tier.
+                let token = match e.downcast_ref::<PlanError>() {
+                    Some(PlanError::NotAChain(t)) => {
+                        self.stats.borrow_mut().unsupported += 1;
+                        t.clone()
+                    }
+                    Some(PlanError::StructuredBoundary(t)) => {
+                        self.stats.borrow_mut().structured += 1;
+                        t.clone()
+                    }
+                    Some(PlanError::Reduction(t)) => {
+                        self.stats.borrow_mut().reduction += 1;
+                        t.clone()
+                    }
                     _ => return Err(e),
                 };
-                {
-                    let mut st = self.stats.borrow_mut();
-                    if structured {
-                        st.structured += 1;
-                    } else {
-                        st.unsupported += 1;
-                    }
-                }
                 self.last_fallback.set(false);
                 *self.last.borrow_mut() = 1;
                 let host = self.host_engine();

@@ -15,6 +15,13 @@
 //! row dimension is chunked across OS threads, the host analog of
 //! Horizontal Fusion filling the GPU with independent planes.
 //!
+//! Reduce-terminated pipelines take the FOLD-WHILE-READING tier: the same
+//! single pass, but instead of writing each element the chain's output folds
+//! into per-block statistics accumulators (`kernel::REDUCE_BLOCK` elements
+//! per block) combined in a fixed pairwise tree — deterministic across
+//! thread counts and bit-equal to the hostref reduction oracle, which runs
+//! the same shared blocked-reduction table over its materialized buffer.
+//!
 //! Loops are monomorphized per (reader, input dtype, output dtype, writer):
 //! an f32 chain never touches f64, a u8→f32 normalization chain reads bytes
 //! and writes floats with no whole-buffer widening step, and the structured
@@ -33,7 +40,9 @@ use std::rc::Rc;
 use anyhow::{ensure, Result};
 
 use crate::fusion::{HostAccum, HostPlan};
-use crate::ops::{kernel, Opcode, Pipeline, ReadPattern, ScalarOp, Signature, WritePattern};
+use crate::ops::{
+    kernel, Opcode, Pipeline, ReadPattern, ReduceSpec, ScalarOp, Signature, WritePattern,
+};
 use crate::tensor::{Rect, Tensor, TensorData};
 
 use super::Engine;
@@ -50,6 +59,7 @@ pub struct HostFusedEngine {
     threads: usize,
     runs: Cell<usize>,
     structured: Cell<usize>,
+    reduces: Cell<usize>,
 }
 
 impl HostFusedEngine {
@@ -67,6 +77,7 @@ impl HostFusedEngine {
             threads: threads.max(1),
             runs: Cell::new(0),
             structured: Cell::new(0),
+            reduces: Cell::new(0),
         }
     }
 
@@ -102,10 +113,21 @@ impl HostFusedEngine {
         self.structured.get()
     }
 
-    fn observe_run(&self, structured: bool) {
+    /// Completed runs that ended in a reduce terminator (the
+    /// fold-while-reading tier) — surfaced through
+    /// [`crate::fusion::PlannerStats::reduction`] so the reduce workload is
+    /// observable in serving dashboards, like structured traffic.
+    pub fn reduce_runs(&self) -> usize {
+        self.reduces.get()
+    }
+
+    fn observe_run(&self, structured: bool, reduce: bool) {
         self.runs.set(self.runs.get() + 1);
         if structured {
             self.structured.set(self.structured.get() + 1);
+        }
+        if reduce {
+            self.reduces.set(self.reduces.get() + 1);
         }
     }
 
@@ -137,6 +159,12 @@ impl HostFusedEngine {
             p.dtout
         );
         let plan = self.plan_for(p);
+        if let Some(spec) = plan.reduce() {
+            let body = plan.bind_body(p);
+            let vals = reduce_pass(p, spec, &body, plan.group(), self.threads, src, src_shape)?;
+            self.observe_run(p.read_pattern() != ReadPattern::Dense, true);
+            return Ok(vals.into_iter().map(W::from_f64).collect());
+        }
         let dst = if plan.is_dense() {
             let mut want = vec![p.batch];
             want.extend_from_slice(&p.shape);
@@ -173,7 +201,7 @@ impl HostFusedEngine {
             let body = plan.bind_body(p);
             structured_pass::<S, W>(p, &body, self.threads, src, src_shape)?
         };
-        self.observe_run(!plan.is_dense());
+        self.observe_run(!plan.is_dense(), false);
         Ok(dst)
     }
 
@@ -209,6 +237,17 @@ impl Engine for HostFusedEngine {
 
     fn run(&self, p: &Pipeline, input: &Tensor) -> Result<Tensor> {
         let plan = self.plan_for(p);
+        if let Some(spec) = plan.reduce() {
+            ensure!(
+                input.dtype() == p.dtin,
+                "host_fused: input dtype {} != pipeline dtin {}",
+                input.dtype(),
+                p.dtin
+            );
+            let out = execute_reduce(&plan, p, spec, input, self.threads)?;
+            self.observe_run(p.read_pattern() != ReadPattern::Dense, true);
+            return Ok(out);
+        }
         let out = if plan.is_dense() {
             Self::check_dense_input(p, input)?;
             execute_plan(&plan, p, input, self.threads, &p.out_shape())
@@ -221,7 +260,7 @@ impl Engine for HostFusedEngine {
             );
             execute_structured(&plan, p, input, self.threads)?
         };
-        self.observe_run(!plan.is_dense());
+        self.observe_run(!plan.is_dense(), false);
         Ok(out)
     }
 
@@ -653,6 +692,11 @@ fn structured_plane<R: PixelRead, W: HostLane>(
                 }
             });
         }
+        // reduce terminators never reach the pixel WRITE pass: the engine
+        // routes them to the fold tier before any structured dispatch
+        WritePattern::Reduce { .. } => {
+            unreachable!("reduce pipelines take the fold-while-reading tier")
+        }
         WritePattern::Split => {
             let plane = h * w;
             let (p0, rest) = dst.split_at_mut(plane);
@@ -800,6 +844,224 @@ fn execute_structured(
         F32(v) => to_out!(v),
         F64(v) => to_out!(v),
     })
+}
+
+// ---------------------------------------------------------------------------
+// the fold-while-reading tier: reduce terminators
+//
+// A reduce pipeline performs ONE memory pass: each element is read (or
+// gathered, for crop/resize reads), folded through the fused op chain in f64
+// registers, and accumulated into the requested statistics — no per-element
+// write, no materialized intermediate. Determinism contract: partials are
+// computed per fixed-size [`kernel::REDUCE_BLOCK`] (a property of the DATA,
+// not the thread count) and combined in the fixed pairwise tree of
+// [`kernel::reduce_combine_tree`], so results are bit-identical across
+// 1/2/8 workers AND bit-equal to the hostref oracle's
+// [`kernel::reduce_slice`] over the materialized value stream — same f64
+// values, same block boundaries, same combine order, same finalize.
+
+/// Compute per-block partials, block ranges chunked across threads. Which
+/// thread computes a block never matters: every partial lands in its
+/// block-indexed slot before the fixed-order tree combine.
+fn compute_partials(
+    spec: ReduceSpec,
+    nblocks: usize,
+    total_elems: usize,
+    threads: usize,
+    compute: &(impl Fn(usize) -> kernel::ReduceAcc + Sync),
+) -> Vec<kernel::ReduceAcc> {
+    let mut partials = vec![kernel::reduce_acc_identity(spec); nblocks];
+    let threads = threads.min(total_elems / MIN_ELEMS_PER_THREAD).max(1).min(nblocks.max(1));
+    if threads <= 1 {
+        for (bi, slot) in partials.iter_mut().enumerate() {
+            *slot = compute(bi);
+        }
+        return partials;
+    }
+    let per = nblocks.div_ceil(threads);
+    std::thread::scope(|scope| {
+        for (ti, chunk) in partials.chunks_mut(per).enumerate() {
+            scope.spawn(move || {
+                for (k, slot) in chunk.iter_mut().enumerate() {
+                    *slot = compute(ti * per + k);
+                }
+            });
+        }
+    });
+    partials
+}
+
+/// Dense fold-while-reading: fold the chain through a register per element
+/// (pixel-group registers for lane-structured bodies) and accumulate.
+fn reduce_dense<S: HostLane>(
+    spec: ReduceSpec,
+    body: &[ScalarOp],
+    group: usize,
+    threads: usize,
+    src: &[S],
+) -> Vec<f64> {
+    let n = src.len();
+    let nblocks = n.div_ceil(kernel::REDUCE_BLOCK);
+    // group == 1 means an all-scalar body: fold it as a flat (op, param)
+    // chain with no group buffer (the reduce analog of `chain_pass_f64`)
+    let chain: Option<Vec<(Opcode, f64)>> = (group == 1).then(|| {
+        body.iter()
+            .map(|op| match op {
+                ScalarOp::Scalar { op, param } => (*op, *param),
+                _ => unreachable!("group 1 implies an all-scalar body"),
+            })
+            .collect()
+    });
+    let compute = |bi: usize| -> kernel::ReduceAcc {
+        let start = bi * kernel::REDUCE_BLOCK;
+        let end = (start + kernel::REDUCE_BLOCK).min(n);
+        let mut acc = kernel::reduce_acc_identity(spec);
+        if let Some(chain) = &chain {
+            for (j, x) in src[start..end].iter().enumerate() {
+                let mut v = x.to_f64();
+                for &(op, param) in chain {
+                    v = op.apply(v, param);
+                }
+                kernel::reduce_acc_fold(spec, &mut acc, start + j, v);
+            }
+        } else {
+            let mut buf = [0f64; 3];
+            let mut i = start;
+            while i < end {
+                let len = group.min(end - i);
+                for (slot, x) in buf.iter_mut().zip(&src[i..i + len]) {
+                    *slot = x.to_f64();
+                }
+                for op in body {
+                    op.apply_slice_f64(&mut buf[..len], i);
+                }
+                for (j, &v) in buf[..len].iter().enumerate() {
+                    kernel::reduce_acc_fold(spec, &mut acc, i + j, v);
+                }
+                i += len;
+            }
+        }
+        acc
+    };
+    let partials = compute_partials(spec, nblocks, n, threads, &compute);
+    kernel::reduce_finalize(spec, &kernel::reduce_combine_tree(spec, &partials), n)
+}
+
+/// Structured fold-while-reading: gather each pixel through the shared
+/// reader (bilinear taps / edge clamp from [`kernel`]), fold the body in f64
+/// registers, accumulate — the cropped/resized intermediate never exists in
+/// memory. Blocks are `REDUCE_BLOCK / 3` pixels, so block boundaries land on
+/// the very same element indices as the oracle's blocks over the
+/// materialized stream.
+fn reduce_pixels<R: PixelRead>(
+    spec: ReduceSpec,
+    body: &[ScalarOp],
+    threads: usize,
+    reader: &R,
+    batch: usize,
+    h: usize,
+    w: usize,
+) -> Vec<f64> {
+    let plane_px = h * w;
+    let total_px = batch * plane_px;
+    let n = total_px * 3;
+    let px_per_block = kernel::REDUCE_BLOCK / 3;
+    let nblocks = total_px.div_ceil(px_per_block);
+    let compute = |bi: usize| -> kernel::ReduceAcc {
+        let start = bi * px_per_block;
+        let end = (start + px_per_block).min(total_px);
+        let mut acc = kernel::reduce_acc_identity(spec);
+        let mut px = [0f64; 3];
+        for pi in start..end {
+            // batch items repeat the same gathered plane (exactly like the
+            // oracle's materialized batch): plane-local pixel, global lanes
+            let pp = pi % plane_px;
+            reader.read(pp / w, pp % w, &mut px);
+            let gbase = pi * 3;
+            for op in body {
+                op.apply_slice_f64(&mut px, gbase);
+            }
+            for (c, &v) in px.iter().enumerate() {
+                kernel::reduce_acc_fold(spec, &mut acc, gbase + c, v);
+            }
+        }
+        acc
+    };
+    let partials = compute_partials(spec, nblocks, n, threads, &compute);
+    kernel::reduce_finalize(spec, &kernel::reduce_combine_tree(spec, &partials), n)
+}
+
+/// One reduce run, monomorphized per source lane: route by read pattern,
+/// validate geometry loudly, fold. Returns the finalized statistics in the
+/// stat-major layout of [`ReduceSpec::out_shape`].
+fn reduce_pass<S: HostLane>(
+    p: &Pipeline,
+    spec: ReduceSpec,
+    body: &[ScalarOp],
+    group: usize,
+    threads: usize,
+    src: &[S],
+    src_shape: &[usize],
+) -> Result<Vec<f64>> {
+    match p.read_pattern() {
+        ReadPattern::Dense => {
+            let mut want = vec![p.batch];
+            want.extend_from_slice(&p.shape);
+            ensure!(
+                src_shape == want.as_slice() && src.len() == p.batch * p.item_elems(),
+                "host_fused: input shape {:?} ({} elements) != pipeline {:?}",
+                src_shape,
+                src.len(),
+                want
+            );
+            Ok(reduce_dense(spec, body, group, threads, src))
+        }
+        ReadPattern::Crop { rect } => {
+            let (fh, fw) = frame_dims(src.len(), src_shape, rect)?;
+            let (h, w) = pixel_dims(p)?;
+            ensure!(
+                (h, w) == (rect.h as usize, rect.w as usize),
+                "host_fused: crop rect {rect:?} does not produce element shape {:?}",
+                p.shape
+            );
+            let reader = CropRead { frame: src, fh, fw, rect };
+            Ok(reduce_pixels(spec, body, threads, &reader, p.batch, h, w))
+        }
+        ReadPattern::CropResize { rect, dst_h, dst_w } => {
+            let (fh, fw) = frame_dims(src.len(), src_shape, rect)?;
+            let (h, w) = pixel_dims(p)?;
+            ensure!(
+                (h, w) == (dst_h, dst_w),
+                "host_fused: resize read {dst_h}x{dst_w} does not produce element shape {:?}",
+                p.shape
+            );
+            let reader = ResizeRead::new(src, fh, fw, rect, dst_h, dst_w);
+            Ok(reduce_pixels(spec, body, threads, &reader, p.batch, h, w))
+        }
+    }
+}
+
+/// Dynamic-dispatch entry for reduce runs: select the source-lane
+/// monomorphization from the tensor dtype, fold, and land the statistics as
+/// an f64 tensor shaped per [`Pipeline::out_shape`].
+fn execute_reduce(
+    plan: &HostPlan,
+    p: &Pipeline,
+    spec: ReduceSpec,
+    input: &Tensor,
+    threads: usize,
+) -> Result<Tensor> {
+    use TensorData::*;
+    let body = plan.bind_body(p);
+    let group = plan.group();
+    let vals = match input.data() {
+        U8(v) => reduce_pass(p, spec, &body, group, threads, v, input.shape()),
+        U16(v) => reduce_pass(p, spec, &body, group, threads, v, input.shape()),
+        I32(v) => reduce_pass(p, spec, &body, group, threads, v, input.shape()),
+        F32(v) => reduce_pass(p, spec, &body, group, threads, v, input.shape()),
+        F64(v) => reduce_pass(p, spec, &body, group, threads, v, input.shape()),
+    }?;
+    Ok(Tensor::from_f64(&vals, &p.out_shape()))
 }
 
 #[cfg(test)]
@@ -972,6 +1234,105 @@ mod tests {
         let got = eng.run(&p, &frame).unwrap();
         assert_eq!(got.shape(), &[1, 3, 12, 8]);
         assert_eq!(got, hostref::run_pipeline(&p, &frame));
+    }
+
+    // --- the fold-while-reading reduce tier --------------------------------
+
+    #[test]
+    fn dense_reduce_is_bit_equal_to_the_oracle_and_thread_invariant() {
+        use crate::ops::{ReduceAxis, ALL_REDUCE_KINDS};
+        let mut rng = Rng::new(17);
+        // sizes straddling REDUCE_BLOCK boundaries: the blocked tree must
+        // make 1/2/8 workers (and the oracle) agree bitwise
+        let n = kernel::REDUCE_BLOCK * 2 + 7;
+        let vals: Vec<f64> = (0..n).map(|_| rng.f64(-3.0, 3.0)).collect();
+        let x = Tensor::from_f64(&vals, &[1, n]);
+        for kind in ALL_REDUCE_KINDS {
+            for axis in [ReduceAxis::Full, ReduceAxis::PerChannel] {
+                let p = crate::chain::Chain::read::<crate::chain::F64>(&[n])
+                    .map(crate::chain::Mul(1.000001))
+                    .reduce_spec(crate::ops::ReduceSpec::single(kind, axis))
+                    .into_pipeline();
+                let want = hostref::run_pipeline(&p, &x);
+                for threads in [1usize, 2, 8] {
+                    let eng = HostFusedEngine::with_threads(threads);
+                    let got = eng.run(&p, &x).unwrap();
+                    assert_eq!(got.shape(), want.shape());
+                    let (g, w) = (got.to_f64_vec(), want.to_f64_vec());
+                    for (i, (a, b)) in g.iter().zip(&w).enumerate() {
+                        assert_eq!(
+                            a.to_bits(),
+                            b.to_bits(),
+                            "{kind:?}/{axis:?} t{threads} lane {i}: {a} vs {b}"
+                        );
+                    }
+                    assert_eq!(eng.reduce_runs(), 1);
+                    assert_eq!(eng.structured_runs(), 0, "dense-read reduce");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn crop_read_reduce_folds_while_gathering() {
+        use crate::ops::ReduceKind;
+        // mean of a cropped region: the crop intermediate never materializes
+        // in the engine, yet the result is bit-equal to the materializing
+        // oracle (shared gather + shared blocked reduction)
+        let frame = make_frame(40, 50, 8);
+        let rect = Rect::new(5, 7, 21, 13);
+        let p = crate::chain::Chain::read_crop::<crate::chain::U8>(rect)
+            .map(crate::chain::Mul(0.25))
+            .reduce_per_channel(ReduceKind::Mean)
+            .into_pipeline();
+        let want = hostref::run_pipeline(&p, &frame);
+        let eng = HostFusedEngine::with_threads(3);
+        let got = eng.run(&p, &frame).unwrap();
+        assert_eq!(got.shape(), &[3]);
+        assert_eq!(got, want, "f64 stats tensors compare bitwise");
+        assert_eq!(eng.reduce_runs(), 1);
+        assert_eq!(eng.structured_runs(), 1, "crop-read reduce is structured traffic");
+    }
+
+    #[test]
+    fn reduce_pair_folds_both_stats_in_one_pass() {
+        use crate::ops::ReduceKind;
+        let mut rng = Rng::new(9);
+        let vals = rng.vec_f32(4 * 999, -2.0, 2.0);
+        let x = Tensor::from_f32(&vals, &[4, 999]);
+        let p = crate::chain::Chain::read::<crate::chain::F32>(&[999])
+            .batch(4)
+            .reduce_pair(ReduceKind::Mean, ReduceKind::SumSq)
+            .into_pipeline();
+        let eng = HostFusedEngine::with_threads(2);
+        let got = eng.run(&p, &x).unwrap();
+        assert_eq!(got.shape(), &[2]);
+        assert_eq!(got, hostref::run_pipeline(&p, &x));
+        // the pair agrees with the two single reductions (same fold table)
+        for (i, kind) in [ReduceKind::Mean, ReduceKind::SumSq].into_iter().enumerate() {
+            let single = crate::chain::Chain::read::<crate::chain::F32>(&[999])
+                .batch(4)
+                .reduce(kind)
+                .into_pipeline();
+            let alone = eng.run(&single, &x).unwrap();
+            assert_eq!(alone.as_f64().unwrap()[0], got.as_f64().unwrap()[i], "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn empty_and_mismatched_reduce_inputs() {
+        use crate::ops::ReduceKind;
+        let p = crate::chain::Chain::read::<crate::chain::F32>(&[0])
+            .reduce(ReduceKind::Sum)
+            .into_pipeline();
+        let empty = Tensor::zeros(DType::F32, &[1, 0]);
+        let eng = HostFusedEngine::with_threads(2);
+        let got = eng.run(&p, &empty).unwrap();
+        assert_eq!(got.as_f64().unwrap(), &[0.0], "empty sum is the identity");
+        assert_eq!(got, hostref::run_pipeline(&p, &empty));
+        // wrong dtype / shape fail loudly, never silently cast
+        assert!(eng.run(&p, &Tensor::zeros(DType::U8, &[1, 0])).is_err());
+        assert!(eng.run(&p, &Tensor::zeros(DType::F32, &[1, 4])).is_err());
     }
 
     #[test]

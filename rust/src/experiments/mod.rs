@@ -20,6 +20,7 @@ mod xp09_dtype;
 mod xp10_npp;
 mod xp_hostpre;
 mod xp_hostvf;
+mod xp_reduce;
 mod xpmem;
 
 pub use common::XpCtx;
@@ -31,12 +32,12 @@ use crate::bench::Table;
 /// All experiment ids in run order.
 pub const ALL: &[&str] = &[
     "fig1", "1", "2", "3", "4", "5", "6", "7", "8", "9", "10", "mem", "ablation", "hostvf",
-    "hostpre",
+    "hostpre", "reduce",
 ];
 
 /// Experiments that need no artifact registry (run on any machine via
 /// [`run_host`]; `xp` uses this to skip the registry requirement for them).
-pub const HOST_ONLY: &[&str] = &["hostvf", "hostpre"];
+pub const HOST_ONLY: &[&str] = &["hostvf", "hostpre", "reduce"];
 
 /// Run one experiment by id.
 pub fn run(id: &str, ctx: &XpCtx) -> Result<Vec<Table>> {
@@ -56,6 +57,7 @@ pub fn run(id: &str, ctx: &XpCtx) -> Result<Vec<Table>> {
         "ablation" => ablation::run(ctx),
         "hostvf" => xp_hostvf::run(ctx),
         "hostpre" => xp_hostpre::run(ctx),
+        "reduce" => xp_reduce::run(ctx),
         other => anyhow::bail!("unknown experiment {other:?}; ids: {ALL:?}"),
     }
 }
@@ -67,6 +69,7 @@ pub fn run_host(id: &str, fast: bool) -> Result<Vec<Table>> {
     match id {
         "hostvf" => xp_hostvf::run_with(reps, budget, fast),
         "hostpre" => xp_hostpre::run_with(reps, budget, fast),
+        "reduce" => xp_reduce::run_with(reps, budget, fast),
         other => anyhow::bail!("experiment {other:?} needs artifacts; ids without: {HOST_ONLY:?}"),
     }
 }

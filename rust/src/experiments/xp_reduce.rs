@@ -1,0 +1,91 @@
+//! Reduction ablation — fused fold-while-reading vs op-at-a-time reduction
+//! on the host tier, artifact-free.
+//!
+//! Two arms over the same map+reduce workload (per-channel mean + sum of
+//! squares of a scaled u8 image batch — normalize pass 1):
+//!
+//! * **op-at-a-time**: materialize the mapped tensor (one whole-buffer step
+//!   kernel), then one more whole-buffer sweep PER statistic over the
+//!   materialized copy — the only shape the map-only op vocabulary allowed;
+//! * **fused**: the engine's fold-while-reading tier — ONE pass over the
+//!   raw input folding the chain in registers and both statistics into
+//!   per-block accumulators (no intermediate ever touches memory).
+//!
+//! Like `hostvf`/`hostpre` this needs NO artifacts: it runs on any machine
+//! (`xp reduce`) and anchors the fused-reduction speedup the `reduce_bench`
+//! acceptance criterion enforces.
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::bench::{time_fn, Table};
+use crate::chain::{Chain, Mul, U8};
+use crate::exec::{Engine, HostFusedEngine};
+use crate::hostref;
+use crate::ops::{kernel, Opcode, ReduceAxis, ReduceKind, ScalarOp};
+use crate::proplite::Rng;
+use crate::tensor::{DType, Tensor};
+
+use super::common::{fx, ms, XpCtx};
+
+pub fn run(xp: &XpCtx) -> Result<Vec<Table>> {
+    run_with(xp.reps, xp.budget, xp.fast)
+}
+
+/// Artifact-free entry point (`xp reduce` works without `make artifacts`).
+pub fn run_with(reps: usize, budget: Duration, fast: bool) -> Result<Vec<Table>> {
+    let eng = HostFusedEngine::new();
+    let (h, w) = (720usize, 1280usize);
+
+    let mut t = Table::new(
+        "Reduction ablation — fused fold-while-reading vs op-at-a-time (720p RGB, mean+sumsq)",
+        &["batch", "op_at_a_time_ms", "fused_ms", "speedup"],
+    );
+    t.note(
+        "op_at_a_time: materialize the mapped tensor, then one whole-buffer sweep per statistic; \
+         fused: one fold-while-reading pass over the raw input on the host fused engine — no \
+         artifacts, statistics bit-equal to the hostref reduction oracle",
+    );
+
+    let batches: &[usize] = if fast { &[1, 4] } else { &[1, 4, 8, 16] };
+    for &b in batches {
+        let mut rng = Rng::new(7 + b as u64);
+        let input = Tensor::from_u8(&rng.vec_u8(b * h * w * 3), &[b, h, w, 3]);
+        let typed = Chain::read::<U8>(&[h, w, 3])
+            .batch(b)
+            .map(Mul(1.0 / 255.0))
+            .reduce_pair_per_channel(ReduceKind::Mean, ReduceKind::SumSq);
+        let p = typed.pipeline();
+
+        // correctness anchor: the fused fold is bit-equal to the oracle
+        let fused = eng.run(p, &input)?;
+        let want = hostref::run_pipeline(p, &input);
+        anyhow::ensure!(fused == want, "b{b}: fused reduction diverged from the oracle");
+
+        let oat = time_fn(reps, budget, || op_at_a_time(&input));
+        let fsd = time_fn(reps, budget, || eng.run(p, &input).unwrap());
+        t.row(vec![b.to_string(), ms(oat.mean_s), ms(fsd.mean_s), fx(oat.mean_s / fsd.mean_s)]);
+    }
+    Ok(vec![t])
+}
+
+/// The pre-reduce-subsystem shape: one materialized map step, then one
+/// whole-buffer sweep per statistic over the materialized copy.
+fn op_at_a_time(input: &Tensor) -> Vec<f64> {
+    // step 1: materialize the mapped tensor (the step-kernel boundary)
+    let mut vals = input.to_f64_vec();
+    ScalarOp::Scalar { op: Opcode::Mul, param: 1.0 / 255.0 }.apply_slice_f64(&mut vals, 0);
+    let mapped = Tensor::from_f64_cast(&vals, input.shape(), DType::F32);
+    drop(vals);
+    // step 2: reduce the MATERIALIZED copy (another whole-buffer pass with
+    // its own widening — the traffic fold-while-reading removes)
+    let m = mapped.to_f64_vec();
+    let spec =
+        crate::ops::ReduceSpec::pair(ReduceKind::Mean, ReduceKind::SumSq, ReduceAxis::PerChannel);
+    let mut acc = kernel::reduce_acc_identity(spec);
+    for (i, &v) in m.iter().enumerate() {
+        kernel::reduce_acc_fold(spec, &mut acc, i, v);
+    }
+    kernel::reduce_finalize(spec, &acc, m.len())
+}

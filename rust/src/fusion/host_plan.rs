@@ -16,7 +16,9 @@
 //! [`PlanInputs::chain_params`](super::PlanInputs::chain_params) building the
 //! params tensor per launch.
 
-use crate::ops::{kernel, IOp, Opcode, Pipeline, ReadPattern, ScalarOp, Signature, WritePattern};
+use crate::ops::{
+    kernel, IOp, Opcode, Pipeline, ReadPattern, ReduceSpec, ScalarOp, Signature, WritePattern,
+};
 use crate::tensor::DType;
 
 /// Compute domain of the fused single-pass loop.
@@ -51,6 +53,10 @@ pub enum WriterKind {
     Dense,
     /// Packed `[h, w, 3]` pixels scattered planar `[3, h, w]` while writing.
     Split,
+    /// No per-element write: statistics accumulate while reading and only
+    /// the finalized f64 result lands (the fold-while-reading tier; the
+    /// spec itself is recorded in [`HostPlan::reduce`]).
+    Reduce,
 }
 
 /// A compiled host execution plan: one fused memory pass over the data.
@@ -62,6 +68,7 @@ pub struct HostPlan {
     is_chain: bool,
     reader: ReaderKind,
     writer: WriterKind,
+    reduce: Option<ReduceSpec>,
     dtin: DType,
     dtout: DType,
     batch: usize,
@@ -86,12 +93,15 @@ impl HostPlan {
         let writer = match p.write_pattern() {
             WritePattern::Dense => WriterKind::Dense,
             WritePattern::Split => WriterKind::Split,
+            WritePattern::Reduce { .. } => WriterKind::Reduce,
         };
         let dense = reader == ReaderKind::Dense && writer == WriterKind::Dense;
         let is_chain =
             dense && p.body().iter().all(|op| matches!(op, IOp::Compute { .. }));
         // structured passes always fold in f64: the gather itself is f64,
-        // and bit-compatibility with the structured oracle is the contract
+        // and bit-compatibility with the structured oracle is the contract.
+        // (Reductions always land here too: their dtout is f64 by
+        // construction, so the narrow accumulator is never selected.)
         let accum = if p.dtout == DType::F32
             && matches!(p.dtin, DType::U8 | DType::U16 | DType::F32)
             && is_chain
@@ -107,6 +117,7 @@ impl HostPlan {
             is_chain,
             reader,
             writer,
+            reduce: p.reduction(),
             dtin: p.dtin,
             dtout: p.dtout,
             batch: p.batch,
@@ -162,6 +173,13 @@ impl HostPlan {
     /// The plan's write-end kind.
     pub fn writer(&self) -> WriterKind {
         self.writer
+    }
+
+    /// The reduce terminator this plan folds, if any (the fold-while-reading
+    /// tier; kinds and axis are code shape, recorded per signature — there
+    /// are no runtime reduce params to bind).
+    pub fn reduce(&self) -> Option<ReduceSpec> {
+        self.reduce
     }
 
     /// True when both boundaries are dense (the pre-structured loop shapes).
@@ -304,6 +322,29 @@ mod tests {
         assert_eq!(plan.reader(), ReaderKind::Crop);
         assert_eq!(plan.writer(), WriterKind::Dense);
         assert_eq!(*plan.signature(), b.signature());
+    }
+
+    #[test]
+    fn reduce_terminators_plan_as_the_fold_tier() {
+        use crate::ops::{ReduceAxis, ReduceKind};
+        let p = crate::chain::Chain::read::<crate::chain::U8>(&[4, 4, 3])
+            .batch(2)
+            .map(crate::chain::Mul(0.5))
+            .reduce_per_channel(ReduceKind::Mean)
+            .into_pipeline();
+        let plan = HostPlan::compile(&p);
+        assert_eq!(plan.writer(), WriterKind::Reduce);
+        let spec = plan.reduce().expect("reduce plans record their spec");
+        assert_eq!((spec.kind, spec.axis), (ReduceKind::Mean, ReduceAxis::PerChannel));
+        assert!(!plan.is_dense(), "reduce runs never take the flat write loops");
+        assert_eq!(plan.accum(), HostAccum::F64, "statistics accumulate wide");
+        // same signature, one plan — reduce pipelines cache like any other
+        let q = crate::chain::Chain::read::<crate::chain::U8>(&[4, 4, 3])
+            .batch(2)
+            .map(crate::chain::Mul(9.0))
+            .reduce_per_channel(ReduceKind::Mean)
+            .into_pipeline();
+        assert_eq!(Signature::of(&q), *plan.signature());
     }
 
     #[test]

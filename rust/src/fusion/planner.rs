@@ -17,6 +17,12 @@ pub enum PlanError {
          engine, which executes structured boundaries natively)"
     )]
     StructuredBoundary(String),
+    #[error(
+        "pipeline ends in a reduction ({0}); dense chain ARTIFACTS cannot serve it (serving \
+         reductions on the artifact tier takes a dedicated ReduceDPP family — the host fused \
+         engine folds them while reading, natively)"
+    )]
+    Reduction(String),
 }
 
 /// Cumulative planner decisions (exposed as coordinator metrics and used by
@@ -44,6 +50,14 @@ pub struct PlannerStats {
     /// [`PlannerStats::total`] — it makes structured traffic (the flagship
     /// preproc workload) observable in serving dashboards.
     pub structured: usize,
+    /// Reduce-terminated pipelines served by the host fold-while-reading
+    /// tier — detected at the artifact planner as
+    /// [`PlanError::Reduction`] and re-routed by
+    /// [`FusedEngine`](crate::exec::FusedEngine), or run natively on the
+    /// host backend. Like `structured`, a sub-count of `host` excluded from
+    /// [`PlannerStats::total`]: the new reduce workload gets its own tier in
+    /// serving dashboards.
+    pub reduction: usize,
 }
 
 impl PlannerStats {
@@ -113,6 +127,15 @@ pub fn plan_pipeline(
     reg: &Registry,
     variant: &str,
 ) -> Result<FusionPlan, PlanError> {
+    // a reduce terminator is a different KERNEL SHAPE, not just a different
+    // access pattern: no dense chain artifact accumulates anything. Typed,
+    // artifact-tier-only refusal — FusedEngine re-routes to the host fused
+    // engine's fold-while-reading tier (interrogate the metadata, never
+    // sig-token strings).
+    if p.reduction().is_some() {
+        let token = p.ops().last().map(IOp::sig_token).unwrap_or_default();
+        return Err(PlanError::Reduction(token));
+    }
     // a structured boundary (crop/resize read, split write) changes the
     // memory pattern of the generated code: matching the BODY against a
     // dense chain artifact would silently execute the wrong kernel. The

@@ -51,6 +51,15 @@ pub fn run_pipeline(p: &Pipeline, input: &Tensor) -> Tensor {
         op.apply_slice_f64(&mut vals, 0);
     }
 
+    // reduce terminator: the MATERIALIZING reduction oracle — the whole
+    // mapped buffer exists in memory here (the traffic the fused engine's
+    // fold-while-reading tier removes), then reduces through the shared
+    // blocked-tree table, so engine and oracle agree BITWISE
+    if let Some(spec) = p.reduction() {
+        let out = kernel::reduce_slice(spec, &vals);
+        return Tensor::from_f64(&out, &p.out_shape());
+    }
+
     // write: dense keeps the packed layout; split permutes packed -> planar
     // through the shared layout contract
     if p.write_pattern() == WritePattern::Split {
@@ -350,6 +359,19 @@ mod tests {
         for (i, (a, b)) in got.to_f64_vec().iter().zip(want.to_f64_vec()).enumerate() {
             assert!((a - b).abs() <= 1e-4 + 1e-4 * b.abs(), "elem {i}: {a} vs {b}");
         }
+    }
+
+    #[test]
+    fn reduce_oracle_materializes_then_blocks() {
+        use crate::ops::ReduceKind;
+        let p = crate::chain::Chain::read::<crate::chain::U8>(&[2, 3])
+            .map(crate::chain::Mul(2.0))
+            .reduce_per_channel(ReduceKind::Sum)
+            .into_pipeline();
+        let x = Tensor::from_u8(&[1, 2, 3, 4, 5, 6], &[1, 2, 3]);
+        let got = run_pipeline(&p, &x);
+        assert_eq!(got.shape(), &[3]);
+        assert_eq!(got.as_f64().unwrap(), &[10.0, 14.0, 18.0]);
     }
 
     #[test]

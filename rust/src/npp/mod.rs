@@ -22,12 +22,12 @@
 //! reading, split while writing) — on any machine with ZERO artifacts.
 //! Launches BORROW the frame — no per-call tensor clones on the hot path.
 
-use anyhow::{bail, Result};
+use anyhow::{bail, ensure, Result};
 
-use crate::chain::{Chain, CvtColor, DivC3, MulC3, SubC3, TypedPipeline, F32, U8};
+use crate::chain::{Chain, CvtColor, DivC3, MulC3, SubC3, TypedPipeline, F32, F64, U8};
 use crate::cv::Context;
 use crate::hostref;
-use crate::ops::{Opcode, ScalarOp};
+use crate::ops::{kernel, Opcode, ReduceKind, ScalarOp};
 use crate::runtime::DeviceValue;
 use crate::tensor::{crop_frame, DType, Rect, Tensor};
 
@@ -151,6 +151,78 @@ impl PreprocPipeline {
             &name,
             &[frame, &inputs[0], &inputs[1], &inputs[2], &inputs[3]],
         )
+    }
+
+    /// The per-crop STATISTICS chain of the normalize stage: crop+resize
+    /// gather -> color convert -> MulC scaling, terminated by a per-channel
+    /// (mean, sum-of-squares) pair reduction — one fold-while-reading pass
+    /// per crop, the resized crop never materializes.
+    pub fn stats_chain(&self, rect: Rect) -> TypedPipeline<U8, F64> {
+        Chain::read_resize::<U8>(rect, self.spec.dst_h, self.spec.dst_w)
+            .map(CvtColor)
+            .map(MulC3(self.mul))
+            .reduce_pair_per_channel(ReduceKind::Mean, ReduceKind::SumSq)
+    }
+
+    /// Per-channel (μ, σ) of THIS batch's scaled crops, measured with one
+    /// fused reduce pass per crop and combined across crops in the fixed
+    /// rect order (every crop contributes `dst_h * dst_w` pixels per lane,
+    /// so the batch mean is the mean of crop means and the sums of squares
+    /// add). Serves on every backend — the reduce chains re-route to the
+    /// host tier under XLA.
+    pub fn channel_mean_std(&self, ctx: &Context, frame: &Tensor) -> Result<([f64; 3], [f64; 3])> {
+        let b = self.spec.rects.len();
+        ensure!(b > 0, "normalize stage needs at least one crop rect");
+        let mut mean_sum = [0f64; 3];
+        let mut sumsq_sum = [0f64; 3];
+        for &r in &self.spec.rects {
+            let stats = ctx.run(self.stats_chain(r).pipeline(), frame)?;
+            let vals = stats.as_f64().expect("stats chain seals at f64");
+            for c in 0..3 {
+                mean_sum[c] += vals[c];
+                sumsq_sum[c] += vals[3 + c];
+            }
+        }
+        let n_lane = b * self.spec.dst_h * self.spec.dst_w;
+        let mut mu = [0f64; 3];
+        let mut sigma = [0f64; 3];
+        for c in 0..3 {
+            mu[c] = mean_sum[c] / b as f64;
+            sigma[c] = kernel::normalize_sigma(mu[c], sumsq_sum[c], n_lane, 1e-12);
+        }
+        Ok((mu, sigma))
+    }
+
+    /// The NORMALIZE stage: the preset chain with DATA-DERIVED per-channel
+    /// statistics — `SubC(μ)` / `DivC(σ)` measured from this batch's scaled
+    /// crops ([`PreprocPipeline::channel_mean_std`]) instead of caller
+    /// constants. Two fused phases, nothing materialized in between: the
+    /// stats phase folds while reading, then the standard preproc pass runs
+    /// with the statistics bound as its per-channel constants. Output
+    /// channels land mean 0 / σ 1.
+    pub fn run_normalized(&self, ctx: &Context, frame: &Tensor) -> Result<Tensor> {
+        let (mu, sigma) = self.channel_mean_std(ctx, frame)?;
+        self.run_normalized_with(ctx, frame, mu, sigma)
+    }
+
+    /// [`PreprocPipeline::run_normalized`] with ALREADY-derived statistics —
+    /// the video-loop shape: measure μ/σ once (or per keyframe) with
+    /// [`PreprocPipeline::channel_mean_std`], then launch every frame
+    /// without re-running the stats sweep.
+    pub fn run_normalized_with(
+        &self,
+        ctx: &Context,
+        frame: &Tensor,
+        mu: [f64; 3],
+        sigma: [f64; 3],
+    ) -> Result<Tensor> {
+        let derived = PreprocPipeline::new(
+            self.spec.clone(),
+            self.mul,
+            [mu[0] as f32, mu[1] as f32, mu[2] as f32],
+            [sigma[0] as f32, sigma[1] as f32, sigma[2] as f32],
+        );
+        derived.run(ctx, frame)
     }
 
     /// The NPP baseline on the host tier: one whole-buffer pass per step per
@@ -321,6 +393,42 @@ mod tests {
         assert_eq!(npp.shape(), got.shape());
         for (i, (a, b)) in npp.to_f64_vec().iter().zip(got.to_f64_vec()).enumerate() {
             assert!((a - b).abs() <= 1e-3 + 1e-3 * b.abs(), "elem {i}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn normalize_stage_lands_zero_mean_unit_sigma_channels() {
+        let ctx = Context::with_select(crate::exec::EngineSelect::HostFused, None).unwrap();
+        let frame = make_frame(80, 120, 21);
+        let rects = vec![Rect::new(2, 4, 36, 24), Rect::new(40, 30, 28, 40)];
+        let p = PreprocPipeline::new(
+            ResizeBatchSpec { rects, dst_h: 16, dst_w: 12 },
+            [1.0 / 255.0; 3],
+            [0.0; 3], // sub/div placeholders: the normalize stage derives its own
+            [1.0; 3],
+        );
+        let (mu, sigma) = p.channel_mean_std(&ctx, &frame).unwrap();
+        for c in 0..3 {
+            assert!(mu[c].is_finite() && sigma[c] > 0.0, "lane {c}: μ={} σ={}", mu[c], sigma[c]);
+        }
+        let out = p.run_normalized(&ctx, &frame).unwrap();
+        assert_eq!(out.shape(), &[2, 3, 16, 12]);
+
+        // per-channel mean ≈ 0 and variance ≈ 1 across the whole batch
+        // (channel c is plane c of each item — the split write's layout)
+        let v = out.as_f32().unwrap();
+        let plane = 16 * 12;
+        for c in 0..3 {
+            let mut lane = Vec::with_capacity(2 * plane);
+            for bi in 0..2 {
+                let base = bi * 3 * plane + c * plane;
+                lane.extend(v[base..base + plane].iter().map(|&x| x as f64));
+            }
+            let n = lane.len() as f64;
+            let mean: f64 = lane.iter().sum::<f64>() / n;
+            let var: f64 = lane.iter().map(|x| x * x).sum::<f64>() / n;
+            assert!(mean.abs() < 1e-3, "lane {c} mean {mean}");
+            assert!((var - 1.0).abs() < 1e-2, "lane {c} var {var}");
         }
     }
 

@@ -2,7 +2,7 @@
 
 use crate::tensor::{DType, Rect};
 
-use super::Opcode;
+use super::{Opcode, ReduceSpec};
 
 /// The paper's four Operation classes (Table I).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -28,6 +28,10 @@ pub enum MemOp {
     Write { dtype: DType },
     /// Packed -> planar write (the Split WOp of Fig. 11).
     SplitWrite { dtype: DType },
+    /// Reduction terminator (the divergent-pattern ReduceDPP of §IV-C):
+    /// statistics fold WHILE reading and only the tiny f64 result is
+    /// written — the pipeline's write end, with no per-element write.
+    Reduce { spec: ReduceSpec },
 }
 
 /// The access pattern a pipeline's READ end performs. This is the boundary
@@ -56,13 +60,16 @@ pub enum WritePattern {
     /// Packed `[h, w, 3]` pixels scattered to planar `[3, h, w]` *while
     /// writing* (the Split WOp of Fig. 11).
     Split,
+    /// No per-element write at all: statistics accumulate while reading and
+    /// only the finalized f64 result lands ([`ReduceSpec::out_shape`]).
+    Reduce { spec: ReduceSpec },
 }
 
 impl MemOp {
     pub fn class(&self) -> OpClass {
         match self {
             MemOp::Read { .. } | MemOp::CropRead { .. } | MemOp::ResizeRead { .. } => OpClass::Read,
-            MemOp::Write { .. } | MemOp::SplitWrite { .. } => OpClass::Write,
+            MemOp::Write { .. } | MemOp::SplitWrite { .. } | MemOp::Reduce { .. } => OpClass::Write,
         }
     }
 
@@ -82,7 +89,7 @@ impl MemOp {
             MemOp::ResizeRead { rect, dst_h, dst_w } => {
                 Some(ReadPattern::CropResize { rect, dst_h, dst_w })
             }
-            MemOp::Write { .. } | MemOp::SplitWrite { .. } => None,
+            MemOp::Write { .. } | MemOp::SplitWrite { .. } | MemOp::Reduce { .. } => None,
         }
     }
 
@@ -91,6 +98,17 @@ impl MemOp {
         match self {
             MemOp::Write { .. } => Some(WritePattern::Dense),
             MemOp::SplitWrite { .. } => Some(WritePattern::Split),
+            MemOp::Reduce { spec } => Some(WritePattern::Reduce { spec: *spec }),
+            _ => None,
+        }
+    }
+
+    /// The reduction terminator of this op (`None` for everything else) —
+    /// the metadata planners interrogate to route reduce-terminated
+    /// pipelines (never sig-token strings).
+    pub fn reduction(&self) -> Option<ReduceSpec> {
+        match self {
+            MemOp::Reduce { spec } => Some(*spec),
             _ => None,
         }
     }
@@ -144,6 +162,7 @@ impl IOp {
             }
             IOp::Mem(MemOp::Write { dtype }) => format!("write[{dtype}]"),
             IOp::Mem(MemOp::SplitWrite { dtype }) => format!("split[{dtype}]"),
+            IOp::Mem(MemOp::Reduce { spec }) => spec.sig_token(),
         }
     }
 
@@ -192,6 +211,19 @@ mod tests {
         assert!(split.is_structured());
         assert_eq!(split.write_pattern(), Some(WritePattern::Split));
         assert_eq!(split.read_pattern(), None);
+
+        // the reduce terminator is write-class boundary metadata too: dense
+        // artifact tiers must see it as structured (they cannot serve it)
+        use crate::ops::{ReduceAxis, ReduceKind, ReduceSpec};
+        let spec = ReduceSpec::single(ReduceKind::Mean, ReduceAxis::PerChannel);
+        let red = MemOp::Reduce { spec };
+        assert_eq!(red.class(), OpClass::Write);
+        assert!(red.is_structured());
+        assert_eq!(red.write_pattern(), Some(WritePattern::Reduce { spec }));
+        assert_eq!(red.read_pattern(), None);
+        assert_eq!(red.reduction(), Some(spec));
+        assert_eq!(IOp::Mem(red).sig_token(), "reduce[mean@ch]");
+        assert_eq!(MemOp::Write { dtype: DType::F64 }.reduction(), None);
     }
 
     #[test]

@@ -14,7 +14,7 @@
 
 use crate::tensor::Rect;
 
-use super::{IOp, Opcode};
+use super::{IOp, Opcode, ReduceAxis, ReduceSpec};
 
 /// Lowered form of one compute-body IOp. Memory operations do not lower —
 /// they are the pipeline's read/write boundary, not body semantics.
@@ -184,10 +184,179 @@ pub fn split_packed_to_planar<T: Copy>(packed: &[T], planar: &mut [T]) {
     }
 }
 
+// ---------------------------------------------------------------------------
+// reduction semantics (the divergent-pattern half of the one-table rule)
+//
+// The fold itself lives on [`super::ReduceKind`]; what is defined HERE is the
+// deterministic *shape* of a reduction — fixed-size blocks, a fixed pairwise
+// combine tree, per-lane counts and the finalize layout — shared by the
+// hostref oracle ([`reduce_slice`] over a materialized buffer) and the fused
+// engine (the fold-while-reading tier computes the very same block partials
+// without materializing). Because block boundaries and combine order are
+// properties of the DATA, not of the thread count, results are bit-identical
+// across 1/2/8 workers and across oracle vs engine.
+
+/// Elements per reduction block. Divisible by 3 so packed-RGB pixel groups
+/// (and per-channel lanes) never straddle a block boundary.
+pub const REDUCE_BLOCK: usize = 3072;
+
+/// One block's partial accumulators: up to 2 statistics × up to 3 lanes
+/// (unused slots idle at their fold identity). Lane 0 is the only live lane
+/// for full-tensor reductions.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ReduceAcc {
+    /// `s[lane][stat]` in the f64 accumulate domain.
+    pub s: [[f64; 2]; 3],
+}
+
+/// The accumulator every block fold starts from.
+pub fn reduce_acc_identity(spec: ReduceSpec) -> ReduceAcc {
+    let mut s = [[0.0f64; 2]; 3];
+    for lane in s.iter_mut() {
+        for k in 0..spec.stat_count() {
+            lane[k] = spec.stat(k).identity();
+        }
+    }
+    ReduceAcc { s }
+}
+
+/// Fold element `x` at global element index `index` into `acc`. The lane of
+/// a per-channel fold is `index % 3` — the same global-index lane rule as
+/// [`ScalarOp::PerLane`], so statistics compose with lane-structured bodies.
+#[inline(always)]
+pub fn reduce_acc_fold(spec: ReduceSpec, acc: &mut ReduceAcc, index: usize, x: f64) {
+    let lane = match spec.axis {
+        ReduceAxis::Full => 0,
+        ReduceAxis::PerChannel => index % 3,
+    };
+    for k in 0..spec.stat_count() {
+        acc.s[lane][k] = spec.stat(k).fold(acc.s[lane][k], x);
+    }
+}
+
+/// Combine two block partials (per stat, per lane).
+pub fn reduce_acc_combine(spec: ReduceSpec, a: &ReduceAcc, b: &ReduceAcc) -> ReduceAcc {
+    let mut out = *a;
+    for lane in 0..3 {
+        for k in 0..spec.stat_count() {
+            out.s[lane][k] = spec.stat(k).combine(a.s[lane][k], b.s[lane][k]);
+        }
+    }
+    out
+}
+
+/// Combine block partials in a FIXED pairwise tree: adjacent pairs per
+/// round, regardless of who computed them. This is the determinism
+/// contract — the combine order is a function of the block count alone, so
+/// thread scheduling can never reorder a floating-point sum.
+pub fn reduce_combine_tree(spec: ReduceSpec, partials: &[ReduceAcc]) -> ReduceAcc {
+    if partials.is_empty() {
+        return reduce_acc_identity(spec);
+    }
+    let mut cur = partials.to_vec();
+    while cur.len() > 1 {
+        let mut next = Vec::with_capacity(cur.len().div_ceil(2));
+        for pair in cur.chunks(2) {
+            next.push(if pair.len() == 2 {
+                reduce_acc_combine(spec, &pair[0], &pair[1])
+            } else {
+                pair[0]
+            });
+        }
+        cur = next;
+    }
+    cur[0]
+}
+
+/// Exact per-lane element counts of an `n`-element reduction (lane = global
+/// index % 3 for per-channel; everything in lane 0 for full).
+pub fn reduce_lane_counts(spec: ReduceSpec, n: usize) -> [usize; 3] {
+    match spec.axis {
+        ReduceAxis::Full => [n, 0, 0],
+        ReduceAxis::PerChannel => {
+            let mut c = [n / 3; 3];
+            for slot in c.iter_mut().take(n % 3) {
+                *slot += 1;
+            }
+            c
+        }
+    }
+}
+
+/// Finalize a combined accumulator into the output layout: stat-major,
+/// lane-minor (`[stat0 lane0.., stat1 lane0..]` — the layout of
+/// [`ReduceSpec::out_shape`]).
+pub fn reduce_finalize(spec: ReduceSpec, acc: &ReduceAcc, n: usize) -> Vec<f64> {
+    let counts = reduce_lane_counts(spec, n);
+    let mut out = Vec::with_capacity(spec.out_len());
+    for k in 0..spec.stat_count() {
+        for lane in 0..spec.lanes() {
+            out.push(spec.stat(k).finalize(acc.s[lane][k], counts[lane]));
+        }
+    }
+    out
+}
+
+/// The whole blocked-tree reduction over a materialized f64 buffer — the
+/// ORACLE's reduce path, and the bit-for-bit definition the fused engine's
+/// fold-while-reading tier reproduces without ever materializing `vals`.
+pub fn reduce_slice(spec: ReduceSpec, vals: &[f64]) -> Vec<f64> {
+    let partials: Vec<ReduceAcc> = vals
+        .chunks(REDUCE_BLOCK)
+        .enumerate()
+        .map(|(bi, chunk)| {
+            let mut acc = reduce_acc_identity(spec);
+            let base = bi * REDUCE_BLOCK;
+            for (j, &x) in chunk.iter().enumerate() {
+                reduce_acc_fold(spec, &mut acc, base + j, x);
+            }
+            acc
+        })
+        .collect();
+    reduce_finalize(spec, &reduce_combine_tree(spec, &partials), vals.len())
+}
+
+/// σ from normalize pass 1's `(mean, sum-of-squares)` statistics:
+/// `sqrt(max(E[x²] − μ², 0))`, floored at `eps` so pass 2's divide is
+/// always well-defined. `n == 0` yields 1.0 (normalizing nothing is the
+/// identity). Defined ONCE here so every normalize front door (`chain`
+/// preset, `cv::normalize`, `npp::run_normalized`) derives σ identically.
+pub fn normalize_sigma(mean: f64, sumsq: f64, n: usize, eps: f64) -> f64 {
+    if n == 0 {
+        return 1.0;
+    }
+    let var = (sumsq / n as f64 - mean * mean).max(0.0);
+    var.sqrt().max(eps)
+}
+
+/// Split a `(Mean, SumSq)` pair-reduction output into per-lane `(μ, σ)` —
+/// the handover from pass 1 to pass 2's bound scalars. `vals` is the
+/// stat-major finalize layout; `n` the reduced element count.
+pub fn mean_sigma_from_stats(
+    spec: ReduceSpec,
+    vals: &[f64],
+    n: usize,
+    eps: f64,
+) -> (Vec<f64>, Vec<f64>) {
+    debug_assert_eq!(spec.stat_count(), 2, "mean/σ needs the (Mean, SumSq) pair");
+    debug_assert_eq!(vals.len(), spec.out_len());
+    let lanes = spec.lanes();
+    let counts = reduce_lane_counts(spec, n);
+    let mut mu = Vec::with_capacity(lanes);
+    let mut sigma = Vec::with_capacity(lanes);
+    for lane in 0..lanes {
+        let mean = vals[lane];
+        let sumsq = vals[lanes + lane];
+        mu.push(mean);
+        sigma.push(normalize_sigma(mean, sumsq, counts[lane], eps));
+    }
+    (mu, sigma)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::ops::{MemOp, Pipeline};
+    use crate::ops::{MemOp, Pipeline, ReduceKind};
     use crate::tensor::DType;
 
     #[test]
@@ -292,5 +461,101 @@ mod tests {
         let mut v = vec![1.0, 2.0, 3.0, 4.0, 5.0];
         ScalarOp::Swizzle.apply_slice_f64(&mut v, 0);
         assert_eq!(v, vec![3.0, 2.0, 1.0, 4.0, 5.0]);
+    }
+
+    // --- reductions --------------------------------------------------------
+
+    #[test]
+    fn reduce_block_is_pixel_aligned() {
+        // per-channel lanes and 3-wide pixel groups must never straddle a
+        // block boundary
+        assert_eq!(REDUCE_BLOCK % 3, 0);
+    }
+
+    #[test]
+    fn reduce_slice_matches_naive_sweeps_on_small_inputs() {
+        use crate::ops::{ReduceAxis, ReduceSpec};
+        // inputs shorter than one block: the blocked-tree shape degenerates
+        // to the naive fold, so plain sweeps are the expected values
+        let vals: Vec<f64> = (0..10).map(|i| i as f64 - 4.0).collect();
+        let full = |k| ReduceSpec::single(k, ReduceAxis::Full);
+        assert_eq!(reduce_slice(full(ReduceKind::Sum), &vals), vec![vals.iter().sum::<f64>()]);
+        assert_eq!(reduce_slice(full(ReduceKind::Min), &vals), vec![-4.0]);
+        assert_eq!(reduce_slice(full(ReduceKind::Max), &vals), vec![5.0]);
+        assert_eq!(
+            reduce_slice(full(ReduceKind::Mean), &vals),
+            vec![vals.iter().sum::<f64>() / 10.0]
+        );
+        assert_eq!(
+            reduce_slice(full(ReduceKind::SumSq), &vals),
+            vec![vals.iter().map(|v| v * v).sum::<f64>()]
+        );
+
+        // per-channel: lane = index % 3, ragged tail included (10 = 3*3+1)
+        let spec = ReduceSpec::single(ReduceKind::Sum, ReduceAxis::PerChannel);
+        let mut want = [0.0f64; 3];
+        for (i, &v) in vals.iter().enumerate() {
+            want[i % 3] += v;
+        }
+        assert_eq!(reduce_slice(spec, &vals), want.to_vec());
+        assert_eq!(reduce_lane_counts(spec, 10), [4, 3, 3]);
+    }
+
+    #[test]
+    fn combine_tree_is_the_fixed_pairwise_shape() {
+        use crate::ops::{ReduceAxis, ReduceSpec};
+        // order-sensitive partials (1e16 absorbs 1.0): pin the EXACT
+        // combine order the tree promises — adjacent pairs per round,
+        // ((p0+p1)+(p2+p3))+p4, nothing else — so any rewrite that folds
+        // left-to-right or reorders by worker changes these bits
+        let spec = ReduceSpec::single(ReduceKind::Sum, ReduceAxis::Full);
+        let partials: Vec<ReduceAcc> = (0..4)
+            .map(|i| {
+                let mut acc = reduce_acc_identity(spec);
+                reduce_acc_fold(spec, &mut acc, 0, if i == 0 { 1e16 } else { 1.0 });
+                acc
+            })
+            .collect();
+        let got = reduce_combine_tree(spec, &partials).s[0][0];
+        let want = (1e16 + 1.0) + (1.0 + 1.0);
+        assert_eq!(got.to_bits(), want.to_bits());
+        // ... and the naive left fold genuinely disagrees here: 1.0 is below
+        // 1e16's ulp, so folding one-at-a-time absorbs every small partial
+        // ((1e16+1)+1)+1 = 1e16, while the pair (1+1) = 2 survives the tree
+        let left = ((1e16 + 1.0) + 1.0) + 1.0;
+        assert_ne!(got.to_bits(), left.to_bits());
+    }
+
+    #[test]
+    fn empty_reductions_finalize_to_identities() {
+        use crate::ops::{ReduceAxis, ReduceSpec};
+        let full = |k| ReduceSpec::single(k, ReduceAxis::Full);
+        assert_eq!(reduce_slice(full(ReduceKind::Sum), &[]), vec![0.0]);
+        assert_eq!(reduce_slice(full(ReduceKind::Min), &[]), vec![f64::INFINITY]);
+        assert_eq!(reduce_slice(full(ReduceKind::Max), &[]), vec![f64::NEG_INFINITY]);
+        assert!(reduce_slice(full(ReduceKind::Mean), &[])[0].is_nan());
+    }
+
+    #[test]
+    fn pair_reductions_share_the_pass_and_the_layout() {
+        use crate::ops::{ReduceAxis, ReduceSpec};
+        let vals = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let spec = ReduceSpec::pair(ReduceKind::Mean, ReduceKind::SumSq, ReduceAxis::PerChannel);
+        let out = reduce_slice(spec, &vals);
+        // stat-major: [mean_r, mean_g, mean_b, sumsq_r, sumsq_g, sumsq_b]
+        assert_eq!(out, vec![2.5, 3.5, 4.5, 17.0, 29.0, 45.0]);
+        let (mu, sigma) = mean_sigma_from_stats(spec, &out, vals.len(), 0.0);
+        assert_eq!(mu, vec![2.5, 3.5, 4.5]);
+        for (lane, s) in sigma.iter().enumerate() {
+            assert!((s - 1.5).abs() < 1e-12, "lane {lane}: {s}");
+        }
+    }
+
+    #[test]
+    fn normalize_sigma_floors_and_handles_empty() {
+        assert_eq!(normalize_sigma(2.0, 16.0, 4, 1e-12), 0.0f64.max(1e-12));
+        assert_eq!(normalize_sigma(0.0, 0.0, 0, 1e-12), 1.0);
+        // var would be slightly negative from rounding: clamped to eps
+        assert_eq!(normalize_sigma(1.0, 0.999999, 1, 1e-6), 1e-6);
     }
 }

@@ -13,10 +13,12 @@ mod iop;
 pub mod kernel;
 mod opcode;
 mod pipeline;
+mod reduce;
 mod signature;
 
 pub use iop::{IOp, MemOp, OpClass, ReadPattern, WritePattern};
 pub use kernel::ScalarOp;
 pub use opcode::{Opcode, ALL_OPCODES};
 pub use pipeline::{Pipeline, PipelineError};
+pub use reduce::{ReduceAxis, ReduceKind, ReduceSpec, ALL_REDUCE_KINDS};
 pub use signature::Signature;

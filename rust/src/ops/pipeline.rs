@@ -7,7 +7,7 @@
 
 use crate::tensor::DType;
 
-use super::{IOp, MemOp, Opcode};
+use super::{IOp, MemOp, Opcode, ReduceSpec};
 
 #[derive(Debug, thiserror::Error, PartialEq)]
 pub enum PipelineError {
@@ -19,6 +19,8 @@ pub enum PipelineError {
     InteriorMemOp { index: usize, token: String },
     #[error("pipeline has no compute body")]
     Empty,
+    #[error("reduce terminator seals at f64 (the statistics domain), got dtout {0}")]
+    ReduceOutput(String),
 }
 
 /// A validated chain: Read, [Compute...], Write over an element shape with an
@@ -56,6 +58,13 @@ impl Pipeline {
             if matches!(op, IOp::Mem(_)) {
                 return Err(PipelineError::InteriorMemOp { index, token: op.sig_token() });
             }
+        }
+        // a reduce terminator produces f64 statistics: sealing at any other
+        // dtype would silently round the accumulators at the boundary
+        if matches!(ops.last(), Some(IOp::Mem(m)) if m.reduction().is_some())
+            && dtout != DType::F64
+        {
+            return Err(PipelineError::ReduceOutput(dtout.to_string()));
         }
         Ok(Pipeline { ops, shape, batch, dtin, dtout })
     }
@@ -133,9 +142,22 @@ impl Pipeline {
             || self.write_pattern() != super::WritePattern::Dense
     }
 
+    /// The reduction terminator, if this pipeline ends in one — the metadata
+    /// planners interrogate to route reduce pipelines (artifact tiers refuse
+    /// with [`crate::fusion::PlanError::Reduction`]; the host fused engine
+    /// serves them in its fold-while-reading tier).
+    pub fn reduction(&self) -> Option<ReduceSpec> {
+        match self.ops.last() {
+            Some(IOp::Mem(m)) => m.reduction(),
+            _ => None,
+        }
+    }
+
     /// Logical output shape of one run. Dense writes produce
     /// `[batch, *shape]`; a Split write scatters the trailing 3-lane pixel
-    /// dim to the front of the item (`[h, w, 3]` -> `[batch, 3, h, w]`).
+    /// dim to the front of the item (`[h, w, 3]` -> `[batch, 3, h, w]`); a
+    /// Reduce terminator folds the batch dimension too and lands the tiny
+    /// statistics tensor ([`ReduceSpec::out_shape`]).
     pub fn out_shape(&self) -> Vec<usize> {
         let mut out = vec![self.batch];
         match self.write_pattern() {
@@ -146,6 +168,7 @@ impl Pipeline {
                     out.extend_from_slice(rest);
                 }
             }
+            super::WritePattern::Reduce { spec } => return spec.out_shape(),
         }
         out
     }
@@ -160,8 +183,13 @@ impl Pipeline {
         self.ops.iter().map(IOp::instr_cost).sum()
     }
 
-    /// Bytes moved by the FUSED execution: one read + one write.
+    /// Bytes moved by the FUSED execution: one read + one write. A reduce
+    /// terminator has no per-element write — only the statistics land.
     pub fn fused_bytes(&self) -> usize {
+        if let Some(spec) = self.reduction() {
+            return self.batch * self.item_elems() * self.dtin.size_bytes()
+                + spec.out_len() * self.dtout.size_bytes();
+        }
         self.batch
             * self.item_elems()
             * (self.dtin.size_bytes() + self.dtout.size_bytes())
@@ -286,6 +314,43 @@ mod tests {
         // 3 kernels, each 100 elems * (4 read + 4 write)
         assert_eq!(p.unfused_bytes(), 3 * 100 * 8);
         assert!(p.intermediate_bytes() > 0);
+    }
+
+    #[test]
+    fn reduce_terminators_validate_and_shape() {
+        use super::super::{ReduceAxis, ReduceKind, ReduceSpec};
+        let spec = ReduceSpec::pair(ReduceKind::Mean, ReduceKind::SumSq, ReduceAxis::PerChannel);
+        let mk = |dtout| {
+            Pipeline::new(
+                vec![
+                    IOp::Mem(MemOp::Read { dtype: DType::U8 }),
+                    IOp::compute(Opcode::Mul, 0.5),
+                    IOp::Mem(MemOp::Reduce { spec }),
+                ],
+                vec![4, 4, 3],
+                2,
+                DType::U8,
+                dtout,
+            )
+        };
+        // sealing anywhere but f64 is refused loudly
+        let err = mk(DType::F32).unwrap_err();
+        assert_eq!(err, PipelineError::ReduceOutput("f32".to_string()));
+
+        let p = mk(DType::F64).unwrap();
+        assert_eq!(p.reduction(), Some(spec));
+        assert!(p.has_structured_boundary(), "dense tiers must not match it");
+        // the batch folds into the statistics: out shape is the spec's
+        assert_eq!(p.out_shape(), vec![2, 3]);
+        // one read of the data + the statistics write, nothing per-element
+        assert_eq!(p.fused_bytes(), 2 * 48 + 6 * 8);
+        // dense pipelines report no reduction
+        assert_eq!(mkp().reduction(), None);
+
+        fn mkp() -> Pipeline {
+            Pipeline::from_opcodes(&[(Opcode::Mul, 2.0)], &[4], 1, DType::F32, DType::F32)
+                .unwrap()
+        }
     }
 
     #[test]

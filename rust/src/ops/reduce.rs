@@ -1,0 +1,251 @@
+//! Reduction vocabulary — the divergent-pattern Operations of the paper's
+//! §IV-C (ReduceDPP), as first-class pipeline TERMINATORS.
+//!
+//! A map-only op vocabulary cannot express `mean`, `max` or sum-of-squares,
+//! so the canonical preprocessing step (per-channel mean/std normalize)
+//! could not be served at all before this module. A [`ReduceSpec`] seals a
+//! pipeline the way a write does: the fused engine folds every element
+//! through the op chain in registers and accumulates the requested
+//! statistics in the SAME single memory pass ("reduce while reading") —
+//! intermediates never touch DRAM, which is exactly where kernel fusion
+//! pays most (Filipovič et al., "Optimizing CUDA Code By Kernel Fusion").
+//!
+//! This file is the *vocabulary*: kinds, axes and the per-element fold
+//! semantics. The blocked, deterministic tree-combine machinery shared by
+//! the hostref oracle and the fused engine lives in [`super::kernel`]
+//! (`REDUCE_BLOCK`, `reduce_slice`, `reduce_combine_tree`) — one table, so
+//! engine and oracle cannot drift.
+
+/// One reduction statistic. `Mean` divides at finalize; everything else is
+/// the raw fold.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ReduceKind {
+    Sum,
+    Min,
+    Max,
+    Mean,
+    SumSq,
+}
+
+/// Every reduction kind, in a stable order (sweeps and tests iterate this).
+pub const ALL_REDUCE_KINDS: [ReduceKind; 5] = [
+    ReduceKind::Sum,
+    ReduceKind::Min,
+    ReduceKind::Max,
+    ReduceKind::Mean,
+    ReduceKind::SumSq,
+];
+
+impl ReduceKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            ReduceKind::Sum => "sum",
+            ReduceKind::Min => "min",
+            ReduceKind::Max => "max",
+            ReduceKind::Mean => "mean",
+            ReduceKind::SumSq => "sumsq",
+        }
+    }
+
+    /// The fold's starting value. An empty reduction finalizes to exactly
+    /// this (so `Min` of nothing is `+inf`, `Mean` of nothing is `NaN`).
+    pub fn identity(self) -> f64 {
+        match self {
+            ReduceKind::Sum | ReduceKind::Mean | ReduceKind::SumSq => 0.0,
+            ReduceKind::Min => f64::INFINITY,
+            ReduceKind::Max => f64::NEG_INFINITY,
+        }
+    }
+
+    /// Fold one element into an accumulator (f64 domain). `Min`/`Max` use
+    /// Rust's IEEE `minNum`/`maxNum` semantics: a NaN element is SKIPPED
+    /// (the non-NaN side wins), so NaN-bearing inputs still reduce to the
+    /// extremum of their finite values — deterministically, independent of
+    /// chunking (pinned by `rust/tests/reduce_props.rs`).
+    #[inline(always)]
+    pub fn fold(self, acc: f64, x: f64) -> f64 {
+        match self {
+            ReduceKind::Sum | ReduceKind::Mean => acc + x,
+            ReduceKind::SumSq => acc + x * x,
+            ReduceKind::Min => acc.min(x),
+            ReduceKind::Max => acc.max(x),
+        }
+    }
+
+    /// Combine two partial accumulators (the tree-combine step).
+    #[inline(always)]
+    pub fn combine(self, a: f64, b: f64) -> f64 {
+        match self {
+            ReduceKind::Sum | ReduceKind::Mean | ReduceKind::SumSq => a + b,
+            ReduceKind::Min => a.min(b),
+            ReduceKind::Max => a.max(b),
+        }
+    }
+
+    /// Turn the combined accumulator into the statistic (`Mean` divides by
+    /// the element count; `n == 0` yields `NaN`, loudly not-a-number).
+    #[inline]
+    pub fn finalize(self, acc: f64, n: usize) -> f64 {
+        match self {
+            ReduceKind::Mean => acc / n as f64,
+            _ => acc,
+        }
+    }
+}
+
+impl std::fmt::Display for ReduceKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Which axis the statistics fold over.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ReduceAxis {
+    /// One statistic over the entire `[batch, *shape]` tensor.
+    Full,
+    /// One statistic per packed-RGB channel: the lane is the global element
+    /// index modulo 3, the SAME lane rule every `ComputeC3`/`CvtColor` body
+    /// op uses — so per-channel statistics compose with lane-structured
+    /// bodies without a layout change.
+    PerChannel,
+}
+
+/// The reduce terminator of a pipeline: one statistic — optionally two
+/// folded in the very same pass (normalize pass 1 needs mean AND
+/// sum-of-squares from one read; the paper's `ReduceDPP` kernels likewise
+/// produce several statistics per pass) — over a [`ReduceAxis`].
+///
+/// Like every boundary op this is *metadata planners interrogate*
+/// ([`crate::ops::Pipeline::reduction`]), never a sig-token string; and like
+/// crop rects, nothing here is a runtime parameter — kinds and axis shape
+/// the generated fold, so they all participate in the
+/// [`Signature`](crate::ops::Signature).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ReduceSpec {
+    /// The first (or only) statistic.
+    pub kind: ReduceKind,
+    /// Optional second statistic folded in the same single pass.
+    pub extra: Option<ReduceKind>,
+    pub axis: ReduceAxis,
+}
+
+impl ReduceSpec {
+    /// One statistic over `axis`.
+    pub fn single(kind: ReduceKind, axis: ReduceAxis) -> ReduceSpec {
+        ReduceSpec { kind, extra: None, axis }
+    }
+
+    /// Two statistics folded in one pass over `axis`.
+    pub fn pair(kind: ReduceKind, extra: ReduceKind, axis: ReduceAxis) -> ReduceSpec {
+        ReduceSpec { kind, extra: Some(extra), axis }
+    }
+
+    /// Number of statistics this pass folds (1 or 2).
+    #[inline(always)]
+    pub fn stat_count(&self) -> usize {
+        1 + self.extra.is_some() as usize
+    }
+
+    /// Statistic `i` (`i < stat_count()`).
+    #[inline(always)]
+    pub fn stat(&self, i: usize) -> ReduceKind {
+        if i == 0 {
+            self.kind
+        } else {
+            self.extra.expect("stat index < stat_count")
+        }
+    }
+
+    /// Number of output lanes (1 for `Full`, 3 for `PerChannel`).
+    #[inline(always)]
+    pub fn lanes(&self) -> usize {
+        match self.axis {
+            ReduceAxis::Full => 1,
+            ReduceAxis::PerChannel => 3,
+        }
+    }
+
+    /// Logical output shape of the reduction (the batch dimension folds in:
+    /// statistics summarize the whole run). Layout is stat-major,
+    /// lane-minor: `[lanes]`, or `[2, lanes-collapsed]` for pairs —
+    /// concretely `[1]`, `[3]`, `[2]` or `[2, 3]`.
+    pub fn out_shape(&self) -> Vec<usize> {
+        match (self.extra.is_some(), self.axis) {
+            (false, ReduceAxis::Full) => vec![1],
+            (false, ReduceAxis::PerChannel) => vec![3],
+            (true, ReduceAxis::Full) => vec![2],
+            (true, ReduceAxis::PerChannel) => vec![2, 3],
+        }
+    }
+
+    /// Total output element count.
+    pub fn out_len(&self) -> usize {
+        self.stat_count() * self.lanes()
+    }
+
+    /// Canonical signature token: kinds and axis shape the generated fold,
+    /// so they distinguish plan-cache keys and HF streams.
+    pub fn sig_token(&self) -> String {
+        let stats = match self.extra {
+            Some(extra) => format!("{}+{}", self.kind, extra),
+            None => self.kind.to_string(),
+        };
+        match self.axis {
+            ReduceAxis::Full => format!("reduce[{stats}]"),
+            ReduceAxis::PerChannel => format!("reduce[{stats}@ch]"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fold_and_finalize_semantics() {
+        assert_eq!(ReduceKind::Sum.fold(1.0, 2.0), 3.0);
+        assert_eq!(ReduceKind::SumSq.fold(1.0, 3.0), 10.0);
+        assert_eq!(ReduceKind::Min.fold(2.0, -1.0), -1.0);
+        assert_eq!(ReduceKind::Max.fold(2.0, -1.0), 2.0);
+        assert_eq!(ReduceKind::Mean.finalize(10.0, 4), 2.5);
+        assert_eq!(ReduceKind::Sum.finalize(10.0, 4), 10.0);
+    }
+
+    #[test]
+    fn identities_cover_empty_reductions() {
+        assert_eq!(ReduceKind::Sum.identity(), 0.0);
+        assert_eq!(ReduceKind::Min.identity(), f64::INFINITY);
+        assert_eq!(ReduceKind::Max.identity(), f64::NEG_INFINITY);
+        assert!(ReduceKind::Mean.finalize(ReduceKind::Mean.identity(), 0).is_nan());
+    }
+
+    #[test]
+    fn nan_elements_are_skipped_by_min_max() {
+        // Rust f64::min/max return the non-NaN operand: folding a NaN is a
+        // no-op, in ANY order — the determinism contract relies on this
+        assert_eq!(ReduceKind::Max.fold(2.0, f64::NAN), 2.0);
+        assert_eq!(ReduceKind::Min.fold(2.0, f64::NAN), 2.0);
+        assert_eq!(ReduceKind::Max.fold(f64::NEG_INFINITY, f64::NAN), f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn spec_geometry() {
+        let s = ReduceSpec::single(ReduceKind::Mean, ReduceAxis::Full);
+        assert_eq!((s.stat_count(), s.lanes(), s.out_len()), (1, 1, 1));
+        assert_eq!(s.out_shape(), vec![1]);
+        assert_eq!(s.sig_token(), "reduce[mean]");
+
+        let p = ReduceSpec::pair(ReduceKind::Mean, ReduceKind::SumSq, ReduceAxis::PerChannel);
+        assert_eq!((p.stat_count(), p.lanes(), p.out_len()), (2, 3, 6));
+        assert_eq!(p.out_shape(), vec![2, 3]);
+        assert_eq!(p.stat(0), ReduceKind::Mean);
+        assert_eq!(p.stat(1), ReduceKind::SumSq);
+        assert_eq!(p.sig_token(), "reduce[mean+sumsq@ch]");
+
+        assert_eq!(
+            ReduceSpec::single(ReduceKind::Max, ReduceAxis::PerChannel).sig_token(),
+            "reduce[max@ch]"
+        );
+    }
+}

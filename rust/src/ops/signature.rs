@@ -130,6 +130,40 @@ mod tests {
     }
 
     #[test]
+    fn reduce_terminators_change_the_signature() {
+        use crate::ops::{MemOp, ReduceAxis, ReduceKind, ReduceSpec};
+        // a reduce-terminated chain never shares a plan-cache entry or HF
+        // stream with the dense map chain of the same body — and the two
+        // axes/kinds are distinct code shapes too
+        let mk = |spec| {
+            Pipeline::new(
+                vec![
+                    IOp::Mem(MemOp::Read { dtype: DType::U8 }),
+                    IOp::compute(Opcode::Mul, 1.0),
+                    IOp::Mem(MemOp::Reduce { spec }),
+                ],
+                vec![8, 8],
+                1,
+                DType::U8,
+                DType::F64,
+            )
+            .unwrap()
+        };
+        let mean = Signature::of(&mk(ReduceSpec::single(ReduceKind::Mean, ReduceAxis::Full)));
+        assert_eq!(mean.ops, "mul-reduce[mean]");
+        let per_ch =
+            Signature::of(&mk(ReduceSpec::single(ReduceKind::Mean, ReduceAxis::PerChannel)));
+        assert_eq!(per_ch.ops, "mul-reduce[mean@ch]");
+        assert_ne!(mean, per_ch);
+        let pair = Signature::of(&mk(ReduceSpec::pair(
+            ReduceKind::Mean,
+            ReduceKind::SumSq,
+            ReduceAxis::PerChannel,
+        )));
+        assert_eq!(pair.ops, "mul-reduce[mean+sumsq@ch]");
+    }
+
+    #[test]
     fn op_order_matters() {
         let p1 = Pipeline::from_opcodes(
             &[(Opcode::Mul, 1.0), (Opcode::Add, 1.0)],

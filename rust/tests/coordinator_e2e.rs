@@ -79,6 +79,71 @@ fn single_item_latency_path_works() {
 }
 
 #[test]
+fn param_divergent_requests_in_one_window_stay_correct() {
+    // the batcher groups by the param-agnostic stream key; a stacked launch
+    // binds ONE param set — divergent-param company must be served with ITS
+    // OWN params (per item), never silently with the head request's
+    let svc = Service::start(ServiceConfig {
+        artifact_dir: None,
+        queue_cap: 64,
+        policy: BatchPolicy { max_batch: 16, window: Duration::from_millis(20) },
+        engine: EngineSelect::HostFused,
+    });
+    let mk = |mul: f64| {
+        Chain::read::<U8>(&[10, 10]).map(Mul(mul)).cast::<F32>().write().into_pipeline()
+    };
+    let item = Tensor::from_u8(&vec![10u8; 100], &[1, 10, 10]);
+    // same signature (param-agnostic), different params, one batch window
+    let rx_a = svc.submit(mk(2.0), item.clone()).unwrap();
+    let rx_b = svc.submit(mk(5.0), item.clone()).unwrap();
+    let a = rx_a.recv().unwrap().unwrap();
+    let b = rx_b.recv().unwrap().unwrap();
+    assert_eq!(a.as_f32().unwrap()[0], 20.0, "head request served with its params");
+    assert_eq!(b.as_f32().unwrap()[0], 50.0, "divergent request served with ITS params");
+    let m = svc.metrics().unwrap();
+    assert_eq!(m.completed, 2);
+    assert_eq!(m.failed, 0);
+    svc.shutdown();
+}
+
+#[test]
+fn reduce_chains_are_servable_traffic() {
+    use fkl::ops::ReduceKind;
+    // reduce-terminated chains serve through the coordinator like any other
+    // stream (per item — statistics summarize one request), and the serve
+    // lands in the new reduce tier of the planner metrics
+    let svc = Service::start(ServiceConfig {
+        artifact_dir: None,
+        queue_cap: 64,
+        policy: BatchPolicy { max_batch: 8, window: Duration::from_micros(200) },
+        engine: EngineSelect::HostFused,
+    });
+    let p = Chain::read::<U8>(&[40, 30])
+        .map(Mul(0.5))
+        .reduce(ReduceKind::Mean)
+        .into_pipeline();
+    let mut rng = Rng::new(5);
+    let mut inputs = Vec::new();
+    let mut rxs = Vec::new();
+    for _ in 0..6 {
+        let item = Tensor::from_u8(&rng.vec_u8(1200), &[1, 40, 30]);
+        inputs.push(item.clone());
+        rxs.push(svc.submit(p.clone(), item).unwrap());
+    }
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let out = rx.recv().expect("service alive").expect("request ok");
+        assert_eq!(out.shape(), &[1], "request {i}");
+        let want = fkl::hostref::run_pipeline(&p, &inputs[i]);
+        assert_eq!(out, want, "request {i}: bit-equal statistics");
+    }
+    let m = svc.metrics().unwrap();
+    assert_eq!(m.completed, 6);
+    assert!(m.planner.reduction >= 6, "reduce serves visible in metrics");
+    assert_eq!(m.failed, 0);
+    svc.shutdown();
+}
+
+#[test]
 fn backpressure_rejects_when_full() {
     // a tiny queue with a long window: most submissions must fail fast
     // rather than block (the paper's production pipelines drop frames)

@@ -254,6 +254,57 @@ fn structured_boundaries_are_served_by_the_host_tier() {
 }
 
 #[test]
+fn reduce_chains_are_refused_by_dense_only_engines_and_served_by_the_host_tier() {
+    use fkl::exec::{Engine, FusedEngine, GraphEngine, HostFusedEngine, UnfusedEngine};
+    use fkl::ops::ReduceKind;
+    // a reduce-terminated chain: dense per-op engines cannot accumulate
+    // anything and must refuse with typed errors; the artifact planner
+    // refuses with the dedicated PlanError::Reduction; and every path that
+    // reaches the host engine SERVES it — fold-while-reading, bit-equal to
+    // the materializing oracle
+    let p = fkl::chain::Chain::read::<fkl::chain::U8>(&[6, 4])
+        .map(fkl::chain::Mul(0.5))
+        .reduce(ReduceKind::Mean)
+        .into_pipeline();
+    let x = Tensor::from_u8(&(0..24).collect::<Vec<u8>>(), &[1, 6, 4]);
+    let want = fkl::hostref::run_pipeline(&p, &x);
+
+    // dense-only per-op engines: loud, typed refusal naming the terminator
+    let unfused = UnfusedEngine::new(empty_registry());
+    let err = unfused.run(&p, &x).unwrap_err();
+    let t = err.downcast_ref::<fkl::exec::UnsupportedOp>().expect("typed refusal");
+    assert_eq!(t.engine, "unfused");
+    assert_eq!(t.token, "reduce[mean]");
+    let graph = GraphEngine::new(empty_registry());
+    let err = graph.run(&p, &x).unwrap_err();
+    let t = err.downcast_ref::<fkl::exec::UnsupportedOp>().expect("typed refusal");
+    assert_eq!(t.engine, "graph");
+
+    // the artifact planner refuses with the dedicated typed variant
+    let err = fkl::fusion::plan_pipeline(&p, &empty_registry(), "pallas").unwrap_err();
+    assert!(
+        matches!(err, fkl::fusion::PlanError::Reduction(ref tok) if tok == "reduce[mean]"),
+        "{err}"
+    );
+
+    // the host engine serves natively ...
+    let host = HostFusedEngine::with_threads(1);
+    let got = host.run(&p, &x).expect("host tier folds while reading");
+    assert_eq!(got, want);
+    assert_eq!(host.reduce_runs(), 1);
+
+    // ... and the fused front door detects (typed, counted) and re-routes
+    let fused = FusedEngine::new(empty_registry());
+    let got = fused.run(&p, &x).expect("fused front door re-routes to the host tier");
+    assert_eq!(got, want);
+    let st = fused.planner_stats();
+    assert_eq!(st.reduction, 1, "the detection lands in the new reduce tier");
+    assert_eq!(st.host, 1, "the serve lands in the host tier");
+    assert!(!fused.last_was_fallback(), "fold-while-reading is fused, not per-op");
+    assert_eq!(fused.last_launches(), 1);
+}
+
+#[test]
 fn host_engine_rejects_mismatched_inputs_loudly() {
     // the host fused backend applies the same fail-loudly contract: a dtype
     // mismatch is an error reply, never a silent cast, and the service keeps

@@ -1,0 +1,211 @@
+//! Property tests for the fused reduction tier: determinism and
+//! oracle-equality of fold-while-reading, randomized over dtypes, kinds,
+//! axes, shapes and thread counts — pure host code, runs everywhere.
+//!
+//! Contract being enforced (the reduction half of the numerics story):
+//! * every reduce pass accumulates in f64 per fixed-size block and combines
+//!   partials in a fixed tree order, so results are BIT-equal to the
+//!   materializing `hostref::run_pipeline` oracle on all 5 dtypes;
+//! * the thread count (1/2/8) never changes a single bit — chunking is a
+//!   property of the data, not the scheduler;
+//! * empty and 1-element reductions finalize to the documented identities;
+//! * NaN-bearing `Min`/`Max` inputs reduce to the extremum of the finite
+//!   values (IEEE minNum/maxNum fold), and all-NaN inputs finalize to the
+//!   fold identity — deterministically.
+
+use fkl::chain::{Chain, ComputeOp};
+use fkl::exec::{Engine, HostFusedEngine};
+use fkl::hostref;
+use fkl::ops::{Opcode, Pipeline, ReduceAxis, ReduceKind, ReduceSpec, ALL_REDUCE_KINDS};
+use fkl::proplite::{forall, Rng};
+use fkl::tensor::{DType, Tensor};
+
+const DTYPES: [DType; 5] = [DType::U8, DType::U16, DType::I32, DType::F32, DType::F64];
+
+/// Bit-exact tensor comparison that treats equal NaN bit patterns as equal
+/// (plain `==` on f64 tensors fails on NaN statistics like the empty Mean).
+fn assert_bits_eq(got: &Tensor, want: &Tensor, ctx: &str) {
+    assert_eq!(got.shape(), want.shape(), "{ctx}: shape");
+    assert_eq!(got.dtype(), want.dtype(), "{ctx}: dtype");
+    for (i, (a, b)) in got.to_f64_vec().iter().zip(want.to_f64_vec()).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "{ctx}: lane {i}: {a} vs {b}");
+    }
+}
+
+/// Deterministic random tensor in a range where every chain stays finite.
+fn rand_tensor(rng: &mut Rng, shape: &[usize], dt: DType) -> Tensor {
+    let n: usize = shape.iter().product();
+    let vals: Vec<f64> = (0..n).map(|_| rng.f64(0.0, 200.0)).collect();
+    Tensor::from_f64_cast(&vals, shape, dt)
+}
+
+fn reduce_pipe(
+    body: &[(Opcode, f64)],
+    shape: &[usize],
+    batch: usize,
+    dtin: DType,
+    spec: ReduceSpec,
+) -> Pipeline {
+    let stages: Vec<ComputeOp> = body.iter().map(|&(op, p)| ComputeOp::scalar(op, p)).collect();
+    fkl::chain::build_erased_reduce(&stages, shape, batch, dtin, spec)
+}
+
+#[test]
+fn prop_reduce_is_bit_equal_to_the_oracle_across_dtypes_and_threads() {
+    forall(60, |rng| {
+        let dt = *rng.pick(&DTYPES);
+        let kind = *rng.pick(&ALL_REDUCE_KINDS);
+        let axis = if rng.bool() { ReduceAxis::Full } else { ReduceAxis::PerChannel };
+        // sizes that cross REDUCE_BLOCK boundaries sometimes (3072 elems)
+        let n = rng.usize(1, 5000);
+        let batch = rng.usize(1, 4);
+        let mut full = vec![batch];
+        full.push(n);
+        let x = rand_tensor(rng, &full, dt);
+        let p = reduce_pipe(
+            &[(Opcode::Mul, 0.5), (Opcode::Add, 1.0)],
+            &[n],
+            batch,
+            dt,
+            ReduceSpec::single(kind, axis),
+        );
+        let want = hostref::run_pipeline(&p, &x);
+        for threads in [1usize, 2, 8] {
+            let eng = HostFusedEngine::with_threads(threads);
+            let got = eng.run(&p, &x).unwrap();
+            assert_bits_eq(&got, &want, &format!("{dt} {kind:?} {axis:?} n={n} t{threads}"));
+        }
+    });
+}
+
+#[test]
+fn prop_pair_reductions_match_their_singles() {
+    forall(40, |rng| {
+        let dt = *rng.pick(&DTYPES);
+        let a = *rng.pick(&ALL_REDUCE_KINDS);
+        let b = *rng.pick(&ALL_REDUCE_KINDS);
+        let axis = if rng.bool() { ReduceAxis::Full } else { ReduceAxis::PerChannel };
+        let n = rng.usize(1, 4000);
+        let x = rand_tensor(rng, &[1, n], dt);
+        let eng = HostFusedEngine::with_threads(rng.usize(1, 4));
+        let pair = eng
+            .run(&reduce_pipe(&[], &[n], 1, dt, ReduceSpec::pair(a, b, axis)), &x)
+            .unwrap();
+        let lone_a = eng
+            .run(&reduce_pipe(&[], &[n], 1, dt, ReduceSpec::single(a, axis)), &x)
+            .unwrap();
+        let lone_b = eng
+            .run(&reduce_pipe(&[], &[n], 1, dt, ReduceSpec::single(b, axis)), &x)
+            .unwrap();
+        let lanes = lone_a.len();
+        let (pv, av, bv) = (pair.to_f64_vec(), lone_a.to_f64_vec(), lone_b.to_f64_vec());
+        for lane in 0..lanes {
+            assert_eq!(pv[lane].to_bits(), av[lane].to_bits(), "{a:?} lane {lane}");
+            assert_eq!(pv[lanes + lane].to_bits(), bv[lane].to_bits(), "{b:?} lane {lane}");
+        }
+    });
+}
+
+#[test]
+fn prop_block_boundaries_are_exact() {
+    // n pinned around the block size: partial-block tails and multi-block
+    // trees must agree with the oracle bitwise at every boundary shape
+    let block = 3072usize; // ops::kernel::REDUCE_BLOCK
+    let mut rng = Rng::new(99);
+    for n in [1, 2, 3, block - 1, block, block + 1, 2 * block, 2 * block + 5, 3 * block + 1] {
+        let x = rand_tensor(&mut rng, &[1, n], DType::F64);
+        for axis in [ReduceAxis::Full, ReduceAxis::PerChannel] {
+            let spec = ReduceSpec::single(ReduceKind::Sum, axis);
+            let p = reduce_pipe(&[], &[n], 1, DType::F64, spec);
+            let want = hostref::run_pipeline(&p, &x);
+            for threads in [1usize, 2, 8] {
+                let got = HostFusedEngine::with_threads(threads).run(&p, &x).unwrap();
+                assert_bits_eq(&got, &want, &format!("n={n} {axis:?} t{threads}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn empty_and_single_element_reductions() {
+    let eng = HostFusedEngine::with_threads(2);
+    for kind in ALL_REDUCE_KINDS {
+        // empty: the fold identity (Mean of nothing is NaN — loudly)
+        let p = reduce_pipe(&[], &[0], 1, DType::F32, ReduceSpec::single(kind, ReduceAxis::Full));
+        let empty = Tensor::zeros(DType::F32, &[1, 0]);
+        let got = eng.run(&p, &empty).unwrap();
+        assert_bits_eq(&got, &hostref::run_pipeline(&p, &empty), &format!("empty {kind:?}"));
+        let v = got.as_f64().unwrap()[0];
+        match kind {
+            ReduceKind::Sum | ReduceKind::SumSq => assert_eq!(v, 0.0),
+            ReduceKind::Min => assert_eq!(v, f64::INFINITY),
+            ReduceKind::Max => assert_eq!(v, f64::NEG_INFINITY),
+            ReduceKind::Mean => assert!(v.is_nan()),
+        }
+
+        // 1 element: every statistic of [x] is x (or x² for SumSq)
+        let p1 = reduce_pipe(&[], &[1], 1, DType::F32, ReduceSpec::single(kind, ReduceAxis::Full));
+        let one = Tensor::from_f32(&[3.0], &[1, 1]);
+        let got = eng.run(&p1, &one).unwrap();
+        let want = if kind == ReduceKind::SumSq { 9.0 } else { 3.0 };
+        assert_eq!(got.as_f64().unwrap(), &[want], "{kind:?}");
+    }
+}
+
+#[test]
+fn nan_bearing_min_max_skip_nans_deterministically() {
+    let eng1 = HostFusedEngine::with_threads(1);
+    let eng8 = HostFusedEngine::with_threads(8);
+    // NaNs scattered among finite values: the fold skips them (IEEE
+    // minNum/maxNum), so the extremum of the finite values wins
+    let vals = [f32::NAN, 2.0, -7.5, f32::NAN, 11.25, 0.0, f32::NAN, -1.0];
+    let x = Tensor::from_f32(&vals, &[1, 8]);
+    for (kind, want) in [(ReduceKind::Max, 11.25), (ReduceKind::Min, -7.5)] {
+        let p = reduce_pipe(&[], &[8], 1, DType::F32, ReduceSpec::single(kind, ReduceAxis::Full));
+        let got = eng1.run(&p, &x).unwrap();
+        assert_eq!(got.as_f64().unwrap(), &[want], "{kind:?}");
+        assert_bits_eq(&got, &eng8.run(&p, &x).unwrap(), &format!("{kind:?} threads"));
+        assert_bits_eq(&got, &hostref::run_pipeline(&p, &x), &format!("{kind:?} oracle"));
+    }
+    // ... while Sum/Mean propagate NaN (and still agree with the oracle)
+    let sum_spec = ReduceSpec::single(ReduceKind::Sum, ReduceAxis::Full);
+    let p = reduce_pipe(&[], &[8], 1, DType::F32, sum_spec);
+    let got = eng1.run(&p, &x).unwrap();
+    assert!(got.as_f64().unwrap()[0].is_nan());
+    assert_bits_eq(&got, &hostref::run_pipeline(&p, &x), "sum nan");
+
+    // all-NaN Max finalizes to the fold identity, bit-for-bit
+    let all_nan = Tensor::from_f32(&[f32::NAN; 4], &[1, 4]);
+    let max_spec = ReduceSpec::single(ReduceKind::Max, ReduceAxis::Full);
+    let p = reduce_pipe(&[], &[4], 1, DType::F32, max_spec);
+    let got = eng1.run(&p, &all_nan).unwrap();
+    assert_eq!(got.as_f64().unwrap(), &[f64::NEG_INFINITY]);
+    assert_bits_eq(&got, &hostref::run_pipeline(&p, &all_nan), "all-nan max");
+}
+
+#[test]
+fn prop_lane_structured_bodies_compose_with_per_channel_stats() {
+    // cvtcolor + per-channel math BEFORE a per-channel reduction: the lane
+    // rule (global index % 3) is shared between body and statistics
+    forall(40, |rng| {
+        let h = rng.usize(1, 12);
+        let w = rng.usize(1, 12);
+        let batch = rng.usize(1, 3);
+        let x = rand_tensor(rng, &[batch, h, w, 3], DType::U8);
+        let typed = Chain::read::<fkl::chain::U8>(&[h, w, 3])
+            .batch(batch)
+            .map(fkl::chain::CvtColor)
+            .map(fkl::chain::MulC3([0.5, 0.25, 2.0]))
+            .reduce_pair_per_channel(ReduceKind::Mean, ReduceKind::SumSq);
+        let p = typed.pipeline();
+        let want = hostref::run_pipeline(p, &x);
+        for threads in [1usize, 2, 8] {
+            let eng = HostFusedEngine::with_threads(threads);
+            assert_bits_eq(
+                &eng.run(p, &x).unwrap(),
+                &want,
+                &format!("{h}x{w} b{batch} t{threads}"),
+            );
+        }
+    });
+}
