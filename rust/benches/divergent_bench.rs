@@ -1,0 +1,221 @@
+//! Divergent-HF benchmark: a MIXED 1080p serving window — different crops,
+//! resizes, normalize-map chains and a reduce, no stackable company — per
+//! item vs ONE divergent pass. NO artifacts required, runs on any machine.
+//!
+//! The workload is the paper's AutomaticTV shape: many small regions of
+//! interest cut from a shared 1080p frame, each through its OWN pipeline.
+//! Every item is below the engine's per-run threading threshold, so
+//! per-item serving is inherently serial — exactly the traffic the
+//! identical-signature HF tier cannot help with (nothing stacks) and the
+//! divergent tier exists for: the window chunks across worker lanes and
+//! the whole machine fills with independent fused lanes.
+//!
+//! Writes `BENCH_divergent.json` at the repo root and enforces the
+//! acceptance bar: divergent >= 1.5x per-item serving at window 8.
+//!
+//! ```sh
+//! cargo bench --bench divergent_bench            # full sweep
+//! FKL_BENCH_FAST=1 cargo bench --bench divergent_bench   # trimmed
+//! FKL_BENCH_SOFT=1 ...                           # downgrade a miss to a warning
+//! ```
+
+use std::time::Duration;
+
+use fkl::bench::time_fn;
+use fkl::chain::{Add, Chain, CvtColor, DivC3, Mul, MulC3, SubC3, F32, U8};
+use fkl::exec::{Engine, HostFusedEngine};
+use fkl::jsonlite::Value;
+use fkl::ops::{Pipeline, ReduceKind};
+use fkl::proplite::Rng;
+use fkl::tensor::{make_frame, Rect, Tensor};
+
+const FRAME_H: usize = 1080;
+const FRAME_W: usize = 1920;
+
+/// The mixed window: four signature families cycled with per-index params
+/// and rects (the crop family shares a signature but never params — rects
+/// are runtime parameters — so nothing in the window stacks).
+fn window(n: usize, frame: &Tensor, rng: &mut Rng) -> Vec<(Pipeline, Tensor)> {
+    (0..n)
+        .map(|i| {
+            let x = (17 * i % (FRAME_W - 200)) as i32;
+            let y = (29 * i % (FRAME_H - 200)) as i32;
+            match i % 4 {
+                0 => {
+                    // crop -> scalar math -> f32
+                    let p = Chain::read_crop::<U8>(Rect::new(x, y, 96, 96))
+                        .map(Mul(1.0 / 255.0))
+                        .map(Add(0.01 * i as f64))
+                        .cast::<F32>()
+                        .write()
+                        .into_pipeline();
+                    (p, frame.clone())
+                }
+                1 => {
+                    // resize -> preproc chain -> planar f32 (the flagship)
+                    let p = Chain::read_resize::<U8>(Rect::new(x, y, 180, 120), 64, 64)
+                        .map(CvtColor)
+                        .map(MulC3([1.0 / 255.0; 3]))
+                        .map(SubC3([0.485, 0.456, 0.406]))
+                        .map(DivC3([0.229, 0.224, 0.225]))
+                        .cast::<F32>()
+                        .write_split()
+                        .into_pipeline();
+                    (p, frame.clone())
+                }
+                2 => {
+                    // dense normalize-map pass over a private tile
+                    let p = Chain::read::<U8>(&[64, 64, 3])
+                        .map(Mul(1.0 / 255.0))
+                        .map(SubC3([0.5, 0.4, 0.3]))
+                        .map(DivC3([0.2, 0.25, 0.3]))
+                        .cast::<F32>()
+                        .write()
+                        .into_pipeline();
+                    (p, Tensor::from_u8(&rng.vec_u8(64 * 64 * 3), &[1, 64, 64, 3]))
+                }
+                _ => {
+                    // crop -> per-channel stats in the same sweep
+                    let p = Chain::read_crop::<U8>(Rect::new(x, y, 96, 96))
+                        .map(Mul(1.0 / 255.0))
+                        .reduce_pair_per_channel(ReduceKind::Mean, ReduceKind::SumSq)
+                        .into_pipeline();
+                    (p, frame.clone())
+                }
+            }
+        })
+        .collect()
+}
+
+struct Point {
+    label: String,
+    window: usize,
+    per_item_ms: f64,
+    divergent_ms: f64,
+    lanes: usize,
+    occupancy: f64,
+}
+
+impl Point {
+    fn speedup(&self) -> f64 {
+        self.per_item_ms / self.divergent_ms
+    }
+
+    fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("label", Value::str(&self.label)),
+            ("window", Value::num(self.window as f64)),
+            ("per_item_ms", Value::num(self.per_item_ms)),
+            ("divergent_ms", Value::num(self.divergent_ms)),
+            ("speedup_divergent", Value::num(self.speedup())),
+            ("lanes", Value::num(self.lanes as f64)),
+            ("occupancy", Value::num(self.occupancy)),
+        ])
+    }
+}
+
+fn measure(eng: &HostFusedEngine, n: usize, reps: usize, budget: Duration) -> Point {
+    let mut rng = Rng::new(1080 + n as u64);
+    let frame = make_frame(FRAME_H, FRAME_W, 7);
+    let reqs = window(n, &frame, &mut rng);
+    let refs: Vec<(&Pipeline, &Tensor)> = reqs.iter().map(|(p, t)| (p, t)).collect();
+
+    // correctness guard: a benchmark of a wrong answer is meaningless — the
+    // divergent pass must be BIT-equal to per-item serving on every item
+    let out = eng.run_divergent(&refs);
+    let (lanes, occupancy) = (out.lanes, out.occupancy());
+    for (i, ((p, t), res)) in refs.iter().zip(&out.results).enumerate() {
+        let alone = eng.run(p, t).expect("per-item serving works");
+        assert_eq!(res.as_ref().unwrap(), &alone, "w{n} item {i}: divergent != per-item");
+    }
+
+    let per = time_fn(reps, budget, || {
+        for (p, t) in &refs {
+            eng.run(p, t).unwrap();
+        }
+    });
+    let div = time_fn(reps, budget, || {
+        let out = eng.run_divergent(&refs);
+        assert!(out.results.iter().all(|r| r.is_ok()));
+    });
+    let pt = Point {
+        label: format!("mixed1080p/w{n}"),
+        window: n,
+        per_item_ms: per.mean_s * 1e3,
+        divergent_ms: div.mean_s * 1e3,
+        lanes,
+        occupancy,
+    };
+    println!(
+        "{:18} | per-item {:>8.3} ms | divergent {:>8.3} ms | {:>5.2}x | lanes {} occ {:.2}",
+        pt.label,
+        pt.per_item_ms,
+        pt.divergent_ms,
+        pt.speedup(),
+        pt.lanes,
+        pt.occupancy
+    );
+    pt
+}
+
+fn main() {
+    let fast = std::env::var("FKL_BENCH_FAST").is_ok();
+    let (reps, budget) =
+        if fast { (5, Duration::from_millis(900)) } else { (12, Duration::from_secs(3)) };
+    let eng = HostFusedEngine::new();
+    println!(
+        "# divergent_bench — mixed 1080p window (crop/resize/normalize/reduce variants), \
+         {} worker threads",
+        eng.threads()
+    );
+
+    let windows: &[usize] = if fast { &[2, 8] } else { &[2, 4, 8, 16] };
+    let points: Vec<Point> =
+        windows.iter().map(|&n| measure(&eng, n, reps, budget)).collect();
+
+    let accept = points.iter().find(|p| p.window == 8).expect("sweep includes window 8");
+    let (accept_label, accept_speedup) = (accept.label.clone(), accept.speedup());
+    let accept_pass = accept_speedup >= 1.5;
+    println!(
+        "\nacceptance: {accept_label} -> {accept_speedup:.2}x (target >= 1.5x): {}",
+        if accept_pass { "PASS" } else { "FAIL" }
+    );
+
+    let report = Value::obj(vec![
+        ("bench", Value::str("divergent")),
+        ("frame", Value::str("1080x1920x3 u8 shared frame, mixed pipeline window")),
+        ("fast_mode", Value::Bool(fast)),
+        ("threads", Value::num(eng.threads() as f64)),
+        (
+            "acceptance",
+            Value::obj(vec![
+                (
+                    "criterion",
+                    Value::str("divergent-HF >= 1.5x per-item serving, mixed window 8"),
+                ),
+                ("point", Value::str(&accept_label)),
+                ("speedup", Value::num(accept_speedup)),
+                ("pass", Value::Bool(accept_pass)),
+            ]),
+        ),
+        ("series", Value::Arr(points.iter().map(Point::to_json).collect())),
+    ]);
+
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|p| p.join("BENCH_divergent.json"))
+        .unwrap_or_else(|| "BENCH_divergent.json".into());
+    std::fs::write(&root, report.to_json()).expect("write BENCH_divergent.json");
+    println!("wrote {}", root.display());
+
+    // FKL_BENCH_SOFT turns the acceptance gate into a warning — wall-clock
+    // asserts on shared CI runners (often 1-2 cores) are a flake source;
+    // local/bench runs keep the hard gate
+    if !accept_pass && std::env::var("FKL_BENCH_SOFT").is_ok() {
+        eprintln!(
+            "WARNING: acceptance criterion not met: {accept_speedup:.2}x < 1.5x (soft mode)"
+        );
+        return;
+    }
+    assert!(accept_pass, "acceptance criterion not met: {accept_speedup:.2}x < 1.5x");
+}

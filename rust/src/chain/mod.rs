@@ -736,6 +736,30 @@ pub fn build_erased_reduce(
 }
 
 // ---------------------------------------------------------------------------
+// the divergent window front door
+
+/// Run a WINDOW of erased pipelines — mixed params, signatures and chain
+/// lengths; dense, structured and reduce terminators alike — as ONE
+/// divergent-HF pass on the host fused engine
+/// ([`HostFusedEngine::run_divergent`](crate::exec::HostFusedEngine::run_divergent)):
+/// items are weighted by element count, chunked across worker lanes, and
+/// each lane dispatches its items' monomorphized loops back-to-back.
+/// Results come back in window order and are BIT-EQUAL to running each
+/// `(pipeline, input)` alone; the first failing item fails the call,
+/// naming its window index.
+pub fn run_many(
+    engine: &HostFusedEngine,
+    window: &[(&Pipeline, &Tensor)],
+) -> Result<Vec<Tensor>> {
+    let out = engine.run_divergent(window);
+    out.results
+        .into_iter()
+        .enumerate()
+        .map(|(i, r)| r.with_context(|| format!("window item {i}")))
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
 // the normalize preset (multi-pass fused pipelines)
 
 /// The `(x − μ) / σ` stage pair for per-lane statistics — the ONE definition
@@ -1028,6 +1052,32 @@ mod tests {
         assert_eq!(eng.reduce_runs(), 1);
         // the dynamic entry shares the loops bitwise
         assert_eq!(eng.run(typed.pipeline(), &input).unwrap(), got);
+    }
+
+    #[test]
+    fn run_many_serves_a_mixed_window_bit_equal_to_per_item() {
+        use crate::ops::ReduceKind;
+        use crate::tensor::{make_frame, Rect};
+        let dense = Chain::read::<U8>(&[5, 6]).map(Mul(2.0)).cast::<F32>().write().into_pipeline();
+        let structured =
+            Chain::read_crop::<U8>(Rect::new(1, 2, 6, 4)).map(Mul(0.5)).write().into_pipeline();
+        let reduce =
+            Chain::read::<U8>(&[5, 6]).map(Mul(0.25)).reduce(ReduceKind::Mean).into_pipeline();
+        let item = Tensor::from_u8(&(0..30).collect::<Vec<u8>>(), &[1, 5, 6]);
+        let frame = make_frame(12, 16, 3);
+        let eng = HostFusedEngine::with_threads(2);
+        let window: Vec<(&Pipeline, &Tensor)> =
+            vec![(&dense, &item), (&structured, &frame), (&reduce, &item)];
+        let got = run_many(&eng, &window).expect("mixed window serves");
+        assert_eq!(got.len(), 3);
+        for (i, ((p, t), out)) in window.iter().zip(&got).enumerate() {
+            assert_eq!(out, &crate::hostref::run_pipeline(p, t), "item {i}");
+        }
+        assert_eq!(eng.divergent_runs(), 1, "one pass for the whole window");
+        // a failing item names its window index
+        let bad = Tensor::from_f32(&[0.0; 30], &[1, 5, 6]);
+        let err = run_many(&eng, &[(&dense, &item), (&dense, &bad)]).unwrap_err();
+        assert!(format!("{err:#}").contains("window item 1"), "{err:#}");
     }
 
     #[test]

@@ -20,6 +20,16 @@ pub struct Metrics {
     /// — counted separately so VF regressions show up in serving dashboards
     /// instead of hiding inside `launches`.
     pub unfused_fallbacks: u64,
+    /// Windows served by the divergent-HF tier (mixed pipelines, one pass).
+    pub divergent_windows: u64,
+    /// Requests those windows carried.
+    pub divergent_items: u64,
+    /// Useful elements divergent passes touched.
+    pub divergent_work_elems: u64,
+    /// Idle weight of divergent passes: every lane runs as long as the
+    /// heaviest, lighter lanes idle for the difference — the mixed-shape
+    /// analog of `padded_planes`.
+    pub divergent_padded_elems: u64,
     /// Per-tier serve counts copied from the engine (HF/VF coverage).
     pub planner: PlannerStats,
 }
@@ -43,6 +53,10 @@ impl Metrics {
             batched_items: 0,
             padded_planes: 0,
             unfused_fallbacks: 0,
+            divergent_windows: 0,
+            divergent_items: 0,
+            divergent_work_elems: 0,
+            divergent_padded_elems: 0,
             planner: PlannerStats::default(),
         }
     }
@@ -69,6 +83,10 @@ impl Metrics {
             batched_items: self.batched_items,
             padded_planes: self.padded_planes,
             unfused_fallbacks: self.unfused_fallbacks,
+            divergent_windows: self.divergent_windows,
+            divergent_items: self.divergent_items,
+            divergent_work_elems: self.divergent_work_elems,
+            divergent_padded_elems: self.divergent_padded_elems,
             planner: self.planner.clone(),
             latency: LatencyStats::from_sorted(&lat),
         }
@@ -114,6 +132,10 @@ pub struct MetricsSnapshot {
     pub batched_items: u64,
     pub padded_planes: u64,
     pub unfused_fallbacks: u64,
+    pub divergent_windows: u64,
+    pub divergent_items: u64,
+    pub divergent_work_elems: u64,
+    pub divergent_padded_elems: u64,
     pub planner: PlannerStats,
     pub latency: LatencyStats,
 }
@@ -136,6 +158,22 @@ impl MetricsSnapshot {
         } else {
             self.planner.fused_total() as f64 / total as f64
         }
+    }
+
+    /// Mean requests per divergent window — the achieved divergent-HF width.
+    pub fn mean_divergent_window(&self) -> f64 {
+        if self.divergent_windows == 0 {
+            0.0
+        } else {
+            self.divergent_items as f64 / self.divergent_windows as f64
+        }
+    }
+
+    /// Occupancy of the divergent-HF tier, 0..=1: useful work over total
+    /// lane time (1.0 when no divergent window has run) — the shared
+    /// [`crate::fusion::occupancy_ratio`] rule.
+    pub fn divergent_occupancy(&self) -> f64 {
+        crate::fusion::occupancy_ratio(self.divergent_work_elems, self.divergent_padded_elems)
     }
 }
 
@@ -177,6 +215,23 @@ mod tests {
         m.launches = 4;
         m.batched_items = 100;
         assert_eq!(m.snapshot().mean_batch(), 25.0);
+    }
+
+    #[test]
+    fn divergent_tier_metrics_surface_in_snapshot() {
+        let mut m = Metrics::default();
+        m.divergent_windows = 2;
+        m.divergent_items = 9;
+        m.divergent_work_elems = 900;
+        m.divergent_padded_elems = 100;
+        let s = m.snapshot();
+        assert_eq!((s.divergent_windows, s.divergent_items), (2, 9));
+        assert_eq!(s.mean_divergent_window(), 4.5);
+        assert!((s.divergent_occupancy() - 0.9).abs() < 1e-12);
+        // nothing divergent yet: occupancy defaults to 1, width to 0
+        let empty = Metrics::default().snapshot();
+        assert_eq!(empty.divergent_occupancy(), 1.0);
+        assert_eq!(empty.mean_divergent_window(), 0.0);
     }
 
     #[test]

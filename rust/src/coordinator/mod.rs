@@ -4,7 +4,10 @@
 //! from live video through fused kernels. This module is that shape of
 //! system: clients submit single-item pipeline requests; a dynamic batcher
 //! groups compatible requests (same stream key = same generated code) within
-//! a small window and executes them as ONE horizontally-fused launch on the
+//! a small window and the scheduler serves each window through a three-tier
+//! ladder — identical requests stack into ONE horizontally-fused launch,
+//! the mixed remainder (different params, signatures, chain lengths) shares
+//! ONE divergent-HF pass, and a lone leftover serves per item — on the
 //! service thread that owns the PJRT client.
 //!
 //! Design constraints it encodes:

@@ -7,10 +7,13 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::coordinator::{BatchPolicy, Batcher, Metrics, MetricsSnapshot, PendingRequest};
-use crate::exec::{slice_batch, stack_batch, Engine, FusedEngine, HostFusedEngine};
+use crate::exec::{slice_batch, stack_batch, DivergentOutcome, Engine, FusedEngine, HostFusedEngine};
 use crate::fusion::{hfusion, PlannerStats};
 use crate::ops::Pipeline;
 use crate::tensor::Tensor;
+
+/// One queued request as the service thread sees it.
+type Req = PendingRequest<SyncSender<Result<Tensor, String>>>;
 
 /// Which execution backend the service thread builds — the selection policy
 /// now lives in [`crate::exec`] and is shared with [`crate::cv::Context`],
@@ -78,7 +81,11 @@ impl Service {
     /// a typed chain ([`crate::chain::TypedPipeline`]) — the coordinator is
     /// a chain front door like `cv`/`npp`. Dense pipelines take
     /// `[1, *shape]` items; structured chains (crop/resize reads) take the
-    /// shared `[fh, fw, 3]` FRAME as the item and serve per request.
+    /// shared `[fh, fw, 3]` FRAME as the item. The scheduler auto-tiers
+    /// every window: identical requests stack into one HF launch, the
+    /// mixed remainder (different params, signatures, chain lengths —
+    /// structured and reduce streams included) shares ONE divergent-HF
+    /// pass, and a lone leftover serves per item.
     pub fn submit(
         &self,
         pipeline: impl Into<Pipeline>,
@@ -171,6 +178,15 @@ impl Backend {
         }
     }
 
+    /// Serve a mixed window in one divergent-HF pass: natively on the host
+    /// backend, detected-and-re-routed on the XLA front door.
+    fn run_many(&self, window: &[(&Pipeline, &Tensor)]) -> DivergentOutcome {
+        match self {
+            Backend::Xla { engine, .. } => engine.run_many(window),
+            Backend::Host { engine, .. } => engine.run_divergent(window),
+        }
+    }
+
     fn planner_stats(&self) -> PlannerStats {
         match self {
             Backend::Xla { engine, .. } => engine.planner_stats(),
@@ -178,6 +194,7 @@ impl Backend {
                 host: engine.runs(),
                 structured: engine.structured_runs(),
                 reduction: engine.reduce_runs(),
+                divergent: engine.divergent_runs(),
                 ..PlannerStats::default()
             },
         }
@@ -265,10 +282,17 @@ fn service_loop(cfg: ServiceConfig, rx: Receiver<Msg>) {
             }
         }
 
-        // 2. launch every ready group
+        // 2. launch: collect EVERY ready group into one scheduling window —
+        // identical pipelines stack per group (tier 1), and the signature/
+        // param-divergent remainder of the WHOLE window shares one
+        // divergent-HF pass (tier 2) instead of degrading per item
         let now = Instant::now();
+        let mut groups = Vec::new();
         while let Some(group) = batcher.pop_ready(now) {
-            execute_group(group, &backend, &mut metrics);
+            groups.push(group);
+        }
+        if !groups.is_empty() {
+            serve_window(groups, &backend, &mut metrics);
         }
     }
 }
@@ -283,8 +307,9 @@ fn flush(
     backend: &Backend,
     metrics: &mut Metrics,
 ) {
-    for group in batcher.drain_all() {
-        execute_group(group, backend, metrics);
+    let groups = batcher.drain_all();
+    if !groups.is_empty() {
+        serve_window(groups, backend, metrics);
     }
 }
 
@@ -295,8 +320,29 @@ fn observe_launch(metrics: &mut Metrics, backend: &Backend) {
     }
 }
 
-/// Serve each request of a group on its own (no HF stacking): the path for
-/// structured streams and for streams whose backend only covers b=1.
+/// The coordinator's scheduling ladder, applied to one window (every group
+/// that is ready right now):
+///
+/// 1. **identical stacked HF** — per group, requests matching the head
+///    request (pipeline params-and-all) stack into one bucket launch;
+/// 2. **divergent HF** — the merged remainder of ALL groups (param- and
+///    signature-divergent company, structured/reduce streams, uncovered
+///    buckets) serves in ONE thread-chunked pass;
+/// 3. **per-item fallback** — a lone leftover launches alone.
+fn serve_window(groups: Vec<Vec<Req>>, backend: &Backend, metrics: &mut Metrics) {
+    let mut leftovers: Vec<Req> = Vec::new();
+    for group in groups {
+        leftovers.extend(stack_tier(group, backend, metrics));
+    }
+    if leftovers.len() >= 2 {
+        execute_divergent(leftovers, backend, metrics);
+    } else {
+        execute_per_item(&leftovers, backend, metrics);
+    }
+}
+
+/// Serve each request of a group on its own (no HF stacking): the ladder's
+/// final tier, for a lone leftover.
 fn execute_per_item(
     group: &[PendingRequest<SyncSender<Result<Tensor, String>>>],
     backend: &Backend,
@@ -318,17 +364,50 @@ fn execute_per_item(
     }
 }
 
-/// Execute one same-signature group as an HF-batched launch: stack the items
-/// into a bucket-sized batch (one allocation, one copy per item), run, slice
-/// replies back out. Structured streams (crop/resize reads, split writes)
-/// are servable traffic too: their items are shared FRAMES, not `[1, *shape]`
-/// planes — frames may differ per request, so they serve per item (the
-/// engine validates each frame's geometry loudly on its run).
-fn execute_group(
-    group: Vec<PendingRequest<SyncSender<Result<Tensor, String>>>>,
-    backend: &Backend,
-    metrics: &mut Metrics,
-) {
+/// Serve the whole remainder of a scheduling window — mixed params, mixed
+/// signatures, mixed chain lengths; dense, structured and reduce streams
+/// alike — as ONE divergent-HF pass. Per-item results are bit-equal to
+/// per-item serving (the divergent tier's contract); a failing item fails
+/// alone and never poisons the window.
+fn execute_divergent(group: Vec<Req>, backend: &Backend, metrics: &mut Metrics) {
+    let window: Vec<(&Pipeline, &Tensor)> =
+        group.iter().map(|r| (&r.pipeline, &r.item)).collect();
+    let out = backend.run_many(&window);
+    metrics.launches += out.launches as u64;
+    // only a genuine divergent pass counts in the tier's metrics — the XLA
+    // front door serves signature-homogeneous leftovers per item through
+    // the artifact path, and that traffic must not inflate occupancy
+    if out.divergent_pass {
+        metrics.divergent_windows += 1;
+        metrics.divergent_items += group.len() as u64;
+        metrics.divergent_work_elems += out.total_work_elems as u64;
+        metrics.divergent_padded_elems += out.padded_work_elems as u64;
+    }
+    for (req, res) in group.iter().zip(out.results) {
+        match res {
+            Ok(t) => {
+                metrics.batched_items += 1;
+                metrics.observe_latency(req.enqueued.elapsed());
+                let _ = req.reply.send(Ok(t));
+            }
+            Err(e) => {
+                metrics.failed += 1;
+                let _ = req.reply.send(Err(format!("{e:#}")));
+            }
+        }
+    }
+}
+
+/// Tier 1 — identical stacked HF. Validate one same-stream-key group, stack
+/// the requests matching the head request (pipeline params-and-all) into a
+/// bucket-sized batch (one allocation, one copy per item), run, slice
+/// replies back out; return everything this tier could not serve. The
+/// leftovers are divergent-tier traffic: param-divergent company (a stacked
+/// launch binds ONE param set — company never silently inherits the head's
+/// params), structured/reduce streams (their items are shared FRAMES or
+/// per-request statistics, not stackable planes), streams whose backend
+/// covers no bucket, and lone heads that would launch alone anyway.
+fn stack_tier(group: Vec<Req>, backend: &Backend, metrics: &mut Metrics) -> Vec<Req> {
     if group[0].pipeline.has_structured_boundary() {
         // dtype is checkable up front; geometry is per-frame
         let proto_dtin = group[0].pipeline.dtin;
@@ -342,8 +421,7 @@ fn execute_group(
                 proto_dtin
             )));
         }
-        execute_per_item(&group, backend, metrics);
-        return;
+        return group;
     }
 
     // reject malformed items up front: the batcher groups by pipeline
@@ -366,25 +444,28 @@ fn execute_group(
         )));
     }
     if group.is_empty() {
-        return;
+        return group;
     }
 
     // the batcher groups by the param-AGNOSTIC stream key (same code, one
     // launch — that is what HF wants), but a stacked launch binds ONE param
-    // set. Stack only the requests whose pipeline (params included) matches
-    // the head request; param-divergent company in the same window is still
-    // correct traffic — it serves per item, never silently with someone
-    // else's params.
+    // set: stack only the requests whose pipeline (params included) matches
+    // the head request
     let head = group[0].pipeline.clone();
-    let (group, divergent): (Vec<_>, Vec<_>) =
+    let (group, mut divergent): (Vec<_>, Vec<_>) =
         group.into_iter().partition(|r| r.pipeline == head);
-    execute_per_item(&divergent, backend, metrics);
+
+    // a lone head gains nothing from stacking — let it share the window's
+    // divergent pass instead of launching alone
+    if group.len() < 2 {
+        divergent.extend(group);
+        return divergent;
+    }
 
     let m = group.len();
     let proto = &group[0].pipeline;
     // pick a bucket the backend can actually serve: prefer the smallest AOT
-    // bucket >= m, then the exact group size; fall back to per-item launches
-    // when only b=1 artifacts exist for this stream
+    // bucket >= m, then the exact group size
     let mut batched = None;
     let mut candidates = vec![m];
     if let Some(b) = hfusion::single_bucket(m, backend.buckets()) {
@@ -399,9 +480,9 @@ fn execute_group(
         }
     }
     let Some((bucket, batched)) = batched else {
-        // per-item fallback: still correct, just no HF for this stream
-        execute_per_item(&group, backend, metrics);
-        return;
+        // no stackable bucket: the whole group is divergent-tier traffic
+        divergent.extend(group);
+        return divergent;
     };
 
     // stack items into the batch buffer directly (pad planes replicate the
@@ -429,4 +510,5 @@ fn execute_group(
             }
         }
     }
+    divergent
 }

@@ -209,6 +209,29 @@ impl Context {
             None => self.host.run(p, input),
         }
     }
+
+    /// Run a WINDOW of pipelines in one pass — the divergent-HF front door
+    /// of the generic context. Mixed windows (different params, signatures,
+    /// chain lengths; dense, structured and reduce terminators alike) serve
+    /// on either backend: the host engine chunks the window across its
+    /// worker lanes natively
+    /// ([`HostFusedEngine::run_divergent`](crate::exec::HostFusedEngine::run_divergent)),
+    /// and the XLA fused engine detects the divergence (typed, counted in
+    /// `PlannerStats::divergent`) and re-routes the window to its host
+    /// divergent tier. Results come back in window order, bit-equal to
+    /// running each request alone; the first failing item fails the call,
+    /// naming its window index.
+    pub fn run_many(&self, window: &[(&Pipeline, &Tensor)]) -> Result<Vec<Tensor>> {
+        let out = match &self.xla {
+            Some(x) => x.fused.run_many(window),
+            None => self.host.run_divergent(window),
+        };
+        out.results
+            .into_iter()
+            .enumerate()
+            .map(|(i, r)| r.with_context(|| format!("window item {i}")))
+            .collect()
+    }
 }
 
 // --- the OpenCV-flavored stage constructors (lazy, no kernel launched) -----
@@ -433,6 +456,38 @@ mod tests {
 
         // unbatched inputs are rejected before any pass runs
         assert!(mean_std(&ctx, &Tensor::zeros(DType::F32, &[4]), ReduceAxis::Full).is_err());
+    }
+
+    #[test]
+    fn context_run_many_serves_mixed_windows() {
+        // three distinct signatures — dense map, crop read, reduce seal —
+        // through the generic front door in one divergent pass
+        use crate::ops::ReduceKind;
+        use crate::tensor::{make_frame, Rect};
+        let ctx = Context::with_select(EngineSelect::HostFused, None).unwrap();
+        let dense = chain::Chain::read::<chain::U8>(&[4, 6])
+            .map(chain::Mul(3.0))
+            .cast::<chain::F32>()
+            .write()
+            .into_pipeline();
+        let crop = chain::Chain::read_crop::<chain::U8>(Rect::new(0, 1, 5, 4))
+            .map(chain::Mul(0.5))
+            .write()
+            .into_pipeline();
+        let stats = chain::Chain::read::<chain::U8>(&[4, 6])
+            .reduce(ReduceKind::Mean)
+            .into_pipeline();
+        let item = Tensor::from_u8(&(0..24).collect::<Vec<u8>>(), &[1, 4, 6]);
+        let frame = make_frame(10, 12, 9);
+        let window: Vec<(&Pipeline, &Tensor)> =
+            vec![(&dense, &item), (&crop, &frame), (&stats, &item)];
+        let got = ctx.run_many(&window).expect("mixed window serves on any backend");
+        assert_eq!(got.len(), 3);
+        for (i, ((p, t), out)) in window.iter().zip(&got).enumerate() {
+            assert_eq!(out, &crate::hostref::run_pipeline(p, t), "item {i}");
+            assert_eq!(out, &ctx.run(p, t).unwrap(), "item {i} == per-item run");
+        }
+        assert_eq!(ctx.host().divergent_runs(), 1);
     }
 
     #[test]

@@ -161,6 +161,93 @@ impl FusedEngine {
         self.stats.borrow().clone()
     }
 
+    /// Serve a WINDOW of pipelines. One artifact launch binds ONE code
+    /// shape, so the window planner ([`crate::fusion::plan_window`])
+    /// refuses a signature-divergent window with the typed
+    /// [`PlanError::Divergent`]; this front door counts the detection in
+    /// [`PlannerStats::divergent`] and partitions the window: an item the
+    /// artifact tiers DO cover keeps its own artifact launch — its result
+    /// bits never depend on window company — and the refused remainder
+    /// (lane-structured bodies, structured boundaries, reductions,
+    /// uncovered shapes) serves in ONE host divergent-HF pass
+    /// ([`HostFusedEngine::run_divergent`](super::HostFusedEngine::run_divergent)),
+    /// tallied under the host tier. Signature-homogeneous windows run
+    /// through the normal per-run artifact path — the coordinator stacks
+    /// those upstream.
+    pub fn run_many(&self, window: &[(&Pipeline, &Tensor)]) -> super::DivergentOutcome {
+        if window.is_empty() {
+            return super::DivergentOutcome::empty();
+        }
+        let pipes: Vec<&Pipeline> = window.iter().map(|&(p, _)| p).collect();
+        match crate::fusion::plan_window(&pipes, &self.reg, &self.variant) {
+            Err(PlanError::Divergent(_)) => {
+                self.stats.borrow_mut().divergent += 1;
+                self.last_fallback.set(false);
+                let covered: Vec<bool> =
+                    pipes.iter().map(|p| self.plan_for(p).is_ok()).collect();
+                let host_items: Vec<(&Pipeline, &Tensor)> = window
+                    .iter()
+                    .zip(&covered)
+                    .filter(|&(_, &c)| !c)
+                    .map(|(&item, _)| item)
+                    .collect();
+                let host_out = (!host_items.is_empty())
+                    .then(|| self.host_engine().run_divergent(&host_items));
+                let (host_results, lanes, work, padded, divergent_pass) = match host_out {
+                    Some(o) => {
+                        self.stats.borrow_mut().host +=
+                            o.results.iter().filter(|r| r.is_ok()).count();
+                        (o.results, o.lanes, o.total_work_elems, o.padded_work_elems, true)
+                    }
+                    None => (Vec::new(), 0, 0, 0, false),
+                };
+                let mut host_iter = host_results.into_iter();
+                let mut launches = divergent_pass as usize;
+                let mut results = Vec::with_capacity(window.len());
+                for (&(p, t), &c) in window.iter().zip(&covered) {
+                    if c {
+                        results.push(self.run(p, t));
+                        launches += self.last_launches();
+                    } else {
+                        let res = host_iter.next().expect("one host result per refused item");
+                        results.push(res);
+                    }
+                }
+                *self.last.borrow_mut() = launches;
+                let distinct_signatures = {
+                    let sigs: std::collections::HashSet<Signature> =
+                        pipes.iter().map(|p| Signature::of(p)).collect();
+                    sigs.len()
+                };
+                super::DivergentOutcome {
+                    results,
+                    divergent_pass,
+                    lanes,
+                    launches,
+                    distinct_signatures,
+                    total_work_elems: work,
+                    padded_work_elems: padded,
+                }
+            }
+            _ => {
+                // homogeneous window (or a refusal the per-run path already
+                // detects, counts and re-routes itself): serve item by item
+                // through the artifact path
+                let results: Vec<Result<Tensor>> =
+                    window.iter().map(|&(p, t)| self.run(p, t)).collect();
+                super::DivergentOutcome {
+                    divergent_pass: false,
+                    lanes: 1,
+                    launches: window.len(),
+                    distinct_signatures: 1,
+                    total_work_elems: pipes.iter().map(|p| p.batch * p.item_elems()).sum(),
+                    padded_work_elems: 0,
+                    results,
+                }
+            }
+        }
+    }
+
     /// True if the most recent `run` took the per-op fallback path.
     pub fn last_was_fallback(&self) -> bool {
         self.last_fallback.get()

@@ -39,7 +39,7 @@ use std::rc::Rc;
 
 use anyhow::{ensure, Result};
 
-use crate::fusion::{HostAccum, HostPlan};
+use crate::fusion::{DivergentPlan, HostAccum, HostPlan, ReaderKind, WriterKind};
 use crate::ops::{
     kernel, Opcode, Pipeline, ReadPattern, ReduceSpec, ScalarOp, Signature, WritePattern,
 };
@@ -60,6 +60,7 @@ pub struct HostFusedEngine {
     runs: Cell<usize>,
     structured: Cell<usize>,
     reduces: Cell<usize>,
+    divergent: Cell<usize>,
 }
 
 impl HostFusedEngine {
@@ -78,6 +79,7 @@ impl HostFusedEngine {
             runs: Cell::new(0),
             structured: Cell::new(0),
             reduces: Cell::new(0),
+            divergent: Cell::new(0),
         }
     }
 
@@ -121,6 +123,15 @@ impl HostFusedEngine {
         self.reduces.get()
     }
 
+    /// Divergent-HF windows served ([`HostFusedEngine::run_divergent`]) —
+    /// surfaced through [`crate::fusion::PlannerStats::divergent`]. A
+    /// WINDOW counter: the per-item serves inside each window land in
+    /// [`HostFusedEngine::runs`] (and its structured/reduce sub-counts)
+    /// exactly as if they had been served alone.
+    pub fn divergent_runs(&self) -> usize {
+        self.divergent.get()
+    }
+
     fn observe_run(&self, structured: bool, reduce: bool) {
         self.runs.set(self.runs.get() + 1);
         if structured {
@@ -128,6 +139,93 @@ impl HostFusedEngine {
         }
         if reduce {
             self.reduces.set(self.reduces.get() + 1);
+        }
+    }
+
+    /// [`HostFusedEngine::observe_run`] driven by the plan's boundary
+    /// metadata (shared by the single-run path and the divergent lanes).
+    fn observe_plan_run(&self, plan: &HostPlan) {
+        let reduce = plan.reduce().is_some();
+        let structured = plan.reader() != ReaderKind::Dense
+            || (!reduce && plan.writer() != WriterKind::Dense);
+        self.observe_run(structured, reduce);
+    }
+
+    /// The DIVERGENT-HF tier: serve a window of HETEROGENEOUS pipelines —
+    /// different params, signatures and chain lengths; dense, structured
+    /// and reduce terminators alike — in ONE thread-chunked pass. The
+    /// window compiles to a [`DivergentPlan`] (per-item sub-plans from the
+    /// shared per-signature cache; items weighted by element count and
+    /// chunked across worker lanes), then every lane dispatches its items'
+    /// monomorphized loops back-to-back: register-resident intermediates
+    /// preserved, structured items gathering/scattering while they
+    /// read/write, reduce items folding into their own accumulators in the
+    /// same sweep. Per-item results are BIT-EQUAL to serving each request
+    /// alone ([`Engine::run`]) — every pass is thread-count invariant, so
+    /// lane placement never shows in the output — and one failing item
+    /// fails ALONE (its slot carries the error; the window still serves).
+    pub fn run_divergent(&self, window: &[(&Pipeline, &Tensor)]) -> DivergentOutcome {
+        if window.is_empty() {
+            // consistent with the artifact front door: an empty window is a
+            // no-op, never a counted pass
+            return DivergentOutcome::empty();
+        }
+        let pipes: Vec<&Pipeline> = window.iter().map(|&(p, _)| p).collect();
+        let total: usize = pipes.iter().map(|p| p.batch * p.item_elems()).sum();
+        // same spawn-threshold policy as the in-run chunking: tiny windows
+        // stay serial (lane choice never changes results, only wall-clock)
+        let lanes = self.threads.min(total / MIN_ELEMS_PER_THREAD).max(1);
+        let plan = DivergentPlan::compile(&pipes, lanes, |p| self.plan_for(p));
+        // raw &HostPlan refs: the Rc handles stay on this thread, only the
+        // Sync plan data crosses into the lanes
+        let plan_refs: Vec<&HostPlan> = plan.items().iter().map(|it| it.plan()).collect();
+
+        // every lane gets its share of the worker pool: a window NARROWER
+        // than the pool (few large items) keeps intra-run threading inside
+        // each lane instead of regressing to one worker per item — results
+        // are unchanged either way (every pass is thread-count invariant),
+        // and sub-threshold items clamp their own worker count back to 1
+        let lane_workers = (self.threads / plan.lanes().max(1)).max(1);
+        let mut slots: Vec<Option<Result<Tensor>>> = Vec::with_capacity(window.len());
+        slots.resize_with(window.len(), || None);
+        if plan.lanes() <= 1 {
+            let items = window.iter().zip(plan_refs.iter().copied());
+            for (slot, (&(p, t), hp)) in slots.iter_mut().zip(items) {
+                *slot = Some(execute_any(hp, p, t, self.threads));
+            }
+        } else {
+            std::thread::scope(|scope| {
+                let mut rest: &mut [Option<Result<Tensor>>] = &mut slots;
+                for r in plan.chunks() {
+                    let (head, tail) = rest.split_at_mut(r.len());
+                    rest = tail;
+                    let lane_win = &window[r.start..r.end];
+                    let lane_plans = &plan_refs[r.start..r.end];
+                    scope.spawn(move || {
+                        let items = lane_win.iter().zip(lane_plans.iter().copied());
+                        for (slot, (&(p, t), hp)) in head.iter_mut().zip(items) {
+                            *slot = Some(execute_any(hp, p, t, lane_workers));
+                        }
+                    });
+                }
+            });
+        }
+        let results: Vec<Result<Tensor>> =
+            slots.into_iter().map(|s| s.expect("every lane fills its slots")).collect();
+        for (hp, res) in plan_refs.iter().copied().zip(&results) {
+            if res.is_ok() {
+                self.observe_plan_run(hp);
+            }
+        }
+        self.divergent.set(self.divergent.get() + 1);
+        DivergentOutcome {
+            divergent_pass: true,
+            lanes: plan.lanes(),
+            launches: 1,
+            distinct_signatures: plan.distinct_signatures(),
+            total_work_elems: plan.total_work_elems(),
+            padded_work_elems: plan.padded_work_elems(),
+            results,
         }
     }
 
@@ -237,36 +335,98 @@ impl Engine for HostFusedEngine {
 
     fn run(&self, p: &Pipeline, input: &Tensor) -> Result<Tensor> {
         let plan = self.plan_for(p);
-        if let Some(spec) = plan.reduce() {
-            ensure!(
-                input.dtype() == p.dtin,
-                "host_fused: input dtype {} != pipeline dtin {}",
-                input.dtype(),
-                p.dtin
-            );
-            let out = execute_reduce(&plan, p, spec, input, self.threads)?;
-            self.observe_run(p.read_pattern() != ReadPattern::Dense, true);
-            return Ok(out);
-        }
-        let out = if plan.is_dense() {
-            Self::check_dense_input(p, input)?;
-            execute_plan(&plan, p, input, self.threads, &p.out_shape())
-        } else {
-            ensure!(
-                input.dtype() == p.dtin,
-                "host_fused: input dtype {} != pipeline dtin {}",
-                input.dtype(),
-                p.dtin
-            );
-            execute_structured(&plan, p, input, self.threads)?
-        };
-        self.observe_run(!plan.is_dense(), false);
+        let out = execute_any(&plan, p, input, self.threads)?;
+        self.observe_plan_run(&plan);
         Ok(out)
     }
 
     /// Always 1: the defining property of the fused plan.
     fn last_launches(&self) -> usize {
         1
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the divergent-HF window pass
+
+/// The result of one divergent-HF window pass
+/// ([`HostFusedEngine::run_divergent`] /
+/// [`FusedEngine::run_many`](super::FusedEngine::run_many)): per-item
+/// results in window order plus the pass's shape and pad/occupancy
+/// accounting (surfaced as coordinator metrics).
+#[derive(Debug)]
+pub struct DivergentOutcome {
+    /// One result per window item, in window order. A failing item fails
+    /// ALONE — the rest of the window still serves.
+    pub results: Vec<Result<Tensor>>,
+    /// True when the window was actually served by the divergent tier
+    /// (one thread-chunked pass). False on the artifact front door's
+    /// signature-homogeneous path, which serves item by item — divergent
+    /// metrics must not count that traffic.
+    pub divergent_pass: bool,
+    /// Worker lanes the window was chunked across.
+    pub lanes: usize,
+    /// Launches the pass issued (1 for the host divergent tier; the
+    /// artifact path counts its per-item launches).
+    pub launches: usize,
+    /// Distinct pipeline signatures in the window.
+    pub distinct_signatures: usize,
+    /// Useful elements the pass touched.
+    pub total_work_elems: usize,
+    /// Idle weight of the lane chunking: every lane runs as long as the
+    /// heaviest, lighter lanes idle for the difference (the mixed-shape
+    /// pad accounting of [`crate::fusion::DivergentPlan`]).
+    pub padded_work_elems: usize,
+}
+
+impl DivergentOutcome {
+    /// An empty window: nothing ran, nothing is counted anywhere.
+    pub(crate) fn empty() -> DivergentOutcome {
+        DivergentOutcome {
+            results: Vec::new(),
+            divergent_pass: false,
+            lanes: 0,
+            launches: 0,
+            distinct_signatures: 0,
+            total_work_elems: 0,
+            padded_work_elems: 0,
+        }
+    }
+
+    /// Useful work over total lane time, 0..=1 (1.0 when the pass touched
+    /// nothing) — [`crate::fusion::occupancy_ratio`], the tier's one rule.
+    pub fn occupancy(&self) -> f64 {
+        crate::fusion::occupancy_ratio(self.total_work_elems as u64, self.padded_work_elems as u64)
+    }
+}
+
+/// Execute one already-planned run at an explicit worker count: the shared
+/// body of [`Engine::run`] (whole engine thread pool) and of each
+/// divergent-HF lane (the pool split across lanes, items parallel ACROSS
+/// lanes). Thread count never changes results on any path — every pass is
+/// a pure element/pixel/block map — so any lane split is bit-equal to the
+/// engine's full-pool run.
+fn execute_any(plan: &HostPlan, p: &Pipeline, input: &Tensor, threads: usize) -> Result<Tensor> {
+    if let Some(spec) = plan.reduce() {
+        ensure!(
+            input.dtype() == p.dtin,
+            "host_fused: input dtype {} != pipeline dtin {}",
+            input.dtype(),
+            p.dtin
+        );
+        return execute_reduce(plan, p, spec, input, threads);
+    }
+    if plan.is_dense() {
+        HostFusedEngine::check_dense_input(p, input)?;
+        Ok(execute_plan(plan, p, input, threads, &p.out_shape()))
+    } else {
+        ensure!(
+            input.dtype() == p.dtin,
+            "host_fused: input dtype {} != pipeline dtin {}",
+            input.dtype(),
+            p.dtin
+        );
+        execute_structured(plan, p, input, threads)
     }
 }
 
@@ -1333,6 +1493,72 @@ mod tests {
         // wrong dtype / shape fail loudly, never silently cast
         assert!(eng.run(&p, &Tensor::zeros(DType::U8, &[1, 0])).is_err());
         assert!(eng.run(&p, &Tensor::zeros(DType::F32, &[1, 4])).is_err());
+    }
+
+    // --- the divergent-HF window pass --------------------------------------
+
+    #[test]
+    fn divergent_window_matches_per_item_serving_bitwise() {
+        use crate::chain::{Chain, CvtColor, Mul, MulC3, F32, U8};
+        use crate::ops::ReduceKind;
+        // a window mixing three signatures — dense (param-divergent pair),
+        // structured resize->split, crop-read reduce — in one pass
+        let frame = make_frame(30, 40, 4);
+        let dense_a = Chain::read::<U8>(&[6, 7]).map(Mul(1.7)).write().into_pipeline();
+        let dense_b = Chain::read::<U8>(&[6, 7]).map(Mul(4.0)).write().into_pipeline();
+        let structured = Chain::read_resize::<U8>(Rect::new(2, 3, 20, 12), 9, 5)
+            .map(CvtColor)
+            .map(MulC3([0.9, 1.0, 1.1]))
+            .cast::<F32>()
+            .write_split()
+            .into_pipeline();
+        let reduce = Chain::read_crop::<U8>(Rect::new(1, 1, 8, 6))
+            .map(Mul(0.5))
+            .reduce_per_channel(ReduceKind::Mean)
+            .into_pipeline();
+        let mut rng = Rng::new(21);
+        let item = Tensor::from_u8(&rng.vec_u8(42), &[1, 6, 7]);
+        let window: Vec<(&Pipeline, &Tensor)> = vec![
+            (&dense_a, &item),
+            (&structured, &frame),
+            (&dense_b, &item),
+            (&reduce, &frame),
+        ];
+        let eng = HostFusedEngine::with_threads(8);
+        let out = eng.run_divergent(&window);
+        assert_eq!(out.results.len(), 4);
+        assert_eq!(out.launches, 1, "the divergent tier is ONE pass");
+        assert_eq!(out.distinct_signatures, 3);
+        assert!(out.lanes >= 1);
+        for (i, ((p, t), res)) in window.iter().zip(&out.results).enumerate() {
+            let got = res.as_ref().expect("window item serves");
+            assert_eq!(got, &hostref::run_pipeline(p, t), "item {i} vs oracle");
+            assert_eq!(got, &eng.run(p, t).unwrap(), "item {i} == per-item serving");
+        }
+        assert_eq!(eng.divergent_runs(), 1, "one window counted");
+        assert!(eng.reduce_runs() >= 1, "reduce items land in the reduce tier");
+        assert!(eng.structured_runs() >= 2, "structured items stay observable");
+    }
+
+    #[test]
+    fn divergent_window_isolates_failing_items() {
+        let p = Pipeline::from_opcodes(&[(Opcode::Mul, 2.0)], &[4], 1, DType::F32, DType::F32)
+            .unwrap();
+        let good = Tensor::from_f32(&[1.0, 2.0, 3.0, 4.0], &[1, 4]);
+        let bad = Tensor::from_u8(&[0; 4], &[1, 4]); // wrong dtype
+        let eng = HostFusedEngine::with_threads(2);
+        let window: Vec<(&Pipeline, &Tensor)> = vec![(&p, &good), (&p, &bad), (&p, &good)];
+        let out = eng.run_divergent(&window);
+        assert!(out.results[0].is_ok() && out.results[2].is_ok());
+        assert!(out.results[1].is_err(), "the malformed item fails ALONE");
+        assert_eq!(
+            out.results[0].as_ref().unwrap().as_f32().unwrap(),
+            &[2.0, 4.0, 6.0, 8.0]
+        );
+        // only the served items count as runs; the window counts once
+        assert_eq!(eng.runs(), 2);
+        assert_eq!(eng.divergent_runs(), 1);
+        assert_eq!(eng.plan_cache_len(), 1, "one signature, one cached plan");
     }
 
     #[test]

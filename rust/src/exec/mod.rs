@@ -13,6 +13,9 @@
 //!   Executes the paper's structured boundaries natively — crop / bilinear
 //!   crop+resize reads gather while reading, split writes scatter planar
 //!   while writing — so the flagship preproc workload serves on any machine.
+//!   Its divergent-HF tier ([`HostFusedEngine::run_divergent`]) serves a
+//!   WINDOW of mixed pipelines (different params, signatures, chain
+//!   lengths) in one thread-chunked pass, bit-equal to per-item serving.
 //!
 //! All implement [`Engine`] and must agree numerically with
 //! [`crate::hostref`] (enforced by `rust/tests/engines_equivalence.rs` and
@@ -25,4 +28,4 @@ pub use engines::{
     concat_batch, slice_batch, stack_batch, Engine, EngineSelect, FusedEngine, GraphEngine,
     UnfusedEngine, UnsupportedOp,
 };
-pub use host_fused::{HostFusedEngine, HostLane};
+pub use host_fused::{DivergentOutcome, HostFusedEngine, HostLane};

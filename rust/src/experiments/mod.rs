@@ -18,6 +18,7 @@ mod xp07_datasize;
 mod xp08_gpusize;
 mod xp09_dtype;
 mod xp10_npp;
+mod xp_divhf;
 mod xp_hostpre;
 mod xp_hostvf;
 mod xp_reduce;
@@ -32,12 +33,12 @@ use crate::bench::Table;
 /// All experiment ids in run order.
 pub const ALL: &[&str] = &[
     "fig1", "1", "2", "3", "4", "5", "6", "7", "8", "9", "10", "mem", "ablation", "hostvf",
-    "hostpre", "reduce",
+    "hostpre", "reduce", "divhf",
 ];
 
 /// Experiments that need no artifact registry (run on any machine via
 /// [`run_host`]; `xp` uses this to skip the registry requirement for them).
-pub const HOST_ONLY: &[&str] = &["hostvf", "hostpre", "reduce"];
+pub const HOST_ONLY: &[&str] = &["hostvf", "hostpre", "reduce", "divhf"];
 
 /// Run one experiment by id.
 pub fn run(id: &str, ctx: &XpCtx) -> Result<Vec<Table>> {
@@ -58,6 +59,7 @@ pub fn run(id: &str, ctx: &XpCtx) -> Result<Vec<Table>> {
         "hostvf" => xp_hostvf::run(ctx),
         "hostpre" => xp_hostpre::run(ctx),
         "reduce" => xp_reduce::run(ctx),
+        "divhf" => xp_divhf::run(ctx),
         other => anyhow::bail!("unknown experiment {other:?}; ids: {ALL:?}"),
     }
 }
@@ -70,6 +72,7 @@ pub fn run_host(id: &str, fast: bool) -> Result<Vec<Table>> {
         "hostvf" => xp_hostvf::run_with(reps, budget, fast),
         "hostpre" => xp_hostpre::run_with(reps, budget, fast),
         "reduce" => xp_reduce::run_with(reps, budget, fast),
+        "divhf" => xp_divhf::run_with(reps, budget, fast),
         other => anyhow::bail!("experiment {other:?} needs artifacts; ids without: {HOST_ONLY:?}"),
     }
 }

@@ -1,0 +1,162 @@
+//! Divergent-HF ablation — per-item vs stacked vs divergent serving on the
+//! host tier, artifact-free.
+//!
+//! Two questions, two tables:
+//!
+//! 1. **Mixed traffic** (the divergent tier's reason to exist): a window of
+//!    signature-divergent pipelines — crops, resizes, normalize-map chains,
+//!    a reduce — served per item (the only pre-divergent option: nothing
+//!    stacks) vs as ONE thread-chunked divergent pass.
+//! 2. **Homogeneous traffic** (the ladder's ordering): a window of
+//!    IDENTICAL requests served per item, stacked into one batched launch
+//!    (tier 1), and through the divergent pass (tier 2) — stacking should
+//!    win on identical work, which is why the scheduler tries it first.
+//!
+//! Like `hostvf`/`hostpre`/`reduce` this needs NO artifacts: it runs on any
+//! machine (`xp divhf`) and anchors the speedup the `divergent_bench`
+//! acceptance criterion enforces.
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::bench::{time_fn, Table};
+use crate::chain::{Add, Chain, CvtColor, DivC3, Mul, MulC3, SubC3, F32, U8};
+use crate::exec::{stack_batch, Engine, HostFusedEngine};
+use crate::ops::{Pipeline, ReduceKind};
+use crate::proplite::Rng;
+use crate::tensor::{make_frame, Rect, Tensor};
+
+use super::common::{fx, ms, XpCtx};
+
+pub fn run(xp: &XpCtx) -> Result<Vec<Table>> {
+    run_with(xp.reps, xp.budget, xp.fast)
+}
+
+/// The mixed window of the divergent bench, at 720p scale.
+fn mixed_window(n: usize, frame: &Tensor, rng: &mut Rng) -> Vec<(Pipeline, Tensor)> {
+    (0..n)
+        .map(|i| {
+            let x = (13 * i % 700) as i32;
+            let y = (11 * i % 400) as i32;
+            match i % 4 {
+                0 => (
+                    Chain::read_crop::<U8>(Rect::new(x, y, 96, 96))
+                        .map(Mul(1.0 / 255.0))
+                        .map(Add(0.01 * i as f64))
+                        .cast::<F32>()
+                        .write()
+                        .into_pipeline(),
+                    frame.clone(),
+                ),
+                1 => (
+                    Chain::read_resize::<U8>(Rect::new(x, y, 160, 120), 64, 64)
+                        .map(CvtColor)
+                        .map(MulC3([1.0 / 255.0; 3]))
+                        .cast::<F32>()
+                        .write_split()
+                        .into_pipeline(),
+                    frame.clone(),
+                ),
+                2 => (
+                    Chain::read::<U8>(&[64, 64, 3])
+                        .map(Mul(1.0 / 255.0))
+                        .map(SubC3([0.5, 0.4, 0.3]))
+                        .map(DivC3([0.2, 0.25, 0.3]))
+                        .cast::<F32>()
+                        .write()
+                        .into_pipeline(),
+                    Tensor::from_u8(&rng.vec_u8(64 * 64 * 3), &[1, 64, 64, 3]),
+                ),
+                _ => (
+                    Chain::read_crop::<U8>(Rect::new(x, y, 96, 96))
+                        .map(Mul(1.0 / 255.0))
+                        .reduce_pair_per_channel(ReduceKind::Mean, ReduceKind::SumSq)
+                        .into_pipeline(),
+                    frame.clone(),
+                ),
+            }
+        })
+        .collect()
+}
+
+/// Artifact-free entry point (`xp divhf` works without `make artifacts`).
+pub fn run_with(reps: usize, budget: Duration, fast: bool) -> Result<Vec<Table>> {
+    let eng = HostFusedEngine::new();
+    let mut rng = Rng::new(19);
+    let frame = make_frame(720, 1280, 5);
+
+    // --- table 1: mixed traffic, per-item vs divergent --------------------
+    let mut mixed = Table::new(
+        "Divergent-HF ablation — mixed window (crop/resize/normalize/reduce), per-item vs \
+         one divergent pass",
+        &["window", "per_item_ms", "divergent_ms", "speedup", "lanes", "occupancy"],
+    );
+    mixed.note(
+        "signature-divergent 720p window: nothing stacks, so per-item serving was the only \
+         pre-divergent option; the divergent tier chunks the window across worker lanes — \
+         results bit-equal to per-item serving (asserted before timing)",
+    );
+    let windows: &[usize] = if fast { &[2, 8] } else { &[2, 4, 8, 16] };
+    for &n in windows {
+        let reqs = mixed_window(n, &frame, &mut rng);
+        let refs: Vec<(&Pipeline, &Tensor)> = reqs.iter().map(|(p, t)| (p, t)).collect();
+        let probe = eng.run_divergent(&refs);
+        for ((p, t), res) in refs.iter().zip(&probe.results) {
+            let alone = eng.run(p, t)?;
+            anyhow::ensure!(res.as_ref().unwrap() == &alone, "divergent != per-item");
+        }
+        let occ = probe.occupancy();
+        let per = time_fn(reps, budget, || {
+            for (p, t) in &refs {
+                eng.run(p, t).unwrap();
+            }
+        });
+        let div = time_fn(reps, budget, || eng.run_divergent(&refs));
+        mixed.row(vec![
+            n.to_string(),
+            ms(per.mean_s),
+            ms(div.mean_s),
+            fx(per.mean_s / div.mean_s),
+            probe.lanes.to_string(),
+            format!("{occ:.2}"),
+        ]);
+    }
+
+    // --- table 2: homogeneous traffic, the ladder's three tiers -----------
+    let mut homog = Table::new(
+        "Divergent-HF ablation — homogeneous window of 8: per-item vs stacked vs divergent",
+        &["arm", "ms", "speedup_vs_per_item"],
+    );
+    homog.note(
+        "8 identical dense requests (u8 [96, 96, 3] -> normalize-map -> f32): stacking is one \
+         monomorphized batched launch and wins, which is why the scheduler tries tier 1 first",
+    );
+    let p1 = Chain::read::<U8>(&[96, 96, 3])
+        .map(Mul(1.0 / 255.0))
+        .map(SubC3([0.5, 0.4, 0.3]))
+        .map(DivC3([0.2, 0.25, 0.3]))
+        .cast::<F32>()
+        .write()
+        .into_pipeline();
+    let items: Vec<Tensor> =
+        (0..8).map(|_| Tensor::from_u8(&rng.vec_u8(96 * 96 * 3), &[1, 96, 96, 3])).collect();
+    let refs: Vec<(&Pipeline, &Tensor)> = items.iter().map(|t| (&p1, t)).collect();
+    let item_refs: Vec<&Tensor> = items.iter().collect();
+    let stacked_p = p1.with_batch(8);
+    let per = time_fn(reps, budget, || {
+        for (p, t) in &refs {
+            eng.run(p, t).unwrap();
+        }
+    });
+    let stk = time_fn(reps, budget, || {
+        let input = stack_batch(&item_refs, 8, &p1.shape);
+        eng.run(&stacked_p, &input).unwrap()
+    });
+    let div = time_fn(reps, budget, || eng.run_divergent(&refs));
+    homog.row(vec!["per_item".into(), ms(per.mean_s), fx(1.0)]);
+    homog.row(vec!["stacked".into(), ms(stk.mean_s), fx(per.mean_s / stk.mean_s)]);
+    homog.row(vec!["divergent".into(), ms(div.mean_s), fx(per.mean_s / div.mean_s)]);
+
+    Ok(vec![mixed, homog])
+}

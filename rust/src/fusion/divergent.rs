@@ -1,0 +1,258 @@
+//! Divergent Horizontal Fusion planning — one launch for a window of
+//! HETEROGENEOUS pipelines.
+//!
+//! The paper's HF story is not "batch identical work": arbitrary
+//! combinations of library functions fuse into one kernel, and "Automatic
+//! Horizontal Fusion for GPU Kernels" (PAPERS.md) interleaves fully
+//! *divergent* instruction sequences in one launch. The identical-signature
+//! tier ([`hfusion`](super::hfusion)) cannot express that: it packs m equal
+//! planes into batch buckets of ONE code shape. This module plans the
+//! divergent tier instead: a coordinator window of mixed pipelines —
+//! different params, different signatures, different chain lengths; dense,
+//! structured and reduce terminators alike — compiles into one
+//! [`DivergentPlan`]: per-item sub-plans (reusing [`HostPlan`] and the
+//! engine's per-signature cache) bound into a single thread-chunked launch.
+//!
+//! Bucketing generalizes [`hfusion::pack`](super::hfusion::pack) to
+//! mixed-SHAPE items: where identical HF's unit is a batch plane and its
+//! bucket a batch width, the divergent unit is one item weighted by its
+//! element count and the bucket is a worker LANE
+//! ([`hfusion::chunk_weighted`](super::hfusion::chunk_weighted)). Padding
+//! accounting generalizes the same way: every lane runs as long as the
+//! heaviest, so the idle weight of the lighter lanes
+//! ([`hfusion::chunk_padding`](super::hfusion::chunk_padding)) is the
+//! divergent analog of pad planes, surfaced as occupancy in coordinator
+//! metrics.
+//!
+//! Execution lives in [`crate::exec::HostFusedEngine::run_divergent`]; the
+//! artifact tiers refuse divergent windows with the typed
+//! [`PlanError::Divergent`](super::PlanError::Divergent) (one artifact
+//! launch binds one code shape) and
+//! [`crate::exec::FusedEngine::run_many`] re-routes them here.
+
+use std::collections::HashSet;
+use std::ops::Range;
+use std::rc::Rc;
+
+use crate::ops::Pipeline;
+
+use super::{hfusion, HostPlan};
+
+/// One window item of a divergent launch: its compiled (cached) host plan
+/// plus the work weight the lane chunking balances.
+#[derive(Debug, Clone)]
+pub struct DivergentItem {
+    plan: Rc<HostPlan>,
+    work_elems: usize,
+}
+
+impl DivergentItem {
+    /// The item's compiled sub-plan (shared with the per-signature cache).
+    pub fn plan(&self) -> &HostPlan {
+        &self.plan
+    }
+
+    /// Elements this item's fused pass touches (`batch * item_elems` — for
+    /// structured reads this is the gathered OUTPUT space, the loop's trip
+    /// count).
+    pub fn work_elems(&self) -> usize {
+        self.work_elems
+    }
+}
+
+/// A compiled divergent-HF window: per-item sub-plans bound into one
+/// thread-chunked launch, plus the pad/occupancy accounting of the
+/// chunking. Item order is window order; results never depend on the lane
+/// assignment (every sub-pass is thread-count invariant).
+#[derive(Debug, Clone)]
+pub struct DivergentPlan {
+    items: Vec<DivergentItem>,
+    chunks: Vec<Range<usize>>,
+    distinct_signatures: usize,
+    total_work_elems: usize,
+    padded_work_elems: usize,
+}
+
+impl DivergentPlan {
+    /// Compile a window against at most `lanes` worker lanes. `plan_for`
+    /// supplies each item's [`HostPlan`] — pass the engine's cached lookup
+    /// so repeated signatures in the window (and across windows) share one
+    /// compiled plan.
+    pub fn compile(
+        window: &[&Pipeline],
+        lanes: usize,
+        mut plan_for: impl FnMut(&Pipeline) -> Rc<HostPlan>,
+    ) -> DivergentPlan {
+        let items: Vec<DivergentItem> = window
+            .iter()
+            .map(|p| DivergentItem {
+                plan: plan_for(p),
+                work_elems: p.batch * p.item_elems(),
+            })
+            .collect();
+        let weights: Vec<usize> = items.iter().map(DivergentItem::work_elems).collect();
+        let chunks = hfusion::chunk_weighted(&weights, lanes);
+        let padded_work_elems = hfusion::chunk_padding(&weights, &chunks);
+        let distinct_signatures = {
+            let sigs: HashSet<_> = items.iter().map(|it| it.plan.signature()).collect();
+            sigs.len()
+        };
+        DivergentPlan {
+            total_work_elems: weights.iter().sum(),
+            padded_work_elems,
+            distinct_signatures,
+            items,
+            chunks,
+        }
+    }
+
+    /// The window's items, in window order.
+    pub fn items(&self) -> &[DivergentItem] {
+        &self.items
+    }
+
+    /// Contiguous item ranges, one per worker lane (cover the window
+    /// exactly, every lane non-empty).
+    pub fn chunks(&self) -> &[Range<usize>] {
+        &self.chunks
+    }
+
+    /// Worker lanes the launch actually uses (≤ the requested `lanes`).
+    pub fn lanes(&self) -> usize {
+        self.chunks.len()
+    }
+
+    /// Distinct pipeline signatures in the window. `> 1` is what makes the
+    /// window divergent — the identical-signature tier cannot serve it.
+    pub fn distinct_signatures(&self) -> usize {
+        self.distinct_signatures
+    }
+
+    /// True when the window mixes signatures (the traffic this tier exists
+    /// for; a homogeneous window still executes correctly).
+    pub fn is_divergent(&self) -> bool {
+        self.distinct_signatures > 1
+    }
+
+    /// Total useful elements the launch touches.
+    pub fn total_work_elems(&self) -> usize {
+        self.total_work_elems
+    }
+
+    /// Idle weight of the chunking: every lane runs as long as the
+    /// heaviest, lighter lanes idle for the difference — the mixed-shape
+    /// analog of HF pad planes.
+    pub fn padded_work_elems(&self) -> usize {
+        self.padded_work_elems
+    }
+
+    /// Useful work over total lane time, 0..=1 (1.0 for an empty window).
+    pub fn occupancy(&self) -> f64 {
+        occupancy_ratio(self.total_work_elems as u64, self.padded_work_elems as u64)
+    }
+}
+
+/// The ONE occupancy rule of the divergent tier: useful work over total
+/// lane time, 0..=1, with an idle tier reporting 1.0 (nothing ran, nothing
+/// was wasted). Shared by [`DivergentPlan::occupancy`],
+/// [`crate::exec::DivergentOutcome::occupancy`] and the coordinator's
+/// `divergent_occupancy` metric, so the three can never drift.
+pub fn occupancy_ratio(work_elems: u64, padded_elems: u64) -> f64 {
+    let busy = work_elems + padded_elems;
+    if busy == 0 {
+        1.0
+    } else {
+        work_elems as f64 / busy as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chain::{Chain, CvtColor, Mul, F32, U8};
+    use crate::ops::{ReduceKind, Signature};
+    use crate::tensor::Rect;
+
+    fn mixed_window() -> Vec<Pipeline> {
+        vec![
+            Chain::read::<U8>(&[8, 8]).map(Mul(2.0)).cast::<F32>().write().into_pipeline(),
+            // same signature as the head, different param: divergent-PARAM
+            Chain::read::<U8>(&[8, 8]).map(Mul(5.0)).cast::<F32>().write().into_pipeline(),
+            Chain::read_resize::<U8>(Rect::new(0, 0, 12, 6), 4, 4)
+                .map(CvtColor)
+                .cast::<F32>()
+                .write_split()
+                .into_pipeline(),
+            Chain::read_crop::<U8>(Rect::new(1, 1, 5, 5))
+                .map(Mul(0.5))
+                .reduce(ReduceKind::Mean)
+                .into_pipeline(),
+        ]
+    }
+
+    #[test]
+    fn compile_reuses_cached_plans_and_counts_signatures() {
+        let window = mixed_window();
+        let refs: Vec<&Pipeline> = window.iter().collect();
+        let mut cache: std::collections::HashMap<Signature, Rc<HostPlan>> =
+            std::collections::HashMap::new();
+        let mut compiles = 0usize;
+        let plan = DivergentPlan::compile(&refs, 2, |p| {
+            cache
+                .entry(Signature::of(p))
+                .or_insert_with(|| {
+                    compiles += 1;
+                    Rc::new(HostPlan::compile(p))
+                })
+                .clone()
+        });
+        // items 0 and 1 share a signature: 3 compiles serve 4 items
+        assert_eq!(compiles, 3);
+        assert_eq!(plan.items().len(), 4);
+        assert_eq!(plan.distinct_signatures(), 3);
+        assert!(plan.is_divergent());
+        assert!(Rc::ptr_eq(&plan.items()[0].plan, &plan.items()[1].plan));
+    }
+
+    #[test]
+    fn chunks_cover_the_window_and_account_padding() {
+        let window = mixed_window();
+        let refs: Vec<&Pipeline> = window.iter().collect();
+        for lanes in 1..=6 {
+            let plan = DivergentPlan::compile(&refs, lanes, |p| Rc::new(HostPlan::compile(p)));
+            assert!(plan.lanes() <= lanes.min(4));
+            let mut covered = 0usize;
+            for r in plan.chunks() {
+                assert!(!r.is_empty(), "lanes are never empty");
+                assert_eq!(r.start, covered, "chunks are contiguous and ordered");
+                covered = r.end;
+            }
+            assert_eq!(covered, 4, "every item lands in exactly one lane");
+            let total: usize = refs.iter().map(|p| p.batch * p.item_elems()).sum();
+            assert_eq!(plan.total_work_elems(), total);
+            assert!(plan.occupancy() > 0.0 && plan.occupancy() <= 1.0);
+            if plan.lanes() == 1 {
+                assert_eq!(plan.padded_work_elems(), 0, "one lane never idles");
+                assert_eq!(plan.occupancy(), 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn homogeneous_windows_are_not_divergent() {
+        let p = Chain::read::<F32>(&[4]).map(Mul(2.0)).write().into_pipeline();
+        let q = Chain::read::<F32>(&[4]).map(Mul(9.0)).write().into_pipeline();
+        let refs = [&p, &q];
+        let plan = DivergentPlan::compile(&refs, 2, |p| Rc::new(HostPlan::compile(p)));
+        assert_eq!(plan.distinct_signatures(), 1, "params are outside the signature");
+        assert!(!plan.is_divergent());
+    }
+
+    #[test]
+    fn empty_windows_compile_to_nothing() {
+        let plan = DivergentPlan::compile(&[], 4, |p| Rc::new(HostPlan::compile(p)));
+        assert_eq!(plan.lanes(), 0);
+        assert_eq!(plan.total_work_elems(), 0);
+        assert_eq!(plan.occupancy(), 1.0);
+    }
+}

@@ -58,6 +58,53 @@ pub fn single_bucket(m: usize, buckets: &[usize]) -> Option<usize> {
     buckets.iter().copied().filter(|&b| b >= m).min()
 }
 
+/// [`pack`] generalized to MIXED-SHAPE items (the divergent-HF tier): chunk
+/// a window of weighted items into at most `lanes` contiguous ranges of
+/// near-equal total weight. Where identical-signature HF's unit is one
+/// batch plane and its bucket a batch width, the divergent unit is one item
+/// weighted by its element count and the bucket is a worker LANE. Every
+/// item lands in exactly one range; ranges are non-empty and cover `0..n`
+/// in order, so the chunking never reorders or drops work.
+pub fn chunk_weighted(weights: &[usize], lanes: usize) -> Vec<std::ops::Range<usize>> {
+    let n = weights.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let lanes = lanes.clamp(1, n);
+    let total: usize = weights.iter().sum();
+    let mut out: Vec<std::ops::Range<usize>> = Vec::with_capacity(lanes);
+    let (mut start, mut acc, mut done) = (0usize, 0usize, 0usize);
+    for (i, &w) in weights.iter().enumerate() {
+        acc += w;
+        let open = lanes - out.len(); // lanes still to emit, this one included
+        if open == 1 {
+            break; // everything left belongs to the final lane
+        }
+        // close at the fair share of the REMAINING weight, or when the tail
+        // must keep one item per remaining lane
+        let target = (total - done).div_ceil(open);
+        if acc >= target || n - i - 1 == open - 1 {
+            out.push(start..i + 1);
+            done += acc;
+            start = i + 1;
+            acc = 0;
+        }
+    }
+    out.push(start..n);
+    out
+}
+
+/// Idle weight of a weighted chunking — the mixed-shape analog of
+/// [`total_padding`]: every lane runs as long as the heaviest, so lighter
+/// lanes idle for the difference. This is the divergent tier's pad
+/// accounting, surfaced as occupancy in coordinator metrics.
+pub fn chunk_padding(weights: &[usize], chunks: &[std::ops::Range<usize>]) -> usize {
+    let lane: Vec<usize> =
+        chunks.iter().map(|r| weights[r.start..r.end].iter().sum()).collect();
+    let max = lane.iter().copied().max().unwrap_or(0);
+    lane.iter().map(|&w| max - w).sum()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -114,5 +161,41 @@ mod tests {
         assert_eq!(single_bucket(3, BUCKETS), Some(4));
         assert_eq!(single_bucket(50, BUCKETS), Some(50));
         assert_eq!(single_bucket(51, BUCKETS), None);
+    }
+
+    #[test]
+    fn weighted_chunks_cover_exactly_and_balance() {
+        let weights = [5usize, 1, 1, 7, 2, 2, 2, 4];
+        for lanes in 1..=10 {
+            let chunks = chunk_weighted(&weights, lanes);
+            assert!(!chunks.is_empty() && chunks.len() <= lanes.min(weights.len()));
+            let mut covered = 0usize;
+            for r in &chunks {
+                assert!(!r.is_empty(), "lanes={lanes}: empty lane");
+                assert_eq!(r.start, covered, "lanes={lanes}: gap or overlap");
+                covered = r.end;
+            }
+            assert_eq!(covered, weights.len(), "lanes={lanes}: items lost");
+        }
+        // an even split exists and the chunking finds it: padding 0
+        let chunks = chunk_weighted(&[3, 3, 3, 3], 2);
+        assert_eq!(chunks, vec![0..2, 2..4]);
+        assert_eq!(chunk_padding(&[3, 3, 3, 3], &chunks), 0);
+    }
+
+    #[test]
+    fn weighted_padding_is_idle_lane_weight() {
+        // lanes [5] and [1, 1]: the light lane idles for 3
+        let weights = [5usize, 1, 1];
+        let chunks = chunk_weighted(&weights, 2);
+        assert_eq!(chunks, vec![0..1, 1..3]);
+        assert_eq!(chunk_padding(&weights, &chunks), 3);
+        // degenerate shapes
+        assert_eq!(chunk_weighted(&[], 4), Vec::<std::ops::Range<usize>>::new());
+        assert_eq!(chunk_padding(&[], &[]), 0);
+        assert_eq!(chunk_weighted(&[9], 4), vec![0..1]);
+        // one heavy head: the tail still gets one item per lane
+        let chunks = chunk_weighted(&[100, 1, 1, 1], 4);
+        assert_eq!(chunks.len(), 4);
     }
 }

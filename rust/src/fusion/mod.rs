@@ -13,17 +13,22 @@
 //!    chain up to `kmax` ops with opcodes/params as runtime tensors.
 //!
 //! Horizontal Fusion is planned by [`hfusion`]: requests sharing a stream
-//! key are packed into batch buckets. [`cost`] is the roofline model that
+//! key are packed into batch buckets. Windows that MIX signatures take the
+//! divergent-HF tier instead ([`DivergentPlan`]): per-item sub-plans bound
+//! into one thread-chunked launch, with the pack/padding accounting
+//! generalized to mixed-shape items. [`cost`] is the roofline model that
 //! classifies kernels MB/CB and predicts fusion gain; [`memsave`] accounts
 //! the DRAM the fused plan avoids (paper §VI-L).
 
 pub mod cost;
+mod divergent;
 pub mod hfusion;
 mod host_plan;
 pub mod memsave;
 mod plan;
 mod planner;
 
+pub use divergent::{occupancy_ratio, DivergentItem, DivergentPlan};
 pub use host_plan::{HostAccum, HostPlan, ReaderKind, WriterKind};
 pub use plan::{FusionPlan, PlanInputs};
-pub use planner::{plan_pipeline, unfused_plan, PlanError, Planner, PlannerStats};
+pub use planner::{plan_pipeline, plan_window, unfused_plan, PlanError, Planner, PlannerStats};

@@ -23,6 +23,11 @@ pub enum PlanError {
          engine folds them while reading, natively)"
     )]
     Reduction(String),
+    #[error(
+        "window mixes {0}; one artifact launch binds ONE code shape, so artifact tiers only \
+         serve signature-homogeneous windows — mixed windows take the host divergent-HF tier"
+    )]
+    Divergent(String),
 }
 
 /// Cumulative planner decisions (exposed as coordinator metrics and used by
@@ -58,6 +63,16 @@ pub struct PlannerStats {
     /// [`PlannerStats::total`]: the new reduce workload gets its own tier in
     /// serving dashboards.
     pub reduction: usize,
+    /// Divergent-HF WINDOWS (mixed pipeline signatures served in one
+    /// thread-chunked pass) — detected at the window planner as
+    /// [`PlanError::Divergent`] and partitioned by
+    /// [`FusedEngine::run_many`](crate::exec::FusedEngine::run_many)
+    /// (artifact-covered items keep their artifact launches, the refused
+    /// remainder takes the host pass), or served natively by
+    /// [`HostFusedEngine::run_divergent`](crate::exec::HostFusedEngine::run_divergent).
+    /// A window counter (the per-item serves land under `host`), excluded
+    /// from [`PlannerStats::total`] like `structured`/`reduction`.
+    pub divergent: usize,
 }
 
 impl PlannerStats {
@@ -119,6 +134,33 @@ fn ensure_dense_boundaries(p: &Pipeline) -> Result<(), PlanError> {
         }
     }
     Ok(())
+}
+
+/// Plan a WINDOW of pipelines as one artifact launch. Artifact tiers bind
+/// exactly one code shape per launch, so the window must be
+/// signature-homogeneous; a mixed window is refused with the typed
+/// [`PlanError::Divergent`] — callers
+/// ([`FusedEngine::run_many`](crate::exec::FusedEngine::run_many)) re-route
+/// it to the host divergent tier
+/// ([`HostFusedEngine::run_divergent`](crate::exec::HostFusedEngine::run_divergent)),
+/// which interleaves the divergent sequences in one thread-chunked pass.
+pub fn plan_window(
+    window: &[&Pipeline],
+    reg: &Registry,
+    variant: &str,
+) -> Result<FusionPlan, PlanError> {
+    let Some(head) = window.first() else {
+        return Err(PlanError::NoCoverage { sig: "(empty window)".to_string() });
+    };
+    let sigs: std::collections::HashSet<Signature> =
+        window.iter().map(|p| Signature::of(p)).collect();
+    if sigs.len() > 1 {
+        return Err(PlanError::Divergent(format!(
+            "{} distinct pipeline signatures",
+            sigs.len()
+        )));
+    }
+    plan_pipeline(head, reg, variant)
 }
 
 /// Plan one pipeline. Tier order: exact > staticloop > interp > unfused.

@@ -201,6 +201,13 @@ fn serve(args: &[String]) -> anyhow::Result<()> {
         m.unfused_fallbacks,
         m.planner.host
     );
+    println!(
+        "divergent: windows={} items={} mean_window={:.1} occupancy={:.2}",
+        m.divergent_windows,
+        m.divergent_items,
+        m.mean_divergent_window(),
+        m.divergent_occupancy()
+    );
     svc.shutdown();
     Ok(())
 }

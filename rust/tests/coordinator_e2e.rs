@@ -144,6 +144,73 @@ fn reduce_chains_are_servable_traffic() {
 }
 
 #[test]
+fn signature_divergent_window_is_served_by_the_divergent_tier_in_one_pass() {
+    // the acceptance shape: one coordinator window mixing FOUR distinct
+    // pipeline signatures — a param-divergent dense pair, a lane-structured
+    // dense body, a structured resize->split read and a reduce terminator —
+    // served by the divergent-HF tier, bit-equal to per-item serving
+    use fkl::chain::{CvtColor, MulC3};
+    use fkl::ops::ReduceKind;
+    use fkl::tensor::{make_frame, Rect};
+    let svc = Service::start(ServiceConfig {
+        artifact_dir: None,
+        queue_cap: 64,
+        policy: BatchPolicy { max_batch: 32, window: Duration::from_millis(25) },
+        engine: EngineSelect::HostFused,
+    });
+    let mk_dense = |mul: f64| {
+        Chain::read::<U8>(&[8, 9]).map(Mul(mul)).cast::<F32>().write().into_pipeline()
+    };
+    let lanes = Chain::read::<U8>(&[4, 3, 3])
+        .map(CvtColor)
+        .map(MulC3([0.5, 1.0, 1.5]))
+        .cast::<F32>()
+        .write()
+        .into_pipeline();
+    let structured = Chain::read_resize::<U8>(Rect::new(3, 2, 20, 14), 10, 6)
+        .map(CvtColor)
+        .cast::<F32>()
+        .write_split()
+        .into_pipeline();
+    let reduce = Chain::read::<U8>(&[8, 9])
+        .map(Mul(0.5))
+        .reduce_per_channel(ReduceKind::Mean)
+        .into_pipeline();
+
+    let mut rng = Rng::new(31);
+    let item = Tensor::from_u8(&rng.vec_u8(72), &[1, 8, 9]);
+    let lane_item = Tensor::from_u8(&rng.vec_u8(36), &[1, 4, 3, 3]);
+    let frame = make_frame(40, 50, 12);
+    let requests: Vec<(Pipeline, Tensor)> = vec![
+        (mk_dense(2.0), item.clone()),
+        (lanes, lane_item),
+        (structured, frame),
+        (mk_dense(5.0), item.clone()),
+        (reduce, item),
+    ];
+    // submit the whole window in one tight burst so it ages out together
+    let rxs: Vec<_> = requests
+        .iter()
+        .map(|(p, t)| svc.submit(p.clone(), t.clone()).unwrap())
+        .collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let out = rx.recv().expect("service alive").expect("request ok");
+        let (p, t) = &requests[i];
+        assert_eq!(out, fkl::hostref::run_pipeline(p, t), "request {i}: bit-equal");
+    }
+    let m = svc.metrics().unwrap();
+    assert_eq!(m.completed, 5);
+    assert_eq!(m.failed, 0);
+    assert!(m.planner.divergent >= 1, "the divergent tier served: {:?}", m.planner);
+    assert!(m.divergent_windows >= 1, "window metrics surface");
+    assert!(m.divergent_items >= 4, "the mixed requests shared a pass");
+    assert!(m.divergent_occupancy() > 0.0 && m.divergent_occupancy() <= 1.0);
+    assert!(m.planner.structured >= 1, "the structured item stays observable");
+    assert!(m.planner.reduction >= 1, "the reduce item stays observable");
+    svc.shutdown();
+}
+
+#[test]
 fn backpressure_rejects_when_full() {
     // a tiny queue with a long window: most submissions must fail fast
     // rather than block (the paper's production pipelines drop frames)

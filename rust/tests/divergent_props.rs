@@ -1,0 +1,236 @@
+//! Divergent-HF equivalence properties: a mixed window served in ONE pass
+//! must be indistinguishable — bitwise — from serving every request alone,
+//! under permutation, under embedding of identical-signature subgroups,
+//! and at every thread count (extending the PR 4 param-divergence
+//! regression to signature divergence).
+
+use fkl::chain::{Add, Chain, CvtColor, Mul, MulC3, F32, F64, U8};
+use fkl::exec::{Engine, HostFusedEngine};
+use fkl::fusion::{hfusion, DivergentPlan, HostPlan};
+use fkl::hostref;
+use fkl::ops::{Pipeline, ReduceKind};
+use fkl::proplite::{forall, Rng};
+use fkl::tensor::{make_frame, DType, Rect, Tensor};
+
+/// A window covering every pipeline family: dense chains (two params, one
+/// signature), a lane-structured dense body, a resize→split structured
+/// chain, a crop-read reduce and a dense reduce pair.
+fn mixed_window(rng: &mut Rng) -> Vec<(Pipeline, Tensor)> {
+    let dense_item = Tensor::from_u8(&rng.vec_u8(2 * 48), &[2, 6, 8]);
+    let f64_item = Tensor::from_f64(
+        &(0..36).map(|_| rng.f64(-3.0, 3.0)).collect::<Vec<_>>(),
+        &[1, 4, 3, 3],
+    );
+    let frame = make_frame(24, 30, rng.usize(1, 100) as u64);
+    vec![
+        (
+            Chain::read::<U8>(&[6, 8])
+                .batch(2)
+                .map(Mul(1.7))
+                .map(Add(3.0))
+                .write()
+                .into_pipeline(),
+            dense_item.clone(),
+        ),
+        (
+            Chain::read::<U8>(&[6, 8])
+                .batch(2)
+                .map(Mul(0.4))
+                .map(Add(-1.0))
+                .write()
+                .into_pipeline(),
+            dense_item.clone(),
+        ),
+        (
+            Chain::read::<F64>(&[4, 3, 3])
+                .map(CvtColor)
+                .map(MulC3([0.5, 1.5, 2.5]))
+                .write()
+                .into_pipeline(),
+            f64_item,
+        ),
+        (
+            Chain::read_resize::<U8>(Rect::new(2, 3, 14, 9), 7, 5)
+                .map(CvtColor)
+                .cast::<F32>()
+                .write_split()
+                .into_pipeline(),
+            frame.clone(),
+        ),
+        (
+            Chain::read_crop::<U8>(Rect::new(1, 1, 9, 7))
+                .map(Mul(0.5))
+                .reduce_per_channel(ReduceKind::Mean)
+                .into_pipeline(),
+            frame,
+        ),
+        (
+            Chain::read::<U8>(&[6, 8])
+                .batch(2)
+                .reduce_pair(ReduceKind::Mean, ReduceKind::SumSq)
+                .into_pipeline(),
+            dense_item,
+        ),
+    ]
+}
+
+fn as_refs(window: &[(Pipeline, Tensor)]) -> Vec<(&Pipeline, &Tensor)> {
+    window.iter().map(|(p, t)| (p, t)).collect()
+}
+
+#[test]
+fn divergent_windows_are_bit_equal_to_per_item_serving() {
+    forall(10, |rng| {
+        let window = mixed_window(rng);
+        let refs = as_refs(&window);
+        for threads in [1usize, 2, 8] {
+            let eng = HostFusedEngine::with_threads(threads);
+            let out = eng.run_divergent(&refs);
+            assert_eq!(out.launches, 1, "one pass for the whole window");
+            assert!(out.distinct_signatures >= 3);
+            for (i, ((p, t), res)) in refs.iter().zip(&out.results).enumerate() {
+                let got = res.as_ref().expect("window item serves");
+                assert_eq!(got, &eng.run(p, t).unwrap(), "t{threads} item {i} vs per-item");
+                assert_eq!(got, &hostref::run_pipeline(p, t), "t{threads} item {i} vs oracle");
+            }
+        }
+    });
+}
+
+#[test]
+fn divergent_results_are_invariant_under_window_permutation() {
+    let mut rng = Rng::new(42);
+    let window = mixed_window(&mut rng);
+    let refs = as_refs(&window);
+    let eng = HostFusedEngine::with_threads(4);
+    let base = eng.run_divergent(&refs);
+    // rotations and the reversal: every item's result follows the item
+    for rot in 1..refs.len() {
+        let mut perm: Vec<usize> = (rot..refs.len()).chain(0..rot).collect();
+        if rot % 2 == 0 {
+            perm.reverse();
+        }
+        let permuted: Vec<(&Pipeline, &Tensor)> = perm.iter().map(|&i| refs[i]).collect();
+        let out = eng.run_divergent(&permuted);
+        for (slot, &orig) in perm.iter().enumerate() {
+            assert_eq!(
+                out.results[slot].as_ref().unwrap(),
+                base.results[orig].as_ref().unwrap(),
+                "rot {rot}: permuted slot {slot} != original item {orig}"
+            );
+        }
+    }
+}
+
+#[test]
+fn identical_sig_subgroups_embedded_in_a_mixed_window_keep_their_params() {
+    // the PR 4 regression (param-divergent company never inherits the
+    // head's params) extended to SIGNATURE divergence: identical-signature
+    // subgroups ride inside a mixed window and each request still serves
+    // with its own params
+    let item = Tensor::from_u8(&[10u8; 100], &[1, 10, 10]);
+    let frame = make_frame(16, 16, 5);
+    let mk = |mul: f64| {
+        Chain::read::<U8>(&[10, 10]).map(Mul(mul)).cast::<F32>().write().into_pipeline()
+    };
+    let crop = Chain::read_crop::<U8>(Rect::new(0, 0, 4, 4)).write().into_pipeline();
+    let a = mk(2.0);
+    let b = mk(5.0);
+    let c = mk(2.0); // same sig AND params as `a`
+    let window: Vec<(&Pipeline, &Tensor)> =
+        vec![(&a, &item), (&crop, &frame), (&b, &item), (&c, &item)];
+    let eng = HostFusedEngine::with_threads(2);
+    let out = eng.run_divergent(&window);
+    let at = |i: usize| out.results[i].as_ref().unwrap().as_f32().unwrap()[0];
+    assert_eq!(at(0), 20.0, "head subgroup keeps its params");
+    assert_eq!(at(2), 50.0, "param-divergent company keeps ITS params");
+    assert_eq!(at(3), 20.0, "the embedded identical pair agrees");
+    assert_eq!(
+        out.results[1].as_ref().unwrap(),
+        &hostref::run_pipeline(&crop, &frame),
+        "the structured item is untouched by its dense company"
+    );
+    assert_eq!(out.distinct_signatures, 2);
+}
+
+#[test]
+fn weighted_chunking_properties() {
+    forall(50, |rng| {
+        let n = rng.usize(1, 40);
+        let weights: Vec<usize> = (0..n).map(|_| rng.usize(0, 5000)).collect();
+        let lanes = rng.usize(1, 12);
+        let chunks = hfusion::chunk_weighted(&weights, lanes);
+        assert!(!chunks.is_empty() && chunks.len() <= lanes.min(n));
+        let mut covered = 0usize;
+        for r in &chunks {
+            assert!(!r.is_empty());
+            assert_eq!(r.start, covered, "contiguous, ordered, no overlap");
+            covered = r.end;
+        }
+        assert_eq!(covered, n, "every item assigned exactly once");
+        // padding accounting: idle = lanes * max - total
+        let lane_w: Vec<usize> =
+            chunks.iter().map(|r| weights[r.start..r.end].iter().sum()).collect();
+        let max = *lane_w.iter().max().unwrap();
+        let total: usize = weights.iter().sum();
+        assert_eq!(
+            hfusion::chunk_padding(&weights, &chunks),
+            chunks.len() * max - total,
+            "idle weight is lanes*max - total"
+        );
+    });
+}
+
+#[test]
+fn divergent_plan_reuses_the_engine_cache_and_reports_occupancy() {
+    let mut rng = Rng::new(7);
+    let window = mixed_window(&mut rng);
+    let refs = as_refs(&window);
+    let eng = HostFusedEngine::with_threads(8);
+    let _ = eng.run_divergent(&refs);
+    let distinct = 5; // two dense chains share one signature
+    assert_eq!(eng.plan_cache_len(), distinct, "sub-plans land in the signature cache");
+    // a second window of the same streams compiles nothing new
+    let _ = eng.run_divergent(&refs);
+    assert_eq!(eng.plan_cache_len(), distinct);
+    assert_eq!(eng.divergent_runs(), 2);
+
+    // the standalone planner agrees on the accounting
+    let pipes: Vec<&Pipeline> = refs.iter().map(|&(p, _)| p).collect();
+    let plan = DivergentPlan::compile(&pipes, 3, |p| std::rc::Rc::new(HostPlan::compile(p)));
+    assert_eq!(plan.distinct_signatures(), distinct);
+    assert!(plan.is_divergent());
+    let total: usize = pipes.iter().map(|p| p.batch * p.item_elems()).sum();
+    assert_eq!(plan.total_work_elems(), total);
+    assert!(plan.occupancy() > 0.0 && plan.occupancy() <= 1.0);
+}
+
+#[test]
+fn mixed_dtype_windows_serve_across_the_whole_dtype_table() {
+    // five items, five input dtypes, one pass — nothing casts silently
+    let mk = |dt: DType| {
+        fkl::chain::build_erased_opcodes(
+            &[(fkl::ops::Opcode::Mul, 2.0), (fkl::ops::Opcode::Add, 1.0)],
+            &[3, 4],
+            1,
+            dt,
+            dt,
+        )
+    };
+    let pipes: Vec<Pipeline> =
+        [DType::U8, DType::U16, DType::I32, DType::F32, DType::F64].map(mk).into();
+    let vals: Vec<f64> = (0..12).map(|i| i as f64).collect();
+    let items: Vec<Tensor> =
+        pipes.iter().map(|p| Tensor::from_f64_cast(&vals, &[1, 3, 4], p.dtin)).collect();
+    let window: Vec<(&Pipeline, &Tensor)> = pipes.iter().zip(&items).collect();
+    let eng = HostFusedEngine::with_threads(2);
+    let out = eng.run_divergent(&window);
+    assert_eq!(out.distinct_signatures, 5);
+    for (i, ((p, t), res)) in window.iter().zip(&out.results).enumerate() {
+        assert_eq!(
+            res.as_ref().unwrap(),
+            &hostref::run_pipeline(p, t),
+            "dtype lane {i} is bit-equal"
+        );
+    }
+}

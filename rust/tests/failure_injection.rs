@@ -305,6 +305,70 @@ fn reduce_chains_are_refused_by_dense_only_engines_and_served_by_the_host_tier()
 }
 
 #[test]
+fn divergent_windows_are_refused_by_artifact_tiers_and_served_by_the_host_divergent_tier() {
+    use fkl::exec::{Engine, FusedEngine, HostFusedEngine};
+    use fkl::fusion::{plan_window, PlanError};
+    use fkl::ops::ReduceKind;
+    use fkl::tensor::{make_frame, Rect};
+    // a window mixing three signatures: dense map, structured resize->split,
+    // reduce seal — one artifact launch binds ONE code shape, so the window
+    // planner must refuse with the dedicated typed variant
+    let dense = fkl::chain::Chain::read::<fkl::chain::U8>(&[6, 4])
+        .map(fkl::chain::Mul(2.0))
+        .cast::<fkl::chain::F32>()
+        .write()
+        .into_pipeline();
+    let structured = fkl::chain::Chain::read_resize::<fkl::chain::U8>(Rect::new(0, 0, 12, 8), 6, 4)
+        .map(fkl::chain::CvtColor)
+        .cast::<fkl::chain::F32>()
+        .write_split()
+        .into_pipeline();
+    let reduce = fkl::chain::Chain::read::<fkl::chain::U8>(&[6, 4])
+        .map(fkl::chain::Mul(0.5))
+        .reduce(ReduceKind::Mean)
+        .into_pipeline();
+    let reg = empty_registry();
+    let err = plan_window(&[&dense, &structured, &reduce], &reg, "pallas").unwrap_err();
+    assert!(
+        matches!(err, PlanError::Divergent(ref msg) if msg.contains("3 distinct")),
+        "{err}"
+    );
+    // a homogeneous window is NOT divergent: it falls through to the
+    // per-pipeline planner (here: no coverage in the empty registry)
+    let err = plan_window(&[&dense, &dense], &reg, "pallas").unwrap_err();
+    assert!(matches!(err, PlanError::NoCoverage { .. }), "{err}");
+
+    // the fused front door detects the divergence (typed, counted) and
+    // re-routes the WHOLE window to the host divergent tier — served in one
+    // pass, bit-equal to the oracle
+    let item = Tensor::from_u8(&(0..24).collect::<Vec<u8>>(), &[1, 6, 4]);
+    let frame = make_frame(16, 20, 11);
+    let window: Vec<(&fkl::ops::Pipeline, &Tensor)> =
+        vec![(&dense, &item), (&structured, &frame), (&reduce, &item)];
+    let fused = FusedEngine::new(empty_registry());
+    let out = fused.run_many(&window);
+    assert_eq!(out.launches, 1, "the divergent re-route is ONE pass");
+    assert!(out.divergent_pass, "the outcome is marked as a genuine divergent pass");
+    for (i, ((p, t), res)) in window.iter().zip(&out.results).enumerate() {
+        let got = res.as_ref().expect("window item serves");
+        assert_eq!(got, &fkl::hostref::run_pipeline(p, t), "item {i}");
+    }
+    let st = fused.planner_stats();
+    assert_eq!(st.divergent, 1, "the detection lands in the divergent tier counter");
+    assert_eq!(st.host, 3, "the per-item serves land in the host tier");
+    assert!(!fused.last_was_fallback(), "divergent HF is fused, not per-op");
+
+    // the host engine serves the same window natively, counted the same way
+    let host = HostFusedEngine::with_threads(2);
+    let out = host.run_divergent(&window);
+    assert!(out.results.iter().all(|r| r.is_ok()));
+    assert_eq!(out.distinct_signatures, 3);
+    assert_eq!(host.divergent_runs(), 1);
+    assert_eq!(host.reduce_runs(), 1);
+    assert!(host.structured_runs() >= 1);
+}
+
+#[test]
 fn host_engine_rejects_mismatched_inputs_loudly() {
     // the host fused backend applies the same fail-loudly contract: a dtype
     // mismatch is an error reply, never a silent cast, and the service keeps

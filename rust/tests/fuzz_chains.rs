@@ -1,0 +1,378 @@
+//! Differential fuzz harness — random fused chains vs the hostref oracle.
+//!
+//! A seeded `proplite`-driven generator builds random pipelines over the
+//! WHOLE vocabulary — all 5×5 dtype pairs, op chains 1..=12 (scalar,
+//! per-channel C3 and CvtColor stages), dense / crop / crop+resize reads,
+//! dense / split writes and reduce seals — and executes every case on the
+//! host fused engine at 1, 2 and 8 worker threads against the
+//! materializing oracle.
+//!
+//! Comparison contract (the engine's documented numerics):
+//! * every f64-accumulated plan — integer outputs, f64/i32 inputs,
+//!   lane-structured bodies, ALL structured boundaries, ALL reductions —
+//!   must be BIT-EQUAL to the oracle;
+//! * the f32 fast arm (dense all-scalar chain, f32 out, u8/u16/f32 in) is
+//!   epsilon-close to the oracle's f64 sweep (the generator keeps its value
+//!   magnitudes bounded so the epsilon is meaningful);
+//! * thread count must NEVER change a result, bitwise, on any path.
+//!
+//! Seeds are FIXED and committed, so a failure reproduces exactly: the
+//! panic message names the seed, the case index and the signature.
+
+use fkl::exec::{Engine, HostFusedEngine};
+use fkl::fusion::{HostAccum, HostPlan};
+use fkl::hostref;
+use fkl::ops::{
+    IOp, MemOp, Opcode, Pipeline, ReduceAxis, ReduceSpec, Signature, ALL_OPCODES,
+    ALL_REDUCE_KINDS,
+};
+use fkl::proplite::Rng;
+use fkl::tensor::{DType, Rect, Tensor};
+
+/// The committed seed set: every run fuzzes exactly these cases.
+const SEEDS: [u64; 6] = [1, 2, 3, 0xF5ED, 0xBEEF, 20260728];
+const CASES_PER_SEED: usize = 25;
+
+const ALL_DTYPES: [DType; 5] = [DType::U8, DType::U16, DType::I32, DType::F32, DType::F64];
+
+/// Scalar opcodes for the f32 fast arm: everything but `Exp` — a random
+/// exp tower overflows f32 long before f64, which would turn the epsilon
+/// comparison into inf-vs-finite. f64-accumulated plans fuzz the full set
+/// (overflow propagates identically on both sides there).
+const NARROW_OPS: [Opcode; 12] = [
+    Opcode::Nop,
+    Opcode::Add,
+    Opcode::Sub,
+    Opcode::Mul,
+    Opcode::Div,
+    Opcode::Abs,
+    Opcode::Neg,
+    Opcode::Min,
+    Opcode::Max,
+    Opcode::Sqrt,
+    Opcode::Log,
+    Opcode::Clamp01,
+];
+
+struct Case {
+    pipeline: Pipeline,
+    input: Tensor,
+    /// True when the generator expects the f32 fast arm (checked against
+    /// the compiled plan, compared by epsilon instead of bits).
+    narrow: bool,
+}
+
+/// Scalar param in the full f64 domain: `Div` stays away from 0 so value
+/// magnitudes don't explode past what the EPSILON paths can absorb (the
+/// bitwise paths would survive it, but the generator is shared).
+fn scalar_param(rng: &mut Rng, op: Opcode, narrow: bool) -> f64 {
+    match op {
+        Opcode::Div => {
+            let lo = if narrow { 0.8 } else { 0.25 };
+            let mag = rng.f64(lo, 3.0);
+            if rng.bool() {
+                mag
+            } else {
+                -mag
+            }
+        }
+        // the narrow arm also bounds multiplicative growth: 1.25^12 stays
+        // representable in f32 with room for the additive terms
+        Opcode::Mul if narrow => rng.f64(-1.25, 1.25),
+        _ => rng.f64(-3.0, 3.0),
+    }
+}
+
+fn c3_param(rng: &mut Rng, op: Opcode) -> [f32; 3] {
+    [
+        scalar_param(rng, op, false) as f32,
+        scalar_param(rng, op, false) as f32,
+        scalar_param(rng, op, false) as f32,
+    ]
+}
+
+/// Random tensor with values natural to the dtype (image bytes, small
+/// signed floats, ...). `from_f64_cast` rounds and saturates exactly like
+/// the kernels' write boundary.
+fn random_tensor(rng: &mut Rng, dtype: DType, shape: &[usize]) -> Tensor {
+    let n: usize = shape.iter().product();
+    let vals: Vec<f64> = (0..n)
+        .map(|_| match dtype {
+            DType::U8 => rng.f64(0.0, 256.0),
+            DType::U16 => rng.f64(0.0, 1024.0),
+            DType::I32 => rng.f64(-512.0, 512.0),
+            DType::F32 | DType::F64 => rng.f64(-4.0, 4.0),
+        })
+        .collect();
+    Tensor::from_f64_cast(&vals, shape, dtype)
+}
+
+/// One random case. `force_dtin` / `force_term` pin the generator for the
+/// directed dtype×terminator sweep; `None` samples freely.
+fn gen_case(rng: &mut Rng, force_dtin: Option<DType>, force_term: Option<usize>) -> Case {
+    let dtin = force_dtin.unwrap_or_else(|| *rng.pick(&ALL_DTYPES));
+    let batch = rng.usize(1, 4);
+
+    // read end: dense over a random shape (pixel-shaped half the time so
+    // split writes and C3 bodies get dense coverage), or a crop-family
+    // gather from a shared frame
+    let read_kind = rng.usize(0, 5); // 0..=2 dense, 3 crop, 4 resize
+    let (read, shape, input) = if read_kind <= 2 {
+        let shape = if rng.bool() {
+            vec![rng.usize(1, 7), rng.usize(1, 7), 3]
+        } else {
+            vec![rng.usize(1, 10), rng.usize(1, 10)]
+        };
+        let mut full = vec![batch];
+        full.extend_from_slice(&shape);
+        let input = random_tensor(rng, dtin, &full);
+        (MemOp::Read { dtype: dtin }, shape, input)
+    } else {
+        let (fh, fw) = (rng.usize(6, 20), rng.usize(6, 20));
+        // rects may hang over the frame edge: samples clamp, like the oracle
+        let rect = Rect::new(
+            rng.usize(0, fw) as i32,
+            rng.usize(0, fh) as i32,
+            rng.usize(1, 9) as i32,
+            rng.usize(1, 9) as i32,
+        );
+        let input = random_tensor(rng, dtin, &[fh, fw, 3]);
+        if read_kind == 3 {
+            let shape = vec![rect.h as usize, rect.w as usize, 3];
+            (MemOp::CropRead { rect }, shape, input)
+        } else {
+            let (dh, dw) = (rng.usize(1, 9), rng.usize(1, 9));
+            (MemOp::ResizeRead { rect, dst_h: dh, dst_w: dw }, vec![dh, dw, 3], input)
+        }
+    };
+    let pixel = shape.len() == 3 && shape[2] == 3;
+    let structured_read = read_kind > 2;
+
+    // terminator: dense write / split write (pixel shapes only) / reduce
+    let term_kind = force_term.unwrap_or_else(|| rng.usize(0, 4)); // 0..=1 write, 2 split, 3 reduce
+    let (term, dtout) = if term_kind == 3 {
+        let kind = *rng.pick(&ALL_REDUCE_KINDS);
+        let axis = if rng.bool() { ReduceAxis::Full } else { ReduceAxis::PerChannel };
+        let spec = if rng.bool() {
+            ReduceSpec::single(kind, axis)
+        } else {
+            ReduceSpec::pair(kind, *rng.pick(&ALL_REDUCE_KINDS), axis)
+        };
+        (MemOp::Reduce { spec }, DType::F64)
+    } else {
+        let dtout = *rng.pick(&ALL_DTYPES);
+        if term_kind == 2 && pixel {
+            (MemOp::SplitWrite { dtype: dtout }, dtout)
+        } else {
+            (MemOp::Write { dtype: dtout }, dtout)
+        }
+    };
+    let dense_write = matches!(term, MemOp::Write { .. });
+
+    // body: lane-structured stages force the f64 group path; otherwise the
+    // case may land on the narrow f32 arm, whose op/param pool is bounded
+    let use_group_ops = rng.usize(0, 3) == 0;
+    let narrow = !use_group_ops
+        && !structured_read
+        && dense_write
+        && dtout == DType::F32
+        && matches!(dtin, DType::U8 | DType::U16 | DType::F32);
+    let k = rng.usize(1, 13);
+    let mut ops: Vec<IOp> = Vec::with_capacity(k + 2);
+    ops.push(IOp::Mem(read));
+    for i in 0..k {
+        if use_group_ops && (i == 0 || rng.usize(0, 3) == 0) {
+            // guarantee at least one lane-structured stage up front
+            if rng.bool() {
+                ops.push(IOp::CvtColor);
+            } else {
+                let op = *rng.pick(&[Opcode::Add, Opcode::Sub, Opcode::Mul, Opcode::Div]);
+                ops.push(IOp::ComputeC3 { op, param: c3_param(rng, op) });
+            }
+        } else {
+            let pool: &[Opcode] = if narrow { &NARROW_OPS } else { &ALL_OPCODES };
+            let op = *rng.pick(pool);
+            ops.push(IOp::compute(op, scalar_param(rng, op, narrow)));
+        }
+    }
+    ops.push(IOp::Mem(term));
+
+    let pipeline = Pipeline::new(ops, shape, batch, dtin, dtout)
+        .expect("generated chains are valid by construction");
+    Case { pipeline, input, narrow }
+}
+
+/// Bitwise tensor comparison through the (lossless) f64 view — `PartialEq`
+/// would reject NaN==NaN, but two runs that produce the same bits must
+/// count as equal.
+fn assert_bits_eq(got: &Tensor, want: &Tensor, ctx: &str) {
+    assert_eq!(got.shape(), want.shape(), "{ctx}: shape");
+    assert_eq!(got.dtype(), want.dtype(), "{ctx}: dtype");
+    let (g, w) = (got.to_f64_vec(), want.to_f64_vec());
+    for (i, (a, b)) in g.iter().zip(&w).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "{ctx}: elem {i}: {a} vs {b}");
+    }
+}
+
+fn check_case(case: &Case, engines: &[HostFusedEngine; 3], ctx: &str) {
+    let p = &case.pipeline;
+    let plan = HostPlan::compile(p);
+    // the generator's narrow prediction must match the planner: a drift
+    // here would silently fuzz the wrong comparison contract
+    assert_eq!(
+        plan.accum() == HostAccum::F32,
+        case.narrow,
+        "{ctx}: accumulator prediction drifted"
+    );
+    let want = hostref::run_pipeline(p, &case.input);
+    let outs: Vec<Tensor> = engines
+        .iter()
+        .map(|eng| eng.run(p, &case.input).expect("generated case must serve"))
+        .collect();
+    // thread count never changes results, bitwise, on ANY path
+    assert_bits_eq(&outs[1], &outs[0], &format!("{ctx}: threads 2 vs 1"));
+    assert_bits_eq(&outs[2], &outs[0], &format!("{ctx}: threads 8 vs 1"));
+    if case.narrow {
+        // the f32 fast arm: epsilon vs the oracle's f64 sweep; magnitudes
+        // are generator-bounded (~2e4), so the absolute term dominates the
+        // worst cancellation case
+        assert_eq!(outs[0].shape(), want.shape(), "{ctx}");
+        let (g, w) = (outs[0].to_f64_vec(), want.to_f64_vec());
+        for (i, (a, b)) in g.iter().zip(&w).enumerate() {
+            // NaN should be unreachable here (Sqrt/Log are |x|-guarded and
+            // the narrow generator bounds magnitudes), but if both sides
+            // agree on NaN that is agreement, not an epsilon failure
+            if a.is_nan() && b.is_nan() {
+                continue;
+            }
+            assert!(
+                (a - b).abs() <= 0.05 + 1e-4 * b.abs(),
+                "{ctx}: f32 arm elem {i}: {a} vs {b}"
+            );
+        }
+    } else {
+        assert_bits_eq(&outs[0], &want, &format!("{ctx}: vs oracle"));
+    }
+}
+
+#[test]
+fn differential_fuzz_random_chains_vs_oracle() {
+    let engines = [
+        HostFusedEngine::with_threads(1),
+        HostFusedEngine::with_threads(2),
+        HostFusedEngine::with_threads(8),
+    ];
+    for &seed in &SEEDS {
+        let mut rng = Rng::new(seed);
+        for case_i in 0..CASES_PER_SEED {
+            let case = gen_case(&mut rng, None, None);
+            let ctx = format!("seed {seed} case {case_i} sig {}", Signature::of(&case.pipeline));
+            check_case(&case, &engines, &ctx);
+        }
+    }
+}
+
+#[test]
+fn directed_fuzz_covers_every_dtype_and_terminator() {
+    // the acceptance sweep: every input dtype × {dense write, split write,
+    // reduce seal} is exercised deterministically, not just by sampling
+    let engines = [
+        HostFusedEngine::with_threads(1),
+        HostFusedEngine::with_threads(2),
+        HostFusedEngine::with_threads(8),
+    ];
+    for &dtin in &ALL_DTYPES {
+        for term in [0usize, 2, 3] {
+            let mut rng = Rng::new(0xD17 + term as u64);
+            for case_i in 0..6 {
+                let case = gen_case(&mut rng, Some(dtin), Some(term));
+                let ctx = format!(
+                    "dtin {dtin} term {term} case {case_i} sig {}",
+                    Signature::of(&case.pipeline)
+                );
+                check_case(&case, &engines, &ctx);
+            }
+        }
+    }
+}
+
+#[test]
+fn fuzz_at_threading_scale() {
+    // the random cases stay small (debug-mode runtime); these two directed
+    // cases cross MIN_ELEMS_PER_THREAD so 2/8 workers genuinely engage —
+    // chunk boundaries and the blocked reduce tree under the same contract
+    let engines = [
+        HostFusedEngine::with_threads(1),
+        HostFusedEngine::with_threads(2),
+        HostFusedEngine::with_threads(8),
+    ];
+    let mut rng = Rng::new(0x5CA1E);
+    let chain = Pipeline::from_opcodes(
+        &[(Opcode::Mul, 1.001), (Opcode::Add, 0.01), (Opcode::Sqrt, 0.0)],
+        &[200, 121], // odd width: ragged chunk boundaries
+        3,
+        DType::F32,
+        DType::F32,
+    )
+    .unwrap();
+    let input = random_tensor(&mut rng, DType::F32, &[3, 200, 121]);
+    check_case(
+        &Case { pipeline: chain, input, narrow: true },
+        &engines,
+        "threading-scale f32 chain",
+    );
+
+    let n = fkl::ops::kernel::REDUCE_BLOCK * 2 + 7; // straddles block edges
+    let reduce = Pipeline::new(
+        vec![
+            IOp::Mem(MemOp::Read { dtype: DType::F64 }),
+            IOp::compute(Opcode::Mul, 1.000001),
+            IOp::Mem(MemOp::Reduce {
+                spec: ReduceSpec::pair(
+                    fkl::ops::ReduceKind::Mean,
+                    fkl::ops::ReduceKind::SumSq,
+                    ReduceAxis::Full,
+                ),
+            }),
+        ],
+        vec![n],
+        1,
+        DType::F64,
+        DType::F64,
+    )
+    .unwrap();
+    let input = random_tensor(&mut rng, DType::F64, &[1, n]);
+    check_case(
+        &Case { pipeline: reduce, input, narrow: false },
+        &engines,
+        "threading-scale reduce",
+    );
+}
+
+#[test]
+fn fuzzed_windows_serve_divergently_bit_equal_to_per_item() {
+    // the divergent tier under fuzz: random MIXED windows of generated
+    // cases must serve in one pass with results bitwise identical to
+    // serving every item alone — on every thread count, every path
+    // (including the f32 fast arm: thread/lane placement is never visible)
+    for &seed in &SEEDS[..3] {
+        let mut rng = Rng::new(seed ^ 0xD1FF);
+        let cases: Vec<Case> =
+            (0..rng.usize(2, 7)).map(|_| gen_case(&mut rng, None, None)).collect();
+        let window: Vec<(&Pipeline, &Tensor)> =
+            cases.iter().map(|c| (&c.pipeline, &c.input)).collect();
+        for threads in [1usize, 2, 8] {
+            let eng = HostFusedEngine::with_threads(threads);
+            let out = eng.run_divergent(&window);
+            assert_eq!(out.results.len(), window.len());
+            assert_eq!(out.launches, 1);
+            for (i, ((p, t), res)) in window.iter().zip(&out.results).enumerate() {
+                let got = res.as_ref().expect("fuzzed window item serves");
+                let alone = eng.run(p, t).unwrap();
+                let ctx = format!("seed {seed} t{threads} item {i} sig {}", Signature::of(p));
+                assert_bits_eq(got, &alone, &ctx);
+            }
+            assert_eq!(eng.divergent_runs(), 1);
+        }
+    }
+}
