@@ -1,0 +1,174 @@
+//! Fault-tolerance overhead benchmark: what does the serving core's safety
+//! machinery cost when nothing is failing?
+//!
+//! Three configurations drive the same CMSD traffic through the service:
+//!
+//! * `baseline`  — no fault plan, no deadlines (the pre-robustness path);
+//! * `armed-idle` — a [`FaultPlan`] is installed whose single rule can never
+//!   match the traffic (wrong signature substring), so every launch consults
+//!   the injector and every consult declines. This prices the "armed but
+//!   quiet" path — it should be indistinguishable from baseline;
+//! * `deadline`  — every request carries a generous deadline, so admission
+//!   control, expiry partitioning and margin accounting all run on the hot
+//!   path but nothing is actually shed or expired.
+//!
+//! Writes `BENCH_faults.json` at the repo root and enforces the acceptance
+//! bar: armed-idle throughput >= 0.85x baseline (the injector must be close
+//! to free when it never fires).
+//!
+//! ```sh
+//! cargo bench --bench fault_bench
+//! FKL_BENCH_FAST=1 cargo bench --bench fault_bench   # trimmed
+//! FKL_BENCH_SOFT=1 ...                               # miss -> warning
+//! ```
+
+use std::time::{Duration, Instant};
+
+use fkl::chain::{Chain, ConvertTo, Div, Mul, Sub, F32, U8};
+use fkl::coordinator::{BatchPolicy, MetricsSnapshot, Service, ServiceConfig};
+use fkl::faults::FaultPlan;
+use fkl::jsonlite::Value;
+use fkl::ops::Pipeline;
+use fkl::proplite::Rng;
+use fkl::tensor::Tensor;
+
+fn pipeline() -> Pipeline {
+    Chain::read::<U8>(&[60, 120])
+        .map(ConvertTo)
+        .map(Mul(0.5))
+        .map(Sub(3.0))
+        .map(Div(1.7))
+        .cast::<F32>()
+        .write()
+        .into_pipeline()
+}
+
+struct Point {
+    label: &'static str,
+    rps: f64,
+    p50_us: u64,
+    p99_us: u64,
+    metrics: MetricsSnapshot,
+}
+
+impl Point {
+    fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("label", Value::str(self.label)),
+            ("req_per_s", Value::num(self.rps)),
+            ("p50_us", Value::num(self.p50_us as f64)),
+            ("p99_us", Value::num(self.p99_us as f64)),
+            ("launches", Value::num(self.metrics.launches as f64)),
+            ("shed", Value::num(self.metrics.shed as f64)),
+            ("expired", Value::num(self.metrics.expired as f64)),
+            ("failed", Value::num(self.metrics.failed as f64)),
+            ("margin_p50_us", Value::num(self.metrics.deadline_margin.p50 as f64)),
+        ])
+    }
+}
+
+fn drive(
+    label: &'static str,
+    faults: Option<FaultPlan>,
+    deadline: Option<Duration>,
+    n: usize,
+) -> Point {
+    let svc = Service::start(ServiceConfig {
+        artifact_dir: None,
+        queue_cap: 8192,
+        policy: BatchPolicy { max_batch: 50, window: Duration::from_micros(500) },
+        default_deadline: deadline,
+        faults,
+        ..ServiceConfig::default()
+    });
+    let p = pipeline();
+    let mut rng = Rng::new(3);
+    // warmup (backend construction + first launch)
+    let w = svc.submit(p.clone(), Tensor::from_u8(&rng.vec_u8(7200), &[1, 60, 120])).unwrap();
+    let _ = w.recv();
+
+    let t0 = Instant::now();
+    let mut pending = Vec::with_capacity(n);
+    for _ in 0..n {
+        let item = Tensor::from_u8(&rng.vec_u8(7200), &[1, 60, 120]);
+        if let Ok(rx) = svc.submit(p.clone(), item) {
+            pending.push(rx);
+        }
+    }
+    let mut ok = 0usize;
+    for rx in pending {
+        if rx.recv().map(|r| r.is_ok()).unwrap_or(false) {
+            ok += 1;
+        }
+    }
+    let rps = ok as f64 / t0.elapsed().as_secs_f64();
+    let m = svc.metrics().unwrap();
+    svc.shutdown();
+    assert_eq!(ok, n, "{label}: every request must be served (nothing should fire/shed)");
+    Point { label, rps, p50_us: m.latency.p50, p99_us: m.latency.p99, metrics: m }
+}
+
+fn main() {
+    let fast = std::env::var("FKL_BENCH_FAST").is_ok();
+    let n = if fast { 600 } else { 3000 };
+    println!("# fault_bench (CMSD 60x120 u8->f32, max_batch 50, window 500us, n={n})");
+    println!("{:>12} | {:>10} {:>8} {:>8}", "config", "req/s", "p50_us", "p99_us");
+
+    // the rule is well-formed but its signature substring never occurs in a
+    // CMSD stream key, so the injector is consulted at every launch and
+    // declines every time — the pure cost of being armed
+    let idle_plan = FaultPlan::parse("sig=never-matches,tier=any,launch=*,action=err")
+        .expect("idle rule parses");
+
+    let points = [
+        drive("baseline", None, None, n),
+        drive("armed-idle", Some(idle_plan), None, n),
+        drive("deadline", None, Some(Duration::from_secs(30)), n),
+    ];
+    for pt in &points {
+        println!("{:>12} | {:>10.0} {:>8} {:>8}", pt.label, pt.rps, pt.p50_us, pt.p99_us);
+    }
+
+    let baseline = points[0].rps;
+    let armed = points[1].rps;
+    let ratio = armed / baseline;
+    let accept_pass = ratio >= 0.85;
+    println!(
+        "\nacceptance: armed-idle/baseline = {ratio:.3}x (target >= 0.85x): {}",
+        if accept_pass { "PASS" } else { "FAIL" }
+    );
+
+    let report = Value::obj(vec![
+        ("bench", Value::str("faults")),
+        ("traffic", Value::str("CMSD 60x120 u8->f32 single-item requests")),
+        ("fast_mode", Value::Bool(fast)),
+        ("requests", Value::num(n as f64)),
+        (
+            "acceptance",
+            Value::obj(vec![
+                (
+                    "criterion",
+                    Value::str("armed-but-idle injector >= 0.85x baseline throughput"),
+                ),
+                ("ratio", Value::num(ratio)),
+                ("pass", Value::Bool(accept_pass)),
+            ]),
+        ),
+        ("series", Value::Arr(points.iter().map(Point::to_json).collect())),
+    ]);
+
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|p| p.join("BENCH_faults.json"))
+        .unwrap_or_else(|| "BENCH_faults.json".into());
+    std::fs::write(&root, report.to_json()).expect("write BENCH_faults.json");
+    println!("wrote {}", root.display());
+
+    // wall-clock ratios flake on shared CI runners; FKL_BENCH_SOFT keeps the
+    // signal as a warning there while local runs enforce the bar
+    if !accept_pass && std::env::var("FKL_BENCH_SOFT").is_ok() {
+        eprintln!("WARNING: acceptance criterion not met: {ratio:.3}x < 0.85x (soft mode)");
+        return;
+    }
+    assert!(accept_pass, "acceptance criterion not met: {ratio:.3}x < 0.85x");
+}

@@ -26,7 +26,28 @@ pub struct PendingRequest<R> {
     pub pipeline: Pipeline,
     pub item: Tensor,
     pub enqueued: Instant,
+    /// Serve-by instant. A request whose deadline has passed when its group
+    /// pops is dropped with a typed `Expired` reply instead of being served
+    /// after its usefulness expired (the paper's framing: drop frames
+    /// rather than lag). `None` = serve whenever.
+    pub deadline: Option<Instant>,
     pub reply: R,
+}
+
+impl<R> PendingRequest<R> {
+    /// Has this request's deadline passed at `now`? (A deadline exactly at
+    /// `now` counts as expired — makes zero-duration deadlines
+    /// deterministic under test.)
+    pub fn expired(&self, now: Instant) -> bool {
+        self.deadline.is_some_and(|d| now >= d)
+    }
+}
+
+/// One popped group, split at pop time: `live` still has time to serve,
+/// `expired` must be answered with the typed `Expired` error.
+pub struct Popped<R> {
+    pub live: Vec<PendingRequest<R>>,
+    pub expired: Vec<PendingRequest<R>>,
 }
 
 /// Accumulates pending requests per stream key and decides when a group is
@@ -51,8 +72,9 @@ impl<R> Batcher<R> {
     }
 
     /// Pop the next group that is ready: full (>= max_batch) or aged past the
-    /// window. Returns requests in arrival order (FIFO within a stream).
-    pub fn pop_ready(&mut self, now: Instant) -> Option<Vec<PendingRequest<R>>> {
+    /// window. Requests come out in arrival order (FIFO within a stream),
+    /// split into live and deadline-expired halves at pop time.
+    pub fn pop_ready(&mut self, now: Instant) -> Option<Popped<R>> {
         let policy = self.policy;
         let key = self
             .queues
@@ -67,20 +89,26 @@ impl<R> Batcher<R> {
             .map(|(k, _)| k.clone())?;
         let q = self.queues.get_mut(&key).unwrap();
         let take = q.len().min(policy.max_batch);
-        let group: Vec<_> = q.drain(..take).collect();
+        let (live, expired): (Vec<_>, Vec<_>) =
+            q.drain(..take).partition(|r| !r.expired(now));
         if q.is_empty() {
             self.queues.remove(&key);
         }
-        Some(group)
+        Some(Popped { live, expired })
     }
 
-    /// Pop everything regardless of readiness (drain on shutdown).
-    pub fn drain_all(&mut self) -> Vec<Vec<PendingRequest<R>>> {
+    /// Pop everything regardless of readiness (drain on shutdown). Expired
+    /// requests are split out group by group, exactly like
+    /// [`Batcher::pop_ready`] — shutdown resolves EVERY reply, it never
+    /// serves stale work.
+    pub fn drain_all(&mut self, now: Instant) -> Vec<Popped<R>> {
         let mut out = Vec::new();
         for (_, mut q) in self.queues.drain() {
             while !q.is_empty() {
                 let take = q.len().min(self.policy.max_batch);
-                out.push(q.drain(..take).collect());
+                let (live, expired): (Vec<_>, Vec<_>) =
+                    q.drain(..take).partition(|r| !r.expired(now));
+                out.push(Popped { live, expired });
             }
         }
         out
@@ -115,8 +143,15 @@ mod tests {
             pipeline,
             item: Tensor::from_f32(&[0.0; 4], &[1, 2, 2]),
             enqueued: Instant::now(),
+            deadline: None,
             reply: tag,
         }
+    }
+
+    fn req_deadline(mul: f64, tag: u32, deadline: Duration) -> PendingRequest<u32> {
+        let mut r = req(mul, tag);
+        r.deadline = Some(r.enqueued + deadline);
+        r
     }
 
     #[test]
@@ -125,7 +160,8 @@ mod tests {
         b.push(req(1.0, 0));
         b.push(req(99.0, 1)); // different param, same code
         let g = b.pop_ready(Instant::now()).unwrap();
-        assert_eq!(g.len(), 2);
+        assert_eq!(g.live.len(), 2);
+        assert!(g.expired.is_empty());
         assert_eq!(b.pending(), 0);
     }
 
@@ -135,7 +171,7 @@ mod tests {
         b.push(req(1.0, 0));
         assert!(b.pop_ready(Instant::now()).is_none(), "waits for window/company");
         b.push(req(1.0, 1));
-        assert_eq!(b.pop_ready(Instant::now()).unwrap().len(), 2);
+        assert_eq!(b.pop_ready(Instant::now()).unwrap().live.len(), 2);
     }
 
     #[test]
@@ -143,7 +179,7 @@ mod tests {
         let mut b = Batcher::new(BatchPolicy { max_batch: 8, window: Duration::from_millis(1) });
         b.push(req(1.0, 0));
         let later = Instant::now() + Duration::from_millis(5);
-        assert_eq!(b.pop_ready(later).unwrap().len(), 1);
+        assert_eq!(b.pop_ready(later).unwrap().live.len(), 1);
     }
 
     #[test]
@@ -154,8 +190,8 @@ mod tests {
         }
         let mut seen = Vec::new();
         while let Some(g) = b.pop_ready(Instant::now()) {
-            assert!(g.len() <= 3);
-            seen.extend(g.iter().map(|r| r.reply));
+            assert!(g.live.len() <= 3);
+            seen.extend(g.live.iter().map(|r| r.reply));
         }
         assert_eq!(seen, (0..7).collect::<Vec<_>>(), "FIFO, nothing lost or duplicated");
     }
@@ -166,9 +202,31 @@ mod tests {
         for i in 0..9 {
             b.push(req(1.0, i));
         }
-        let groups = b.drain_all();
-        let total: usize = groups.iter().map(Vec::len).sum();
+        let groups = b.drain_all(Instant::now());
+        let total: usize = groups.iter().map(|g| g.live.len() + g.expired.len()).sum();
         assert_eq!(total, 9);
         assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn deadline_expired_requests_split_out_at_pop_time() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 10, window: Duration::ZERO });
+        b.push(req(1.0, 0)); // no deadline: never expires
+        b.push(req_deadline(1.0, 1, Duration::from_secs(60))); // generous
+        b.push(req_deadline(1.0, 2, Duration::ZERO)); // dead on arrival
+        let g = b.pop_ready(Instant::now()).unwrap();
+        assert_eq!(g.live.iter().map(|r| r.reply).collect::<Vec<_>>(), vec![0, 1]);
+        assert_eq!(g.expired.iter().map(|r| r.reply).collect::<Vec<_>>(), vec![2]);
+    }
+
+    #[test]
+    fn drain_all_splits_expired_like_pop_ready() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 4, window: Duration::from_secs(9) });
+        b.push(req_deadline(1.0, 0, Duration::ZERO));
+        b.push(req(1.0, 1));
+        let groups = b.drain_all(Instant::now());
+        assert_eq!(groups.len(), 1);
+        assert_eq!(groups[0].live.iter().map(|r| r.reply).collect::<Vec<_>>(), vec![1]);
+        assert_eq!(groups[0].expired.iter().map(|r| r.reply).collect::<Vec<_>>(), vec![0]);
     }
 }

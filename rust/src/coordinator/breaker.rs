@@ -1,0 +1,384 @@
+//! Per-signature circuit breakers driving the degradation ladder.
+//!
+//! A stream that keeps failing must stop re-entering the stacked-HF tier:
+//! a stacked launch couples the fates of every request in the bucket, so a
+//! poisoned signature turns the fast path into a blast radius. Each stream
+//! key gets a breaker that walks the serving ladder DOWN on consecutive
+//! failures — stacked HF → divergent HF → per-item → reject (Open) — and
+//! back UP on sustained success. Probation is **attempt-counted**, never
+//! wall-clock: an Open breaker admits a half-open probe after a fixed
+//! number of rejected attempts, so every transition is deterministic under
+//! test (no sleeps, no clocks).
+
+use std::collections::HashMap;
+
+/// Classic breaker states, per stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BreakerState {
+    /// Serving normally at [`BreakerSnapshot::tier`].
+    Closed,
+    /// Rejecting everything; counting rejected attempts toward probation.
+    Open,
+    /// One probe request is in flight per-item; company is rejected.
+    HalfOpen,
+}
+
+/// The ladder tier a stream is currently allowed to serve at.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum ServeTier {
+    /// Tier 1: identical requests stack into one HF launch.
+    Stacked,
+    /// Tier 2: requests join the window's shared divergent-HF pass.
+    Divergent,
+    /// Tier 3: each request launches alone.
+    PerItem,
+}
+
+impl ServeTier {
+    pub fn name(self) -> &'static str {
+        match self {
+            ServeTier::Stacked => "stacked",
+            ServeTier::Divergent => "divergent",
+            ServeTier::PerItem => "peritem",
+        }
+    }
+
+    fn demoted(self) -> Option<ServeTier> {
+        match self {
+            ServeTier::Stacked => Some(ServeTier::Divergent),
+            ServeTier::Divergent => Some(ServeTier::PerItem),
+            ServeTier::PerItem => None,
+        }
+    }
+
+    fn promoted(self) -> Option<ServeTier> {
+        match self {
+            ServeTier::Stacked => None,
+            ServeTier::Divergent => Some(ServeTier::Stacked),
+            ServeTier::PerItem => Some(ServeTier::Divergent),
+        }
+    }
+}
+
+/// Breaker thresholds. All counts, no durations — deterministic by design.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BreakerPolicy {
+    /// Consecutive failures at the current tier that demote one level
+    /// (from per-item, demotion means opening the breaker).
+    pub failure_threshold: u32,
+    /// Rejected attempts an Open breaker counts before admitting a
+    /// half-open probe.
+    pub probation_attempts: u32,
+    /// Consecutive successes at a demoted tier before promoting one level.
+    pub promote_successes: u32,
+}
+
+impl Default for BreakerPolicy {
+    fn default() -> Self {
+        BreakerPolicy { failure_threshold: 3, probation_attempts: 4, promote_successes: 4 }
+    }
+}
+
+/// What the scheduler may do with a group of one stream right now.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Admission {
+    /// Serve the whole group at this ladder tier.
+    Serve(ServeTier),
+    /// Half-open: serve EXACTLY ONE request per item as the probe; reject
+    /// the rest of the group.
+    Probe,
+    /// Open: reject the whole group with a typed error.
+    Reject,
+}
+
+#[derive(Debug)]
+struct Breaker {
+    state: BreakerState,
+    tier: ServeTier,
+    consecutive_failures: u32,
+    consecutive_successes: u32,
+    /// Rejected attempts since the breaker opened (probation progress).
+    open_attempts: u32,
+    /// A half-open probe is in flight (admit no second probe).
+    probing: bool,
+    trips: u64,
+    rejected: u64,
+}
+
+impl Breaker {
+    fn new() -> Breaker {
+        Breaker {
+            state: BreakerState::Closed,
+            tier: ServeTier::Stacked,
+            consecutive_failures: 0,
+            consecutive_successes: 0,
+            open_attempts: 0,
+            probing: false,
+            trips: 0,
+            rejected: 0,
+        }
+    }
+
+    fn pristine(&self) -> bool {
+        self.state == BreakerState::Closed
+            && self.tier == ServeTier::Stacked
+            && self.consecutive_failures == 0
+            && self.trips == 0
+            && self.rejected == 0
+    }
+}
+
+/// Point-in-time state of one stream's breaker (exported via
+/// [`crate::coordinator::MetricsSnapshot::breakers`]; pristine
+/// never-tripped streams are omitted).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BreakerSnapshot {
+    pub key: String,
+    pub state: BreakerState,
+    pub tier: ServeTier,
+    pub consecutive_failures: u32,
+    /// Demotions (including opening) this stream has taken.
+    pub trips: u64,
+    /// Requests rejected while Open/HalfOpen.
+    pub rejected: u64,
+}
+
+/// All breakers, keyed by stream key. Plain data — unit-testable without a
+/// service thread.
+#[derive(Debug, Default)]
+pub struct BreakerBoard {
+    policy: BreakerPolicy,
+    map: HashMap<String, Breaker>,
+}
+
+impl BreakerBoard {
+    pub fn new(policy: BreakerPolicy) -> BreakerBoard {
+        BreakerBoard { policy, map: HashMap::new() }
+    }
+
+    /// Decide what the scheduler may do with a group of this stream. An
+    /// Open breaker's probation advances by *attempts* (see
+    /// [`BreakerBoard::note_rejected`]), so the call itself is read-only
+    /// except for the Open→HalfOpen/probe transitions.
+    pub fn admit(&mut self, key: &str) -> Admission {
+        let b = self.map.entry(key.to_string()).or_insert_with(Breaker::new);
+        match b.state {
+            BreakerState::Closed => Admission::Serve(b.tier),
+            BreakerState::HalfOpen => {
+                if b.probing {
+                    Admission::Reject
+                } else {
+                    b.probing = true;
+                    Admission::Probe
+                }
+            }
+            BreakerState::Open => {
+                if b.open_attempts >= self.policy.probation_attempts {
+                    b.state = BreakerState::HalfOpen;
+                    b.probing = true;
+                    Admission::Probe
+                } else {
+                    Admission::Reject
+                }
+            }
+        }
+    }
+
+    /// Count `n` requests rejected for this stream. While Open, rejected
+    /// attempts are the probation clock.
+    pub fn note_rejected(&mut self, key: &str, n: usize) {
+        let b = self.map.entry(key.to_string()).or_insert_with(Breaker::new);
+        b.rejected += n as u64;
+        if b.state == BreakerState::Open {
+            b.open_attempts += n as u32;
+        }
+    }
+
+    /// One served request (or one stacked launch) failed with a
+    /// service-side error. Client-side errors (malformed items) must NOT be
+    /// reported here — they say nothing about the stream's pipeline.
+    pub fn record_failure(&mut self, key: &str) {
+        let p = self.policy;
+        let b = self.map.entry(key.to_string()).or_insert_with(Breaker::new);
+        match b.state {
+            BreakerState::HalfOpen => {
+                // failed probe: back to Open, probation restarts
+                b.state = BreakerState::Open;
+                b.probing = false;
+                b.open_attempts = 0;
+                b.consecutive_failures = 0;
+                b.consecutive_successes = 0;
+                b.trips += 1;
+            }
+            BreakerState::Closed => {
+                b.consecutive_successes = 0;
+                b.consecutive_failures += 1;
+                if b.consecutive_failures >= p.failure_threshold {
+                    b.consecutive_failures = 0;
+                    b.trips += 1;
+                    match b.tier.demoted() {
+                        Some(t) => b.tier = t,
+                        None => {
+                            b.state = BreakerState::Open;
+                            b.open_attempts = 0;
+                        }
+                    }
+                }
+            }
+            BreakerState::Open => {}
+        }
+    }
+
+    /// One served request (or one stacked launch) succeeded.
+    pub fn record_success(&mut self, key: &str) {
+        let p = self.policy;
+        let b = self.map.entry(key.to_string()).or_insert_with(Breaker::new);
+        match b.state {
+            BreakerState::HalfOpen => {
+                // successful probe: resume serving, bottom of the ladder
+                b.state = BreakerState::Closed;
+                b.tier = ServeTier::PerItem;
+                b.probing = false;
+                b.open_attempts = 0;
+                b.consecutive_failures = 0;
+                b.consecutive_successes = 1;
+            }
+            BreakerState::Closed => {
+                b.consecutive_failures = 0;
+                if b.tier != ServeTier::Stacked {
+                    b.consecutive_successes += 1;
+                    if b.consecutive_successes >= p.promote_successes {
+                        b.consecutive_successes = 0;
+                        if let Some(t) = b.tier.promoted() {
+                            b.tier = t;
+                        }
+                    }
+                }
+            }
+            BreakerState::Open => {}
+        }
+    }
+
+    /// Total demotions across all streams.
+    pub fn trips(&self) -> u64 {
+        self.map.values().map(|b| b.trips).sum()
+    }
+
+    /// Total rejected requests across all streams.
+    pub fn rejected(&self) -> u64 {
+        self.map.values().map(|b| b.rejected).sum()
+    }
+
+    /// Snapshot every non-pristine breaker, sorted by key (deterministic).
+    pub fn snapshot(&self) -> Vec<BreakerSnapshot> {
+        let mut v: Vec<BreakerSnapshot> = self
+            .map
+            .iter()
+            .filter(|(_, b)| !b.pristine())
+            .map(|(k, b)| BreakerSnapshot {
+                key: k.clone(),
+                state: b.state,
+                tier: b.tier,
+                consecutive_failures: b.consecutive_failures,
+                trips: b.trips,
+                rejected: b.rejected,
+            })
+            .collect();
+        v.sort_by(|a, b| a.key.cmp(&b.key));
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy() -> BreakerPolicy {
+        BreakerPolicy { failure_threshold: 2, probation_attempts: 3, promote_successes: 2 }
+    }
+
+    #[test]
+    fn healthy_stream_stays_stacked_and_unsnapshotted() {
+        let mut b = BreakerBoard::new(policy());
+        for _ in 0..10 {
+            assert_eq!(b.admit("k"), Admission::Serve(ServeTier::Stacked));
+            b.record_success("k");
+        }
+        assert!(b.snapshot().is_empty(), "pristine breakers stay out of snapshots");
+    }
+
+    #[test]
+    fn consecutive_failures_walk_the_ladder_down_to_open() {
+        let mut b = BreakerBoard::new(policy());
+        for (expect, _) in
+            [(ServeTier::Stacked, 0), (ServeTier::Divergent, 1), (ServeTier::PerItem, 2)]
+        {
+            assert_eq!(b.admit("k"), Admission::Serve(expect));
+            b.record_failure("k");
+            b.record_failure("k");
+        }
+        assert_eq!(b.admit("k"), Admission::Reject, "per-item trip opens the breaker");
+        assert_eq!(b.trips(), 3);
+        assert_eq!(b.snapshot()[0].state, BreakerState::Open);
+    }
+
+    #[test]
+    fn interleaved_success_resets_the_failure_streak() {
+        let mut b = BreakerBoard::new(policy());
+        b.record_failure("k");
+        b.record_success("k");
+        b.record_failure("k");
+        assert_eq!(b.admit("k"), Admission::Serve(ServeTier::Stacked), "streak broken, no trip");
+        assert_eq!(b.trips(), 0);
+    }
+
+    #[test]
+    fn probation_is_attempt_counted_then_probe_recovers_up_the_ladder() {
+        let mut b = BreakerBoard::new(policy());
+        for _ in 0..6 {
+            b.record_failure("k"); // 2 per tier: stacked -> divergent -> peritem -> open
+        }
+        // probation: 3 rejected attempts before a probe
+        assert_eq!(b.admit("k"), Admission::Reject);
+        b.note_rejected("k", 3);
+        assert_eq!(b.admit("k"), Admission::Probe);
+        // only one probe at a time
+        assert_eq!(b.admit("k"), Admission::Reject);
+        b.record_success("k");
+        assert_eq!(b.admit("k"), Admission::Serve(ServeTier::PerItem), "probe success closes");
+        // promote_successes=2 per level: the probe success already counted 1
+        b.record_success("k");
+        assert_eq!(b.admit("k"), Admission::Serve(ServeTier::Divergent));
+        b.record_success("k");
+        b.record_success("k");
+        assert_eq!(b.admit("k"), Admission::Serve(ServeTier::Stacked), "full recovery");
+    }
+
+    #[test]
+    fn failed_probe_reopens_and_restarts_probation() {
+        let mut b = BreakerBoard::new(policy());
+        for _ in 0..6 {
+            b.record_failure("k");
+        }
+        b.note_rejected("k", 3);
+        assert_eq!(b.admit("k"), Admission::Probe);
+        b.record_failure("k");
+        assert_eq!(b.admit("k"), Admission::Reject, "probe failure reopens");
+        b.note_rejected("k", 2);
+        assert_eq!(b.admit("k"), Admission::Reject, "probation restarted from zero");
+        b.note_rejected("k", 1);
+        assert_eq!(b.admit("k"), Admission::Probe);
+    }
+
+    #[test]
+    fn streams_are_independent() {
+        let mut b = BreakerBoard::new(policy());
+        b.record_failure("bad");
+        b.record_failure("bad");
+        assert_eq!(b.admit("bad"), Admission::Serve(ServeTier::Divergent));
+        assert_eq!(b.admit("good"), Admission::Serve(ServeTier::Stacked));
+        let snap = b.snapshot();
+        assert_eq!(snap.len(), 1);
+        assert_eq!(snap[0].key, "bad");
+    }
+}

@@ -1,7 +1,9 @@
-//! Coordinator metrics: throughput, latency percentiles, fusion counters.
+//! Coordinator metrics: throughput, latency percentiles, fusion counters,
+//! and the fault-tolerance surface (deadlines, breakers, isolated panics).
 
 use std::time::Duration;
 
+use crate::coordinator::BreakerSnapshot;
 use crate::fusion::PlannerStats;
 
 /// Online latency reservoir (fixed capacity, overwrite-oldest) + counters.
@@ -10,9 +12,32 @@ pub struct Metrics {
     latencies_us: Vec<u64>,
     cursor: usize,
     filled: bool,
+    /// Deadline-margin reservoir: remaining time at completion for requests
+    /// that carried a deadline (small margins = the service is flying close
+    /// to its shed threshold).
+    margins_us: Vec<u64>,
+    margin_cursor: usize,
+    margin_filled: bool,
     pub completed: u64,
     pub rejected: u64,
     pub failed: u64,
+    /// Requests dropped at pop time: their deadline passed while queued.
+    pub expired: u64,
+    /// Requests shed at ingress: dead on arrival, or the estimated queue
+    /// delay already exceeded their deadline.
+    pub shed: u64,
+    /// Launch panics contained by `catch_unwind` (each poisoned exactly one
+    /// launch; the service thread survived every one of them).
+    pub launch_panics: u64,
+    /// Backend-construction panics the supervisor absorbed by rebuilding.
+    pub supervisor_restarts: u64,
+    /// Structured degradation notice (e.g. Auto fell back to the host
+    /// engine because the artifact registry was unavailable). Printed once
+    /// to stderr when set; asserted on directly by tests and `fkl serve`.
+    pub degraded: Option<String>,
+    /// EWMA of per-item service cost in microseconds — the admission
+    /// controller's queue-delay estimate (`pending * ewma` vs deadline).
+    pub ewma_item_us: f64,
     pub launches: u64,
     pub batched_items: u64,
     pub padded_planes: u64,
@@ -46,9 +71,18 @@ impl Metrics {
             latencies_us: vec![0; cap.max(1)],
             cursor: 0,
             filled: false,
+            margins_us: vec![0; cap.max(1)],
+            margin_cursor: 0,
+            margin_filled: false,
             completed: 0,
             rejected: 0,
             failed: 0,
+            expired: 0,
+            shed: 0,
+            launch_panics: 0,
+            supervisor_restarts: 0,
+            degraded: None,
+            ewma_item_us: 0.0,
             launches: 0,
             batched_items: 0,
             padded_planes: 0,
@@ -61,6 +95,10 @@ impl Metrics {
         }
     }
 
+    /// Record one request's queue-to-reply latency. Failed requests record
+    /// too — the slow-failure tail must not vanish from the distribution —
+    /// so this deliberately does NOT bump `completed` (callers count
+    /// completion/failure explicitly).
     pub fn observe_latency(&mut self, d: Duration) {
         self.latencies_us[self.cursor] = d.as_micros() as u64;
         self.cursor += 1;
@@ -68,17 +106,49 @@ impl Metrics {
             self.cursor = 0;
             self.filled = true;
         }
-        self.completed += 1;
+    }
+
+    /// Record the margin a deadline-carrying request completed with.
+    pub fn observe_margin(&mut self, remaining: Duration) {
+        self.margins_us[self.margin_cursor] = remaining.as_micros() as u64;
+        self.margin_cursor += 1;
+        if self.margin_cursor == self.margins_us.len() {
+            self.margin_cursor = 0;
+            self.margin_filled = true;
+        }
+    }
+
+    /// Fold one launch's cost into the per-item EWMA (admission control's
+    /// queue-delay estimate).
+    pub fn note_service_cost(&mut self, items: usize, elapsed: Duration) {
+        if items == 0 {
+            return;
+        }
+        let per_item_us = elapsed.as_micros() as f64 / items as f64;
+        self.ewma_item_us = if self.ewma_item_us == 0.0 {
+            per_item_us
+        } else {
+            0.8 * self.ewma_item_us + 0.2 * per_item_us
+        };
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
         let n = if self.filled { self.latencies_us.len() } else { self.cursor };
         let mut lat: Vec<u64> = self.latencies_us[..n].to_vec();
         lat.sort_unstable();
+        let m = if self.margin_filled { self.margins_us.len() } else { self.margin_cursor };
+        let mut margins: Vec<u64> = self.margins_us[..m].to_vec();
+        margins.sort_unstable();
         MetricsSnapshot {
             completed: self.completed,
             rejected: self.rejected,
             failed: self.failed,
+            expired: self.expired,
+            shed: self.shed,
+            launch_panics: self.launch_panics,
+            supervisor_restarts: self.supervisor_restarts,
+            degraded: self.degraded.clone(),
+            est_item_us: self.ewma_item_us,
             launches: self.launches,
             batched_items: self.batched_items,
             padded_planes: self.padded_planes,
@@ -89,6 +159,10 @@ impl Metrics {
             divergent_padded_elems: self.divergent_padded_elems,
             planner: self.planner.clone(),
             latency: LatencyStats::from_sorted(&lat),
+            deadline_margin: LatencyStats::from_sorted(&margins),
+            breaker_trips: 0,
+            breaker_rejected: 0,
+            breakers: Vec::new(),
         }
     }
 }
@@ -128,6 +202,13 @@ pub struct MetricsSnapshot {
     pub completed: u64,
     pub rejected: u64,
     pub failed: u64,
+    pub expired: u64,
+    pub shed: u64,
+    pub launch_panics: u64,
+    pub supervisor_restarts: u64,
+    pub degraded: Option<String>,
+    /// Admission control's live per-item cost estimate (EWMA, microseconds).
+    pub est_item_us: f64,
     pub launches: u64,
     pub batched_items: u64,
     pub padded_planes: u64,
@@ -138,6 +219,14 @@ pub struct MetricsSnapshot {
     pub divergent_padded_elems: u64,
     pub planner: PlannerStats,
     pub latency: LatencyStats,
+    /// Remaining-time-at-completion distribution for deadline requests.
+    pub deadline_margin: LatencyStats,
+    /// Total breaker demotions across all streams.
+    pub breaker_trips: u64,
+    /// Total requests rejected by Open/HalfOpen breakers.
+    pub breaker_rejected: u64,
+    /// Every non-pristine breaker, sorted by stream key.
+    pub breakers: Vec<BreakerSnapshot>,
 }
 
 impl MetricsSnapshot {
@@ -175,6 +264,12 @@ impl MetricsSnapshot {
     pub fn divergent_occupancy(&self) -> f64 {
         crate::fusion::occupancy_ratio(self.divergent_work_elems, self.divergent_padded_elems)
     }
+
+    /// The breaker snapshot for one stream key, if that stream has ever
+    /// tripped (convenience for tests and dashboards).
+    pub fn breaker(&self, key: &str) -> Option<&BreakerSnapshot> {
+        self.breakers.iter().find(|b| b.key == key)
+    }
 }
 
 #[cfg(test)]
@@ -199,7 +294,7 @@ mod tests {
             m.observe_latency(Duration::from_micros(i));
         }
         let s = m.snapshot();
-        assert_eq!(s.completed, 10);
+        assert_eq!(s.completed, 0, "latency observation no longer implies completion");
         assert_eq!(s.latency.count, 4, "reservoir holds last `cap` samples");
     }
 
@@ -207,6 +302,45 @@ mod tests {
     fn empty_snapshot_is_zero() {
         let m = Metrics::default();
         assert_eq!(m.snapshot().latency, LatencyStats::default());
+        assert_eq!(m.snapshot().deadline_margin, LatencyStats::default());
+    }
+
+    #[test]
+    fn margin_reservoir_is_independent_of_latency() {
+        let mut m = Metrics::with_capacity(8);
+        m.observe_latency(Duration::from_micros(100));
+        m.observe_margin(Duration::from_micros(40));
+        m.observe_margin(Duration::from_micros(60));
+        let s = m.snapshot();
+        assert_eq!(s.latency.count, 1);
+        assert_eq!(s.deadline_margin.count, 2);
+        assert_eq!(s.deadline_margin.max, 60);
+    }
+
+    #[test]
+    fn service_cost_ewma_converges_toward_observations() {
+        let mut m = Metrics::default();
+        m.note_service_cost(2, Duration::from_micros(200)); // 100us/item
+        assert!((m.ewma_item_us - 100.0).abs() < 1e-9, "first sample seeds the EWMA");
+        for _ in 0..64 {
+            m.note_service_cost(1, Duration::from_micros(50));
+        }
+        assert!(m.ewma_item_us > 49.0 && m.ewma_item_us < 60.0, "ewma={}", m.ewma_item_us);
+        m.note_service_cost(0, Duration::from_micros(999_999));
+        assert!(m.ewma_item_us < 60.0, "zero-item launches never move the estimate");
+    }
+
+    #[test]
+    fn fault_counters_and_degraded_surface_in_snapshot() {
+        let mut m = Metrics::default();
+        m.expired = 3;
+        m.shed = 2;
+        m.launch_panics = 1;
+        m.supervisor_restarts = 4;
+        m.degraded = Some("registry unavailable".into());
+        let s = m.snapshot();
+        assert_eq!((s.expired, s.shed, s.launch_panics, s.supervisor_restarts), (3, 2, 1, 4));
+        assert_eq!(s.degraded.as_deref(), Some("registry unavailable"));
     }
 
     #[test]

@@ -21,9 +21,13 @@
 //!   otherwise — the service comes up and serves correctly everywhere.
 
 mod batcher;
+mod breaker;
 mod metrics;
 mod service;
 
-pub use batcher::{BatchPolicy, Batcher, PendingRequest};
+pub use batcher::{BatchPolicy, Batcher, PendingRequest, Popped};
+pub use breaker::{
+    Admission, BreakerBoard, BreakerPolicy, BreakerSnapshot, BreakerState, ServeTier,
+};
 pub use metrics::{LatencyStats, Metrics, MetricsSnapshot};
-pub use service::{EngineSelect, Service, ServiceConfig, SubmitError};
+pub use service::{EngineSelect, ServeError, Service, ServiceConfig, SubmitError};

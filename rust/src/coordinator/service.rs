@@ -1,24 +1,87 @@
-//! The coordinator service: bounded ingress, batching loop, fused execution.
+//! The coordinator service: bounded ingress, batching loop, fused execution,
+//! failure containment.
+//!
+//! Fault-tolerance model (DESIGN.md §"Failure containment & degradation"):
+//!
+//! * **Deadlines** — requests may carry a serve-by deadline; admission
+//!   control sheds at ingress when the estimated queue delay already
+//!   exceeds it, and the batcher drops expired requests at pop time. Both
+//!   paths answer with a typed error immediately — stale work is never
+//!   served (the paper's pipelines drop frames rather than lag).
+//! * **Panic isolation** — every backend launch (stacked, divergent,
+//!   per-item, and backend construction itself) runs under
+//!   [`crate::exec::catch_launch`]: a poisoned launch fails exactly the
+//!   requests riding on it with [`ServeError::LaunchPanicked`]; the
+//!   service thread keeps serving, and a supervisor rebuilds a backend
+//!   whose construction panicked.
+//! * **Circuit breakers** — consecutive service-side failures of one
+//!   stream key demote that stream down the serving ladder (stacked HF →
+//!   divergent HF → per-item → reject) and sustained success promotes it
+//!   back up ([`crate::coordinator::BreakerBoard`]; attempt-counted, no
+//!   wall clocks).
+//! * **Fault injection** — [`ServiceConfig::faults`] arms a deterministic
+//!   [`crate::faults::FaultInjector`] consulted at every launch site,
+//!   which is how all of the above is tested.
 
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::coordinator::{BatchPolicy, Batcher, Metrics, MetricsSnapshot, PendingRequest};
-use crate::exec::{slice_batch, stack_batch, DivergentOutcome, Engine, FusedEngine, HostFusedEngine};
+use crate::coordinator::{
+    Admission, BatchPolicy, Batcher, BreakerBoard, BreakerPolicy, Metrics, MetricsSnapshot,
+    PendingRequest, ServeTier,
+};
+use crate::exec::{
+    self, slice_batch, stack_batch, DivergentOutcome, Engine, FusedEngine, HostFusedEngine,
+};
+use crate::faults::{FaultInjector, FaultPlan, FaultTier};
 use crate::fusion::{hfusion, PlannerStats};
-use crate::ops::Pipeline;
+use crate::ops::{Pipeline, Signature};
 use crate::tensor::Tensor;
 
+/// Reply slot of one request.
+type ReplyTx = SyncSender<Result<Tensor, ServeError>>;
+
 /// One queued request as the service thread sees it.
-type Req = PendingRequest<SyncSender<Result<Tensor, String>>>;
+type Req = PendingRequest<ReplyTx>;
 
 /// Which execution backend the service thread builds — the selection policy
 /// now lives in [`crate::exec`] and is shared with [`crate::cv::Context`],
 /// so every front door degrades identically.
 pub use crate::exec::EngineSelect;
+
+/// Typed reply error: every way the coordinator can decline or fail a
+/// request, distinguishable without string matching.
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub enum ServeError {
+    /// The deadline passed while the request was queued (dropped at pop).
+    #[error("deadline expired while queued (dropped at pop time)")]
+    Expired,
+    /// Admission control refused the request: dead on arrival, or the
+    /// estimated queue delay already exceeded the deadline.
+    #[error("shed at admission: estimated queue delay exceeds the deadline")]
+    Shed,
+    /// The launch serving this request panicked; the panic was contained
+    /// and only this launch's requests failed.
+    #[error("launch panicked (isolated): {0}")]
+    LaunchPanicked(String),
+    /// This stream's circuit breaker is open (probation counts attempts).
+    #[error("circuit open for stream `{stream}`")]
+    CircuitOpen { stream: String },
+    /// The request itself is malformed (client error — never counted
+    /// against the stream's breaker).
+    #[error("malformed request: {0}")]
+    BadItem(String),
+    /// The backend failed the launch with an ordinary error.
+    #[error("execution failed: {0}")]
+    Exec(String),
+    /// The service could not build a working backend.
+    #[error("service unavailable: {0}")]
+    Unavailable(String),
+}
 
 /// Coordinator configuration.
 #[derive(Debug, Clone)]
@@ -30,6 +93,18 @@ pub struct ServiceConfig {
     pub queue_cap: usize,
     pub policy: BatchPolicy,
     pub engine: EngineSelect,
+    /// Deadline applied to every [`Service::submit`] (`None` = requests
+    /// without an explicit deadline wait forever).
+    pub default_deadline: Option<Duration>,
+    /// Circuit-breaker thresholds (attempt-counted, deterministic).
+    pub breaker: BreakerPolicy,
+    /// Armed fault plan for the deterministic fault-injection harness
+    /// (`None`/empty = off; the hot path then carries no injector at all).
+    pub faults: Option<FaultPlan>,
+    /// Supervisor budget: how many backend-construction panics are
+    /// absorbed by rebuilding before the service gives up and answers
+    /// [`ServeError::Unavailable`].
+    pub max_build_retries: u32,
 }
 
 impl Default for ServiceConfig {
@@ -39,12 +114,16 @@ impl Default for ServiceConfig {
             queue_cap: 1024,
             policy: BatchPolicy::default(),
             engine: EngineSelect::default(),
+            default_deadline: None,
+            breaker: BreakerPolicy::default(),
+            faults: None,
+            max_build_retries: 2,
         }
     }
 }
 
 enum Msg {
-    Request(PendingRequest<SyncSender<Result<Tensor, String>>>),
+    Request(Req),
     Snapshot(SyncSender<MetricsSnapshot>),
     Shutdown,
 }
@@ -57,23 +136,30 @@ pub enum SubmitError {
     Stopped,
 }
 
+/// How many `try_send` attempts a metrics probe makes against a full
+/// ingress queue before giving up (each attempt yields the CPU — the
+/// service thread is actively draining).
+const SNAPSHOT_RETRIES: usize = 1024;
+
 /// Handle to a running coordinator. Cloneable across threads; all XLA work
 /// happens on the single service thread.
 pub struct Service {
-    tx: SyncSender<Msg>,
+    tx: Option<SyncSender<Msg>>,
     handle: Option<JoinHandle<()>>,
+    default_deadline: Option<Duration>,
 }
 
 impl Service {
     /// Start the service thread (loads the registry there — the PJRT client
     /// must live on that thread).
     pub fn start(cfg: ServiceConfig) -> Service {
+        let default_deadline = cfg.default_deadline;
         let (tx, rx) = sync_channel::<Msg>(cfg.queue_cap);
         let handle = std::thread::Builder::new()
             .name("fkl-coordinator".into())
             .spawn(move || service_loop(cfg, rx))
             .expect("spawn coordinator thread");
-        Service { tx, handle: Some(handle) }
+        Service { tx: Some(tx), handle: Some(handle), default_deadline }
     }
 
     /// Submit one item; returns a receiver for the result. Non-blocking:
@@ -85,31 +171,83 @@ impl Service {
     /// every window: identical requests stack into one HF launch, the
     /// mixed remainder (different params, signatures, chain lengths —
     /// structured and reduce streams included) shares ONE divergent-HF
-    /// pass, and a lone leftover serves per item.
+    /// pass, and a lone leftover serves per item. The configured
+    /// [`ServiceConfig::default_deadline`] (if any) applies.
     pub fn submit(
         &self,
         pipeline: impl Into<Pipeline>,
         item: Tensor,
-    ) -> Result<Receiver<Result<Tensor, String>>, SubmitError> {
+    ) -> Result<Receiver<Result<Tensor, ServeError>>, SubmitError> {
+        self.submit_opt(pipeline.into(), item, self.default_deadline)
+    }
+
+    /// [`Service::submit`] with an explicit serve-by deadline, measured
+    /// from now. A request that cannot launch before its deadline is
+    /// answered with [`ServeError::Shed`] (at ingress) or
+    /// [`ServeError::Expired`] (at pop time) instead of being served late.
+    pub fn submit_with_deadline(
+        &self,
+        pipeline: impl Into<Pipeline>,
+        item: Tensor,
+        deadline: Duration,
+    ) -> Result<Receiver<Result<Tensor, ServeError>>, SubmitError> {
+        self.submit_opt(pipeline.into(), item, Some(deadline))
+    }
+
+    fn submit_opt(
+        &self,
+        pipeline: Pipeline,
+        item: Tensor,
+        deadline: Option<Duration>,
+    ) -> Result<Receiver<Result<Tensor, ServeError>>, SubmitError> {
+        let Some(tx) = self.tx.as_ref() else {
+            return Err(SubmitError::Stopped);
+        };
         let (rtx, rrx) = sync_channel(1);
-        let req =
-            PendingRequest { pipeline: pipeline.into(), item, enqueued: Instant::now(), reply: rtx };
-        match self.tx.try_send(Msg::Request(req)) {
+        let enqueued = Instant::now();
+        let deadline = deadline.and_then(|d| enqueued.checked_add(d));
+        let req = PendingRequest { pipeline, item, enqueued, deadline, reply: rtx };
+        match tx.try_send(Msg::Request(req)) {
             Ok(()) => Ok(rrx),
             Err(TrySendError::Full(_)) => Err(SubmitError::QueueFull),
             Err(TrySendError::Disconnected(_)) => Err(SubmitError::Stopped),
         }
     }
 
+    /// Snapshot the service metrics. Bounded: a full ingress queue makes
+    /// the probe retry-with-yield a fixed number of times and then return
+    /// `None` — it never blocks behind backpressure.
     pub fn metrics(&self) -> Option<MetricsSnapshot> {
-        let (tx, rx) = sync_channel(1);
-        self.tx.send(Msg::Snapshot(tx)).ok()?;
-        rx.recv().ok()
+        let tx = self.tx.as_ref()?;
+        let (stx, srx) = sync_channel(1);
+        let mut msg = Msg::Snapshot(stx);
+        for _ in 0..SNAPSHOT_RETRIES {
+            match tx.try_send(msg) {
+                Ok(()) => return srx.recv().ok(),
+                Err(TrySendError::Full(m)) => {
+                    msg = m;
+                    std::thread::yield_now();
+                }
+                Err(TrySendError::Disconnected(_)) => return None,
+            }
+        }
+        None
     }
 
     /// Graceful shutdown: drain pending work, then join.
     pub fn shutdown(mut self) {
-        let _ = self.tx.send(Msg::Shutdown);
+        self.stop();
+    }
+
+    /// Shared by [`Service::shutdown`] and `Drop`: never blocks on a full
+    /// ingress queue. A polite `Shutdown` is *tried*; either way the sender
+    /// is dropped, and channel disconnect makes the service loop flush
+    /// pending work and exit — so the join below always completes.
+    fn stop(&mut self) {
+        if let Some(tx) = self.tx.take() {
+            let _ = tx.try_send(Msg::Shutdown);
+            drop(tx);
+        }
         if let Some(h) = self.handle.take() {
             let _ = h.join();
         }
@@ -118,10 +256,7 @@ impl Service {
 
 impl Drop for Service {
     fn drop(&mut self) {
-        let _ = self.tx.send(Msg::Shutdown);
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
-        }
+        self.stop();
     }
 }
 
@@ -201,49 +336,125 @@ impl Backend {
     }
 }
 
-fn service_loop(cfg: ServiceConfig, rx: Receiver<Msg>) {
+/// What one backend-construction attempt produced.
+enum BuildOutcome {
+    Ready { backend: Backend, degraded: Option<String> },
+    /// Unrecoverable (pinned XLA without a registry): serve typed errors.
+    Poisoned(String),
+}
+
+fn build_backend(cfg: &ServiceConfig, faults: &Option<Arc<FaultInjector>>) -> BuildOutcome {
     let dir = cfg.artifact_dir.clone().unwrap_or_else(crate::default_artifact_dir);
-    let host_backend = || Backend::Host {
-        engine: HostFusedEngine::new(),
-        buckets: DEFAULT_BUCKETS.to_vec(),
+    let host_backend = || {
+        let engine = match faults {
+            Some(inj) => HostFusedEngine::new().with_fault_injector(inj.clone()),
+            None => HostFusedEngine::new(),
+        };
+        Backend::Host { engine, buckets: DEFAULT_BUCKETS.to_vec() }
     };
-    let backend = match cfg.engine {
-        EngineSelect::HostFused => host_backend(),
-        // without the pjrt feature there is no XLA to prefer
-        EngineSelect::Auto if !cfg!(feature = "pjrt") => host_backend(),
+    match cfg.engine {
+        EngineSelect::HostFused => BuildOutcome::Ready { backend: host_backend(), degraded: None },
+        // without the pjrt feature there is no XLA to prefer — degrade
+        // visibly (structured, not just stderr)
+        EngineSelect::Auto if !cfg!(feature = "pjrt") => BuildOutcome::Ready {
+            backend: host_backend(),
+            degraded: Some(
+                "no XLA backend compiled (pjrt feature off); \
+                 serving with the host fused engine"
+                    .into(),
+            ),
+        },
         EngineSelect::Xla | EngineSelect::Auto => match crate::runtime::Registry::load(&dir) {
             Ok(r) => {
                 let reg = std::rc::Rc::new(r);
                 let buckets = reg.geometry["hf_batches"]
                     .as_usize_vec()
                     .unwrap_or_else(|| DEFAULT_BUCKETS.to_vec());
-                Backend::Xla { engine: FusedEngine::new(reg), buckets }
-            }
-            Err(e) if cfg.engine == EngineSelect::Auto => {
-                // degrade to the backend that runs everywhere, visibly
-                eprintln!("fkl-coordinator: artifact registry unavailable ({e:#}); \
-                           serving with the host fused engine");
-                host_backend()
-            }
-            Err(e) => {
-                // pinned-XLA poison: reply to every request with the error
-                for msg in rx.iter() {
-                    match msg {
-                        Msg::Request(r) => {
-                            let _ = r.reply.send(Err(format!("registry: {e}")));
-                        }
-                        Msg::Snapshot(tx) => {
-                            let _ = tx.send(MetricsSnapshot::default());
-                        }
-                        Msg::Shutdown => break,
-                    }
+                BuildOutcome::Ready {
+                    backend: Backend::Xla { engine: FusedEngine::new(reg), buckets },
+                    degraded: None,
                 }
+            }
+            Err(e) if cfg.engine == EngineSelect::Auto => BuildOutcome::Ready {
+                backend: host_backend(),
+                degraded: Some(format!(
+                    "artifact registry unavailable ({e:#}); \
+                     serving with the host fused engine"
+                )),
+            },
+            Err(e) => BuildOutcome::Poisoned(format!("registry: {e}")),
+        },
+    }
+}
+
+/// Terminal state for a service that never got a working backend: answer
+/// every request with a typed error until shutdown. The supervisor lands
+/// here after exhausting [`ServiceConfig::max_build_retries`].
+fn poison_loop(rx: Receiver<Msg>, msg: String, restarts: u64) {
+    eprintln!("fkl-coordinator: {msg}");
+    for m in rx.iter() {
+        match m {
+            Msg::Request(r) => {
+                let _ = r.reply.send(Err(ServeError::Unavailable(msg.clone())));
+            }
+            Msg::Snapshot(tx) => {
+                let _ = tx.send(MetricsSnapshot {
+                    supervisor_restarts: restarts,
+                    degraded: Some(msg.clone()),
+                    ..MetricsSnapshot::default()
+                });
+            }
+            Msg::Shutdown => break,
+        }
+    }
+}
+
+fn service_loop(cfg: ServiceConfig, rx: Receiver<Msg>) {
+    let faults: Option<Arc<FaultInjector>> = cfg
+        .faults
+        .as_ref()
+        .filter(|p| !p.is_empty())
+        .map(|p| Arc::new(FaultInjector::new(p.clone())));
+
+    // supervised construction: a panicking backend constructor (exercised
+    // via tier=build faults) is rebuilt up to the retry budget
+    let mut restarts: u64 = 0;
+    let (backend, degraded) = loop {
+        let attempt = exec::catch_launch(|| {
+            if let Some(inj) = &faults {
+                inj.apply(FaultTier::Build, "backend")?;
+            }
+            Ok(build_backend(&cfg, &faults))
+        });
+        match attempt {
+            Ok(BuildOutcome::Ready { backend, degraded }) => break (backend, degraded),
+            Ok(BuildOutcome::Poisoned(msg)) => {
+                poison_loop(rx, msg, restarts);
                 return;
             }
-        },
+            Err(e) => {
+                restarts += 1;
+                if restarts > cfg.max_build_retries as u64 {
+                    poison_loop(
+                        rx,
+                        format!("backend construction kept failing ({e:#})"),
+                        restarts,
+                    );
+                    return;
+                }
+            }
+        }
     };
+
     let mut batcher = Batcher::new(cfg.policy);
     let mut metrics = Metrics::default();
+    let mut breakers = BreakerBoard::new(cfg.breaker);
+    metrics.supervisor_restarts = restarts;
+    metrics.degraded = degraded;
+    if let Some(d) = &metrics.degraded {
+        // printed exactly once; the structured copy lives in the snapshot
+        eprintln!("fkl-coordinator: {d}");
+    }
 
     loop {
         // 1. ingest: wait until something arrives or the oldest group expires
@@ -253,31 +464,31 @@ fn service_loop(cfg: ServiceConfig, rx: Receiver<Msg>) {
             .unwrap_or(Duration::from_millis(50));
         match rx.recv_timeout(timeout) {
             Ok(Msg::Request(r)) => {
-                batcher.push(r);
+                ingest(r, &mut batcher, &mut metrics);
                 // opportunistically drain whatever else is queued
                 while let Ok(m) = rx.try_recv() {
                     match m {
-                        Msg::Request(r) => batcher.push(r),
+                        Msg::Request(r) => ingest(r, &mut batcher, &mut metrics),
                         Msg::Snapshot(tx) => {
-                            let _ = tx.send(snapshot(&mut metrics, &backend));
+                            let _ = tx.send(snapshot(&mut metrics, &backend, &breakers));
                         }
                         Msg::Shutdown => {
-                            flush(&mut batcher, &backend, &mut metrics);
+                            flush(&mut batcher, &backend, &mut metrics, &mut breakers, &faults);
                             return;
                         }
                     }
                 }
             }
             Ok(Msg::Snapshot(tx)) => {
-                let _ = tx.send(snapshot(&mut metrics, &backend));
+                let _ = tx.send(snapshot(&mut metrics, &backend, &breakers));
             }
             Ok(Msg::Shutdown) => {
-                flush(&mut batcher, &backend, &mut metrics);
+                flush(&mut batcher, &backend, &mut metrics, &mut breakers, &faults);
                 return;
             }
             Err(RecvTimeoutError::Timeout) => {}
             Err(RecvTimeoutError::Disconnected) => {
-                flush(&mut batcher, &backend, &mut metrics);
+                flush(&mut batcher, &backend, &mut metrics, &mut breakers, &faults);
                 return;
             }
         }
@@ -285,31 +496,75 @@ fn service_loop(cfg: ServiceConfig, rx: Receiver<Msg>) {
         // 2. launch: collect EVERY ready group into one scheduling window —
         // identical pipelines stack per group (tier 1), and the signature/
         // param-divergent remainder of the WHOLE window shares one
-        // divergent-HF pass (tier 2) instead of degrading per item
+        // divergent-HF pass (tier 2) instead of degrading per item.
+        // Deadline-expired requests split out at pop time and are answered
+        // immediately, never served.
         let now = Instant::now();
         let mut groups = Vec::new();
-        while let Some(group) = batcher.pop_ready(now) {
-            groups.push(group);
+        while let Some(popped) = batcher.pop_ready(now) {
+            expire(popped.expired, &mut metrics);
+            if !popped.live.is_empty() {
+                groups.push(popped.live);
+            }
         }
         if !groups.is_empty() {
-            serve_window(groups, &backend, &mut metrics);
+            serve_window(groups, &backend, &mut metrics, &mut breakers, &faults);
         }
     }
 }
 
-fn snapshot(metrics: &mut Metrics, backend: &Backend) -> MetricsSnapshot {
+/// Admission control. A deadline-carrying request is shed right here when
+/// it is dead on arrival, or when the queue-delay estimate (pending items x
+/// the EWMA per-item cost) says it cannot launch in time — the client
+/// learns *now*, not after the queue wasted time on it.
+fn ingest(req: Req, batcher: &mut Batcher<ReplyTx>, metrics: &mut Metrics) {
+    if let Some(dl) = req.deadline {
+        let dead_on_arrival = dl <= req.enqueued;
+        let est = Duration::from_micros((metrics.ewma_item_us * batcher.pending() as f64) as u64);
+        let remaining = dl.saturating_duration_since(Instant::now());
+        if dead_on_arrival || (est > Duration::ZERO && est > remaining) {
+            metrics.shed += 1;
+            let _ = req.reply.send(Err(ServeError::Shed));
+            return;
+        }
+    }
+    batcher.push(req);
+}
+
+/// Answer deadline-expired requests (split out by the batcher at pop time).
+fn expire(expired: Vec<Req>, metrics: &mut Metrics) {
+    for req in expired {
+        metrics.expired += 1;
+        metrics.observe_latency(req.enqueued.elapsed());
+        let _ = req.reply.send(Err(ServeError::Expired));
+    }
+}
+
+fn snapshot(metrics: &mut Metrics, backend: &Backend, breakers: &BreakerBoard) -> MetricsSnapshot {
     metrics.planner = backend.planner_stats();
-    metrics.snapshot()
+    let mut s = metrics.snapshot();
+    s.breaker_trips = breakers.trips();
+    s.breaker_rejected = breakers.rejected();
+    s.breakers = breakers.snapshot();
+    s
 }
 
 fn flush(
-    batcher: &mut Batcher<SyncSender<Result<Tensor, String>>>,
+    batcher: &mut Batcher<ReplyTx>,
     backend: &Backend,
     metrics: &mut Metrics,
+    breakers: &mut BreakerBoard,
+    faults: &Option<Arc<FaultInjector>>,
 ) {
-    let groups = batcher.drain_all();
+    let mut groups = Vec::new();
+    for popped in batcher.drain_all(Instant::now()) {
+        expire(popped.expired, metrics);
+        if !popped.live.is_empty() {
+            groups.push(popped.live);
+        }
+    }
     if !groups.is_empty() {
-        serve_window(groups, backend, metrics);
+        serve_window(groups, backend, metrics, breakers, faults);
     }
 }
 
@@ -317,6 +572,46 @@ fn observe_launch(metrics: &mut Metrics, backend: &Backend) {
     metrics.launches += backend.last_launches() as u64;
     if backend.last_was_fallback() {
         metrics.unfused_fallbacks += 1;
+    }
+}
+
+/// Successful reply: count completion, record latency and deadline margin.
+fn complete_ok(req: &Req, t: Tensor, metrics: &mut Metrics) {
+    metrics.completed += 1;
+    metrics.observe_latency(req.enqueued.elapsed());
+    if let Some(dl) = req.deadline {
+        metrics.observe_margin(dl.saturating_duration_since(Instant::now()));
+    }
+    let _ = req.reply.send(Ok(t));
+}
+
+/// Failed reply: count the failure AND record its latency — the
+/// slow-failure tail stays visible in the distribution.
+fn fail_request(req: &Req, err: ServeError, metrics: &mut Metrics) {
+    metrics.failed += 1;
+    metrics.observe_latency(req.enqueued.elapsed());
+    let _ = req.reply.send(Err(err));
+}
+
+/// Convert a launch error into the typed reply, counting contained panics.
+fn serve_error(e: &anyhow::Error, metrics: &mut Metrics) -> ServeError {
+    if let Some(p) = e.downcast_ref::<exec::LaunchPanic>() {
+        metrics.launch_panics += 1;
+        ServeError::LaunchPanicked(p.msg.clone())
+    } else {
+        ServeError::Exec(format!("{e:#}"))
+    }
+}
+
+/// Reject a whole group because its stream's breaker is open.
+fn reject_open(group: &[Req], key: &str, metrics: &mut Metrics, breakers: &mut BreakerBoard) {
+    if group.is_empty() {
+        return;
+    }
+    breakers.note_rejected(key, group.len());
+    for req in group {
+        metrics.observe_latency(req.enqueued.elapsed());
+        let _ = req.reply.send(Err(ServeError::CircuitOpen { stream: key.to_string() }));
     }
 }
 
@@ -329,36 +624,81 @@ fn observe_launch(metrics: &mut Metrics, backend: &Backend) {
 ///    signature-divergent company, structured/reduce streams, uncovered
 ///    buckets) serves in ONE thread-chunked pass;
 /// 3. **per-item fallback** — a lone leftover launches alone.
-fn serve_window(groups: Vec<Vec<Req>>, backend: &Backend, metrics: &mut Metrics) {
-    let mut leftovers: Vec<Req> = Vec::new();
+///
+/// Each group first passes its stream's circuit breaker, which may cap the
+/// tier (demoted streams enter the ladder lower down), admit a single
+/// half-open probe, or reject the group outright with a typed error.
+fn serve_window(
+    groups: Vec<Vec<Req>>,
+    backend: &Backend,
+    metrics: &mut Metrics,
+    breakers: &mut BreakerBoard,
+    faults: &Option<Arc<FaultInjector>>,
+) {
+    let mut divergent_pool: Vec<Req> = Vec::new();
+    let mut per_item_pool: Vec<Req> = Vec::new();
     for group in groups {
-        leftovers.extend(stack_tier(group, backend, metrics));
+        if group.is_empty() {
+            continue;
+        }
+        let key = Signature::of(&group[0].pipeline).stream_key();
+        match breakers.admit(&key) {
+            Admission::Serve(ServeTier::Stacked) => {
+                divergent_pool.extend(stack_tier(group, backend, metrics, breakers, faults));
+            }
+            Admission::Serve(ServeTier::Divergent) => divergent_pool.extend(group),
+            Admission::Serve(ServeTier::PerItem) => per_item_pool.extend(group),
+            Admission::Probe => {
+                // exactly one request probes (per item); company is rejected
+                let mut it = group.into_iter();
+                if let Some(probe) = it.next() {
+                    per_item_pool.push(probe);
+                }
+                let rest: Vec<Req> = it.collect();
+                reject_open(&rest, &key, metrics, breakers);
+            }
+            Admission::Reject => reject_open(&group, &key, metrics, breakers),
+        }
     }
-    if leftovers.len() >= 2 {
-        execute_divergent(leftovers, backend, metrics);
+    if divergent_pool.len() >= 2 {
+        execute_divergent(divergent_pool, backend, metrics, breakers);
     } else {
-        execute_per_item(&leftovers, backend, metrics);
+        per_item_pool.append(&mut divergent_pool);
     }
+    execute_per_item(&per_item_pool, backend, metrics, breakers, faults);
 }
 
 /// Serve each request of a group on its own (no HF stacking): the ladder's
-/// final tier, for a lone leftover.
+/// final tier — lone leftovers, breaker-demoted streams, half-open probes.
+/// Every launch is panic-isolated.
 fn execute_per_item(
-    group: &[PendingRequest<SyncSender<Result<Tensor, String>>>],
+    group: &[Req],
     backend: &Backend,
     metrics: &mut Metrics,
+    breakers: &mut BreakerBoard,
+    faults: &Option<Arc<FaultInjector>>,
 ) {
     for req in group {
-        match backend.run(&req.pipeline, &req.item) {
+        let key = Signature::of(&req.pipeline).stream_key();
+        let t0 = Instant::now();
+        let run = exec::catch_launch(|| {
+            if let Some(inj) = faults {
+                inj.apply(FaultTier::PerItem, &key)?;
+            }
+            backend.run(&req.pipeline, &req.item)
+        });
+        match run {
             Ok(t) => {
+                metrics.note_service_cost(1, t0.elapsed());
                 observe_launch(metrics, backend);
                 metrics.batched_items += 1;
-                metrics.observe_latency(req.enqueued.elapsed());
-                let _ = req.reply.send(Ok(t));
+                breakers.record_success(&key);
+                complete_ok(req, t, metrics);
             }
             Err(e) => {
-                metrics.failed += 1;
-                let _ = req.reply.send(Err(format!("{e:#}")));
+                breakers.record_failure(&key);
+                let err = serve_error(&e, metrics);
+                fail_request(req, err, metrics);
             }
         }
     }
@@ -368,12 +708,32 @@ fn execute_per_item(
 /// signatures, mixed chain lengths; dense, structured and reduce streams
 /// alike — as ONE divergent-HF pass. Per-item results are bit-equal to
 /// per-item serving (the divergent tier's contract); a failing item fails
-/// alone and never poisons the window.
-fn execute_divergent(group: Vec<Req>, backend: &Backend, metrics: &mut Metrics) {
+/// alone and never poisons the window (each item is panic-isolated inside
+/// its lane).
+fn execute_divergent(
+    group: Vec<Req>,
+    backend: &Backend,
+    metrics: &mut Metrics,
+    breakers: &mut BreakerBoard,
+) {
+    let t0 = Instant::now();
     let window: Vec<(&Pipeline, &Tensor)> =
         group.iter().map(|r| (&r.pipeline, &r.item)).collect();
-    let out = backend.run_many(&window);
+    let out = match exec::catch_launch(|| Ok(backend.run_many(&window))) {
+        Ok(out) => out,
+        Err(e) => {
+            // the pass itself panicked outside any item's isolation: every
+            // rider fails, every rider's stream records the failure
+            let err = serve_error(&e, metrics);
+            for req in &group {
+                breakers.record_failure(&Signature::of(&req.pipeline).stream_key());
+                fail_request(req, err.clone(), metrics);
+            }
+            return;
+        }
+    };
     metrics.launches += out.launches as u64;
+    metrics.note_service_cost(group.len(), t0.elapsed());
     // only a genuine divergent pass counts in the tier's metrics — the XLA
     // front door serves signature-homogeneous leftovers per item through
     // the artifact path, and that traffic must not inflate occupancy
@@ -384,15 +744,17 @@ fn execute_divergent(group: Vec<Req>, backend: &Backend, metrics: &mut Metrics) 
         metrics.divergent_padded_elems += out.padded_work_elems as u64;
     }
     for (req, res) in group.iter().zip(out.results) {
+        let key = Signature::of(&req.pipeline).stream_key();
         match res {
             Ok(t) => {
                 metrics.batched_items += 1;
-                metrics.observe_latency(req.enqueued.elapsed());
-                let _ = req.reply.send(Ok(t));
+                breakers.record_success(&key);
+                complete_ok(req, t, metrics);
             }
             Err(e) => {
-                metrics.failed += 1;
-                let _ = req.reply.send(Err(format!("{e:#}")));
+                breakers.record_failure(&key);
+                let err = serve_error(&e, metrics);
+                fail_request(req, err, metrics);
             }
         }
     }
@@ -406,20 +768,32 @@ fn execute_divergent(group: Vec<Req>, backend: &Backend, metrics: &mut Metrics) 
 /// launch binds ONE param set — company never silently inherits the head's
 /// params), structured/reduce streams (their items are shared FRAMES or
 /// per-request statistics, not stackable planes), streams whose backend
-/// covers no bucket, and lone heads that would launch alone anyway.
-fn stack_tier(group: Vec<Req>, backend: &Backend, metrics: &mut Metrics) -> Vec<Req> {
+/// covers no bucket, and lone heads that would launch alone anyway. The
+/// stacked launch is panic-isolated; a failure counts ONE breaker event
+/// against the stream (the launch failed, not each rider independently).
+fn stack_tier(
+    group: Vec<Req>,
+    backend: &Backend,
+    metrics: &mut Metrics,
+    breakers: &mut BreakerBoard,
+    faults: &Option<Arc<FaultInjector>>,
+) -> Vec<Req> {
     if group[0].pipeline.has_structured_boundary() {
         // dtype is checkable up front; geometry is per-frame
         let proto_dtin = group[0].pipeline.dtin;
         let (group, malformed): (Vec<_>, Vec<_>) =
             group.into_iter().partition(|r| r.item.dtype() == proto_dtin);
         for req in &malformed {
-            metrics.failed += 1;
-            let _ = req.reply.send(Err(format!(
-                "item dtype {} does not match pipeline dtin {}",
-                req.item.dtype(),
-                proto_dtin
-            )));
+            // client error: counted as failed, never against the breaker
+            fail_request(
+                req,
+                ServeError::BadItem(format!(
+                    "item dtype {} does not match pipeline dtin {}",
+                    req.item.dtype(),
+                    proto_dtin
+                )),
+                metrics,
+            );
         }
         return group;
     }
@@ -434,14 +808,17 @@ fn stack_tier(group: Vec<Req>, backend: &Backend, metrics: &mut Metrics) -> Vec<
         r.item.dtype() == proto_dtin && r.item.shape() == item_shape_want.as_slice()
     });
     for req in &malformed {
-        metrics.failed += 1;
-        let _ = req.reply.send(Err(format!(
-            "item dtype {} shape {:?} does not match pipeline ({} {:?})",
-            req.item.dtype(),
-            req.item.shape(),
-            proto_dtin,
-            item_shape_want
-        )));
+        fail_request(
+            req,
+            ServeError::BadItem(format!(
+                "item dtype {} shape {:?} does not match pipeline ({} {:?})",
+                req.item.dtype(),
+                req.item.shape(),
+                proto_dtin,
+                item_shape_want
+            )),
+            metrics,
+        );
     }
     if group.is_empty() {
         return group;
@@ -489,24 +866,35 @@ fn stack_tier(group: Vec<Req>, backend: &Backend, metrics: &mut Metrics) -> Vec<
     // last item) — no per-item clone + re-concat copy
     let items: Vec<&Tensor> = group.iter().map(|r| &r.item).collect();
     let input = stack_batch(&items, bucket, &proto.shape);
+    let key = Signature::of(proto).stream_key();
 
-    match backend.run(&batched, &input) {
+    let t0 = Instant::now();
+    let run = exec::catch_launch(|| {
+        if let Some(inj) = faults {
+            inj.apply(FaultTier::Stacked, &key)?;
+        }
+        backend.run(&batched, &input)
+    });
+    match run {
         Ok(out) => {
+            metrics.note_service_cost(m, t0.elapsed());
             observe_launch(metrics, backend);
             metrics.batched_items += m as u64;
             metrics.padded_planes += (bucket - m) as u64;
+            breakers.record_success(&key);
             let item_elems: usize = out.len() / bucket;
             let item_shape: Vec<usize> = out.shape()[1..].to_vec();
             for (b, req) in group.iter().enumerate() {
                 let t = slice_batch(&out, b, item_elems, &item_shape);
-                metrics.observe_latency(req.enqueued.elapsed());
-                let _ = req.reply.send(Ok(t));
+                complete_ok(req, t, metrics);
             }
         }
         Err(e) => {
-            metrics.failed += group.len() as u64;
+            // one launch, one breaker event — then fail every rider typed
+            breakers.record_failure(&key);
+            let err = serve_error(&e, metrics);
             for req in &group {
-                let _ = req.reply.send(Err(format!("{e:#}")));
+                fail_request(req, err.clone(), metrics);
             }
         }
     }

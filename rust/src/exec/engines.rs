@@ -55,6 +55,40 @@ pub struct UnsupportedOp {
     pub token: String,
 }
 
+/// Typed error carried when [`catch_launch`] contains a panic: the launch is
+/// poisoned, but only the requests riding on it fail — the caller (the
+/// coordinator's serving ladder, the divergent lanes) keeps going.
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+#[error("launch panicked (isolated): {msg}")]
+pub struct LaunchPanic {
+    /// The panic payload, rendered (`&str`/`String` payloads verbatim).
+    pub msg: String,
+}
+
+/// Render a caught panic payload for [`LaunchPanic`].
+pub fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&'static str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Run one launch under `catch_unwind`, converting a panic into a typed
+/// [`LaunchPanic`] error instead of unwinding through the service thread.
+/// `AssertUnwindSafe` is sound here because every caller treats the launch
+/// as failed wholesale on `Err` — no engine state is trusted mid-launch,
+/// and the engines' interior mutability (plan caches, run counters) is
+/// insert-only bookkeeping that stays coherent across an unwind.
+pub fn catch_launch<T>(f: impl FnOnce() -> Result<T>) -> Result<T> {
+    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(f)) {
+        Ok(r) => r,
+        Err(payload) => Err(LaunchPanic { msg: panic_message(payload.as_ref()) }.into()),
+    }
+}
+
 fn body_names<'a>(p: &'a Pipeline, engine: &'static str) -> Result<Vec<&'a str>> {
     // dense per-op chains cannot reproduce a structured boundary's access
     // pattern — refuse with the typed error instead of silently executing

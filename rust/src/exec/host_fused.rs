@@ -61,6 +61,11 @@ pub struct HostFusedEngine {
     structured: Cell<usize>,
     reduces: Cell<usize>,
     divergent: Cell<usize>,
+    /// Armed fault injector (absent in production — zero cost when off).
+    /// Consulted once per divergent-window item, serially in window order
+    /// BEFORE the lanes spawn, so injected faults land at deterministic
+    /// launch indices regardless of lane scheduling.
+    faults: Option<std::sync::Arc<crate::faults::FaultInjector>>,
 }
 
 impl HostFusedEngine {
@@ -80,7 +85,19 @@ impl HostFusedEngine {
             structured: Cell::new(0),
             reduces: Cell::new(0),
             divergent: Cell::new(0),
+            faults: None,
         }
+    }
+
+    /// Arm a fault injector: divergent-window items consult it (tier
+    /// `Divergent`) and fail alone when selected — the harness for proving
+    /// the window's failure-isolation contract.
+    pub fn with_fault_injector(
+        mut self,
+        faults: std::sync::Arc<crate::faults::FaultInjector>,
+    ) -> HostFusedEngine {
+        self.faults = Some(faults);
+        self
     }
 
     /// Plan lookup/compile, cached per signature.
@@ -186,12 +203,26 @@ impl HostFusedEngine {
         // are unchanged either way (every pass is thread-count invariant),
         // and sub-threshold items clamp their own worker count back to 1
         let lane_workers = (self.threads / plan.lanes().max(1)).max(1);
+        // consult the fault injector serially, in window order, BEFORE any
+        // lane spawns: injected faults land at deterministic launch indices
+        // under every lane layout (and at zero cost when no injector is armed)
+        let injected: Vec<Option<InjectedHere>> = match &self.faults {
+            None => window.iter().map(|_| None).collect(),
+            Some(inj) => pipes
+                .iter()
+                .map(|p| {
+                    inj.check(crate::faults::FaultTier::Divergent, &Signature::of(p).stream_key())
+                })
+                .collect(),
+        };
         let mut slots: Vec<Option<Result<Tensor>>> = Vec::with_capacity(window.len());
         slots.resize_with(window.len(), || None);
         if plan.lanes() <= 1 {
             let items = window.iter().zip(plan_refs.iter().copied());
-            for (slot, (&(p, t), hp)) in slots.iter_mut().zip(items) {
-                *slot = Some(execute_any(hp, p, t, self.threads));
+            for ((slot, (&(p, t), hp)), fault) in
+                slots.iter_mut().zip(items).zip(injected.iter().cloned())
+            {
+                *slot = Some(divergent_item(hp, p, t, self.threads, fault));
             }
         } else {
             std::thread::scope(|scope| {
@@ -201,10 +232,13 @@ impl HostFusedEngine {
                     rest = tail;
                     let lane_win = &window[r.start..r.end];
                     let lane_plans = &plan_refs[r.start..r.end];
+                    let lane_faults = &injected[r.start..r.end];
                     scope.spawn(move || {
                         let items = lane_win.iter().zip(lane_plans.iter().copied());
-                        for (slot, (&(p, t), hp)) in head.iter_mut().zip(items) {
-                            *slot = Some(execute_any(hp, p, t, lane_workers));
+                        for ((slot, (&(p, t), hp)), fault) in
+                            head.iter_mut().zip(items).zip(lane_faults.iter().cloned())
+                        {
+                            *slot = Some(divergent_item(hp, p, t, lane_workers, fault));
                         }
                     });
                 }
@@ -398,6 +432,29 @@ impl DivergentOutcome {
     pub fn occupancy(&self) -> f64 {
         crate::fusion::occupancy_ratio(self.total_work_elems as u64, self.padded_work_elems as u64)
     }
+}
+
+/// A pre-checked fault for one divergent-window item (checked serially on
+/// the dispatching thread; triggered inside the item's own lane).
+type InjectedHere = (crate::faults::FaultAction, crate::faults::InjectedFault);
+
+/// One divergent-window item, panic-isolated: an injected fault or a panic
+/// anywhere in the monomorphized loop fails THIS item's slot with a typed
+/// error ([`super::LaunchPanic`] for panics) — the lane, and the window,
+/// keep serving.
+fn divergent_item(
+    plan: &HostPlan,
+    p: &Pipeline,
+    input: &Tensor,
+    threads: usize,
+    fault: Option<InjectedHere>,
+) -> Result<Tensor> {
+    super::catch_launch(|| {
+        if let Some((action, info)) = fault {
+            crate::faults::trigger(action, info)?;
+        }
+        execute_any(plan, p, input, threads)
+    })
 }
 
 /// Execute one already-planned run at an explicit worker count: the shared

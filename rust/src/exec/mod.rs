@@ -25,7 +25,7 @@ mod engines;
 mod host_fused;
 
 pub use engines::{
-    concat_batch, slice_batch, stack_batch, Engine, EngineSelect, FusedEngine, GraphEngine,
-    UnfusedEngine, UnsupportedOp,
+    catch_launch, concat_batch, panic_message, slice_batch, stack_batch, Engine, EngineSelect,
+    FusedEngine, GraphEngine, LaunchPanic, UnfusedEngine, UnsupportedOp,
 };
 pub use host_fused::{DivergentOutcome, HostFusedEngine, HostLane};

@@ -1,0 +1,413 @@
+//! Deterministic fault injection for the serving stack.
+//!
+//! Production fault tolerance is unverifiable without a way to *cause*
+//! faults on demand: a panic inside a monomorphized loop, an `Err` from one
+//! launch of one signature, a backend that dies during construction. This
+//! module provides that switch. A [`FaultPlan`] is a list of rules keyed by
+//! signature (stream-key substring), execution tier and launch index; an
+//! armed [`FaultInjector`] is consulted at every launch site and
+//! deterministically forces an `Err` or a panic at exactly the selected
+//! launches. With no plan configured the injector is simply absent
+//! (`Option::None` at every call site) — zero cost when off.
+//!
+//! The spec grammar (also accepted from the `FKL_FAULTS` environment
+//! variable by the `fkl` CLI):
+//!
+//! ```text
+//! spec  := rule (';' rule)*
+//! rule  := field (',' field)*
+//! field := 'sig=' SUBSTR | 'tier=' (stacked|divergent|peritem|build|any)
+//!        | 'launch=' (K | A..B | '*') | 'action=' (err|panic) | 'count=' N
+//! ```
+//!
+//! `sig` matches when the stream key *contains* the substring (`*` or absent
+//! = any signature). `launch` selects by the rule's own 0-based counter of
+//! sig+tier-matching launches (`A..B` is half-open), so a rule fires at a
+//! reproducible position in the launch sequence regardless of what other
+//! rules do. `count` caps total fires. Example — fail the third stacked
+//! launch of any u8 stream with a panic:
+//!
+//! ```text
+//! sig=u8,tier=stacked,launch=2,action=panic
+//! ```
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// What an injected fault does at the selected launch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Return a typed [`InjectedFault`] error from the launch.
+    Error,
+    /// Panic inside the launch (exercises the `catch_unwind` isolation).
+    Panic,
+}
+
+/// Where in the serving ladder a launch is happening when the injector is
+/// consulted.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultTier {
+    /// Tier 1: an identical stacked-HF bucket launch.
+    Stacked,
+    /// Tier 2: one item of a divergent-HF window (consulted serially in
+    /// window order before the lanes spawn, so indices are deterministic).
+    Divergent,
+    /// Tier 3: a per-item launch.
+    PerItem,
+    /// Backend construction (exercises the supervisor restart path).
+    Build,
+    /// Rule wildcard: matches every tier.
+    Any,
+}
+
+impl FaultTier {
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultTier::Stacked => "stacked",
+            FaultTier::Divergent => "divergent",
+            FaultTier::PerItem => "peritem",
+            FaultTier::Build => "build",
+            FaultTier::Any => "any",
+        }
+    }
+
+    fn parse(s: &str) -> Option<FaultTier> {
+        match s {
+            "stacked" => Some(FaultTier::Stacked),
+            "divergent" => Some(FaultTier::Divergent),
+            "peritem" | "per-item" | "per_item" => Some(FaultTier::PerItem),
+            "build" => Some(FaultTier::Build),
+            "any" | "*" => Some(FaultTier::Any),
+            _ => None,
+        }
+    }
+
+    fn matches(self, at: FaultTier) -> bool {
+        self == FaultTier::Any || self == at
+    }
+}
+
+/// Which launch indices (per rule, counting only sig+tier matches) fire.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LaunchSel {
+    /// Every matching launch.
+    Any,
+    /// Exactly the K-th matching launch (0-based).
+    Index(u64),
+    /// The half-open range `A..B` of matching launches.
+    Range(u64, u64),
+}
+
+impl LaunchSel {
+    fn matches(self, i: u64) -> bool {
+        match self {
+            LaunchSel::Any => true,
+            LaunchSel::Index(k) => i == k,
+            LaunchSel::Range(a, b) => a <= i && i < b,
+        }
+    }
+}
+
+/// One parsed fault rule.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FaultRule {
+    /// Stream-key substring to match (`None` = any signature).
+    pub sig: Option<String>,
+    pub tier: FaultTier,
+    pub launch: LaunchSel,
+    pub action: FaultAction,
+    /// Maximum number of fires (`None` = unbounded).
+    pub count: Option<u64>,
+}
+
+impl Default for FaultRule {
+    fn default() -> Self {
+        FaultRule {
+            sig: None,
+            tier: FaultTier::Any,
+            launch: LaunchSel::Any,
+            action: FaultAction::Error,
+            count: None,
+        }
+    }
+}
+
+/// A parsed fault specification: zero or more rules, first match fires.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub rules: Vec<FaultRule>,
+}
+
+/// Typed parse failure for a fault spec.
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub enum FaultSpecError {
+    #[error("empty rule in fault spec")]
+    EmptyRule,
+    #[error("malformed field `{0}` (want key=value)")]
+    Field(String),
+    #[error("unknown field key `{0}` (sig|tier|launch|action|count)")]
+    Key(String),
+    #[error("bad tier `{0}` (stacked|divergent|peritem|build|any)")]
+    Tier(String),
+    #[error("bad action `{0}` (err|panic)")]
+    Action(String),
+    #[error("bad launch selector `{0}` (K, A..B, or *)")]
+    Launch(String),
+    #[error("bad count `{0}` (positive integer)")]
+    Count(String),
+}
+
+impl FaultPlan {
+    /// Parse the spec grammar. An empty / whitespace-only spec is the empty
+    /// plan (injection off).
+    pub fn parse(spec: &str) -> Result<FaultPlan, FaultSpecError> {
+        let mut rules = Vec::new();
+        for rule_src in spec.split(';') {
+            let rule_src = rule_src.trim();
+            if rule_src.is_empty() {
+                continue;
+            }
+            let mut rule = FaultRule::default();
+            let mut saw_field = false;
+            for field in rule_src.split(',') {
+                let field = field.trim();
+                if field.is_empty() {
+                    continue;
+                }
+                saw_field = true;
+                let (key, val) = field
+                    .split_once('=')
+                    .ok_or_else(|| FaultSpecError::Field(field.into()))?;
+                match key.trim() {
+                    "sig" => {
+                        let v = val.trim();
+                        rule.sig = if v == "*" { None } else { Some(v.to_string()) };
+                    }
+                    "tier" => {
+                        rule.tier = FaultTier::parse(val.trim())
+                            .ok_or_else(|| FaultSpecError::Tier(val.trim().into()))?;
+                    }
+                    "launch" => rule.launch = parse_launch(val.trim())?,
+                    "action" => {
+                        rule.action = match val.trim() {
+                            "err" | "error" => FaultAction::Error,
+                            "panic" => FaultAction::Panic,
+                            other => return Err(FaultSpecError::Action(other.into())),
+                        };
+                    }
+                    "count" => {
+                        let n: u64 = val
+                            .trim()
+                            .parse()
+                            .map_err(|_| FaultSpecError::Count(val.trim().into()))?;
+                        if n == 0 {
+                            return Err(FaultSpecError::Count(val.trim().into()));
+                        }
+                        rule.count = Some(n);
+                    }
+                    other => return Err(FaultSpecError::Key(other.into())),
+                }
+            }
+            if !saw_field {
+                return Err(FaultSpecError::EmptyRule);
+            }
+            rules.push(rule);
+        }
+        Ok(FaultPlan { rules })
+    }
+
+    /// Read and parse `FKL_FAULTS` (used by the `fkl` CLI; [`crate::coordinator::ServiceConfig`]
+    /// deliberately does NOT read the environment — library users arm faults
+    /// explicitly). Returns `Ok(None)` when unset or empty.
+    pub fn from_env() -> Result<Option<FaultPlan>, FaultSpecError> {
+        match std::env::var("FKL_FAULTS") {
+            Ok(spec) if !spec.trim().is_empty() => Ok(Some(FaultPlan::parse(&spec)?)),
+            _ => Ok(None),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rules.is_empty()
+    }
+}
+
+fn parse_launch(s: &str) -> Result<LaunchSel, FaultSpecError> {
+    if s == "*" {
+        return Ok(LaunchSel::Any);
+    }
+    if let Some((a, b)) = s.split_once("..") {
+        let a: u64 = a.trim().parse().map_err(|_| FaultSpecError::Launch(s.into()))?;
+        let b: u64 = b.trim().parse().map_err(|_| FaultSpecError::Launch(s.into()))?;
+        if b <= a {
+            return Err(FaultSpecError::Launch(s.into()));
+        }
+        return Ok(LaunchSel::Range(a, b));
+    }
+    s.parse().map(LaunchSel::Index).map_err(|_| FaultSpecError::Launch(s.into()))
+}
+
+/// The typed error an injected `action=err` fault produces (a panic fault
+/// carries the same rendering inside its payload, so both paths are
+/// recognizable by the `injected fault` prefix).
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+#[error("injected fault (rule {rule}) at {tier} launch {launch} of `{key}`")]
+pub struct InjectedFault {
+    /// Index of the rule that fired.
+    pub rule: usize,
+    /// Tier name at the consult site.
+    pub tier: &'static str,
+    /// The rule's matching-launch index that fired.
+    pub launch: u64,
+    /// Stream key of the faulted launch.
+    pub key: String,
+}
+
+/// An armed fault plan: per-rule match/fire counters over a [`FaultPlan`].
+/// Counters are atomic so the injector can be shared (`Arc`) between the
+/// service thread and an engine; determinism comes from consulting it in a
+/// deterministic order (the coordinator consults serially, and
+/// `run_divergent` consults in window order BEFORE spawning lanes).
+#[derive(Debug)]
+pub struct FaultInjector {
+    plan: FaultPlan,
+    matched: Vec<AtomicU64>,
+    fired: Vec<AtomicU64>,
+}
+
+impl FaultInjector {
+    pub fn new(plan: FaultPlan) -> FaultInjector {
+        let n = plan.rules.len();
+        FaultInjector {
+            plan,
+            matched: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            fired: (0..n).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    /// Consult the plan for a launch about to happen at `tier` on stream
+    /// `key`. Advances every sig+tier-matching rule's launch counter; the
+    /// first rule whose launch selector and count admit this launch fires.
+    pub fn check(&self, tier: FaultTier, key: &str) -> Option<(FaultAction, InjectedFault)> {
+        for (i, rule) in self.plan.rules.iter().enumerate() {
+            let sig_ok = rule.sig.as_deref().is_none_or(|s| key.contains(s));
+            if !sig_ok || !rule.tier.matches(tier) {
+                continue;
+            }
+            let idx = self.matched[i].fetch_add(1, Ordering::Relaxed);
+            if !rule.launch.matches(idx) {
+                continue;
+            }
+            if let Some(cap) = rule.count {
+                if self.fired[i].load(Ordering::Relaxed) >= cap {
+                    continue;
+                }
+            }
+            self.fired[i].fetch_add(1, Ordering::Relaxed);
+            let info = InjectedFault { rule: i, tier: tier.name(), launch: idx, key: key.into() };
+            return Some((rule.action, info));
+        }
+        None
+    }
+
+    /// [`FaultInjector::check`] + trigger: `Ok(())` when no rule selects
+    /// this launch, a typed `Err` for `action=err` — and a panic for
+    /// `action=panic`, to be contained by the launch site's `catch_unwind`.
+    pub fn apply(&self, tier: FaultTier, key: &str) -> anyhow::Result<()> {
+        match self.check(tier, key) {
+            None => Ok(()),
+            Some((action, info)) => trigger(action, info),
+        }
+    }
+
+    /// Total fires across all rules (observability for tests/CLI).
+    pub fn fired(&self) -> u64 {
+        self.fired.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+}
+
+/// Fire a checked fault: typed `Err` or panic per the action.
+pub fn trigger(action: FaultAction, info: InjectedFault) -> anyhow::Result<()> {
+    match action {
+        FaultAction::Error => Err(info.into()),
+        FaultAction::Panic => panic!("{info}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_rule() {
+        let p = FaultPlan::parse("sig=u8,tier=stacked,launch=2,action=panic,count=1").unwrap();
+        assert_eq!(
+            p.rules,
+            vec![FaultRule {
+                sig: Some("u8".into()),
+                tier: FaultTier::Stacked,
+                launch: LaunchSel::Index(2),
+                action: FaultAction::Panic,
+                count: Some(1),
+            }]
+        );
+    }
+
+    #[test]
+    fn parses_defaults_ranges_and_multiple_rules() {
+        let p = FaultPlan::parse("tier=divergent,launch=0..3; action=err").unwrap();
+        assert_eq!(p.rules.len(), 2);
+        assert_eq!(p.rules[0].launch, LaunchSel::Range(0, 3));
+        assert_eq!(p.rules[0].sig, None);
+        assert_eq!(p.rules[1].tier, FaultTier::Any);
+        assert_eq!(p.rules[1].launch, LaunchSel::Any);
+        assert!(FaultPlan::parse("  ").unwrap().is_empty());
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        assert_eq!(FaultPlan::parse("bogus"), Err(FaultSpecError::Field("bogus".into())));
+        assert_eq!(FaultPlan::parse("zig=u8"), Err(FaultSpecError::Key("zig".into())));
+        assert_eq!(FaultPlan::parse("tier=gpu"), Err(FaultSpecError::Tier("gpu".into())));
+        assert_eq!(FaultPlan::parse("action=explode"), Err(FaultSpecError::Action("explode".into())));
+        assert_eq!(FaultPlan::parse("launch=5..2"), Err(FaultSpecError::Launch("5..2".into())));
+        assert_eq!(FaultPlan::parse("count=0"), Err(FaultSpecError::Count("0".into())));
+    }
+
+    #[test]
+    fn fires_at_selected_launch_only() {
+        let inj = FaultInjector::new(
+            FaultPlan::parse("sig=u8,tier=stacked,launch=1,action=err").unwrap(),
+        );
+        assert!(inj.check(FaultTier::Stacked, "mul|u8->f32|4x4").is_none(), "launch 0");
+        // a non-matching signature does not advance the rule's counter
+        assert!(inj.check(FaultTier::Stacked, "mul|f32->f32|4x4").is_none());
+        assert!(inj.check(FaultTier::Divergent, "mul|u8->f32|4x4").is_none(), "tier gate");
+        let (action, info) = inj.check(FaultTier::Stacked, "mul|u8->f32|4x4").unwrap();
+        assert_eq!(action, FaultAction::Error);
+        assert_eq!((info.launch, info.rule), (1, 0));
+        assert!(inj.check(FaultTier::Stacked, "mul|u8->f32|4x4").is_none(), "launch 2");
+        assert_eq!(inj.fired(), 1);
+    }
+
+    #[test]
+    fn count_caps_fires_and_any_tier_matches_everywhere() {
+        let inj =
+            FaultInjector::new(FaultPlan::parse("tier=any,launch=*,count=2,action=err").unwrap());
+        assert!(inj.check(FaultTier::Stacked, "k").is_some());
+        assert!(inj.check(FaultTier::Build, "k").is_some());
+        assert!(inj.check(FaultTier::PerItem, "k").is_none(), "count exhausted");
+        assert_eq!(inj.fired(), 2);
+    }
+
+    #[test]
+    fn trigger_error_is_typed_and_trigger_panic_panics() {
+        let info =
+            InjectedFault { rule: 0, tier: "stacked", launch: 3, key: "mul|u8->f32|4".into() };
+        let err = trigger(FaultAction::Error, info.clone()).unwrap_err();
+        assert_eq!(err.downcast_ref::<InjectedFault>(), Some(&info));
+        let caught = std::panic::catch_unwind(|| {
+            let _ = trigger(FaultAction::Panic, info);
+        });
+        let msg = *caught.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("injected fault"), "panic payload carries the marker: {msg}");
+    }
+}

@@ -25,6 +25,7 @@ pub mod coordinator;
 pub mod cv;
 pub mod exec;
 pub mod experiments;
+pub mod faults;
 pub mod fusion;
 pub mod hostref;
 pub mod jsonlite;

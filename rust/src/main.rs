@@ -5,6 +5,8 @@
 //! fkl plan  --ops mul,add --shape 60x120 --batch 50 --dtin u8 --dtout f32
 //! fkl run   --ops mul:2.0,add:1.0 --shape 4x8 --batch 2   # run via engines
 //! fkl serve --requests 500 --batch-window-us 500          # coordinator demo
+//! fkl serve --deadline-ms 5 --faults 'tier=stacked,launch=0,action=panic'
+//!                                  # deadline-aware serving + fault drill
 //! fkl calibrate                    # measure this host's HwProfile
 //! ```
 
@@ -152,10 +154,25 @@ fn serve(args: &[String]) -> anyhow::Result<()> {
     let n: usize = arg(args, "--requests").map(|v| v.parse().unwrap()).unwrap_or(500);
     let window_us: u64 =
         arg(args, "--batch-window-us").map(|v| v.parse().unwrap()).unwrap_or(500);
+    // deadline-aware serving: every request must launch within this budget
+    // or be shed/expired with a typed error instead of served late
+    let default_deadline =
+        arg(args, "--deadline-ms").map(|v| Duration::from_millis(v.parse().unwrap()));
+    // fault drill: --faults takes a spec like `tier=stacked,launch=0,
+    // action=panic`; without the flag the FKL_FAULTS env var is honored
+    let faults = match arg(args, "--faults") {
+        Some(spec) => Some(fkl::faults::FaultPlan::parse(&spec)?),
+        None => fkl::faults::FaultPlan::from_env()?,
+    };
+    if let Some(plan) = &faults {
+        println!("fault plan armed: {} rule(s)", plan.rules.len());
+    }
     let svc = Service::start(ServiceConfig {
         artifact_dir: None,
         queue_cap: 1024,
         policy: BatchPolicy { max_batch: 50, window: Duration::from_micros(window_us) },
+        default_deadline,
+        faults,
         ..ServiceConfig::default()
     });
 
@@ -208,6 +225,30 @@ fn serve(args: &[String]) -> anyhow::Result<()> {
         m.mean_divergent_window(),
         m.divergent_occupancy()
     );
+    println!(
+        "faults: failed={} expired={} shed={} launch_panics={} breaker_trips={} \
+         breaker_rejected={}",
+        m.failed, m.expired, m.shed, m.launch_panics, m.breaker_trips, m.breaker_rejected
+    );
+    if default_deadline.is_some() {
+        println!(
+            "deadline margin: p50={}us p99={}us (est item cost {:.1}us)",
+            m.deadline_margin.p50, m.deadline_margin.p99, m.est_item_us
+        );
+    }
+    for b in &m.breakers {
+        println!(
+            "breaker {}: {:?} tier={} trips={} rejected={}",
+            b.key,
+            b.state,
+            b.tier.name(),
+            b.trips,
+            b.rejected
+        );
+    }
+    if let Some(d) = &m.degraded {
+        println!("degraded: {d}");
+    }
     svc.shutdown();
     Ok(())
 }

@@ -94,6 +94,7 @@ fn coordinator_survives_failing_requests() {
         queue_cap: 64,
         policy: BatchPolicy { max_batch: 8, window: Duration::from_micros(100) },
         engine: EngineSelect::Xla,
+        ..ServiceConfig::default()
     });
     let bad = Pipeline::from_opcodes(&[(Opcode::Mul, 1.0)], &[7, 13], 1, DType::F32, DType::F32)
         .unwrap();
@@ -123,13 +124,19 @@ fn coordinator_with_bad_artifact_dir_degrades_gracefully() {
         queue_cap: 8,
         policy: BatchPolicy::default(),
         engine: EngineSelect::Xla,
+        ..ServiceConfig::default()
     });
     let p = Pipeline::from_opcodes(&[(Opcode::Mul, 1.0)], &[4], 1, DType::F32, DType::F32)
         .unwrap();
     let rx = svc.submit(p, Tensor::from_f32(&[0.0; 4], &[1, 4])).unwrap();
     let out = rx.recv().unwrap();
     assert!(out.is_err());
-    assert!(out.unwrap_err().contains("registry"));
+    let err = out.unwrap_err();
+    assert!(
+        matches!(err, fkl::coordinator::ServeError::Unavailable(_)),
+        "a service without a backend answers the typed Unavailable: {err}"
+    );
+    assert!(err.to_string().contains("registry"));
     svc.shutdown();
 }
 
@@ -378,13 +385,19 @@ fn host_engine_rejects_mismatched_inputs_loudly() {
         queue_cap: 8,
         policy: BatchPolicy::default(),
         engine: EngineSelect::HostFused,
+        ..ServiceConfig::default()
     });
     let p = Pipeline::from_opcodes(&[(Opcode::Mul, 2.0)], &[4], 1, DType::U8, DType::U8)
         .unwrap();
     let wrong = svc.submit(p.clone(), Tensor::from_f32(&[0.0; 4], &[1, 4])).unwrap();
     let out = wrong.recv().unwrap();
     assert!(out.is_err(), "dtype mismatch must not silently run");
-    assert!(out.unwrap_err().contains("dtype"));
+    let err = out.unwrap_err();
+    assert!(
+        matches!(err, fkl::coordinator::ServeError::BadItem(_)),
+        "a malformed item is a typed client error: {err}"
+    );
+    assert!(err.to_string().contains("dtype"));
 
     let good = svc.submit(p, Tensor::from_u8(&[100; 4], &[1, 4])).unwrap();
     let t = good.recv().unwrap().expect("host backend keeps serving");

@@ -1,0 +1,354 @@
+//! Fault-tolerance properties of the serving core, proven with the
+//! deterministic fault-injection harness ([`fkl::faults`]).
+//!
+//! Everything here is attempt-counted — injected faults fire at fixed
+//! launch indices, breaker probation counts rejected attempts, and batch
+//! windows fill to `max_batch` before popping — so no test sleeps, races a
+//! clock, or asserts on wall time.
+
+use std::time::Duration;
+
+use fkl::chain::{Add, Chain, Mul, F32, U8};
+use fkl::coordinator::{
+    BatchPolicy, BreakerPolicy, BreakerState, EngineSelect, ServeError, ServeTier, Service,
+    ServiceConfig,
+};
+use fkl::faults::FaultPlan;
+use fkl::ops::{Pipeline, Signature};
+use fkl::tensor::Tensor;
+
+/// The test traffic: a dense u8 chain whose stream key contains "mul".
+fn mul_pipeline() -> Pipeline {
+    Chain::read::<U8>(&[4, 5]).map(Mul(2.0)).cast::<F32>().write().into_pipeline()
+}
+
+fn add_pipeline() -> Pipeline {
+    Chain::read::<U8>(&[4, 5]).map(Add(3.0)).cast::<F32>().write().into_pipeline()
+}
+
+fn item(fill: u8) -> Tensor {
+    Tensor::from_u8(&[fill; 20], &[1, 4, 5])
+}
+
+/// `max_batch: 2` + a huge window = a group launches exactly when its two
+/// requests are queued, never on a timer — window boundaries are decided by
+/// the test, deterministically.
+fn two_at_a_time(faults: &str, breaker: BreakerPolicy) -> Service {
+    Service::start(ServiceConfig {
+        artifact_dir: None,
+        queue_cap: 64,
+        policy: BatchPolicy { max_batch: 2, window: Duration::from_secs(600) },
+        engine: EngineSelect::HostFused,
+        breaker,
+        faults: Some(FaultPlan::parse(faults).expect("valid fault spec")),
+        ..ServiceConfig::default()
+    })
+}
+
+/// Submit the same pipeline twice (one full window) and collect both replies.
+fn window(svc: &Service, p: &Pipeline) -> Vec<Result<Tensor, ServeError>> {
+    let rxs: Vec<_> =
+        (0..2).map(|i| svc.submit(p.clone(), item(10 + i)).expect("queue has room")).collect();
+    rxs.into_iter().map(|rx| rx.recv().expect("service alive")).collect()
+}
+
+#[test]
+fn from_env_honors_fkl_faults() {
+    // CI runs this binary with FKL_FAULTS set; locally it is usually unset.
+    // Either way from_env must agree with the environment — and a set spec
+    // must parse through the same grammar as FaultPlan::parse.
+    match std::env::var("FKL_FAULTS") {
+        Ok(spec) if !spec.trim().is_empty() => {
+            let plan = FaultPlan::from_env().expect("CI spec parses").expect("present");
+            assert_eq!(plan, FaultPlan::parse(&spec).unwrap());
+            assert!(!plan.is_empty());
+        }
+        _ => assert_eq!(FaultPlan::from_env().unwrap(), None),
+    }
+}
+
+#[test]
+fn service_config_does_not_read_the_environment() {
+    // FKL_FAULTS (set by CI for this binary) must not leak into a service
+    // whose config carries no plan: library users arm faults explicitly.
+    let svc = Service::start(ServiceConfig {
+        artifact_dir: None,
+        queue_cap: 8,
+        policy: BatchPolicy { max_batch: 2, window: Duration::from_secs(600) },
+        engine: EngineSelect::HostFused,
+        ..ServiceConfig::default()
+    });
+    for r in window(&svc, &mul_pipeline()) {
+        r.expect("no injection without an explicit plan");
+    }
+    let m = svc.metrics().unwrap();
+    assert_eq!((m.failed, m.launch_panics), (0, 0));
+    svc.shutdown();
+}
+
+/// The acceptance walk: a panic-injected stream demotes down the whole
+/// ladder (stacked -> divergent -> per-item -> open), sits out probation,
+/// probes back in and recovers tier by tier — while the service thread
+/// survives every contained panic and the final replies are bit-equal to
+/// the host oracle.
+#[test]
+fn panic_storm_walks_the_ladder_down_and_recovers() {
+    let policy = BreakerPolicy {
+        failure_threshold: 2,
+        probation_attempts: 2,
+        promote_successes: 2,
+    };
+    // launches 0..6 of the mul stream panic, at EVERY tier; launch 6 (the
+    // half-open probe) and everything after succeed. `sig=mul` keeps the
+    // build-tier consult (key "backend") out of the rule's counter.
+    let svc = two_at_a_time("sig=mul,tier=any,launch=0..6,action=panic", policy);
+    let p = mul_pipeline();
+    let key = Signature::of(&p).stream_key();
+
+    // W1+W2: two stacked launches panic -> contained, typed, demote to
+    // divergent (one breaker event per LAUNCH, not per rider)
+    for w in 0..2 {
+        for r in window(&svc, &p) {
+            match r {
+                Err(ServeError::LaunchPanicked(msg)) => {
+                    assert!(msg.contains("injected fault"), "window {w}: {msg}")
+                }
+                other => panic!("window {w}: want LaunchPanicked, got {other:?}"),
+            }
+        }
+    }
+    // W3: the divergent pass serves the window; both items' lanes panic and
+    // fail ALONE (2 item-level breaker events) -> demote to per-item
+    for r in window(&svc, &p) {
+        assert!(matches!(r, Err(ServeError::LaunchPanicked(_))), "divergent item isolated");
+    }
+    // W4: two per-item launches panic -> breaker opens
+    for r in window(&svc, &p) {
+        assert!(matches!(r, Err(ServeError::LaunchPanicked(_))), "per-item isolated");
+    }
+    // W5: open breaker rejects the whole window, typed; rejected attempts
+    // are the probation clock
+    for r in window(&svc, &p) {
+        match r {
+            Err(ServeError::CircuitOpen { stream }) => assert_eq!(stream, key),
+            other => panic!("want CircuitOpen, got {other:?}"),
+        }
+    }
+    {
+        let m = svc.metrics().unwrap();
+        let b = m.breaker(&key).expect("tripped stream is in the snapshot");
+        assert_eq!(b.state, BreakerState::Open);
+        assert_eq!(m.breaker_trips, 3, "stacked->divergent->peritem->open");
+    }
+    // W6: probation served -> ONE half-open probe runs per item (launch 6:
+    // no fault) and closes the breaker; its companion is rejected
+    let w6 = window(&svc, &p);
+    let oks = w6.iter().filter(|r| r.is_ok()).count();
+    let rejected = w6
+        .iter()
+        .filter(|r| matches!(r, Err(ServeError::CircuitOpen { .. })))
+        .count();
+    assert_eq!((oks, rejected), (1, 1), "exactly one probe, company rejected: {w6:?}");
+    // W7 -> per-item tier, W8 -> promoted to divergent, W9 -> fully
+    // recovered to stacked; all serve cleanly
+    for w in 7..=9 {
+        for r in window(&svc, &p) {
+            r.unwrap_or_else(|e| panic!("window {w} must serve: {e}"));
+        }
+    }
+    let m = svc.metrics().unwrap();
+    let b = m.breaker(&key).expect("history stays visible");
+    assert_eq!(b.state, BreakerState::Closed);
+    assert_eq!(b.tier, ServeTier::Stacked, "full recovery up the ladder");
+    assert_eq!(m.breaker_trips, 3);
+    assert_eq!(m.breaker_rejected, 3, "W5's two + W6's companion");
+    assert_eq!(m.launch_panics, 6, "2 stacked + 2 divergent items + 2 per-item");
+    assert_eq!(m.failed, 8, "every contained panic failed its riders, typed");
+    assert_eq!(m.completed, 7, "probe + W7..W9");
+
+    // the recovered stream serves bit-equal to the oracle
+    let rx = svc.submit(p.clone(), item(42)).unwrap();
+    let rx2 = svc.submit(p.clone(), item(43)).unwrap();
+    let want = fkl::hostref::run_pipeline(&p, &item(42));
+    let want2 = fkl::hostref::run_pipeline(&p, &item(43));
+    assert_eq!(rx.recv().unwrap().unwrap(), want);
+    assert_eq!(rx2.recv().unwrap().unwrap(), want2);
+    svc.shutdown();
+}
+
+#[test]
+fn stacked_panic_fails_only_its_stream_and_other_streams_keep_serving() {
+    // one poisoned stacked launch of the mul stream; the add stream shares
+    // the service and must be untouched
+    let svc = two_at_a_time("sig=mul,tier=stacked,launch=0,action=panic", BreakerPolicy::default());
+    let (pm, pa) = (mul_pipeline(), add_pipeline());
+    for r in window(&svc, &pm) {
+        assert!(matches!(r, Err(ServeError::LaunchPanicked(_))), "faulted stream fails typed");
+    }
+    for r in window(&svc, &pa) {
+        let out = r.expect("innocent stream unaffected");
+        assert_eq!(out.shape(), &[1, 4, 5]);
+    }
+    // the faulted stream recovers immediately (launch 1 has no fault)
+    for r in window(&svc, &pm) {
+        r.expect("next stacked launch serves");
+    }
+    let m = svc.metrics().unwrap();
+    assert_eq!(m.launch_panics, 1, "one contained panic for the one poisoned launch");
+    assert_eq!(m.failed, 2, "only the two riders of that launch");
+    assert_eq!(m.completed, 4);
+    let b = m.breaker(&Signature::of(&pm).stream_key()).expect("failure recorded");
+    assert_eq!(b.state, BreakerState::Closed, "one failure is below the trip threshold");
+    svc.shutdown();
+}
+
+#[test]
+fn injected_error_faults_are_typed_not_panics() {
+    // action=err takes the ordinary-error path: typed Exec reply carrying
+    // the InjectedFault rendering, zero launch_panics
+    let svc = two_at_a_time("sig=mul,tier=stacked,launch=0,action=err", BreakerPolicy::default());
+    for r in window(&svc, &mul_pipeline()) {
+        match r {
+            Err(ServeError::Exec(msg)) => assert!(msg.contains("injected fault"), "{msg}"),
+            other => panic!("want Exec(injected fault), got {other:?}"),
+        }
+    }
+    let m = svc.metrics().unwrap();
+    assert_eq!(m.launch_panics, 0);
+    assert_eq!(m.failed, 2);
+    svc.shutdown();
+}
+
+#[test]
+fn divergent_window_item_fault_fails_alone_through_the_service() {
+    // two different-signature singletons usually age out together and merge
+    // into the window's shared divergent pass; a scheduling wakeup between
+    // their deadlines may split them to per-item instead. The add stream's
+    // FIRST launch is faulted at whichever tier serves it (tier=any), so
+    // the assertions are deterministic under both layouts — and either way
+    // the fault must fail the add item ALONE. (The divergent tier's
+    // isolation contract is pinned deterministically, engine-level, by the
+    // fuzz harness's fault extension.)
+    let svc = Service::start(ServiceConfig {
+        artifact_dir: None,
+        queue_cap: 64,
+        policy: BatchPolicy { max_batch: 8, window: Duration::from_millis(50) },
+        engine: EngineSelect::HostFused,
+        faults: Some(FaultPlan::parse("sig=add,tier=any,launch=0,action=panic").unwrap()),
+        ..ServiceConfig::default()
+    });
+    let (pm, pa) = (mul_pipeline(), add_pipeline());
+    let rx_m = svc.submit(pm.clone(), item(7)).unwrap();
+    let rx_a = svc.submit(pa.clone(), item(9)).unwrap();
+    let out_m = rx_m.recv().unwrap().expect("survivor serves");
+    assert_eq!(out_m, fkl::hostref::run_pipeline(&pm, &item(7)), "survivor bit-equal");
+    match rx_a.recv().unwrap() {
+        Err(ServeError::LaunchPanicked(msg)) => {
+            assert!(msg.contains("injected fault"), "{msg}")
+        }
+        other => panic!("faulted item fails alone: {other:?}"),
+    }
+    let m = svc.metrics().unwrap();
+    assert_eq!((m.completed, m.failed), (1, 1));
+    svc.shutdown();
+}
+
+#[test]
+fn supervisor_rebuilds_a_backend_whose_construction_panics() {
+    // construction panics twice (launches 0..2), the third attempt builds;
+    // the service then serves normally and reports the absorbed restarts
+    let svc = Service::start(ServiceConfig {
+        artifact_dir: None,
+        queue_cap: 8,
+        policy: BatchPolicy { max_batch: 2, window: Duration::from_secs(600) },
+        engine: EngineSelect::HostFused,
+        faults: Some(FaultPlan::parse("tier=build,launch=0..2,action=panic").unwrap()),
+        max_build_retries: 2,
+        ..ServiceConfig::default()
+    });
+    for r in window(&svc, &mul_pipeline()) {
+        r.expect("rebuilt backend serves");
+    }
+    let m = svc.metrics().unwrap();
+    assert_eq!(m.supervisor_restarts, 2);
+    assert_eq!(m.completed, 2);
+    svc.shutdown();
+}
+
+#[test]
+fn exhausted_supervisor_poisons_the_service_with_typed_unavailable() {
+    let svc = Service::start(ServiceConfig {
+        artifact_dir: None,
+        queue_cap: 8,
+        policy: BatchPolicy { max_batch: 2, window: Duration::from_secs(600) },
+        engine: EngineSelect::HostFused,
+        faults: Some(FaultPlan::parse("tier=build,action=panic").unwrap()),
+        max_build_retries: 1,
+        ..ServiceConfig::default()
+    });
+    let rx = svc.submit(mul_pipeline(), item(1)).unwrap();
+    match rx.recv().expect("poisoned service still answers") {
+        Err(ServeError::Unavailable(msg)) => {
+            assert!(msg.contains("construction kept failing"), "{msg}")
+        }
+        other => panic!("want Unavailable, got {other:?}"),
+    }
+    let m = svc.metrics().expect("poisoned service still snapshots");
+    assert_eq!(m.supervisor_restarts, 2, "budget of 1 retry = 2 failed attempts");
+    assert!(m.degraded.is_some(), "poison reason surfaces structurally");
+    svc.shutdown();
+}
+
+#[test]
+fn deadlines_shed_at_ingress_and_expire_at_pop() {
+    // fresh service: the cost EWMA is zero, so ONLY dead-on-arrival
+    // requests shed — everything here is deterministic
+    let svc = Service::start(ServiceConfig {
+        artifact_dir: None,
+        queue_cap: 64,
+        policy: BatchPolicy { max_batch: 64, window: Duration::from_millis(2) },
+        engine: EngineSelect::HostFused,
+        ..ServiceConfig::default()
+    });
+    let p = add_pipeline();
+    // dead on arrival -> shed at ingress, before ever queueing
+    let doa = svc.submit_with_deadline(p.clone(), item(1), Duration::ZERO).unwrap();
+    assert!(matches!(doa.recv().unwrap(), Err(ServeError::Shed)));
+    // a 1ns deadline outlives ingress (EWMA=0 admits it) but is long gone
+    // when the 2ms window pops -> expired at pop time, never served
+    let e1 = svc.submit_with_deadline(p.clone(), item(2), Duration::from_nanos(1)).unwrap();
+    let e2 = svc.submit_with_deadline(p.clone(), item(3), Duration::from_nanos(1)).unwrap();
+    // generous deadlines ride the same group and serve with margin to spare
+    let g1 = svc.submit_with_deadline(p.clone(), item(4), Duration::from_secs(600)).unwrap();
+    let g2 = svc.submit_with_deadline(p.clone(), item(5), Duration::from_secs(600)).unwrap();
+    assert!(matches!(e1.recv().unwrap(), Err(ServeError::Expired)));
+    assert!(matches!(e2.recv().unwrap(), Err(ServeError::Expired)));
+    assert_eq!(g1.recv().unwrap().unwrap(), fkl::hostref::run_pipeline(&p, &item(4)));
+    assert_eq!(g2.recv().unwrap().unwrap(), fkl::hostref::run_pipeline(&p, &item(5)));
+    let m = svc.metrics().unwrap();
+    assert_eq!((m.shed, m.expired, m.completed), (1, 2, 2));
+    assert_eq!(m.deadline_margin.count, 2, "margins recorded for served deadline requests");
+    assert!(m.est_item_us > 0.0, "the admission EWMA learned from the served launch");
+    svc.shutdown();
+}
+
+#[test]
+fn default_deadline_applies_to_plain_submit() {
+    let svc = Service::start(ServiceConfig {
+        artifact_dir: None,
+        queue_cap: 8,
+        policy: BatchPolicy { max_batch: 64, window: Duration::from_millis(2) },
+        engine: EngineSelect::HostFused,
+        default_deadline: Some(Duration::ZERO),
+        ..ServiceConfig::default()
+    });
+    // every plain submit inherits the configured deadline: ZERO = DOA
+    let rx = svc.submit(mul_pipeline(), item(1)).unwrap();
+    assert!(matches!(rx.recv().unwrap(), Err(ServeError::Shed)));
+    // an explicit deadline overrides the default
+    let rx = svc.submit_with_deadline(mul_pipeline(), item(2), Duration::from_secs(600)).unwrap();
+    rx.recv().unwrap().expect("explicit deadline serves");
+    let m = svc.metrics().unwrap();
+    assert_eq!((m.shed, m.completed), (1, 1));
+    svc.shutdown();
+}

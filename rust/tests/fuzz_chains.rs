@@ -376,3 +376,55 @@ fn fuzzed_windows_serve_divergently_bit_equal_to_per_item() {
         }
     }
 }
+
+#[test]
+fn fault_injected_divergent_windows_fail_alone_and_survivors_stay_bit_equal() {
+    // the failure-isolation contract under fuzz: arm the injector against
+    // ONE item of a random mixed window (an injected panic once, an
+    // injected typed error once); that item must fail alone with the typed
+    // error, and every survivor must stay BITWISE identical to a clean
+    // per-item engine — fault injection never perturbs its neighbors
+    use std::sync::Arc;
+
+    use fkl::exec::LaunchPanic;
+    use fkl::faults::{FaultInjector, FaultPlan, InjectedFault};
+
+    for &seed in &SEEDS[..3] {
+        let mut rng = Rng::new(seed ^ 0xFA57);
+        let n = rng.usize(3, 7);
+        let cases: Vec<Case> = (0..n).map(|_| gen_case(&mut rng, None, None)).collect();
+        let window: Vec<(&Pipeline, &Tensor)> =
+            cases.iter().map(|c| (&c.pipeline, &c.input)).collect();
+        let clean = HostFusedEngine::with_threads(2);
+        // a single rule's launch counter equals the window index (consulted
+        // serially in window order), so `launch=K` targets item K exactly
+        for (action, faulted) in [("panic", 0usize), ("err", n - 1)] {
+            let spec = format!("tier=divergent,launch={faulted},action={action}");
+            let eng = HostFusedEngine::with_threads(2).with_fault_injector(Arc::new(
+                FaultInjector::new(FaultPlan::parse(&spec).unwrap()),
+            ));
+            let out = eng.run_divergent(&window);
+            assert_eq!(out.results.len(), n);
+            for (i, ((p, t), res)) in window.iter().zip(&out.results).enumerate() {
+                let ctx = format!("seed {seed} {action} item {i} sig {}", Signature::of(p));
+                if i == faulted {
+                    let e = res.as_ref().expect_err("faulted item fails");
+                    if action == "panic" {
+                        let lp =
+                            e.downcast_ref::<LaunchPanic>().expect("panic contained, typed");
+                        assert!(lp.msg.contains("injected fault"), "{ctx}: {lp}");
+                    } else {
+                        let inj =
+                            e.downcast_ref::<InjectedFault>().expect("typed injected error");
+                        assert_eq!(inj.launch, faulted as u64, "{ctx}");
+                    }
+                } else {
+                    let got =
+                        res.as_ref().unwrap_or_else(|e| panic!("{ctx}: survivor failed: {e}"));
+                    let alone = clean.run(p, t).expect("clean per-item serve");
+                    assert_bits_eq(got, &alone, &ctx);
+                }
+            }
+        }
+    }
+}

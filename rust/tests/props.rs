@@ -134,19 +134,21 @@ fn prop_batcher_conserves_requests() {
                 pipeline: p,
                 item: Tensor::zeros(DType::F32, &[1, stream + 1, 4]),
                 enqueued: Instant::now(),
+                deadline: None,
                 reply: i,
             });
         }
         let far_future = Instant::now() + Duration::from_secs(10);
         let mut seen = Vec::new();
         while let Some(g) = b.pop_ready(far_future) {
-            assert!(g.len() <= max_batch);
+            assert!(g.expired.is_empty(), "deadline-free requests never expire");
+            assert!(g.live.len() <= max_batch);
             // all same stream key within a group
-            let key = Signature::of(&g[0].pipeline).stream_key();
-            for r in &g {
+            let key = Signature::of(&g.live[0].pipeline).stream_key();
+            for r in &g.live {
                 assert_eq!(Signature::of(&r.pipeline).stream_key(), key);
             }
-            seen.extend(g.iter().map(|r| r.reply));
+            seen.extend(g.live.iter().map(|r| r.reply));
         }
         seen.sort_unstable();
         assert_eq!(seen, (0..n).collect::<Vec<_>>(), "no loss, no duplication");
