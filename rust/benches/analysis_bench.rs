@@ -1,0 +1,221 @@
+//! Static-analysis overhead + canonicalization ablation benchmark.
+//!
+//! Two questions, one report (`BENCH_analysis.json`):
+//!
+//! * **Is analysis cheap enough for ingress?** `lint` + `canonicalize` run
+//!   on EVERY admission when `ServiceConfig::canonicalize` is on, so the
+//!   pair must stay well under the per-request serving cost. The gate: both
+//!   together on a chain-12 pipeline in **< 5 us** per call.
+//! * **What does canonicalization buy?** The same traffic — four
+//!   syntactically distinct but bit-equivalent chain variants, round-robin
+//!   — served with the ingress canonicalizer on vs off. On: every variant
+//!   collapses to one canonical stream, so the engine compiles plans for
+//!   ONE signature and stacked HF engages across variants. Off: every raw
+//!   signature compiles its own plans and only same-variant requests stack.
+//!
+//! ```sh
+//! cargo bench --bench analysis_bench
+//! FKL_BENCH_FAST=1 cargo bench --bench analysis_bench   # trimmed
+//! FKL_BENCH_SOFT=1 ...                                  # miss -> warning
+//! ```
+
+use std::time::{Duration, Instant};
+
+use fkl::coordinator::{BatchPolicy, EngineSelect, MetricsSnapshot, Service, ServiceConfig};
+use fkl::jsonlite::Value;
+use fkl::ops::{Opcode, Pipeline};
+use fkl::proplite::Rng;
+use fkl::tensor::{DType, Tensor};
+
+/// A 12-op chain salted with canonicalizer work (identities, a Neg;Neg
+/// pair) — the analyzer's worst common case at ingress.
+fn chain12() -> Pipeline {
+    let ops: Vec<(Opcode, f64)> = vec![
+        (Opcode::Nop, 0.0),
+        (Opcode::Mul, 0.5),
+        (Opcode::Mul, 1.0),
+        (Opcode::Add, 3.0),
+        (Opcode::Neg, 0.0),
+        (Opcode::Neg, 0.0),
+        (Opcode::Sub, 0.0),
+        (Opcode::Div, 1.7),
+        (Opcode::Sqrt, 0.0),
+        (Opcode::Min, 200.0),
+        (Opcode::Max, 0.0),
+        (Opcode::Clamp01, 0.0),
+    ];
+    Pipeline::from_opcodes(&ops, &[60, 120], 1, DType::U8, DType::F32).unwrap()
+}
+
+/// Four bit-equivalent u8->f64 variants of one dense chain (the e2e test's
+/// acceptance shape, sized up for throughput driving).
+fn variants() -> Vec<Pipeline> {
+    [
+        vec![(Opcode::Mul, 0.5), (Opcode::Add, 1.0)],
+        vec![(Opcode::Mul, 0.5), (Opcode::Mul, 1.0), (Opcode::Add, 1.0)],
+        vec![(Opcode::Mul, 0.5), (Opcode::Neg, 0.0), (Opcode::Neg, 0.0), (Opcode::Add, 1.0)],
+        vec![(Opcode::Nop, 0.0), (Opcode::Mul, 0.5), (Opcode::Add, 1.0), (Opcode::Sub, 0.0)],
+    ]
+    .iter()
+    .map(|ops| Pipeline::from_opcodes(ops, &[24, 32], 1, DType::U8, DType::F64).unwrap())
+    .collect()
+}
+
+fn drive(canonicalize: bool, n: usize) -> (f64, MetricsSnapshot) {
+    let svc = Service::start(ServiceConfig {
+        artifact_dir: None,
+        queue_cap: 8192,
+        policy: BatchPolicy { max_batch: 50, window: Duration::from_micros(500) },
+        engine: EngineSelect::HostFused,
+        canonicalize,
+        ..ServiceConfig::default()
+    });
+    let ps = variants();
+    let mut rng = Rng::new(7);
+    // warmup (backend construction + first launch)
+    let w = svc.submit(ps[0].clone(), Tensor::from_u8(&rng.vec_u8(24 * 32), &[1, 24, 32]));
+    let _ = w.unwrap().recv();
+
+    let t0 = Instant::now();
+    let mut pending = Vec::with_capacity(n);
+    for i in 0..n {
+        let item = Tensor::from_u8(&rng.vec_u8(24 * 32), &[1, 24, 32]);
+        if let Ok(rx) = svc.submit(ps[i % ps.len()].clone(), item) {
+            pending.push(rx);
+        }
+    }
+    let mut ok = 0usize;
+    for rx in pending {
+        if rx.recv().map(|r| r.is_ok()).unwrap_or(false) {
+            ok += 1;
+        }
+    }
+    let rps = ok as f64 / t0.elapsed().as_secs_f64();
+    let m = svc.metrics().unwrap();
+    svc.shutdown();
+    assert_eq!(ok, n, "canonicalize={canonicalize}: every request must serve");
+    (rps, m)
+}
+
+fn ablation_json(label: &str, rps: f64, m: &MetricsSnapshot) -> Value {
+    Value::obj(vec![
+        ("label", Value::str(label)),
+        ("req_per_s", Value::num(rps)),
+        ("plan_cache", Value::num(m.planner.plan_cache as f64)),
+        ("mean_batch", Value::num(m.mean_batch())),
+        ("lints_emitted", Value::num(m.lints_emitted as f64)),
+        ("rewrites_applied", Value::num(m.rewrites_applied as f64)),
+        ("canonical_cache_hits", Value::num(m.canonical_cache_hits as f64)),
+    ])
+}
+
+fn main() {
+    let fast = std::env::var("FKL_BENCH_FAST").is_ok();
+
+    // part 1: lint + canonicalize per-call cost on the chain-12 pipeline
+    let p = chain12();
+    let iters = if fast { 20_000 } else { 100_000 };
+    let mut sink = 0usize; // consume results so the loop cannot be elided
+    for _ in 0..1_000 {
+        sink += fkl::analysis::lint(&p).len();
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        let diags = fkl::analysis::lint(&p);
+        let (canon, rewrites) = fkl::analysis::canonicalize(p.clone());
+        sink += diags.len() + rewrites.len() + canon.body().len();
+    }
+    let per_call_us = t0.elapsed().as_secs_f64() * 1e6 / iters as f64;
+    assert!(sink > 0);
+    println!("# analysis_bench (chain-12 u8->f32, {iters} iters)");
+    println!("lint+canonicalize: {per_call_us:.3} us/call (gate < 5 us)");
+
+    // part 2: plan-cache ablation — identical traffic, canonicalizer on/off
+    let n = if fast { 800 } else { 3000 };
+    let (rps_off, m_off) = drive(false, n);
+    let (rps_on, m_on) = drive(true, n);
+    println!("\n{:>6} | {:>10} {:>10} {:>10} {:>10}", "canon", "req/s", "plans", "mean_b", "hits");
+    println!(
+        "{:>6} | {:>10.0} {:>10} {:>10.1} {:>10}",
+        "off",
+        rps_off,
+        m_off.planner.plan_cache,
+        m_off.mean_batch(),
+        m_off.canonical_cache_hits
+    );
+    println!(
+        "{:>6} | {:>10.0} {:>10} {:>10.1} {:>10}",
+        "on",
+        rps_on,
+        m_on.planner.plan_cache,
+        m_on.mean_batch(),
+        m_on.canonical_cache_hits
+    );
+
+    let gate_pass = per_call_us < 5.0;
+    let cache_pass = m_on.planner.plan_cache < m_off.planner.plan_cache;
+    let hit_rate = m_on.canonical_cache_hits as f64 / n as f64;
+    println!(
+        "\nacceptance: {per_call_us:.3} us/call (< 5 us): {}; plan_cache {} < {}: {}; \
+         canonical hit rate {hit_rate:.3}",
+        if gate_pass { "PASS" } else { "FAIL" },
+        m_on.planner.plan_cache,
+        m_off.planner.plan_cache,
+        if cache_pass { "PASS" } else { "FAIL" }
+    );
+
+    let report = Value::obj(vec![
+        ("bench", Value::str("analysis")),
+        ("traffic", Value::str("4 equivalent u8->f64 chain variants, round-robin")),
+        ("fast_mode", Value::Bool(fast)),
+        ("requests", Value::num(n as f64)),
+        ("lint_canon_us_per_call", Value::num(per_call_us)),
+        ("canonical_hit_rate", Value::num(hit_rate)),
+        (
+            "acceptance",
+            Value::obj(vec![
+                (
+                    "criterion",
+                    Value::str(
+                        "lint+canonicalize < 5us per chain-12 call AND canon-on compiles \
+                         fewer plans than canon-off",
+                    ),
+                ),
+                ("per_call_us", Value::num(per_call_us)),
+                ("pass", Value::Bool(gate_pass && cache_pass)),
+            ]),
+        ),
+        (
+            "series",
+            Value::Arr(vec![
+                ablation_json("canon-off", rps_off, &m_off),
+                ablation_json("canon-on", rps_on, &m_on),
+            ]),
+        ),
+    ]);
+
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|p| p.join("BENCH_analysis.json"))
+        .unwrap_or_else(|| "BENCH_analysis.json".into());
+    std::fs::write(&root, report.to_json()).expect("write BENCH_analysis.json");
+    println!("wrote {}", root.display());
+
+    // wall-clock gates flake on shared CI runners; FKL_BENCH_SOFT keeps the
+    // signal as a warning there while local runs enforce the bar
+    let pass = gate_pass && cache_pass;
+    if !pass && std::env::var("FKL_BENCH_SOFT").is_ok() {
+        eprintln!(
+            "WARNING: acceptance not met (soft mode): per_call={per_call_us:.3}us \
+             plans on/off={}/{}",
+            m_on.planner.plan_cache, m_off.planner.plan_cache
+        );
+        return;
+    }
+    assert!(
+        pass,
+        "acceptance not met: per_call={per_call_us:.3}us (< 5us), plans on/off={}/{}",
+        m_on.planner.plan_cache,
+        m_off.planner.plan_cache
+    );
+}

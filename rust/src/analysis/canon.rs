@@ -1,0 +1,530 @@
+//! The canonicalizer: normalize a pipeline with ONLY bit-safety-proven
+//! rewrites.
+//!
+//! "Bit-safe" is an IEEE-754 claim, not a real-number claim: a rewrite is
+//! applied only when the removed computation returns its input bit-for-bit
+//! on EVERY f64 value, including signed zeros and NaN. That is why
+//! `Sub(+0.0)` and `Add(-0.0)` are removable (exact identities) while
+//! `Add(+0.0)` is not (it flips `-0.0` to `+0.0`), and why `Min(+inf)` is
+//! not (IEEE min returns the non-NaN side, so removal changes NaN handling).
+//! Bit-CHANGING simplifications — folding `Mul(a);Mul(b)` into `Mul(a*b)`
+//! rounds once instead of twice — are emitted as report-only [`Rewrite`]s
+//! with `applied: false`, never performed.
+//!
+//! Cast-trace rewrites are trivially bit-safe (interior casts are marker
+//! metadata the executed IR never sees), but stay conservative anyway: only
+//! exact duplicates and lossless widening intermediates are collapsed, so a
+//! narrowing round-trip like `f64→f32→f64` survives for the linter to flag.
+
+use crate::fusion::HostPlan;
+use crate::ops::{CastStep, IOp, Opcode, Pipeline};
+use crate::tensor::DType;
+
+use super::lint::Span;
+
+/// How an identity op relates to the bit-safety line.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum IdentityClass {
+    /// Returns its input bit-for-bit on every IEEE value: removable.
+    Exact,
+    /// Identity except at `-0.0` (IEEE `+` and `-` with `+0.0`/`-0.0`
+    /// normalize the zero sign): report-only.
+    SignedZero,
+    /// Identity except for NaN inputs (IEEE min/max return the non-NaN
+    /// side): report-only.
+    NanSkipping,
+}
+
+/// Classify `op(param)` as an identity, with the reason.
+pub(crate) fn identity_of(op: Opcode, param: f64) -> Option<(IdentityClass, &'static str)> {
+    match op {
+        Opcode::Nop => Some((IdentityClass::Exact, "nop passes every value through")),
+        Opcode::Mul if param == 1.0 => {
+            Some((IdentityClass::Exact, "x * 1.0 is x, bit for bit"))
+        }
+        Opcode::Div if param == 1.0 => {
+            Some((IdentityClass::Exact, "x / 1.0 is x, bit for bit"))
+        }
+        Opcode::Sub if param == 0.0 && param.is_sign_positive() => Some((
+            IdentityClass::Exact,
+            "x - (+0.0) is x for every value, including -0.0",
+        )),
+        Opcode::Add if param == 0.0 && param.is_sign_negative() => Some((
+            IdentityClass::Exact,
+            "x + (-0.0) is x for every value, including -0.0",
+        )),
+        Opcode::Add if param == 0.0 => Some((
+            IdentityClass::SignedZero,
+            "x + (+0.0) is x except at -0.0, which IEEE addition flips to +0.0",
+        )),
+        Opcode::Sub if param == 0.0 => Some((
+            IdentityClass::SignedZero,
+            "x - (-0.0) is x except at -0.0, which IEEE subtraction flips to +0.0",
+        )),
+        Opcode::Min if param == f64::INFINITY => Some((
+            IdentityClass::NanSkipping,
+            "min(x, +inf) is x except for NaN, where IEEE min returns +inf",
+        )),
+        Opcode::Max if param == f64::NEG_INFINITY => Some((
+            IdentityClass::NanSkipping,
+            "max(x, -inf) is x except for NaN, where IEEE max returns -inf",
+        )),
+        Opcode::Min | Opcode::Max if param.is_nan() => Some((
+            IdentityClass::Exact,
+            "IEEE min/max with a NaN parameter returns x unchanged",
+        )),
+        _ => None,
+    }
+}
+
+/// `from` values are all exactly representable in `to` (so a cast through
+/// `from` on the way to `to` loses nothing). Note `i32` does NOT widen into
+/// `f32` (24-bit mantissa).
+pub(crate) fn widens_losslessly(from: DType, to: DType) -> bool {
+    use DType::{F32, F64, I32, U16, U8};
+    matches!(
+        (from, to),
+        (U8, U16)
+            | (U8, I32)
+            | (U8, F32)
+            | (U8, F64)
+            | (U16, I32)
+            | (U16, F32)
+            | (U16, F64)
+            | (I32, F64)
+            | (F32, F64)
+    )
+}
+
+/// One canonicalization decision: either applied to the returned pipeline or
+/// reported as a suggestion the caller may act on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RewriteKind {
+    /// Bit-exact identity op removed (`Nop`, `Mul(1.0)`, `Div(1.0)`,
+    /// `Sub(+0.0)`, `Add(-0.0)`, `Min/Max(NaN)`).
+    RemoveIdentity,
+    /// Self-cancelling or idempotent adjacent pair reduced (`Neg;Neg`,
+    /// `Abs;Abs`, `Clamp01;Clamp01`, `CvtColor;CvtColor`).
+    CancelPair,
+    /// Cast to the marker dtype already in effect removed.
+    DedupCast,
+    /// Lossless widening intermediate cast collapsed into the next cast.
+    CollapseCast,
+    /// Bit-changing scalar fold (`Mul;Mul`, `Add;Add`) — reported only.
+    FoldScalarPair,
+    /// Identity whose removal would change `-0.0` or NaN bits — reported
+    /// only.
+    UnsafeIdentity,
+}
+
+/// A rewrite the canonicalizer performed (`applied: true`) or merely
+/// proposes (`applied: false`). Spans index the body AS IT WAS when the
+/// rewrite fired; earlier removals shift later indices.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Rewrite {
+    pub kind: RewriteKind,
+    pub span: Span,
+    pub applied: bool,
+    pub detail: String,
+}
+
+fn rebuild(p: &Pipeline, body: &[IOp]) -> Pipeline {
+    let mut ops = Vec::with_capacity(body.len() + 2);
+    ops.push(p.ops().first().expect("validated pipeline has a read").clone());
+    ops.extend_from_slice(body);
+    ops.push(p.ops().last().expect("validated pipeline has a write").clone());
+    Pipeline::new(ops, p.shape.clone(), p.batch, p.dtin, p.dtout)
+        .expect("canonical rewrites preserve pipeline validity")
+}
+
+/// Drop body stage `i`, shifting cast markers that sat after it.
+fn remove_stage(body: &mut Vec<IOp>, casts: &mut [CastStep], i: usize) {
+    body.remove(i);
+    for c in casts.iter_mut() {
+        if c.at > i {
+            c.at -= 1;
+        }
+    }
+}
+
+/// Canonicalize `p`: apply every bit-safe rewrite to a fixpoint and report
+/// everything else as a suggestion. The returned pipeline is bit-equal to
+/// `p` on every input (the fuzz harness proves this differentially), and
+/// `canonicalize` is idempotent: re-running on the result applies nothing.
+pub fn canonicalize(p: Pipeline) -> (Pipeline, Vec<Rewrite>) {
+    let mut rewrites = Vec::new();
+    let mut body: Vec<IOp> = p.body().to_vec();
+    let mut casts: Vec<CastStep> = p.cast_trace().to_vec();
+    let accum0 = HostPlan::compile(&p).accum();
+
+    // --- applied rewrites, to a fixpoint (so e.g. `Neg;Nop;Neg` fully
+    // cancels once the interior Nop is gone)
+    loop {
+        let mut changed = false;
+
+        // bit-exact identity removal. The body is never emptied: a pipeline
+        // whose whole body is one identity op keeps it as its canonical form.
+        let mut i = 0;
+        while i < body.len() && body.len() > 1 {
+            let exact = match &body[i] {
+                IOp::Compute { op, param } => {
+                    identity_of(*op, *param).filter(|(c, _)| *c == IdentityClass::Exact)
+                }
+                _ => None,
+            };
+            if let Some((_, why)) = exact {
+                rewrites.push(Rewrite {
+                    kind: RewriteKind::RemoveIdentity,
+                    span: Span::stage(i),
+                    applied: true,
+                    detail: format!("removed {}: {why}", body[i].sig_token()),
+                });
+                remove_stage(&mut body, &mut casts, i);
+                changed = true;
+            } else {
+                i += 1;
+            }
+        }
+
+        // adjacent pair cancellation
+        let mut i = 0;
+        while i + 1 < body.len() {
+            match (&body[i], &body[i + 1]) {
+                (IOp::Compute { op: Opcode::Neg, .. }, IOp::Compute { op: Opcode::Neg, .. })
+                    if body.len() > 2 =>
+                {
+                    rewrites.push(Rewrite {
+                        kind: RewriteKind::CancelPair,
+                        span: Span { start: i, end: i + 2 },
+                        applied: true,
+                        detail: "neg;neg cancels: double sign flip restores every bit".into(),
+                    });
+                    remove_stage(&mut body, &mut casts, i + 1);
+                    remove_stage(&mut body, &mut casts, i);
+                    changed = true;
+                }
+                (IOp::Compute { op: Opcode::Abs, .. }, IOp::Compute { op: Opcode::Abs, .. }) => {
+                    rewrites.push(Rewrite {
+                        kind: RewriteKind::CancelPair,
+                        span: Span { start: i, end: i + 2 },
+                        applied: true,
+                        detail: "abs;abs: the second abs sees no negative value".into(),
+                    });
+                    remove_stage(&mut body, &mut casts, i + 1);
+                    changed = true;
+                }
+                (
+                    IOp::Compute { op: Opcode::Clamp01, .. },
+                    IOp::Compute { op: Opcode::Clamp01, .. },
+                ) => {
+                    rewrites.push(Rewrite {
+                        kind: RewriteKind::CancelPair,
+                        span: Span { start: i, end: i + 2 },
+                        applied: true,
+                        detail: "clamp01;clamp01: the second clamp sees only [0,1] and NaN, \
+                                 both of which it returns unchanged"
+                            .into(),
+                    });
+                    remove_stage(&mut body, &mut casts, i + 1);
+                    changed = true;
+                }
+                (IOp::CvtColor, IOp::CvtColor) if body.len() > 2 => {
+                    // elementwise this is an exact identity (two swizzles
+                    // restore the layout), but removing the pair can turn a
+                    // lane-grouped body into a plain chain and move it onto
+                    // the f32 fast arm — a different accumulator, different
+                    // bits. Only rewrite when the plan's accumulator is
+                    // provably unchanged; a blocked pair is reported in the
+                    // suggestions pass below.
+                    let mut candidate = body.clone();
+                    candidate.remove(i + 1);
+                    candidate.remove(i);
+                    if HostPlan::compile(&rebuild(&p, &candidate)).accum() == accum0 {
+                        rewrites.push(Rewrite {
+                            kind: RewriteKind::CancelPair,
+                            span: Span { start: i, end: i + 2 },
+                            applied: true,
+                            detail: "cvtcolor;cvtcolor cancels: double swizzle restores \
+                                     the layout"
+                                .into(),
+                        });
+                        remove_stage(&mut body, &mut casts, i + 1);
+                        remove_stage(&mut body, &mut casts, i);
+                        changed = true;
+                    } else {
+                        i += 1;
+                    }
+                }
+                _ => i += 1,
+            }
+        }
+
+        if !changed {
+            break;
+        }
+    }
+
+    // --- report-only suggestions, detected on the canonical body
+    for i in 0..body.len() {
+        if let IOp::Compute { op, param } = body[i] {
+            if let Some((class, why)) = identity_of(op, param) {
+                if class != IdentityClass::Exact {
+                    rewrites.push(Rewrite {
+                        kind: RewriteKind::UnsafeIdentity,
+                        span: Span::stage(i),
+                        applied: false,
+                        detail: format!(
+                            "{}({param}) is an identity but removal is not bit-safe: {why}",
+                            op.name()
+                        ),
+                    });
+                } else if body.len() == 1 {
+                    rewrites.push(Rewrite {
+                        kind: RewriteKind::RemoveIdentity,
+                        span: Span::stage(i),
+                        applied: false,
+                        detail: format!(
+                            "{} is a removable identity but is the whole body: kept \
+                             (a pipeline body is never emptied)",
+                            body[i].sig_token()
+                        ),
+                    });
+                }
+            }
+        }
+        if i + 1 < body.len() {
+            if let (IOp::CvtColor, IOp::CvtColor) = (&body[i], &body[i + 1]) {
+                rewrites.push(Rewrite {
+                    kind: RewriteKind::CancelPair,
+                    span: Span { start: i, end: i + 2 },
+                    applied: false,
+                    detail: "cvtcolor;cvtcolor cancels, but removal would change the \
+                             fused accumulator (f64 group body -> f32 fast arm) or empty \
+                             the body: kept for bit-compatibility"
+                        .into(),
+                });
+            }
+        }
+        if i + 1 < body.len() {
+            if let (IOp::Compute { op: a, param: pa }, IOp::Compute { op: b, param: pb }) =
+                (&body[i], &body[i + 1])
+            {
+                let fold = match (a, b) {
+                    (Opcode::Mul, Opcode::Mul) => Some(("mul", pa * pb)),
+                    (Opcode::Add, Opcode::Add) => Some(("add", pa + pb)),
+                    _ => None,
+                };
+                if let Some((name, folded)) = fold {
+                    rewrites.push(Rewrite {
+                        kind: RewriteKind::FoldScalarPair,
+                        span: Span { start: i, end: i + 2 },
+                        applied: false,
+                        detail: format!(
+                            "{name}({pa});{name}({pb}) folds to {name}({folded}) — one \
+                             rounding instead of two changes bits, so it is never applied"
+                        ),
+                    });
+                }
+            }
+        }
+    }
+
+    // --- cast-trace canonicalization. Entries are markers (free at run
+    // time); canonical form keeps no cast to the dtype already in effect and
+    // no lossless widening stop-over on the way to a further cast.
+    let mut canon_casts: Vec<(DType, CastStep)> = Vec::new(); // (dtype before, step)
+    'steps: for step in casts {
+        loop {
+            let cur = canon_casts.last().map(|&(_, s)| s.to).unwrap_or(p.dtin);
+            if step.to == cur {
+                rewrites.push(Rewrite {
+                    kind: RewriteKind::DedupCast,
+                    span: Span::at(step.at),
+                    applied: true,
+                    detail: format!(
+                        "cast to {} removed: the chain is already {} here",
+                        step.to.name(),
+                        cur.name()
+                    ),
+                });
+                continue 'steps;
+            }
+            if let Some(&(before, last)) = canon_casts.last() {
+                if last.at == step.at && widens_losslessly(before, last.to) {
+                    canon_casts.pop();
+                    rewrites.push(Rewrite {
+                        kind: RewriteKind::CollapseCast,
+                        span: Span::at(last.at),
+                        applied: true,
+                        detail: format!(
+                            "lossless widening cast {}->{} collapsed into the following \
+                             cast to {}",
+                            before.name(),
+                            last.to.name(),
+                            step.to.name()
+                        ),
+                    });
+                    continue;
+                }
+            }
+            canon_casts.push((cur, step));
+            continue 'steps;
+        }
+    }
+    // a trailing widening stop-over at the write boundary collapses into the
+    // write's own (implied) cast to dtout
+    while let Some(&(before, last)) = canon_casts.last() {
+        if last.at == body.len() && widens_losslessly(before, last.to) {
+            canon_casts.pop();
+            rewrites.push(Rewrite {
+                kind: RewriteKind::CollapseCast,
+                span: Span::at(last.at),
+                applied: true,
+                detail: format!(
+                    "lossless widening cast {}->{} collapsed into the write cast to {}",
+                    before.name(),
+                    last.to.name(),
+                    p.dtout.name()
+                ),
+            });
+        } else {
+            break;
+        }
+    }
+    let casts: Vec<CastStep> = canon_casts.into_iter().map(|(_, s)| s).collect();
+
+    (rebuild(&p, &body).with_cast_trace(casts), rewrites)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hostref;
+    use crate::tensor::Tensor;
+
+    fn chain(body: Vec<IOp>, dtin: DType, dtout: DType) -> Pipeline {
+        Pipeline::elementwise(body, vec![2, 2], 1, dtin, dtout).unwrap()
+    }
+
+    #[test]
+    fn identities_and_inverse_pairs_are_removed_bit_safely() {
+        let p = chain(
+            vec![
+                IOp::compute(Opcode::Mul, 1.0),
+                IOp::compute(Opcode::Neg, 0.0),
+                IOp::compute(Opcode::Nop, 0.0),
+                IOp::compute(Opcode::Neg, 0.0),
+                IOp::compute(Opcode::Sub, 0.0),
+                IOp::compute(Opcode::Add, 2.0),
+            ],
+            DType::F32,
+            DType::F64,
+        );
+        let (canon, rewrites) = canonicalize(p.clone());
+        assert_eq!(canon.body(), &[IOp::compute(Opcode::Add, 2.0)]);
+        assert_eq!(rewrites.iter().filter(|r| r.applied).count(), 4);
+        // bit-equality of the rewritten chain, via the oracle
+        let x = Tensor::from_f32(&[-1.5, -0.0, 0.25, 3.0], &[1, 2, 2]);
+        let (a, b) = (hostref::run_pipeline(&p, &x), hostref::run_pipeline(&canon, &x));
+        let (a, b) = (a.to_f64_vec(), b.to_f64_vec());
+        assert_eq!(
+            a.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            b.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn signed_zero_and_nan_skipping_identities_are_suggested_not_applied() {
+        let p = chain(
+            vec![IOp::compute(Opcode::Add, 0.0), IOp::compute(Opcode::Min, f64::INFINITY)],
+            DType::F64,
+            DType::F64,
+        );
+        let (canon, rewrites) = canonicalize(p.clone());
+        assert_eq!(canon, p, "nothing bit-safe to do");
+        let suggested: Vec<_> = rewrites.iter().filter(|r| !r.applied).collect();
+        assert_eq!(suggested.len(), 2);
+        assert!(suggested.iter().all(|r| r.kind == RewriteKind::UnsafeIdentity));
+    }
+
+    #[test]
+    fn scalar_folds_are_reported_never_applied() {
+        let p = chain(
+            vec![IOp::compute(Opcode::Mul, 0.3), IOp::compute(Opcode::Mul, 7.0)],
+            DType::F64,
+            DType::F64,
+        );
+        let (canon, rewrites) = canonicalize(p.clone());
+        assert_eq!(canon, p);
+        assert_eq!(rewrites.len(), 1);
+        assert_eq!(rewrites[0].kind, RewriteKind::FoldScalarPair);
+        assert!(!rewrites[0].applied);
+    }
+
+    #[test]
+    fn cvtcolor_pair_removal_is_guarded_by_the_accumulator() {
+        let body = vec![IOp::CvtColor, IOp::CvtColor, IOp::compute(Opcode::Mul, 2.0)];
+        // u8 -> f32: removing the pair would move the chain onto the f32
+        // fast arm — blocked, reported as unapplied
+        let p = Pipeline::elementwise(body.clone(), vec![4, 4, 3], 1, DType::U8, DType::F32)
+            .unwrap();
+        let (canon, rewrites) = canonicalize(p.clone());
+        assert_eq!(canon, p);
+        assert!(rewrites.iter().any(|r| r.kind == RewriteKind::CancelPair && !r.applied));
+        // u8 -> f64: the accumulator is f64 either way — removed
+        let p = Pipeline::elementwise(body, vec![4, 4, 3], 1, DType::U8, DType::F64).unwrap();
+        let (canon, rewrites) = canonicalize(p);
+        assert_eq!(canon.body(), &[IOp::compute(Opcode::Mul, 2.0)]);
+        assert!(rewrites.iter().any(|r| r.kind == RewriteKind::CancelPair && r.applied));
+    }
+
+    #[test]
+    fn cast_traces_dedup_and_collapse_but_keep_narrowing_round_trips() {
+        let base = chain(vec![IOp::compute(Opcode::Mul, 2.0)], DType::U8, DType::F64);
+        // u8 -> u8 cast: dedup
+        let p = base.clone().with_cast_trace(vec![CastStep { at: 0, to: DType::U8 }]);
+        let (canon, rewrites) = canonicalize(p);
+        assert_eq!(canon.cast_trace(), &[]);
+        assert_eq!(rewrites[0].kind, RewriteKind::DedupCast);
+        // u8 -> f32 -> f64 widening stop-over at the same position: collapse
+        let p = base.clone().with_cast_trace(vec![
+            CastStep { at: 1, to: DType::F32 },
+            CastStep { at: 1, to: DType::F64 },
+        ]);
+        let (canon, rewrites) = canonicalize(p);
+        assert_eq!(canon.cast_trace(), &[], "u8->f64 at the write boundary is implied");
+        assert!(rewrites.iter().any(|r| r.kind == RewriteKind::CollapseCast));
+        // f64 -> f32 -> f64 narrowing round trip: kept for the linter
+        let base = chain(vec![IOp::compute(Opcode::Mul, 2.0)], DType::F64, DType::F64);
+        let p = base.with_cast_trace(vec![
+            CastStep { at: 0, to: DType::F32 },
+            CastStep { at: 0, to: DType::F64 },
+        ]);
+        let (canon, rewrites) = canonicalize(p.clone());
+        assert_eq!(canon, p);
+        assert!(rewrites.is_empty());
+    }
+
+    #[test]
+    fn canonicalize_is_idempotent_and_keeps_a_lone_identity() {
+        let p = chain(vec![IOp::compute(Opcode::Mul, 1.0)], DType::F32, DType::F32);
+        let (canon, rewrites) = canonicalize(p.clone());
+        assert_eq!(canon, p, "the body is never emptied");
+        assert!(rewrites.iter().all(|r| !r.applied));
+
+        let p = chain(
+            vec![
+                IOp::compute(Opcode::Nop, 0.0),
+                IOp::compute(Opcode::Neg, 0.0),
+                IOp::compute(Opcode::Neg, 0.0),
+                IOp::compute(Opcode::Div, 3.0),
+            ],
+            DType::F32,
+            DType::F64,
+        );
+        let (once, _) = canonicalize(p);
+        let (twice, again) = canonicalize(once.clone());
+        assert_eq!(once, twice);
+        assert!(again.iter().all(|r| !r.applied), "fixpoint applies nothing");
+    }
+}

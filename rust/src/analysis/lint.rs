@@ -1,0 +1,599 @@
+//! Typed lint diagnostics over the erased pipeline IR.
+//!
+//! Every rule has a stable `FKL###` code, a severity, and a stage-index
+//! span, with both a human rendering (`Display`) and a machine shape
+//! (`Diagnostic::to_json`). The linter never mutates the pipeline — it is a
+//! pure read of the IR (pinned by `rust/tests/analysis_props.rs`).
+//!
+//! Rule table (rewrite-safety classes live in [`super::canon`]):
+//!
+//! | code   | severity | rule |
+//! |--------|----------|------|
+//! | FKL001 | warning  | identity op (dead stage) |
+//! | FKL002 | warning  | self-cancelling / redundant adjacent pair |
+//! | FKL003 | warning  | redundant cast chain (duplicate or lossless round trip) |
+//! | FKL004 | warning  | narrowing cast round trip (precision-loss intent) |
+//! | FKL005 | warning  | integer write saturation hazard |
+//! | FKL006 | warning  | NaN flows into a Min/Max reduce seal |
+//! | FKL007 | error    | poisonous parameter (NaN/inf scalar, division by zero) |
+//! | FKL008 | info     | tier prediction (who serves, why artifacts refuse) |
+//! | FKL009 | info     | bit-changing fold available (never auto-applied) |
+
+use std::fmt;
+
+use crate::jsonlite::Value;
+use crate::ops::{IOp, Opcode, Pipeline, ReduceKind};
+use crate::tensor::DType;
+
+use super::canon::{identity_of, widens_losslessly, IdentityClass};
+use super::tier::predict_tier;
+
+/// Diagnostic severity. `Error` means the chain computes garbage on every
+/// input; `Warn` means a likely mistake or silent hazard; `Info` is
+/// advisory.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Info,
+    Warn,
+    Error,
+}
+
+impl Severity {
+    pub fn name(self) -> &'static str {
+        match self {
+            Severity::Info => "info",
+            Severity::Warn => "warning",
+            Severity::Error => "error",
+        }
+    }
+}
+
+impl fmt::Display for Severity {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Stable rule identity. The `FKL###` string is the public contract
+/// (CLI output, CI greps); the enum is the in-process shape.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum RuleCode {
+    /// FKL001: identity op — the stage changes nothing.
+    IdentityOp,
+    /// FKL002: self-cancelling or redundant adjacent pair.
+    RedundantPair,
+    /// FKL003: redundant cast chain (duplicate, or lossless round trip).
+    RedundantCast,
+    /// FKL004: narrowing cast round trip — interior casts are free, so the
+    /// truncation the chain appears to ask for never happens.
+    NarrowingRoundTrip,
+    /// FKL005: computed range exceeds the integer write range (silent
+    /// saturation at the boundary).
+    SaturationHazard,
+    /// FKL006: the body can produce NaN and the pipeline seals with a
+    /// Min/Max reduce, whose IEEE fold silently skips NaN elements.
+    NanIntoMinMaxReduce,
+    /// FKL007: poisonous scalar parameter (NaN, infinity, division by zero).
+    PoisonParam,
+    /// FKL008: static tier prediction.
+    TierPrediction,
+    /// FKL009: a bit-changing fold is available (report-only).
+    FoldAvailable,
+}
+
+impl RuleCode {
+    pub fn code(self) -> &'static str {
+        match self {
+            RuleCode::IdentityOp => "FKL001",
+            RuleCode::RedundantPair => "FKL002",
+            RuleCode::RedundantCast => "FKL003",
+            RuleCode::NarrowingRoundTrip => "FKL004",
+            RuleCode::SaturationHazard => "FKL005",
+            RuleCode::NanIntoMinMaxReduce => "FKL006",
+            RuleCode::PoisonParam => "FKL007",
+            RuleCode::TierPrediction => "FKL008",
+            RuleCode::FoldAvailable => "FKL009",
+        }
+    }
+
+    pub fn severity(self) -> Severity {
+        match self {
+            RuleCode::PoisonParam => Severity::Error,
+            RuleCode::TierPrediction | RuleCode::FoldAvailable => Severity::Info,
+            _ => Severity::Warn,
+        }
+    }
+}
+
+/// A body-stage span `[start, end)`. Zero-width spans (`start == end`) mark
+/// cast positions, which sit BETWEEN stages: `at == i` is the gap before
+/// stage `i`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Span {
+    pub start: usize,
+    pub end: usize,
+}
+
+impl Span {
+    /// The single body stage `i`.
+    pub fn stage(i: usize) -> Span {
+        Span { start: i, end: i + 1 }
+    }
+
+    /// The cast gap before body stage `i`.
+    pub fn at(i: usize) -> Span {
+        Span { start: i, end: i }
+    }
+}
+
+impl fmt::Display for Span {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.end.saturating_sub(self.start) {
+            0 => write!(f, "cast@{}", self.start),
+            1 => write!(f, "stage {}", self.start),
+            _ => write!(f, "stages {}..{}", self.start, self.end),
+        }
+    }
+}
+
+/// One lint finding: typed code + severity + span + human message.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Diagnostic {
+    pub code: RuleCode,
+    pub severity: Severity,
+    pub span: Span,
+    pub message: String,
+}
+
+impl Diagnostic {
+    fn new(code: RuleCode, span: Span, message: String) -> Diagnostic {
+        Diagnostic { code, severity: code.severity(), span, message }
+    }
+
+    /// Machine shape (the `fkl lint --json` contract).
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("code", Value::str(self.code.code())),
+            ("severity", Value::str(self.severity.name())),
+            ("start", Value::num(self.span.start as f64)),
+            ("end", Value::num(self.span.end as f64)),
+            ("message", Value::str(&self.message)),
+        ])
+    }
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}[{}] {}: {}", self.severity, self.code.code(), self.span, self.message)
+    }
+}
+
+/// A conservative value interval propagated through the body, used by the
+/// saturation and NaN-hazard heuristics. Infinite bounds mean "any finite
+/// value of that sign" (float inputs); `nan` tracks whether any element can
+/// become NaN.
+#[derive(Debug, Clone, Copy)]
+struct Interval {
+    lo: f64,
+    hi: f64,
+    nan: bool,
+}
+
+impl Interval {
+    fn of_dtype(dt: DType) -> Interval {
+        match dt {
+            DType::U8 => Interval { lo: 0.0, hi: 255.0, nan: false },
+            DType::U16 => Interval { lo: 0.0, hi: 65535.0, nan: false },
+            DType::I32 => Interval { lo: i32::MIN as f64, hi: i32::MAX as f64, nan: false },
+            DType::F32 | DType::F64 => {
+                Interval { lo: f64::NEG_INFINITY, hi: f64::INFINITY, nan: false }
+            }
+        }
+    }
+
+    fn abs(self) -> Interval {
+        let lo = if self.lo <= 0.0 && self.hi >= 0.0 {
+            0.0
+        } else {
+            self.lo.abs().min(self.hi.abs())
+        };
+        Interval { lo, hi: self.lo.abs().max(self.hi.abs()), nan: self.nan }
+    }
+
+    fn apply(self, op: Opcode, param: f64) -> Interval {
+        let Interval { lo, hi, nan } = self;
+        match op {
+            Opcode::Nop => self,
+            Opcode::Add => Interval { lo: lo + param, hi: hi + param, nan: nan || param.is_nan() },
+            Opcode::Sub => Interval { lo: lo - param, hi: hi - param, nan: nan || param.is_nan() },
+            Opcode::Mul => {
+                if param == 0.0 {
+                    // the domain is finite values: x * 0 is a signed zero
+                    return Interval { lo: 0.0, hi: 0.0, nan };
+                }
+                let (a, b) = (lo * param, hi * param);
+                Interval { lo: a.min(b), hi: a.max(b), nan: nan || param.is_nan() }
+            }
+            Opcode::Div => {
+                if param == 0.0 {
+                    // x/0 is ±inf; 0/0 is NaN whenever 0 is in the domain
+                    return Interval {
+                        lo: f64::NEG_INFINITY,
+                        hi: f64::INFINITY,
+                        nan: nan || (lo <= 0.0 && hi >= 0.0),
+                    };
+                }
+                let (a, b) = (lo / param, hi / param);
+                Interval { lo: a.min(b), hi: a.max(b), nan: nan || param.is_nan() }
+            }
+            Opcode::Abs => self.abs(),
+            Opcode::Neg => Interval { lo: -hi, hi: -lo, nan },
+            // IEEE min/max return the non-NaN side, so a NaN input is
+            // cleared unless the parameter itself is NaN
+            Opcode::Min => {
+                Interval { lo: lo.min(param), hi: hi.min(param), nan: nan && param.is_nan() }
+            }
+            Opcode::Max => {
+                Interval { lo: lo.max(param), hi: hi.max(param), nan: nan && param.is_nan() }
+            }
+            Opcode::Sqrt => {
+                let a = self.abs();
+                Interval { lo: a.lo.sqrt(), hi: a.hi.sqrt(), nan }
+            }
+            Opcode::Exp => Interval { lo: lo.exp(), hi: hi.exp(), nan },
+            Opcode::Log => {
+                let a = self.abs();
+                Interval { lo: (a.lo + 1.0).ln(), hi: (a.hi + 1.0).ln(), nan }
+            }
+            Opcode::Clamp01 => {
+                Interval { lo: lo.clamp(0.0, 1.0), hi: hi.clamp(0.0, 1.0), nan }
+            }
+        }
+    }
+
+    fn apply_iop(self, op: &IOp) -> Interval {
+        match op {
+            IOp::Compute { op, param } => self.apply(*op, *param),
+            IOp::ComputeC3 { op, param } => {
+                // hull over the three per-lane parameters
+                let mut out = self.apply(*op, f64::from(param[0]));
+                for &q in &param[1..] {
+                    let lane = self.apply(*op, f64::from(q));
+                    out = Interval {
+                        lo: out.lo.min(lane.lo),
+                        hi: out.hi.max(lane.hi),
+                        nan: out.nan || lane.nan,
+                    };
+                }
+                out
+            }
+            // a swizzle moves values between lanes but changes none of them
+            IOp::CvtColor => self,
+            IOp::Mem(_) => self,
+        }
+    }
+}
+
+/// Lint a pipeline: pure, typed, ordered (per-stage rules first, then pair
+/// rules, cast rules, whole-chain hazards, and the tier prediction last).
+pub fn lint(p: &Pipeline) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let body = p.body();
+
+    // FKL001 / FKL007 — per-stage scalar rules
+    for (i, stage) in body.iter().enumerate() {
+        let IOp::Compute { op, param } = stage else { continue };
+        let (op, param) = (*op, *param);
+        if let Some((class, why)) = identity_of(op, param) {
+            let note = if class == IdentityClass::Exact {
+                "the canonicalizer removes it"
+            } else {
+                "removal is not bit-safe, so the canonicalizer only reports it"
+            };
+            out.push(Diagnostic::new(
+                RuleCode::IdentityOp,
+                Span::stage(i),
+                format!("{}({param}) is an identity: {why} ({note})", op.name()),
+            ));
+        } else if op.takes_param() {
+            let arith = matches!(op, Opcode::Add | Opcode::Sub | Opcode::Mul | Opcode::Div);
+            if param.is_nan() && arith {
+                out.push(Diagnostic::new(
+                    RuleCode::PoisonParam,
+                    Span::stage(i),
+                    format!("{}(NaN): every element that flows through becomes NaN", op.name()),
+                ));
+            } else if param.is_infinite() && arith {
+                out.push(Diagnostic::new(
+                    RuleCode::PoisonParam,
+                    Span::stage(i),
+                    format!(
+                        "{}({param}): a non-finite parameter saturates the whole chain \
+                         to infinity (NaN where cancellation hits)",
+                        op.name()
+                    ),
+                ));
+            } else if op == Opcode::Div && param == 0.0 {
+                out.push(Diagnostic::new(
+                    RuleCode::PoisonParam,
+                    Span::stage(i),
+                    "div(0): every element becomes ±inf, and NaN at zero".to_string(),
+                ));
+            }
+        }
+    }
+
+    // FKL002 / FKL009 — adjacent pair rules
+    for i in 0..body.len().saturating_sub(1) {
+        match (&body[i], &body[i + 1]) {
+            (IOp::Compute { op: Opcode::Neg, .. }, IOp::Compute { op: Opcode::Neg, .. }) => {
+                out.push(Diagnostic::new(
+                    RuleCode::RedundantPair,
+                    Span { start: i, end: i + 2 },
+                    "neg;neg cancels to nothing (double sign flip)".to_string(),
+                ));
+            }
+            (IOp::Compute { op: Opcode::Abs, .. }, IOp::Compute { op: Opcode::Abs, .. }) => {
+                out.push(Diagnostic::new(
+                    RuleCode::RedundantPair,
+                    Span { start: i, end: i + 2 },
+                    "abs;abs: the second abs never sees a negative value".to_string(),
+                ));
+            }
+            (
+                IOp::Compute { op: Opcode::Clamp01, .. },
+                IOp::Compute { op: Opcode::Clamp01, .. },
+            ) => {
+                out.push(Diagnostic::new(
+                    RuleCode::RedundantPair,
+                    Span { start: i, end: i + 2 },
+                    "clamp01;clamp01: the second clamp is redundant".to_string(),
+                ));
+            }
+            (IOp::CvtColor, IOp::CvtColor) => {
+                out.push(Diagnostic::new(
+                    RuleCode::RedundantPair,
+                    Span { start: i, end: i + 2 },
+                    "cvtcolor;cvtcolor restores the original channel layout".to_string(),
+                ));
+            }
+            (IOp::Compute { op: a, param: pa }, IOp::Compute { op: b, param: pb })
+                if (*a == Opcode::Mul && *b == Opcode::Mul)
+                    || (*a == Opcode::Add && *b == Opcode::Add) =>
+            {
+                let folded = if *a == Opcode::Mul { pa * pb } else { pa + pb };
+                out.push(Diagnostic::new(
+                    RuleCode::FoldAvailable,
+                    Span { start: i, end: i + 2 },
+                    format!(
+                        "{}({pa});{}({pb}) folds to {}({folded}), but one rounding \
+                         instead of two changes bits — never auto-applied",
+                        a.name(),
+                        b.name(),
+                        a.name()
+                    ),
+                ));
+            }
+            _ => {}
+        }
+    }
+
+    // FKL003 / FKL004 — cast-trace rules
+    let trace = p.cast_trace();
+    let mut cur = p.dtin;
+    for (k, step) in trace.iter().enumerate() {
+        if step.to == cur {
+            out.push(Diagnostic::new(
+                RuleCode::RedundantCast,
+                Span::at(step.at),
+                format!("cast to {} is a no-op: the chain is already {}", step.to, cur),
+            ));
+        } else if k > 0 && trace[k - 1].at == step.at {
+            // adjacent casts with no compute op between them: A -> B -> C
+            let a = if k >= 2 { trace[k - 2].to } else { p.dtin };
+            let b = trace[k - 1].to;
+            if step.to == a {
+                if widens_losslessly(a, b) {
+                    out.push(Diagnostic::new(
+                        RuleCode::RedundantCast,
+                        Span::at(step.at),
+                        format!(
+                            "cast {a}->{b}->{a} round-trips losslessly: both casts are \
+                             dead (the canonicalizer removes them)"
+                        ),
+                    ));
+                } else {
+                    out.push(Diagnostic::new(
+                        RuleCode::NarrowingRoundTrip,
+                        Span::at(step.at),
+                        format!(
+                            "cast {a}->{b}->{a} round-trips through a narrower marker \
+                             type: interior casts are free, so NO truncation happens at \
+                             run time — if truncation to {b} was intended, this chain \
+                             does not perform it"
+                        ),
+                    ));
+                }
+            }
+        }
+        cur = step.to;
+    }
+
+    // FKL005 / FKL006 — whole-chain range hazards
+    let iv = body.iter().fold(Interval::of_dtype(p.dtin), Interval::apply_iop);
+    if let Some(max) = p.dtout.saturate_max() {
+        let over = iv.hi > max && iv.hi.is_finite();
+        let under = iv.lo < 0.0 && iv.lo.is_finite();
+        if over || under {
+            out.push(Diagnostic::new(
+                RuleCode::SaturationHazard,
+                Span { start: 0, end: body.len() },
+                format!(
+                    "computed range [{}, {}] exceeds the {} write range [0, {max}]: \
+                     out-of-range values saturate silently at the write boundary",
+                    iv.lo, iv.hi, p.dtout
+                ),
+            ));
+        }
+    }
+    if let Some(spec) = p.reduction() {
+        let minmax = (0..spec.stat_count())
+            .map(|i| spec.stat(i))
+            .find(|k| matches!(k, ReduceKind::Min | ReduceKind::Max));
+        if let Some(kind) = minmax {
+            if iv.nan {
+                out.push(Diagnostic::new(
+                    RuleCode::NanIntoMinMaxReduce,
+                    Span { start: 0, end: body.len() },
+                    format!(
+                        "the body can produce NaN and the pipeline seals with a {kind} \
+                         reduce: the IEEE fold SKIPS NaN elements, so the statistic \
+                         silently reflects only the non-NaN values"
+                    ),
+                ));
+            }
+        }
+    }
+
+    // FKL008 — tier prediction
+    let t = predict_tier(p);
+    let msg = match &t.artifact_refusal {
+        Some(why) => format!(
+            "serves on the {} tier (host accumulator {:?}); artifact tiers refuse: {why}",
+            t.tier, t.accum
+        ),
+        None => format!(
+            "dense chain: artifact-tier eligible (registry decides exact/staticloop/\
+             interp; host fused fallback, accumulator {:?})",
+            t.accum
+        ),
+    };
+    out.push(Diagnostic::new(RuleCode::TierPrediction, Span { start: 0, end: body.len() }, msg));
+
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::{CastStep, MemOp, ReduceAxis, ReduceSpec};
+
+    fn codes(diags: &[Diagnostic]) -> Vec<&'static str> {
+        diags.iter().map(|d| d.code.code()).collect()
+    }
+
+    #[test]
+    fn identity_pair_and_poison_rules_fire_with_codes_and_severities() {
+        let p = Pipeline::from_opcodes(
+            &[
+                (Opcode::Mul, 1.0),
+                (Opcode::Neg, 0.0),
+                (Opcode::Neg, 0.0),
+                (Opcode::Div, 0.0),
+            ],
+            &[4],
+            1,
+            DType::F32,
+            DType::F32,
+        )
+        .unwrap();
+        let diags = lint(&p);
+        assert!(codes(&diags).contains(&"FKL001"));
+        assert!(codes(&diags).contains(&"FKL002"));
+        assert!(codes(&diags).contains(&"FKL007"));
+        let poison = diags.iter().find(|d| d.code == RuleCode::PoisonParam).unwrap();
+        assert_eq!(poison.severity, Severity::Error);
+        assert_eq!(poison.span, Span::stage(3));
+        let rendered = poison.to_string();
+        assert!(rendered.starts_with("error[FKL007] stage 3:"), "{rendered}");
+    }
+
+    #[test]
+    fn fold_suggestions_and_saturation_hazards() {
+        let p = Pipeline::from_opcodes(
+            &[(Opcode::Mul, 2.0), (Opcode::Mul, 3.0)],
+            &[4],
+            1,
+            DType::U8,
+            DType::U8,
+        )
+        .unwrap();
+        let diags = lint(&p);
+        let fold = diags.iter().find(|d| d.code == RuleCode::FoldAvailable).unwrap();
+        assert_eq!(fold.severity, Severity::Info);
+        assert!(fold.message.contains("mul(6)"), "{}", fold.message);
+        let sat = diags.iter().find(|d| d.code == RuleCode::SaturationHazard).unwrap();
+        assert!(sat.message.contains("255"), "{}", sat.message);
+    }
+
+    #[test]
+    fn cast_rules_separate_lossless_from_narrowing_round_trips() {
+        let base = Pipeline::from_opcodes(
+            &[(Opcode::Mul, 2.0)],
+            &[4],
+            1,
+            DType::U8,
+            DType::F64,
+        )
+        .unwrap();
+        let lossless = base.clone().with_cast_trace(vec![
+            CastStep { at: 0, to: DType::F32 },
+            CastStep { at: 0, to: DType::U8 },
+        ]);
+        let diags = lint(&lossless);
+        assert!(codes(&diags).contains(&"FKL003"));
+        assert!(!codes(&diags).contains(&"FKL004"));
+
+        let narrowing = Pipeline::from_opcodes(
+            &[(Opcode::Mul, 2.0)],
+            &[4],
+            1,
+            DType::F64,
+            DType::F64,
+        )
+        .unwrap()
+        .with_cast_trace(vec![
+            CastStep { at: 0, to: DType::F32 },
+            CastStep { at: 0, to: DType::F64 },
+        ]);
+        let diags = lint(&narrowing);
+        assert!(codes(&diags).contains(&"FKL004"));
+    }
+
+    #[test]
+    fn nan_hazard_fires_only_for_minmax_reduce_seals() {
+        let mk = |spec: ReduceSpec, div: f64| {
+            Pipeline::new(
+                vec![
+                    IOp::Mem(MemOp::Read { dtype: DType::F32 }),
+                    IOp::compute(Opcode::Div, div),
+                    IOp::Mem(MemOp::Reduce { spec }),
+                ],
+                vec![4],
+                1,
+                DType::F32,
+                DType::F64,
+            )
+            .unwrap()
+        };
+        let max_seal = ReduceSpec::single(ReduceKind::Max, ReduceAxis::Full);
+        let mean_seal = ReduceSpec::single(ReduceKind::Mean, ReduceAxis::Full);
+        assert!(codes(&lint(&mk(max_seal, 0.0))).contains(&"FKL006"));
+        // mean seal: NaN POISONS the sum, it is not skipped — different bug,
+        // still FKL007, but no FKL006
+        assert!(!codes(&lint(&mk(mean_seal, 0.0))).contains(&"FKL006"));
+        // finite divisor: no NaN source at all
+        assert!(!codes(&lint(&mk(max_seal, 2.0))).contains(&"FKL006"));
+    }
+
+    #[test]
+    fn every_lint_run_ends_with_a_tier_prediction() {
+        let p = Pipeline::from_opcodes(&[(Opcode::Mul, 2.0)], &[4], 1, DType::U8, DType::F32)
+            .unwrap();
+        let diags = lint(&p);
+        let last = diags.last().unwrap();
+        assert_eq!(last.code, RuleCode::TierPrediction);
+        assert_eq!(last.severity, Severity::Info);
+        assert!(last.message.contains("artifact-tier eligible"), "{}", last.message);
+    }
+}

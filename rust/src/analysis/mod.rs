@@ -1,0 +1,41 @@
+//! Static analysis over the erased [`Pipeline`](crate::ops::Pipeline) IR.
+//!
+//! The paper's C++17 layer statically *rejects* malformed chains (Fig. 10
+//! `S_ASSERT_INPUT_OUTPUT`); our typestate builder reproduces that half. This
+//! module is the other half kernel-fusion compilers grew on top of rejection:
+//! reasoning about the CONTENT of a legal chain before anything runs.
+//! Filipovič et al. ("Optimizing CUDA Code By Kernel Fusion") fold and
+//! simplify the op sequence before emitting the fused kernel; HFuse
+//! statically predicts whether fusion pays off. Here:
+//!
+//! * [`lint`] walks a pipeline and returns typed, coded diagnostics
+//!   ([`Diagnostic`]): dead/identity ops, redundant or narrowing cast
+//!   chains, integer-saturation and NaN-propagation hazards, poisonous
+//!   parameters, and a tier prediction ([`predict_tier`]) that says which
+//!   ladder tier will serve the chain and why the artifact tiers refuse it —
+//!   facts that were previously only discoverable by running.
+//! * [`canonicalize`] rewrites a pipeline into a normal form, applying ONLY
+//!   rewrites proven bit-safe on every IEEE input (identity elimination,
+//!   inverse-pair cancellation, cast dedup/collapse); anything that could
+//!   change a single output bit — folding `Mul(a);Mul(b)` into `Mul(a*b)`,
+//!   dropping `Add(+0.0)` — is reported as a suggestion and never applied.
+//!   Canonical pipelines collapse syntactically distinct but equivalent
+//!   chains onto one [`Signature`](crate::ops::Signature), so the
+//!   coordinator's plan cache and stacking tier see one stream instead of
+//!   many (wired in behind [`ServiceConfig::canonicalize`]
+//!   [`crate::coordinator::ServiceConfig`]).
+//!
+//! The bit-safety contract is enforced empirically by the differential fuzz
+//! harness (`rust/tests/fuzz_chains.rs`): every random chain is executed raw
+//! and canonicalized and the results compared bit-for-bit on the f64
+//! accumulator paths, at 1/2/8 threads.
+
+mod canon;
+mod lint;
+mod spec;
+mod tier;
+
+pub use canon::{canonicalize, Rewrite, RewriteKind};
+pub use lint::{lint, Diagnostic, RuleCode, Severity, Span};
+pub use spec::{parse_chain_spec, SpecError};
+pub use tier::{predict_tier, Tier, TierPrediction};

@@ -1,0 +1,125 @@
+//! Typed parser for textual chain specs (`fkl lint`). The main CLI's
+//! builders panic on malformed input (they are demo drivers); the lint
+//! subcommand is a front door for ARBITRARY user chains, so every malformed
+//! spec must come back as a typed [`SpecError`], never a panic — the same
+//! contract ROADMAP item 5's wire-format ingestion will need.
+//!
+//! Grammar (comma-separated tokens):
+//!
+//! ```text
+//! mul:0.5,add:1.0,cvtcolor,cast:f32,sqrt
+//! ```
+//!
+//! * `name` or `name:param` — a scalar opcode (param defaults to 1.0);
+//! * `cvtcolor` — the channel swizzle;
+//! * `cast:<dtype>` — a marker-type cast at the current position, recorded
+//!   in the pipeline's cast trace for the cast lints.
+
+use crate::ops::{CastStep, IOp, Opcode, Pipeline};
+use crate::tensor::DType;
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum SpecError {
+    #[error("chain spec is empty")]
+    Empty,
+    #[error("unknown op '{0}' (expected an opcode name, 'cvtcolor', or 'cast:<dtype>')")]
+    UnknownOp(String),
+    #[error("op '{op}' has a malformed parameter '{raw}'")]
+    BadParam { op: String, raw: String },
+    #[error("unknown dtype '{0}' (expected u8|u16|i32|f32|f64)")]
+    BadDType(String),
+    #[error("malformed shape '{0}' (expected like 60x120)")]
+    BadShape(String),
+    #[error("pipeline rejected: {0}")]
+    Invalid(#[from] crate::ops::PipelineError),
+}
+
+fn parse_dtype(s: &str) -> Result<DType, SpecError> {
+    DType::parse(s).ok_or_else(|| SpecError::BadDType(s.to_string()))
+}
+
+/// Parse a full chain spec into a validated [`Pipeline`] with its cast
+/// trace attached.
+pub fn parse_chain_spec(
+    ops: &str,
+    shape: &str,
+    batch: usize,
+    dtin: &str,
+    dtout: &str,
+) -> Result<Pipeline, SpecError> {
+    let dtin = parse_dtype(dtin)?;
+    let dtout = parse_dtype(dtout)?;
+    let shape: Vec<usize> = shape
+        .split('x')
+        .map(|t| t.parse().map_err(|_| SpecError::BadShape(shape.to_string())))
+        .collect::<Result<_, _>>()?;
+    if ops.trim().is_empty() {
+        return Err(SpecError::Empty);
+    }
+
+    let mut body = Vec::new();
+    let mut casts = Vec::new();
+    for token in ops.split(',') {
+        let token = token.trim();
+        if token == "cvtcolor" {
+            body.push(IOp::CvtColor);
+            continue;
+        }
+        let (name, raw) = token.split_once(':').unwrap_or((token, "1.0"));
+        if name == "cast" {
+            casts.push(CastStep { at: body.len(), to: parse_dtype(raw)? });
+            continue;
+        }
+        let op = Opcode::parse(name).ok_or_else(|| SpecError::UnknownOp(token.to_string()))?;
+        let param: f64 = raw
+            .parse()
+            .map_err(|_| SpecError::BadParam { op: name.to_string(), raw: raw.to_string() })?;
+        body.push(IOp::compute(op, param));
+    }
+
+    Ok(Pipeline::elementwise(body, shape, batch, dtin, dtout)?.with_cast_trace(casts))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalar_ops_cvtcolor_and_casts() {
+        let p = parse_chain_spec("mul:0.5,cast:f32,cvtcolor,sqrt", "4x4x3", 2, "u8", "f32")
+            .unwrap();
+        assert_eq!(p.body().len(), 3);
+        assert_eq!(p.batch, 2);
+        assert_eq!(p.cast_trace(), &[CastStep { at: 1, to: DType::F32 }]);
+        assert_eq!(p.body()[0], IOp::compute(Opcode::Mul, 0.5));
+        assert_eq!(p.body()[1], IOp::CvtColor);
+        // a bare scalar op defaults its param to 1.0 like `fkl run`
+        assert_eq!(p.body()[2], IOp::compute(Opcode::Sqrt, 1.0));
+    }
+
+    #[test]
+    fn every_malformed_input_is_a_typed_error() {
+        let err = |o: Result<Pipeline, SpecError>| o.unwrap_err();
+        assert_eq!(
+            err(parse_chain_spec("frobnicate", "4", 1, "u8", "f32")),
+            SpecError::UnknownOp("frobnicate".to_string())
+        );
+        assert_eq!(
+            err(parse_chain_spec("mul:abc", "4", 1, "u8", "f32")),
+            SpecError::BadParam { op: "mul".to_string(), raw: "abc".to_string() }
+        );
+        assert_eq!(
+            err(parse_chain_spec("mul", "4", 1, "u9", "f32")),
+            SpecError::BadDType("u9".to_string())
+        );
+        assert_eq!(
+            err(parse_chain_spec("mul", "4yy", 1, "u8", "f32")),
+            SpecError::BadShape("4yy".to_string())
+        );
+        assert_eq!(err(parse_chain_spec("  ", "4", 1, "u8", "f32")), SpecError::Empty);
+        assert_eq!(
+            err(parse_chain_spec("cast:bogus", "4", 1, "u8", "f32")),
+            SpecError::BadDType("bogus".to_string())
+        );
+    }
+}

@@ -1,0 +1,161 @@
+//! Static tier prediction: which rung of the execution ladder serves a
+//! pipeline, decided from the IR alone.
+//!
+//! The runtime ladder discovers this by trying: the planner raises a typed
+//! [`PlanError`](crate::fusion::PlanError) and `FusedEngine` re-routes.
+//! `predict_tier` mirrors the planner's refusal order exactly — reduction
+//! seal first, then structured boundary, then the scalar-chain body
+//! requirement — so the prediction is the same fact the user would otherwise
+//! learn from a run. Registry coverage (which artifact family hits) is
+//! deliberately NOT predicted: it depends on what was compiled, not on the
+//! pipeline.
+
+use crate::fusion::{HostAccum, HostPlan};
+use crate::ops::{IOp, Pipeline};
+
+/// The ladder rung a pipeline is served on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Tier {
+    /// Dense scalar chain: artifact-tier eligible (exact > staticloop >
+    /// interp, registry-dependent), with the host fused chain tier as the
+    /// always-available fallback.
+    DenseChain,
+    /// C3/CvtColor lane-grouped body: artifact tiers refuse (`NotAChain`);
+    /// the host fused engine serves it in the group tier.
+    HostGroup,
+    /// Crop/resize read or split write: artifact tiers refuse
+    /// (`StructuredBoundary`); served by the host structured tier.
+    HostStructured,
+    /// Reduce terminator: artifact tiers refuse (`Reduction`); served by the
+    /// host fold-while-reading tier.
+    HostReduce,
+}
+
+impl Tier {
+    pub fn name(self) -> &'static str {
+        match self {
+            Tier::DenseChain => "dense-chain",
+            Tier::HostGroup => "host-group",
+            Tier::HostStructured => "host-structured",
+            Tier::HostReduce => "host-reduce",
+        }
+    }
+}
+
+impl std::fmt::Display for Tier {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// What `predict_tier` knows before anything runs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TierPrediction {
+    pub tier: Tier,
+    /// Why every artifact tier will refuse this pipeline (`None` when the
+    /// chain is artifact-eligible) — the same fact the planner's typed
+    /// [`PlanError`](crate::fusion::PlanError) reports at run time.
+    pub artifact_refusal: Option<String>,
+    /// The host fused engine's accumulator domain for this pipeline:
+    /// [`HostAccum::F32`] is the register-resident fast arm, everything else
+    /// folds in f64, bit-compatible with the hostref oracle.
+    pub accum: HostAccum,
+}
+
+/// Predict the serving tier of `p` without running it.
+pub fn predict_tier(p: &Pipeline) -> TierPrediction {
+    let accum = HostPlan::compile(p).accum();
+    if p.reduction().is_some() {
+        let token = p.ops().last().map(IOp::sig_token).unwrap_or_default();
+        return TierPrediction {
+            tier: Tier::HostReduce,
+            artifact_refusal: Some(format!("reduce seal: {token}")),
+            accum,
+        };
+    }
+    if p.has_structured_boundary() {
+        let token = p
+            .ops()
+            .iter()
+            .find(|op| matches!(op, IOp::Mem(m) if m.is_structured()))
+            .map(IOp::sig_token)
+            .unwrap_or_default();
+        return TierPrediction {
+            tier: Tier::HostStructured,
+            artifact_refusal: Some(format!("structured boundary: {token}")),
+            accum,
+        };
+    }
+    if let Some(op) = p.body().iter().find(|op| !matches!(op, IOp::Compute { .. })) {
+        return TierPrediction {
+            tier: Tier::HostGroup,
+            artifact_refusal: Some(format!("not a scalar chain: {}", op.sig_token())),
+            accum,
+        };
+    }
+    TierPrediction { tier: Tier::DenseChain, artifact_refusal: None, accum }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::{IOp, MemOp, Opcode, Pipeline, ReduceAxis, ReduceKind, ReduceSpec};
+    use crate::tensor::{DType, Rect};
+
+    #[test]
+    fn predictions_mirror_the_planner_refusal_order() {
+        let chain =
+            Pipeline::from_opcodes(&[(Opcode::Mul, 2.0)], &[4, 4], 1, DType::U8, DType::F32)
+                .unwrap();
+        let t = predict_tier(&chain);
+        assert_eq!(t.tier, Tier::DenseChain);
+        assert_eq!(t.artifact_refusal, None);
+        assert_eq!(t.accum, HostAccum::F32, "u8->f32 dense chain rides the fast arm");
+
+        let group = Pipeline::elementwise(
+            vec![IOp::CvtColor, IOp::compute(Opcode::Mul, 2.0)],
+            vec![4, 4, 3],
+            1,
+            DType::U8,
+            DType::F32,
+        )
+        .unwrap();
+        let t = predict_tier(&group);
+        assert_eq!(t.tier, Tier::HostGroup);
+        assert!(t.artifact_refusal.as_deref().unwrap().contains("cvtcolor"));
+        assert_eq!(t.accum, HostAccum::F64, "group bodies fold in f64");
+
+        let structured = Pipeline::new(
+            vec![
+                IOp::Mem(MemOp::CropRead { rect: Rect::new(0, 0, 8, 8) }),
+                IOp::compute(Opcode::Mul, 2.0),
+                IOp::Mem(MemOp::Write { dtype: DType::F32 }),
+            ],
+            vec![8, 8],
+            1,
+            DType::F32,
+            DType::F32,
+        )
+        .unwrap();
+        let t = predict_tier(&structured);
+        assert_eq!(t.tier, Tier::HostStructured);
+        assert!(t.artifact_refusal.as_deref().unwrap().contains("structured boundary"));
+
+        let spec = ReduceSpec::single(ReduceKind::Mean, ReduceAxis::Full);
+        let reduce = Pipeline::new(
+            vec![
+                IOp::Mem(MemOp::Read { dtype: DType::F32 }),
+                IOp::compute(Opcode::Mul, 2.0),
+                IOp::Mem(MemOp::Reduce { spec }),
+            ],
+            vec![4, 4],
+            1,
+            DType::F32,
+            DType::F64,
+        )
+        .unwrap();
+        let t = predict_tier(&reduce);
+        assert_eq!(t.tier, Tier::HostReduce);
+        assert!(t.artifact_refusal.as_deref().unwrap().contains("reduce seal"));
+    }
+}

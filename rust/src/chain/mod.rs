@@ -137,7 +137,8 @@ use anyhow::{ensure, Context as _, Result};
 
 use crate::exec::{HostFusedEngine, HostLane};
 use crate::ops::{
-    kernel, IOp, MemOp, Opcode, Pipeline, ReduceAxis, ReduceKind, ReduceSpec, Signature,
+    kernel, CastStep, IOp, MemOp, Opcode, Pipeline, ReduceAxis, ReduceKind, ReduceSpec,
+    Signature,
 };
 #[allow(unused_imports)] // doc links
 use crate::ops::PipelineError;
@@ -462,12 +463,16 @@ pub struct ChainLink<S, In, Cur> {
     ops: Vec<IOp>,
     shape: Vec<usize>,
     batch: usize,
+    /// Marker-type casts in chain order, handed to the sealed pipeline as
+    /// its [`Pipeline::cast_trace`] (static analysis sees what the erased
+    /// IR cannot).
+    casts: Vec<CastStep>,
     _t: PhantomData<fn() -> (S, In, Cur)>,
 }
 
 impl<In: Elem> ChainLink<Reading, In, In> {
     fn start(read: IOp, shape: Vec<usize>) -> ChainLink<Reading, In, In> {
-        ChainLink { ops: vec![read], shape, batch: 1, _t: PhantomData }
+        ChainLink { ops: vec![read], shape, batch: 1, casts: Vec::new(), _t: PhantomData }
     }
 }
 
@@ -496,8 +501,18 @@ impl<S: State, In: Elem, Cur: Elem> ChainLink<S, In, Cur> {
     /// `W`. Lowering is a no-op — the runtime IR carries dtypes only at the
     /// read/write boundary, so the cast costs nothing and the
     /// [`Signature`] is unchanged (plan-cache parity with the untyped IR).
-    pub fn cast<W: Elem>(self) -> ChainLink<Computing, In, W> {
-        ChainLink { ops: self.ops, shape: self.shape, batch: self.batch, _t: PhantomData }
+    /// The cast IS recorded in the sealed pipeline's
+    /// [`Pipeline::cast_trace`], where the `analysis` linter flags
+    /// redundant chains and narrowing round-trips.
+    pub fn cast<W: Elem>(mut self) -> ChainLink<Computing, In, W> {
+        self.casts.push(CastStep { at: self.ops.len() - 1, to: W::DTYPE });
+        ChainLink {
+            ops: self.ops,
+            shape: self.shape,
+            batch: self.batch,
+            casts: self.casts,
+            _t: PhantomData,
+        }
     }
 
     /// Seal with a dense per-thread write of the current element type.
@@ -547,18 +562,26 @@ impl<S: State, In: Elem, Cur: Elem> ChainLink<S, In, Cur> {
     pub fn reduce_spec(mut self, spec: ReduceSpec) -> TypedPipeline<In, F64> {
         self.ops.push(IOp::Mem(MemOp::Reduce { spec }));
         let pipeline = Pipeline::new(self.ops, self.shape, self.batch, In::DTYPE, DType::F64)
-            .expect("chain builder invariant: read first, reduce last, f64 statistics");
+            .expect("chain builder invariant: read first, reduce last, f64 statistics")
+            .with_cast_trace(self.casts);
         TypedPipeline { pipeline, _t: PhantomData }
     }
 
     fn transition<S2: State>(self) -> ChainLink<S2, In, Cur> {
-        ChainLink { ops: self.ops, shape: self.shape, batch: self.batch, _t: PhantomData }
+        ChainLink {
+            ops: self.ops,
+            shape: self.shape,
+            batch: self.batch,
+            casts: self.casts,
+            _t: PhantomData,
+        }
     }
 
     fn seal(mut self, write: MemOp) -> TypedPipeline<In, Cur> {
         self.ops.push(IOp::Mem(write));
         let pipeline = Pipeline::new(self.ops, self.shape, self.batch, In::DTYPE, Cur::DTYPE)
-            .expect("chain builder invariant: read first, write last, compute-only interior");
+            .expect("chain builder invariant: read first, write last, compute-only interior")
+            .with_cast_trace(self.casts);
         TypedPipeline { pipeline, _t: PhantomData }
     }
 }
@@ -590,6 +613,22 @@ impl<In: Elem, Out: Elem> TypedPipeline<In, Out> {
     /// plan/artifact reuse is byte-for-byte the same.
     pub fn signature(&self) -> Signature {
         Signature::of(&self.pipeline)
+    }
+
+    /// Run the static analyzer over the sealed IR: typed, coded diagnostics
+    /// (identity ops, cast chains, saturation/NaN hazards, tier
+    /// prediction). Pure — the pipeline is not touched.
+    pub fn lint(&self) -> Vec<crate::analysis::Diagnostic> {
+        crate::analysis::lint(&self.pipeline)
+    }
+
+    /// The canonicalized twin of this pipeline plus the rewrite report.
+    /// Only bit-safety-proven rewrites are applied, so the result computes
+    /// the same bits; the dtype evidence therefore still holds and the
+    /// result is a [`TypedPipeline`] of the same `(In, Out)`.
+    pub fn canonicalized(&self) -> (TypedPipeline<In, Out>, Vec<crate::analysis::Rewrite>) {
+        let (pipeline, rewrites) = crate::analysis::canonicalize(self.pipeline.clone());
+        (TypedPipeline { pipeline, _t: PhantomData }, rewrites)
     }
 
     /// Execute on the host fused engine through the **statically
@@ -938,6 +977,39 @@ mod tests {
         let a = Chain::read::<F32>(&[8]).map(Mul(2.0)).write();
         let b = Chain::read::<F32>(&[8]).map(Mul(9.0)).cast::<F32>().write();
         assert_eq!(a.signature(), b.signature(), "cast adds no ops, params ignored");
+    }
+
+    #[test]
+    fn interior_casts_are_traced_and_surface_through_lint_and_canonicalize() {
+        use crate::ops::CastStep;
+        // the final cast to the write dtype is implied (trace stays empty =
+        // plan-cache parity with the untyped IR); interior casts survive
+        let plain = Chain::read::<U8>(&[8]).map(Mul(2.0)).cast::<F32>().write();
+        assert_eq!(plain.pipeline().cast_trace(), &[]);
+        let traced = Chain::read::<F64>(&[8])
+            .map(Mul(2.0))
+            .cast::<F32>()
+            .cast::<F64>()
+            .map(Add(1.0))
+            .write();
+        assert_eq!(
+            traced.pipeline().cast_trace(),
+            &[CastStep { at: 1, to: DType::F32 }, CastStep { at: 1, to: DType::F64 }]
+        );
+        // the narrowing round trip is a lint (FKL004), not a rewrite: the
+        // canonical twin keeps it and the builder's dtype evidence
+        let diags = traced.lint();
+        assert!(diags.iter().any(|d| d.code.code() == "FKL004"), "{diags:?}");
+        let (canon, rewrites) = traced.canonicalized();
+        assert!(rewrites.iter().all(|r| !r.applied));
+        assert_eq!(canon.pipeline(), traced.pipeline());
+
+        // a dead identity stage IS rewritten away, preserving the signature
+        // modulo the removed op
+        let noisy = Chain::read::<U8>(&[8]).map(Mul(1.0)).map(Add(3.0)).cast::<F32>().write();
+        let (canon, rewrites) = noisy.canonicalized();
+        assert!(rewrites.iter().any(|r| r.applied));
+        assert_eq!(canon.pipeline().body(), &[IOp::compute(Opcode::Add, 3.0)]);
     }
 
     #[test]

@@ -55,6 +55,14 @@ pub struct Metrics {
     /// heaviest, lighter lanes idle for the difference — the mixed-shape
     /// analog of `padded_planes`.
     pub divergent_padded_elems: u64,
+    /// Lint diagnostics emitted at ingress (canonicalizing mode only).
+    pub lints_emitted: u64,
+    /// Bit-safe rewrites the ingress canonicalizer applied to admitted
+    /// pipelines.
+    pub rewrites_applied: u64,
+    /// Admissions whose canonical form matched a previously seen canonical
+    /// stream — the plan-cache wins canonicalization buys.
+    pub canonical_cache_hits: u64,
     /// Per-tier serve counts copied from the engine (HF/VF coverage).
     pub planner: PlannerStats,
 }
@@ -91,6 +99,9 @@ impl Metrics {
             divergent_items: 0,
             divergent_work_elems: 0,
             divergent_padded_elems: 0,
+            lints_emitted: 0,
+            rewrites_applied: 0,
+            canonical_cache_hits: 0,
             planner: PlannerStats::default(),
         }
     }
@@ -157,6 +168,9 @@ impl Metrics {
             divergent_items: self.divergent_items,
             divergent_work_elems: self.divergent_work_elems,
             divergent_padded_elems: self.divergent_padded_elems,
+            lints_emitted: self.lints_emitted,
+            rewrites_applied: self.rewrites_applied,
+            canonical_cache_hits: self.canonical_cache_hits,
             planner: self.planner.clone(),
             latency: LatencyStats::from_sorted(&lat),
             deadline_margin: LatencyStats::from_sorted(&margins),
@@ -217,6 +231,12 @@ pub struct MetricsSnapshot {
     pub divergent_items: u64,
     pub divergent_work_elems: u64,
     pub divergent_padded_elems: u64,
+    /// Lint diagnostics emitted at ingress (canonicalizing mode only).
+    pub lints_emitted: u64,
+    /// Bit-safe rewrites the ingress canonicalizer applied.
+    pub rewrites_applied: u64,
+    /// Admissions whose canonical form matched an earlier canonical stream.
+    pub canonical_cache_hits: u64,
     pub planner: PlannerStats,
     pub latency: LatencyStats,
     /// Remaining-time-at-completion distribution for deadline requests.

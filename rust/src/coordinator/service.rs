@@ -23,6 +23,7 @@
 //!   [`crate::faults::FaultInjector`] consulted at every launch site,
 //!   which is how all of the above is tested.
 
+use std::collections::HashSet;
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -105,6 +106,14 @@ pub struct ServiceConfig {
     /// absorbed by rebuilding before the service gives up and answers
     /// [`ServeError::Unavailable`].
     pub max_build_retries: u32,
+    /// Canonicalize admitted pipelines at ingress
+    /// ([`crate::analysis::canonicalize`]): syntactically distinct but
+    /// bit-equivalent chains collapse onto one canonical pipeline, so they
+    /// stack into the same HF launches and compile ONE cached plan. Off by
+    /// default — rewrites are bit-safety-proven (the fuzz harness's
+    /// raw-vs-canonicalized contract) but ingress should opt in. Lint
+    /// diagnostics are counted in [`MetricsSnapshot::lints_emitted`].
+    pub canonicalize: bool,
 }
 
 impl Default for ServiceConfig {
@@ -118,6 +127,7 @@ impl Default for ServiceConfig {
             breaker: BreakerPolicy::default(),
             faults: None,
             max_build_retries: 2,
+            canonicalize: false,
         }
     }
 }
@@ -330,6 +340,7 @@ impl Backend {
                 structured: engine.structured_runs(),
                 reduction: engine.reduce_runs(),
                 divergent: engine.divergent_runs(),
+                plan_cache: engine.plan_cache_len(),
                 ..PlannerStats::default()
             },
         }
@@ -449,6 +460,9 @@ fn service_loop(cfg: ServiceConfig, rx: Receiver<Msg>) {
     let mut batcher = Batcher::new(cfg.policy);
     let mut metrics = Metrics::default();
     let mut breakers = BreakerBoard::new(cfg.breaker);
+    // ingress canonicalizer state: the canonical stream keys seen so far
+    // (`None` = canonicalization off; ingest admits pipelines untouched)
+    let mut canon_seen: Option<HashSet<String>> = cfg.canonicalize.then(HashSet::new);
     metrics.supervisor_restarts = restarts;
     metrics.degraded = degraded;
     if let Some(d) = &metrics.degraded {
@@ -464,11 +478,11 @@ fn service_loop(cfg: ServiceConfig, rx: Receiver<Msg>) {
             .unwrap_or(Duration::from_millis(50));
         match rx.recv_timeout(timeout) {
             Ok(Msg::Request(r)) => {
-                ingest(r, &mut batcher, &mut metrics);
+                ingest(r, &mut batcher, &mut metrics, &mut canon_seen);
                 // opportunistically drain whatever else is queued
                 while let Ok(m) = rx.try_recv() {
                     match m {
-                        Msg::Request(r) => ingest(r, &mut batcher, &mut metrics),
+                        Msg::Request(r) => ingest(r, &mut batcher, &mut metrics, &mut canon_seen),
                         Msg::Snapshot(tx) => {
                             let _ = tx.send(snapshot(&mut metrics, &backend, &breakers));
                         }
@@ -517,7 +531,19 @@ fn service_loop(cfg: ServiceConfig, rx: Receiver<Msg>) {
 /// it is dead on arrival, or when the queue-delay estimate (pending items x
 /// the EWMA per-item cost) says it cannot launch in time — the client
 /// learns *now*, not after the queue wasted time on it.
-fn ingest(req: Req, batcher: &mut Batcher<ReplyTx>, metrics: &mut Metrics) {
+///
+/// With [`ServiceConfig::canonicalize`] on (`canon_seen` is `Some`), every
+/// admitted pipeline is replaced by its canonical twin BEFORE the batcher
+/// groups it: syntactically distinct but bit-equivalent chains then share a
+/// stream key, stack into the same HF launches, and compile one cached
+/// plan. Only bit-safety-proven rewrites apply (the analysis contract), so
+/// replies are bit-identical to serving the raw pipeline.
+fn ingest(
+    mut req: Req,
+    batcher: &mut Batcher<ReplyTx>,
+    metrics: &mut Metrics,
+    canon_seen: &mut Option<HashSet<String>>,
+) {
     if let Some(dl) = req.deadline {
         let dead_on_arrival = dl <= req.enqueued;
         let est = Duration::from_micros((metrics.ewma_item_us * batcher.pending() as f64) as u64);
@@ -527,6 +553,15 @@ fn ingest(req: Req, batcher: &mut Batcher<ReplyTx>, metrics: &mut Metrics) {
             let _ = req.reply.send(Err(ServeError::Shed));
             return;
         }
+    }
+    if let Some(seen) = canon_seen {
+        metrics.lints_emitted += crate::analysis::lint(&req.pipeline).len() as u64;
+        let (canonical, rewrites) = crate::analysis::canonicalize(req.pipeline.clone());
+        metrics.rewrites_applied += rewrites.iter().filter(|r| r.applied).count() as u64;
+        if !seen.insert(Signature::of(&canonical).stream_key()) {
+            metrics.canonical_cache_hits += 1;
+        }
+        req.pipeline = canonical;
     }
     batcher.push(req);
 }

@@ -73,6 +73,11 @@ pub struct PlannerStats {
     /// A window counter (the per-item serves land under `host`), excluded
     /// from [`PlannerStats::total`] like `structured`/`reduction`.
     pub divergent: usize,
+    /// Distinct compiled plans alive in the serving engine's plan cache
+    /// (host tier only today) — a gauge, not a counter, so canonicalization
+    /// ablations can assert how many plans a window of equivalent chains
+    /// compiled down to. Excluded from [`PlannerStats::total`].
+    pub plan_cache: usize,
 }
 
 impl PlannerStats {

@@ -19,6 +19,7 @@
 //! See `DESIGN.md` (repo root) for the paper -> system mapping and
 //! `EXPERIMENTS.md` for the reproduced evaluation.
 
+pub mod analysis;
 pub mod bench;
 pub mod chain;
 pub mod coordinator;

@@ -7,8 +7,14 @@
 //! fkl serve --requests 500 --batch-window-us 500          # coordinator demo
 //! fkl serve --deadline-ms 5 --faults 'tier=stacked,launch=0,action=panic'
 //!                                  # deadline-aware serving + fault drill
+//! fkl lint  --ops mul:1.0,neg,neg,cast:f32 --shape 60x120 [--json]
+//!                                  # static analysis: diagnostics + canon report
 //! fkl calibrate                    # measure this host's HwProfile
 //! ```
+//!
+//! `fkl lint` exit codes are a contract (CI-greppable): `0` = clean or
+//! warnings only, `1` = at least one error-severity diagnostic, `2` =
+//! malformed chain spec (typed parse error on stderr, never a panic).
 
 use std::time::Duration;
 
@@ -47,6 +53,7 @@ fn main() -> anyhow::Result<()> {
         Some("plan") => plan(&args),
         Some("run") => run(&args),
         Some("serve") => serve(&args),
+        Some("lint") => lint(&args),
         Some("calibrate") => {
             let hw = fkl::bench::calibrate();
             println!(
@@ -58,7 +65,7 @@ fn main() -> anyhow::Result<()> {
             Ok(())
         }
         _ => {
-            eprintln!("usage: fkl <info|plan|run|serve|calibrate> [options]");
+            eprintln!("usage: fkl <info|plan|run|serve|lint|calibrate> [options]");
             Ok(())
         }
     }
@@ -150,6 +157,62 @@ fn run(args: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `fkl lint`: run the static analyzer over an ARBITRARY textual chain spec.
+/// Unlike the demo drivers above this path must never panic on user input —
+/// malformed specs come back as typed [`fkl::analysis::SpecError`]s and exit
+/// code 2; error-severity diagnostics exit 1; warnings/infos exit 0.
+fn lint(args: &[String]) -> anyhow::Result<()> {
+    let ops = arg(args, "--ops").unwrap_or_default();
+    let shape = arg(args, "--shape").unwrap_or_else(|| "60x120".into());
+    let batch: usize = arg(args, "--batch").and_then(|b| b.parse().ok()).unwrap_or(1);
+    let dtin = arg(args, "--dtin").unwrap_or_else(|| "f32".into());
+    let dtout = arg(args, "--dtout").unwrap_or_else(|| "f32".into());
+    let json = args.iter().any(|a| a == "--json");
+
+    let p = match fkl::analysis::parse_chain_spec(&ops, &shape, batch, &dtin, &dtout) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("fkl lint: {e}");
+            std::process::exit(2);
+        }
+    };
+    let diags = fkl::analysis::lint(&p);
+    let (canonical, rewrites) = fkl::analysis::canonicalize(p.clone());
+    let applied = rewrites.iter().filter(|r| r.applied).count();
+    let suggested = rewrites.len() - applied;
+
+    if json {
+        use fkl::jsonlite::Value;
+        let report = Value::obj(vec![
+            ("diagnostics", Value::Arr(diags.iter().map(|d| d.to_json()).collect())),
+            ("rewrites_applied", Value::num(applied as f64)),
+            ("rewrites_suggested", Value::num(suggested as f64)),
+            ("ops_before", Value::num(p.body().len() as f64)),
+            ("ops_after", Value::num(canonical.body().len() as f64)),
+        ]);
+        println!("{}", report.to_json());
+    } else {
+        for d in &diags {
+            println!("{d}");
+        }
+        for r in &rewrites {
+            let verb = if r.applied { "applied" } else { "suggested" };
+            println!("canon[{verb}] {:?} at {}: {}", r.kind, r.span, r.detail);
+        }
+        println!(
+            "{} diagnostic(s); canonical form: {} -> {} op(s), {applied} rewrite(s) applied, \
+             {suggested} report-only",
+            diags.len(),
+            p.body().len(),
+            canonical.body().len()
+        );
+    }
+    if diags.iter().any(|d| d.severity == fkl::analysis::Severity::Error) {
+        std::process::exit(1);
+    }
+    Ok(())
+}
+
 fn serve(args: &[String]) -> anyhow::Result<()> {
     let n: usize = arg(args, "--requests").map(|v| v.parse().unwrap()).unwrap_or(500);
     let window_us: u64 =
@@ -167,12 +230,15 @@ fn serve(args: &[String]) -> anyhow::Result<()> {
     if let Some(plan) = &faults {
         println!("fault plan armed: {} rule(s)", plan.rules.len());
     }
+    // --canonicalize: admit every pipeline through the ingress canonicalizer
+    let canonicalize = args.iter().any(|a| a == "--canonicalize");
     let svc = Service::start(ServiceConfig {
         artifact_dir: None,
         queue_cap: 1024,
         policy: BatchPolicy { max_batch: 50, window: Duration::from_micros(window_us) },
         default_deadline,
         faults,
+        canonicalize,
         ..ServiceConfig::default()
     });
 
@@ -230,6 +296,12 @@ fn serve(args: &[String]) -> anyhow::Result<()> {
          breaker_rejected={}",
         m.failed, m.expired, m.shed, m.launch_panics, m.breaker_trips, m.breaker_rejected
     );
+    if canonicalize {
+        println!(
+            "canon: lints={} rewrites_applied={} canonical_hits={} plan_cache={}",
+            m.lints_emitted, m.rewrites_applied, m.canonical_cache_hits, m.planner.plan_cache
+        );
+    }
     if default_deadline.is_some() {
         println!(
             "deadline margin: p50={}us p99={}us (est item cost {:.1}us)",

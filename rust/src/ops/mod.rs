@@ -19,6 +19,6 @@ mod signature;
 pub use iop::{IOp, MemOp, OpClass, ReadPattern, WritePattern};
 pub use kernel::ScalarOp;
 pub use opcode::{Opcode, ALL_OPCODES};
-pub use pipeline::{Pipeline, PipelineError};
+pub use pipeline::{CastStep, Pipeline, PipelineError};
 pub use reduce::{ReduceAxis, ReduceKind, ReduceSpec, ALL_REDUCE_KINDS};
 pub use signature::Signature;

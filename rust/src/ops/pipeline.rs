@@ -23,11 +23,30 @@ pub enum PipelineError {
     ReduceOutput(String),
 }
 
+/// One recorded marker-type change from the typed chain builder: after body
+/// stage `at` (0 = before any compute op), values were reinterpreted as `to`.
+/// Casts are free at run time — the lane type is erased at lowering — so the
+/// trace exists purely for static analysis (`crate::analysis`), which uses it
+/// to flag redundant chains and narrowing round-trips the executed IR cannot
+/// see.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CastStep {
+    /// Body index the cast sits after: `0..=body.len()`.
+    pub at: usize,
+    /// The marker dtype the chain switched to.
+    pub to: DType,
+}
+
 /// A validated chain: Read, [Compute...], Write over an element shape with an
 /// optional batch (HF) dimension.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Pipeline {
     ops: Vec<IOp>,
+    /// Interior marker-type casts recorded by the typed builder (empty for
+    /// pipelines built straight from opcodes). Normalized: the final cast to
+    /// `dtout` at the write boundary is implied and never stored, so a typed
+    /// chain and its untyped `from_opcodes` twin compare equal.
+    casts: Vec<CastStep>,
     /// Logical element shape of one batch item (excludes batch dim).
     pub shape: Vec<usize>,
     /// Batch size (HF width); 1 = no horizontal fusion.
@@ -66,7 +85,7 @@ impl Pipeline {
         {
             return Err(PipelineError::ReduceOutput(dtout.to_string()));
         }
-        Ok(Pipeline { ops, shape, batch, dtin, dtout })
+        Ok(Pipeline { ops, casts: Vec::new(), shape, batch, dtin, dtout })
     }
 
     /// Convenience: dense read -> compute chain -> dense write.
@@ -100,12 +119,35 @@ impl Pipeline {
         &self.ops
     }
 
+    /// Attach the typed builder's cast trace. Entries are clamped to the body
+    /// range and normalized: trailing casts at the write boundary that match
+    /// `dtout` restate what the write already records, so they are dropped —
+    /// this keeps a typed chain `==` its untyped `from_opcodes` twin.
+    pub fn with_cast_trace(mut self, casts: Vec<CastStep>) -> Pipeline {
+        let body_len = self.ops.len() - 2;
+        self.casts = casts
+            .into_iter()
+            .map(|c| CastStep { at: c.at.min(body_len), to: c.to })
+            .collect();
+        while matches!(self.casts.last(), Some(c) if c.at == body_len && c.to == self.dtout) {
+            self.casts.pop();
+        }
+        self
+    }
+
+    /// Interior marker-type casts recorded by the typed builder, in chain
+    /// order (empty unless the chain used `cast::<T>()` mid-body).
+    pub fn cast_trace(&self) -> &[CastStep] {
+        &self.casts
+    }
+
     /// The same code at a different HF width (bucket re-batching on the
     /// coordinator's hot path — no revalidation needed, the op sequence is
     /// already proven).
     pub fn with_batch(&self, batch: usize) -> Pipeline {
         Pipeline {
             ops: self.ops.clone(),
+            casts: self.casts.clone(),
             shape: self.shape.clone(),
             batch,
             dtin: self.dtin,
@@ -351,6 +393,24 @@ mod tests {
             Pipeline::from_opcodes(&[(Opcode::Mul, 2.0)], &[4], 1, DType::F32, DType::F32)
                 .unwrap()
         }
+    }
+
+    #[test]
+    fn cast_trace_normalizes_the_write_boundary_away() {
+        let p = mk(vec![IOp::compute(Opcode::Mul, 2.0), IOp::compute(Opcode::Abs, 0.0)]).unwrap();
+        // the trailing cast restates the write dtype: normalized away, so the
+        // traced pipeline still compares equal to its untraced twin
+        let traced = p.clone().with_cast_trace(vec![CastStep { at: 2, to: DType::F32 }]);
+        assert_eq!(traced.cast_trace(), &[]);
+        assert_eq!(traced, p);
+        // an interior cast survives (and is clamped into the body range)
+        let traced = p.clone().with_cast_trace(vec![
+            CastStep { at: 1, to: DType::F64 },
+            CastStep { at: 9, to: DType::F32 },
+        ]);
+        assert_eq!(traced.cast_trace(), &[CastStep { at: 1, to: DType::F64 }]);
+        assert_ne!(traced, p);
+        assert_eq!(traced.with_batch(4).cast_trace().len(), 1, "rebatching keeps the trace");
     }
 
     #[test]

@@ -178,6 +178,65 @@ fn sat(v: f64, hi: f64) -> f64 {
 }
 
 fn bytemuck_cast<T>(v: &[T]) -> &[u8] {
-    // SAFETY: plain-old-data numeric slices; lifetime tied to `v`.
+    // SAFETY: the only callers are `raw_bytes`'s match arms, which pass
+    // `&[u16]`/`&[i32]`/`&[f32]`/`&[f64]` — plain-old-data numeric types
+    // with no padding, niches or invalid bit patterns, so every byte of the
+    // slice is initialized and any byte sequence is a valid `u8`. The cast
+    // only DECREASES the alignment requirement (`u8` has alignment 1, and
+    // `v.as_ptr()` is non-null and well-aligned even for an empty slice, as
+    // Vec guarantees a dangling-but-aligned pointer). The length is
+    // `size_of_val(v)` = `v.len() * size_of::<T>()`, exactly the extent of
+    // the allocation being viewed, and the returned borrow keeps `v`'s
+    // lifetime, so the bytes cannot outlive or alias a mutation of the
+    // storage. This argument is machine-checked: CI runs the `tensor::`
+    // unit tests (including `raw_bytes_*` below) under Miri.
     unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, std::mem::size_of_val(v)) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn raw_bytes_views_every_dtype_with_exact_lengths() {
+        let cases = [
+            (Tensor::from_u8(&[1, 2, 3, 4, 5, 6], &[2, 3]), DType::U8),
+            (Tensor::from_u16(&[1, 513, 65535, 0], &[4]), DType::U16),
+            (Tensor::from_i32(&[-1, 7, i32::MIN, i32::MAX], &[2, 2]), DType::I32),
+            (Tensor::from_f32(&[0.5, -2.0, f32::NAN], &[3]), DType::F32),
+            (Tensor::from_f64(&[0.25, -8.0], &[2]), DType::F64),
+        ];
+        for (t, dt) in &cases {
+            let bytes = t.raw_bytes();
+            assert_eq!(bytes.len(), t.len() * dt.size_bytes(), "{dt}: byte length");
+            assert_eq!(bytes.len(), t.size_bytes(), "{dt}: size_bytes agrees");
+        }
+    }
+
+    #[test]
+    fn raw_bytes_are_the_native_endian_storage_bytes() {
+        // spot-check the layout the XLA literal boundary relies on: the
+        // bytes are the elements' native (little-endian on CI) encodings,
+        // in row-major element order
+        let t = Tensor::from_u16(&[0x0102, 0x0304], &[2]);
+        let mut want = Vec::new();
+        want.extend_from_slice(&0x0102u16.to_ne_bytes());
+        want.extend_from_slice(&0x0304u16.to_ne_bytes());
+        assert_eq!(t.raw_bytes(), &want[..]);
+        let t = Tensor::from_i32(&[-2], &[1]);
+        assert_eq!(t.raw_bytes(), (-2i32).to_ne_bytes());
+        let t = Tensor::from_f64(&[1.5], &[1]);
+        assert_eq!(t.raw_bytes(), 1.5f64.to_ne_bytes());
+    }
+
+    #[test]
+    fn raw_bytes_of_empty_tensors_are_empty_not_ub() {
+        // the dangling-but-aligned Vec pointer case the SAFETY comment
+        // leans on — Miri verifies from_raw_parts is sound here too
+        for dt in [DType::U8, DType::U16, DType::I32, DType::F32, DType::F64] {
+            let t = Tensor::zeros(dt, &[0]);
+            assert!(t.raw_bytes().is_empty(), "{dt}");
+            assert!(t.is_empty(), "{dt}");
+        }
+    }
 }

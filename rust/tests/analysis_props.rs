@@ -1,0 +1,156 @@
+//! Property tests for the static analyzer (`fkl::analysis`), driven by the
+//! in-tree `proplite` harness over randomly generated — but always valid —
+//! pipelines:
+//!
+//! * canonicalization is IDEMPOTENT (the canonical twin is a fixpoint);
+//! * the canonical signature depends only on the chain's STRUCTURE — two
+//!   pipelines differing only in (identity-free) parameter values
+//!   canonicalize to the same signature;
+//! * canonicalization never touches the reduce seal, the read/write
+//!   patterns, dtypes, shape or batch — rewrites happen strictly inside
+//!   the compute body;
+//! * lint is PURE: it never mutates its input and is deterministic.
+
+use fkl::analysis::{canonicalize, lint};
+use fkl::ops::{
+    IOp, MemOp, Opcode, Pipeline, ReduceAxis, ReduceSpec, Signature, ALL_OPCODES,
+    ALL_REDUCE_KINDS,
+};
+use fkl::proplite::{forall, Rng};
+use fkl::tensor::{DType, Rect};
+
+const ALL_DTYPES: [DType; 5] = [DType::U8, DType::U16, DType::I32, DType::F32, DType::F64];
+
+/// One random valid pipeline over the whole IR vocabulary: dense / crop
+/// reads, dense / split writes and reduce seals, scalar / lane-structured
+/// bodies — salted with removable identities and Neg;Neg pairs so the
+/// canonicalizer has real work on a good fraction of the cases.
+fn gen_pipeline(rng: &mut Rng) -> Pipeline {
+    let dtin = *rng.pick(&ALL_DTYPES);
+    let batch = rng.usize(1, 4);
+    let structured = rng.usize(0, 4) == 0;
+    let (read, shape) = if structured {
+        let rect = Rect::new(
+            rng.usize(0, 10) as i32,
+            rng.usize(0, 10) as i32,
+            rng.usize(1, 7) as i32,
+            rng.usize(1, 7) as i32,
+        );
+        let shape = vec![rect.h as usize, rect.w as usize, 3];
+        (MemOp::CropRead { rect }, shape)
+    } else if rng.bool() {
+        (MemOp::Read { dtype: dtin }, vec![rng.usize(1, 6), rng.usize(1, 6), 3])
+    } else {
+        (MemOp::Read { dtype: dtin }, vec![rng.usize(1, 8), rng.usize(1, 8)])
+    };
+    let pixel = shape.len() == 3 && shape[2] == 3;
+    let (term, dtout) = match rng.usize(0, 4) {
+        0 => {
+            let axis = if rng.bool() { ReduceAxis::Full } else { ReduceAxis::PerChannel };
+            let spec = ReduceSpec::single(*rng.pick(&ALL_REDUCE_KINDS), axis);
+            (MemOp::Reduce { spec }, DType::F64)
+        }
+        1 if pixel => {
+            let d = *rng.pick(&ALL_DTYPES);
+            (MemOp::SplitWrite { dtype: d }, d)
+        }
+        _ => {
+            let d = *rng.pick(&ALL_DTYPES);
+            (MemOp::Write { dtype: d }, d)
+        }
+    };
+    let k = rng.usize(1, 9);
+    let mut ops = vec![IOp::Mem(read)];
+    for _ in 0..k {
+        match rng.usize(0, 6) {
+            0 => ops.push(IOp::compute(*rng.pick(&[Opcode::Mul, Opcode::Div]), 1.0)),
+            1 => ops.push(IOp::compute(Opcode::Sub, 0.0)),
+            2 => {
+                ops.push(IOp::compute(Opcode::Neg, 0.0));
+                ops.push(IOp::compute(Opcode::Neg, 0.0));
+            }
+            3 => ops.push(IOp::CvtColor),
+            _ => {
+                let op = *rng.pick(&ALL_OPCODES);
+                ops.push(IOp::compute(op, rng.f64(-3.0, 3.0)));
+            }
+        }
+    }
+    ops.push(IOp::Mem(term));
+    Pipeline::new(ops, shape, batch, dtin, dtout).expect("generated pipelines are valid")
+}
+
+#[test]
+fn canonicalize_is_idempotent_on_random_pipelines() {
+    forall(60, |rng| {
+        let p = gen_pipeline(rng);
+        let (c1, _) = canonicalize(p);
+        let (c2, again) = canonicalize(c1.clone());
+        assert_eq!(c2, c1, "the canonical twin is a fixpoint");
+        assert!(again.iter().all(|r| !r.applied), "second pass re-applied: {again:?}");
+    });
+}
+
+#[test]
+fn canonical_signature_is_stable_under_param_renaming() {
+    forall(60, |rng| {
+        // one op STRUCTURE, two parameter draws from the identity-free
+        // range (|p| in [1.25, 3]: never 0, 1, inf or NaN) — which stages
+        // the canonicalizer removes depends only on the structure, so both
+        // twins must land on the SAME canonical signature
+        let k = rng.usize(1, 9);
+        let structure: Vec<Opcode> = (0..k).map(|_| *rng.pick(&ALL_OPCODES)).collect();
+        let draw = |rng: &mut Rng| {
+            let mag = rng.f64(1.25, 3.0);
+            if rng.bool() {
+                mag
+            } else {
+                -mag
+            }
+        };
+        let a: Vec<f64> = (0..k).map(|_| draw(rng)).collect();
+        let b: Vec<f64> = (0..k).map(|_| draw(rng)).collect();
+        let mk = |params: &[f64]| {
+            let ops: Vec<(Opcode, f64)> =
+                structure.iter().copied().zip(params.iter().copied()).collect();
+            Pipeline::from_opcodes(&ops, &[4, 5], 1, DType::U8, DType::F64).unwrap()
+        };
+        let (ca, _) = canonicalize(mk(&a));
+        let (cb, _) = canonicalize(mk(&b));
+        assert_eq!(
+            Signature::of(&ca),
+            Signature::of(&cb),
+            "canonical signature must depend only on structure: {structure:?} {a:?} {b:?}"
+        );
+    });
+}
+
+#[test]
+fn canonicalize_never_touches_seals_boundaries_or_geometry() {
+    forall(80, |rng| {
+        let p = gen_pipeline(rng);
+        let (c, _) = canonicalize(p.clone());
+        assert_eq!(c.reduction(), p.reduction(), "reduce seal preserved");
+        assert_eq!(c.read_pattern(), p.read_pattern(), "read pattern preserved");
+        assert_eq!(c.write_pattern(), p.write_pattern(), "write pattern preserved");
+        assert_eq!(c.dtin, p.dtin);
+        assert_eq!(c.dtout, p.dtout);
+        assert_eq!(c.shape, p.shape);
+        assert_eq!(c.batch, p.batch);
+        assert!(!c.body().is_empty(), "canonicalization never empties the body");
+    });
+}
+
+#[test]
+fn lint_is_pure_and_deterministic() {
+    forall(60, |rng| {
+        let p = gen_pipeline(rng);
+        let before = p.clone();
+        let d1 = lint(&p);
+        let d2 = lint(&p);
+        assert_eq!(p, before, "lint must not mutate the pipeline");
+        assert_eq!(d1, d2, "lint is deterministic");
+        // every run ends with the tier prediction (FKL008)
+        assert_eq!(d1.last().expect("never empty").code.code(), "FKL008");
+    });
+}

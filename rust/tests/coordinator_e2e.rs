@@ -373,6 +373,96 @@ fn structured_chains_are_servable_traffic() {
 }
 
 #[test]
+fn canonicalizing_ingress_serves_equivalent_chains_from_one_cached_plan() {
+    use fkl::ops::Opcode;
+    use fkl::tensor::DType;
+    // four syntactically DISTINCT but bit-equivalent u8->f64 chains (dead
+    // identity stages, a Neg;Neg pair, a trailing Sub(+0.0)): with
+    // `ServiceConfig::canonicalize` on, ingress rewrites every admission to
+    // the shared canonical form, so one scheduling window stacks ALL of
+    // them into the same HF launches and the engine compiles ONE plan
+    let variants: Vec<Pipeline> = [
+        vec![(Opcode::Mul, 0.5), (Opcode::Add, 1.0)],
+        vec![(Opcode::Mul, 0.5), (Opcode::Mul, 1.0), (Opcode::Add, 1.0)],
+        vec![(Opcode::Mul, 0.5), (Opcode::Neg, 0.0), (Opcode::Neg, 0.0), (Opcode::Add, 1.0)],
+        vec![(Opcode::Nop, 0.0), (Opcode::Mul, 0.5), (Opcode::Add, 1.0), (Opcode::Sub, 0.0)],
+    ]
+    .iter()
+    .map(|ops| Pipeline::from_opcodes(ops, &[6, 8], 1, DType::U8, DType::F64).unwrap())
+    .collect();
+    assert_eq!(
+        variants.iter().map(|p| p.body().len()).collect::<Vec<_>>(),
+        vec![2, 3, 4, 4],
+        "the variants really are syntactically distinct"
+    );
+
+    let svc = Service::start(ServiceConfig {
+        artifact_dir: None,
+        queue_cap: 128,
+        // one generous window so the whole burst schedules together
+        policy: BatchPolicy { max_batch: 32, window: Duration::from_millis(250) },
+        engine: EngineSelect::HostFused,
+        canonicalize: true,
+        ..ServiceConfig::default()
+    });
+    let mut rng = Rng::new(9);
+    let mut submitted = Vec::new();
+    for _ in 0..3 {
+        for p in &variants {
+            let item = Tensor::from_u8(&rng.vec_u8(48), &[1, 6, 8]);
+            let rx = svc.submit(p.clone(), item.clone()).unwrap();
+            submitted.push((p.clone(), item, rx));
+        }
+    }
+    for (i, (p, item, rx)) in submitted.into_iter().enumerate() {
+        let out = rx.recv().expect("service alive").expect("request ok");
+        let want = fkl::hostref::run_pipeline(&p, &item);
+        // u8 -> f64 is an f64-accumulated path: canonical serving must be
+        // BIT-equal to the raw chain's oracle, not merely close
+        assert_eq!(out, want, "request {i}: canonical serving is bit-equal to the raw chain");
+    }
+    let m = svc.metrics().unwrap();
+    assert_eq!(m.completed, 12);
+    assert_eq!(m.failed, 0);
+    assert!(m.rewrites_applied > 0, "ingress applied real rewrites: {m:?}");
+    assert!(m.lints_emitted >= 12, "every admission was linted: {}", m.lints_emitted);
+    assert_eq!(m.canonical_cache_hits, 11, "first admission seeds the canonical stream");
+    assert_eq!(m.planner.plan_cache, 1, "ONE cached plan served every variant: {:?}", m.planner);
+    assert!(m.mean_batch() > 1.5, "equivalent chains stacked: mean {}", m.mean_batch());
+    svc.shutdown();
+
+    // control: same burst with canonicalization off — every raw signature
+    // compiles its own plan and the canon counters stay untouched
+    let svc = Service::start(ServiceConfig {
+        artifact_dir: None,
+        queue_cap: 128,
+        policy: BatchPolicy { max_batch: 32, window: Duration::from_millis(250) },
+        engine: EngineSelect::HostFused,
+        ..ServiceConfig::default()
+    });
+    let mut rxs = Vec::new();
+    for _ in 0..3 {
+        for p in &variants {
+            let item = Tensor::from_u8(&rng.vec_u8(48), &[1, 6, 8]);
+            rxs.push(svc.submit(p.clone(), item).unwrap());
+        }
+    }
+    for rx in rxs {
+        rx.recv().expect("service alive").expect("request ok");
+    }
+    let m = svc.metrics().unwrap();
+    assert_eq!(m.rewrites_applied, 0);
+    assert_eq!(m.lints_emitted, 0);
+    assert_eq!(m.canonical_cache_hits, 0);
+    assert!(
+        m.planner.plan_cache >= 4,
+        "without canonicalization each raw signature compiled its own plan: {:?}",
+        m.planner
+    );
+    svc.shutdown();
+}
+
+#[test]
 fn host_backend_batches_any_stream_with_exact_numerics() {
     // pinned host engine: a stream no artifact family covers (exotic shape,
     // u8 out) is still HF-batched and must be BIT-equal to the oracle

@@ -18,7 +18,16 @@
 //!
 //! Seeds are FIXED and committed, so a failure reproduces exactly: the
 //! panic message names the seed, the case index and the signature.
+//!
+//! The harness is also the canonicalizer's bit-safety proof
+//! ([`fkl::analysis::canonicalize`]): the generator sprinkles removable
+//! identity stages into its cases, and every case additionally checks that
+//! the canonical twin serves BIT-EQUAL to the raw pipeline on every
+//! f64-accumulated path and every thread count (the f32 fast arm reuses the
+//! oracle epsilon), that canonicalization is idempotent, and that it never
+//! touches the reduce seal or the read/write patterns.
 
+use fkl::analysis;
 use fkl::exec::{Engine, HostFusedEngine};
 use fkl::fusion::{HostAccum, HostPlan};
 use fkl::hostref;
@@ -195,6 +204,25 @@ fn gen_case(rng: &mut Rng, force_dtin: Option<DType>, force_term: Option<usize>)
             ops.push(IOp::compute(op, scalar_param(rng, op, narrow)));
         }
     }
+    // canonicalizer fodder: a third of the cases get bit-exact identity
+    // stages (and inverse pairs) spliced into the body, so the
+    // raw-vs-canonicalized contract below fuzzes REAL removals — the noise
+    // is semantically free, so the narrow prediction is untouched
+    if rng.usize(0, 3) == 0 {
+        for _ in 0..rng.usize(1, 4) {
+            let at = rng.usize(1, ops.len() + 1); // body slots, after the read
+            match rng.usize(0, 5) {
+                0 => ops.insert(at, IOp::compute(Opcode::Mul, 1.0)),
+                1 => ops.insert(at, IOp::compute(Opcode::Div, 1.0)),
+                2 => ops.insert(at, IOp::compute(Opcode::Sub, 0.0)),
+                3 => ops.insert(at, IOp::compute(Opcode::Nop, 0.0)),
+                _ => {
+                    ops.insert(at, IOp::compute(Opcode::Neg, 0.0));
+                    ops.insert(at, IOp::compute(Opcode::Neg, 0.0));
+                }
+            }
+        }
+    }
     ops.push(IOp::Mem(term));
 
     let pipeline = Pipeline::new(ops, shape, batch, dtin, dtout)
@@ -214,7 +242,9 @@ fn assert_bits_eq(got: &Tensor, want: &Tensor, ctx: &str) {
     }
 }
 
-fn check_case(case: &Case, engines: &[HostFusedEngine; 3], ctx: &str) {
+/// Returns the number of bit-safe rewrites the canonicalizer applied to
+/// this case (the fuzz corpus asserts it exercised real removals overall).
+fn check_case(case: &Case, engines: &[HostFusedEngine; 3], ctx: &str) -> usize {
     let p = &case.pipeline;
     let plan = HostPlan::compile(p);
     // the generator's narrow prediction must match the planner: a drift
@@ -253,6 +283,36 @@ fn check_case(case: &Case, engines: &[HostFusedEngine; 3], ctx: &str) {
     } else {
         assert_bits_eq(&outs[0], &want, &format!("{ctx}: vs oracle"));
     }
+
+    // raw-vs-canonicalized: only bit-safety-proven rewrites apply, so the
+    // canonical twin must serve BIT-EQUAL on every f64-accumulated path and
+    // every thread count; the f32 fast arm reuses the oracle epsilon
+    let (canon, rewrites) = analysis::canonicalize(p.clone());
+    let (canon2, again) = analysis::canonicalize(canon.clone());
+    assert_eq!(canon2, canon, "{ctx}: canonicalize is idempotent");
+    assert!(again.iter().all(|r| !r.applied), "{ctx}: idempotent pass re-applied rewrites");
+    assert_eq!(canon.reduction(), p.reduction(), "{ctx}: canon kept the reduce seal");
+    assert_eq!(canon.read_pattern(), p.read_pattern(), "{ctx}: canon kept the read pattern");
+    assert_eq!(canon.write_pattern(), p.write_pattern(), "{ctx}: canon kept the write pattern");
+    for (eng, raw_out) in engines.iter().zip(&outs) {
+        let got = eng.run(&canon, &case.input).expect("canonical twin must serve");
+        if case.narrow {
+            assert_eq!(got.shape(), raw_out.shape(), "{ctx}: canonical shape");
+            let (g, w) = (got.to_f64_vec(), raw_out.to_f64_vec());
+            for (i, (a, b)) in g.iter().zip(&w).enumerate() {
+                if a.is_nan() && b.is_nan() {
+                    continue;
+                }
+                assert!(
+                    (a - b).abs() <= 0.05 + 1e-4 * b.abs(),
+                    "{ctx}: canonical f32 arm elem {i}: {a} vs {b}"
+                );
+            }
+        } else {
+            assert_bits_eq(&got, raw_out, &format!("{ctx}: canonical vs raw"));
+        }
+    }
+    rewrites.iter().filter(|r| r.applied).count()
 }
 
 #[test]
@@ -262,14 +322,17 @@ fn differential_fuzz_random_chains_vs_oracle() {
         HostFusedEngine::with_threads(2),
         HostFusedEngine::with_threads(8),
     ];
+    let mut rewrites_applied = 0;
     for &seed in &SEEDS {
         let mut rng = Rng::new(seed);
         for case_i in 0..CASES_PER_SEED {
             let case = gen_case(&mut rng, None, None);
             let ctx = format!("seed {seed} case {case_i} sig {}", Signature::of(&case.pipeline));
-            check_case(&case, &engines, &ctx);
+            rewrites_applied += check_case(&case, &engines, &ctx);
         }
     }
+    // the corpus must EXERCISE the canonicalizer, not vacuously pass it
+    assert!(rewrites_applied > 0, "fuzz corpus never fired a canonicalizer rewrite");
 }
 
 #[test]

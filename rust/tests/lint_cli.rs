@@ -1,0 +1,63 @@
+//! `fkl lint` exit-code contract, exercised against the real binary:
+//!
+//! * warnings/infos only -> exit 0 (lint output on stdout);
+//! * at least one error-severity diagnostic -> exit 1;
+//! * malformed chain spec -> exit 2 with a TYPED parse error on stderr —
+//!   never a panic (the lint front door takes arbitrary user input).
+
+use std::process::{Command, Output};
+
+fn fkl(args: &[&str]) -> Output {
+    Command::new(env!("CARGO_BIN_EXE_fkl")).args(args).output().expect("spawn fkl")
+}
+
+#[test]
+fn warn_only_chains_exit_zero() {
+    let out = fkl(&[
+        "lint", "--ops", "mul:1.0,add:0.5", "--shape", "8x8", "--dtin", "u8", "--dtout", "f32",
+    ]);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert_eq!(out.status.code(), Some(0), "warn-only lint must exit 0: {stdout}");
+    assert!(stdout.contains("FKL001"), "identity op diagnosed: {stdout}");
+    assert!(stdout.contains("FKL008"), "tier prediction always present: {stdout}");
+    assert!(!stdout.contains("error["), "no error-severity diagnostics: {stdout}");
+}
+
+#[test]
+fn error_diagnostics_exit_one() {
+    // div by literal zero is FKL007, the analyzer's only Error severity
+    let out = fkl(&["lint", "--ops", "div:0.0", "--shape", "4x4"]);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert_eq!(out.status.code(), Some(1), "error diagnostics must exit 1: {stdout}");
+    assert!(stdout.contains("error[FKL007]"), "{stdout}");
+}
+
+#[test]
+fn malformed_specs_exit_two_with_a_typed_error_not_a_panic() {
+    for (args, needle) in [
+        (vec!["lint", "--ops", "frobnicate", "--shape", "4x4"], "unknown op"),
+        (vec!["lint", "--ops", "mul:abc", "--shape", "4x4"], "malformed parameter"),
+        (vec!["lint", "--ops", "mul", "--shape", "4x4", "--dtin", "u9"], "unknown dtype"),
+        (vec!["lint", "--ops", "mul", "--shape", "4yy"], "malformed shape"),
+        (vec!["lint", "--shape", "4x4"], "empty"),
+        (vec!["lint", "--ops", "cast:bogus", "--shape", "4x4"], "unknown dtype"),
+    ] {
+        let out = fkl(&args);
+        let stderr = String::from_utf8_lossy(&out.stderr);
+        assert_eq!(out.status.code(), Some(2), "{args:?} must exit 2: {stderr}");
+        assert!(stderr.contains(needle), "{args:?}: typed error expected, got: {stderr}");
+        assert!(!stderr.contains("panicked"), "{args:?}: panicked instead of typed: {stderr}");
+    }
+}
+
+#[test]
+fn json_report_is_machine_readable() {
+    let out = fkl(&[
+        "lint", "--ops", "mul:1.0,neg,neg,add:2.0", "--shape", "8x8", "--json",
+    ]);
+    assert_eq!(out.status.code(), Some(0));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("\"diagnostics\""), "{stdout}");
+    assert!(stdout.contains("\"rewrites_applied\""), "{stdout}");
+    assert!(stdout.contains("\"FKL001\""), "{stdout}");
+}
