@@ -1,0 +1,222 @@
+//! SIMD lane-blocking benchmark: register-blocked fused loops vs the
+//! scalar arm.
+//!
+//! Both sides run the SAME single-pass fused engine — the ablation is the
+//! register-block width alone (`HostFusedEngine::with_lane_width(1)` forces
+//! the pre-SIMD scalar loops; the production engine runs each plan at its
+//! compiled `vectorization` width). Measured at 1 thread so the speedup is
+//! the pure lane effect, with a multi-thread column to show the two effects
+//! compose.
+//!
+//! Sweeps the dense f32 fast arm (16-wide blocks), the oracle-exact u8 f64
+//! arm (8-wide), the lane-group C3 arm (8 pixels = 24 lanes) and the
+//! striped full-axis reduce — and writes `BENCH_simd.json` at the repo
+//! root.
+//!
+//! ```sh
+//! cargo bench --bench simd_bench            # full sweep
+//! FKL_BENCH_FAST=1 cargo bench --bench simd_bench   # trimmed
+//! ```
+
+use std::time::Duration;
+
+use fkl::bench::time_fn;
+use fkl::chain::{build_erased_opcodes, Chain, CvtColor, Mul, MulC3, F32};
+use fkl::exec::{Engine, HostFusedEngine};
+use fkl::ops::{kernel, Opcode, Pipeline, ReduceKind};
+use fkl::proplite::Rng;
+use fkl::tensor::{DType, Tensor};
+
+/// Contractive mixed chain (same shape as the host fusion bench's): values
+/// stay tame at any depth, so the f32 epsilon guard is meaningful.
+fn chain(k: usize) -> Vec<(Opcode, f64)> {
+    let cycle = [
+        (Opcode::Mul, 0.999),
+        (Opcode::Add, 0.001),
+        (Opcode::Sub, 0.0005),
+        (Opcode::Max, -1000.0),
+    ];
+    (0..k).map(|i| cycle[i % cycle.len()]).collect()
+}
+
+struct Point {
+    label: String,
+    chain_len: usize,
+    dtin: &'static str,
+    elems: usize,
+    lane_width: u8,
+    scalar_1t_ms: f64,
+    vector_1t_ms: f64,
+    vector_mt_ms: f64,
+}
+
+impl Point {
+    fn speedup_1t(&self) -> f64 {
+        self.scalar_1t_ms / self.vector_1t_ms
+    }
+
+    fn to_json(&self) -> fkl::jsonlite::Value {
+        use fkl::jsonlite::Value;
+        Value::obj(vec![
+            ("label", Value::str(&self.label)),
+            ("chain_len", Value::num(self.chain_len as f64)),
+            ("dtin", Value::str(self.dtin)),
+            ("elems", Value::num(self.elems as f64)),
+            ("lane_width", Value::num(self.lane_width as f64)),
+            ("scalar_1t_ms", Value::num(self.scalar_1t_ms)),
+            ("vector_1t_ms", Value::num(self.vector_1t_ms)),
+            ("vector_mt_ms", Value::num(self.vector_mt_ms)),
+            ("speedup_vector_1t", Value::num(self.speedup_1t())),
+        ])
+    }
+}
+
+fn measure(label: &str, p: &Pipeline, x: &Tensor, reps: usize, budget: Duration) -> Point {
+    let scalar = HostFusedEngine::with_threads(1).with_lane_width(1);
+    let vector = HostFusedEngine::with_threads(1);
+    let vector_mt = HostFusedEngine::new();
+
+    // correctness guard: width must be invisible in the results — bitwise
+    // on f64-accumulated paths, float-epsilon on the f32 fast arm
+    let s_out = scalar.run(p, x).expect("scalar-arm run");
+    let v_out = vector.run(p, x).expect("vectorized run");
+    let narrow = p.dtout == DType::F32;
+    for (i, (a, b)) in s_out.to_f64_vec().iter().zip(v_out.to_f64_vec()).enumerate() {
+        if narrow {
+            assert!(
+                (a - b).abs() <= 1e-4 + 1e-4 * b.abs(),
+                "{label}: scalar vs vector diverged at {i} ({a} vs {b})"
+            );
+        } else {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "{label}: f64 path must be bit-equal across widths ({a} vs {b})"
+            );
+        }
+    }
+    let width = vector.vector_width();
+
+    let s1 = time_fn(reps, budget, || scalar.run(p, x).unwrap());
+    let v1 = time_fn(reps, budget, || vector.run(p, x).unwrap());
+    let vm = time_fn(reps, budget, || vector_mt.run(p, x).unwrap());
+    let pt = Point {
+        label: label.to_string(),
+        chain_len: p.body().len(),
+        dtin: p.dtin.name(),
+        elems: p.batch * p.item_elems(),
+        lane_width: width,
+        scalar_1t_ms: s1.mean_s * 1e3,
+        vector_1t_ms: v1.mean_s * 1e3,
+        vector_mt_ms: vm.mean_s * 1e3,
+    };
+    println!(
+        "{label:28} k={:<2} {:>9} elems | lanes {:>2} | scalar 1t {:>8.3} ms | vector 1t {:>8.3} ms ({:>5.2}x) | vector {}t {:>8.3} ms",
+        pt.chain_len,
+        pt.elems,
+        pt.lane_width,
+        pt.scalar_1t_ms,
+        pt.vector_1t_ms,
+        pt.speedup_1t(),
+        vector_mt.threads(),
+        pt.vector_mt_ms,
+    );
+    pt
+}
+
+fn main() {
+    let fast = std::env::var("FKL_BENCH_FAST").is_ok();
+    let (reps, budget) =
+        if fast { (5, Duration::from_millis(200)) } else { (15, Duration::from_millis(700)) };
+    let mut rng = Rng::new(7);
+    println!(
+        "# simd_bench — register-blocked vs scalar fused loops (simd: {}, f32 lanes {}, f64 lanes {})",
+        kernel::simd_capability(),
+        kernel::LANE_WIDTH_F32,
+        kernel::LANE_WIDTH_F64,
+    );
+
+    let mut points: Vec<Point> = Vec::new();
+    let (h, w) = (1080usize, 1920usize);
+    let f32_frame = Tensor::from_f32(&rng.vec_f32(h * w, -2.0, 2.0), &[1, h, w]);
+    let u8_frame = Tensor::from_u8(&rng.vec_u8(h * w), &[1, h, w]);
+
+    // --- the acceptance point: f32 chain of 5 @ 1080p ----------------------
+    let lens: &[usize] = if fast { &[5] } else { &[1, 2, 5, 8, 12] };
+    for &k in lens {
+        let p = build_erased_opcodes(&chain(k), &[h, w], 1, DType::F32, DType::F32);
+        points.push(measure(&format!("f32/1080p/chain{k}"), &p, &f32_frame, reps, budget));
+    }
+
+    // --- oracle-exact f64 arm (8-wide blocks) ------------------------------
+    let p = build_erased_opcodes(&chain(6), &[h, w], 1, DType::U8, DType::U8);
+    points.push(measure("u8/1080p/chain6", &p, &u8_frame, reps, budget));
+
+    // --- lane-group arm: C3 body over packed pixels (24-lane blocks) -------
+    let (ph, pw) = (720usize, 960usize);
+    let px_frame = Tensor::from_f32(&rng.vec_f32(ph * pw * 3, -2.0, 2.0), &[1, ph, pw, 3]);
+    let p = Chain::read::<F32>(&[ph, pw, 3])
+        .map(CvtColor)
+        .map(MulC3([0.9, 1.05, 1.1]))
+        .map(Mul(0.5))
+        .cast::<fkl::chain::F64>()
+        .write()
+        .into_pipeline();
+    points.push(measure("f32/720p/c3group", &p, &px_frame, reps, budget));
+
+    // --- striped full-axis reduce ------------------------------------------
+    let p = Chain::read::<F32>(&[h, w])
+        .map(Mul(0.5))
+        .reduce_pair(ReduceKind::Mean, ReduceKind::SumSq)
+        .into_pipeline();
+    points.push(measure("f32/1080p/meansumsq", &p, &f32_frame, reps, budget));
+
+    // --- acceptance: vectorized >= 1.5x scalar on the f32 chain-5 ----------
+    let accept = points
+        .iter()
+        .find(|pt| pt.dtin == "f32" && pt.chain_len == 5 && pt.elems >= 1 << 20)
+        .expect("sweep includes the acceptance point");
+    let accept_speedup = accept.speedup_1t();
+    let accept_pass = accept_speedup >= 1.5;
+    println!(
+        "\nacceptance: f32 chain5 @ {} elems, lanes {} -> {accept_speedup:.2}x (target >= 1.5x): {}",
+        accept.elems,
+        accept.lane_width,
+        if accept_pass { "PASS" } else { "FAIL" }
+    );
+
+    use fkl::jsonlite::Value;
+    let report = Value::obj(vec![
+        ("bench", Value::str("simd")),
+        ("simd_capability", Value::str(kernel::simd_capability())),
+        ("lane_width_f32", Value::num(kernel::LANE_WIDTH_F32 as f64)),
+        ("lane_width_f64", Value::num(kernel::LANE_WIDTH_F64 as f64)),
+        ("fast_mode", Value::Bool(fast)),
+        (
+            "acceptance",
+            Value::obj(vec![
+                ("criterion", Value::str("vectorized >= 1.5x scalar, f32 chain of 5 ops @ 1080p, 1t")),
+                ("elems", Value::num(accept.elems as f64)),
+                ("speedup", Value::num(accept_speedup)),
+                ("pass", Value::Bool(accept_pass)),
+            ]),
+        ),
+        ("series", Value::Arr(points.iter().map(Point::to_json).collect())),
+    ]);
+
+    // repo root (= parent of the crate dir)
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|p| p.join("BENCH_simd.json"))
+        .unwrap_or_else(|| "BENCH_simd.json".into());
+    std::fs::write(&root, report.to_json()).expect("write BENCH_simd.json");
+    println!("wrote {}", root.display());
+
+    // FKL_BENCH_SOFT turns the acceptance gate into a warning — wall-clock
+    // asserts on shared CI runners are a flake source
+    if !accept_pass && std::env::var("FKL_BENCH_SOFT").is_ok() {
+        eprintln!("WARNING: acceptance criterion not met: {accept_speedup:.2}x < 1.5x (soft mode)");
+        return;
+    }
+    assert!(accept_pass, "acceptance criterion not met: {accept_speedup:.2}x < 1.5x");
+}

@@ -459,13 +459,14 @@ pub fn lint(p: &Pipeline) -> Vec<Diagnostic> {
     let t = predict_tier(p);
     let msg = match &t.artifact_refusal {
         Some(why) => format!(
-            "serves on the {} tier (host accumulator {:?}); artifact tiers refuse: {why}",
-            t.tier, t.accum
+            "serves on the {} tier (host accumulator {:?}, lane width {}); \
+             artifact tiers refuse: {why}",
+            t.tier, t.accum, t.lane_width
         ),
         None => format!(
             "dense chain: artifact-tier eligible (registry decides exact/staticloop/\
-             interp; host fused fallback, accumulator {:?})",
-            t.accum
+             interp; host fused fallback, accumulator {:?}, lane width {})",
+            t.accum, t.lane_width
         ),
     };
     out.push(Diagnostic::new(RuleCode::TierPrediction, Span { start: 0, end: body.len() }, msg));

@@ -60,17 +60,26 @@ pub struct TierPrediction {
     /// [`HostAccum::F32`] is the register-resident fast arm, everything else
     /// folds in f64, bit-compatible with the hostref oracle.
     pub accum: HostAccum,
+    /// Register-block width of the host fused inner loop — the very value
+    /// the compiled plan records ([`HostPlan::vectorization`]): 16 on the
+    /// f32 fast arm, 8 on every f64 arm, 8 striped sub-accumulators on the
+    /// reduce tier. Predicted statically so lints report the SIMD shape a
+    /// run would take without running it.
+    pub lane_width: u8,
 }
 
 /// Predict the serving tier of `p` without running it.
 pub fn predict_tier(p: &Pipeline) -> TierPrediction {
-    let accum = HostPlan::compile(p).accum();
+    let plan = HostPlan::compile(p);
+    let accum = plan.accum();
+    let lane_width = plan.vectorization();
     if p.reduction().is_some() {
         let token = p.ops().last().map(IOp::sig_token).unwrap_or_default();
         return TierPrediction {
             tier: Tier::HostReduce,
             artifact_refusal: Some(format!("reduce seal: {token}")),
             accum,
+            lane_width,
         };
     }
     if p.has_structured_boundary() {
@@ -84,6 +93,7 @@ pub fn predict_tier(p: &Pipeline) -> TierPrediction {
             tier: Tier::HostStructured,
             artifact_refusal: Some(format!("structured boundary: {token}")),
             accum,
+            lane_width,
         };
     }
     if let Some(op) = p.body().iter().find(|op| !matches!(op, IOp::Compute { .. })) {
@@ -91,9 +101,10 @@ pub fn predict_tier(p: &Pipeline) -> TierPrediction {
             tier: Tier::HostGroup,
             artifact_refusal: Some(format!("not a scalar chain: {}", op.sig_token())),
             accum,
+            lane_width,
         };
     }
-    TierPrediction { tier: Tier::DenseChain, artifact_refusal: None, accum }
+    TierPrediction { tier: Tier::DenseChain, artifact_refusal: None, accum, lane_width }
 }
 
 #[cfg(test)]
@@ -111,6 +122,7 @@ mod tests {
         assert_eq!(t.tier, Tier::DenseChain);
         assert_eq!(t.artifact_refusal, None);
         assert_eq!(t.accum, HostAccum::F32, "u8->f32 dense chain rides the fast arm");
+        assert_eq!(t.lane_width, 16, "the f32 fast arm blocks 16 lanes");
 
         let group = Pipeline::elementwise(
             vec![IOp::CvtColor, IOp::compute(Opcode::Mul, 2.0)],
@@ -124,6 +136,7 @@ mod tests {
         assert_eq!(t.tier, Tier::HostGroup);
         assert!(t.artifact_refusal.as_deref().unwrap().contains("cvtcolor"));
         assert_eq!(t.accum, HostAccum::F64, "group bodies fold in f64");
+        assert_eq!(t.lane_width, 8, "f64 arms block 8 lanes");
 
         let structured = Pipeline::new(
             vec![
@@ -157,5 +170,6 @@ mod tests {
         let t = predict_tier(&reduce);
         assert_eq!(t.tier, Tier::HostReduce);
         assert!(t.artifact_refusal.as_deref().unwrap().contains("reduce seal"));
+        assert_eq!(t.lane_width, 8, "the reduce tier stripes 8 sub-accumulators");
     }
 }

@@ -341,6 +341,8 @@ impl Backend {
                 reduction: engine.reduce_runs(),
                 divergent: engine.divergent_runs(),
                 plan_cache: engine.plan_cache_len(),
+                vectorized: engine.vector_runs(),
+                vector_width: engine.vector_width(),
                 ..PlannerStats::default()
             },
         }

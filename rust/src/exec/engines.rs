@@ -192,7 +192,14 @@ impl FusedEngine {
 
     /// Cumulative per-run tier counts (VF coverage of the served traffic).
     pub fn planner_stats(&self) -> PlannerStats {
-        self.stats.borrow().clone()
+        let mut stats = self.stats.borrow().clone();
+        if let Some(host) = self.host_fallback.borrow().as_ref() {
+            // host-tier re-routes run register-blocked — mirror the lane
+            // telemetry so vectorization coverage survives the re-route
+            stats.vectorized = host.vector_runs();
+            stats.vector_width = host.vector_width();
+        }
+        stats
     }
 
     /// Serve a WINDOW of pipelines. One artifact launch binds ONE code

@@ -57,10 +57,19 @@ const MIN_ELEMS_PER_THREAD: usize = 32 * 1024;
 pub struct HostFusedEngine {
     plans: RefCell<HashMap<Signature, Rc<HostPlan>>>,
     threads: usize,
+    /// Register-block width override. `None` (production) lets every plan
+    /// run at its own [`HostPlan::vectorization`] width; `Some(1)` forces
+    /// the scalar arm — the ablation baseline the SIMD bench and the
+    /// differential fuzz harness compare against. Widths never change
+    /// results on any f64 path (bit-equal by construction) and stay within
+    /// float epsilon on the f32 fast arm.
+    lane_width: Option<u8>,
     runs: Cell<usize>,
     structured: Cell<usize>,
     reduces: Cell<usize>,
     divergent: Cell<usize>,
+    vector_runs: Cell<usize>,
+    vector_width: Cell<u8>,
     /// Armed fault injector (absent in production — zero cost when off).
     /// Consulted once per divergent-window item, serially in window order
     /// BEFORE the lanes spawn, so injected faults land at deterministic
@@ -81,12 +90,25 @@ impl HostFusedEngine {
         HostFusedEngine {
             plans: RefCell::new(HashMap::new()),
             threads: threads.max(1),
+            lane_width: None,
             runs: Cell::new(0),
             structured: Cell::new(0),
             reduces: Cell::new(0),
             divergent: Cell::new(0),
+            vector_runs: Cell::new(0),
+            vector_width: Cell::new(0),
             faults: None,
         }
+    }
+
+    /// Force every run to a fixed register-block width instead of the
+    /// plan-selected one. `1` is the scalar arm (the pre-SIMD loops) — the
+    /// baseline of the `simd_bench` ablation and the scalar-vs-vector leg
+    /// of the differential fuzz harness. Results are unchanged on every
+    /// f64 path and within float epsilon on the f32 fast arm.
+    pub fn with_lane_width(mut self, width: u8) -> HostFusedEngine {
+        self.lane_width = Some(width.max(1));
+        self
     }
 
     /// Arm a fault injector: divergent-window items consult it (tier
@@ -149,13 +171,41 @@ impl HostFusedEngine {
         self.divergent.get()
     }
 
-    fn observe_run(&self, structured: bool, reduce: bool) {
+    /// Completed runs that took a register-blocked loop (effective width
+    /// > 1; every run in production — the scalar arm exists only under a
+    /// [`HostFusedEngine::with_lane_width`] override) — surfaced through
+    /// [`crate::fusion::PlannerStats::vectorized`].
+    pub fn vector_runs(&self) -> usize {
+        self.vector_runs.get()
+    }
+
+    /// Widest register block any completed run used (0 before the first
+    /// run) — surfaced through [`crate::fusion::PlannerStats::vector_width`]
+    /// so perf dashboards show which SIMD shape actually served.
+    pub fn vector_width(&self) -> u8 {
+        self.vector_width.get()
+    }
+
+    /// The register-block width a run of `plan` executes at: the engine
+    /// override if set, else the plan's own [`HostPlan::vectorization`] —
+    /// divergent-window items each pick their width from their OWN sub-plan.
+    fn effective_width(&self, plan: &HostPlan) -> u8 {
+        self.lane_width.unwrap_or_else(|| plan.vectorization())
+    }
+
+    fn observe_run(&self, structured: bool, reduce: bool, width: u8) {
         self.runs.set(self.runs.get() + 1);
         if structured {
             self.structured.set(self.structured.get() + 1);
         }
         if reduce {
             self.reduces.set(self.reduces.get() + 1);
+        }
+        if width > 1 {
+            self.vector_runs.set(self.vector_runs.get() + 1);
+        }
+        if width > self.vector_width.get() {
+            self.vector_width.set(width);
         }
     }
 
@@ -165,7 +215,7 @@ impl HostFusedEngine {
         let reduce = plan.reduce().is_some();
         let structured = plan.reader() != ReaderKind::Dense
             || (!reduce && plan.writer() != WriterKind::Dense);
-        self.observe_run(structured, reduce);
+        self.observe_run(structured, reduce, self.effective_width(plan));
     }
 
     /// The DIVERGENT-HF tier: serve a window of HETEROGENEOUS pipelines —
@@ -196,6 +246,10 @@ impl HostFusedEngine {
         // raw &HostPlan refs: the Rc handles stay on this thread, only the
         // Sync plan data crosses into the lanes
         let plan_refs: Vec<&HostPlan> = plan.items().iter().map(|it| it.plan()).collect();
+        // per-item register-block widths: each sub-plan picks its own (an
+        // engine override still wins — the fuzz harness runs whole windows
+        // on the scalar arm this way)
+        let widths: Vec<u8> = plan_refs.iter().map(|hp| self.effective_width(hp)).collect();
 
         // every lane gets its share of the worker pool: a window NARROWER
         // than the pool (few large items) keeps intra-run threading inside
@@ -218,11 +272,11 @@ impl HostFusedEngine {
         let mut slots: Vec<Option<Result<Tensor>>> = Vec::with_capacity(window.len());
         slots.resize_with(window.len(), || None);
         if plan.lanes() <= 1 {
-            let items = window.iter().zip(plan_refs.iter().copied());
-            for ((slot, (&(p, t), hp)), fault) in
+            let items = window.iter().zip(plan_refs.iter().copied()).zip(widths.iter().copied());
+            for ((slot, ((&(p, t), hp), width)), fault) in
                 slots.iter_mut().zip(items).zip(injected.iter().cloned())
             {
-                *slot = Some(divergent_item(hp, p, t, self.threads, fault));
+                *slot = Some(divergent_item(hp, p, t, self.threads, width, fault));
             }
         } else {
             std::thread::scope(|scope| {
@@ -232,13 +286,17 @@ impl HostFusedEngine {
                     rest = tail;
                     let lane_win = &window[r.start..r.end];
                     let lane_plans = &plan_refs[r.start..r.end];
+                    let lane_widths = &widths[r.start..r.end];
                     let lane_faults = &injected[r.start..r.end];
                     scope.spawn(move || {
-                        let items = lane_win.iter().zip(lane_plans.iter().copied());
-                        for ((slot, (&(p, t), hp)), fault) in
+                        let items = lane_win
+                            .iter()
+                            .zip(lane_plans.iter().copied())
+                            .zip(lane_widths.iter().copied());
+                        for ((slot, ((&(p, t), hp), width)), fault) in
                             head.iter_mut().zip(items).zip(lane_faults.iter().cloned())
                         {
-                            *slot = Some(divergent_item(hp, p, t, lane_workers, fault));
+                            *slot = Some(divergent_item(hp, p, t, lane_workers, width, fault));
                         }
                     });
                 }
@@ -291,10 +349,21 @@ impl HostFusedEngine {
             p.dtout
         );
         let plan = self.plan_for(p);
+        let width = self.effective_width(&plan);
+        let vectorized = width > 1;
         if let Some(spec) = plan.reduce() {
             let body = plan.bind_body(p);
-            let vals = reduce_pass(p, spec, &body, plan.group(), self.threads, src, src_shape)?;
-            self.observe_run(p.read_pattern() != ReadPattern::Dense, true);
+            let vals = reduce_pass(
+                p,
+                spec,
+                &body,
+                plan.group(),
+                self.threads,
+                vectorized,
+                src,
+                src_shape,
+            )?;
+            self.observe_run(p.read_pattern() != ReadPattern::Dense, true, width);
             return Ok(vals.into_iter().map(W::from_f64).collect());
         }
         let dst = if plan.is_dense() {
@@ -321,19 +390,19 @@ impl HostFusedEngine {
                     .into_iter()
                     .map(|(op, param)| (op, param as f32))
                     .collect();
-                chain_pass_f32(&chain, self.threads, src, &mut dst);
+                chain_pass_f32(&chain, self.threads, vectorized, src, &mut dst);
             } else if let Some(chain) = plan.bind_chain(p) {
-                chain_pass_f64(&chain, self.threads, src, &mut dst);
+                chain_pass_f64(&chain, self.threads, vectorized, src, &mut dst);
             } else {
                 let body = plan.bind_body(p);
-                group_pass(&body, plan.group(), self.threads, src, &mut dst);
+                group_pass(&body, plan.group(), self.threads, vectorized, src, &mut dst);
             }
             dst
         } else {
             let body = plan.bind_body(p);
-            structured_pass::<S, W>(p, &body, self.threads, src, src_shape)?
+            structured_pass::<S, W>(p, &body, self.threads, vectorized, src, src_shape)?
         };
-        self.observe_run(!plan.is_dense(), false);
+        self.observe_run(!plan.is_dense(), false, width);
         Ok(dst)
     }
 
@@ -369,7 +438,7 @@ impl Engine for HostFusedEngine {
 
     fn run(&self, p: &Pipeline, input: &Tensor) -> Result<Tensor> {
         let plan = self.plan_for(p);
-        let out = execute_any(&plan, p, input, self.threads)?;
+        let out = execute_any(&plan, p, input, self.threads, self.effective_width(&plan))?;
         self.observe_plan_run(&plan);
         Ok(out)
     }
@@ -447,23 +516,32 @@ fn divergent_item(
     p: &Pipeline,
     input: &Tensor,
     threads: usize,
+    width: u8,
     fault: Option<InjectedHere>,
 ) -> Result<Tensor> {
     super::catch_launch(|| {
         if let Some((action, info)) = fault {
             crate::faults::trigger(action, info)?;
         }
-        execute_any(plan, p, input, threads)
+        execute_any(plan, p, input, threads, width)
     })
 }
 
-/// Execute one already-planned run at an explicit worker count: the shared
-/// body of [`Engine::run`] (whole engine thread pool) and of each
-/// divergent-HF lane (the pool split across lanes, items parallel ACROSS
-/// lanes). Thread count never changes results on any path — every pass is
-/// a pure element/pixel/block map — so any lane split is bit-equal to the
-/// engine's full-pool run.
-fn execute_any(plan: &HostPlan, p: &Pipeline, input: &Tensor, threads: usize) -> Result<Tensor> {
+/// Execute one already-planned run at an explicit worker count and
+/// register-block width: the shared body of [`Engine::run`] (whole engine
+/// thread pool, plan-selected width) and of each divergent-HF lane (the pool
+/// split across lanes, each item at its own sub-plan's width). Neither
+/// thread count nor width changes results on any f64 path — every pass is a
+/// pure element/pixel/block map and the reduce stripes are data-addressed —
+/// so any lane split is bit-equal to the engine's full-pool run.
+fn execute_any(
+    plan: &HostPlan,
+    p: &Pipeline,
+    input: &Tensor,
+    threads: usize,
+    width: u8,
+) -> Result<Tensor> {
+    let vectorized = width > 1;
     if let Some(spec) = plan.reduce() {
         ensure!(
             input.dtype() == p.dtin,
@@ -471,11 +549,11 @@ fn execute_any(plan: &HostPlan, p: &Pipeline, input: &Tensor, threads: usize) ->
             input.dtype(),
             p.dtin
         );
-        return execute_reduce(plan, p, spec, input, threads);
+        return execute_reduce(plan, p, spec, input, threads, vectorized);
     }
     if plan.is_dense() {
         HostFusedEngine::check_dense_input(p, input)?;
-        Ok(execute_plan(plan, p, input, threads, &p.out_shape()))
+        Ok(execute_plan(plan, p, input, threads, vectorized, &p.out_shape()))
     } else {
         ensure!(
             input.dtype() == p.dtin,
@@ -483,7 +561,7 @@ fn execute_any(plan: &HostPlan, p: &Pipeline, input: &Tensor, threads: usize) ->
             input.dtype(),
             p.dtin
         );
-        execute_structured(plan, p, input, threads)
+        execute_structured(plan, p, input, threads, vectorized)
     }
 }
 
@@ -587,16 +665,24 @@ fn par_chunks<S, W>(
     });
 }
 
-/// The f32 fast path: fold an all-scalar chain through an f32 register.
+/// The f32 fast path: fold an all-scalar chain through f32 registers.
 /// (`W` is always `f32` in practice — the planner only selects the f32
 /// accumulator for f32 outputs — and `W::from_f32` is the identity there.)
+///
+/// Vectorized arm: stage [`kernel::LANE_WIDTH_F32`] elements in a register
+/// block, run each chain op over the whole block with its dispatch hoisted
+/// ([`Opcode::apply_f32_lanes`]), write the block, scalar tail via
+/// `chunks_exact`'s remainder. Per element the op sequence is IDENTICAL to
+/// the scalar arm (no cross-lane arithmetic, no re-association) — the two
+/// arms differ only in instruction schedule.
 fn chain_pass_f32<S: HostLane, W: HostLane>(
     chain: &[(Opcode, f32)],
     threads: usize,
+    vectorized: bool,
     src: &[S],
     dst: &mut [W],
 ) {
-    par_chunks(threads, 1, src, dst, |_base, s, d| {
+    let scalar = |s: &[S], d: &mut [W]| {
         for (out, &x) in d.iter_mut().zip(s) {
             let mut acc = x.to_f32();
             for &(op, param) in chain {
@@ -604,18 +690,43 @@ fn chain_pass_f32<S: HostLane, W: HostLane>(
             }
             *out = W::from_f32(acc);
         }
+    };
+    par_chunks(threads, 1, src, dst, |_base, s, d| {
+        if !vectorized {
+            scalar(s, d);
+            return;
+        }
+        const B: usize = kernel::LANE_WIDTH_F32;
+        let mut sc = s.chunks_exact(B);
+        let mut dc = d.chunks_exact_mut(B);
+        for (sg, dg) in (&mut sc).zip(&mut dc) {
+            let mut lanes = [0f32; B];
+            for (l, x) in lanes.iter_mut().zip(sg) {
+                *l = x.to_f32();
+            }
+            for &(op, param) in chain {
+                op.apply_f32_lanes(&mut lanes, param);
+            }
+            for (out, &l) in dg.iter_mut().zip(&lanes) {
+                *out = W::from_f32(l);
+            }
+        }
+        scalar(sc.remainder(), dc.into_remainder());
     });
 }
 
-/// The oracle-exact chain path: fold through an f64 register, write with
-/// boundary semantics.
+/// The oracle-exact chain path: fold through f64 registers, write with
+/// boundary semantics. Vectorized arm blocks [`kernel::LANE_WIDTH_F64`]
+/// elements with the same per-element op sequence as the scalar arm —
+/// bit-identical output, proven across the fuzz seeds.
 fn chain_pass_f64<S: HostLane, W: HostLane>(
     chain: &[(Opcode, f64)],
     threads: usize,
+    vectorized: bool,
     src: &[S],
     dst: &mut [W],
 ) {
-    par_chunks(threads, 1, src, dst, |_base, s, d| {
+    let scalar = |s: &[S], d: &mut [W]| {
         for (out, &x) in d.iter_mut().zip(s) {
             let mut acc = x.to_f64();
             for &(op, param) in chain {
@@ -623,33 +734,86 @@ fn chain_pass_f64<S: HostLane, W: HostLane>(
             }
             *out = W::from_f64(acc);
         }
+    };
+    par_chunks(threads, 1, src, dst, |_base, s, d| {
+        if !vectorized {
+            scalar(s, d);
+            return;
+        }
+        const B: usize = kernel::LANE_WIDTH_F64;
+        let mut sc = s.chunks_exact(B);
+        let mut dc = d.chunks_exact_mut(B);
+        for (sg, dg) in (&mut sc).zip(&mut dc) {
+            let mut lanes = [0f64; B];
+            for (l, x) in lanes.iter_mut().zip(sg) {
+                *l = x.to_f64();
+            }
+            for &(op, param) in chain {
+                op.apply_f64_lanes(&mut lanes, param);
+            }
+            for (out, &l) in dg.iter_mut().zip(&lanes) {
+                *out = W::from_f64(l);
+            }
+        }
+        scalar(sc.remainder(), dc.into_remainder());
     });
 }
 
 /// The general path for lane-structured bodies (ComputeC3 / CvtColor): each
 /// pixel group lives in a 3-wide register block while the whole body runs.
+/// Vectorized arm: [`kernel::LANE_WIDTH_F64`] pixel groups (24 f64 lanes)
+/// stage together and each body op sweeps the whole block once — bit-equal
+/// to the per-group arm because [`ScalarOp::apply_slice_f64`] is defined
+/// element-wise over any slice length (the
+/// `whole_buffer_equals_per_group_application` invariant) and blocks start
+/// on pixel boundaries.
 fn group_pass<S: HostLane, W: HostLane>(
     body: &[ScalarOp],
     group: usize,
     threads: usize,
+    vectorized: bool,
     src: &[S],
     dst: &mut [W],
 ) {
     par_chunks(threads, group, src, dst, |base, s, d| {
-        let mut buf = [0f64; 3];
-        for (gi, (sg, dg)) in s.chunks(group).zip(d.chunks_mut(group)).enumerate() {
-            let len = sg.len();
-            for (b, &x) in buf.iter_mut().zip(sg) {
+        let per_group = |gstart: usize, s: &[S], d: &mut [W]| {
+            let mut buf = [0f64; 3];
+            for (gi, (sg, dg)) in s.chunks(group).zip(d.chunks_mut(group)).enumerate() {
+                let len = sg.len();
+                for (b, &x) in buf.iter_mut().zip(sg) {
+                    *b = x.to_f64();
+                }
+                let gbase = gstart + gi * group;
+                for op in body {
+                    op.apply_slice_f64(&mut buf[..len], gbase);
+                }
+                for (out, &b) in dg.iter_mut().zip(&buf[..len]) {
+                    *out = W::from_f64(b);
+                }
+            }
+        };
+        if !(vectorized && group == 3) {
+            per_group(base, s, d);
+            return;
+        }
+        const BE: usize = kernel::LANE_WIDTH_F64 * 3;
+        let mut sc = s.chunks_exact(BE);
+        let mut dc = d.chunks_exact_mut(BE);
+        let mut off = 0usize;
+        for (sg, dg) in (&mut sc).zip(&mut dc) {
+            let mut buf = [0f64; BE];
+            for (b, x) in buf.iter_mut().zip(sg) {
                 *b = x.to_f64();
             }
-            let gbase = base + gi * group;
             for op in body {
-                op.apply_slice_f64(&mut buf[..len], gbase);
+                op.apply_slice_f64(&mut buf, base + off);
             }
-            for (out, &b) in dg.iter_mut().zip(&buf[..len]) {
+            for (out, &b) in dg.iter_mut().zip(&buf) {
                 *out = W::from_f64(b);
             }
+            off += BE;
         }
+        per_group(base + off, sc.remainder(), dc.into_remainder());
     });
 }
 
@@ -660,6 +824,7 @@ fn execute_plan(
     p: &Pipeline,
     input: &Tensor,
     threads: usize,
+    vectorized: bool,
     out_shape: &[usize],
 ) -> Tensor {
     use TensorData::*;
@@ -673,9 +838,9 @@ fn execute_plan(
             .collect();
         let mut dst = vec![0f32; input.len()];
         match input.data() {
-            U8(v) => chain_pass_f32(&chain, threads, v, &mut dst),
-            U16(v) => chain_pass_f32(&chain, threads, v, &mut dst),
-            F32(v) => chain_pass_f32(&chain, threads, v, &mut dst),
+            U8(v) => chain_pass_f32(&chain, threads, vectorized, v, &mut dst),
+            U16(v) => chain_pass_f32(&chain, threads, vectorized, v, &mut dst),
+            F32(v) => chain_pass_f32(&chain, threads, vectorized, v, &mut dst),
             _ => unreachable!("F32 accum is only planned for u8/u16/f32 inputs"),
         }
         return Tensor::from_data(F32(dst), out_shape);
@@ -697,10 +862,10 @@ fn execute_plan(
         ($src:expr, $w:ty, $variant:ident) => {{
             let mut dst: Vec<$w> = vec![<$w>::default(); $src.len()];
             if let Some(chain) = plan.bind_chain(p) {
-                chain_pass_f64(&chain, threads, $src, &mut dst);
+                chain_pass_f64(&chain, threads, vectorized, $src, &mut dst);
             } else {
                 let body = plan.bind_body(p);
-                group_pass(&body, plan.group(), threads, $src, &mut dst);
+                group_pass(&body, plan.group(), threads, vectorized, $src, &mut dst);
             }
             Tensor::from_data($variant(dst), out_shape)
         }};
@@ -848,24 +1013,52 @@ impl<W: HostLane> PixelWrite<W> for PlanarRows<'_, W> {
 }
 
 /// Rows `y0..y1` of one output plane: gather (reader) -> fold the body
-/// through f64 registers -> place (writer), one pixel at a time. This is
-/// the paper's three-part kernel, monomorphized per (reader, lane pair,
-/// writer) so the structured fast paths carry no dispatch inside the loop.
+/// through f64 registers -> place (writer). This is the paper's three-part
+/// kernel, monomorphized per (reader, lane pair, writer) so the structured
+/// fast paths carry no dispatch inside the loop.
+///
+/// Vectorized arm: [`kernel::LANE_WIDTH_F64`] adjacent row pixels gather
+/// into one 24-lane block WHILE reading, then each body op sweeps the whole
+/// block once (dispatch hoisted) before the pixels are placed; the row's
+/// ragged tail runs per pixel. Bit-equal to the per-pixel arm — the gather
+/// is per-pixel either way and [`ScalarOp::apply_slice_f64`] applies the
+/// same f64 op at the same global lane index regardless of slice length.
 fn pixel_rows<R: PixelRead, W: HostLane, O: PixelWrite<W>>(
     reader: &R,
     body: &[ScalarOp],
     w: usize,
     y0: usize,
     y1: usize,
+    vectorized: bool,
     mut out: O,
 ) {
+    const BP: usize = kernel::LANE_WIDTH_F64;
     let mut px = [0f64; 3];
     for y in y0..y1 {
-        for x in 0..w {
+        let mut x = 0usize;
+        if vectorized {
+            let mut buf = [0f64; BP * 3];
+            while x + BP <= w {
+                for i in 0..BP {
+                    reader.read(y, x + i, &mut px);
+                    buf[i * 3..i * 3 + 3].copy_from_slice(&px);
+                }
+                // packed pixels start at a global element index that is a
+                // multiple of 3, so lane-structured body ops see the same
+                // lane assignment as the oracle's whole-buffer sweep
+                let gbase = (y * w + x) * 3;
+                for op in body {
+                    op.apply_slice_f64(&mut buf, gbase);
+                }
+                for i in 0..BP {
+                    px.copy_from_slice(&buf[i * 3..i * 3 + 3]);
+                    out.write(y - y0, x + i, &px);
+                }
+                x += BP;
+            }
+        }
+        for x in x..w {
             reader.read(y, x, &mut px);
-            // packed pixels start at a global element index that is a
-            // multiple of 3, so lane-structured body ops see the same lane
-            // assignment as the oracle's whole-buffer sweep
             let gbase = (y * w + x) * 3;
             for op in body {
                 op.apply_slice_f64(&mut px, gbase);
@@ -883,6 +1076,7 @@ fn structured_plane<R: PixelRead, W: HostLane>(
     body: &[ScalarOp],
     write: WritePattern,
     threads: usize,
+    vectorized: bool,
     h: usize,
     w: usize,
     dst: &mut [W],
@@ -896,7 +1090,7 @@ fn structured_plane<R: PixelRead, W: HostLane>(
     match write {
         WritePattern::Dense => {
             if threads <= 1 {
-                pixel_rows(reader, body, w, 0, h, PackedRows { buf: dst, w });
+                pixel_rows(reader, body, w, 0, h, vectorized, PackedRows { buf: dst, w });
                 return;
             }
             std::thread::scope(|scope| {
@@ -904,7 +1098,15 @@ fn structured_plane<R: PixelRead, W: HostLane>(
                     let y0 = i * per;
                     let y1 = y0 + chunk.len() / (w * 3);
                     scope.spawn(move || {
-                        pixel_rows(reader, body, w, y0, y1, PackedRows { buf: chunk, w })
+                        pixel_rows(
+                            reader,
+                            body,
+                            w,
+                            y0,
+                            y1,
+                            vectorized,
+                            PackedRows { buf: chunk, w },
+                        )
                     });
                 }
             });
@@ -919,7 +1121,8 @@ fn structured_plane<R: PixelRead, W: HostLane>(
             let (p0, rest) = dst.split_at_mut(plane);
             let (p1, p2) = rest.split_at_mut(plane);
             if threads <= 1 {
-                pixel_rows(reader, body, w, 0, h, PlanarRows { planes: [p0, p1, p2], w });
+                let rows = PlanarRows { planes: [p0, p1, p2], w };
+                pixel_rows(reader, body, w, 0, h, vectorized, rows);
                 return;
             }
             std::thread::scope(|scope| {
@@ -930,7 +1133,8 @@ fn structured_plane<R: PixelRead, W: HostLane>(
                     let y0 = i * per;
                     let y1 = y0 + c0.len() / w;
                     scope.spawn(move || {
-                        pixel_rows(reader, body, w, y0, y1, PlanarRows { planes: [c0, c1, c2], w })
+                        let rows = PlanarRows { planes: [c0, c1, c2], w };
+                        pixel_rows(reader, body, w, y0, y1, vectorized, rows)
                     });
                 }
             });
@@ -974,6 +1178,7 @@ fn structured_pass<S: HostLane, W: HostLane>(
     p: &Pipeline,
     body: &[ScalarOp],
     threads: usize,
+    vectorized: bool,
     src: &[S],
     src_shape: &[usize],
 ) -> Result<Vec<W>> {
@@ -994,7 +1199,7 @@ fn structured_pass<S: HostLane, W: HostLane>(
             );
             for (sp, dp) in src.chunks(plane).zip(dst.chunks_mut(plane)) {
                 let reader = DenseRead { src: sp, w };
-                structured_plane(&reader, body, write, threads, h, w, dp);
+                structured_plane(&reader, body, write, threads, vectorized, h, w, dp);
             }
         }
         ReadPattern::Crop { rect } => {
@@ -1006,7 +1211,7 @@ fn structured_pass<S: HostLane, W: HostLane>(
             );
             let reader = CropRead { frame: src, fh, fw, rect };
             for dp in dst.chunks_mut(plane) {
-                structured_plane(&reader, body, write, threads, h, w, dp);
+                structured_plane(&reader, body, write, threads, vectorized, h, w, dp);
             }
         }
         ReadPattern::CropResize { rect, dst_h, dst_w } => {
@@ -1018,7 +1223,7 @@ fn structured_pass<S: HostLane, W: HostLane>(
             );
             let reader = ResizeRead::new(src, fh, fw, rect, dst_h, dst_w);
             for dp in dst.chunks_mut(plane) {
-                structured_plane(&reader, body, write, threads, h, w, dp);
+                structured_plane(&reader, body, write, threads, vectorized, h, w, dp);
             }
         }
     }
@@ -1033,13 +1238,15 @@ fn execute_structured(
     p: &Pipeline,
     input: &Tensor,
     threads: usize,
+    vectorized: bool,
 ) -> Result<Tensor> {
     use TensorData::*;
     let body = plan.bind_body(p);
     let out_shape = p.out_shape();
     macro_rules! from_to {
         ($src:expr, $w:ty, $variant:ident) => {{
-            let dst: Vec<$w> = structured_pass(p, &body, threads, $src, input.shape())?;
+            let dst: Vec<$w> =
+                structured_pass(p, &body, threads, vectorized, $src, input.shape())?;
             Tensor::from_data($variant(dst), &out_shape)
         }};
     }
@@ -1109,14 +1316,25 @@ fn compute_partials(
 }
 
 /// Dense fold-while-reading: fold the chain through a register per element
-/// (pixel-group registers for lane-structured bodies) and accumulate.
+/// (pixel-group registers for lane-structured bodies) and accumulate into
+/// the striped block state ([`kernel::reduce_block_fold`]).
+///
+/// Vectorized full-axis chain arm: the chain folds [`kernel::REDUCE_LANES`]
+/// elements at once through register blocks and the statistics accumulate
+/// in register-resident stripe rows ([`kernel::ReduceStripes`]) — which
+/// stripe an element feeds is its block offset mod `REDUCE_LANES` in BOTH
+/// arms, so scalar and vectorized folds are bit-identical, as both are to
+/// the oracle's [`kernel::reduce_slice`]. Per-channel reductions keep the
+/// scalar striped fold (the 3-lane rule crosses stripe rows).
 fn reduce_dense<S: HostLane>(
     spec: ReduceSpec,
     body: &[ScalarOp],
     group: usize,
     threads: usize,
+    vectorized: bool,
     src: &[S],
 ) -> Vec<f64> {
+    use crate::ops::ReduceAxis;
     let n = src.len();
     let nblocks = n.div_ceil(kernel::REDUCE_BLOCK);
     // group == 1 means an all-scalar body: fold it as a flat (op, param)
@@ -1132,18 +1350,58 @@ fn reduce_dense<S: HostLane>(
     let compute = |bi: usize| -> kernel::ReduceAcc {
         let start = bi * kernel::REDUCE_BLOCK;
         let end = (start + kernel::REDUCE_BLOCK).min(n);
-        let mut acc = kernel::reduce_acc_identity(spec);
+        let mut blk = kernel::reduce_block_identity(spec);
         if let Some(chain) = &chain {
-            for (j, x) in src[start..end].iter().enumerate() {
+            let mut j = 0usize;
+            if vectorized && matches!(spec.axis, ReduceAxis::Full) {
+                const B: usize = kernel::REDUCE_LANES;
+                let mut st = kernel::reduce_stripes_identity(spec);
+                let mut chunks = src[start..end].chunks_exact(B);
+                for chunk in &mut chunks {
+                    let mut xs = [0f64; B];
+                    for (slot, x) in xs.iter_mut().zip(chunk) {
+                        *slot = x.to_f64();
+                    }
+                    for &(op, param) in chain {
+                        op.apply_f64_lanes(&mut xs, param);
+                    }
+                    kernel::reduce_stripes_fold(spec, &mut st, &xs);
+                    j += B;
+                }
+                blk = kernel::reduce_stripes_into_block(spec, &st);
+            }
+            // scalar arm, and the vectorized arm's ragged tail (full blocks
+            // have none: REDUCE_BLOCK % REDUCE_LANES == 0)
+            for x in &src[start + j..end] {
                 let mut v = x.to_f64();
                 for &(op, param) in chain {
                     v = op.apply(v, param);
                 }
-                kernel::reduce_acc_fold(spec, &mut acc, start + j, v);
+                kernel::reduce_block_fold(spec, &mut blk, start, j, v);
+                j += 1;
             }
         } else {
-            let mut buf = [0f64; 3];
             let mut i = start;
+            if vectorized && group == 3 {
+                // lane-group reduce: stage LANE_WIDTH_F64 pixel groups per
+                // iteration so the body sweeps a whole block per op; the
+                // fold itself stays element-wise (bit-equal either way)
+                const BE: usize = kernel::LANE_WIDTH_F64 * 3;
+                while i + BE <= end {
+                    let mut buf = [0f64; BE];
+                    for (slot, x) in buf.iter_mut().zip(&src[i..i + BE]) {
+                        *slot = x.to_f64();
+                    }
+                    for op in body {
+                        op.apply_slice_f64(&mut buf, i);
+                    }
+                    for (j, &v) in buf.iter().enumerate() {
+                        kernel::reduce_block_fold(spec, &mut blk, start, i - start + j, v);
+                    }
+                    i += BE;
+                }
+            }
+            let mut buf = [0f64; 3];
             while i < end {
                 let len = group.min(end - i);
                 for (slot, x) in buf.iter_mut().zip(&src[i..i + len]) {
@@ -1153,12 +1411,12 @@ fn reduce_dense<S: HostLane>(
                     op.apply_slice_f64(&mut buf[..len], i);
                 }
                 for (j, &v) in buf[..len].iter().enumerate() {
-                    kernel::reduce_acc_fold(spec, &mut acc, i + j, v);
+                    kernel::reduce_block_fold(spec, &mut blk, start, i - start + j, v);
                 }
                 i += len;
             }
         }
-        acc
+        kernel::reduce_block_finish(spec, &blk)
     };
     let partials = compute_partials(spec, nblocks, n, threads, &compute);
     kernel::reduce_finalize(spec, &kernel::reduce_combine_tree(spec, &partials), n)
@@ -1187,7 +1445,7 @@ fn reduce_pixels<R: PixelRead>(
     let compute = |bi: usize| -> kernel::ReduceAcc {
         let start = bi * px_per_block;
         let end = (start + px_per_block).min(total_px);
-        let mut acc = kernel::reduce_acc_identity(spec);
+        let mut blk = kernel::reduce_block_identity(spec);
         let mut px = [0f64; 3];
         for pi in start..end {
             // batch items repeat the same gathered plane (exactly like the
@@ -1199,10 +1457,11 @@ fn reduce_pixels<R: PixelRead>(
                 op.apply_slice_f64(&mut px, gbase);
             }
             for (c, &v) in px.iter().enumerate() {
-                kernel::reduce_acc_fold(spec, &mut acc, gbase + c, v);
+                // block base in elements is start * 3 == bi * REDUCE_BLOCK
+                kernel::reduce_block_fold(spec, &mut blk, start * 3, (pi - start) * 3 + c, v);
             }
         }
-        acc
+        kernel::reduce_block_finish(spec, &blk)
     };
     let partials = compute_partials(spec, nblocks, n, threads, &compute);
     kernel::reduce_finalize(spec, &kernel::reduce_combine_tree(spec, &partials), n)
@@ -1217,6 +1476,7 @@ fn reduce_pass<S: HostLane>(
     body: &[ScalarOp],
     group: usize,
     threads: usize,
+    vectorized: bool,
     src: &[S],
     src_shape: &[usize],
 ) -> Result<Vec<f64>> {
@@ -1231,7 +1491,7 @@ fn reduce_pass<S: HostLane>(
                 src.len(),
                 want
             );
-            Ok(reduce_dense(spec, body, group, threads, src))
+            Ok(reduce_dense(spec, body, group, threads, vectorized, src))
         }
         ReadPattern::Crop { rect } => {
             let (fh, fw) = frame_dims(src.len(), src_shape, rect)?;
@@ -1267,16 +1527,17 @@ fn execute_reduce(
     spec: ReduceSpec,
     input: &Tensor,
     threads: usize,
+    vectorized: bool,
 ) -> Result<Tensor> {
     use TensorData::*;
     let body = plan.bind_body(p);
     let group = plan.group();
     let vals = match input.data() {
-        U8(v) => reduce_pass(p, spec, &body, group, threads, v, input.shape()),
-        U16(v) => reduce_pass(p, spec, &body, group, threads, v, input.shape()),
-        I32(v) => reduce_pass(p, spec, &body, group, threads, v, input.shape()),
-        F32(v) => reduce_pass(p, spec, &body, group, threads, v, input.shape()),
-        F64(v) => reduce_pass(p, spec, &body, group, threads, v, input.shape()),
+        U8(v) => reduce_pass(p, spec, &body, group, threads, vectorized, v, input.shape()),
+        U16(v) => reduce_pass(p, spec, &body, group, threads, vectorized, v, input.shape()),
+        I32(v) => reduce_pass(p, spec, &body, group, threads, vectorized, v, input.shape()),
+        F32(v) => reduce_pass(p, spec, &body, group, threads, vectorized, v, input.shape()),
+        F64(v) => reduce_pass(p, spec, &body, group, threads, vectorized, v, input.shape()),
     }?;
     Ok(Tensor::from_f64(&vals, &p.out_shape()))
 }

@@ -22,6 +22,7 @@ mod xp_divhf;
 mod xp_hostpre;
 mod xp_hostvf;
 mod xp_reduce;
+mod xp_simd;
 mod xpmem;
 
 pub use common::XpCtx;
@@ -33,12 +34,12 @@ use crate::bench::Table;
 /// All experiment ids in run order.
 pub const ALL: &[&str] = &[
     "fig1", "1", "2", "3", "4", "5", "6", "7", "8", "9", "10", "mem", "ablation", "hostvf",
-    "hostpre", "reduce", "divhf",
+    "hostpre", "reduce", "divhf", "simd",
 ];
 
 /// Experiments that need no artifact registry (run on any machine via
 /// [`run_host`]; `xp` uses this to skip the registry requirement for them).
-pub const HOST_ONLY: &[&str] = &["hostvf", "hostpre", "reduce", "divhf"];
+pub const HOST_ONLY: &[&str] = &["hostvf", "hostpre", "reduce", "divhf", "simd"];
 
 /// Run one experiment by id.
 pub fn run(id: &str, ctx: &XpCtx) -> Result<Vec<Table>> {
@@ -60,6 +61,7 @@ pub fn run(id: &str, ctx: &XpCtx) -> Result<Vec<Table>> {
         "hostpre" => xp_hostpre::run(ctx),
         "reduce" => xp_reduce::run(ctx),
         "divhf" => xp_divhf::run(ctx),
+        "simd" => xp_simd::run(ctx),
         other => anyhow::bail!("unknown experiment {other:?}; ids: {ALL:?}"),
     }
 }
@@ -73,6 +75,7 @@ pub fn run_host(id: &str, fast: bool) -> Result<Vec<Table>> {
         "hostpre" => xp_hostpre::run_with(reps, budget, fast),
         "reduce" => xp_reduce::run_with(reps, budget, fast),
         "divhf" => xp_divhf::run_with(reps, budget, fast),
+        "simd" => xp_simd::run_with(reps, budget, fast),
         other => anyhow::bail!("experiment {other:?} needs artifacts; ids without: {HOST_ONLY:?}"),
     }
 }

@@ -1,0 +1,119 @@
+//! SIMD lane-blocking ablation — register-blocked fused loops vs the scalar
+//! arm, artifact-free.
+//!
+//! Both arms are the SAME single-pass host fused engine; the ablation is the
+//! register-block width alone. `HostFusedEngine::with_lane_width(1)` forces
+//! the pre-SIMD scalar loops, the production engine runs each plan at its
+//! compiled [`HostPlan::vectorization`](crate::fusion::HostPlan) width (16
+//! f32 lanes on the fast arm, 8 f64 lanes elsewhere, 8 striped
+//! sub-accumulators on the reduce tier). One row per inner-loop shape —
+//! dense f32, dense u8/f64, lane-group C3, full-axis reduce — so the table
+//! shows where the autovectorizer actually pays.
+//!
+//! Like `hostvf`/`reduce` this needs NO artifacts: `xp simd` runs on any
+//! machine and anchors the speedup the `simd_bench` acceptance criterion
+//! enforces.
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::bench::{time_fn, Table};
+use crate::chain::{build_erased_opcodes, Chain, CvtColor, Mul, MulC3, F32, F64};
+use crate::exec::{Engine, HostFusedEngine};
+use crate::fusion::HostPlan;
+use crate::ops::{kernel, Opcode, Pipeline, ReduceKind};
+use crate::proplite::Rng;
+use crate::tensor::{DType, Tensor};
+
+use super::common::{fx, ms, XpCtx};
+
+pub fn run(xp: &XpCtx) -> Result<Vec<Table>> {
+    run_with(xp.reps, xp.budget, xp.fast)
+}
+
+/// Artifact-free entry point (`xp simd` works without `make artifacts`).
+pub fn run_with(reps: usize, budget: Duration, fast: bool) -> Result<Vec<Table>> {
+    let scalar = HostFusedEngine::with_threads(1).with_lane_width(1);
+    let vector = HostFusedEngine::with_threads(1);
+    let (h, w) = if fast { (360usize, 640usize) } else { (1080usize, 1920usize) };
+    let mut rng = Rng::new(11);
+
+    let mut t = Table::new(
+        &format!(
+            "SIMD lane-blocking ablation — register-blocked vs scalar fused loops \
+             ({h}x{w}, 1 thread, simd: {})",
+            kernel::simd_capability()
+        ),
+        &["case", "lane_width", "scalar_ms", "vector_ms", "speedup"],
+    );
+    t.note(
+        "both arms run the SAME fused single pass; only the register-block width differs \
+         (with_lane_width(1) forces the scalar loops). f64 arms are bit-equal across widths; \
+         the f32 fast arm is epsilon-equal",
+    );
+
+    let mix = [
+        (Opcode::Mul, 0.999),
+        (Opcode::Add, 0.001),
+        (Opcode::Sub, 0.0005),
+        (Opcode::Max, -1000.0),
+        (Opcode::Mul, 1.001),
+    ];
+    let f32_frame = Tensor::from_f32(&rng.vec_f32(h * w, -2.0, 2.0), &[1, h, w]);
+    let u8_frame = Tensor::from_u8(&rng.vec_u8(h * w), &[1, h, w]);
+    let px_frame = Tensor::from_f32(&rng.vec_f32(h * w * 3, -2.0, 2.0), &[1, h, w, 3]);
+
+    let dense_f32 = build_erased_opcodes(&mix, &[h, w], 1, DType::F32, DType::F32);
+    let dense_u8 = build_erased_opcodes(&mix, &[h, w], 1, DType::U8, DType::U8);
+    let group_c3 = Chain::read::<F32>(&[h, w, 3])
+        .map(CvtColor)
+        .map(MulC3([0.9, 1.05, 1.1]))
+        .map(Mul(0.5))
+        .cast::<F64>()
+        .write()
+        .into_pipeline();
+    let reduce = Chain::read::<F32>(&[h, w])
+        .map(Mul(0.5))
+        .reduce_pair(ReduceKind::Mean, ReduceKind::SumSq)
+        .into_pipeline();
+
+    let cases: [(&str, &Pipeline, &Tensor); 4] = [
+        ("dense f32 chain5", &dense_f32, &f32_frame),
+        ("dense u8 chain5 (f64 arm)", &dense_u8, &u8_frame),
+        ("lane-group C3 body", &group_c3, &px_frame),
+        ("full-axis mean+sumsq", &reduce, &f32_frame),
+    ];
+    for (name, p, x) in cases {
+        let width = HostPlan::compile(p).vectorization();
+
+        // correctness anchor: the width must be invisible in the results
+        let s = scalar.run(p, x)?;
+        let v = vector.run(p, x)?;
+        let narrow = p.dtout == DType::F32;
+        for (a, b) in s.to_f64_vec().iter().zip(v.to_f64_vec()) {
+            if narrow {
+                anyhow::ensure!(
+                    (a - b).abs() <= 1e-4 + 1e-4 * b.abs(),
+                    "{name}: scalar vs vector diverged ({a} vs {b})"
+                );
+            } else {
+                anyhow::ensure!(
+                    a.to_bits() == b.to_bits(),
+                    "{name}: f64 arm must be bit-equal across widths ({a} vs {b})"
+                );
+            }
+        }
+
+        let sm = time_fn(reps, budget, || scalar.run(p, x).unwrap());
+        let vm = time_fn(reps, budget, || vector.run(p, x).unwrap());
+        t.row(vec![
+            name.to_string(),
+            width.to_string(),
+            ms(sm.mean_s),
+            ms(vm.mean_s),
+            fx(sm.mean_s / vm.mean_s),
+        ]);
+    }
+    Ok(vec![t])
+}

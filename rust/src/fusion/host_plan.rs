@@ -69,6 +69,7 @@ pub struct HostPlan {
     reader: ReaderKind,
     writer: WriterKind,
     reduce: Option<ReduceSpec>,
+    vectorization: u8,
     dtin: DType,
     dtout: DType,
     batch: usize,
@@ -110,6 +111,19 @@ impl HostPlan {
         } else {
             HostAccum::F64
         };
+        // register-block width of the fused inner loop (burn-jit style
+        // `vectorization: u8`): the reduce tier stripes REDUCE_LANES
+        // sub-accumulators per block; the f32 fast arm blocks 16 f32 lanes;
+        // every f64 arm (dense, lane-group, structured gather) blocks 8.
+        // A property of the SIGNATURE — recorded on the plan so stats,
+        // lints and the tier predictor report the same width the loops run.
+        let vectorization = if writer == WriterKind::Reduce {
+            kernel::REDUCE_LANES as u8
+        } else if accum == HostAccum::F32 {
+            kernel::LANE_WIDTH_F32 as u8
+        } else {
+            kernel::LANE_WIDTH_F64 as u8
+        };
         HostPlan {
             sig: Signature::of(p),
             group,
@@ -118,6 +132,7 @@ impl HostPlan {
             reader,
             writer,
             reduce: p.reduction(),
+            vectorization,
             dtin: p.dtin,
             dtout: p.dtout,
             batch: p.batch,
@@ -180,6 +195,15 @@ impl HostPlan {
     /// are no runtime reduce params to bind).
     pub fn reduce(&self) -> Option<ReduceSpec> {
         self.reduce
+    }
+
+    /// Register-block width of the fused inner loop: how many elements one
+    /// iteration stages through the op chain (reduce plans: how many striped
+    /// sub-accumulators fold per block). `1` never occurs in a compiled
+    /// plan — the scalar arm exists only as the engine-level width override
+    /// used by the ablation benches and the differential fuzz harness.
+    pub fn vectorization(&self) -> u8 {
+        self.vectorization
     }
 
     /// True when both boundaries are dense (the pre-structured loop shapes).
@@ -345,6 +369,33 @@ mod tests {
             .reduce_per_channel(ReduceKind::Mean)
             .into_pipeline();
         assert_eq!(Signature::of(&q), *plan.signature());
+    }
+
+    #[test]
+    fn vectorization_width_follows_the_accum_and_tier_rule() {
+        use crate::chain::{AddC3, Chain, Mul, F32, U8};
+        use crate::ops::ReduceKind;
+        // f32 fast arm: 16 f32 lanes per block
+        let narrow = HostPlan::compile(&chain_pipe(DType::U8, DType::F32));
+        assert_eq!(narrow.vectorization(), kernel::LANE_WIDTH_F32 as u8);
+        // every f64 arm blocks 8 — dense chains and lane-group bodies alike
+        let wide = HostPlan::compile(&chain_pipe(DType::F64, DType::F64));
+        assert_eq!(wide.vectorization(), kernel::LANE_WIDTH_F64 as u8);
+        let grouped =
+            Chain::read::<F32>(&[2, 3]).map(AddC3([1.0, 2.0, 3.0])).write().into_pipeline();
+        assert_eq!(HostPlan::compile(&grouped).vectorization(), kernel::LANE_WIDTH_F64 as u8);
+        // structured gathers fold in f64 blocks too
+        let structured = Chain::read_crop::<U8>(Rect::new(0, 0, 4, 4)).map(Mul(2.0)).write();
+        assert_eq!(
+            HostPlan::compile(structured.pipeline()).vectorization(),
+            kernel::LANE_WIDTH_F64 as u8
+        );
+        // the reduce tier's width is its stripe count
+        let reduce = Chain::read::<U8>(&[4, 4, 3])
+            .map(Mul(0.5))
+            .reduce_per_channel(ReduceKind::Mean)
+            .into_pipeline();
+        assert_eq!(HostPlan::compile(&reduce).vectorization(), kernel::REDUCE_LANES as u8);
     }
 
     #[test]

@@ -78,6 +78,20 @@ pub struct PlannerStats {
     /// ablations can assert how many plans a window of equivalent chains
     /// compiled down to. Excluded from [`PlannerStats::total`].
     pub plan_cache: usize,
+    /// Host runs whose fused inner loop took a register-blocked
+    /// (SIMD-shaped) arm — effective width > 1, i.e. every production run;
+    /// the scalar arm exists only under the engine's
+    /// [`with_lane_width`](crate::exec::HostFusedEngine::with_lane_width)
+    /// ablation override. A sub-count of `host` excluded from
+    /// [`PlannerStats::total`], mirrored from
+    /// [`HostFusedEngine::vector_runs`](crate::exec::HostFusedEngine::vector_runs).
+    pub vectorized: usize,
+    /// Widest register block any host run used (elements per iteration:
+    /// 16 on the f32 fast arm, 8 on f64 arms and reduce stripes; 0 before
+    /// the first run) — a gauge mirrored from
+    /// [`HostFusedEngine::vector_width`](crate::exec::HostFusedEngine::vector_width),
+    /// so dashboards show which SIMD shape actually served.
+    pub vector_width: u8,
 }
 
 impl PlannerStats {

@@ -285,6 +285,12 @@ fn serve(args: &[String]) -> anyhow::Result<()> {
         m.planner.host
     );
     println!(
+        "simd: capability={} lane_width={} vectorized_passes={}",
+        fkl::ops::kernel::simd_capability(),
+        m.planner.vector_width,
+        m.planner.vectorized
+    );
+    println!(
         "divergent: windows={} items={} mean_window={:.1} occupancy={:.2}",
         m.divergent_windows,
         m.divergent_items,

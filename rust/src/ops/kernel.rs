@@ -52,19 +52,15 @@ impl ScalarOp {
     /// lane-structured ops. The oracle calls this once per op with the whole
     /// buffer (`base = 0`); the fused engine calls it per pixel group with
     /// the group's global offset — both produce identical results.
+    /// The compute-op arms delegate to the blocked [`Opcode`] slice forms,
+    /// which hoist the opcode dispatch out of the element loop — per-element
+    /// semantics are unchanged (`apply` per element), but a whole register
+    /// block flows through one op before the next dispatch.
     #[inline]
     pub fn apply_slice_f64(&self, vals: &mut [f64], base: usize) {
         match self {
-            ScalarOp::Scalar { op, param } => {
-                for v in vals.iter_mut() {
-                    *v = op.apply(*v, *param);
-                }
-            }
-            ScalarOp::PerLane { op, param } => {
-                for (j, v) in vals.iter_mut().enumerate() {
-                    *v = op.apply(*v, param[(base + j) % 3] as f64);
-                }
-            }
+            ScalarOp::Scalar { op, param } => op.apply_f64_slice(vals, *param),
+            ScalarOp::PerLane { op, param } => op.apply_f64_slice_c3(vals, base, *param),
             ScalarOp::Swizzle => {
                 for px in vals.chunks_mut(3) {
                     if px.len() == 3 {
@@ -88,6 +84,44 @@ pub fn group_width(body: &[ScalarOp]) -> usize {
         3
     } else {
         1
+    }
+}
+
+// ---------------------------------------------------------------------------
+// register-block widths (the SIMD shape of the fused inner loops)
+//
+// The fused host engine processes fixed-width element blocks per iteration —
+// the dense fast arms stage `LANE_WIDTH_*` elements in a stack array, run the
+// whole op chain over the block (dispatch hoisted per op, see
+// `Opcode::apply_*_lanes`), then write the block out, with an explicit scalar
+// tail for the ragged end. The widths are chosen so one block fills two
+// AVX-512 / four AVX2 registers: wide enough that the autovectorizer emits
+// full-width lanes at any of those targets, small enough to stay in registers
+// on 128-bit NEON/SSE2.
+
+/// Dense f32 fast-arm block width (16 × f32 = 64 bytes).
+pub const LANE_WIDTH_F32: usize = 16;
+
+/// Dense f64 arm block width (8 × f64 = 64 bytes). Also the width of the
+/// lane-group arm in PIXELS (8 packed-RGB pixels = 24 f64 lanes per block).
+pub const LANE_WIDTH_F64: usize = 8;
+
+/// The SIMD instruction set the binary was compiled for, from compile-time
+/// target features — printed by `fkl serve` and the benches so perf numbers
+/// are interpretable across machines. The default x86-64 target reports
+/// "sse2"; a `-C target-cpu=native` build on a modern core reports
+/// "avx2"/"avx512".
+pub fn simd_capability() -> &'static str {
+    if cfg!(target_feature = "avx512f") {
+        "avx512"
+    } else if cfg!(target_feature = "avx2") {
+        "avx2"
+    } else if cfg!(target_feature = "neon") {
+        "neon"
+    } else if cfg!(target_feature = "sse2") {
+        "sse2"
+    } else {
+        "scalar"
     }
 }
 
@@ -188,17 +222,30 @@ pub fn split_packed_to_planar<T: Copy>(packed: &[T], planar: &mut [T]) {
 // reduction semantics (the divergent-pattern half of the one-table rule)
 //
 // The fold itself lives on [`super::ReduceKind`]; what is defined HERE is the
-// deterministic *shape* of a reduction — fixed-size blocks, a fixed pairwise
-// combine tree, per-lane counts and the finalize layout — shared by the
-// hostref oracle ([`reduce_slice`] over a materialized buffer) and the fused
-// engine (the fold-while-reading tier computes the very same block partials
-// without materializing). Because block boundaries and combine order are
-// properties of the DATA, not of the thread count, results are bit-identical
-// across 1/2/8 workers and across oracle vs engine.
+// deterministic *shape* of a reduction — fixed-size blocks, a fixed stripe
+// rule inside each block, a fixed pairwise combine tree, per-lane counts and
+// the finalize layout — shared by the hostref oracle ([`reduce_slice`] over a
+// materialized buffer) and the fused engine (the fold-while-reading tier
+// computes the very same block partials without materializing). Inside a
+// block, element `j` folds into sub-accumulator `j % REDUCE_LANES`
+// ([`reduce_block_fold`]) and the `REDUCE_LANES` sub-accumulators combine
+// through the same fixed pairwise tree — so a SIMD arm that folds 8 stripes
+// at once and a scalar arm that folds one element at a time land on the SAME
+// bits: which stripe an element feeds is a property of its block offset, not
+// of the arm (or thread) that folds it. Because block boundaries, stripe
+// assignment and combine order are all properties of the DATA, results are
+// bit-identical across 1/2/8 workers, across oracle vs engine, and across
+// scalar vs vectorized arms.
 
 /// Elements per reduction block. Divisible by 3 so packed-RGB pixel groups
-/// (and per-channel lanes) never straddle a block boundary.
+/// (and per-channel lanes) never straddle a block boundary, and by
+/// [`REDUCE_LANES`] so full blocks have no stripe tail.
 pub const REDUCE_BLOCK: usize = 3072;
+
+/// Striped sub-accumulators per reduction block — the register-block width
+/// of the reduce arm ([`LANE_WIDTH_F64`]): element `j` of a block folds into
+/// stripe `j % REDUCE_LANES`.
+pub const REDUCE_LANES: usize = LANE_WIDTH_F64;
 
 /// One block's partial accumulators: up to 2 statistics × up to 3 lanes
 /// (unused slots idle at their fold identity). Lane 0 is the only live lane
@@ -268,6 +315,89 @@ pub fn reduce_combine_tree(spec: ReduceSpec, partials: &[ReduceAcc]) -> ReduceAc
     cur[0]
 }
 
+/// One block's striped partial state: [`REDUCE_LANES`] independent
+/// [`ReduceAcc`]s, stripe `j` folding the block's elements at offsets
+/// `j, j + REDUCE_LANES, j + 2·REDUCE_LANES, …` in offset order. Finishing a
+/// block ([`reduce_block_finish`]) combines the stripes through the fixed
+/// pairwise tree — the block partial every arm must reproduce bit-for-bit.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ReduceBlockAcc {
+    pub sub: [ReduceAcc; REDUCE_LANES],
+}
+
+/// The striped state every block fold starts from.
+pub fn reduce_block_identity(spec: ReduceSpec) -> ReduceBlockAcc {
+    ReduceBlockAcc { sub: [reduce_acc_identity(spec); REDUCE_LANES] }
+}
+
+/// Fold element `x` at offset `offset` within the block starting at global
+/// element index `base`: stripe `offset % REDUCE_LANES`, channel lane
+/// `(base + offset) % 3` (via [`reduce_acc_fold`]). This is the scalar form
+/// of the striped fold — the SIMD arm folds whole stripe rows at once
+/// ([`ReduceStripes`]) and lands on the same bits by construction.
+#[inline(always)]
+pub fn reduce_block_fold(
+    spec: ReduceSpec,
+    blk: &mut ReduceBlockAcc,
+    base: usize,
+    offset: usize,
+    x: f64,
+) {
+    reduce_acc_fold(spec, &mut blk.sub[offset % REDUCE_LANES], base + offset, x);
+}
+
+/// Combine a block's stripes into its partial — the same fixed pairwise tree
+/// used across blocks, so the whole reduction is ONE tree shape.
+pub fn reduce_block_finish(spec: ReduceSpec, blk: &ReduceBlockAcc) -> ReduceAcc {
+    reduce_combine_tree(spec, &blk.sub)
+}
+
+/// Register-resident stripe rows for the FULL-axis vectorized fold:
+/// `rows[stat][j]` is stripe `j` of statistic `stat` (channel lane 0 — the
+/// only live lane on [`ReduceAxis::Full`]). The engine's dense reduce arm
+/// keeps this in registers across a whole block, folding aligned
+/// [`REDUCE_LANES`]-wide chunks via [`ReduceKind::fold_lanes`]; per-channel
+/// reductions stay on the scalar striped fold (the 3-lane rule crosses
+/// stripe boundaries).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ReduceStripes {
+    pub rows: [[f64; REDUCE_LANES]; 2],
+}
+
+/// The stripe rows every full-axis block fold starts from.
+pub fn reduce_stripes_identity(spec: ReduceSpec) -> ReduceStripes {
+    debug_assert!(matches!(spec.axis, ReduceAxis::Full), "stripes are the Full-axis fast path");
+    let mut rows = [[0.0f64; REDUCE_LANES]; 2];
+    for (k, row) in rows.iter_mut().enumerate().take(spec.stat_count()) {
+        *row = [spec.stat(k).identity(); REDUCE_LANES];
+    }
+    ReduceStripes { rows }
+}
+
+/// Fold one aligned [`REDUCE_LANES`]-wide chunk (block offsets
+/// `c·REDUCE_LANES .. (c+1)·REDUCE_LANES`) into the stripe rows: stripe `j`
+/// folds `xs[j]`, exactly what [`reduce_block_fold`] does element-by-element
+/// for the same offsets.
+#[inline(always)]
+pub fn reduce_stripes_fold(spec: ReduceSpec, st: &mut ReduceStripes, xs: &[f64; REDUCE_LANES]) {
+    for k in 0..spec.stat_count() {
+        spec.stat(k).fold_lanes(&mut st.rows[k], xs);
+    }
+}
+
+/// Scatter the stripe rows back into the canonical striped block state
+/// (stripe `j`, channel lane 0) so the block can finish — or keep absorbing
+/// a ragged tail — through the shared scalar machinery.
+pub fn reduce_stripes_into_block(spec: ReduceSpec, st: &ReduceStripes) -> ReduceBlockAcc {
+    let mut blk = reduce_block_identity(spec);
+    for (j, sub) in blk.sub.iter_mut().enumerate() {
+        for k in 0..spec.stat_count() {
+            sub.s[0][k] = st.rows[k][j];
+        }
+    }
+    blk
+}
+
 /// Exact per-lane element counts of an `n`-element reduction (lane = global
 /// index % 3 for per-channel; everything in lane 0 for full).
 pub fn reduce_lane_counts(spec: ReduceSpec, n: usize) -> [usize; 3] {
@@ -297,20 +427,22 @@ pub fn reduce_finalize(spec: ReduceSpec, acc: &ReduceAcc, n: usize) -> Vec<f64> 
     out
 }
 
-/// The whole blocked-tree reduction over a materialized f64 buffer — the
-/// ORACLE's reduce path, and the bit-for-bit definition the fused engine's
-/// fold-while-reading tier reproduces without ever materializing `vals`.
+/// The whole striped blocked-tree reduction over a materialized f64 buffer —
+/// the ORACLE's reduce path, and the bit-for-bit definition the fused
+/// engine's fold-while-reading tier reproduces without ever materializing
+/// `vals` (whether it folds element-at-a-time or [`REDUCE_LANES`] stripes at
+/// once).
 pub fn reduce_slice(spec: ReduceSpec, vals: &[f64]) -> Vec<f64> {
     let partials: Vec<ReduceAcc> = vals
         .chunks(REDUCE_BLOCK)
         .enumerate()
         .map(|(bi, chunk)| {
-            let mut acc = reduce_acc_identity(spec);
+            let mut blk = reduce_block_identity(spec);
             let base = bi * REDUCE_BLOCK;
             for (j, &x) in chunk.iter().enumerate() {
-                reduce_acc_fold(spec, &mut acc, base + j, x);
+                reduce_block_fold(spec, &mut blk, base, j, x);
             }
-            acc
+            reduce_block_finish(spec, &blk)
         })
         .collect();
     reduce_finalize(spec, &reduce_combine_tree(spec, &partials), vals.len())
@@ -468,8 +600,68 @@ mod tests {
     #[test]
     fn reduce_block_is_pixel_aligned() {
         // per-channel lanes and 3-wide pixel groups must never straddle a
-        // block boundary
+        // block boundary; full blocks must have no stripe tail
         assert_eq!(REDUCE_BLOCK % 3, 0);
+        assert_eq!(REDUCE_BLOCK % REDUCE_LANES, 0);
+    }
+
+    #[test]
+    fn reduce_slice_is_the_striped_block_definition() {
+        use crate::ops::{ReduceAxis, ReduceSpec};
+        // order-sensitive data (1e16 absorbs 1.0 in any fold it joins): pin
+        // that reduce_slice stripes each block — element j into stripe
+        // j % REDUCE_LANES, stripes combined pairwise — by emulating that
+        // shape independently and demanding bit equality, while the naive
+        // sequential fold genuinely lands on different bits
+        let mut vals = vec![1.0f64; 19];
+        vals[0] = 1e16;
+        let spec = ReduceSpec::single(ReduceKind::Sum, ReduceAxis::Full);
+
+        let mut stripes = [0.0f64; REDUCE_LANES];
+        for (j, &x) in vals.iter().enumerate() {
+            stripes[j % REDUCE_LANES] += x;
+        }
+        let pair = |a: f64, b: f64| a + b;
+        let want = pair(
+            pair(pair(stripes[0], stripes[1]), pair(stripes[2], stripes[3])),
+            pair(pair(stripes[4], stripes[5]), pair(stripes[6], stripes[7])),
+        );
+        let got = reduce_slice(spec, &vals)[0];
+        assert_eq!(got.to_bits(), want.to_bits());
+        let naive: f64 = vals.iter().sum();
+        assert_ne!(got.to_bits(), naive.to_bits(), "striping must be observable here");
+    }
+
+    #[test]
+    fn stripe_rows_match_the_scalar_striped_fold_bit_for_bit() {
+        use crate::ops::{ReduceAxis, ReduceSpec};
+        // the SIMD staging path (fold aligned 8-wide chunks into register
+        // rows, scatter back, absorb the ragged tail scalar) must land on
+        // the same bits as folding every element through reduce_block_fold
+        let spec = ReduceSpec::pair(ReduceKind::Mean, ReduceKind::SumSq, ReduceAxis::Full);
+        let n = REDUCE_LANES * 5 + 3;
+        let vals: Vec<f64> = (0..n).map(|i| ((i * 37 + 11) % 101) as f64 * 0.37 - 12.5).collect();
+
+        let mut scalar = reduce_block_identity(spec);
+        for (j, &x) in vals.iter().enumerate() {
+            reduce_block_fold(spec, &mut scalar, 0, j, x);
+        }
+
+        let mut st = reduce_stripes_identity(spec);
+        let mut chunks = vals.chunks_exact(REDUCE_LANES);
+        for chunk in &mut chunks {
+            let mut xs = [0.0f64; REDUCE_LANES];
+            xs.copy_from_slice(chunk);
+            reduce_stripes_fold(spec, &mut st, &xs);
+        }
+        let mut blk = reduce_stripes_into_block(spec, &st);
+        let done = n - chunks.remainder().len();
+        for (j, &x) in chunks.remainder().iter().enumerate() {
+            reduce_block_fold(spec, &mut blk, 0, done + j, x);
+        }
+
+        assert_eq!(blk, scalar, "stripe rows and scalar striped fold must agree bitwise");
+        assert_eq!(reduce_block_finish(spec, &blk), reduce_block_finish(spec, &scalar));
     }
 
     #[test]

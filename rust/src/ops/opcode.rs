@@ -39,6 +39,72 @@ pub const ALL_OPCODES: [Opcode; 13] = [
     Opcode::Clamp01,
 ];
 
+/// Expand `$body` once per opcode variant with `$c` bound to that variant as
+/// a compile-time constant. This is the register-block trick: the dispatch
+/// `match` runs ONCE, outside whatever loop `$body` contains, so after
+/// inlining LLVM constant-folds the inner `apply` down to the one operation
+/// and the surrounding lane loop autovectorizes. The arms deliberately carry
+/// no semantics of their own — they only re-enter the scalar tables above
+/// with a known `self`.
+macro_rules! with_const_opcode {
+    ($op:expr, |$c:ident| $body:expr) => {
+        match $op {
+            Opcode::Nop => {
+                let $c = Opcode::Nop;
+                $body
+            }
+            Opcode::Add => {
+                let $c = Opcode::Add;
+                $body
+            }
+            Opcode::Sub => {
+                let $c = Opcode::Sub;
+                $body
+            }
+            Opcode::Mul => {
+                let $c = Opcode::Mul;
+                $body
+            }
+            Opcode::Div => {
+                let $c = Opcode::Div;
+                $body
+            }
+            Opcode::Abs => {
+                let $c = Opcode::Abs;
+                $body
+            }
+            Opcode::Neg => {
+                let $c = Opcode::Neg;
+                $body
+            }
+            Opcode::Min => {
+                let $c = Opcode::Min;
+                $body
+            }
+            Opcode::Max => {
+                let $c = Opcode::Max;
+                $body
+            }
+            Opcode::Sqrt => {
+                let $c = Opcode::Sqrt;
+                $body
+            }
+            Opcode::Exp => {
+                let $c = Opcode::Exp;
+                $body
+            }
+            Opcode::Log => {
+                let $c = Opcode::Log;
+                $body
+            }
+            Opcode::Clamp01 => {
+                let $c = Opcode::Clamp01;
+                $body
+            }
+        }
+    };
+}
+
 impl Opcode {
     /// Interpreter opcode (the lax.switch index in the InterpDPP kernel).
     pub fn code(self) -> i32 {
@@ -130,6 +196,60 @@ impl Opcode {
         }
     }
 
+    /// Apply this op to a fixed-width register block of f32 lanes — the
+    /// SIMD-shaped form of [`Opcode::apply_f32`]. The opcode dispatch is
+    /// hoisted OUTSIDE the lane loop (one `match`, then `N` applications of
+    /// a compile-time-known op), so the loop body is branch-free straight
+    /// arithmetic the autovectorizer turns into AVX2/NEON lanes. Each arm
+    /// re-invokes the scalar table with a constant `self`, so the semantics
+    /// stay defined exactly once and the two forms cannot drift
+    /// (bit-identity is pinned by `lane_blocks_match_scalar_bit_for_bit`).
+    #[inline(always)]
+    pub fn apply_f32_lanes<const N: usize>(self, lanes: &mut [f32; N], p: f32) {
+        with_const_opcode!(self, |op| {
+            for v in lanes.iter_mut() {
+                *v = op.apply_f32(*v, p);
+            }
+        });
+    }
+
+    /// f64 twin of [`Opcode::apply_f32_lanes`] — same hoisted dispatch, same
+    /// single-source scalar semantics ([`Opcode::apply`]) per lane.
+    #[inline(always)]
+    pub fn apply_f64_lanes<const N: usize>(self, lanes: &mut [f64; N], p: f64) {
+        with_const_opcode!(self, |op| {
+            for v in lanes.iter_mut() {
+                *v = op.apply(*v, p);
+            }
+        });
+    }
+
+    /// Slice form of [`Opcode::apply_f64_lanes`] for callers whose block
+    /// width is not a const generic (the lane-group and structured paths,
+    /// which stage whole pixel groups into one buffer). Same hoisted
+    /// dispatch, same per-element semantics as [`Opcode::apply`].
+    #[inline(always)]
+    pub fn apply_f64_slice(self, vals: &mut [f64], p: f64) {
+        with_const_opcode!(self, |op| {
+            for v in vals.iter_mut() {
+                *v = op.apply(*v, p);
+            }
+        });
+    }
+
+    /// Per-channel (packed RGB) slice form: element `base + j` takes its
+    /// parameter from `param[(base + j) % 3]` — the same global-index lane
+    /// rule as `ScalarOp::PerLane`, with the opcode dispatch hoisted out of
+    /// the element loop like the other blocked forms.
+    #[inline(always)]
+    pub fn apply_f64_slice_c3(self, vals: &mut [f64], base: usize, param: [f32; 3]) {
+        with_const_opcode!(self, |op| {
+            for (j, v) in vals.iter_mut().enumerate() {
+                *v = op.apply(*v, param[(base + j) % 3] as f64);
+            }
+        });
+    }
+
     /// Approximate per-element instruction cost (used by the roofline cost
     /// model and the GPU simulator; mul/add == 1 like the paper's Fig. 1).
     pub fn instr_cost(self) -> f64 {
@@ -196,6 +316,37 @@ mod tests {
                             "{op:?}({x},{p}): {expect} vs {narrow}"
                         );
                     }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lane_blocks_match_scalar_bit_for_bit() {
+        // the blocked forms are the SAME scalar table applied lane-by-lane:
+        // for every opcode, over a grid including negatives, zero, NaN-free
+        // extremes and values that overflow f32, each lane must equal the
+        // scalar apply bit-for-bit (NaN compared as NaN)
+        let xs = [-3.5f64, -1.0, -0.25, 0.0, 0.5, 1.0, 2.75, 200.0];
+        let ps = [-2.0f64, -0.5, 0.0, 0.5, 1.5, 3.0];
+        for op in ALL_OPCODES {
+            for &p in &ps {
+                let mut l64 = [0f64; 8];
+                l64.copy_from_slice(&xs);
+                op.apply_f64_lanes(&mut l64, p);
+                let mut s64 = xs;
+                op.apply_f64_slice(&mut s64, p);
+                let mut l32 = [0f32; 8];
+                for (d, &x) in l32.iter_mut().zip(&xs) {
+                    *d = x as f32;
+                }
+                op.apply_f32_lanes(&mut l32, p as f32);
+                for (j, &x) in xs.iter().enumerate() {
+                    let want = op.apply(x, p);
+                    assert_eq!(l64[j].to_bits(), want.to_bits(), "{op:?} f64 lane ({x},{p})");
+                    assert_eq!(s64[j].to_bits(), want.to_bits(), "{op:?} f64 slice ({x},{p})");
+                    let want32 = op.apply_f32(x as f32, p as f32);
+                    assert_eq!(l32[j].to_bits(), want32.to_bits(), "{op:?} f32 lane ({x},{p})");
                 }
             }
         }

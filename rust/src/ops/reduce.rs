@@ -72,6 +72,39 @@ impl ReduceKind {
         }
     }
 
+    /// Fold one `N`-wide block into `N` striped sub-accumulators: lane `j`
+    /// of `acc` folds lane `j` of `xs`, each with per-element semantics
+    /// IDENTICAL to [`ReduceKind::fold`] (bit-for-bit — pinned by
+    /// `fold_lanes_is_per_lane_fold`). The kind dispatch sits outside the
+    /// lane loop so the fold autovectorizes; determinism is unaffected
+    /// because which stripe an element lands in is a property of its block
+    /// offset, not of the arm that folds it.
+    #[inline(always)]
+    pub fn fold_lanes<const N: usize>(self, acc: &mut [f64; N], xs: &[f64; N]) {
+        match self {
+            ReduceKind::Sum | ReduceKind::Mean => {
+                for j in 0..N {
+                    acc[j] += xs[j];
+                }
+            }
+            ReduceKind::SumSq => {
+                for j in 0..N {
+                    acc[j] += xs[j] * xs[j];
+                }
+            }
+            ReduceKind::Min => {
+                for j in 0..N {
+                    acc[j] = acc[j].min(xs[j]);
+                }
+            }
+            ReduceKind::Max => {
+                for j in 0..N {
+                    acc[j] = acc[j].max(xs[j]);
+                }
+            }
+        }
+    }
+
     /// Combine two partial accumulators (the tree-combine step).
     #[inline(always)]
     pub fn combine(self, a: f64, b: f64) -> f64 {
@@ -210,6 +243,32 @@ mod tests {
         assert_eq!(ReduceKind::Max.fold(2.0, -1.0), 2.0);
         assert_eq!(ReduceKind::Mean.finalize(10.0, 4), 2.5);
         assert_eq!(ReduceKind::Sum.finalize(10.0, 4), 10.0);
+    }
+
+    #[test]
+    fn fold_lanes_is_per_lane_fold() {
+        // stripe j of the blocked fold must equal a scalar fold of the same
+        // elements, bit-for-bit, for every kind — including NaN skipping
+        let xs = [[1.5f64, -2.0, 0.0, f64::NAN], [3.25, 0.5, -7.0, 2.0]];
+        for kind in ALL_REDUCE_KINDS {
+            let mut blocked = [kind.identity(); 4];
+            let mut scalar = [kind.identity(); 4];
+            for row in &xs {
+                kind.fold_lanes(&mut blocked, row);
+                for (acc, &x) in scalar.iter_mut().zip(row) {
+                    *acc = kind.fold(*acc, x);
+                }
+            }
+            for j in 0..4 {
+                assert_eq!(
+                    blocked[j].to_bits(),
+                    scalar[j].to_bits(),
+                    "{kind:?} stripe {j}: {} vs {}",
+                    blocked[j],
+                    scalar[j]
+                );
+            }
+        }
     }
 
     #[test]

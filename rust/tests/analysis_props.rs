@@ -142,6 +142,38 @@ fn canonicalize_never_touches_seals_boundaries_or_geometry() {
 }
 
 #[test]
+fn predicted_lane_width_matches_the_compiled_plan() {
+    use fkl::analysis::predict_tier;
+    use fkl::fusion::HostPlan;
+    use fkl::ops::kernel::{LANE_WIDTH_F32, LANE_WIDTH_F64, REDUCE_LANES};
+    forall(80, |rng| {
+        // the static prediction and the plan the engine actually runs must
+        // name the SAME register-block width, over the whole generator
+        // vocabulary (dense/structured reads, split writes, reduce seals,
+        // scalar and lane-grouped bodies, all 5 dtype pairs)
+        let p = gen_pipeline(rng);
+        let plan = HostPlan::compile(&p);
+        let t = predict_tier(&p);
+        assert_eq!(
+            t.lane_width,
+            plan.vectorization(),
+            "FKL008 width must match the compiled plan ({:?})",
+            Signature::of(&p)
+        );
+        // and the plan's width follows the published rule
+        let want = if p.reduction().is_some() {
+            REDUCE_LANES as u8
+        } else if plan.accum() == fkl::fusion::HostAccum::F32 {
+            LANE_WIDTH_F32 as u8
+        } else {
+            LANE_WIDTH_F64 as u8
+        };
+        assert_eq!(plan.vectorization(), want, "width rule drifted");
+        assert!(t.lane_width > 1, "compiled plans never record the scalar arm");
+    });
+}
+
+#[test]
 fn lint_is_pure_and_deterministic() {
     forall(60, |rng| {
         let p = gen_pipeline(rng);

@@ -284,6 +284,34 @@ fn check_case(case: &Case, engines: &[HostFusedEngine; 3], ctx: &str) -> usize {
         assert_bits_eq(&outs[0], &want, &format!("{ctx}: vs oracle"));
     }
 
+    // scalar-vs-vectorized differential: the same case served under the
+    // engine's width-1 override (the pre-SIMD loops) across thread counts.
+    // Register blocking must be invisible — bit-for-bit on every
+    // f64-accumulated path (same per-element op sequence, data-addressed
+    // reduce stripes); the f32 fast arm is held to the oracle epsilon
+    assert!(plan.vectorization() > 1, "{ctx}: compiled plans always record a blocked width");
+    for threads in [1usize, 2, 8] {
+        let scalar_eng = HostFusedEngine::with_threads(threads).with_lane_width(1);
+        let got = scalar_eng.run(p, &case.input).expect("scalar arm must serve");
+        if case.narrow {
+            assert_eq!(got.shape(), outs[0].shape(), "{ctx}: scalar-arm shape");
+            let (g, w) = (got.to_f64_vec(), outs[0].to_f64_vec());
+            for (i, (a, b)) in g.iter().zip(&w).enumerate() {
+                if a.is_nan() && b.is_nan() {
+                    continue;
+                }
+                assert!(
+                    (a - b).abs() <= 0.05 + 1e-4 * b.abs(),
+                    "{ctx}: scalar vs vector f32 arm elem {i}: {a} vs {b}"
+                );
+            }
+        } else {
+            let sctx = format!("{ctx}: scalar arm t{threads} vs vector");
+            assert_bits_eq(&got, &outs[0], &sctx);
+        }
+        assert_eq!(scalar_eng.vector_runs(), 0, "{ctx}: the width-1 arm is not a vector run");
+    }
+
     // raw-vs-canonicalized: only bit-safety-proven rewrites apply, so the
     // canonical twin must serve BIT-EQUAL on every f64-accumulated path and
     // every thread count; the f32 fast arm reuses the oracle epsilon
@@ -333,6 +361,96 @@ fn differential_fuzz_random_chains_vs_oracle() {
     }
     // the corpus must EXERCISE the canonicalizer, not vacuously pass it
     assert!(rewrites_applied > 0, "fuzz corpus never fired a canonicalizer rewrite");
+    // and every production engine run took a register-blocked arm
+    for eng in &engines {
+        assert_eq!(eng.vector_runs(), eng.runs(), "every production run is vectorized");
+        assert!(eng.vector_width() >= 8, "f64 blocks are at least 8 wide");
+    }
+}
+
+#[test]
+fn directed_lane_width_edges() {
+    use fkl::ops::kernel::{LANE_WIDTH_F32, LANE_WIDTH_F64, REDUCE_LANES};
+    use fkl::ops::ReduceKind;
+    // buffer sizes that pin the blocked loops' edge behavior: one element
+    // below/at/above each register-block width (the tail is the whole
+    // buffer, empty, or a single element), sub-block buffers smaller than
+    // any block, and block-multiple ±1 sizes for the 24-lane group arm —
+    // every size through the full scalar-vs-vector check_case contract
+    let engines = [
+        HostFusedEngine::with_threads(1),
+        HostFusedEngine::with_threads(2),
+        HostFusedEngine::with_threads(8),
+    ];
+    let mut rng = Rng::new(0x51D3);
+    let mut sizes: Vec<usize> = vec![1, 2, 3];
+    for w in [LANE_WIDTH_F64, LANE_WIDTH_F32, REDUCE_LANES * 3] {
+        sizes.extend_from_slice(&[w - 1, w, w + 1]);
+    }
+    for &n in &sizes {
+        // f64 dense chain: the bitwise leg at every edge size
+        let chain = Pipeline::from_opcodes(
+            &[(Opcode::Mul, 1.7), (Opcode::Add, -0.3), (Opcode::Abs, 0.0)],
+            &[n],
+            1,
+            DType::F64,
+            DType::F64,
+        )
+        .unwrap();
+        let input = random_tensor(&mut rng, DType::F64, &[1, n]);
+        let ctx = format!("lane-edge f64 chain n={n}");
+        check_case(&Case { pipeline: chain, input, narrow: false }, &engines, &ctx);
+
+        // f32 fast arm (16-wide blocks): the epsilon leg
+        let chain32 = Pipeline::from_opcodes(
+            &[(Opcode::Mul, 1.1), (Opcode::Add, -0.3), (Opcode::Abs, 0.0)],
+            &[n],
+            1,
+            DType::F32,
+            DType::F32,
+        )
+        .unwrap();
+        let input = random_tensor(&mut rng, DType::F32, &[1, n]);
+        let ctx = format!("lane-edge f32 chain n={n}");
+        check_case(&Case { pipeline: chain32, input, narrow: true }, &engines, &ctx);
+
+        // full-axis pair reduce: sub-block sizes keep the stripe fast path
+        // tail-only; sizes at/above REDUCE_LANES engage it with a tail of
+        // n % REDUCE_LANES elements
+        let reduce = Pipeline::new(
+            vec![
+                IOp::Mem(MemOp::Read { dtype: DType::F64 }),
+                IOp::compute(Opcode::Mul, 1.000001),
+                IOp::Mem(MemOp::Reduce {
+                    spec: ReduceSpec::pair(ReduceKind::Mean, ReduceKind::SumSq, ReduceAxis::Full),
+                }),
+            ],
+            vec![n],
+            1,
+            DType::F64,
+            DType::F64,
+        )
+        .unwrap();
+        let input = random_tensor(&mut rng, DType::F64, &[1, n]);
+        let ctx = format!("lane-edge reduce n={n}");
+        check_case(&Case { pipeline: reduce, input, narrow: false }, &engines, &ctx);
+    }
+
+    // lane-group bodies block 8 PIXELS (24 f64 lanes): pixel counts one
+    // below/at/above the block width
+    for px in [LANE_WIDTH_F64 - 1, LANE_WIDTH_F64, LANE_WIDTH_F64 + 1] {
+        let ops = vec![
+            IOp::Mem(MemOp::Read { dtype: DType::F32 }),
+            IOp::CvtColor,
+            IOp::ComputeC3 { op: Opcode::Mul, param: [0.5, -1.25, 2.0] },
+            IOp::compute(Opcode::Add, 0.25),
+            IOp::Mem(MemOp::Write { dtype: DType::F64 }),
+        ];
+        let p = Pipeline::new(ops, vec![1, px, 3], 1, DType::F32, DType::F64).unwrap();
+        let input = random_tensor(&mut rng, DType::F32, &[1, 1, px, 3]);
+        let ctx = format!("lane-edge group px={px}");
+        check_case(&Case { pipeline: p, input, narrow: false }, &engines, &ctx);
+    }
 }
 
 #[test]
