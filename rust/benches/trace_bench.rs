@@ -1,0 +1,166 @@
+//! Tracing overhead benchmark: what does the span recorder cost when armed?
+//!
+//! Two configurations drive the same CMSD traffic through the service:
+//!
+//! * `tracing-off` — `ServiceConfig::tracing` is `None`, so the serving hot
+//!   path carries no tracing code at all (the `Option` pattern);
+//! * `tracing-on`  — a [`Tracer`] records the full span tree of every
+//!   request (seven fixed-size slot writes per request into the
+//!   preallocated ring — no allocation, one short mutex each).
+//!
+//! Writes `BENCH_trace.json` at the repo root and enforces the acceptance
+//! bar: tracing-armed throughput >= 0.95x tracing-off (a flight recorder
+//! that taxes the flight is a bad instrument).
+//!
+//! ```sh
+//! cargo bench --bench trace_bench
+//! FKL_BENCH_FAST=1 cargo bench --bench trace_bench   # trimmed
+//! FKL_BENCH_SOFT=1 ...                               # miss -> warning
+//! ```
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use fkl::chain::{Chain, ConvertTo, Div, Mul, Sub, F32, U8};
+use fkl::coordinator::{BatchPolicy, MetricsSnapshot, Service, ServiceConfig};
+use fkl::jsonlite::Value;
+use fkl::ops::Pipeline;
+use fkl::proplite::Rng;
+use fkl::tensor::Tensor;
+use fkl::trace::Tracer;
+
+fn pipeline() -> Pipeline {
+    Chain::read::<U8>(&[60, 120])
+        .map(ConvertTo)
+        .map(Mul(0.5))
+        .map(Sub(3.0))
+        .map(Div(1.7))
+        .cast::<F32>()
+        .write()
+        .into_pipeline()
+}
+
+struct Point {
+    label: &'static str,
+    rps: f64,
+    p50_us: u64,
+    p99_us: u64,
+    spans: usize,
+    metrics: MetricsSnapshot,
+}
+
+impl Point {
+    fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("label", Value::str(self.label)),
+            ("req_per_s", Value::num(self.rps)),
+            ("p50_us", Value::num(self.p50_us as f64)),
+            ("p99_us", Value::num(self.p99_us as f64)),
+            ("spans_recorded", Value::num(self.spans as f64)),
+            ("launches", Value::num(self.metrics.launches as f64)),
+            ("fusion_efficiency", Value::num(self.metrics.fusion_efficiency())),
+            ("tier_plan_us", Value::num(self.metrics.tier_time_us.plan as f64)),
+        ])
+    }
+}
+
+fn drive(label: &'static str, tracer: Option<Arc<Tracer>>, n: usize) -> Point {
+    let svc = Service::start(ServiceConfig {
+        artifact_dir: None,
+        queue_cap: 8192,
+        policy: BatchPolicy { max_batch: 50, window: Duration::from_micros(500) },
+        tracing: tracer.clone(),
+        ..ServiceConfig::default()
+    });
+    let p = pipeline();
+    let mut rng = Rng::new(3);
+    // warmup (backend construction + first launch)
+    let w = svc.submit(p.clone(), Tensor::from_u8(&rng.vec_u8(7200), &[1, 60, 120])).unwrap();
+    let _ = w.recv();
+
+    let t0 = Instant::now();
+    let mut pending = Vec::with_capacity(n);
+    for _ in 0..n {
+        let item = Tensor::from_u8(&rng.vec_u8(7200), &[1, 60, 120]);
+        if let Ok(rx) = svc.submit(p.clone(), item) {
+            pending.push(rx);
+        }
+    }
+    let mut ok = 0usize;
+    for rx in pending {
+        if rx.recv().map(|r| r.is_ok()).unwrap_or(false) {
+            ok += 1;
+        }
+    }
+    let rps = ok as f64 / t0.elapsed().as_secs_f64();
+    let m = svc.metrics().unwrap();
+    svc.shutdown();
+    assert_eq!(ok, n, "{label}: every request must be served");
+    let spans = tracer.map(|tr| tr.span_count()).unwrap_or(0);
+    Point { label, rps, p50_us: m.latency.p50, p99_us: m.latency.p99, spans, metrics: m }
+}
+
+fn main() {
+    let fast = std::env::var("FKL_BENCH_FAST").is_ok();
+    let n = if fast { 600 } else { 3000 };
+    println!("# trace_bench (CMSD 60x120 u8->f32, max_batch 50, window 500us, n={n})");
+    println!("{:>12} | {:>10} {:>8} {:>8} {:>8}", "config", "req/s", "p50_us", "p99_us", "spans");
+
+    // a ring big enough that nothing is overwritten mid-run: the recorder
+    // pays its full slot-write cost for every one of the ~7(n+1) spans
+    let tracer = Arc::new(Tracer::with_capacity(8 * (n + 8)));
+    let points = [drive("tracing-off", None, n), drive("tracing-on", Some(tracer.clone()), n)];
+    for pt in &points {
+        println!(
+            "{:>12} | {:>10.0} {:>8} {:>8} {:>8}",
+            pt.label, pt.rps, pt.p50_us, pt.p99_us, pt.spans
+        );
+    }
+    // every request closes at least root/admit/queue/tier/reply plus the
+    // launch (the plan span depends on which backend served)
+    assert!(
+        points[1].spans >= 6 * n,
+        "tracing-on recorded the whole session: {} spans",
+        points[1].spans
+    );
+
+    let baseline = points[0].rps;
+    let armed = points[1].rps;
+    let ratio = armed / baseline;
+    let accept_pass = ratio >= 0.95;
+    println!(
+        "\nacceptance: tracing-on/tracing-off = {ratio:.3}x (target >= 0.95x): {}",
+        if accept_pass { "PASS" } else { "FAIL" }
+    );
+
+    let report = Value::obj(vec![
+        ("bench", Value::str("trace")),
+        ("traffic", Value::str("CMSD 60x120 u8->f32 single-item requests")),
+        ("fast_mode", Value::Bool(fast)),
+        ("requests", Value::num(n as f64)),
+        (
+            "acceptance",
+            Value::obj(vec![
+                ("criterion", Value::str("tracing-armed >= 0.95x tracing-off throughput")),
+                ("ratio", Value::num(ratio)),
+                ("pass", Value::Bool(accept_pass)),
+            ]),
+        ),
+        ("series", Value::Arr(points.iter().map(Point::to_json).collect())),
+    ]);
+
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|p| p.join("BENCH_trace.json"))
+        .unwrap_or_else(|| "BENCH_trace.json".into());
+    std::fs::write(&root, report.to_json()).expect("write BENCH_trace.json");
+    println!("wrote {}", root.display());
+
+    // wall-clock ratios flake on shared CI runners; FKL_BENCH_SOFT keeps the
+    // signal as a warning there while local runs enforce the bar
+    if !accept_pass && std::env::var("FKL_BENCH_SOFT").is_ok() {
+        eprintln!("WARNING: acceptance criterion not met: {ratio:.3}x < 0.95x (soft mode)");
+        return;
+    }
+    assert!(accept_pass, "acceptance criterion not met: {ratio:.3}x < 0.95x");
+}

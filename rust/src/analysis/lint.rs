@@ -459,14 +459,25 @@ pub fn lint(p: &Pipeline) -> Vec<Diagnostic> {
     let t = predict_tier(p);
     let msg = match &t.artifact_refusal {
         Some(why) => format!(
-            "serves on the {} tier (host accumulator {:?}, lane width {}); \
+            "serves on the {} tier (host accumulator {:?}, lane width {}, \
+             {} fused bytes vs {} op-at-a-time, {:.1}x efficiency); \
              artifact tiers refuse: {why}",
-            t.tier, t.accum, t.lane_width
+            t.tier,
+            t.accum,
+            t.lane_width,
+            t.bytes_fused,
+            t.bytes_baseline,
+            t.fusion_efficiency()
         ),
         None => format!(
             "dense chain: artifact-tier eligible (registry decides exact/staticloop/\
-             interp; host fused fallback, accumulator {:?}, lane width {})",
-            t.accum, t.lane_width
+             interp; host fused fallback, accumulator {:?}, lane width {}, \
+             {} fused bytes vs {} op-at-a-time, {:.1}x efficiency)",
+            t.accum,
+            t.lane_width,
+            t.bytes_fused,
+            t.bytes_baseline,
+            t.fusion_efficiency()
         ),
     };
     out.push(Diagnostic::new(RuleCode::TierPrediction, Span { start: 0, end: body.len() }, msg));

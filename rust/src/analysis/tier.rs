@@ -66,6 +66,28 @@ pub struct TierPrediction {
     /// reduce tier. Predicted statically so lints report the SIMD shape a
     /// run would take without running it.
     pub lane_width: u8,
+    /// Bytes one FUSED pass of this pipeline moves (read + written) —
+    /// [`HostPlan::bytes_read`] + [`HostPlan::bytes_written`], static from
+    /// the IR.
+    pub bytes_fused: u64,
+    /// Bytes the op-at-a-time baseline would move
+    /// ([`Pipeline::baseline_bytes`]): every chain step re-reads and
+    /// re-writes its intermediate. `bytes_baseline / bytes_fused` is the
+    /// pipeline's predicted fusion efficiency — ≈(k+1)/2× for a dense
+    /// same-width chain of k ops.
+    pub bytes_baseline: u64,
+}
+
+impl TierPrediction {
+    /// Predicted fusion efficiency: baseline bytes over fused bytes (1.0
+    /// when the fused pass moves nothing — degenerate empty pipelines).
+    pub fn fusion_efficiency(&self) -> f64 {
+        if self.bytes_fused == 0 {
+            1.0
+        } else {
+            self.bytes_baseline as f64 / self.bytes_fused as f64
+        }
+    }
 }
 
 /// Predict the serving tier of `p` without running it.
@@ -73,6 +95,8 @@ pub fn predict_tier(p: &Pipeline) -> TierPrediction {
     let plan = HostPlan::compile(p);
     let accum = plan.accum();
     let lane_width = plan.vectorization();
+    let bytes_fused = (plan.bytes_read() + plan.bytes_written()) as u64;
+    let bytes_baseline = plan.bytes_baseline() as u64;
     if p.reduction().is_some() {
         let token = p.ops().last().map(IOp::sig_token).unwrap_or_default();
         return TierPrediction {
@@ -80,6 +104,8 @@ pub fn predict_tier(p: &Pipeline) -> TierPrediction {
             artifact_refusal: Some(format!("reduce seal: {token}")),
             accum,
             lane_width,
+            bytes_fused,
+            bytes_baseline,
         };
     }
     if p.has_structured_boundary() {
@@ -94,6 +120,8 @@ pub fn predict_tier(p: &Pipeline) -> TierPrediction {
             artifact_refusal: Some(format!("structured boundary: {token}")),
             accum,
             lane_width,
+            bytes_fused,
+            bytes_baseline,
         };
     }
     if let Some(op) = p.body().iter().find(|op| !matches!(op, IOp::Compute { .. })) {
@@ -102,9 +130,18 @@ pub fn predict_tier(p: &Pipeline) -> TierPrediction {
             artifact_refusal: Some(format!("not a scalar chain: {}", op.sig_token())),
             accum,
             lane_width,
+            bytes_fused,
+            bytes_baseline,
         };
     }
-    TierPrediction { tier: Tier::DenseChain, artifact_refusal: None, accum, lane_width }
+    TierPrediction {
+        tier: Tier::DenseChain,
+        artifact_refusal: None,
+        accum,
+        lane_width,
+        bytes_fused,
+        bytes_baseline,
+    }
 }
 
 #[cfg(test)]
@@ -171,5 +208,25 @@ mod tests {
         assert_eq!(t.tier, Tier::HostReduce);
         assert!(t.artifact_refusal.as_deref().unwrap().contains("reduce seal"));
         assert_eq!(t.lane_width, 8, "the reduce tier stripes 8 sub-accumulators");
+    }
+
+    #[test]
+    fn predicted_bytes_follow_the_ir_model() {
+        // chain-1 u8->f32, 16 elems: fused = 16 read + 64 written = 80;
+        // baseline has no intermediates, so efficiency is exactly 1.0
+        let k1 = Pipeline::from_opcodes(&[(Opcode::Mul, 2.0)], &[4, 4], 1, DType::U8, DType::F32)
+            .unwrap();
+        let t1 = predict_tier(&k1);
+        assert_eq!(t1.bytes_fused, 80);
+        assert_eq!(t1.bytes_baseline, 80);
+        assert!((t1.fusion_efficiency() - 1.0).abs() < 1e-12);
+
+        // chain-5: baseline re-materializes 4 intermediates (4 x 64 bytes
+        // each way collapses to 4 x 64 extra), 336/80 = 4.2x
+        let chain: Vec<(Opcode, f64)> = (0..5).map(|_| (Opcode::Mul, 2.0)).collect();
+        let k5 = Pipeline::from_opcodes(&chain, &[4, 4], 1, DType::U8, DType::F32).unwrap();
+        let t5 = predict_tier(&k5);
+        assert_eq!(t5.bytes_fused, 80, "fused bytes are chain-length invariant");
+        assert!((t5.fusion_efficiency() - 4.2).abs() < 1e-12);
     }
 }

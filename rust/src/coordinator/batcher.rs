@@ -32,6 +32,18 @@ pub struct PendingRequest<R> {
     /// rather than lag). `None` = serve whenever.
     pub deadline: Option<Instant>,
     pub reply: R,
+    /// Request id in the armed [`crate::trace::Tracer`]'s span space
+    /// (0 = tracing off / untraced request). Assigned at ingest.
+    pub trace_id: u64,
+    /// Breaker verdict code for this request's group
+    /// ([`crate::trace::TIER_STACKED`]-family), recorded by the scheduler
+    /// so the `tier` span can report WHY a tier was chosen. Only meaningful
+    /// when `trace_id != 0`.
+    pub trace_verdict: u64,
+    /// When ingest finished admitting this request — the boundary between
+    /// its `admit` and `queue` spans. Equal to `enqueued` for untraced
+    /// requests.
+    pub admitted: Instant,
 }
 
 impl<R> PendingRequest<R> {
@@ -139,12 +151,16 @@ mod tests {
             DType::F32,
         )
         .unwrap();
+        let enqueued = Instant::now();
         PendingRequest {
             pipeline,
             item: Tensor::from_f32(&[0.0; 4], &[1, 2, 2]),
-            enqueued: Instant::now(),
+            enqueued,
             deadline: None,
             reply: tag,
+            trace_id: 0,
+            trace_verdict: 0,
+            admitted: enqueued,
         }
     }
 

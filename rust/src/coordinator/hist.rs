@@ -1,0 +1,200 @@
+//! HDR-style log-bucketed histogram backing the latency/margin percentiles.
+//!
+//! The previous reservoir (fixed 4096 samples, overwrite-oldest) made p999
+//! meaningless under sustained load: a 1-in-10k outlier is overwritten long
+//! before anyone snapshots, so the tail silently reads as the body. This
+//! histogram keeps EVERY observation forever in 64 power-of-√2 buckets
+//! (~±41% value resolution — the HDR-histogram trade): counts are exact,
+//! quantiles are bucket-resolution, `max` and `mean` are tracked exactly on
+//! the side. Recording is two integer ops and an array increment — cheaper
+//! than the reservoir it replaces, and the memory is a fixed 64×8 bytes.
+
+/// Bucket count: boundaries at √2^i cover 1us..~2^31.5us (≈51 hours) in 64
+/// buckets; larger values clamp into the last bucket.
+pub const BUCKETS: usize = 64;
+
+const SQRT2_NUM: u128 = 1_414_214;
+const SQRT2_DEN: u128 = 1_000_000;
+
+/// Log-bucketed histogram of microsecond values.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LogHistogram {
+    counts: [u64; BUCKETS],
+    count: u64,
+    sum: u128,
+    max: u64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LogHistogram {
+    pub fn new() -> LogHistogram {
+        LogHistogram { counts: [0; BUCKETS], count: 0, sum: 0, max: 0 }
+    }
+
+    /// Bucket index of `v`: `floor(2·log2(v))`, i.e. boundaries at powers
+    /// of √2 (0 and 1 share bucket 0).
+    pub fn bucket_of(v: u64) -> usize {
+        if v < 2 {
+            return 0;
+        }
+        let msb = 63 - v.leading_zeros() as usize;
+        let base = 1u64 << msb;
+        // the half-step boundary between 2^msb and 2^(msb+1) sits at
+        // 2^msb·√2; integer-compare against the √2 rational
+        let upper_half = (v as u128) * SQRT2_DEN >= (base as u128) * SQRT2_NUM;
+        (2 * msb + upper_half as usize).min(BUCKETS - 1)
+    }
+
+    /// Lower bound (us) of bucket `i` — the value a quantile inside that
+    /// bucket reports.
+    pub fn bucket_floor(i: usize) -> u64 {
+        if i == 0 {
+            return 0;
+        }
+        let base = 1u64 << (i / 2);
+        if i % 2 == 0 {
+            base
+        } else {
+            ((base as u128 * SQRT2_NUM) / SQRT2_DEN) as u64
+        }
+    }
+
+    pub fn record(&mut self, v_us: u64) {
+        self.counts[Self::bucket_of(v_us)] += 1;
+        self.count += 1;
+        self.sum += v_us as u128;
+        if v_us > self.max {
+            self.max = v_us;
+        }
+    }
+
+    /// Total observations (never capped — the histogram forgets nothing).
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Exact maximum observed value.
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Exact mean (sum and count are tracked exactly).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Value at quantile `q` (0..=1), at bucket resolution: the floor of the
+    /// bucket holding the rank, clamped to the exact max. Matches the
+    /// rank rule of `LatencyStats::from_sorted` (`floor((n-1)·q)`).
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((self.count - 1) as f64 * q.clamp(0.0, 1.0)).floor() as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen > rank {
+                return Self::bucket_floor(i).min(self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Raw bucket counts (dashboards / JSON export).
+    pub fn bucket_counts(&self) -> &[u64; BUCKETS] {
+        &self.counts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_are_monotone_and_cover_u64() {
+        let mut last = 0;
+        for v in [0u64, 1, 2, 3, 5, 8, 23, 64, 91, 1000, 1 << 20, 1 << 40, u64::MAX] {
+            let b = LogHistogram::bucket_of(v);
+            assert!(b >= last, "bucket_of must be monotone (v={v})");
+            assert!(b < BUCKETS);
+            last = b;
+        }
+        // every value sits at or above its bucket's floor and below (or at
+        // the integer floor of) the next boundary
+        for v in [1u64, 7, 45, 46, 50, 1023, 1024, 123_456_789] {
+            let b = LogHistogram::bucket_of(v);
+            assert!(LogHistogram::bucket_floor(b) <= v, "floor({b}) > {v}");
+            if b + 1 < BUCKETS {
+                assert!(LogHistogram::bucket_floor(b + 1) >= v, "v={v} beyond its bucket");
+            }
+        }
+    }
+
+    #[test]
+    fn bucket_resolution_is_within_sqrt2() {
+        // power-of-√2 boundaries: a quantile under-reports by at most ~41%
+        // (integer floors distort the tiny buckets below 16us; skip them)
+        for i in 8..BUCKETS - 1 {
+            let lo = LogHistogram::bucket_floor(i) as f64;
+            let hi = LogHistogram::bucket_floor(i + 1) as f64;
+            assert!(hi / lo < 1.5, "bucket {i} wider than √2: {lo}..{hi}");
+        }
+    }
+
+    #[test]
+    fn exact_max_mean_count_survive_bucketing() {
+        let mut h = LogHistogram::new();
+        for v in [10u64, 20, 30, 1_000_000] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.max(), 1_000_000, "max is exact, not bucket-rounded");
+        assert!((h.mean() - 250_015.0).abs() < 1e-9, "mean is exact");
+    }
+
+    #[test]
+    fn tail_quantiles_keep_rare_outliers() {
+        // THE regression the histogram exists for: a 1-in-10k outlier must
+        // survive 100k observations (the 4096-sample reservoir overwrote it)
+        let mut h = LogHistogram::new();
+        for i in 0..100_000u64 {
+            h.record(if i % 10_000 == 0 { 1_000_000 } else { 50 });
+        }
+        assert_eq!(h.count(), 100_000, "nothing is ever dropped");
+        assert_eq!(h.max(), 1_000_000, "the outlier is still visible");
+        // 10 outliers occupy ranks 99990..99999: any quantile whose rank
+        // reaches them reports the outlier bucket (q=0.99995 -> rank 99994)
+        assert!(h.quantile(0.99995) >= 500_000, "tail={}", h.quantile(0.99995));
+        assert!(h.quantile(1.0) >= 500_000);
+        // body quantiles stay in the body bucket (50us floor is 45us)
+        assert!(h.quantile(0.5) <= 50 && h.quantile(0.5) >= 32);
+    }
+
+    #[test]
+    fn p999_separates_a_slow_tail_from_the_body() {
+        let mut h = LogHistogram::new();
+        for i in 0..100_000u64 {
+            // 0.2% of requests are 100x slower
+            h.record(if i % 500 == 0 { 5_000 } else { 50 });
+        }
+        assert!(h.quantile(0.999) >= 4_000, "p999={}", h.quantile(0.999));
+        assert!(h.quantile(0.99) <= 64, "p99 stays in the body");
+    }
+
+    #[test]
+    fn empty_histogram_reads_zero() {
+        let h = LogHistogram::new();
+        assert_eq!((h.count(), h.max(), h.quantile(0.999)), (0, 0, 0));
+        assert_eq!(h.mean(), 0.0);
+    }
+}

@@ -1,23 +1,25 @@
 //! Coordinator metrics: throughput, latency percentiles, fusion counters,
-//! and the fault-tolerance surface (deadlines, breakers, isolated panics).
+//! fusion-efficiency byte accounting, per-tier time, and the
+//! fault-tolerance surface (deadlines, breakers, isolated panics).
 
 use std::time::Duration;
 
-use crate::coordinator::BreakerSnapshot;
+use crate::coordinator::hist::LogHistogram;
+use crate::coordinator::{BreakerBoard, BreakerSnapshot};
 use crate::fusion::PlannerStats;
+use crate::jsonlite::Value;
 
-/// Online latency reservoir (fixed capacity, overwrite-oldest) + counters.
-#[derive(Debug)]
+/// Latency/margin histograms (log-bucketed, nothing ever dropped) + counters.
+#[derive(Debug, Default)]
 pub struct Metrics {
-    latencies_us: Vec<u64>,
-    cursor: usize,
-    filled: bool,
-    /// Deadline-margin reservoir: remaining time at completion for requests
-    /// that carried a deadline (small margins = the service is flying close
-    /// to its shed threshold).
-    margins_us: Vec<u64>,
-    margin_cursor: usize,
-    margin_filled: bool,
+    latency: LogHistogram,
+    /// Deadline-margin distribution: remaining time at completion for
+    /// requests that carried a deadline (small margins = the service is
+    /// flying close to its shed threshold).
+    margin: LogHistogram,
+    /// Wall-clock spent inside each serve tier (accumulated by the service
+    /// loop around every launch; plan time is the cache probe/compile cost).
+    pub tier_times: TierTimes,
     pub completed: u64,
     pub rejected: u64,
     pub failed: u64,
@@ -67,66 +69,24 @@ pub struct Metrics {
     pub planner: PlannerStats,
 }
 
-impl Default for Metrics {
-    fn default() -> Self {
-        Self::with_capacity(4096)
-    }
-}
-
 impl Metrics {
-    pub fn with_capacity(cap: usize) -> Metrics {
-        Metrics {
-            latencies_us: vec![0; cap.max(1)],
-            cursor: 0,
-            filled: false,
-            margins_us: vec![0; cap.max(1)],
-            margin_cursor: 0,
-            margin_filled: false,
-            completed: 0,
-            rejected: 0,
-            failed: 0,
-            expired: 0,
-            shed: 0,
-            launch_panics: 0,
-            supervisor_restarts: 0,
-            degraded: None,
-            ewma_item_us: 0.0,
-            launches: 0,
-            batched_items: 0,
-            padded_planes: 0,
-            unfused_fallbacks: 0,
-            divergent_windows: 0,
-            divergent_items: 0,
-            divergent_work_elems: 0,
-            divergent_padded_elems: 0,
-            lints_emitted: 0,
-            rewrites_applied: 0,
-            canonical_cache_hits: 0,
-            planner: PlannerStats::default(),
-        }
+    pub fn new() -> Metrics {
+        Metrics::default()
     }
 
     /// Record one request's queue-to-reply latency. Failed requests record
     /// too — the slow-failure tail must not vanish from the distribution —
     /// so this deliberately does NOT bump `completed` (callers count
-    /// completion/failure explicitly).
+    /// completion/failure explicitly). Backed by a log-bucketed histogram
+    /// that keeps EVERY observation, so p999 reflects real 1-in-10k tails
+    /// instead of whatever survived a bounded reservoir.
     pub fn observe_latency(&mut self, d: Duration) {
-        self.latencies_us[self.cursor] = d.as_micros() as u64;
-        self.cursor += 1;
-        if self.cursor == self.latencies_us.len() {
-            self.cursor = 0;
-            self.filled = true;
-        }
+        self.latency.record(d.as_micros() as u64);
     }
 
     /// Record the margin a deadline-carrying request completed with.
     pub fn observe_margin(&mut self, remaining: Duration) {
-        self.margins_us[self.margin_cursor] = remaining.as_micros() as u64;
-        self.margin_cursor += 1;
-        if self.margin_cursor == self.margins_us.len() {
-            self.margin_cursor = 0;
-            self.margin_filled = true;
-        }
+        self.margin.record(remaining.as_micros() as u64);
     }
 
     /// Fold one launch's cost into the per-item EWMA (admission control's
@@ -143,13 +103,11 @@ impl Metrics {
         };
     }
 
-    pub fn snapshot(&self) -> MetricsSnapshot {
-        let n = if self.filled { self.latencies_us.len() } else { self.cursor };
-        let mut lat: Vec<u64> = self.latencies_us[..n].to_vec();
-        lat.sort_unstable();
-        let m = if self.margin_filled { self.margins_us.len() } else { self.margin_cursor };
-        let mut margins: Vec<u64> = self.margins_us[..m].to_vec();
-        margins.sort_unstable();
+    /// Point-in-time snapshot. The breaker board is part of the signature —
+    /// this is the ONE seam where breaker state joins the counters, so a
+    /// snapshot can never carry zero-filled breaker fields waiting for a
+    /// caller to remember to patch them in.
+    pub fn snapshot(&self, breakers: &BreakerBoard) -> MetricsSnapshot {
         MetricsSnapshot {
             completed: self.completed,
             rejected: self.rejected,
@@ -171,13 +129,39 @@ impl Metrics {
             lints_emitted: self.lints_emitted,
             rewrites_applied: self.rewrites_applied,
             canonical_cache_hits: self.canonical_cache_hits,
+            bytes_read: self.planner.bytes_read,
+            bytes_written: self.planner.bytes_written,
+            bytes_baseline: self.planner.bytes_baseline,
+            tier_time_us: self.tier_times,
             planner: self.planner.clone(),
-            latency: LatencyStats::from_sorted(&lat),
-            deadline_margin: LatencyStats::from_sorted(&margins),
-            breaker_trips: 0,
-            breaker_rejected: 0,
-            breakers: Vec::new(),
+            latency: LatencyStats::from_histogram(&self.latency),
+            deadline_margin: LatencyStats::from_histogram(&self.margin),
+            breaker_trips: breakers.trips(),
+            breaker_rejected: breakers.rejected(),
+            breakers: breakers.snapshot(),
         }
+    }
+}
+
+/// Wall-clock microseconds the service loop spent inside each serve tier,
+/// plus plan-cache probe/compile time — the per-tier breakdown of where a
+/// serving window's latency went.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TierTimes {
+    /// Stacked-HF launches (identical requests, one launch).
+    pub stacked: u64,
+    /// Divergent-HF window passes (mixed signatures, one pass).
+    pub divergent: u64,
+    /// Per-item serves (lone leftovers, probes).
+    pub per_item: u64,
+    /// Plan-cache probes and compiles (hit or miss).
+    pub plan: u64,
+}
+
+impl TierTimes {
+    /// Total time across all tiers (µs).
+    pub fn total(&self) -> u64 {
+        self.stacked + self.divergent + self.per_item + self.plan
     }
 }
 
@@ -187,12 +171,17 @@ pub struct LatencyStats {
     pub p50: u64,
     pub p95: u64,
     pub p99: u64,
+    /// Meaningful because the backing histogram never drops observations —
+    /// a 1-in-10k outlier survives any number of subsequent samples.
+    pub p999: u64,
     pub max: u64,
     pub mean: f64,
     pub count: usize,
 }
 
 impl LatencyStats {
+    /// Exact percentiles from a fully-materialized sorted sample (tests,
+    /// benches — places that keep every sample anyway).
     pub fn from_sorted(sorted_us: &[u64]) -> LatencyStats {
         if sorted_us.is_empty() {
             return LatencyStats::default();
@@ -203,10 +192,40 @@ impl LatencyStats {
             p50: q(0.50),
             p95: q(0.95),
             p99: q(0.99),
+            p999: q(0.999),
             max: sorted_us[n - 1],
             mean: sorted_us.iter().sum::<u64>() as f64 / n as f64,
             count: n,
         }
+    }
+
+    /// Percentiles at histogram (√2-bucket) resolution; max/mean/count are
+    /// exact. Same rank rule as [`LatencyStats::from_sorted`].
+    pub fn from_histogram(h: &LogHistogram) -> LatencyStats {
+        if h.count() == 0 {
+            return LatencyStats::default();
+        }
+        LatencyStats {
+            p50: h.quantile(0.50),
+            p95: h.quantile(0.95),
+            p99: h.quantile(0.99),
+            p999: h.quantile(0.999),
+            max: h.max(),
+            mean: h.mean(),
+            count: h.count() as usize,
+        }
+    }
+
+    fn to_json(self) -> Value {
+        Value::obj(vec![
+            ("p50", Value::num(self.p50 as f64)),
+            ("p95", Value::num(self.p95 as f64)),
+            ("p99", Value::num(self.p99 as f64)),
+            ("p999", Value::num(self.p999 as f64)),
+            ("max", Value::num(self.max as f64)),
+            ("mean", Value::num(self.mean)),
+            ("count", Value::num(self.count as f64)),
+        ])
     }
 }
 
@@ -237,6 +256,14 @@ pub struct MetricsSnapshot {
     pub rewrites_applied: u64,
     /// Admissions whose canonical form matched an earlier canonical stream.
     pub canonical_cache_hits: u64,
+    /// Bytes the fused passes actually read (host-plan byte model).
+    pub bytes_read: u64,
+    /// Bytes the fused passes actually wrote.
+    pub bytes_written: u64,
+    /// Bytes an op-at-a-time execution of the same traffic would have moved.
+    pub bytes_baseline: u64,
+    /// Wall-clock spent per serve tier (µs).
+    pub tier_time_us: TierTimes,
     pub planner: PlannerStats,
     pub latency: LatencyStats,
     /// Remaining-time-at-completion distribution for deadline requests.
@@ -285,16 +312,121 @@ impl MetricsSnapshot {
         crate::fusion::occupancy_ratio(self.divergent_work_elems, self.divergent_padded_elems)
     }
 
+    /// Measured fusion efficiency: bytes an op-at-a-time baseline would
+    /// have moved over bytes the fused passes actually moved. ≈(k+1)/2 for
+    /// a same-width dense chain of k ops (each fused pass moves 2n bytes
+    /// where the baseline moves (k+1)n); 1.0 before any traffic.
+    pub fn fusion_efficiency(&self) -> f64 {
+        let actual = self.bytes_read + self.bytes_written;
+        if actual == 0 {
+            1.0
+        } else {
+            self.bytes_baseline as f64 / actual as f64
+        }
+    }
+
     /// The breaker snapshot for one stream key, if that stream has ever
     /// tripped (convenience for tests and dashboards).
     pub fn breaker(&self, key: &str) -> Option<&BreakerSnapshot> {
         self.breakers.iter().find(|b| b.key == key)
+    }
+
+    /// Machine-readable export: every counter, the latency/margin stats,
+    /// per-tier time, byte accounting, planner tiers and breakers as one
+    /// jsonlite object (`fkl serve --metrics-json`, `fkl metrics --demo`).
+    pub fn to_json(&self) -> Value {
+        let n = |v: u64| Value::num(v as f64);
+        let breakers: Vec<Value> = self
+            .breakers
+            .iter()
+            .map(|b| {
+                Value::obj(vec![
+                    ("key", Value::str(&b.key)),
+                    ("state", Value::str(&format!("{:?}", b.state))),
+                    ("tier", Value::str(&format!("{:?}", b.tier))),
+                    ("consecutive_failures", Value::num(b.consecutive_failures as f64)),
+                    ("trips", n(b.trips)),
+                    ("rejected", n(b.rejected)),
+                ])
+            })
+            .collect();
+        Value::obj(vec![
+            ("completed", n(self.completed)),
+            ("rejected", n(self.rejected)),
+            ("failed", n(self.failed)),
+            ("expired", n(self.expired)),
+            ("shed", n(self.shed)),
+            ("launch_panics", n(self.launch_panics)),
+            ("supervisor_restarts", n(self.supervisor_restarts)),
+            (
+                "degraded",
+                match &self.degraded {
+                    Some(msg) => Value::str(msg),
+                    None => Value::Null,
+                },
+            ),
+            ("est_item_us", Value::num(self.est_item_us)),
+            ("launches", n(self.launches)),
+            ("batched_items", n(self.batched_items)),
+            ("padded_planes", n(self.padded_planes)),
+            ("unfused_fallbacks", n(self.unfused_fallbacks)),
+            ("divergent_windows", n(self.divergent_windows)),
+            ("divergent_items", n(self.divergent_items)),
+            ("divergent_work_elems", n(self.divergent_work_elems)),
+            ("divergent_padded_elems", n(self.divergent_padded_elems)),
+            ("lints_emitted", n(self.lints_emitted)),
+            ("rewrites_applied", n(self.rewrites_applied)),
+            ("canonical_cache_hits", n(self.canonical_cache_hits)),
+            ("bytes_read", n(self.bytes_read)),
+            ("bytes_written", n(self.bytes_written)),
+            ("bytes_baseline", n(self.bytes_baseline)),
+            ("fusion_efficiency", Value::num(self.fusion_efficiency())),
+            ("mean_batch", Value::num(self.mean_batch())),
+            ("fused_coverage", Value::num(self.fused_coverage())),
+            ("divergent_occupancy", Value::num(self.divergent_occupancy())),
+            (
+                "tier_time_us",
+                Value::obj(vec![
+                    ("stacked", n(self.tier_time_us.stacked)),
+                    ("divergent", n(self.tier_time_us.divergent)),
+                    ("per_item", n(self.tier_time_us.per_item)),
+                    ("plan", n(self.tier_time_us.plan)),
+                ]),
+            ),
+            ("latency_us", self.latency.to_json()),
+            ("deadline_margin_us", self.deadline_margin.to_json()),
+            (
+                "planner",
+                Value::obj(vec![
+                    ("exact", Value::num(self.planner.exact as f64)),
+                    ("staticloop", Value::num(self.planner.staticloop as f64)),
+                    ("interp", Value::num(self.planner.interp as f64)),
+                    ("unfused", Value::num(self.planner.unfused as f64)),
+                    ("host", Value::num(self.planner.host as f64)),
+                    ("unsupported", Value::num(self.planner.unsupported as f64)),
+                    ("structured", Value::num(self.planner.structured as f64)),
+                    ("reduction", Value::num(self.planner.reduction as f64)),
+                    ("divergent", Value::num(self.planner.divergent as f64)),
+                    ("plan_cache", Value::num(self.planner.plan_cache as f64)),
+                    ("vectorized", Value::num(self.planner.vectorized as f64)),
+                    ("vector_width", Value::num(self.planner.vector_width as f64)),
+                ]),
+            ),
+            ("breaker_trips", n(self.breaker_trips)),
+            ("breaker_rejected", n(self.breaker_rejected)),
+            ("breakers", Value::Arr(breakers)),
+        ])
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::BreakerBoard;
+
+    fn board() -> BreakerBoard {
+        BreakerBoard::new(crate::coordinator::BreakerPolicy::default())
+    }
 
     #[test]
     fn percentiles_from_sorted() {
@@ -303,35 +435,53 @@ mod tests {
         assert_eq!(s.p50, 50);
         assert_eq!(s.p95, 95);
         assert_eq!(s.p99, 99);
+        assert_eq!(s.p999, 99, "floor((n-1)·q) rank rule");
         assert_eq!(s.max, 100);
         assert!((s.mean - 50.5).abs() < 1e-9);
     }
 
     #[test]
-    fn reservoir_wraps() {
-        let mut m = Metrics::with_capacity(4);
+    fn histogram_never_drops_observations() {
+        // the reservoir this replaced capped at `cap` samples; the
+        // histogram counts everything
+        let mut m = Metrics::default();
         for i in 0..10 {
             m.observe_latency(Duration::from_micros(i));
         }
-        let s = m.snapshot();
+        let s = m.snapshot(&board());
         assert_eq!(s.completed, 0, "latency observation no longer implies completion");
-        assert_eq!(s.latency.count, 4, "reservoir holds last `cap` samples");
+        assert_eq!(s.latency.count, 10, "every observation is retained");
+    }
+
+    #[test]
+    fn outlier_survives_sustained_load_through_public_path() {
+        // satellite regression: a 1-in-10k tail must survive 100k
+        // observations THROUGH Metrics (not just the raw histogram)
+        let mut m = Metrics::default();
+        for i in 0..100_000u64 {
+            m.observe_latency(Duration::from_micros(if i % 10_000 == 0 { 1_000_000 } else { 50 }));
+        }
+        let s = m.snapshot(&board());
+        assert_eq!(s.latency.count, 100_000);
+        assert_eq!(s.latency.max, 1_000_000, "outlier visible after 100k samples");
+        assert!(s.latency.p999 <= 64, "10 outliers sit above p999");
+        assert!(s.latency.p50 >= 32 && s.latency.p50 <= 50);
     }
 
     #[test]
     fn empty_snapshot_is_zero() {
         let m = Metrics::default();
-        assert_eq!(m.snapshot().latency, LatencyStats::default());
-        assert_eq!(m.snapshot().deadline_margin, LatencyStats::default());
+        assert_eq!(m.snapshot(&board()).latency, LatencyStats::default());
+        assert_eq!(m.snapshot(&board()).deadline_margin, LatencyStats::default());
     }
 
     #[test]
-    fn margin_reservoir_is_independent_of_latency() {
-        let mut m = Metrics::with_capacity(8);
+    fn margin_histogram_is_independent_of_latency() {
+        let mut m = Metrics::default();
         m.observe_latency(Duration::from_micros(100));
         m.observe_margin(Duration::from_micros(40));
         m.observe_margin(Duration::from_micros(60));
-        let s = m.snapshot();
+        let s = m.snapshot(&board());
         assert_eq!(s.latency.count, 1);
         assert_eq!(s.deadline_margin.count, 2);
         assert_eq!(s.deadline_margin.max, 60);
@@ -358,9 +508,32 @@ mod tests {
         m.launch_panics = 1;
         m.supervisor_restarts = 4;
         m.degraded = Some("registry unavailable".into());
-        let s = m.snapshot();
+        let s = m.snapshot(&board());
         assert_eq!((s.expired, s.shed, s.launch_panics, s.supervisor_restarts), (3, 2, 1, 4));
         assert_eq!(s.degraded.as_deref(), Some("registry unavailable"));
+    }
+
+    #[test]
+    fn breaker_state_joins_through_the_snapshot_seam() {
+        use crate::coordinator::BreakerPolicy;
+        // drive a board to a trip through its public API, then check the
+        // snapshot carries the breaker fields WITHOUT any caller patching
+        let mut b = BreakerBoard::new(BreakerPolicy {
+            failure_threshold: 2,
+            ..BreakerPolicy::default()
+        });
+        b.admit("s");
+        b.record_failure("s");
+        b.admit("s");
+        b.record_failure("s");
+        b.note_rejected("s", 3);
+        assert!(b.trips() >= 1, "two failures at threshold 2 demote");
+        let m = Metrics::default();
+        let s = m.snapshot(&b);
+        assert_eq!(s.breaker_trips, b.trips());
+        assert!(s.breaker_trips >= 1, "trip visible through Metrics::snapshot");
+        assert_eq!(s.breaker_rejected, 3);
+        assert!(s.breaker("s").is_some(), "per-stream snapshot rides along");
     }
 
     #[test]
@@ -368,7 +541,7 @@ mod tests {
         let mut m = Metrics::default();
         m.launches = 4;
         m.batched_items = 100;
-        assert_eq!(m.snapshot().mean_batch(), 25.0);
+        assert_eq!(m.snapshot(&board()).mean_batch(), 25.0);
     }
 
     #[test]
@@ -378,12 +551,12 @@ mod tests {
         m.divergent_items = 9;
         m.divergent_work_elems = 900;
         m.divergent_padded_elems = 100;
-        let s = m.snapshot();
+        let s = m.snapshot(&board());
         assert_eq!((s.divergent_windows, s.divergent_items), (2, 9));
         assert_eq!(s.mean_divergent_window(), 4.5);
         assert!((s.divergent_occupancy() - 0.9).abs() < 1e-12);
         // nothing divergent yet: occupancy defaults to 1, width to 0
-        let empty = Metrics::default().snapshot();
+        let empty = Metrics::default().snapshot(&board());
         assert_eq!(empty.divergent_occupancy(), 1.0);
         assert_eq!(empty.mean_divergent_window(), 0.0);
     }
@@ -395,12 +568,52 @@ mod tests {
         m.planner.exact = 6;
         m.planner.host = 1;
         m.planner.unfused = 3;
-        let s = m.snapshot();
+        let s = m.snapshot(&board());
         assert_eq!(s.unfused_fallbacks, 3);
         assert_eq!(s.planner.fused_total(), 7);
         assert_eq!(s.planner.total(), 10);
         assert!((s.fused_coverage() - 0.7).abs() < 1e-12);
         // empty snapshot: coverage defaults to 1 (nothing has fallen back)
-        assert_eq!(Metrics::default().snapshot().fused_coverage(), 1.0);
+        assert_eq!(Metrics::default().snapshot(&board()).fused_coverage(), 1.0);
+    }
+
+    #[test]
+    fn fusion_efficiency_is_baseline_over_actual() {
+        let mut m = Metrics::default();
+        // chain-5 dense f32: baseline 6n, fused 2n -> 3.0
+        m.planner.bytes_read = 1000;
+        m.planner.bytes_written = 1000;
+        m.planner.bytes_baseline = 6000;
+        let s = m.snapshot(&board());
+        assert_eq!((s.bytes_read, s.bytes_written, s.bytes_baseline), (1000, 1000, 6000));
+        assert!((s.fusion_efficiency() - 3.0).abs() < 1e-12);
+        // no traffic: ratio reads 1.0, not NaN
+        assert_eq!(Metrics::default().snapshot(&board()).fusion_efficiency(), 1.0);
+    }
+
+    #[test]
+    fn snapshot_round_trips_through_json() {
+        let mut m = Metrics::default();
+        m.completed = 7;
+        m.shed = 1;
+        m.planner.bytes_read = 10;
+        m.planner.bytes_written = 10;
+        m.planner.bytes_baseline = 50;
+        m.tier_times.stacked = 120;
+        m.tier_times.plan = 30;
+        m.observe_latency(Duration::from_micros(500));
+        let s = m.snapshot(&board());
+        let text = s.to_json().to_json();
+        let v = crate::jsonlite::parse(&text).expect("metrics JSON parses");
+        assert_eq!(v["completed"].as_f64(), Some(7.0));
+        assert_eq!(v["shed"].as_f64(), Some(1.0));
+        assert_eq!(v["bytes_baseline"].as_f64(), Some(50.0));
+        assert_eq!(v["fusion_efficiency"].as_f64(), Some(2.5));
+        assert_eq!(v["tier_time_us"]["stacked"].as_f64(), Some(120.0));
+        assert_eq!(v["tier_time_us"]["plan"].as_f64(), Some(30.0));
+        assert_eq!(v["latency_us"]["count"].as_f64(), Some(1.0));
+        assert_eq!(v["latency_us"]["max"].as_f64(), Some(500.0));
+        assert!(v["latency_us"]["p999"].as_f64().is_some());
+        assert_eq!(v["degraded"], crate::jsonlite::Value::Null);
     }
 }

@@ -22,6 +22,7 @@
 
 mod batcher;
 mod breaker;
+mod hist;
 mod metrics;
 mod service;
 
@@ -29,5 +30,6 @@ pub use batcher::{BatchPolicy, Batcher, PendingRequest, Popped};
 pub use breaker::{
     Admission, BreakerBoard, BreakerPolicy, BreakerSnapshot, BreakerState, ServeTier,
 };
-pub use metrics::{LatencyStats, Metrics, MetricsSnapshot};
+pub use hist::{LogHistogram, BUCKETS};
+pub use metrics::{LatencyStats, Metrics, MetricsSnapshot, TierTimes};
 pub use service::{EngineSelect, ServeError, Service, ServiceConfig, SubmitError};

@@ -42,6 +42,7 @@ use crate::faults::{FaultInjector, FaultPlan, FaultTier};
 use crate::fusion::{hfusion, PlannerStats};
 use crate::ops::{Pipeline, Signature};
 use crate::tensor::Tensor;
+use crate::trace::{self, SpanRecord, Stage, Tracer, NO_PARENT};
 
 /// Reply slot of one request.
 type ReplyTx = SyncSender<Result<Tensor, ServeError>>;
@@ -114,6 +115,13 @@ pub struct ServiceConfig {
     /// raw-vs-canonicalized contract) but ingress should opt in. Lint
     /// diagnostics are counted in [`MetricsSnapshot::lints_emitted`].
     pub canonicalize: bool,
+    /// Armed span recorder: the service thread records one causally-linked
+    /// span tree per request (admit/queue/tier/plan/launch/reply under a
+    /// request root) into this tracer's fixed ring. `None` (default) = the
+    /// hot path carries no tracing code at all — same pattern as `faults`.
+    /// The caller keeps its own `Arc` and exports with
+    /// [`Tracer::to_chrome_trace`] whenever it likes (e.g. on shutdown).
+    pub tracing: Option<Arc<Tracer>>,
 }
 
 impl Default for ServiceConfig {
@@ -128,6 +136,7 @@ impl Default for ServiceConfig {
             faults: None,
             max_build_retries: 2,
             canonicalize: false,
+            tracing: None,
         }
     }
 }
@@ -216,7 +225,16 @@ impl Service {
         let (rtx, rrx) = sync_channel(1);
         let enqueued = Instant::now();
         let deadline = deadline.and_then(|d| enqueued.checked_add(d));
-        let req = PendingRequest { pipeline, item, enqueued, deadline, reply: rtx };
+        let req = PendingRequest {
+            pipeline,
+            item,
+            enqueued,
+            deadline,
+            reply: rtx,
+            trace_id: 0,
+            trace_verdict: 0,
+            admitted: enqueued,
+        };
         match tx.try_send(Msg::Request(req)) {
             Ok(()) => Ok(rrx),
             Err(TrySendError::Full(_)) => Err(SubmitError::QueueFull),
@@ -332,6 +350,32 @@ impl Backend {
         }
     }
 
+    /// Probe the plan cache for `p`: `(was already cached, probe/compile
+    /// time)`. Host backend only — the XLA front door's cache is interior
+    /// to the engine, so its `plan` span is folded into the launch.
+    fn plan_probe(&self, p: &Pipeline) -> Option<(bool, Duration)> {
+        match self {
+            Backend::Xla { .. } => None,
+            Backend::Host { engine, .. } => {
+                let hit = engine.plan_cached(p);
+                let t0 = Instant::now();
+                let _ = engine.plan_for(p);
+                Some((hit, t0.elapsed()))
+            }
+        }
+    }
+
+    /// Launch geometry for `p` as the trace reports it: `(register-block
+    /// lane width, worker threads)`.
+    fn launch_shape(&self, p: &Pipeline) -> (u64, u64) {
+        match self {
+            Backend::Xla { .. } => (0, 1),
+            Backend::Host { engine, .. } => {
+                (engine.plan_for(p).vectorization() as u64, engine.threads() as u64)
+            }
+        }
+    }
+
     fn planner_stats(&self) -> PlannerStats {
         match self {
             Backend::Xla { engine, .. } => engine.planner_stats(),
@@ -343,6 +387,9 @@ impl Backend {
                 plan_cache: engine.plan_cache_len(),
                 vectorized: engine.vector_runs(),
                 vector_width: engine.vector_width(),
+                bytes_read: engine.bytes_read(),
+                bytes_written: engine.bytes_written(),
+                bytes_baseline: engine.bytes_baseline(),
                 ..PlannerStats::default()
             },
         }
@@ -462,6 +509,8 @@ fn service_loop(cfg: ServiceConfig, rx: Receiver<Msg>) {
     let mut batcher = Batcher::new(cfg.policy);
     let mut metrics = Metrics::default();
     let mut breakers = BreakerBoard::new(cfg.breaker);
+    let tracer = cfg.tracing.clone();
+    let tracer = tracer.as_deref();
     // ingress canonicalizer state: the canonical stream keys seen so far
     // (`None` = canonicalization off; ingest admits pipelines untouched)
     let mut canon_seen: Option<HashSet<String>> = cfg.canonicalize.then(HashSet::new);
@@ -480,16 +529,25 @@ fn service_loop(cfg: ServiceConfig, rx: Receiver<Msg>) {
             .unwrap_or(Duration::from_millis(50));
         match rx.recv_timeout(timeout) {
             Ok(Msg::Request(r)) => {
-                ingest(r, &mut batcher, &mut metrics, &mut canon_seen);
+                ingest(r, &mut batcher, &mut metrics, &mut canon_seen, tracer);
                 // opportunistically drain whatever else is queued
                 while let Ok(m) = rx.try_recv() {
                     match m {
-                        Msg::Request(r) => ingest(r, &mut batcher, &mut metrics, &mut canon_seen),
+                        Msg::Request(r) => {
+                            ingest(r, &mut batcher, &mut metrics, &mut canon_seen, tracer)
+                        }
                         Msg::Snapshot(tx) => {
                             let _ = tx.send(snapshot(&mut metrics, &backend, &breakers));
                         }
                         Msg::Shutdown => {
-                            flush(&mut batcher, &backend, &mut metrics, &mut breakers, &faults);
+                            flush(
+                                &mut batcher,
+                                &backend,
+                                &mut metrics,
+                                &mut breakers,
+                                &faults,
+                                tracer,
+                            );
                             return;
                         }
                     }
@@ -499,12 +557,12 @@ fn service_loop(cfg: ServiceConfig, rx: Receiver<Msg>) {
                 let _ = tx.send(snapshot(&mut metrics, &backend, &breakers));
             }
             Ok(Msg::Shutdown) => {
-                flush(&mut batcher, &backend, &mut metrics, &mut breakers, &faults);
+                flush(&mut batcher, &backend, &mut metrics, &mut breakers, &faults, tracer);
                 return;
             }
             Err(RecvTimeoutError::Timeout) => {}
             Err(RecvTimeoutError::Disconnected) => {
-                flush(&mut batcher, &backend, &mut metrics, &mut breakers, &faults);
+                flush(&mut batcher, &backend, &mut metrics, &mut breakers, &faults, tracer);
                 return;
             }
         }
@@ -518,13 +576,13 @@ fn service_loop(cfg: ServiceConfig, rx: Receiver<Msg>) {
         let now = Instant::now();
         let mut groups = Vec::new();
         while let Some(popped) = batcher.pop_ready(now) {
-            expire(popped.expired, &mut metrics);
+            expire(popped.expired, &mut metrics, tracer);
             if !popped.live.is_empty() {
                 groups.push(popped.live);
             }
         }
         if !groups.is_empty() {
-            serve_window(groups, &backend, &mut metrics, &mut breakers, &faults);
+            serve_window(groups, &backend, &mut metrics, &mut breakers, &faults, tracer);
         }
     }
 }
@@ -545,7 +603,13 @@ fn ingest(
     batcher: &mut Batcher<ReplyTx>,
     metrics: &mut Metrics,
     canon_seen: &mut Option<HashSet<String>>,
+    tracer: Option<&Tracer>,
 ) {
+    let armed = tracer.map(|tr| {
+        req.trace_id = tr.new_request();
+        (tr, tr.now_us())
+    });
+    let (lints0, rewrites0) = (metrics.lints_emitted, metrics.rewrites_applied);
     if let Some(dl) = req.deadline {
         let dead_on_arrival = dl <= req.enqueued;
         let est = Duration::from_micros((metrics.ewma_item_us * batcher.pending() as f64) as u64);
@@ -553,6 +617,9 @@ fn ingest(
         if dead_on_arrival || (est > Duration::ZERO && est > remaining) {
             metrics.shed += 1;
             let _ = req.reply.send(Err(ServeError::Shed));
+            if let Some((tr, start_us)) = armed {
+                trace_admit(tr, &req, start_us, 0, 0, Some("Shed"));
+            }
             return;
         }
     }
@@ -565,25 +632,106 @@ fn ingest(
         }
         req.pipeline = canonical;
     }
+    if let Some((tr, start_us)) = armed {
+        trace_admit(
+            tr,
+            &req,
+            start_us,
+            metrics.lints_emitted - lints0,
+            metrics.rewrites_applied - rewrites0,
+            None,
+        );
+        req.admitted = Instant::now();
+    }
     batcher.push(req);
 }
 
+/// Record a request's `admit` span (shed check + lint + canonicalize). A
+/// shed request's tree terminates here, so its root closes too.
+fn trace_admit(
+    tr: &Tracer,
+    req: &Req,
+    start_us: u64,
+    lints: u64,
+    rewrites: u64,
+    err: Option<&'static str>,
+) {
+    let now = tr.now_us();
+    tr.record(SpanRecord {
+        req: req.trace_id,
+        id: 1,
+        parent: 0,
+        stage: Stage::Admit,
+        start_us,
+        dur_us: now.saturating_sub(start_us),
+        a: lints,
+        b: rewrites,
+        c: 0,
+        err,
+    });
+    if err.is_some() {
+        let enq = tr.us(req.enqueued);
+        tr.record(SpanRecord {
+            req: req.trace_id,
+            id: 0,
+            parent: NO_PARENT,
+            stage: Stage::Request,
+            start_us: enq,
+            dur_us: now.saturating_sub(enq),
+            a: 0,
+            b: 0,
+            c: 0,
+            err,
+        });
+    }
+}
+
 /// Answer deadline-expired requests (split out by the batcher at pop time).
-fn expire(expired: Vec<Req>, metrics: &mut Metrics) {
+fn expire(expired: Vec<Req>, metrics: &mut Metrics, tracer: Option<&Tracer>) {
     for req in expired {
         metrics.expired += 1;
         metrics.observe_latency(req.enqueued.elapsed());
         let _ = req.reply.send(Err(ServeError::Expired));
+        // expiry kills the request while queued: the error lands on the
+        // queue span and the tree terminates
+        if let Some(tr) = tracer.filter(|_| req.trace_id != 0) {
+            let now = tr.now_us();
+            let admitted = tr.us(req.admitted);
+            let enq = tr.us(req.enqueued);
+            tr.record(SpanRecord {
+                req: req.trace_id,
+                id: 2,
+                parent: 0,
+                stage: Stage::Queue,
+                start_us: admitted,
+                dur_us: now.saturating_sub(admitted),
+                a: 0,
+                b: 0,
+                c: 0,
+                err: Some("Expired"),
+            });
+            tr.record(SpanRecord {
+                req: req.trace_id,
+                id: 0,
+                parent: NO_PARENT,
+                stage: Stage::Request,
+                start_us: enq,
+                dur_us: now.saturating_sub(enq),
+                a: 0,
+                b: 0,
+                c: 0,
+                err: Some("Expired"),
+            });
+        }
     }
 }
 
+/// Metrics snapshot for the service thread: refresh the engine-side planner
+/// stats, then let [`Metrics::snapshot`] merge in the breaker board — that
+/// call is the single seam where breaker state joins the counters.
 fn snapshot(metrics: &mut Metrics, backend: &Backend, breakers: &BreakerBoard) -> MetricsSnapshot {
     metrics.planner = backend.planner_stats();
-    let mut s = metrics.snapshot();
-    s.breaker_trips = breakers.trips();
-    s.breaker_rejected = breakers.rejected();
-    s.breakers = breakers.snapshot();
-    s
+    metrics.snapshot(breakers)
 }
 
 fn flush(
@@ -592,16 +740,17 @@ fn flush(
     metrics: &mut Metrics,
     breakers: &mut BreakerBoard,
     faults: &Option<Arc<FaultInjector>>,
+    tracer: Option<&Tracer>,
 ) {
     let mut groups = Vec::new();
     for popped in batcher.drain_all(Instant::now()) {
-        expire(popped.expired, metrics);
+        expire(popped.expired, metrics, tracer);
         if !popped.live.is_empty() {
             groups.push(popped.live);
         }
     }
     if !groups.is_empty() {
-        serve_window(groups, backend, metrics, breakers, faults);
+        serve_window(groups, backend, metrics, breakers, faults, tracer);
     }
 }
 
@@ -640,15 +789,111 @@ fn serve_error(e: &anyhow::Error, metrics: &mut Metrics) -> ServeError {
     }
 }
 
+/// The typed error's variant name — the `&'static str` recorded on the
+/// failing span (failure traces stay allocation-free).
+fn err_name(e: &ServeError) -> &'static str {
+    match e {
+        ServeError::Expired => "Expired",
+        ServeError::Shed => "Shed",
+        ServeError::LaunchPanicked(_) => "LaunchPanicked",
+        ServeError::CircuitOpen { .. } => "CircuitOpen",
+        ServeError::BadItem(_) => "BadItem",
+        ServeError::Exec(_) => "Exec",
+        ServeError::Unavailable(_) => "Unavailable",
+    }
+}
+
+/// Launch-span payload shared by every rider of one fused launch.
+struct LaunchInfo {
+    start: Instant,
+    dur: Duration,
+    elems: u64,
+    width: u64,
+    threads: u64,
+}
+
+/// Close a served (or serve-failed) request's span tree: `queue`, `tier`
+/// (with nested `plan` / `launch` when the tier got that far), `reply`, and
+/// the `request` root. No-op when tracing is off or the request predates
+/// the tracer being armed (`trace_id == 0`).
+#[allow(clippy::too_many_arguments)]
+fn trace_finish(
+    tracer: Option<&Tracer>,
+    req: &Req,
+    serve_start: Instant,
+    tier: u64,
+    group_len: u64,
+    plan: Option<(Instant, Duration, bool)>,
+    launch: Option<&LaunchInfo>,
+    reply_t0: Instant,
+    err: Option<&'static str>,
+) {
+    let Some(tr) = tracer.filter(|_| req.trace_id != 0) else {
+        return;
+    };
+    let span = |id: u16, parent: u16, stage, start_us: u64, end_us: u64, a, b, c, err| {
+        tr.record(SpanRecord {
+            req: req.trace_id,
+            id,
+            parent,
+            stage,
+            start_us,
+            dur_us: end_us.saturating_sub(start_us),
+            a,
+            b,
+            c,
+            err,
+        });
+    };
+    let serve_us = tr.us(serve_start);
+    let reply_us = tr.us(reply_t0);
+    span(2, 0, Stage::Queue, tr.us(req.admitted), serve_us, 0, 0, 0, None);
+    if let Some((t0, dur, hit)) = plan {
+        let start = tr.us(t0);
+        span(4, 3, Stage::Plan, start, start + dur.as_micros() as u64, hit as u64, 0, 0, None);
+    }
+    if let Some(l) = launch {
+        let start = tr.us(l.start);
+        let end = start + l.dur.as_micros() as u64;
+        span(5, 3, Stage::Launch, start, end, l.elems, l.width, l.threads, err);
+    }
+    // the error lands on the launch span when a launch ran; otherwise the
+    // tier itself is the failing stage (rejected, bad item, whole-pass panic)
+    let tier_err = if launch.is_none() { err } else { None };
+    span(3, 0, Stage::Tier, serve_us, reply_us, tier, req.trace_verdict, group_len, tier_err);
+    let now = tr.now_us();
+    span(6, 0, Stage::Reply, reply_us, now, err.is_none() as u64, 0, 0, None);
+    span(0, NO_PARENT, Stage::Request, tr.us(req.enqueued), now, 0, 0, 0, err);
+}
+
 /// Reject a whole group because its stream's breaker is open.
-fn reject_open(group: &[Req], key: &str, metrics: &mut Metrics, breakers: &mut BreakerBoard) {
+fn reject_open(
+    group: &[Req],
+    key: &str,
+    metrics: &mut Metrics,
+    breakers: &mut BreakerBoard,
+    tracer: Option<&Tracer>,
+    serve_start: Instant,
+) {
     if group.is_empty() {
         return;
     }
     breakers.note_rejected(key, group.len());
     for req in group {
         metrics.observe_latency(req.enqueued.elapsed());
+        let reply_t0 = Instant::now();
         let _ = req.reply.send(Err(ServeError::CircuitOpen { stream: key.to_string() }));
+        trace_finish(
+            tracer,
+            req,
+            serve_start,
+            req.trace_verdict,
+            group.len() as u64,
+            None,
+            None,
+            reply_t0,
+            Some("CircuitOpen"),
+        );
     }
 }
 
@@ -671,17 +916,38 @@ fn serve_window(
     metrics: &mut Metrics,
     breakers: &mut BreakerBoard,
     faults: &Option<Arc<FaultInjector>>,
+    tracer: Option<&Tracer>,
 ) {
+    let serve_start = Instant::now();
     let mut divergent_pool: Vec<Req> = Vec::new();
     let mut per_item_pool: Vec<Req> = Vec::new();
-    for group in groups {
+    for mut group in groups {
         if group.is_empty() {
             continue;
         }
         let key = Signature::of(&group[0].pipeline).stream_key();
-        match breakers.admit(&key) {
+        let admission = breakers.admit(&key);
+        let verdict = match admission {
+            Admission::Serve(ServeTier::Stacked) => trace::TIER_STACKED,
+            Admission::Serve(ServeTier::Divergent) => trace::TIER_DIVERGENT,
+            Admission::Serve(ServeTier::PerItem) => trace::TIER_PER_ITEM,
+            Admission::Probe => trace::TIER_PROBE,
+            Admission::Reject => trace::TIER_REJECT,
+        };
+        for r in &mut group {
+            r.trace_verdict = verdict;
+        }
+        match admission {
             Admission::Serve(ServeTier::Stacked) => {
-                divergent_pool.extend(stack_tier(group, backend, metrics, breakers, faults));
+                divergent_pool.extend(stack_tier(
+                    group,
+                    backend,
+                    metrics,
+                    breakers,
+                    faults,
+                    tracer,
+                    serve_start,
+                ));
             }
             Admission::Serve(ServeTier::Divergent) => divergent_pool.extend(group),
             Admission::Serve(ServeTier::PerItem) => per_item_pool.extend(group),
@@ -691,18 +957,23 @@ fn serve_window(
                 if let Some(probe) = it.next() {
                     per_item_pool.push(probe);
                 }
-                let rest: Vec<Req> = it.collect();
-                reject_open(&rest, &key, metrics, breakers);
+                let mut rest: Vec<Req> = it.collect();
+                for r in &mut rest {
+                    r.trace_verdict = trace::TIER_REJECT;
+                }
+                reject_open(&rest, &key, metrics, breakers, tracer, serve_start);
             }
-            Admission::Reject => reject_open(&group, &key, metrics, breakers),
+            Admission::Reject => {
+                reject_open(&group, &key, metrics, breakers, tracer, serve_start)
+            }
         }
     }
     if divergent_pool.len() >= 2 {
-        execute_divergent(divergent_pool, backend, metrics, breakers);
+        execute_divergent(divergent_pool, backend, metrics, breakers, tracer, serve_start);
     } else {
         per_item_pool.append(&mut divergent_pool);
     }
-    execute_per_item(&per_item_pool, backend, metrics, breakers, faults);
+    execute_per_item(&per_item_pool, backend, metrics, breakers, faults, tracer, serve_start);
 }
 
 /// Serve each request of a group on its own (no HF stacking): the ladder's
@@ -714,9 +985,19 @@ fn execute_per_item(
     metrics: &mut Metrics,
     breakers: &mut BreakerBoard,
     faults: &Option<Arc<FaultInjector>>,
+    tracer: Option<&Tracer>,
+    serve_start: Instant,
 ) {
     for req in group {
         let key = Signature::of(&req.pipeline).stream_key();
+        // plan consult first (cache lookup or compile; either way the plan
+        // is cached for the launch below), so plan time and launch time are
+        // separable in both the trace and the tier-time breakdown
+        let plan_t0 = Instant::now();
+        let plan_info = backend.plan_probe(&req.pipeline);
+        if let Some((_, d)) = plan_info {
+            metrics.tier_times.plan += d.as_micros() as u64;
+        }
         let t0 = Instant::now();
         let run = exec::catch_launch(|| {
             if let Some(inj) = faults {
@@ -724,18 +1005,56 @@ fn execute_per_item(
             }
             backend.run(&req.pipeline, &req.item)
         });
+        let launch_dur = t0.elapsed();
+        metrics.tier_times.per_item += launch_dur.as_micros() as u64;
+        let launch = tracer.map(|_| {
+            let (width, threads) = backend.launch_shape(&req.pipeline);
+            LaunchInfo {
+                start: t0,
+                dur: launch_dur,
+                elems: (req.pipeline.batch * req.pipeline.item_elems()) as u64,
+                width,
+                threads,
+            }
+        });
+        let plan_span = plan_info.map(|(hit, d)| (plan_t0, d, hit));
         match run {
             Ok(t) => {
-                metrics.note_service_cost(1, t0.elapsed());
+                metrics.note_service_cost(1, launch_dur);
                 observe_launch(metrics, backend);
                 metrics.batched_items += 1;
                 breakers.record_success(&key);
+                let reply_t0 = Instant::now();
                 complete_ok(req, t, metrics);
+                trace_finish(
+                    tracer,
+                    req,
+                    serve_start,
+                    trace::TIER_PER_ITEM,
+                    1,
+                    plan_span,
+                    launch.as_ref(),
+                    reply_t0,
+                    None,
+                );
             }
             Err(e) => {
                 breakers.record_failure(&key);
                 let err = serve_error(&e, metrics);
+                let name = err_name(&err);
+                let reply_t0 = Instant::now();
                 fail_request(req, err, metrics);
+                trace_finish(
+                    tracer,
+                    req,
+                    serve_start,
+                    trace::TIER_PER_ITEM,
+                    1,
+                    plan_span,
+                    launch.as_ref(),
+                    reply_t0,
+                    Some(name),
+                );
             }
         }
     }
@@ -752,6 +1071,8 @@ fn execute_divergent(
     backend: &Backend,
     metrics: &mut Metrics,
     breakers: &mut BreakerBoard,
+    tracer: Option<&Tracer>,
+    serve_start: Instant,
 ) {
     let t0 = Instant::now();
     let window: Vec<(&Pipeline, &Tensor)> =
@@ -761,16 +1082,32 @@ fn execute_divergent(
         Err(e) => {
             // the pass itself panicked outside any item's isolation: every
             // rider fails, every rider's stream records the failure
+            metrics.tier_times.divergent += t0.elapsed().as_micros() as u64;
             let err = serve_error(&e, metrics);
+            let name = err_name(&err);
             for req in &group {
                 breakers.record_failure(&Signature::of(&req.pipeline).stream_key());
+                let reply_t0 = Instant::now();
                 fail_request(req, err.clone(), metrics);
+                trace_finish(
+                    tracer,
+                    req,
+                    serve_start,
+                    trace::TIER_DIVERGENT,
+                    group.len() as u64,
+                    None,
+                    None,
+                    reply_t0,
+                    Some(name),
+                );
             }
             return;
         }
     };
+    let pass_dur = t0.elapsed();
+    metrics.tier_times.divergent += pass_dur.as_micros() as u64;
     metrics.launches += out.launches as u64;
-    metrics.note_service_cost(group.len(), t0.elapsed());
+    metrics.note_service_cost(group.len(), pass_dur);
     // only a genuine divergent pass counts in the tier's metrics — the XLA
     // front door serves signature-homogeneous leftovers per item through
     // the artifact path, and that traffic must not inflate occupancy
@@ -782,16 +1119,50 @@ fn execute_divergent(
     }
     for (req, res) in group.iter().zip(out.results) {
         let key = Signature::of(&req.pipeline).stream_key();
+        // per-rider launch info: the shared pass is the launch window, the
+        // per-request element count and lane width individualize the span
+        let launch = tracer.map(|_| LaunchInfo {
+            start: t0,
+            dur: pass_dur,
+            elems: (req.pipeline.batch * req.pipeline.item_elems()) as u64,
+            width: backend.launch_shape(&req.pipeline).0,
+            threads: out.lanes as u64,
+        });
         match res {
             Ok(t) => {
                 metrics.batched_items += 1;
                 breakers.record_success(&key);
+                let reply_t0 = Instant::now();
                 complete_ok(req, t, metrics);
+                trace_finish(
+                    tracer,
+                    req,
+                    serve_start,
+                    trace::TIER_DIVERGENT,
+                    window.len() as u64,
+                    None,
+                    launch.as_ref(),
+                    reply_t0,
+                    None,
+                );
             }
             Err(e) => {
                 breakers.record_failure(&key);
                 let err = serve_error(&e, metrics);
+                let name = err_name(&err);
+                let reply_t0 = Instant::now();
                 fail_request(req, err, metrics);
+                trace_finish(
+                    tracer,
+                    req,
+                    serve_start,
+                    trace::TIER_DIVERGENT,
+                    window.len() as u64,
+                    None,
+                    launch.as_ref(),
+                    reply_t0,
+                    Some(name),
+                );
             }
         }
     }
@@ -808,27 +1179,45 @@ fn execute_divergent(
 /// covers no bucket, and lone heads that would launch alone anyway. The
 /// stacked launch is panic-isolated; a failure counts ONE breaker event
 /// against the stream (the launch failed, not each rider independently).
+#[allow(clippy::too_many_arguments)]
 fn stack_tier(
     group: Vec<Req>,
     backend: &Backend,
     metrics: &mut Metrics,
     breakers: &mut BreakerBoard,
     faults: &Option<Arc<FaultInjector>>,
+    tracer: Option<&Tracer>,
+    serve_start: Instant,
 ) -> Vec<Req> {
+    let fail_bad_item = |req: &Req, msg: String, metrics: &mut Metrics| {
+        // client error: counted as failed, never against the breaker
+        let reply_t0 = Instant::now();
+        fail_request(req, ServeError::BadItem(msg), metrics);
+        trace_finish(
+            tracer,
+            req,
+            serve_start,
+            trace::TIER_STACKED,
+            1,
+            None,
+            None,
+            reply_t0,
+            Some("BadItem"),
+        );
+    };
     if group[0].pipeline.has_structured_boundary() {
         // dtype is checkable up front; geometry is per-frame
         let proto_dtin = group[0].pipeline.dtin;
         let (group, malformed): (Vec<_>, Vec<_>) =
             group.into_iter().partition(|r| r.item.dtype() == proto_dtin);
         for req in &malformed {
-            // client error: counted as failed, never against the breaker
-            fail_request(
+            fail_bad_item(
                 req,
-                ServeError::BadItem(format!(
+                format!(
                     "item dtype {} does not match pipeline dtin {}",
                     req.item.dtype(),
                     proto_dtin
-                )),
+                ),
                 metrics,
             );
         }
@@ -845,15 +1234,15 @@ fn stack_tier(
         r.item.dtype() == proto_dtin && r.item.shape() == item_shape_want.as_slice()
     });
     for req in &malformed {
-        fail_request(
+        fail_bad_item(
             req,
-            ServeError::BadItem(format!(
+            format!(
                 "item dtype {} shape {:?} does not match pipeline ({} {:?})",
                 req.item.dtype(),
                 req.item.shape(),
                 proto_dtin,
                 item_shape_want
-            )),
+            ),
             metrics,
         );
     }
@@ -905,6 +1294,15 @@ fn stack_tier(
     let input = stack_batch(&items, bucket, &proto.shape);
     let key = Signature::of(proto).stream_key();
 
+    // plan consult before the launch so compile time is attributed to the
+    // plan span, not smeared into the stacked-launch time
+    let plan_t0 = Instant::now();
+    let plan_info = backend.plan_probe(&batched);
+    if let Some((_, d)) = plan_info {
+        metrics.tier_times.plan += d.as_micros() as u64;
+    }
+    let plan_span = plan_info.map(|(hit, d)| (plan_t0, d, hit));
+
     let t0 = Instant::now();
     let run = exec::catch_launch(|| {
         if let Some(inj) = faults {
@@ -912,9 +1310,21 @@ fn stack_tier(
         }
         backend.run(&batched, &input)
     });
+    let launch_dur = t0.elapsed();
+    metrics.tier_times.stacked += launch_dur.as_micros() as u64;
+    let launch = tracer.map(|_| {
+        let (width, threads) = backend.launch_shape(&batched);
+        LaunchInfo {
+            start: t0,
+            dur: launch_dur,
+            elems: (batched.batch * batched.item_elems()) as u64,
+            width,
+            threads,
+        }
+    });
     match run {
         Ok(out) => {
-            metrics.note_service_cost(m, t0.elapsed());
+            metrics.note_service_cost(m, launch_dur);
             observe_launch(metrics, backend);
             metrics.batched_items += m as u64;
             metrics.padded_planes += (bucket - m) as u64;
@@ -923,15 +1333,40 @@ fn stack_tier(
             let item_shape: Vec<usize> = out.shape()[1..].to_vec();
             for (b, req) in group.iter().enumerate() {
                 let t = slice_batch(&out, b, item_elems, &item_shape);
+                let reply_t0 = Instant::now();
                 complete_ok(req, t, metrics);
+                trace_finish(
+                    tracer,
+                    req,
+                    serve_start,
+                    trace::TIER_STACKED,
+                    m as u64,
+                    plan_span,
+                    launch.as_ref(),
+                    reply_t0,
+                    None,
+                );
             }
         }
         Err(e) => {
             // one launch, one breaker event — then fail every rider typed
             breakers.record_failure(&key);
             let err = serve_error(&e, metrics);
+            let name = err_name(&err);
             for req in &group {
+                let reply_t0 = Instant::now();
                 fail_request(req, err.clone(), metrics);
+                trace_finish(
+                    tracer,
+                    req,
+                    serve_start,
+                    trace::TIER_STACKED,
+                    m as u64,
+                    plan_span,
+                    launch.as_ref(),
+                    reply_t0,
+                    Some(name),
+                );
             }
         }
     }

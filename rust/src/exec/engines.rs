@@ -198,6 +198,11 @@ impl FusedEngine {
             // telemetry so vectorization coverage survives the re-route
             stats.vectorized = host.vector_runs();
             stats.vector_width = host.vector_width();
+            // the byte model lives on host plans: surface whatever the host
+            // tier moved (artifact launches are accounted upstream)
+            stats.bytes_read = host.bytes_read();
+            stats.bytes_written = host.bytes_written();
+            stats.bytes_baseline = host.bytes_baseline();
         }
         stats
     }

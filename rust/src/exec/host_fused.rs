@@ -70,11 +70,23 @@ pub struct HostFusedEngine {
     divergent: Cell<usize>,
     vector_runs: Cell<usize>,
     vector_width: Cell<u8>,
+    /// Fusion-efficiency accounting, accumulated per completed run from the
+    /// plan's static byte model: bytes actually read / written by the fused
+    /// passes, and what an op-at-a-time baseline would have moved.
+    bytes_read: Cell<u64>,
+    bytes_written: Cell<u64>,
+    bytes_baseline: Cell<u64>,
     /// Armed fault injector (absent in production — zero cost when off).
     /// Consulted once per divergent-window item, serially in window order
     /// BEFORE the lanes spawn, so injected faults land at deterministic
     /// launch indices regardless of lane scheduling.
     faults: Option<std::sync::Arc<crate::faults::FaultInjector>>,
+    /// Armed span recorder (absent in production — when `None`, tracing
+    /// compiles down to a skipped branch per run). [`Engine::run`] records
+    /// one `launch` span per fused pass. The serving coordinator does NOT
+    /// arm this — it records launch spans itself inside each request's span
+    /// tree; this knob is for standalone library use.
+    tracer: Option<std::sync::Arc<crate::trace::Tracer>>,
 }
 
 impl HostFusedEngine {
@@ -97,7 +109,11 @@ impl HostFusedEngine {
             divergent: Cell::new(0),
             vector_runs: Cell::new(0),
             vector_width: Cell::new(0),
+            bytes_read: Cell::new(0),
+            bytes_written: Cell::new(0),
+            bytes_baseline: Cell::new(0),
             faults: None,
+            tracer: None,
         }
     }
 
@@ -122,6 +138,18 @@ impl HostFusedEngine {
         self
     }
 
+    /// Arm a span recorder: every [`Engine::run`] records one `launch` span
+    /// (elements, register-block width, worker threads, duration) into the
+    /// tracer's fixed ring. Zero-allocation on the hot path; when never
+    /// called the engine carries no tracing cost beyond one `Option` check.
+    pub fn with_tracer(
+        mut self,
+        tracer: std::sync::Arc<crate::trace::Tracer>,
+    ) -> HostFusedEngine {
+        self.tracer = Some(tracer);
+        self
+    }
+
     /// Plan lookup/compile, cached per signature.
     pub fn plan_for(&self, p: &Pipeline) -> Rc<HostPlan> {
         let sig = Signature::of(p);
@@ -135,6 +163,13 @@ impl HostFusedEngine {
 
     pub fn plan_cache_len(&self) -> usize {
         self.plans.borrow().len()
+    }
+
+    /// True when `p`'s signature already has a compiled plan — the probe the
+    /// serving coordinator uses to label its `plan` span hit/miss WITHOUT
+    /// perturbing the cache.
+    pub fn plan_cached(&self, p: &Pipeline) -> bool {
+        self.plans.borrow().contains_key(&Signature::of(p))
     }
 
     pub fn threads(&self) -> usize {
@@ -186,6 +221,27 @@ impl HostFusedEngine {
         self.vector_width.get()
     }
 
+    /// Bytes the fused passes actually read across all completed runs —
+    /// surfaced through [`crate::fusion::PlannerStats::bytes_read`].
+    pub fn bytes_read(&self) -> u64 {
+        self.bytes_read.get()
+    }
+
+    /// Bytes the fused passes actually wrote across all completed runs —
+    /// surfaced through [`crate::fusion::PlannerStats::bytes_written`].
+    pub fn bytes_written(&self) -> u64 {
+        self.bytes_written.get()
+    }
+
+    /// Bytes an op-at-a-time execution of the same runs would have moved
+    /// ([`HostPlan::bytes_baseline`], static from the IR) — surfaced through
+    /// [`crate::fusion::PlannerStats::bytes_baseline`]. The ratio
+    /// `bytes_baseline / (bytes_read + bytes_written)` is the engine's
+    /// measured fusion efficiency (≈(k+1)/2 for same-width dense chain-k).
+    pub fn bytes_baseline(&self) -> u64 {
+        self.bytes_baseline.get()
+    }
+
     /// The register-block width a run of `plan` executes at: the engine
     /// override if set, else the plan's own [`HostPlan::vectorization`] —
     /// divergent-window items each pick their width from their OWN sub-plan.
@@ -210,12 +266,16 @@ impl HostFusedEngine {
     }
 
     /// [`HostFusedEngine::observe_run`] driven by the plan's boundary
-    /// metadata (shared by the single-run path and the divergent lanes).
+    /// metadata (shared by the single-run path and the divergent lanes),
+    /// plus the plan's per-run byte accounting.
     fn observe_plan_run(&self, plan: &HostPlan) {
         let reduce = plan.reduce().is_some();
         let structured = plan.reader() != ReaderKind::Dense
             || (!reduce && plan.writer() != WriterKind::Dense);
         self.observe_run(structured, reduce, self.effective_width(plan));
+        self.bytes_read.set(self.bytes_read.get() + plan.bytes_read() as u64);
+        self.bytes_written.set(self.bytes_written.get() + plan.bytes_written() as u64);
+        self.bytes_baseline.set(self.bytes_baseline.get() + plan.bytes_baseline() as u64);
     }
 
     /// The DIVERGENT-HF tier: serve a window of HETEROGENEOUS pipelines —
@@ -363,7 +423,7 @@ impl HostFusedEngine {
                 src,
                 src_shape,
             )?;
-            self.observe_run(p.read_pattern() != ReadPattern::Dense, true, width);
+            self.observe_plan_run(&plan);
             return Ok(vals.into_iter().map(W::from_f64).collect());
         }
         let dst = if plan.is_dense() {
@@ -402,7 +462,7 @@ impl HostFusedEngine {
             let body = plan.bind_body(p);
             structured_pass::<S, W>(p, &body, self.threads, vectorized, src, src_shape)?
         };
-        self.observe_run(!plan.is_dense(), false, width);
+        self.observe_plan_run(&plan);
         Ok(dst)
     }
 
@@ -438,7 +498,28 @@ impl Engine for HostFusedEngine {
 
     fn run(&self, p: &Pipeline, input: &Tensor) -> Result<Tensor> {
         let plan = self.plan_for(p);
-        let out = execute_any(&plan, p, input, self.threads, self.effective_width(&plan))?;
+        let width = self.effective_width(&plan);
+        // standalone-library tracing: one launch span per fused pass (the
+        // serving coordinator records launch spans itself and leaves this
+        // tracer unarmed, so launches are never double-counted)
+        let t0 = self.tracer.as_ref().map(|tr| (tr, tr.now_us(), tr.new_request()));
+        let result = execute_any(&plan, p, input, self.threads, width);
+        if let Some((tr, start_us, req)) = t0 {
+            use crate::trace::{SpanRecord, Stage, NO_PARENT};
+            tr.record(SpanRecord {
+                req,
+                id: 0,
+                parent: NO_PARENT,
+                stage: Stage::Launch,
+                start_us,
+                dur_us: tr.now_us().saturating_sub(start_us),
+                a: plan.total_elems() as u64,
+                b: width as u64,
+                c: self.threads as u64,
+                err: result.as_ref().err().map(|_| "Exec"),
+            });
+        }
+        let out = result?;
         self.observe_plan_run(&plan);
         Ok(out)
     }

@@ -74,6 +74,13 @@ pub struct HostPlan {
     dtout: DType,
     batch: usize,
     item_elems: usize,
+    /// Bytes one run of this plan actually writes: the out-shape surface
+    /// for dense/split writers, only the statistics for the reduce tier.
+    bytes_written: usize,
+    /// Bytes the op-at-a-time baseline would materialize for one run
+    /// ([`Pipeline::baseline_bytes`], static from the IR) — the numerator
+    /// of the fusion-efficiency ratio.
+    bytes_baseline: usize,
 }
 
 impl HostPlan {
@@ -124,6 +131,10 @@ impl HostPlan {
         } else {
             kernel::LANE_WIDTH_F64 as u8
         };
+        let bytes_written = match p.reduction() {
+            Some(spec) => spec.out_len() * p.dtout.size_bytes(),
+            None => p.batch * p.item_elems() * p.dtout.size_bytes(),
+        };
         HostPlan {
             sig: Signature::of(p),
             group,
@@ -137,6 +148,8 @@ impl HostPlan {
             dtout: p.dtout,
             batch: p.batch,
             item_elems: p.item_elems(),
+            bytes_written,
+            bytes_baseline: p.baseline_bytes(),
         }
     }
 
@@ -236,6 +249,28 @@ impl HostPlan {
     /// [`Pipeline::fused_bytes`].
     pub fn fused_bytes(&self) -> usize {
         self.total_elems() * (self.dtin.size_bytes() + self.dtout.size_bytes())
+    }
+
+    /// Bytes one run reads. Structured gathers (crop / crop+resize) are
+    /// counted at the logical post-gather element stream — the same
+    /// convention `fused_bytes` uses — so the ratio against the op-at-a-time
+    /// baseline compares like with like.
+    pub fn bytes_read(&self) -> usize {
+        self.total_elems() * self.dtin.size_bytes()
+    }
+
+    /// Bytes one run writes: the out surface for dense/split writers, only
+    /// the finalized statistics for the reduce tier.
+    pub fn bytes_written(&self) -> usize {
+        self.bytes_written
+    }
+
+    /// Bytes an op-at-a-time execution of the same pipeline would move
+    /// ([`Pipeline::baseline_bytes`], captured at compile). The
+    /// fusion-efficiency ratio is `bytes_baseline / (bytes_read +
+    /// bytes_written)` — ≈(k+1)/2 for a same-width dense chain of k ops.
+    pub fn bytes_baseline(&self) -> usize {
+        self.bytes_baseline
     }
 }
 
@@ -405,5 +440,29 @@ mod tests {
         assert_eq!(plan.item_elems(), 16);
         assert_eq!(plan.total_elems(), 48);
         assert_eq!(plan.fused_bytes(), 48 * (1 + 4));
+    }
+
+    #[test]
+    fn byte_accounting_matches_the_ir_model() {
+        // dense chain-2 u8→f32: read n·1, write n·4, baseline n·(1+4+4)
+        let plan = HostPlan::compile(&chain_pipe(DType::U8, DType::F32));
+        assert_eq!(plan.bytes_read(), 48);
+        assert_eq!(plan.bytes_written(), 48 * 4);
+        assert_eq!(plan.bytes_baseline(), 48 * (1 + 4 + 4));
+        // fused moves 5n vs baseline 9n: chain-2 mixed-width efficiency
+        assert_eq!(plan.bytes_baseline(), plan.bytes_read() + plan.bytes_written() + 48 * 4);
+
+        // reduce tier: only the statistics land
+        use crate::ops::ReduceKind;
+        let p = crate::chain::Chain::read::<crate::chain::U8>(&[4, 4, 3])
+            .batch(2)
+            .map(crate::chain::Mul(0.5))
+            .reduce_per_channel(ReduceKind::Mean)
+            .into_pipeline();
+        let plan = HostPlan::compile(&p);
+        let spec = plan.reduce().unwrap();
+        assert_eq!(plan.bytes_written(), spec.out_len() * 8);
+        assert!(plan.bytes_written() < plan.bytes_read(), "stats, not a surface");
+        assert_eq!(plan.bytes_baseline(), p.baseline_bytes());
     }
 }

@@ -92,6 +92,19 @@ pub struct PlannerStats {
     /// [`HostFusedEngine::vector_width`](crate::exec::HostFusedEngine::vector_width),
     /// so dashboards show which SIMD shape actually served.
     pub vector_width: u8,
+    /// Bytes host fused passes actually READ (gauge accumulated per launch,
+    /// mirrored from [`HostFusedEngine::bytes_read`](crate::exec::HostFusedEngine::bytes_read)).
+    /// With `bytes_written` and `bytes_baseline` this is the fusion-efficiency
+    /// accounting: actual single-pass traffic vs what an op-at-a-time
+    /// execution of the same pipelines would have moved.
+    pub bytes_read: u64,
+    /// Bytes host fused passes actually WROTE (reduce passes land only the
+    /// statistics — that is the point of the fold-while-reading tier).
+    pub bytes_written: u64,
+    /// Bytes the UNFUSED op-at-a-time baseline would have moved for the same
+    /// launches: per-stage materialization of `out_shape` × dtype width,
+    /// derived statically from the IR ([`crate::ops::Pipeline::baseline_bytes`]).
+    pub bytes_baseline: u64,
 }
 
 impl PlannerStats {

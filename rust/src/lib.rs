@@ -36,6 +36,7 @@ pub mod proplite;
 pub mod runtime;
 pub mod simulator;
 pub mod tensor;
+pub mod trace;
 
 /// Default artifact directory: honors `FKL_ARTIFACTS`, else walks up from the
 /// current directory looking for `artifacts/manifest.json`.

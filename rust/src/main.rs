@@ -7,6 +7,11 @@
 //! fkl serve --requests 500 --batch-window-us 500          # coordinator demo
 //! fkl serve --deadline-ms 5 --faults 'tier=stacked,launch=0,action=panic'
 //!                                  # deadline-aware serving + fault drill
+//! fkl serve --trace-out trace.json --metrics-json metrics.json
+//!                                  # per-request span trees (Chrome trace-event
+//!                                  # JSON, opens in Perfetto) + counters dump
+//! fkl metrics --demo               # serve a tiny window, print MetricsSnapshot
+//!                                  # JSON (fusion efficiency, tier times, p999)
 //! fkl lint  --ops mul:1.0,neg,neg,cast:f32 --shape 60x120 [--json]
 //!                                  # static analysis: diagnostics + canon report
 //! fkl calibrate                    # measure this host's HwProfile
@@ -53,6 +58,7 @@ fn main() -> anyhow::Result<()> {
         Some("plan") => plan(&args),
         Some("run") => run(&args),
         Some("serve") => serve(&args),
+        Some("metrics") => metrics_cmd(&args),
         Some("lint") => lint(&args),
         Some("calibrate") => {
             let hw = fkl::bench::calibrate();
@@ -65,7 +71,7 @@ fn main() -> anyhow::Result<()> {
             Ok(())
         }
         _ => {
-            eprintln!("usage: fkl <info|plan|run|serve|lint|calibrate> [options]");
+            eprintln!("usage: fkl <info|plan|run|serve|metrics|lint|calibrate> [options]");
             Ok(())
         }
     }
@@ -232,6 +238,12 @@ fn serve(args: &[String]) -> anyhow::Result<()> {
     }
     // --canonicalize: admit every pipeline through the ingress canonicalizer
     let canonicalize = args.iter().any(|a| a == "--canonicalize");
+    // --trace-out <path>: arm the span recorder; the capture is written as
+    // Chrome trace-event JSON on shutdown (opens in ui.perfetto.dev)
+    let trace_out = arg(args, "--trace-out");
+    let tracer = trace_out.as_ref().map(|_| std::sync::Arc::new(fkl::trace::Tracer::new()));
+    // --metrics-json <path>: dump the final MetricsSnapshot as JSON
+    let metrics_out = arg(args, "--metrics-json");
     let svc = Service::start(ServiceConfig {
         artifact_dir: None,
         queue_cap: 1024,
@@ -239,6 +251,7 @@ fn serve(args: &[String]) -> anyhow::Result<()> {
         default_deadline,
         faults,
         canonicalize,
+        tracing: tracer.clone(),
         ..ServiceConfig::default()
     });
 
@@ -298,6 +311,20 @@ fn serve(args: &[String]) -> anyhow::Result<()> {
         m.divergent_occupancy()
     );
     println!(
+        "bytes: read={} written={} op-at-a-time-baseline={} fusion_efficiency={:.2}x",
+        m.bytes_read,
+        m.bytes_written,
+        m.bytes_baseline,
+        m.fusion_efficiency()
+    );
+    println!(
+        "tier time: stacked={}us divergent={}us per_item={}us plan={}us",
+        m.tier_time_us.stacked,
+        m.tier_time_us.divergent,
+        m.tier_time_us.per_item,
+        m.tier_time_us.plan
+    );
+    println!(
         "faults: failed={} expired={} shed={} launch_panics={} breaker_trips={} \
          breaker_rejected={}",
         m.failed, m.expired, m.shed, m.launch_panics, m.breaker_trips, m.breaker_rejected
@@ -327,6 +354,60 @@ fn serve(args: &[String]) -> anyhow::Result<()> {
     if let Some(d) = &m.degraded {
         println!("degraded: {d}");
     }
+    svc.shutdown();
+    // exports are written AFTER shutdown: the service thread has flushed
+    // every pending request, so the capture and the dump are complete
+    if let Some(path) = metrics_out {
+        std::fs::write(&path, m.to_json().to_json())?;
+        println!("metrics dump: {path}");
+    }
+    if let (Some(path), Some(tr)) = (trace_out, tracer) {
+        std::fs::write(&path, tr.to_chrome_trace().to_json())?;
+        println!("trace capture: {path} ({} spans; open in ui.perfetto.dev)", tr.span_count());
+    }
+    Ok(())
+}
+
+/// `fkl metrics --demo`: serve a small mixed window in-process (stacked
+/// chain-5 company plus one divergent rider) and print the resulting
+/// [`fkl::coordinator::MetricsSnapshot`] as JSON — the quickest way to see
+/// the export schema (fusion efficiency, per-tier time, p999) end to end.
+fn metrics_cmd(args: &[String]) -> anyhow::Result<()> {
+    if !args.iter().any(|a| a == "--demo") {
+        eprintln!("usage: fkl metrics --demo");
+        return Ok(());
+    }
+    let svc = Service::start(ServiceConfig {
+        engine: fkl::coordinator::EngineSelect::HostFused,
+        policy: BatchPolicy { max_batch: 16, window: Duration::from_micros(200) },
+        ..ServiceConfig::default()
+    });
+    // chain-5 u8->f32: op-at-a-time moves 21 bytes/elem, fused moves 5 —
+    // the 4.2x ideal the efficiency counters should approach
+    let p = Chain::read::<U8>(&[32, 32])
+        .map(ConvertTo)
+        .map(Mul(0.5))
+        .map(Sub(3.0))
+        .map(Div(1.7))
+        .map(Mul(2.0))
+        .cast::<F32>()
+        .write()
+        .into_pipeline();
+    let lone = Chain::read::<U8>(&[32, 32]).map(ConvertTo).cast::<F32>().write().into_pipeline();
+    let mut rng = Rng::new(7);
+    let mut pending = Vec::new();
+    for i in 0..12 {
+        let item = fkl::tensor::Tensor::from_u8(&rng.vec_u8(32 * 32), &[1, 32, 32]);
+        let pipe = if i % 4 == 3 { lone.clone() } else { p.clone() };
+        if let Ok(rx) = svc.submit(pipe, item) {
+            pending.push(rx);
+        }
+    }
+    for rx in pending {
+        let _ = rx.recv();
+    }
+    let m = svc.metrics().unwrap_or_default();
+    println!("{}", m.to_json().to_json());
     svc.shutdown();
     Ok(())
 }

@@ -251,6 +251,28 @@ impl Pipeline {
         first + middle + last
     }
 
+    /// Bytes an op-at-a-time baseline MATERIALIZES, counting each buffer
+    /// once: the input, one intermediate per interior stage (at the same
+    /// `dtout.max(4)` width as [`Pipeline::unfused_bytes`]), and the final
+    /// output. This is the memory-traffic denominator of the
+    /// fusion-efficiency ratio: against the fused pass's `in + out`, a
+    /// dense chain-k map ideals out at `(k+1)/2`× (k+1 buffers collapse to
+    /// 2). A reduce terminator reads its last intermediate and lands only
+    /// the statistics, so a bare read→reduce baselines equal to its fused
+    /// pass (ratio 1.0) and every map stage in front of the seal adds a
+    /// whole materialization the fused fold never pays.
+    pub fn baseline_bytes(&self) -> usize {
+        let n = self.batch * self.item_elems();
+        let inter = self.dtout.size_bytes().max(4);
+        if let Some(spec) = self.reduction() {
+            return n * self.dtin.size_bytes()
+                + self.body().len() * n * inter
+                + spec.out_len() * self.dtout.size_bytes();
+        }
+        let k = self.body().len().max(1);
+        n * self.dtin.size_bytes() + (k - 1) * n * inter + n * self.dtout.size_bytes()
+    }
+
     /// GPU memory the unfused execution must allocate for intermediates and
     /// the fused one avoids (paper §VI-L).
     pub fn intermediate_bytes(&self) -> usize {
@@ -356,6 +378,48 @@ mod tests {
         // 3 kernels, each 100 elems * (4 read + 4 write)
         assert_eq!(p.unfused_bytes(), 3 * 100 * 8);
         assert!(p.intermediate_bytes() > 0);
+        // baseline materializes k+1 buffers once each: in + 2 inter + out;
+        // against the fused 2 buffers the chain-3 ideal is (3+1)/2 = 2x
+        assert_eq!(p.baseline_bytes(), 100 * 16);
+        assert_eq!(p.baseline_bytes() as f64 / p.fused_bytes() as f64, 2.0);
+    }
+
+    #[test]
+    fn baseline_bytes_chain_k_ideal_and_reduce_seal() {
+        // chain-1 moves exactly what the fused pass moves (ratio 1.0)
+        let one =
+            Pipeline::from_opcodes(&[(Opcode::Mul, 2.0)], &[8], 1, DType::F32, DType::F32)
+                .unwrap();
+        assert_eq!(one.baseline_bytes(), one.fused_bytes());
+        // chain-5 u8->f32: 1 + 4*4 + 4 = 21 bytes/elem vs 5 fused = 4.2x
+        let five = Pipeline::from_opcodes(
+            &[(Opcode::Mul, 2.0); 5],
+            &[10],
+            1,
+            DType::U8,
+            DType::F32,
+        )
+        .unwrap();
+        assert_eq!(five.baseline_bytes(), 10 * (1 + 4 * 4 + 4));
+        assert!(five.baseline_bytes() > five.fused_bytes());
+        // a bare read->reduce baseline equals its fused pass: there is no
+        // per-element intermediate for fusion to save
+        use super::super::{ReduceAxis, ReduceKind, ReduceSpec};
+        let spec = ReduceSpec::single(ReduceKind::Mean, ReduceAxis::Full);
+        let seal = Pipeline::new(
+            vec![
+                IOp::Mem(MemOp::Read { dtype: DType::F32 }),
+                IOp::compute(Opcode::Mul, 2.0),
+                IOp::Mem(MemOp::Reduce { spec }),
+            ],
+            vec![4, 4],
+            1,
+            DType::F32,
+            DType::F64,
+        )
+        .unwrap();
+        // one map stage in front of the seal = one full materialization
+        assert_eq!(seal.baseline_bytes(), seal.fused_bytes() + 16 * 8);
     }
 
     #[test]

@@ -1,0 +1,270 @@
+//! Request tracing: a fixed-capacity, overwrite-oldest span recorder.
+//!
+//! The paper's performance argument is about *where time and bytes go* —
+//! fused kernels win by collapsing N memory passes into one — so the serving
+//! stack must be able to say, for any single request, how long it spent
+//! queued vs planning vs launching. This module is that instrument:
+//!
+//! * **One causally-linked span tree per request.** The coordinator records
+//!   a `request` root span plus `admit` (shed/lint/canonicalize), `queue`,
+//!   `tier` (stacked/divergent/per-item + breaker verdict) and `reply`
+//!   children, with `plan` (cache hit/miss, compile time) and `launch`
+//!   (threads, lane width, elements) nested under `tier`.
+//! * **Zero allocation on the hot path.** [`Tracer::record`] copies one
+//!   fixed-size [`SpanRecord`] into a preallocated ring; when the ring is
+//!   full the oldest span is overwritten (a flight recorder, not a log).
+//! * **No-op when disabled.** The tracer is armed explicitly via
+//!   `ServiceConfig::tracing` / `HostFusedEngine::with_tracer`; when absent,
+//!   the serving hot path carries no tracing code at all (an `Option` that
+//!   is `None` — the same pattern as the fault injector).
+//! * **Perfetto-openable export.** [`chrome_trace`] renders the ring as
+//!   Chrome trace-event JSON (`ph`/`ts`/`dur`/`pid`/`tid`) via the in-crate
+//!   [`crate::jsonlite`], so `fkl serve --trace-out trace.json` produces a
+//!   capture that opens directly in `ui.perfetto.dev`.
+
+mod chrome;
+
+pub use chrome::chrome_trace;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Sentinel parent id of a root span.
+pub const NO_PARENT: u16 = u16::MAX;
+
+/// Default ring capacity: spans are small fixed records, so a generous
+/// default keeps whole serving sessions without growing.
+pub const DEFAULT_CAPACITY: usize = 1 << 16;
+
+/// The span taxonomy — one stage of a request's life.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    /// Root span: the whole queue-to-reply life of one request.
+    Request,
+    /// Ingress admission: shed check, lint, canonicalize.
+    Admit,
+    /// Waiting in the batcher for company or the window to close.
+    Queue,
+    /// The scheduling-ladder serve (stacked / divergent / per-item).
+    Tier,
+    /// Plan-cache consult: hit or compile.
+    Plan,
+    /// The fused launch itself.
+    Launch,
+    /// Sending the reply back to the client.
+    Reply,
+}
+
+impl Stage {
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Request => "request",
+            Stage::Admit => "admit",
+            Stage::Queue => "queue",
+            Stage::Tier => "tier",
+            Stage::Plan => "plan",
+            Stage::Launch => "launch",
+            Stage::Reply => "reply",
+        }
+    }
+}
+
+/// Serving-tier code carried in [`SpanRecord::a`] of a `tier` span (and the
+/// breaker-verdict code in [`SpanRecord::b`]).
+pub const TIER_STACKED: u64 = 0;
+pub const TIER_DIVERGENT: u64 = 1;
+pub const TIER_PER_ITEM: u64 = 2;
+/// Breaker verdict only: a half-open probe admission.
+pub const TIER_PROBE: u64 = 3;
+/// Breaker verdict only: an Open breaker rejected the group.
+pub const TIER_REJECT: u64 = 4;
+
+/// Human name of a tier / breaker-verdict code.
+pub fn tier_name(code: u64) -> &'static str {
+    match code {
+        TIER_STACKED => "stacked",
+        TIER_DIVERGENT => "divergent",
+        TIER_PER_ITEM => "per-item",
+        TIER_PROBE => "probe",
+        TIER_REJECT => "reject",
+        _ => "?",
+    }
+}
+
+/// One closed span. Fixed-size and `Copy` — recording is a slot write, no
+/// allocation. The `a`/`b`/`c` args are stage-specific:
+///
+/// | stage    | `a`                  | `b`                   | `c`       |
+/// |----------|----------------------|-----------------------|-----------|
+/// | `admit`  | lints emitted        | rewrites applied      | —         |
+/// | `tier`   | served-tier code     | breaker-verdict code  | group len |
+/// | `plan`   | cache hit (1/0)      | plan/compile time, us | —         |
+/// | `launch` | elements             | lane width            | threads   |
+/// | `reply`  | ok (1/0)             | —                     | —         |
+#[derive(Debug, Clone, Copy)]
+pub struct SpanRecord {
+    /// Request id (tracer-scoped, monotonically assigned; `tid` in the
+    /// Chrome export so each request renders as its own track).
+    pub req: u64,
+    /// Span id, unique within the request.
+    pub id: u16,
+    /// Parent span id within the request ([`NO_PARENT`] for the root).
+    pub parent: u16,
+    pub stage: Stage,
+    /// Start, microseconds since the tracer's epoch.
+    pub start_us: u64,
+    pub dur_us: u64,
+    pub a: u64,
+    pub b: u64,
+    pub c: u64,
+    /// Error recorded on the failing span (the typed serve-error variant
+    /// name — a `&'static str`, so failure traces stay allocation-free).
+    pub err: Option<&'static str>,
+}
+
+struct Ring {
+    buf: Vec<SpanRecord>,
+    /// Overwrite position once `buf` has reached capacity.
+    cursor: usize,
+}
+
+/// The span recorder. Thread-safe (`record` takes a short mutex over the
+/// preallocated ring); dropped spans are the oldest, never the newest.
+pub struct Tracer {
+    epoch: Instant,
+    next_req: AtomicU64,
+    cap: usize,
+    ring: Mutex<Ring>,
+}
+
+impl Tracer {
+    pub fn new() -> Tracer {
+        Self::with_capacity(DEFAULT_CAPACITY)
+    }
+
+    /// A tracer whose ring holds `cap` spans (oldest overwritten beyond it).
+    pub fn with_capacity(cap: usize) -> Tracer {
+        let cap = cap.max(8);
+        Tracer {
+            epoch: Instant::now(),
+            next_req: AtomicU64::new(1),
+            cap,
+            ring: Mutex::new(Ring { buf: Vec::with_capacity(cap), cursor: 0 }),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Assign the next request id (1-based; 0 means "untraced").
+    pub fn new_request(&self) -> u64 {
+        self.next_req.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Microseconds from the tracer's epoch to `t` (saturating).
+    pub fn us(&self, t: Instant) -> u64 {
+        t.saturating_duration_since(self.epoch).as_micros() as u64
+    }
+
+    /// Microseconds from the tracer's epoch to now.
+    pub fn now_us(&self) -> u64 {
+        self.us(Instant::now())
+    }
+
+    /// Record one closed span: a slot write into the preallocated ring —
+    /// zero allocation, overwrite-oldest beyond capacity.
+    pub fn record(&self, rec: SpanRecord) {
+        let mut ring = self.ring.lock().expect("tracer ring poisoned");
+        if ring.buf.len() < self.cap {
+            ring.buf.push(rec);
+        } else {
+            let at = ring.cursor;
+            ring.buf[at] = rec;
+            ring.cursor = (at + 1) % self.cap;
+        }
+    }
+
+    /// Spans currently held, oldest first.
+    pub fn spans(&self) -> Vec<SpanRecord> {
+        let ring = self.ring.lock().expect("tracer ring poisoned");
+        let mut out = Vec::with_capacity(ring.buf.len());
+        out.extend_from_slice(&ring.buf[ring.cursor..]);
+        out.extend_from_slice(&ring.buf[..ring.cursor]);
+        out
+    }
+
+    pub fn span_count(&self) -> usize {
+        self.ring.lock().expect("tracer ring poisoned").buf.len()
+    }
+
+    /// The whole ring as Chrome trace-event JSON (see [`chrome_trace`]).
+    pub fn to_chrome_trace(&self) -> crate::jsonlite::Value {
+        chrome_trace(&self.spans())
+    }
+}
+
+impl Default for Tracer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl std::fmt::Debug for Tracer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Tracer")
+            .field("capacity", &self.cap)
+            .field("spans", &self.span_count())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(req: u64, id: u16, start: u64) -> SpanRecord {
+        SpanRecord {
+            req,
+            id,
+            parent: NO_PARENT,
+            stage: Stage::Launch,
+            start_us: start,
+            dur_us: 5,
+            a: 0,
+            b: 0,
+            c: 0,
+            err: None,
+        }
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_and_reads_back_in_order() {
+        let tr = Tracer::with_capacity(8);
+        for i in 0..12u64 {
+            tr.record(span(i, 0, i));
+        }
+        let spans = tr.spans();
+        assert_eq!(spans.len(), 8, "capacity bounds the ring");
+        let reqs: Vec<u64> = spans.iter().map(|s| s.req).collect();
+        assert_eq!(reqs, (4..12).collect::<Vec<_>>(), "oldest dropped, order kept");
+    }
+
+    #[test]
+    fn request_ids_are_monotone_and_nonzero() {
+        let tr = Tracer::new();
+        let a = tr.new_request();
+        let b = tr.new_request();
+        assert!(a >= 1, "0 is the untraced sentinel");
+        assert_eq!(b, a + 1);
+    }
+
+    #[test]
+    fn clock_is_monotone_from_epoch() {
+        let tr = Tracer::new();
+        let t0 = tr.now_us();
+        let t1 = tr.now_us();
+        assert!(t1 >= t0);
+    }
+}

@@ -170,6 +170,14 @@ fn predicted_lane_width_matches_the_compiled_plan() {
         };
         assert_eq!(plan.vectorization(), want, "width rule drifted");
         assert!(t.lane_width > 1, "compiled plans never record the scalar arm");
+        // the predicted byte model is the same one the engine accounts with
+        assert_eq!(
+            t.bytes_fused,
+            (plan.bytes_read() + plan.bytes_written()) as u64,
+            "FKL008 fused bytes must match the compiled plan"
+        );
+        assert_eq!(t.bytes_baseline, p.baseline_bytes() as u64);
+        assert!(t.fusion_efficiency() >= 0.99, "fusion must never predict a byte regression");
     });
 }
 

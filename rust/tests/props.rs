@@ -130,12 +130,16 @@ fn prop_batcher_conserves_requests() {
                 DType::F32,
             )
             .unwrap();
+            let enqueued = Instant::now();
             b.push(PendingRequest {
                 pipeline: p,
                 item: Tensor::zeros(DType::F32, &[1, stream + 1, 4]),
-                enqueued: Instant::now(),
+                enqueued,
                 deadline: None,
                 reply: i,
+                trace_id: 0,
+                trace_verdict: 0,
+                admitted: enqueued,
             });
         }
         let far_future = Instant::now() + Duration::from_secs(10);

@@ -1,0 +1,89 @@
+//! `fkl serve --trace-out / --metrics-json` and `fkl metrics --demo`
+//! export contracts, exercised against the real binary: the capture must
+//! parse back through the in-crate JSON parser as Chrome trace events, and
+//! the metrics dump must carry the snapshot's counters.
+
+use std::process::{Command, Output};
+
+use fkl::jsonlite::parse;
+
+fn fkl(args: &[&str]) -> Output {
+    Command::new(env!("CARGO_BIN_EXE_fkl")).args(args).output().expect("spawn fkl")
+}
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("fkl-{}-{name}", std::process::id()))
+}
+
+#[test]
+fn serve_writes_a_perfetto_openable_trace_and_a_metrics_dump() {
+    let trace_path = tmp("trace.json");
+    let metrics_path = tmp("metrics.json");
+    let out = fkl(&[
+        "serve",
+        "--requests",
+        "40",
+        "--batch-window-us",
+        "200",
+        "--trace-out",
+        trace_path.to_str().unwrap(),
+        "--metrics-json",
+        metrics_path.to_str().unwrap(),
+    ]);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert_eq!(out.status.code(), Some(0), "serve must exit clean: {stdout}");
+    assert!(stdout.contains("trace capture:"), "capture announced: {stdout}");
+    assert!(stdout.contains("metrics dump:"), "dump announced: {stdout}");
+    assert!(stdout.contains("fusion_efficiency="), "efficiency on the console: {stdout}");
+
+    // the capture is valid Chrome trace-event JSON (ph/ts/dur/pid/tid)
+    let trace_src = std::fs::read_to_string(&trace_path).expect("trace written");
+    let trace = parse(&trace_src).expect("trace parses");
+    let events = trace["traceEvents"].as_arr().expect("traceEvents array");
+    assert!(events.len() >= 40, "every request traces spans: {} events", events.len());
+    for e in events {
+        assert_eq!(e["ph"].as_str(), Some("X"), "complete events: {}", e.to_json());
+        for key in ["ts", "dur", "pid", "tid"] {
+            assert!(e[key].as_f64().is_some(), "missing {key}: {}", e.to_json());
+        }
+        assert!(e["name"].as_str().is_some(), "named event: {}", e.to_json());
+    }
+    assert!(
+        events.iter().any(|e| e["name"].as_str() == Some("launch")),
+        "the window launched fused work"
+    );
+
+    // the dump carries the snapshot's counters, machine-readably
+    let dump_src = std::fs::read_to_string(&metrics_path).expect("metrics written");
+    let dump = parse(&dump_src).expect("metrics dump parses");
+    assert_eq!(dump["completed"].as_f64(), Some(40.0), "all requests completed: {dump_src}");
+    assert!(dump["launches"].as_f64().unwrap() >= 1.0);
+    assert!(dump["bytes_read"].as_f64().unwrap() > 0.0, "byte accounting engaged");
+    assert!(dump["fusion_efficiency"].as_f64().unwrap() > 1.0, "CMSD chain fuses");
+    assert!(dump["tier_time_us"]["stacked"].as_f64().is_some());
+    assert!(dump["latency_us"]["p999"].as_f64().is_some());
+    assert!(dump["breakers"].as_arr().is_some(), "breaker list present");
+
+    let _ = std::fs::remove_file(&trace_path);
+    let _ = std::fs::remove_file(&metrics_path);
+}
+
+#[test]
+fn metrics_demo_prints_the_snapshot_schema() {
+    let out = fkl(&["metrics", "--demo"]);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert_eq!(out.status.code(), Some(0), "metrics --demo must exit clean: {stdout}");
+    let snap = parse(stdout.trim()).expect("demo output is one JSON object");
+    assert!(snap["completed"].as_f64().unwrap() >= 1.0, "{stdout}");
+    assert!(snap["fusion_efficiency"].as_f64().unwrap() > 1.0, "chain-5 traffic fuses");
+    assert!(snap["tier_time_us"]["plan"].as_f64().is_some());
+    assert!(snap["latency_us"]["count"].as_f64().unwrap() >= 1.0);
+}
+
+#[test]
+fn metrics_without_demo_prints_usage() {
+    let out = fkl(&["metrics"]);
+    assert_eq!(out.status.code(), Some(0));
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("usage: fkl metrics --demo"), "{stderr}");
+}

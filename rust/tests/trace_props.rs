@@ -1,0 +1,394 @@
+//! End-to-end request tracing properties (`fkl::trace`), proven against the
+//! real coordinator:
+//!
+//! * every traced request closes ONE well-formed span tree — root present,
+//!   parents opened before children, request-scoped ids unique, child stage
+//!   durations summing to within the root's queue-to-reply time;
+//! * tracing off is free: serving without a tracer is bit-identical to
+//!   serving with one (same tensors, same byte accounting);
+//! * fault-injected requests still trace COMPLETE trees, with the typed
+//!   error recorded on the failing span (the launch, when one ran);
+//! * the capture exports as Chrome trace-event JSON that round-trips
+//!   through the in-crate [`fkl::jsonlite`] parser;
+//! * the fusion-efficiency counters surface the paper's headline ratio:
+//!   ≈(k+1)/2× for a dense chain-k, exactly 1.0 for chain-1.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use fkl::chain::{Add, Chain, ConvertTo, CvtColor, Div, Mul, MulC3, Sub, F32, U8};
+use fkl::coordinator::{BatchPolicy, EngineSelect, Service, ServiceConfig};
+use fkl::faults::FaultPlan;
+use fkl::ops::{Pipeline, ReduceKind};
+use fkl::proplite::Rng;
+use fkl::tensor::{make_frame, Rect, Tensor};
+use fkl::trace::{SpanRecord, Stage, Tracer, NO_PARENT, TIER_DIVERGENT, TIER_STACKED};
+
+/// The stacked company: a dense chain-5 u8->f32 stream (fused pass moves
+/// 5 bytes/elem where op-at-a-time moves 21 — the 4.2x ideal).
+fn chain5() -> Pipeline {
+    Chain::read::<U8>(&[8, 9])
+        .map(ConvertTo)
+        .map(Mul(0.5))
+        .map(Sub(3.0))
+        .map(Div(1.7))
+        .cast::<F32>()
+        .write()
+        .into_pipeline()
+}
+
+fn chain1() -> Pipeline {
+    Chain::read::<U8>(&[8, 9]).map(ConvertTo).cast::<F32>().write().into_pipeline()
+}
+
+fn dense_item(rng: &mut Rng) -> Tensor {
+    Tensor::from_u8(&rng.vec_u8(72), &[1, 8, 9])
+}
+
+/// Group the ring by request id, dropping the untraced sentinel.
+fn by_request(spans: &[SpanRecord]) -> HashMap<u64, Vec<SpanRecord>> {
+    let mut trees: HashMap<u64, Vec<SpanRecord>> = HashMap::new();
+    for s in spans {
+        assert_ne!(s.req, 0, "0 is the untraced sentinel, never recorded");
+        trees.entry(s.req).or_default().push(*s);
+    }
+    trees
+}
+
+/// The well-formedness contract of one request's span tree.
+fn assert_tree_wellformed(req: u64, tree: &[SpanRecord]) {
+    // request-scoped span ids are unique: the tree closed exactly once
+    let mut ids: Vec<u16> = tree.iter().map(|s| s.id).collect();
+    ids.sort_unstable();
+    let deduped = ids.len();
+    ids.dedup();
+    assert_eq!(ids.len(), deduped, "req {req}: duplicate span ids: {tree:?}");
+
+    let get = |id: u16| tree.iter().find(|s| s.id == id);
+    let root = get(0).unwrap_or_else(|| panic!("req {req}: no root span: {tree:?}"));
+    assert_eq!(root.stage, Stage::Request);
+    assert_eq!(root.parent, NO_PARENT, "the root has no parent");
+
+    // every non-root span's parent exists and was opened no later than it
+    for s in tree {
+        if s.id == 0 {
+            continue;
+        }
+        let parent = get(s.parent).unwrap_or_else(|| {
+            panic!("req {req}: span {} orphaned (parent {}): {tree:?}", s.id, s.parent)
+        });
+        assert!(
+            parent.start_us <= s.start_us,
+            "req {req}: parent {} opened after child {}",
+            parent.id,
+            s.id
+        );
+        let (child_end, root_end) = (s.start_us + s.dur_us, root.start_us + root.dur_us);
+        assert!(child_end <= root_end, "req {req}: span {} outlives the root", s.id);
+    }
+
+    // a request that reached a reply closed every sequential stage, and the
+    // stage durations account for (at most) the root's queue-to-reply time
+    let stages = [(1u16, Stage::Admit), (2, Stage::Queue), (3, Stage::Tier), (6, Stage::Reply)];
+    for (id, stage) in stages {
+        let s = get(id).unwrap_or_else(|| panic!("req {req}: missing {} span", stage.name()));
+        assert_eq!(s.stage, stage, "req {req}: span id {id} has the wrong stage");
+    }
+    let sequential: u64 = [1u16, 2, 3, 6].iter().map(|&id| get(id).unwrap().dur_us).sum();
+    assert!(
+        sequential <= root.dur_us,
+        "req {req}: stages sum to {sequential}us > root {}us",
+        root.dur_us
+    );
+}
+
+/// The acceptance window: stacked chain-5 company, a divergent mix (param
+/// twin, lane-structured, resize->split, reduce) and ONE fault-injected
+/// stream, served with tracing armed — every request closes a well-formed
+/// tree, the failing request records its error on the launch span, and the
+/// whole capture exports as Chrome trace events that round-trip.
+#[test]
+fn traced_mixed_window_closes_wellformed_span_trees() {
+    let tracer = Arc::new(Tracer::new());
+    let svc = Service::start(ServiceConfig {
+        artifact_dir: None,
+        queue_cap: 64,
+        policy: BatchPolicy { max_batch: 32, window: Duration::from_millis(25) },
+        engine: EngineSelect::HostFused,
+        // the `add` stream (and only it) errors at every launch tier
+        faults: Some(FaultPlan::parse("sig=add,tier=any,launch=*,action=err").unwrap()),
+        tracing: Some(tracer.clone()),
+        ..ServiceConfig::default()
+    });
+    let mk_mul = |mul: f64| {
+        Chain::read::<U8>(&[8, 9]).map(Mul(mul)).cast::<F32>().write().into_pipeline()
+    };
+    let lanes = Chain::read::<U8>(&[4, 3, 3])
+        .map(CvtColor)
+        .map(MulC3([0.5, 1.0, 1.5]))
+        .cast::<F32>()
+        .write()
+        .into_pipeline();
+    let structured = Chain::read_resize::<U8>(Rect::new(3, 2, 20, 14), 10, 6)
+        .map(CvtColor)
+        .cast::<F32>()
+        .write_split()
+        .into_pipeline();
+    let reduce = Chain::read::<U8>(&[8, 9])
+        .map(Mul(0.5))
+        .reduce_per_channel(ReduceKind::Mean)
+        .into_pipeline();
+    let faulted = Chain::read::<U8>(&[8, 9]).map(Add(3.0)).cast::<F32>().write().into_pipeline();
+
+    let mut rng = Rng::new(11);
+    let p5 = chain5();
+    let mut requests: Vec<(Pipeline, Tensor)> = Vec::new();
+    for _ in 0..4 {
+        requests.push((p5.clone(), dense_item(&mut rng)));
+    }
+    requests.push((mk_mul(2.0), dense_item(&mut rng)));
+    requests.push((mk_mul(5.0), dense_item(&mut rng)));
+    requests.push((lanes, Tensor::from_u8(&rng.vec_u8(36), &[1, 4, 3, 3])));
+    requests.push((structured, make_frame(40, 50, 12)));
+    requests.push((reduce, dense_item(&mut rng)));
+    requests.push((faulted, dense_item(&mut rng)));
+
+    let wall_t0 = Instant::now();
+    let rxs: Vec<_> =
+        requests.iter().map(|(p, t)| svc.submit(p.clone(), t.clone()).unwrap()).collect();
+    let mut failures = 0;
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let reply = rx.recv().expect("service alive");
+        match reply {
+            Ok(out) => {
+                let (p, t) = &requests[i];
+                assert_eq!(out, fkl::hostref::run_pipeline(p, t), "request {i}: bit-equal");
+            }
+            Err(e) => {
+                assert_eq!(i, requests.len() - 1, "only the add stream may fail, got {e} at {i}");
+                failures += 1;
+            }
+        }
+    }
+    let wall_us = wall_t0.elapsed().as_micros() as u64;
+    assert_eq!(failures, 1, "the fault-injected request failed typed");
+    svc.shutdown();
+
+    let spans = tracer.spans();
+    let trees = by_request(&spans);
+    assert_eq!(trees.len(), requests.len(), "one span tree per submitted request");
+    for (req, tree) in &trees {
+        assert_tree_wellformed(*req, tree);
+        let root = tree.iter().find(|s| s.id == 0).unwrap();
+        assert!(
+            root.dur_us <= wall_us + 2,
+            "req {req}: root ({}us) exceeds the e2e envelope ({wall_us}us)",
+            root.dur_us
+        );
+    }
+
+    // tier coverage: the chain-5 company stacked 4-wide, and the divergent
+    // remainder (param twin + structured + reduce) shared a pass
+    let tiers: Vec<&SpanRecord> = spans.iter().filter(|s| s.stage == Stage::Tier).collect();
+    assert!(
+        tiers.iter().any(|s| s.a == TIER_STACKED && s.c >= 4),
+        "chain-5 company must stack: {tiers:?}"
+    );
+    assert!(
+        tiers.iter().any(|s| s.a == TIER_DIVERGENT && s.c >= 2),
+        "the mixed remainder must share a divergent pass: {tiers:?}"
+    );
+
+    // the fault-injected request is COMPLETE (all sequential stages closed)
+    // and carries its error on the span that failed — the launch that ran
+    let failed_roots: Vec<&SpanRecord> =
+        spans.iter().filter(|s| s.id == 0 && s.err.is_some()).collect();
+    assert_eq!(failed_roots.len(), 1, "exactly one failing request: {failed_roots:?}");
+    let failed_req = failed_roots[0].req;
+    let failed_tree = &trees[&failed_req];
+    let failing: Vec<&SpanRecord> =
+        failed_tree.iter().filter(|s| s.id != 0 && s.err.is_some()).collect();
+    assert!(
+        failing.iter().all(|s| s.stage == Stage::Launch || s.stage == Stage::Tier),
+        "the error lands on the stage that failed: {failing:?}"
+    );
+    assert!(!failing.is_empty(), "the failing stage is recorded: {failed_tree:?}");
+    let reply = failed_tree.iter().find(|s| s.stage == Stage::Reply).unwrap();
+    assert_eq!(reply.a, 0, "the failing request's reply records not-ok");
+
+    // the capture round-trips through the in-crate parser as Chrome events
+    let chrome = tracer.to_chrome_trace();
+    let parsed = fkl::jsonlite::parse(&chrome.to_json()).expect("export parses back");
+    assert_eq!(parsed, chrome, "lossless round-trip");
+    let events = parsed["traceEvents"].as_arr().expect("traceEvents array");
+    assert_eq!(events.len(), spans.len());
+    for e in events {
+        assert_eq!(e["ph"].as_str(), Some("X"), "complete events only");
+        for key in ["name", "ts", "dur", "pid", "tid"] {
+            assert!(e[key].as_f64().is_some() || e[key].as_str().is_some(), "missing {key}");
+        }
+        let tid = e["tid"].as_f64().unwrap() as u64;
+        assert!(trees.contains_key(&tid), "tid {tid} names a traced request");
+    }
+}
+
+#[test]
+fn tracing_off_is_bit_identical_to_tracing_on() {
+    // identical traffic through an armed and an unarmed service: the replies
+    // and the byte accounting must not depend on whether anyone is watching
+    let run = |tracing: Option<Arc<Tracer>>| {
+        let svc = Service::start(ServiceConfig {
+            artifact_dir: None,
+            queue_cap: 64,
+            policy: BatchPolicy { max_batch: 8, window: Duration::from_micros(200) },
+            engine: EngineSelect::HostFused,
+            tracing,
+            ..ServiceConfig::default()
+        });
+        let p = chain5();
+        let mut rng = Rng::new(23);
+        // submit->recv serially so both runs see identical windows (one
+        // request each): the byte counters then compare exactly
+        let mut outs: Vec<Tensor> = Vec::new();
+        for _ in 0..10 {
+            let rx = svc.submit(p.clone(), dense_item(&mut rng)).unwrap();
+            outs.push(rx.recv().unwrap().expect("request ok"));
+        }
+        let m = svc.metrics().unwrap();
+        svc.shutdown();
+        (outs, m)
+    };
+    let tracer = Arc::new(Tracer::new());
+    let (traced, mt) = run(Some(tracer.clone()));
+    let (plain, mp) = run(None);
+    assert!(tracer.span_count() > 0, "the armed tracer recorded the session");
+    assert_eq!(traced, plain, "tracing must not change a single bit of output");
+    assert_eq!(mt.completed, mp.completed);
+    assert_eq!((mt.failed, mp.failed), (0, 0));
+    // the byte model is per-item linear, so it is batching- and
+    // tracing-invariant for identical traffic
+    assert_eq!(mt.bytes_read, mp.bytes_read);
+    assert_eq!(mt.bytes_written, mp.bytes_written);
+    assert_eq!(mt.bytes_baseline, mp.bytes_baseline);
+}
+
+#[test]
+fn fault_injected_stacked_launch_traces_the_error_on_the_launch_span() {
+    // deterministic window boundaries (the fault_props idiom): max_batch 2
+    // with a huge window pops exactly when both riders are queued
+    let tracer = Arc::new(Tracer::new());
+    let svc = Service::start(ServiceConfig {
+        artifact_dir: None,
+        queue_cap: 16,
+        policy: BatchPolicy { max_batch: 2, window: Duration::from_secs(600) },
+        engine: EngineSelect::HostFused,
+        faults: Some(FaultPlan::parse("sig=mul,tier=stacked,launch=0,action=err").unwrap()),
+        tracing: Some(tracer.clone()),
+        ..ServiceConfig::default()
+    });
+    let p = Chain::read::<U8>(&[4, 5]).map(Mul(2.0)).cast::<F32>().write().into_pipeline();
+    let rxs: Vec<_> = (0..2u8)
+        .map(|i| svc.submit(p.clone(), Tensor::from_u8(&[10 + i; 20], &[1, 4, 5])).unwrap())
+        .collect();
+    for rx in rxs {
+        assert!(rx.recv().expect("service alive").is_err(), "launch 0 is fault-injected");
+    }
+    svc.shutdown();
+
+    let trees = by_request(&tracer.spans());
+    assert_eq!(trees.len(), 2, "both riders trace");
+    for (req, tree) in &trees {
+        assert_tree_wellformed(*req, tree);
+        let root = tree.iter().find(|s| s.id == 0).unwrap();
+        let launch = tree
+            .iter()
+            .find(|s| s.stage == Stage::Launch)
+            .unwrap_or_else(|| panic!("req {req}: the failed launch is still a span: {tree:?}"));
+        assert_eq!(launch.parent, 3, "the launch nests under the tier span");
+        assert_eq!(launch.err, root.err, "the error lands on the span that failed");
+        assert!(launch.err.is_some(), "req {req}: launch carries the typed error name");
+        let tier = tree.iter().find(|s| s.stage == Stage::Tier).unwrap();
+        assert_eq!(tier.err, None, "the launch, not the tier, is the failing stage");
+        assert_eq!(tier.a, TIER_STACKED);
+    }
+}
+
+#[test]
+fn fusion_efficiency_reports_the_chain_k_ratio() {
+    let serve_bytes = |p: &Pipeline| {
+        let svc = Service::start(ServiceConfig {
+            artifact_dir: None,
+            queue_cap: 64,
+            policy: BatchPolicy { max_batch: 8, window: Duration::from_micros(200) },
+            engine: EngineSelect::HostFused,
+            ..ServiceConfig::default()
+        });
+        let mut rng = Rng::new(3);
+        let rxs: Vec<_> =
+            (0..8).map(|_| svc.submit(p.clone(), dense_item(&mut rng)).unwrap()).collect();
+        for rx in rxs {
+            rx.recv().unwrap().expect("request ok");
+        }
+        let m = svc.metrics().unwrap();
+        svc.shutdown();
+        m
+    };
+    // dense chain-5: op-at-a-time re-materializes 4 intermediates, so the
+    // fused pass moves far fewer bytes — the paper's whole argument
+    let m5 = serve_bytes(&chain5());
+    assert!(m5.bytes_read > 0 && m5.bytes_written > 0, "byte accounting engaged: {m5:?}");
+    assert!(
+        m5.bytes_baseline > m5.bytes_read + m5.bytes_written,
+        "chain-5 baseline must exceed the fused pass"
+    );
+    assert!(
+        m5.fusion_efficiency() > 1.5,
+        "chain-5 dense efficiency {} must clear 1.5x",
+        m5.fusion_efficiency()
+    );
+    // chain-1 has no intermediates to save: efficiency is exactly 1.0
+    let m1 = serve_bytes(&chain1());
+    assert!(
+        (m1.fusion_efficiency() - 1.0).abs() < 0.05,
+        "chain-1 efficiency {} must be ~1.0",
+        m1.fusion_efficiency()
+    );
+}
+
+#[test]
+fn metrics_snapshot_json_matches_the_counters() {
+    let svc = Service::start(ServiceConfig {
+        artifact_dir: None,
+        queue_cap: 64,
+        policy: BatchPolicy { max_batch: 8, window: Duration::from_micros(200) },
+        engine: EngineSelect::HostFused,
+        ..ServiceConfig::default()
+    });
+    let p = chain5();
+    let mut rng = Rng::new(5);
+    let rxs: Vec<_> =
+        (0..6).map(|_| svc.submit(p.clone(), dense_item(&mut rng)).unwrap()).collect();
+    for rx in rxs {
+        rx.recv().unwrap().expect("request ok");
+    }
+    let m = svc.metrics().unwrap();
+    svc.shutdown();
+
+    let j = m.to_json();
+    let n = |v: &fkl::jsonlite::Value| v.as_f64().expect("numeric field");
+    assert_eq!(n(&j["completed"]), m.completed as f64);
+    assert_eq!(n(&j["launches"]), m.launches as f64);
+    assert_eq!(n(&j["bytes_read"]), m.bytes_read as f64);
+    assert_eq!(n(&j["bytes_written"]), m.bytes_written as f64);
+    assert_eq!(n(&j["bytes_baseline"]), m.bytes_baseline as f64);
+    assert_eq!(n(&j["fusion_efficiency"]), m.fusion_efficiency());
+    assert_eq!(n(&j["tier_time_us"]["stacked"]), m.tier_time_us.stacked as f64);
+    assert_eq!(n(&j["tier_time_us"]["plan"]), m.tier_time_us.plan as f64);
+    assert_eq!(n(&j["latency_us"]["count"]), m.latency.count as f64);
+    assert_eq!(n(&j["latency_us"]["p999"]), m.latency.p999 as f64);
+    // and the dump survives its own serialization
+    let parsed = fkl::jsonlite::parse(&j.to_json()).expect("snapshot JSON parses");
+    assert_eq!(parsed, j, "lossless round-trip");
+    assert_eq!(n(&parsed["completed"]), m.completed as f64);
+}
