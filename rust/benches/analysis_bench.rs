@@ -65,7 +65,7 @@ fn drive(canonicalize: bool, n: usize) -> (f64, MetricsSnapshot) {
     let svc = Service::start(ServiceConfig {
         artifact_dir: None,
         queue_cap: 8192,
-        policy: BatchPolicy { max_batch: 50, window: Duration::from_micros(500) },
+        policy: BatchPolicy { max_batch: 50, window: Duration::from_micros(500), ..Default::default() },
         engine: EngineSelect::HostFused,
         canonicalize,
         ..ServiceConfig::default()

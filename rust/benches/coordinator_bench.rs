@@ -63,7 +63,7 @@ fn main() {
         [(1usize, 0u64), (8, 200), (25, 500), (50, 500), (50, 2000), (150, 2000)]
     {
         let (rps, m) = drive(
-            BatchPolicy { max_batch, window: Duration::from_micros(window_us) },
+            BatchPolicy { max_batch, window: Duration::from_micros(window_us), ..Default::default() },
             n,
         );
         println!(

@@ -76,7 +76,7 @@ fn drive(
     let svc = Service::start(ServiceConfig {
         artifact_dir: None,
         queue_cap: 8192,
-        policy: BatchPolicy { max_batch: 50, window: Duration::from_micros(500) },
+        policy: BatchPolicy { max_batch: 50, window: Duration::from_micros(500), ..Default::default() },
         default_deadline: deadline,
         faults,
         ..ServiceConfig::default()

@@ -1,0 +1,287 @@
+//! Open-loop load harness for the (sharded) coordinator.
+//!
+//! Closed-loop benches (`coordinator_bench`) hide queueing collapse: the
+//! client waits for replies, so the offered rate politely tracks capacity
+//! and the tail never shows. This bench drives OPEN-LOOP traffic — Poisson
+//! arrivals at a fixed offered rate, submitted on schedule whether or not
+//! earlier requests finished — over a mixed stream set (dense CMSD
+//! variants, a structured resize read, a reduce terminator), every request
+//! carrying a deadline. It sweeps offered load below and beyond capacity
+//! for `shards = 1` and `shards = 4` and reports served throughput,
+//! p50/p99/p999 latency, and shed rate.
+//!
+//! Writes `BENCH_serve.json` at the repo root. Acceptance (the sharding
+//! tentpole): at ~3x capacity offered, 4 shards serve >= 2x the 1-shard
+//! throughput at equal-or-better p99. The gate downgrades to a warning
+//! when the host has fewer than 4 cores (shards cannot run in parallel)
+//! or under `FKL_BENCH_SOFT=1` (shared CI runners).
+//!
+//! ```sh
+//! cargo bench --bench serve_bench
+//! FKL_BENCH_FAST=1 cargo bench --bench serve_bench   # trimmed
+//! FKL_BENCH_SOFT=1 ...                               # miss -> warning
+//! ```
+
+use std::time::{Duration, Instant};
+
+use fkl::chain::{Chain, ConvertTo, CvtColor, Div, Mul, Sub, F32, U8};
+use fkl::coordinator::{BatchPolicy, MetricsSnapshot, Service, ServiceConfig, SubmitError};
+use fkl::jsonlite::Value;
+use fkl::ops::{Pipeline, ReduceKind};
+use fkl::proplite::Rng;
+use fkl::tensor::{make_frame, Rect, Tensor};
+
+/// Per-request serve-by budget. Generous against the ~ms batch window but
+/// tight against queueing collapse: past capacity the queue estimate grows
+/// and admission control starts shedding instead of serving stale work.
+const DEADLINE: Duration = Duration::from_millis(50);
+
+fn dense(w: usize) -> Pipeline {
+    Chain::read::<U8>(&[60, w])
+        .map(ConvertTo)
+        .map(Mul(0.5))
+        .map(Sub(3.0))
+        .map(Div(1.7))
+        .cast::<F32>()
+        .write()
+        .into_pipeline()
+}
+
+/// The mixed stream set: six distinct stream keys so a 4-shard router has
+/// something to spread, weighted toward the dense streams.
+fn streams(rng: &mut Rng) -> Vec<(Pipeline, Tensor)> {
+    let mut out: Vec<(Pipeline, Tensor)> = (0..4)
+        .map(|k| {
+            let w = 120 + k;
+            (dense(w), Tensor::from_u8(&rng.vec_u8(60 * w), &[1, 60, w]))
+        })
+        .collect();
+    let structured = Chain::read_resize::<U8>(Rect::new(3, 2, 20, 14), 10, 6)
+        .map(CvtColor)
+        .cast::<F32>()
+        .write_split()
+        .into_pipeline();
+    out.push((structured, make_frame(40, 50, 12)));
+    let reduce = Chain::read::<U8>(&[8, 9])
+        .map(Mul(0.5))
+        .reduce_per_channel(ReduceKind::Mean)
+        .into_pipeline();
+    out.push((reduce, Tensor::from_u8(&rng.vec_u8(72), &[1, 8, 9])));
+    out
+}
+
+fn service(shards: usize) -> Service {
+    Service::start(ServiceConfig {
+        artifact_dir: None,
+        queue_cap: 4096,
+        policy: BatchPolicy { max_batch: 50, window: Duration::from_micros(500), ..Default::default() },
+        shards,
+        ..ServiceConfig::default()
+    })
+}
+
+/// Closed-loop burst on one shard: a capacity estimate to anchor the
+/// open-loop sweep's offered rates.
+fn calibrate(n: usize) -> f64 {
+    let svc = service(1);
+    let mut rng = Rng::new(7);
+    let set = streams(&mut rng);
+    let w = svc.submit(set[0].0.clone(), set[0].1.clone()).unwrap();
+    let _ = w.recv();
+    let t0 = Instant::now();
+    let pending: Vec<_> = (0..n)
+        .filter_map(|i| {
+            let (p, t) = &set[i % set.len()];
+            svc.submit(p.clone(), t.clone()).ok()
+        })
+        .collect();
+    let ok = pending.into_iter().filter(|rx| matches!(rx.recv(), Ok(Ok(_)))).count();
+    let rps = ok as f64 / t0.elapsed().as_secs_f64();
+    svc.shutdown();
+    rps
+}
+
+struct Point {
+    shards: usize,
+    offered_rps: f64,
+    served_rps: f64,
+    ok: usize,
+    client_rejected: usize,
+    shed_rate: f64,
+    p50_us: u64,
+    p99_us: u64,
+    p999_us: u64,
+    metrics: MetricsSnapshot,
+}
+
+impl Point {
+    fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("shards", Value::num(self.shards as f64)),
+            ("offered_rps", Value::num(self.offered_rps)),
+            ("served_rps", Value::num(self.served_rps)),
+            ("completed", Value::num(self.ok as f64)),
+            ("client_rejected", Value::num(self.client_rejected as f64)),
+            ("shed_rate", Value::num(self.shed_rate)),
+            ("p50_us", Value::num(self.p50_us as f64)),
+            ("p99_us", Value::num(self.p99_us as f64)),
+            ("p999_us", Value::num(self.p999_us as f64)),
+            ("server_shed", Value::num(self.metrics.shed as f64)),
+            ("server_expired", Value::num(self.metrics.expired as f64)),
+            ("steals", Value::num(self.metrics.steals as f64)),
+            ("stolen_requests", Value::num(self.metrics.stolen_requests as f64)),
+        ])
+    }
+}
+
+/// One open-loop run: `n` Poisson arrivals at `offered_rps`, every request
+/// deadlined. Submissions happen on the arrival clock — a full queue is a
+/// client-side shed (`QueueFull`), never a stall.
+fn drive(shards: usize, offered_rps: f64, n: usize, seed: u64) -> Point {
+    let svc = service(shards);
+    let mut rng = Rng::new(seed);
+    let set = streams(&mut rng);
+    // warm every stream (backend construction + first plans) on its shard
+    let warm: Vec<_> =
+        set.iter().filter_map(|(p, t)| svc.submit(p.clone(), t.clone()).ok()).collect();
+    for rx in warm {
+        let _ = rx.recv();
+    }
+
+    let t0 = Instant::now();
+    let mut next = t0;
+    let mut pending = Vec::with_capacity(n);
+    let mut client_rejected = 0usize;
+    for i in 0..n {
+        // exponential inter-arrival gap (u in [0,1); 1-u avoids ln(0))
+        let gap = -(1.0 - rng.f64(0.0, 1.0)).ln() / offered_rps;
+        next += Duration::from_secs_f64(gap);
+        let now = Instant::now();
+        if next > now {
+            std::thread::sleep(next - now);
+        }
+        let (p, t) = &set[i % set.len()];
+        match svc.submit_with_deadline(p.clone(), t.clone(), DEADLINE) {
+            Ok(rx) => pending.push(rx),
+            Err(SubmitError::QueueFull) => client_rejected += 1,
+            Err(SubmitError::Stopped) => break,
+        }
+    }
+    let submit_elapsed = t0.elapsed().as_secs_f64();
+    let ok = pending.into_iter().filter(|rx| matches!(rx.recv(), Ok(Ok(_)))).count();
+    let m = svc.metrics().expect("snapshot");
+    svc.shutdown();
+
+    let shed_rate = (client_rejected as u64 + m.shed + m.expired) as f64 / n as f64;
+    Point {
+        shards,
+        offered_rps: n as f64 / submit_elapsed,
+        served_rps: ok as f64 / submit_elapsed,
+        ok,
+        client_rejected,
+        shed_rate,
+        p50_us: m.latency.p50,
+        p99_us: m.latency.p99,
+        p999_us: m.latency.p999,
+        metrics: m,
+    }
+}
+
+fn main() {
+    let fast = std::env::var("FKL_BENCH_FAST").is_ok();
+    let soft = std::env::var("FKL_BENCH_SOFT").is_ok();
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let n = if fast { 400 } else { 1200 };
+
+    let capacity = calibrate(if fast { 200 } else { 500 });
+    println!("# serve_bench (open-loop Poisson, mixed dense/structured/reduce, deadline 50ms)");
+    println!("calibrated 1-shard capacity: {capacity:.0} req/s ({cores} core(s))");
+    println!(
+        "{:>6} {:>12} | {:>10} {:>9} {:>8} {:>8} {:>8} {:>7}",
+        "shards", "offered", "served", "shed_rate", "p50_us", "p99_us", "p999_us", "steals"
+    );
+
+    let mut points: Vec<Point> = Vec::new();
+    for &shards in &[1usize, 4] {
+        for (i, &mult) in [0.5f64, 1.5, 3.0].iter().enumerate() {
+            let pt = drive(shards, capacity * mult, n, 100 + i as u64);
+            println!(
+                "{:>6} {:>12.0} | {:>10.0} {:>9.3} {:>8} {:>8} {:>8} {:>7}",
+                pt.shards,
+                pt.offered_rps,
+                pt.served_rps,
+                pt.shed_rate,
+                pt.p50_us,
+                pt.p99_us,
+                pt.p999_us,
+                pt.metrics.steals
+            );
+            points.push(pt);
+        }
+    }
+
+    // acceptance: the overload points (3x capacity) — sharding must buy
+    // throughput without giving back the tail
+    let over1 = &points[2];
+    let over4 = &points[5];
+    let tput_ratio = over4.served_rps / over1.served_rps.max(1e-9);
+    let tput_pass = tput_ratio >= 2.0;
+    let p99_pass = over4.p99_us <= over1.p99_us;
+    let accept_pass = tput_pass && p99_pass;
+    println!(
+        "\nacceptance @3x offered: 4-shard/1-shard served = {tput_ratio:.2}x (target >= 2x): {}; \
+         p99 {}us vs {}us (target <=): {}",
+        if tput_pass { "PASS" } else { "FAIL" },
+        over4.p99_us,
+        over1.p99_us,
+        if p99_pass { "PASS" } else { "FAIL" }
+    );
+
+    let report = Value::obj(vec![
+        ("bench", Value::str("serve")),
+        (
+            "traffic",
+            Value::str("open-loop Poisson, 6 streams (4 dense CMSD widths, resize-split, reduce)"),
+        ),
+        ("fast_mode", Value::Bool(fast)),
+        ("cores", Value::num(cores as f64)),
+        ("requests_per_point", Value::num(n as f64)),
+        ("deadline_ms", Value::num(DEADLINE.as_millis() as f64)),
+        ("calibrated_capacity_rps", Value::num(capacity)),
+        (
+            "acceptance",
+            Value::obj(vec![
+                (
+                    "criterion",
+                    Value::str("@3x capacity: 4-shard >= 2x 1-shard served rps, p99 <="),
+                ),
+                ("throughput_ratio", Value::num(tput_ratio)),
+                ("p99_1shard_us", Value::num(over1.p99_us as f64)),
+                ("p99_4shard_us", Value::num(over4.p99_us as f64)),
+                ("pass", Value::Bool(accept_pass)),
+            ]),
+        ),
+        ("series", Value::Arr(points.iter().map(Point::to_json).collect())),
+    ]);
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|p| p.join("BENCH_serve.json"))
+        .unwrap_or_else(|| "BENCH_serve.json".into());
+    std::fs::write(&root, report.to_json()).expect("write BENCH_serve.json");
+    println!("wrote {}", root.display());
+
+    if !accept_pass {
+        if cores < 4 {
+            eprintln!(
+                "WARNING: acceptance not met ({tput_ratio:.2}x) — only {cores} core(s), \
+                 shards cannot run in parallel here; gate downgraded"
+            );
+            return;
+        }
+        if soft {
+            eprintln!("WARNING: acceptance criterion not met ({tput_ratio:.2}x) (soft mode)");
+            return;
+        }
+    }
+    assert!(accept_pass, "acceptance: 4-shard {tput_ratio:.2}x < 2x or p99 regressed");
+}

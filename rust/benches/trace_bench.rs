@@ -68,7 +68,7 @@ fn drive(label: &'static str, tracer: Option<Arc<Tracer>>, n: usize) -> Point {
     let svc = Service::start(ServiceConfig {
         artifact_dir: None,
         queue_cap: 8192,
-        policy: BatchPolicy { max_batch: 50, window: Duration::from_micros(500) },
+        policy: BatchPolicy { max_batch: 50, window: Duration::from_micros(500), ..Default::default() },
         tracing: tracer.clone(),
         ..ServiceConfig::default()
     });

@@ -13,11 +13,21 @@ pub struct BatchPolicy {
     pub max_batch: usize,
     /// How long the first request of a group may wait for company.
     pub window: Duration,
+    /// Lead time subtracted from member deadlines when deciding wake and
+    /// pop instants. A group pops once ANY member is within `deadline_slack`
+    /// of its deadline, so the launch starts *before* the deadline passes
+    /// (covering scheduler wake + launch setup) instead of exactly at it —
+    /// which would split the member into the expired half.
+    pub deadline_slack: Duration,
 }
 
 impl Default for BatchPolicy {
     fn default() -> Self {
-        BatchPolicy { max_batch: 64, window: Duration::from_micros(500) }
+        BatchPolicy {
+            max_batch: 64,
+            window: Duration::from_micros(500),
+            deadline_slack: Duration::from_micros(150),
+        }
     }
 }
 
@@ -83,9 +93,11 @@ impl<R> Batcher<R> {
         self.queues.values().map(Vec::len).sum()
     }
 
-    /// Pop the next group that is ready: full (>= max_batch) or aged past the
-    /// window. Requests come out in arrival order (FIFO within a stream),
-    /// split into live and deadline-expired halves at pop time.
+    /// Pop the next group that is ready: full (>= max_batch), aged past the
+    /// window, or holding a member whose deadline is within
+    /// `deadline_slack` of `now` (serve it NOW or answer `Expired` later).
+    /// Requests come out in arrival order (FIFO within a stream), split
+    /// into live and deadline-expired halves at pop time.
     pub fn pop_ready(&mut self, now: Instant) -> Option<Popped<R>> {
         let policy = self.policy;
         let key = self
@@ -94,7 +106,8 @@ impl<R> Batcher<R> {
             .filter(|(_, q)| {
                 !q.is_empty()
                     && (q.len() >= policy.max_batch
-                        || now.duration_since(q[0].enqueued) >= policy.window)
+                        || now.duration_since(q[0].enqueued) >= policy.window
+                        || q.iter().any(|r| deadline_due(r, now, policy.deadline_slack)))
             })
             // oldest head first: fairness across streams
             .min_by_key(|(_, q)| q[0].enqueued)
@@ -126,14 +139,36 @@ impl<R> Batcher<R> {
         out
     }
 
-    /// Deadline of the oldest pending request (service loop sleep hint).
+    /// Earliest instant at which any group becomes ready (service loop
+    /// sleep hint): the minimum over every stream's window fire
+    /// (`head.enqueued + window`) AND every member's deadline minus
+    /// `deadline_slack`. A loop that sleeps past this instant would let a
+    /// member's deadline lapse inside the batcher — the deadline-blind bug
+    /// this replaces woke only at window fires, so any deadline shorter
+    /// than the window expired even on an idle service.
     pub fn next_deadline(&self) -> Option<Instant> {
+        let slack = self.policy.deadline_slack;
         self.queues
             .values()
-            .filter_map(|q| q.first())
-            .map(|r| r.enqueued + self.policy.window)
+            .flat_map(|q| {
+                let window_fire = q.first().map(|r| r.enqueued + self.policy.window);
+                let deadline_fire = q
+                    .iter()
+                    .filter_map(|r| {
+                        r.deadline.map(|d| d.checked_sub(slack).unwrap_or(r.enqueued))
+                    })
+                    .min();
+                window_fire.into_iter().chain(deadline_fire)
+            })
             .min()
     }
+}
+
+/// Is `req`'s deadline within `slack` of `now` (or already past)? Such a
+/// request must be popped immediately: waiting any longer either serves it
+/// dangerously late or expires it outright.
+fn deadline_due<R>(req: &PendingRequest<R>, now: Instant, slack: Duration) -> bool {
+    req.deadline.is_some_and(|d| now + slack >= d)
 }
 
 #[cfg(test)]
@@ -172,7 +207,7 @@ mod tests {
 
     #[test]
     fn groups_by_stream_key_not_params() {
-        let mut b = Batcher::new(BatchPolicy { max_batch: 10, window: Duration::ZERO });
+        let mut b = Batcher::new(BatchPolicy { max_batch: 10, window: Duration::ZERO, ..Default::default() });
         b.push(req(1.0, 0));
         b.push(req(99.0, 1)); // different param, same code
         let g = b.pop_ready(Instant::now()).unwrap();
@@ -183,7 +218,7 @@ mod tests {
 
     #[test]
     fn full_batch_fires_before_window() {
-        let mut b = Batcher::new(BatchPolicy { max_batch: 2, window: Duration::from_secs(60) });
+        let mut b = Batcher::new(BatchPolicy { max_batch: 2, window: Duration::from_secs(60), ..Default::default() });
         b.push(req(1.0, 0));
         assert!(b.pop_ready(Instant::now()).is_none(), "waits for window/company");
         b.push(req(1.0, 1));
@@ -192,7 +227,7 @@ mod tests {
 
     #[test]
     fn window_expiry_fires_partial_batch() {
-        let mut b = Batcher::new(BatchPolicy { max_batch: 8, window: Duration::from_millis(1) });
+        let mut b = Batcher::new(BatchPolicy { max_batch: 8, window: Duration::from_millis(1), ..Default::default() });
         b.push(req(1.0, 0));
         let later = Instant::now() + Duration::from_millis(5);
         assert_eq!(b.pop_ready(later).unwrap().live.len(), 1);
@@ -200,7 +235,7 @@ mod tests {
 
     #[test]
     fn fifo_within_stream_and_no_loss() {
-        let mut b = Batcher::new(BatchPolicy { max_batch: 3, window: Duration::ZERO });
+        let mut b = Batcher::new(BatchPolicy { max_batch: 3, window: Duration::ZERO, ..Default::default() });
         for i in 0..7 {
             b.push(req(1.0, i));
         }
@@ -214,7 +249,7 @@ mod tests {
 
     #[test]
     fn drain_all_empties() {
-        let mut b = Batcher::new(BatchPolicy { max_batch: 4, window: Duration::from_secs(9) });
+        let mut b = Batcher::new(BatchPolicy { max_batch: 4, window: Duration::from_secs(9), ..Default::default() });
         for i in 0..9 {
             b.push(req(1.0, i));
         }
@@ -226,7 +261,7 @@ mod tests {
 
     #[test]
     fn deadline_expired_requests_split_out_at_pop_time() {
-        let mut b = Batcher::new(BatchPolicy { max_batch: 10, window: Duration::ZERO });
+        let mut b = Batcher::new(BatchPolicy { max_batch: 10, window: Duration::ZERO, ..Default::default() });
         b.push(req(1.0, 0)); // no deadline: never expires
         b.push(req_deadline(1.0, 1, Duration::from_secs(60))); // generous
         b.push(req_deadline(1.0, 2, Duration::ZERO)); // dead on arrival
@@ -236,8 +271,80 @@ mod tests {
     }
 
     #[test]
+    fn sub_window_deadline_pops_immediately_and_live() {
+        // The headline regression: deadline (100µs) shorter than the window
+        // (500µs). The deadline-blind batcher held this request for the full
+        // window and then split it into the expired half; the deadline-aware
+        // batcher pops it at once, still live.
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 64,
+            window: Duration::from_micros(500),
+            deadline_slack: Duration::from_micros(150),
+        });
+        b.push(req_deadline(1.0, 7, Duration::from_micros(100)));
+        let g = b.pop_ready(Instant::now()).expect("deadline-due group is ready NOW");
+        assert_eq!(g.live.iter().map(|r| r.reply).collect::<Vec<_>>(), vec![7]);
+        assert!(g.expired.is_empty(), "popped before the deadline passed");
+    }
+
+    #[test]
+    fn next_deadline_wakes_for_member_deadline_before_window_fire() {
+        let policy = BatchPolicy {
+            max_batch: 64,
+            window: Duration::from_secs(60),
+            deadline_slack: Duration::from_micros(150),
+        };
+        let mut b = Batcher::new(policy);
+        let r = req_deadline(1.0, 0, Duration::from_millis(5));
+        let enqueued = r.enqueued;
+        b.push(r);
+        let wake = b.next_deadline().expect("pending work has a wake instant");
+        assert!(
+            wake <= enqueued + Duration::from_millis(5),
+            "wake no later than the deadline itself"
+        );
+        assert!(
+            wake < enqueued + Duration::from_secs(1),
+            "wake is driven by the deadline, not the 60s window"
+        );
+    }
+
+    #[test]
+    fn far_deadline_keeps_the_window_fire() {
+        // A lax deadline must not delay the window pop, and the wake hint
+        // stays the window fire (the earlier of the two).
+        let policy = BatchPolicy {
+            max_batch: 64,
+            window: Duration::from_millis(1),
+            deadline_slack: Duration::from_micros(150),
+        };
+        let mut b = Batcher::new(policy);
+        let r = req_deadline(1.0, 0, Duration::from_secs(10));
+        let enqueued = r.enqueued;
+        b.push(r);
+        assert_eq!(b.next_deadline(), Some(enqueued + Duration::from_millis(1)));
+        assert!(b.pop_ready(enqueued).is_none(), "not ready before the window");
+        assert!(b.pop_ready(enqueued + Duration::from_millis(2)).is_some());
+    }
+
+    #[test]
+    fn deadline_due_member_fires_its_whole_group() {
+        // One urgent member makes the group ready; its lax companions ride
+        // along in the same launch (FIFO order preserved).
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 64,
+            window: Duration::from_secs(60),
+            deadline_slack: Duration::from_micros(150),
+        });
+        b.push(req(1.0, 0));
+        b.push(req_deadline(1.0, 1, Duration::from_micros(50)));
+        let g = b.pop_ready(Instant::now()).expect("urgent member fires the group");
+        assert_eq!(g.live.iter().map(|r| r.reply).collect::<Vec<_>>(), vec![0, 1]);
+    }
+
+    #[test]
     fn drain_all_splits_expired_like_pop_ready() {
-        let mut b = Batcher::new(BatchPolicy { max_batch: 4, window: Duration::from_secs(9) });
+        let mut b = Batcher::new(BatchPolicy { max_batch: 4, window: Duration::from_secs(9), ..Default::default() });
         b.push(req_deadline(1.0, 0, Duration::ZERO));
         b.push(req(1.0, 1));
         let groups = b.drain_all(Instant::now());

@@ -114,6 +114,20 @@ impl LogHistogram {
     pub fn bucket_counts(&self) -> &[u64; BUCKETS] {
         &self.counts
     }
+
+    /// Fold another histogram into this one. Exact: bucket counts add,
+    /// count/sum add, max takes the max — merging N shard histograms then
+    /// taking quantiles gives the same answer as one histogram having
+    /// recorded all the observations (the merge seam of the sharded
+    /// coordinator's metrics).
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.max = self.max.max(other.max);
+    }
 }
 
 #[cfg(test)]
@@ -189,6 +203,23 @@ mod tests {
         }
         assert!(h.quantile(0.999) >= 4_000, "p999={}", h.quantile(0.999));
         assert!(h.quantile(0.99) <= 64, "p99 stays in the body");
+    }
+
+    #[test]
+    fn merge_equals_recording_everything_in_one_histogram() {
+        let (mut a, mut b, mut whole) = (LogHistogram::new(), LogHistogram::new(), LogHistogram::new());
+        for i in 0..1000u64 {
+            let v = if i % 100 == 0 { 250_000 } else { 40 + i % 17 };
+            if i % 2 == 0 { a.record(v) } else { b.record(v) }
+            whole.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a, whole, "bucket-exact merge: same counts, sum, max");
+        assert_eq!(a.quantile(0.999), whole.quantile(0.999));
+        // merging an empty histogram is the identity
+        let before = a.clone();
+        a.merge(&LogHistogram::new());
+        assert_eq!(a, before);
     }
 
     #[test]

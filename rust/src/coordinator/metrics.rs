@@ -65,6 +65,12 @@ pub struct Metrics {
     /// Admissions whose canonical form matched a previously seen canonical
     /// stream — the plan-cache wins canonicalization buys.
     pub canonical_cache_hits: u64,
+    /// Steal events: how many times THIS worker, finding itself idle, took
+    /// work from a busier sibling shard (always 0 on the single-worker
+    /// coordinator).
+    pub steals: u64,
+    /// Requests those steal events moved onto this worker.
+    pub stolen_requests: u64,
     /// Per-tier serve counts copied from the engine (HF/VF coverage).
     pub planner: PlannerStats,
 }
@@ -129,6 +135,8 @@ impl Metrics {
             lints_emitted: self.lints_emitted,
             rewrites_applied: self.rewrites_applied,
             canonical_cache_hits: self.canonical_cache_hits,
+            steals: self.steals,
+            stolen_requests: self.stolen_requests,
             bytes_read: self.planner.bytes_read,
             bytes_written: self.planner.bytes_written,
             bytes_baseline: self.planner.bytes_baseline,
@@ -136,6 +144,9 @@ impl Metrics {
             planner: self.planner.clone(),
             latency: LatencyStats::from_histogram(&self.latency),
             deadline_margin: LatencyStats::from_histogram(&self.margin),
+            latency_hist: self.latency.clone(),
+            margin_hist: self.margin.clone(),
+            shards: Vec::new(),
             breaker_trips: breakers.trips(),
             breaker_rejected: breakers.rejected(),
             breakers: breakers.snapshot(),
@@ -256,6 +267,10 @@ pub struct MetricsSnapshot {
     pub rewrites_applied: u64,
     /// Admissions whose canonical form matched an earlier canonical stream.
     pub canonical_cache_hits: u64,
+    /// Work-steal events across all workers (0 on the single coordinator).
+    pub steals: u64,
+    /// Requests moved between shards by those steals.
+    pub stolen_requests: u64,
     /// Bytes the fused passes actually read (host-plan byte model).
     pub bytes_read: u64,
     /// Bytes the fused passes actually wrote.
@@ -268,6 +283,16 @@ pub struct MetricsSnapshot {
     pub latency: LatencyStats,
     /// Remaining-time-at-completion distribution for deadline requests.
     pub deadline_margin: LatencyStats,
+    /// The full latency histogram behind `latency` — carried so shard
+    /// snapshots merge EXACTLY (bucket-wise) instead of averaging
+    /// percentiles, which is statistically meaningless.
+    pub latency_hist: LogHistogram,
+    /// The full histogram behind `deadline_margin` (same reason).
+    pub margin_hist: LogHistogram,
+    /// Per-shard rows, one per worker (empty on the single-worker
+    /// coordinator; filled by the shard snapshot path and finalized —
+    /// occupancy, sort order — by [`MetricsSnapshot::merge`]).
+    pub shards: Vec<ShardStat>,
     /// Total breaker demotions across all streams.
     pub breaker_trips: u64,
     /// Total requests rejected by Open/HalfOpen breakers.
@@ -276,7 +301,115 @@ pub struct MetricsSnapshot {
     pub breakers: Vec<BreakerSnapshot>,
 }
 
+/// One shard's row in a merged [`MetricsSnapshot`]: outcome counters,
+/// steal activity, and load gauges for THAT worker — imbalance and steal
+/// traffic stay visible after the counters sum.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ShardStat {
+    /// Worker index (also the `shard` arg on its trace request-roots).
+    pub shard: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub shed: u64,
+    pub expired: u64,
+    /// Steal events THIS shard performed (it was the idle thief).
+    pub steals: u64,
+    /// Requests it took from siblings across those steals.
+    pub stolen_requests: u64,
+    /// Queued work at snapshot time: mailbox backlog + batcher pending.
+    pub pending: u64,
+    /// This shard's share of all completed requests, 0..=1 (0 before any
+    /// traffic). Filled by [`MetricsSnapshot::merge`].
+    pub occupancy: f64,
+}
+
 impl MetricsSnapshot {
+    /// Merge per-shard snapshots into one fleet view. Counters sum;
+    /// histograms merge bucket-wise and the percentile stats are recomputed
+    /// from the merged histograms (exact — never an average of averages);
+    /// `est_item_us` is the completion-weighted mean of the shard
+    /// estimates; per-stream breaker rows concatenate (each shard runs its
+    /// own board, so one stream key may appear once per shard); shard rows
+    /// concatenate, get their occupancy share, and sort by shard id.
+    pub fn merge(parts: Vec<MetricsSnapshot>) -> MetricsSnapshot {
+        let mut it = parts.into_iter();
+        let Some(mut out) = it.next() else {
+            return MetricsSnapshot::default();
+        };
+        for p in it {
+            out.completed += p.completed;
+            out.rejected += p.rejected;
+            out.failed += p.failed;
+            out.expired += p.expired;
+            out.shed += p.shed;
+            out.launch_panics += p.launch_panics;
+            out.supervisor_restarts += p.supervisor_restarts;
+            if out.degraded.is_none() {
+                out.degraded = p.degraded;
+            }
+            // completion-weighted blend; a shard that served nothing must
+            // not drag the fleet estimate toward zero
+            let (wa, wb) = (out.completed - p.completed, p.completed);
+            if wa + wb > 0 {
+                out.est_item_us = (out.est_item_us * wa as f64 + p.est_item_us * wb as f64)
+                    / (wa + wb) as f64;
+            }
+            out.launches += p.launches;
+            out.batched_items += p.batched_items;
+            out.padded_planes += p.padded_planes;
+            out.unfused_fallbacks += p.unfused_fallbacks;
+            out.divergent_windows += p.divergent_windows;
+            out.divergent_items += p.divergent_items;
+            out.divergent_work_elems += p.divergent_work_elems;
+            out.divergent_padded_elems += p.divergent_padded_elems;
+            out.lints_emitted += p.lints_emitted;
+            out.rewrites_applied += p.rewrites_applied;
+            out.canonical_cache_hits += p.canonical_cache_hits;
+            out.steals += p.steals;
+            out.stolen_requests += p.stolen_requests;
+            out.bytes_read += p.bytes_read;
+            out.bytes_written += p.bytes_written;
+            out.bytes_baseline += p.bytes_baseline;
+            out.tier_time_us.stacked += p.tier_time_us.stacked;
+            out.tier_time_us.divergent += p.tier_time_us.divergent;
+            out.tier_time_us.per_item += p.tier_time_us.per_item;
+            out.tier_time_us.plan += p.tier_time_us.plan;
+            out.planner.exact += p.planner.exact;
+            out.planner.staticloop += p.planner.staticloop;
+            out.planner.interp += p.planner.interp;
+            out.planner.unfused += p.planner.unfused;
+            out.planner.host += p.planner.host;
+            out.planner.unsupported += p.planner.unsupported;
+            out.planner.structured += p.planner.structured;
+            out.planner.reduction += p.planner.reduction;
+            out.planner.divergent += p.planner.divergent;
+            out.planner.plan_cache += p.planner.plan_cache;
+            out.planner.vectorized += p.planner.vectorized;
+            out.planner.vector_width = out.planner.vector_width.max(p.planner.vector_width);
+            out.planner.bytes_read += p.planner.bytes_read;
+            out.planner.bytes_written += p.planner.bytes_written;
+            out.planner.bytes_baseline += p.planner.bytes_baseline;
+            out.latency_hist.merge(&p.latency_hist);
+            out.margin_hist.merge(&p.margin_hist);
+            out.breaker_trips += p.breaker_trips;
+            out.breaker_rejected += p.breaker_rejected;
+            out.breakers.extend(p.breakers);
+            out.shards.extend(p.shards);
+        }
+        out.latency = LatencyStats::from_histogram(&out.latency_hist);
+        out.deadline_margin = LatencyStats::from_histogram(&out.margin_hist);
+        out.breakers.sort_by(|a, b| a.key.cmp(&b.key));
+        for s in &mut out.shards {
+            s.occupancy = if out.completed == 0 {
+                0.0
+            } else {
+                s.completed as f64 / out.completed as f64
+            };
+        }
+        out.shards.sort_by_key(|s| s.shard);
+        out
+    }
+
     /// Mean items per launch — the achieved HF width.
     pub fn mean_batch(&self) -> f64 {
         if self.launches == 0 {
@@ -377,6 +510,8 @@ impl MetricsSnapshot {
             ("lints_emitted", n(self.lints_emitted)),
             ("rewrites_applied", n(self.rewrites_applied)),
             ("canonical_cache_hits", n(self.canonical_cache_hits)),
+            ("steals", n(self.steals)),
+            ("stolen_requests", n(self.stolen_requests)),
             ("bytes_read", n(self.bytes_read)),
             ("bytes_written", n(self.bytes_written)),
             ("bytes_baseline", n(self.bytes_baseline)),
@@ -415,6 +550,27 @@ impl MetricsSnapshot {
             ("breaker_trips", n(self.breaker_trips)),
             ("breaker_rejected", n(self.breaker_rejected)),
             ("breakers", Value::Arr(breakers)),
+            (
+                "shards",
+                Value::Arr(
+                    self.shards
+                        .iter()
+                        .map(|s| {
+                            Value::obj(vec![
+                                ("shard", n(s.shard)),
+                                ("completed", n(s.completed)),
+                                ("failed", n(s.failed)),
+                                ("shed", n(s.shed)),
+                                ("expired", n(s.expired)),
+                                ("steals", n(s.steals)),
+                                ("stolen_requests", n(s.stolen_requests)),
+                                ("pending", n(s.pending)),
+                                ("occupancy", Value::num(s.occupancy)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
         ])
     }
 }
@@ -589,6 +745,99 @@ mod tests {
         assert!((s.fusion_efficiency() - 3.0).abs() < 1e-12);
         // no traffic: ratio reads 1.0, not NaN
         assert_eq!(Metrics::default().snapshot(&board()).fusion_efficiency(), 1.0);
+    }
+
+    #[test]
+    fn merge_sums_counters_and_merges_histograms_exactly() {
+        let mk = |completed: u64, lat_us: &[u64]| {
+            let mut m = Metrics::default();
+            m.completed = completed;
+            m.failed = 1;
+            m.launches = 2;
+            m.batched_items = completed;
+            m.steals = 1;
+            m.stolen_requests = 3;
+            m.planner.host = completed as usize;
+            m.planner.vector_width = if completed > 4 { 16 } else { 8 };
+            m.tier_times.stacked = 10;
+            for &us in lat_us {
+                m.observe_latency(Duration::from_micros(us));
+            }
+            m.snapshot(&board())
+        };
+        let a = mk(4, &[100, 100, 100, 100]);
+        let b = mk(8, &[1_000_000; 8]);
+        let merged = MetricsSnapshot::merge(vec![a.clone(), b]);
+        assert_eq!(merged.completed, 12);
+        assert_eq!(merged.failed, 2);
+        assert_eq!(merged.launches, 4);
+        assert_eq!((merged.steals, merged.stolen_requests), (2, 6));
+        assert_eq!(merged.planner.host, 12);
+        assert_eq!(merged.planner.vector_width, 16, "gauge takes the max");
+        assert_eq!(merged.tier_time_us.stacked, 20);
+        // histogram merge is exact: all 12 observations, true max, and the
+        // p50 sits in the slow shard's range (8 of 12 samples are slow)
+        assert_eq!(merged.latency.count, 12);
+        assert_eq!(merged.latency.max, 1_000_000);
+        assert!(merged.latency.p50 >= 500_000, "p50={}", merged.latency.p50);
+        // single-part and empty merges are identity-shaped
+        assert_eq!(MetricsSnapshot::merge(vec![a.clone()]).completed, a.completed);
+        assert_eq!(MetricsSnapshot::merge(Vec::new()).completed, 0);
+    }
+
+    #[test]
+    fn merge_fills_shard_occupancy_and_sorts_rows() {
+        let row = |shard: u64, completed: u64| {
+            let mut m = Metrics::default();
+            m.completed = completed;
+            let mut s = m.snapshot(&board());
+            s.shards = vec![ShardStat { shard, completed, ..ShardStat::default() }];
+            s
+        };
+        let merged = MetricsSnapshot::merge(vec![row(2, 6), row(0, 2), row(1, 0)]);
+        assert_eq!(merged.shards.len(), 3);
+        assert_eq!(
+            merged.shards.iter().map(|s| s.shard).collect::<Vec<_>>(),
+            vec![0, 1, 2],
+            "rows sort by shard id"
+        );
+        let occ: Vec<f64> = merged.shards.iter().map(|s| s.occupancy).collect();
+        assert!((occ[0] - 0.25).abs() < 1e-12);
+        assert!((occ[1] - 0.0).abs() < 1e-12);
+        assert!((occ[2] - 0.75).abs() < 1e-12);
+        assert!((occ.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert_eq!(
+            merged.shards.iter().map(|s| s.completed).sum::<u64>(),
+            merged.completed,
+            "shard rows account for every completion"
+        );
+    }
+
+    #[test]
+    fn merge_weights_est_item_us_by_completions() {
+        let part = |completed: u64, est: f64| {
+            let mut m = Metrics::default();
+            m.completed = completed;
+            m.ewma_item_us = est;
+            m.snapshot(&board())
+        };
+        let merged = MetricsSnapshot::merge(vec![part(3, 100.0), part(1, 500.0)]);
+        assert!((merged.est_item_us - 200.0).abs() < 1e-9, "est={}", merged.est_item_us);
+        // an idle shard (no completions) leaves the estimate alone
+        let merged = MetricsSnapshot::merge(vec![part(2, 80.0), part(0, 0.0)]);
+        assert!((merged.est_item_us - 80.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merged_shards_surface_in_json() {
+        let mut s = Metrics::default().snapshot(&board());
+        s.shards = vec![ShardStat { shard: 1, completed: 5, pending: 2, ..ShardStat::default() }];
+        let text = s.to_json().to_json();
+        let v = crate::jsonlite::parse(&text).expect("metrics JSON parses");
+        assert_eq!(v["shards"][0]["shard"].as_f64(), Some(1.0));
+        assert_eq!(v["shards"][0]["completed"].as_f64(), Some(5.0));
+        assert_eq!(v["shards"][0]["pending"].as_f64(), Some(2.0));
+        assert_eq!(v["steals"].as_f64(), Some(0.0));
     }
 
     #[test]

@@ -24,12 +24,14 @@ mod batcher;
 mod breaker;
 mod hist;
 mod metrics;
+mod router;
 mod service;
+mod shard;
 
 pub use batcher::{BatchPolicy, Batcher, PendingRequest, Popped};
 pub use breaker::{
     Admission, BreakerBoard, BreakerPolicy, BreakerSnapshot, BreakerState, ServeTier,
 };
 pub use hist::{LogHistogram, BUCKETS};
-pub use metrics::{LatencyStats, Metrics, MetricsSnapshot, TierTimes};
+pub use metrics::{LatencyStats, Metrics, MetricsSnapshot, ShardStat, TierTimes};
 pub use service::{EngineSelect, ServeError, Service, ServiceConfig, SubmitError};

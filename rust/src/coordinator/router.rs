@@ -1,0 +1,366 @@
+//! Stream-key-hash ingress router and shard mailboxes.
+//!
+//! The sharded coordinator ([`crate::coordinator::ServiceConfig::shards`]
+//! `> 1`) replaces the single `sync_channel` with one [`Mailbox`] per
+//! shard behind a [`Router`]:
+//!
+//! * **Routing** — a request lands on the shard picked by the FNV-1a hash
+//!   of its param-agnostic stream key
+//!   ([`crate::ops::Signature::stream_hash`]). Same key → same shard, so
+//!   HF grouping survives sharding: identical streams still meet in one
+//!   batcher and stack into one launch.
+//! * **Global admission, per-shard backpressure** — one shared atomic
+//!   counts queued requests across ALL shards against
+//!   [`crate::coordinator::ServiceConfig::queue_cap`] (total admission is
+//!   the same as the single-worker coordinator), and each mailbox
+//!   additionally caps its own slice (`ceil(queue_cap / shards)`) so one
+//!   hot stream cannot monopolize the whole admission budget.
+//! * **Work stealing** — an idle shard takes the OLDER half of its
+//!   busiest sibling's mailbox ([`Router::steal_for`]); control messages
+//!   (snapshot probes, shutdown) are never stolen and never counted
+//!   against admission.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::SyncSender;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use crate::coordinator::service::Req;
+use crate::coordinator::{MetricsSnapshot, SubmitError};
+use crate::ops::Signature;
+
+/// What a shard's worker loop receives — the sharded twin of the single
+/// path's private `Msg` enum.
+pub(crate) enum ShardMsg {
+    Request(Box<Req>),
+    Snapshot(SyncSender<MetricsSnapshot>),
+    Shutdown,
+}
+
+struct Inner {
+    queue: VecDeque<ShardMsg>,
+    /// How many `ShardMsg::Request` entries `queue` holds (control
+    /// messages ride for free).
+    requests: usize,
+}
+
+/// One shard's bounded inbox: a mutex-guarded deque with a condvar so the
+/// shard thread can sleep on it with a deadline-aware timeout.
+pub(crate) struct Mailbox {
+    inner: Mutex<Inner>,
+    ready: Condvar,
+    /// Per-shard request cap (backpressure even when the global budget
+    /// still has room).
+    cap: usize,
+    /// Queued requests across ALL shards (shared; admission control).
+    queued_global: Arc<AtomicUsize>,
+    global_cap: usize,
+}
+
+impl Mailbox {
+    fn new(cap: usize, queued_global: Arc<AtomicUsize>, global_cap: usize) -> Mailbox {
+        Mailbox {
+            inner: Mutex::new(Inner { queue: VecDeque::new(), requests: 0 }),
+            ready: Condvar::new(),
+            cap,
+            queued_global,
+            global_cap,
+        }
+    }
+
+    /// Admit one request: the global budget first, then this shard's
+    /// slice. On `QueueFull` the request is dropped here — its reply
+    /// sender drops with it, which the submitter never observes because
+    /// the error return precedes handing out the receiver.
+    fn try_push_request(&self, req: Box<Req>) -> Result<(), SubmitError> {
+        let prev = self.queued_global.fetch_add(1, Ordering::AcqRel);
+        if prev >= self.global_cap {
+            self.queued_global.fetch_sub(1, Ordering::AcqRel);
+            return Err(SubmitError::QueueFull);
+        }
+        let mut inner = self.inner.lock().unwrap();
+        if inner.requests >= self.cap {
+            drop(inner);
+            self.queued_global.fetch_sub(1, Ordering::AcqRel);
+            return Err(SubmitError::QueueFull);
+        }
+        inner.requests += 1;
+        inner.queue.push_back(ShardMsg::Request(req));
+        drop(inner);
+        self.ready.notify_one();
+        Ok(())
+    }
+
+    /// Push a control message (snapshot probe / shutdown): never capped —
+    /// observability and shutdown must work under full backpressure. FIFO
+    /// like everything else, so a `Shutdown` pushed after N submissions is
+    /// processed after them (graceful shutdown drains admitted work,
+    /// exactly like the single-worker channel).
+    pub(crate) fn push_control(&self, msg: ShardMsg) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.queue.push_back(msg);
+        drop(inner);
+        self.ready.notify_one();
+    }
+
+    /// Pop the next message, waiting up to `timeout`. `None` = timed out
+    /// (a spurious condvar wake with an empty queue also reports `None`;
+    /// the shard loop treats both as "go look for other work").
+    pub(crate) fn recv_timeout(&self, timeout: Duration) -> Option<ShardMsg> {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.queue.is_empty() {
+            let (guard, _) = self.ready.wait_timeout(inner, timeout).unwrap();
+            inner = guard;
+        }
+        Self::pop_locked(&mut inner, &self.queued_global)
+    }
+
+    /// Non-blocking pop (the shard loop's opportunistic drain).
+    pub(crate) fn try_recv(&self) -> Option<ShardMsg> {
+        let mut inner = self.inner.lock().unwrap();
+        Self::pop_locked(&mut inner, &self.queued_global)
+    }
+
+    fn pop_locked(inner: &mut Inner, queued_global: &AtomicUsize) -> Option<ShardMsg> {
+        let msg = inner.queue.pop_front()?;
+        if matches!(msg, ShardMsg::Request(_)) {
+            inner.requests -= 1;
+            queued_global.fetch_sub(1, Ordering::AcqRel);
+        }
+        Some(msg)
+    }
+
+    /// Queued requests (excluding control messages) — the steal heuristic
+    /// and the per-shard `pending` gauge read this.
+    pub(crate) fn queued_requests(&self) -> usize {
+        self.inner.lock().unwrap().requests
+    }
+
+    /// Remove up to `max` requests from the FRONT of the queue (oldest
+    /// first — the stolen work is the work that has waited longest).
+    /// Control messages are skipped in place; their order relative to the
+    /// remaining requests is preserved.
+    fn steal(&self, max: usize) -> Vec<Box<Req>> {
+        let mut inner = self.inner.lock().unwrap();
+        let mut out = Vec::new();
+        let mut i = 0;
+        while out.len() < max && i < inner.queue.len() {
+            if matches!(inner.queue[i], ShardMsg::Request(_)) {
+                match inner.queue.remove(i) {
+                    Some(ShardMsg::Request(r)) => out.push(r),
+                    _ => unreachable!("checked variant under the same lock"),
+                }
+            } else {
+                i += 1;
+            }
+        }
+        inner.requests -= out.len();
+        drop(inner);
+        self.queued_global.fetch_sub(out.len(), Ordering::AcqRel);
+        out
+    }
+}
+
+/// The sharded coordinator's front door: routes submissions to mailboxes
+/// by stream-key hash and closes them all on shutdown.
+pub(crate) struct Router {
+    mailboxes: Vec<Mailbox>,
+    closed: AtomicBool,
+}
+
+impl Router {
+    pub(crate) fn new(shards: usize, queue_cap: usize) -> Router {
+        let shards = shards.max(1);
+        let queued = Arc::new(AtomicUsize::new(0));
+        // ceil(queue_cap / shards), at least 1: the slices jointly cover
+        // the global budget with a little slack, and the global counter is
+        // what actually enforces `queue_cap`
+        let per_shard = queue_cap.div_ceil(shards).max(1);
+        let mailboxes = (0..shards)
+            .map(|_| Mailbox::new(per_shard, queued.clone(), queue_cap))
+            .collect();
+        Router { mailboxes, closed: AtomicBool::new(false) }
+    }
+
+    pub(crate) fn shards(&self) -> usize {
+        self.mailboxes.len()
+    }
+
+    pub(crate) fn mailbox(&self, shard: usize) -> &Mailbox {
+        &self.mailboxes[shard]
+    }
+
+    /// Which shard serves this signature's stream.
+    pub(crate) fn shard_of(&self, sig: &Signature) -> usize {
+        (sig.stream_hash() % self.mailboxes.len() as u64) as usize
+    }
+
+    /// Route one request to its stream's shard.
+    pub(crate) fn submit(&self, req: Req) -> Result<(), SubmitError> {
+        if self.closed.load(Ordering::Acquire) {
+            return Err(SubmitError::Stopped);
+        }
+        let shard = self.shard_of(&Signature::of(&req.pipeline));
+        self.mailboxes[shard].try_push_request(Box::new(req))
+    }
+
+    /// Stop admitting and tell every shard to flush and exit. Idempotent:
+    /// only the first call pushes the `Shutdown` controls.
+    pub(crate) fn close(&self) {
+        if self.closed.swap(true, Ordering::AcqRel) {
+            return;
+        }
+        for mb in &self.mailboxes {
+            mb.push_control(ShardMsg::Shutdown);
+        }
+    }
+
+    /// Work stealing for an idle shard `me`: find the sibling with the
+    /// most queued requests and take the older half of them. Returns an
+    /// empty vec when no sibling has at least 2 queued (stealing a lone
+    /// request buys nothing — its shard is about to serve it).
+    pub(crate) fn steal_for(&self, me: usize) -> Vec<Box<Req>> {
+        let busiest = self
+            .mailboxes
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| *i != me)
+            .map(|(i, mb)| (mb.queued_requests(), i))
+            .max();
+        match busiest {
+            Some((n, victim)) if n >= 2 => self.mailboxes[victim].steal(n / 2),
+            _ => Vec::new(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::sync_channel;
+    use std::time::Instant;
+
+    use crate::coordinator::PendingRequest;
+    use crate::ops::{Opcode, Pipeline};
+    use crate::tensor::{DType, Tensor};
+
+    fn req(mul: f64) -> Req {
+        let pipeline = Pipeline::from_opcodes(
+            &[(Opcode::Mul, mul)],
+            &[2, 2],
+            1,
+            DType::F32,
+            DType::F32,
+        )
+        .unwrap();
+        // the reply receiver is dropped: router tests never send replies
+        let (rtx, _) = sync_channel(1);
+        let enqueued = Instant::now();
+        PendingRequest {
+            pipeline,
+            item: Tensor::from_f32(&[0.0; 4], &[1, 2, 2]),
+            enqueued,
+            deadline: None,
+            reply: rtx,
+            trace_id: 0,
+            trace_verdict: 0,
+            admitted: enqueued,
+        }
+    }
+
+    #[test]
+    fn routing_is_stable_and_key_sticky() {
+        let r = Router::new(4, 64);
+        let sig = Signature::of(&req(1.0).pipeline);
+        let shard = r.shard_of(&sig);
+        for _ in 0..10 {
+            assert_eq!(r.shard_of(&sig), shard, "same signature, same shard, every time");
+        }
+        // param-divergent twin: same stream key, same shard
+        let sig2 = Signature::of(&req(99.0).pipeline);
+        assert_eq!(r.shard_of(&sig2), shard);
+    }
+
+    #[test]
+    fn global_cap_bounds_total_admission() {
+        let r = Router::new(2, 3);
+        let mut admitted = 0;
+        for _ in 0..10 {
+            if r.submit(req(1.0)).is_ok() {
+                admitted += 1;
+            }
+        }
+        assert!(admitted <= 3, "global queue_cap=3 bounds admission, got {admitted}");
+        assert!(admitted >= 1, "an empty router admits");
+    }
+
+    #[test]
+    fn closed_router_answers_stopped() {
+        let r = Router::new(2, 8);
+        r.close();
+        assert!(matches!(r.submit(req(1.0)), Err(SubmitError::Stopped)));
+        // each mailbox got exactly one Shutdown control
+        for i in 0..2 {
+            assert!(matches!(
+                r.mailbox(i).recv_timeout(Duration::from_millis(10)),
+                Some(ShardMsg::Shutdown)
+            ));
+        }
+    }
+
+    #[test]
+    fn steal_takes_oldest_half_and_skips_controls() {
+        let r = Router::new(2, 64);
+        let sig = Signature::of(&req(1.0).pipeline);
+        let victim = r.shard_of(&sig);
+        let me = 1 - victim;
+        for _ in 0..5 {
+            r.submit(req(1.0)).unwrap();
+        }
+        let (stx, _srx) = sync_channel(1);
+        r.mailbox(victim).push_control(ShardMsg::Snapshot(stx));
+        let stolen = r.steal_for(me);
+        assert_eq!(stolen.len(), 2, "half of 5, rounded down");
+        assert_eq!(r.mailbox(victim).queued_requests(), 3);
+        // the surviving requests still precede the control message
+        for _ in 0..3 {
+            assert!(matches!(
+                r.mailbox(victim).recv_timeout(Duration::from_millis(10)),
+                Some(ShardMsg::Request(_))
+            ));
+        }
+        assert!(matches!(
+            r.mailbox(victim).recv_timeout(Duration::from_millis(10)),
+            Some(ShardMsg::Snapshot(_))
+        ));
+    }
+
+    #[test]
+    fn steal_leaves_lone_requests_alone() {
+        let r = Router::new(2, 64);
+        let sig = Signature::of(&req(1.0).pipeline);
+        let victim = r.shard_of(&sig);
+        r.submit(req(1.0)).unwrap();
+        assert!(r.steal_for(1 - victim).is_empty());
+        assert_eq!(r.mailbox(victim).queued_requests(), 1);
+    }
+
+    #[test]
+    fn recv_timeout_times_out_empty() {
+        let r = Router::new(1, 4);
+        let t0 = Instant::now();
+        assert!(r.mailbox(0).recv_timeout(Duration::from_millis(5)).is_none());
+        assert!(t0.elapsed() >= Duration::from_millis(4));
+    }
+
+    #[test]
+    fn pop_releases_admission_budget() {
+        let r = Router::new(1, 2);
+        r.submit(req(1.0)).unwrap();
+        r.submit(req(1.0)).unwrap();
+        assert!(matches!(r.submit(req(1.0)), Err(SubmitError::QueueFull)));
+        assert!(r.mailbox(0).try_recv().is_some());
+        r.submit(req(1.0)).expect("popping a request frees one admission slot");
+    }
+}

@@ -44,11 +44,13 @@ use crate::ops::{Pipeline, Signature};
 use crate::tensor::Tensor;
 use crate::trace::{self, SpanRecord, Stage, Tracer, NO_PARENT};
 
+use super::router::{Router, ShardMsg};
+
 /// Reply slot of one request.
-type ReplyTx = SyncSender<Result<Tensor, ServeError>>;
+pub(crate) type ReplyTx = SyncSender<Result<Tensor, ServeError>>;
 
 /// One queued request as the service thread sees it.
-type Req = PendingRequest<ReplyTx>;
+pub(crate) type Req = PendingRequest<ReplyTx>;
 
 /// Which execution backend the service thread builds — the selection policy
 /// now lives in [`crate::exec`] and is shared with [`crate::cv::Context`],
@@ -122,6 +124,15 @@ pub struct ServiceConfig {
     /// The caller keeps its own `Arc` and exports with
     /// [`Tracer::to_chrome_trace`] whenever it likes (e.g. on shutdown).
     pub tracing: Option<Arc<Tracer>>,
+    /// Service worker count. `1` (the default) runs the original
+    /// single-thread coordinator, bit-for-bit. `N > 1` starts N workers
+    /// behind a stream-key-hash ingress router: each shard owns its own
+    /// backend, batcher, breaker board, and plan cache, so same-key
+    /// requests keep landing together (HF grouping is preserved) while
+    /// distinct streams serve in parallel. An idle shard steals queued
+    /// requests from its busiest sibling, and admission control stays
+    /// global: `queue_cap` bounds TOTAL queued requests across shards.
+    pub shards: usize,
 }
 
 impl Default for ServiceConfig {
@@ -137,6 +148,7 @@ impl Default for ServiceConfig {
             max_build_retries: 2,
             canonicalize: false,
             tracing: None,
+            shards: 1,
         }
     }
 }
@@ -163,22 +175,51 @@ const SNAPSHOT_RETRIES: usize = 1024;
 /// Handle to a running coordinator. Cloneable across threads; all XLA work
 /// happens on the single service thread.
 pub struct Service {
-    tx: Option<SyncSender<Msg>>,
-    handle: Option<JoinHandle<()>>,
+    ingress: Ingress,
     default_deadline: Option<Duration>,
 }
 
+/// How submissions reach the service worker(s). `Single` is the original
+/// one-thread `sync_channel` path, preserved bit-for-bit when
+/// [`ServiceConfig::shards`] is 1. `Sharded` routes by stream-key hash
+/// through a [`Router`] to N worker threads.
+enum Ingress {
+    Single { tx: Option<SyncSender<Msg>>, handle: Option<JoinHandle<()>> },
+    Sharded { router: Option<Arc<Router>>, handles: Vec<JoinHandle<()>> },
+}
+
 impl Service {
-    /// Start the service thread (loads the registry there — the PJRT client
-    /// must live on that thread).
+    /// Start the service thread(s) (the registry loads there — the PJRT
+    /// client must live on its service thread).
     pub fn start(cfg: ServiceConfig) -> Service {
         let default_deadline = cfg.default_deadline;
-        let (tx, rx) = sync_channel::<Msg>(cfg.queue_cap);
-        let handle = std::thread::Builder::new()
-            .name("fkl-coordinator".into())
-            .spawn(move || service_loop(cfg, rx))
-            .expect("spawn coordinator thread");
-        Service { tx: Some(tx), handle: Some(handle), default_deadline }
+        let shards = cfg.shards.max(1);
+        if shards == 1 {
+            let (tx, rx) = sync_channel::<Msg>(cfg.queue_cap);
+            let handle = std::thread::Builder::new()
+                .name("fkl-coordinator".into())
+                .spawn(move || service_loop(cfg, rx))
+                .expect("spawn coordinator thread");
+            return Service {
+                ingress: Ingress::Single { tx: Some(tx), handle: Some(handle) },
+                default_deadline,
+            };
+        }
+        let router = Arc::new(Router::new(shards, cfg.queue_cap));
+        let handles = (0..shards)
+            .map(|shard| {
+                let cfg = cfg.clone();
+                let router = router.clone();
+                std::thread::Builder::new()
+                    .name(format!("fkl-coordinator-{shard}"))
+                    .spawn(move || super::shard::shard_loop(cfg, shard, router))
+                    .expect("spawn coordinator shard thread")
+            })
+            .collect();
+        Service {
+            ingress: Ingress::Sharded { router: Some(router), handles },
+            default_deadline,
+        }
     }
 
     /// Submit one item; returns a receiver for the result. Non-blocking:
@@ -219,9 +260,6 @@ impl Service {
         item: Tensor,
         deadline: Option<Duration>,
     ) -> Result<Receiver<Result<Tensor, ServeError>>, SubmitError> {
-        let Some(tx) = self.tx.as_ref() else {
-            return Err(SubmitError::Stopped);
-        };
         let (rtx, rrx) = sync_channel(1);
         let enqueued = Instant::now();
         let deadline = deadline.and_then(|d| enqueued.checked_add(d));
@@ -235,31 +273,65 @@ impl Service {
             trace_verdict: 0,
             admitted: enqueued,
         };
-        match tx.try_send(Msg::Request(req)) {
-            Ok(()) => Ok(rrx),
-            Err(TrySendError::Full(_)) => Err(SubmitError::QueueFull),
-            Err(TrySendError::Disconnected(_)) => Err(SubmitError::Stopped),
+        match &self.ingress {
+            Ingress::Single { tx, .. } => {
+                let Some(tx) = tx.as_ref() else {
+                    return Err(SubmitError::Stopped);
+                };
+                match tx.try_send(Msg::Request(req)) {
+                    Ok(()) => Ok(rrx),
+                    Err(TrySendError::Full(_)) => Err(SubmitError::QueueFull),
+                    Err(TrySendError::Disconnected(_)) => Err(SubmitError::Stopped),
+                }
+            }
+            Ingress::Sharded { router, .. } => {
+                let Some(r) = router.as_ref() else {
+                    return Err(SubmitError::Stopped);
+                };
+                r.submit(req).map(|()| rrx)
+            }
         }
     }
 
-    /// Snapshot the service metrics. Bounded: a full ingress queue makes
-    /// the probe retry-with-yield a fixed number of times and then return
-    /// `None` — it never blocks behind backpressure.
+    /// Snapshot the service metrics. Bounded on the single-worker path: a
+    /// full ingress queue makes the probe retry-with-yield a fixed number
+    /// of times and then return `None` — it never blocks behind
+    /// backpressure. On the sharded path a snapshot probe is a control
+    /// message (never capped by admission control); every shard answers
+    /// its own counters and the parts merge at the
+    /// [`MetricsSnapshot::merge`] seam.
     pub fn metrics(&self) -> Option<MetricsSnapshot> {
-        let tx = self.tx.as_ref()?;
-        let (stx, srx) = sync_channel(1);
-        let mut msg = Msg::Snapshot(stx);
-        for _ in 0..SNAPSHOT_RETRIES {
-            match tx.try_send(msg) {
-                Ok(()) => return srx.recv().ok(),
-                Err(TrySendError::Full(m)) => {
-                    msg = m;
-                    std::thread::yield_now();
+        match &self.ingress {
+            Ingress::Single { tx, .. } => {
+                let tx = tx.as_ref()?;
+                let (stx, srx) = sync_channel(1);
+                let mut msg = Msg::Snapshot(stx);
+                for _ in 0..SNAPSHOT_RETRIES {
+                    match tx.try_send(msg) {
+                        Ok(()) => return srx.recv().ok(),
+                        Err(TrySendError::Full(m)) => {
+                            msg = m;
+                            std::thread::yield_now();
+                        }
+                        Err(TrySendError::Disconnected(_)) => return None,
+                    }
                 }
-                Err(TrySendError::Disconnected(_)) => return None,
+                None
+            }
+            Ingress::Sharded { router, .. } => {
+                let r = router.as_ref()?;
+                let rxs: Vec<_> = (0..r.shards())
+                    .map(|i| {
+                        let (stx, srx) = sync_channel(1);
+                        r.mailbox(i).push_control(ShardMsg::Snapshot(stx));
+                        srx
+                    })
+                    .collect();
+                let parts: Option<Vec<MetricsSnapshot>> =
+                    rxs.into_iter().map(|rx| rx.recv().ok()).collect();
+                parts.map(MetricsSnapshot::merge)
             }
         }
-        None
     }
 
     /// Graceful shutdown: drain pending work, then join.
@@ -268,16 +340,31 @@ impl Service {
     }
 
     /// Shared by [`Service::shutdown`] and `Drop`: never blocks on a full
-    /// ingress queue. A polite `Shutdown` is *tried*; either way the sender
-    /// is dropped, and channel disconnect makes the service loop flush
-    /// pending work and exit — so the join below always completes.
+    /// ingress queue. Single path: a polite `Shutdown` is *tried*; either
+    /// way the sender is dropped, and channel disconnect makes the service
+    /// loop flush pending work and exit — so the join below always
+    /// completes. Sharded path: the router closes (new submissions answer
+    /// `Stopped`) and pushes an uncapped `Shutdown` control message to
+    /// every mailbox, so each shard flushes and exits.
     fn stop(&mut self) {
-        if let Some(tx) = self.tx.take() {
-            let _ = tx.try_send(Msg::Shutdown);
-            drop(tx);
-        }
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
+        match &mut self.ingress {
+            Ingress::Single { tx, handle } => {
+                if let Some(tx) = tx.take() {
+                    let _ = tx.try_send(Msg::Shutdown);
+                    drop(tx);
+                }
+                if let Some(h) = handle.take() {
+                    let _ = h.join();
+                }
+            }
+            Ingress::Sharded { router, handles } => {
+                if let Some(r) = router.take() {
+                    r.close();
+                }
+                for h in handles.drain(..) {
+                    let _ = h.join();
+                }
+            }
         }
     }
 }
@@ -290,7 +377,7 @@ impl Drop for Service {
 
 /// The service thread's execution backend: the XLA fused engine against the
 /// artifact registry, or the everywhere-capable host fused engine.
-enum Backend {
+pub(crate) enum Backend {
     Xla { engine: FusedEngine, buckets: Vec<usize> },
     Host { engine: HostFusedEngine, buckets: Vec<usize> },
 }
@@ -469,40 +556,67 @@ fn poison_loop(rx: Receiver<Msg>, msg: String, restarts: u64) {
     }
 }
 
-fn service_loop(cfg: ServiceConfig, rx: Receiver<Msg>) {
-    let faults: Option<Arc<FaultInjector>> = cfg
-        .faults
+/// Arm the deterministic fault injector from the config (`None` when the
+/// plan is absent or empty — the hot path then carries no injector at all).
+/// Called once per service worker: each shard owns its own injector, so
+/// attempt-counted fault rules fire deterministically per shard.
+pub(crate) fn arm_faults(cfg: &ServiceConfig) -> Option<Arc<FaultInjector>> {
+    cfg.faults
         .as_ref()
         .filter(|p| !p.is_empty())
-        .map(|p| Arc::new(FaultInjector::new(p.clone())));
+        .map(|p| Arc::new(FaultInjector::new(p.clone())))
+}
 
-    // supervised construction: a panicking backend constructor (exercised
-    // via tier=build faults) is rebuilt up to the retry budget
+/// What supervised backend construction produced: a working backend (plus
+/// how many construction panics the supervisor absorbed getting there), or
+/// a poisoned worker that must answer typed `Unavailable` until shutdown.
+pub(crate) enum SupervisedBuild {
+    Ready { backend: Backend, degraded: Option<String>, restarts: u64 },
+    Poisoned { msg: String, restarts: u64 },
+}
+
+/// Supervised construction: a panicking backend constructor (exercised via
+/// tier=build faults) is rebuilt up to [`ServiceConfig::max_build_retries`]
+/// before the worker gives up and poisons itself.
+pub(crate) fn supervised_build(
+    cfg: &ServiceConfig,
+    faults: &Option<Arc<FaultInjector>>,
+) -> SupervisedBuild {
     let mut restarts: u64 = 0;
-    let (backend, degraded) = loop {
+    loop {
         let attempt = exec::catch_launch(|| {
-            if let Some(inj) = &faults {
+            if let Some(inj) = faults {
                 inj.apply(FaultTier::Build, "backend")?;
             }
-            Ok(build_backend(&cfg, &faults))
+            Ok(build_backend(cfg, faults))
         });
         match attempt {
-            Ok(BuildOutcome::Ready { backend, degraded }) => break (backend, degraded),
+            Ok(BuildOutcome::Ready { backend, degraded }) => {
+                return SupervisedBuild::Ready { backend, degraded, restarts }
+            }
             Ok(BuildOutcome::Poisoned(msg)) => {
-                poison_loop(rx, msg, restarts);
-                return;
+                return SupervisedBuild::Poisoned { msg, restarts }
             }
             Err(e) => {
                 restarts += 1;
                 if restarts > cfg.max_build_retries as u64 {
-                    poison_loop(
-                        rx,
-                        format!("backend construction kept failing ({e:#})"),
+                    return SupervisedBuild::Poisoned {
+                        msg: format!("backend construction kept failing ({e:#})"),
                         restarts,
-                    );
-                    return;
+                    };
                 }
             }
+        }
+    }
+}
+
+fn service_loop(cfg: ServiceConfig, rx: Receiver<Msg>) {
+    let faults = arm_faults(&cfg);
+    let (backend, degraded, restarts) = match supervised_build(&cfg, &faults) {
+        SupervisedBuild::Ready { backend, degraded, restarts } => (backend, degraded, restarts),
+        SupervisedBuild::Poisoned { msg, restarts } => {
+            poison_loop(rx, msg, restarts);
+            return;
         }
     };
 
@@ -529,12 +643,12 @@ fn service_loop(cfg: ServiceConfig, rx: Receiver<Msg>) {
             .unwrap_or(Duration::from_millis(50));
         match rx.recv_timeout(timeout) {
             Ok(Msg::Request(r)) => {
-                ingest(r, &mut batcher, &mut metrics, &mut canon_seen, tracer);
+                ingest(r, &mut batcher, &mut metrics, &mut canon_seen, tracer, 0);
                 // opportunistically drain whatever else is queued
                 while let Ok(m) = rx.try_recv() {
                     match m {
                         Msg::Request(r) => {
-                            ingest(r, &mut batcher, &mut metrics, &mut canon_seen, tracer)
+                            ingest(r, &mut batcher, &mut metrics, &mut canon_seen, tracer, 0)
                         }
                         Msg::Snapshot(tx) => {
                             let _ = tx.send(snapshot(&mut metrics, &backend, &breakers));
@@ -547,6 +661,7 @@ fn service_loop(cfg: ServiceConfig, rx: Receiver<Msg>) {
                                 &mut breakers,
                                 &faults,
                                 tracer,
+                                0,
                             );
                             return;
                         }
@@ -557,12 +672,12 @@ fn service_loop(cfg: ServiceConfig, rx: Receiver<Msg>) {
                 let _ = tx.send(snapshot(&mut metrics, &backend, &breakers));
             }
             Ok(Msg::Shutdown) => {
-                flush(&mut batcher, &backend, &mut metrics, &mut breakers, &faults, tracer);
+                flush(&mut batcher, &backend, &mut metrics, &mut breakers, &faults, tracer, 0);
                 return;
             }
             Err(RecvTimeoutError::Timeout) => {}
             Err(RecvTimeoutError::Disconnected) => {
-                flush(&mut batcher, &backend, &mut metrics, &mut breakers, &faults, tracer);
+                flush(&mut batcher, &backend, &mut metrics, &mut breakers, &faults, tracer, 0);
                 return;
             }
         }
@@ -576,13 +691,13 @@ fn service_loop(cfg: ServiceConfig, rx: Receiver<Msg>) {
         let now = Instant::now();
         let mut groups = Vec::new();
         while let Some(popped) = batcher.pop_ready(now) {
-            expire(popped.expired, &mut metrics, tracer);
+            expire(popped.expired, &mut metrics, tracer, 0);
             if !popped.live.is_empty() {
                 groups.push(popped.live);
             }
         }
         if !groups.is_empty() {
-            serve_window(groups, &backend, &mut metrics, &mut breakers, &faults, tracer);
+            serve_window(groups, &backend, &mut metrics, &mut breakers, &faults, tracer, 0);
         }
     }
 }
@@ -598,12 +713,13 @@ fn service_loop(cfg: ServiceConfig, rx: Receiver<Msg>) {
 /// stream key, stack into the same HF launches, and compile one cached
 /// plan. Only bit-safety-proven rewrites apply (the analysis contract), so
 /// replies are bit-identical to serving the raw pipeline.
-fn ingest(
+pub(crate) fn ingest(
     mut req: Req,
     batcher: &mut Batcher<ReplyTx>,
     metrics: &mut Metrics,
     canon_seen: &mut Option<HashSet<String>>,
     tracer: Option<&Tracer>,
+    shard: u64,
 ) {
     let armed = tracer.map(|tr| {
         req.trace_id = tr.new_request();
@@ -611,14 +727,21 @@ fn ingest(
     });
     let (lints0, rewrites0) = (metrics.lints_emitted, metrics.rewrites_applied);
     if let Some(dl) = req.deadline {
-        let dead_on_arrival = dl <= req.enqueued;
+        // dead-on-arrival is judged against NOW, not the enqueue instant: a
+        // request that aged past its deadline sitting in the ingress channel
+        // is shed right here instead of being queued and answered `Expired`
+        // at pop time after the batcher wasted a wake on it
+        let now = Instant::now();
         let est = Duration::from_micros((metrics.ewma_item_us * batcher.pending() as f64) as u64);
-        let remaining = dl.saturating_duration_since(Instant::now());
-        if dead_on_arrival || (est > Duration::ZERO && est > remaining) {
+        let remaining = dl.saturating_duration_since(now);
+        if dl <= now || (est > Duration::ZERO && est > remaining) {
             metrics.shed += 1;
+            // shed latency IS recorded — admission churn stays visible in
+            // the latency distribution, consistent with expire/fail_request
+            metrics.observe_latency(req.enqueued.elapsed());
             let _ = req.reply.send(Err(ServeError::Shed));
             if let Some((tr, start_us)) = armed {
-                trace_admit(tr, &req, start_us, 0, 0, Some("Shed"));
+                trace_admit(tr, &req, start_us, 0, 0, shard, Some("Shed"));
             }
             return;
         }
@@ -639,6 +762,7 @@ fn ingest(
             start_us,
             metrics.lints_emitted - lints0,
             metrics.rewrites_applied - rewrites0,
+            shard,
             None,
         );
         req.admitted = Instant::now();
@@ -654,6 +778,7 @@ fn trace_admit(
     start_us: u64,
     lints: u64,
     rewrites: u64,
+    shard: u64,
     err: Option<&'static str>,
 ) {
     let now = tr.now_us();
@@ -678,7 +803,7 @@ fn trace_admit(
             stage: Stage::Request,
             start_us: enq,
             dur_us: now.saturating_sub(enq),
-            a: 0,
+            a: shard,
             b: 0,
             c: 0,
             err,
@@ -687,7 +812,7 @@ fn trace_admit(
 }
 
 /// Answer deadline-expired requests (split out by the batcher at pop time).
-fn expire(expired: Vec<Req>, metrics: &mut Metrics, tracer: Option<&Tracer>) {
+pub(crate) fn expire(expired: Vec<Req>, metrics: &mut Metrics, tracer: Option<&Tracer>, shard: u64) {
     for req in expired {
         metrics.expired += 1;
         metrics.observe_latency(req.enqueued.elapsed());
@@ -717,7 +842,7 @@ fn expire(expired: Vec<Req>, metrics: &mut Metrics, tracer: Option<&Tracer>) {
                 stage: Stage::Request,
                 start_us: enq,
                 dur_us: now.saturating_sub(enq),
-                a: 0,
+                a: shard,
                 b: 0,
                 c: 0,
                 err: Some("Expired"),
@@ -729,28 +854,33 @@ fn expire(expired: Vec<Req>, metrics: &mut Metrics, tracer: Option<&Tracer>) {
 /// Metrics snapshot for the service thread: refresh the engine-side planner
 /// stats, then let [`Metrics::snapshot`] merge in the breaker board — that
 /// call is the single seam where breaker state joins the counters.
-fn snapshot(metrics: &mut Metrics, backend: &Backend, breakers: &BreakerBoard) -> MetricsSnapshot {
+pub(crate) fn snapshot(
+    metrics: &mut Metrics,
+    backend: &Backend,
+    breakers: &BreakerBoard,
+) -> MetricsSnapshot {
     metrics.planner = backend.planner_stats();
     metrics.snapshot(breakers)
 }
 
-fn flush(
+pub(crate) fn flush(
     batcher: &mut Batcher<ReplyTx>,
     backend: &Backend,
     metrics: &mut Metrics,
     breakers: &mut BreakerBoard,
     faults: &Option<Arc<FaultInjector>>,
     tracer: Option<&Tracer>,
+    shard: u64,
 ) {
     let mut groups = Vec::new();
     for popped in batcher.drain_all(Instant::now()) {
-        expire(popped.expired, metrics, tracer);
+        expire(popped.expired, metrics, tracer, shard);
         if !popped.live.is_empty() {
             groups.push(popped.live);
         }
     }
     if !groups.is_empty() {
-        serve_window(groups, backend, metrics, breakers, faults, tracer);
+        serve_window(groups, backend, metrics, breakers, faults, tracer, shard);
     }
 }
 
@@ -826,6 +956,7 @@ fn trace_finish(
     plan: Option<(Instant, Duration, bool)>,
     launch: Option<&LaunchInfo>,
     reply_t0: Instant,
+    shard: u64,
     err: Option<&'static str>,
 ) {
     let Some(tr) = tracer.filter(|_| req.trace_id != 0) else {
@@ -863,7 +994,7 @@ fn trace_finish(
     span(3, 0, Stage::Tier, serve_us, reply_us, tier, req.trace_verdict, group_len, tier_err);
     let now = tr.now_us();
     span(6, 0, Stage::Reply, reply_us, now, err.is_none() as u64, 0, 0, None);
-    span(0, NO_PARENT, Stage::Request, tr.us(req.enqueued), now, 0, 0, 0, err);
+    span(0, NO_PARENT, Stage::Request, tr.us(req.enqueued), now, shard, 0, 0, err);
 }
 
 /// Reject a whole group because its stream's breaker is open.
@@ -874,6 +1005,7 @@ fn reject_open(
     breakers: &mut BreakerBoard,
     tracer: Option<&Tracer>,
     serve_start: Instant,
+    shard: u64,
 ) {
     if group.is_empty() {
         return;
@@ -892,6 +1024,7 @@ fn reject_open(
             None,
             None,
             reply_t0,
+            shard,
             Some("CircuitOpen"),
         );
     }
@@ -910,13 +1043,14 @@ fn reject_open(
 /// Each group first passes its stream's circuit breaker, which may cap the
 /// tier (demoted streams enter the ladder lower down), admit a single
 /// half-open probe, or reject the group outright with a typed error.
-fn serve_window(
+pub(crate) fn serve_window(
     groups: Vec<Vec<Req>>,
     backend: &Backend,
     metrics: &mut Metrics,
     breakers: &mut BreakerBoard,
     faults: &Option<Arc<FaultInjector>>,
     tracer: Option<&Tracer>,
+    shard: u64,
 ) {
     let serve_start = Instant::now();
     let mut divergent_pool: Vec<Req> = Vec::new();
@@ -947,6 +1081,7 @@ fn serve_window(
                     faults,
                     tracer,
                     serve_start,
+                    shard,
                 ));
             }
             Admission::Serve(ServeTier::Divergent) => divergent_pool.extend(group),
@@ -961,24 +1096,34 @@ fn serve_window(
                 for r in &mut rest {
                     r.trace_verdict = trace::TIER_REJECT;
                 }
-                reject_open(&rest, &key, metrics, breakers, tracer, serve_start);
+                reject_open(&rest, &key, metrics, breakers, tracer, serve_start, shard);
             }
             Admission::Reject => {
-                reject_open(&group, &key, metrics, breakers, tracer, serve_start)
+                reject_open(&group, &key, metrics, breakers, tracer, serve_start, shard)
             }
         }
     }
     if divergent_pool.len() >= 2 {
-        execute_divergent(divergent_pool, backend, metrics, breakers, tracer, serve_start);
+        execute_divergent(divergent_pool, backend, metrics, breakers, tracer, serve_start, shard);
     } else {
         per_item_pool.append(&mut divergent_pool);
     }
-    execute_per_item(&per_item_pool, backend, metrics, breakers, faults, tracer, serve_start);
+    execute_per_item(
+        &per_item_pool,
+        backend,
+        metrics,
+        breakers,
+        faults,
+        tracer,
+        serve_start,
+        shard,
+    );
 }
 
 /// Serve each request of a group on its own (no HF stacking): the ladder's
 /// final tier — lone leftovers, breaker-demoted streams, half-open probes.
 /// Every launch is panic-isolated.
+#[allow(clippy::too_many_arguments)]
 fn execute_per_item(
     group: &[Req],
     backend: &Backend,
@@ -987,6 +1132,7 @@ fn execute_per_item(
     faults: &Option<Arc<FaultInjector>>,
     tracer: Option<&Tracer>,
     serve_start: Instant,
+    shard: u64,
 ) {
     for req in group {
         let key = Signature::of(&req.pipeline).stream_key();
@@ -1035,6 +1181,7 @@ fn execute_per_item(
                     plan_span,
                     launch.as_ref(),
                     reply_t0,
+                    shard,
                     None,
                 );
             }
@@ -1053,6 +1200,7 @@ fn execute_per_item(
                     plan_span,
                     launch.as_ref(),
                     reply_t0,
+                    shard,
                     Some(name),
                 );
             }
@@ -1073,6 +1221,7 @@ fn execute_divergent(
     breakers: &mut BreakerBoard,
     tracer: Option<&Tracer>,
     serve_start: Instant,
+    shard: u64,
 ) {
     let t0 = Instant::now();
     let window: Vec<(&Pipeline, &Tensor)> =
@@ -1098,6 +1247,7 @@ fn execute_divergent(
                     None,
                     None,
                     reply_t0,
+                    shard,
                     Some(name),
                 );
             }
@@ -1143,6 +1293,7 @@ fn execute_divergent(
                     None,
                     launch.as_ref(),
                     reply_t0,
+                    shard,
                     None,
                 );
             }
@@ -1161,6 +1312,7 @@ fn execute_divergent(
                     None,
                     launch.as_ref(),
                     reply_t0,
+                    shard,
                     Some(name),
                 );
             }
@@ -1188,6 +1340,7 @@ fn stack_tier(
     faults: &Option<Arc<FaultInjector>>,
     tracer: Option<&Tracer>,
     serve_start: Instant,
+    shard: u64,
 ) -> Vec<Req> {
     let fail_bad_item = |req: &Req, msg: String, metrics: &mut Metrics| {
         // client error: counted as failed, never against the breaker
@@ -1202,6 +1355,7 @@ fn stack_tier(
             None,
             None,
             reply_t0,
+            shard,
             Some("BadItem"),
         );
     };
@@ -1344,6 +1498,7 @@ fn stack_tier(
                     plan_span,
                     launch.as_ref(),
                     reply_t0,
+                    shard,
                     None,
                 );
             }
@@ -1365,6 +1520,7 @@ fn stack_tier(
                     plan_span,
                     launch.as_ref(),
                     reply_t0,
+                    shard,
                     Some(name),
                 );
             }

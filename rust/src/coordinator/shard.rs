@@ -1,0 +1,192 @@
+//! The sharded coordinator's worker loop: one per shard, each owning its
+//! own backend, batcher, breaker board, metrics, and plan cache.
+//!
+//! Per-shard (not shared) caches are deliberate: the host engine's plan
+//! compile is ~µs-cheap and re-compiles at most once per stream per shard,
+//! while a shared cache would put a lock on every plan consult in every
+//! launch — see DESIGN.md §10 for the measurement. Everything inside the
+//! loop is the SAME code as the single-worker `service_loop`: `ingest`,
+//! `pop_ready`/`expire`, `serve_window`, `flush` — so `shards = N` is N
+//! bit-identical coordinators behind a hash router, plus work stealing.
+
+use std::collections::HashSet;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::router::{Router, ShardMsg};
+use crate::coordinator::service::{
+    arm_faults, expire, flush, ingest, serve_window, snapshot, supervised_build, ServeError,
+    ServiceConfig, SupervisedBuild,
+};
+use crate::coordinator::{Batcher, BreakerBoard, Metrics, MetricsSnapshot, ShardStat};
+
+/// Idle-poll cadence: an idle shard re-checks its siblings for stealable
+/// work this often (also the cap on how long it sleeps past a batcher
+/// wake hint). 1ms keeps steal latency well under the default batch
+/// window while costing an idle shard ~1k wakeups/s.
+const STEAL_POLL: Duration = Duration::from_millis(1);
+
+pub(crate) fn shard_loop(cfg: ServiceConfig, shard: usize, router: Arc<Router>) {
+    let faults = arm_faults(&cfg);
+    let (backend, degraded, restarts) = match supervised_build(&cfg, &faults) {
+        SupervisedBuild::Ready { backend, degraded, restarts } => (backend, degraded, restarts),
+        SupervisedBuild::Poisoned { msg, restarts } => {
+            poison_shard(&router, shard, msg, restarts);
+            return;
+        }
+    };
+
+    let mut batcher = Batcher::new(cfg.policy);
+    let mut metrics = Metrics::default();
+    let mut breakers = BreakerBoard::new(cfg.breaker);
+    let tracer_arc = cfg.tracing.clone();
+    let tracer = tracer_arc.as_deref();
+    let mut canon_seen: Option<HashSet<String>> = cfg.canonicalize.then(HashSet::new);
+    metrics.supervisor_restarts = restarts;
+    metrics.degraded = degraded;
+    if let Some(d) = &metrics.degraded {
+        // one line for the fleet, not one per shard; every shard still
+        // carries the structured copy in its snapshot
+        if shard == 0 {
+            eprintln!("fkl-coordinator: {d}");
+        }
+    }
+
+    let sid = shard as u64;
+    let mailbox = router.mailbox(shard);
+    loop {
+        // 1. ingest: wait for mail, but never sleep past the batcher's
+        // wake hint (window fire or member deadline) or the steal poll
+        let hint = batcher
+            .next_deadline()
+            .map(|d| d.saturating_duration_since(Instant::now()));
+        let timeout = hint.map_or(STEAL_POLL, |h| h.min(STEAL_POLL));
+        match mailbox.recv_timeout(timeout) {
+            Some(ShardMsg::Request(r)) => {
+                ingest(*r, &mut batcher, &mut metrics, &mut canon_seen, tracer, sid);
+                // opportunistically drain whatever else is queued
+                while let Some(m) = mailbox.try_recv() {
+                    match m {
+                        ShardMsg::Request(r) => {
+                            ingest(*r, &mut batcher, &mut metrics, &mut canon_seen, tracer, sid)
+                        }
+                        ShardMsg::Snapshot(tx) => {
+                            let _ = tx.send(shard_snapshot(
+                                &mut metrics,
+                                &backend,
+                                &breakers,
+                                &batcher,
+                                mailbox.queued_requests(),
+                                sid,
+                            ));
+                        }
+                        ShardMsg::Shutdown => {
+                            flush(
+                                &mut batcher,
+                                &backend,
+                                &mut metrics,
+                                &mut breakers,
+                                &faults,
+                                tracer,
+                                sid,
+                            );
+                            return;
+                        }
+                    }
+                }
+            }
+            Some(ShardMsg::Snapshot(tx)) => {
+                let _ = tx.send(shard_snapshot(
+                    &mut metrics,
+                    &backend,
+                    &breakers,
+                    &batcher,
+                    mailbox.queued_requests(),
+                    sid,
+                ));
+            }
+            Some(ShardMsg::Shutdown) => {
+                flush(&mut batcher, &backend, &mut metrics, &mut breakers, &faults, tracer, sid);
+                return;
+            }
+            None => {
+                // idle (nothing batched, nothing queued): steal the older
+                // half of the busiest sibling's mailbox and serve it here
+                if batcher.pending() == 0 && mailbox.queued_requests() == 0 {
+                    let stolen = router.steal_for(shard);
+                    if !stolen.is_empty() {
+                        metrics.steals += 1;
+                        metrics.stolen_requests += stolen.len() as u64;
+                        for r in stolen {
+                            ingest(*r, &mut batcher, &mut metrics, &mut canon_seen, tracer, sid);
+                        }
+                    }
+                }
+            }
+        }
+
+        // 2. launch: identical to the single-worker scheduling window
+        let now = Instant::now();
+        let mut groups = Vec::new();
+        while let Some(popped) = batcher.pop_ready(now) {
+            expire(popped.expired, &mut metrics, tracer, sid);
+            if !popped.live.is_empty() {
+                groups.push(popped.live);
+            }
+        }
+        if !groups.is_empty() {
+            serve_window(groups, &backend, &mut metrics, &mut breakers, &faults, tracer, sid);
+        }
+    }
+}
+
+/// This shard's slice of the merged snapshot: the ordinary counters plus
+/// one [`ShardStat`] row (occupancy is filled in by
+/// [`MetricsSnapshot::merge`], which knows the fleet total).
+fn shard_snapshot(
+    metrics: &mut Metrics,
+    backend: &crate::coordinator::service::Backend,
+    breakers: &BreakerBoard,
+    batcher: &Batcher<crate::coordinator::service::ReplyTx>,
+    mailbox_queued: usize,
+    sid: u64,
+) -> MetricsSnapshot {
+    let mut snap = snapshot(metrics, backend, breakers);
+    snap.shards = vec![ShardStat {
+        shard: sid,
+        completed: snap.completed,
+        failed: snap.failed,
+        shed: snap.shed,
+        expired: snap.expired,
+        steals: snap.steals,
+        stolen_requests: snap.stolen_requests,
+        pending: (mailbox_queued + batcher.pending()) as u64,
+        occupancy: 0.0,
+    }];
+    snap
+}
+
+/// Terminal state for a shard that never got a working backend: answer
+/// every routed request with a typed error until shutdown. The other
+/// shards keep serving — one poisoned shard degrades its key range, not
+/// the fleet.
+fn poison_shard(router: &Arc<Router>, shard: usize, msg: String, restarts: u64) {
+    eprintln!("fkl-coordinator-{shard}: {msg}");
+    let mailbox = router.mailbox(shard);
+    loop {
+        match mailbox.recv_timeout(Duration::from_millis(50)) {
+            Some(ShardMsg::Request(r)) => {
+                let _ = r.reply.send(Err(ServeError::Unavailable(msg.clone())));
+            }
+            Some(ShardMsg::Snapshot(tx)) => {
+                let _ = tx.send(MetricsSnapshot {
+                    supervisor_restarts: restarts,
+                    degraded: Some(msg.clone()),
+                    ..MetricsSnapshot::default()
+                });
+            }
+            Some(ShardMsg::Shutdown) => return,
+            None => {}
+        }
+    }
+}

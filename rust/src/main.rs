@@ -5,6 +5,8 @@
 //! fkl plan  --ops mul,add --shape 60x120 --batch 50 --dtin u8 --dtout f32
 //! fkl run   --ops mul:2.0,add:1.0 --shape 4x8 --batch 2   # run via engines
 //! fkl serve --requests 500 --batch-window-us 500          # coordinator demo
+//! fkl serve --shards 4             # sharded coordinator: hash-routed workers
+//!                                  # + work stealing; prints per-shard counters
 //! fkl serve --deadline-ms 5 --faults 'tier=stacked,launch=0,action=panic'
 //!                                  # deadline-aware serving + fault drill
 //! fkl serve --trace-out trace.json --metrics-json metrics.json
@@ -223,6 +225,9 @@ fn serve(args: &[String]) -> anyhow::Result<()> {
     let n: usize = arg(args, "--requests").map(|v| v.parse().unwrap()).unwrap_or(500);
     let window_us: u64 =
         arg(args, "--batch-window-us").map(|v| v.parse().unwrap()).unwrap_or(500);
+    // --shards N: run N hash-routed coordinator workers (1 = the original
+    // single-thread coordinator, bit-for-bit)
+    let shards: usize = arg(args, "--shards").map(|v| v.parse().unwrap()).unwrap_or(1).max(1);
     // deadline-aware serving: every request must launch within this budget
     // or be shed/expired with a typed error instead of served late
     let default_deadline =
@@ -247,28 +252,39 @@ fn serve(args: &[String]) -> anyhow::Result<()> {
     let svc = Service::start(ServiceConfig {
         artifact_dir: None,
         queue_cap: 1024,
-        policy: BatchPolicy { max_batch: 50, window: Duration::from_micros(window_us) },
+        policy: BatchPolicy { max_batch: 50, window: Duration::from_micros(window_us), ..Default::default() },
         default_deadline,
         faults,
         canonicalize,
         tracing: tracer.clone(),
+        shards,
         ..ServiceConfig::default()
     });
 
-    // the canonical CMSD normalization chain, compile-time checked
-    let p = Chain::read::<U8>(&[60, 120])
-        .map(ConvertTo)
-        .map(Mul(0.5))
-        .map(Sub(3.0))
-        .map(Div(1.7))
-        .cast::<F32>()
-        .write()
-        .into_pipeline();
+    // the canonical CMSD normalization chain, compile-time checked; with
+    // --shards N the demo submits N width-variants of it (distinct stream
+    // keys) so the hash router actually spreads the load
+    let streams: Vec<(Vec<usize>, Pipeline)> = (0..shards)
+        .map(|s| {
+            let (h, w) = (60, 120 + s);
+            let p = Chain::read::<U8>(&[h, w])
+                .map(ConvertTo)
+                .map(Mul(0.5))
+                .map(Sub(3.0))
+                .map(Div(1.7))
+                .cast::<F32>()
+                .write()
+                .into_pipeline();
+            (vec![h, w], p)
+        })
+        .collect();
     let mut rng = Rng::new(2);
     let t0 = std::time::Instant::now();
     let mut pending = Vec::new();
-    for _ in 0..n {
-        let item = fkl::tensor::Tensor::from_u8(&rng.vec_u8(60 * 120), &[1, 60, 120]);
+    for i in 0..n {
+        let (shape, p) = &streams[i % streams.len()];
+        let item =
+            fkl::tensor::Tensor::from_u8(&rng.vec_u8(shape[0] * shape[1]), &[1, shape[0], shape[1]]);
         match svc.submit(p.clone(), item) {
             Ok(rx) => pending.push(rx),
             Err(e) => eprintln!("rejected: {e}"),
@@ -351,6 +367,21 @@ fn serve(args: &[String]) -> anyhow::Result<()> {
             b.rejected
         );
     }
+    for s in &m.shards {
+        println!(
+            "shard {}: completed={} failed={} shed={} expired={} steals={} stolen={} \
+             pending={} occupancy={:.2}",
+            s.shard,
+            s.completed,
+            s.failed,
+            s.shed,
+            s.expired,
+            s.steals,
+            s.stolen_requests,
+            s.pending,
+            s.occupancy
+        );
+    }
     if let Some(d) = &m.degraded {
         println!("degraded: {d}");
     }
@@ -379,7 +410,7 @@ fn metrics_cmd(args: &[String]) -> anyhow::Result<()> {
     }
     let svc = Service::start(ServiceConfig {
         engine: fkl::coordinator::EngineSelect::HostFused,
-        policy: BatchPolicy { max_batch: 16, window: Duration::from_micros(200) },
+        policy: BatchPolicy { max_batch: 16, window: Duration::from_micros(200), ..Default::default() },
         ..ServiceConfig::default()
     });
     // chain-5 u8->f32: op-at-a-time moves 21 bytes/elem, fused moves 5 —

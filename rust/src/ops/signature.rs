@@ -52,6 +52,24 @@ impl Signature {
         Signature { batch, ..self.clone() }
     }
 
+    /// Stable 64-bit hash of [`Signature::stream_key`] — the sharded
+    /// coordinator's routing function (FNV-1a, fixed constants: the shard
+    /// of a stream must not depend on compiler, platform, or process, so
+    /// `DefaultHasher` is out). Batch- and parameter-agnostic, like the
+    /// stream key itself: every request of a stream hashes identically,
+    /// which keeps a stream's requests on one shard and its HF batch
+    /// groups intact.
+    pub fn stream_hash(&self) -> u64 {
+        const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const PRIME: u64 = 0x0000_0100_0000_01b3;
+        let mut h = OFFSET;
+        for b in self.stream_key().bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(PRIME);
+        }
+        h
+    }
+
     /// Batch-agnostic key (used to group requests in the dynamic batcher).
     pub fn stream_key(&self) -> String {
         format!(
@@ -161,6 +179,24 @@ mod tests {
             ReduceAxis::PerChannel,
         )));
         assert_eq!(pair.ops, "mul-reduce[mean+sumsq@ch]");
+    }
+
+    #[test]
+    fn stream_hash_is_batch_and_param_agnostic() {
+        let a = Signature::of(&pipe(&[1.0, 2.0], 1));
+        let b = Signature::of(&pipe(&[9.0, 8.0], 4));
+        assert_eq!(a.stream_hash(), b.stream_hash(), "one stream, one shard");
+        // different code shapes should (with overwhelming probability)
+        // route differently — and must at minimum hash the key, not the
+        // struct, so this pins the key-derived value
+        let c = Signature::of(&pipe(&[1.0], 1));
+        assert_ne!(a.stream_hash(), c.stream_hash());
+        // FNV-1a with fixed constants: stable across processes/platforms
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for byte in a.stream_key().bytes() {
+            h = (h ^ byte as u64).wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        assert_eq!(a.stream_hash(), h);
     }
 
     #[test]

@@ -46,7 +46,9 @@ fn event(s: &SpanRecord) -> Value {
             args.push(("threads", Value::num(s.c as f64)));
         }
         Stage::Reply => args.push(("ok", Value::Bool(s.a == 1))),
-        Stage::Request | Stage::Queue => {}
+        // request roots carry which coordinator shard served them
+        Stage::Request => args.push(("shard", Value::num(s.a as f64))),
+        Stage::Queue => {}
     }
     if let Some(e) = s.err {
         args.push(("err", Value::str(e)));
@@ -104,6 +106,7 @@ mod tests {
             }
             assert_eq!(e["ph"].as_str(), Some("X"), "complete events");
         }
+        assert_eq!(events[0]["args"]["shard"].as_f64(), Some(0.0), "request root names its shard");
         assert_eq!(events[1]["args"]["err"].as_str(), Some("LaunchPanicked"));
         assert_eq!(events[1]["args"]["lane_width"].as_f64(), Some(16.0));
         // the export round-trips through the in-crate parser

@@ -1,0 +1,187 @@
+//! Property tests (proplite) for the deadline-aware dynamic batcher: a
+//! synthetic-clock simulation that drives `pop_ready` at exactly the wake
+//! instants `next_deadline` reports — the same contract the service loop
+//! relies on — over random streams, windows, and deadlines.
+
+use std::time::{Duration, Instant};
+
+use fkl::coordinator::{BatchPolicy, Batcher, PendingRequest};
+use fkl::ops::{Opcode, Pipeline};
+use fkl::proplite::{forall, Rng};
+use fkl::tensor::{DType, Tensor};
+
+/// A request on stream `stream` with per-stream sequence number `seq` (the
+/// reply slot carries both so the properties can check FIFO without a
+/// channel). The stream is encoded in the pipeline SHAPE: distinct shapes
+/// are distinct stream keys.
+fn req(
+    stream: usize,
+    seq: u32,
+    enqueued: Instant,
+    deadline: Option<Instant>,
+) -> PendingRequest<(usize, u32)> {
+    let w = 2 + stream;
+    let pipeline =
+        Pipeline::from_opcodes(&[(Opcode::Mul, 1.0)], &[2, w], 1, DType::F32, DType::F32)
+            .unwrap();
+    PendingRequest {
+        pipeline,
+        item: Tensor::from_f32(&vec![0.0; 2 * w], &[1, 2, w]),
+        enqueued,
+        deadline,
+        reply: (stream, seq),
+        trace_id: 0,
+        trace_verdict: 0,
+        admitted: enqueued,
+    }
+}
+
+#[test]
+fn prop_batcher_conserves_fifo_and_never_serves_expired() {
+    forall(150, |rng| {
+        let policy = BatchPolicy {
+            max_batch: rng.usize(1, 9),
+            window: Duration::from_micros(rng.range_u64(0, 5_000)),
+            deadline_slack: Duration::from_micros(rng.range_u64(0, 500)),
+        };
+        let mut b = Batcher::new(policy);
+        // synthetic clock: all instants are offsets from one base, so the
+        // simulation is deterministic regardless of how slowly the test runs
+        let base = Instant::now();
+        let n_streams = rng.usize(1, 5);
+        let n = rng.usize(1, 41);
+        let mut seqs = vec![0u32; n_streams];
+        let mut t = base;
+        for _ in 0..n {
+            let stream = rng.usize(0, n_streams);
+            // arrivals are nondecreasing in time (pushes happen in arrival
+            // order, like the service loop's ingest)
+            t += Duration::from_micros(rng.range_u64(0, 300));
+            let deadline = if rng.bool() {
+                Some(t + Duration::from_micros(rng.range_u64(1, 8_000)))
+            } else {
+                None
+            };
+            b.push(req(stream, seqs[stream], t, deadline));
+            seqs[stream] += 1;
+        }
+
+        // drive the batcher the way the service loop does: pop everything
+        // ready at `now`, then sleep to the reported next wake instant
+        let mut now = t;
+        let mut popped_total = 0usize;
+        let mut next_expected = vec![0u32; n_streams];
+        let mut rounds = 0;
+        while b.pending() > 0 {
+            rounds += 1;
+            assert!(rounds < 10_000, "simulation must terminate");
+            while let Some(g) = b.pop_ready(now) {
+                let total = g.live.len() + g.expired.len();
+                assert!((1..=policy.max_batch).contains(&total), "group size bounded");
+                popped_total += total;
+                // NOTHING in the live half is past its deadline at the pop
+                // instant — expired work is never handed out as servable
+                for r in &g.live {
+                    assert!(!r.expired(now), "live half contains an expired request");
+                }
+                for r in &g.expired {
+                    assert!(r.expired(now), "expired half must be genuinely past deadline");
+                }
+                // one group = one stream, drained as a contiguous FIFO
+                // prefix; both halves individually preserve arrival order
+                let stream = g.live.first().or(g.expired.first()).unwrap().reply.0;
+                let mut all: Vec<u32> = g
+                    .live
+                    .iter()
+                    .chain(g.expired.iter())
+                    .map(|r| {
+                        assert_eq!(r.reply.0, stream, "a group never mixes streams");
+                        r.reply.1
+                    })
+                    .collect();
+                for half in [&g.live, &g.expired] {
+                    let s: Vec<u32> = half.iter().map(|r| r.reply.1).collect();
+                    assert!(s.windows(2).all(|w| w[0] < w[1]), "FIFO-stable split: {s:?}");
+                }
+                all.sort_unstable();
+                let want: Vec<u32> =
+                    (next_expected[stream]..next_expected[stream] + all.len() as u32).collect();
+                assert_eq!(all, want, "stream {stream}: contiguous FIFO prefix");
+                next_expected[stream] += all.len() as u32;
+            }
+            if b.pending() == 0 {
+                break;
+            }
+            let wake = b.next_deadline().expect("pending work always has a wake instant");
+            // the wake hint must make progress: at the wake instant some
+            // group is ready (otherwise the service loop would spin)
+            now = now.max(wake);
+        }
+        assert_eq!(popped_total, n, "every request popped exactly once");
+    });
+}
+
+#[test]
+fn prop_no_group_fires_before_window_and_deadline_allow() {
+    // below max_batch, with every deadline lax, the ONLY legal fire instant
+    // is the window fire — popping earlier would trade batch width for
+    // nothing, popping later starves the group
+    forall(150, |rng| {
+        let window = Duration::from_micros(rng.range_u64(1_000, 20_000));
+        let slack = Duration::from_micros(rng.range_u64(0, 500));
+        let policy = BatchPolicy { max_batch: rng.usize(2, 10), window, deadline_slack: slack };
+        let mut b = Batcher::new(policy);
+        let base = Instant::now();
+        let k = rng.usize(1, policy.max_batch); // strictly under max_batch
+        for i in 0..k {
+            // lax deadline: far beyond the window even after slack
+            let deadline = if rng.bool() {
+                Some(base + window + window + slack + Duration::from_millis(50))
+            } else {
+                None
+            };
+            b.push(req(0, i as u32, base, deadline));
+        }
+        assert!(
+            b.pop_ready(base + window - Duration::from_micros(1)).is_none(),
+            "not ready one tick before the window fires"
+        );
+        assert_eq!(
+            b.next_deadline(),
+            Some(base + window),
+            "with lax deadlines the wake instant IS the window fire"
+        );
+        let g = b.pop_ready(base + window).expect("ready once the window fires");
+        assert_eq!(g.live.len(), k, "whole group pops live");
+        assert!(g.expired.is_empty());
+    });
+}
+
+#[test]
+fn prop_urgent_deadline_always_beats_the_window() {
+    // a member whose deadline (minus slack) precedes the window fire must
+    // pull the wake instant forward AND make the group ready at that wake —
+    // the regression class behind the deadline-blind batcher bug
+    forall(150, |rng| {
+        let window = Duration::from_micros(rng.range_u64(5_000, 50_000));
+        let slack = Duration::from_micros(rng.range_u64(0, 1_000));
+        let policy = BatchPolicy { max_batch: 64, window, deadline_slack: slack };
+        let mut b = Batcher::new(policy);
+        let base = Instant::now();
+        // company first, then the urgent member (deadline well inside the window)
+        for i in 0..rng.usize(0, 4) {
+            b.push(req(0, i as u32, base, None));
+        }
+        let deadline = base + Duration::from_micros(rng.range_u64(1_000, 4_000));
+        b.push(req(0, 99, base, Some(deadline)));
+        let wake = b.next_deadline().expect("wake instant exists");
+        assert!(wake < base + window, "deadline pulls the wake before the window fire");
+        assert!(wake <= deadline, "the wake instant never lands past the deadline");
+        let g = b.pop_ready(wake).expect("group is ready at the reported wake");
+        assert!(
+            g.live.iter().any(|r| r.reply.1 == 99),
+            "the urgent member comes out live at its wake instant"
+        );
+        assert!(g.expired.is_empty(), "nothing expired: we woke in time");
+    });
+}

@@ -32,7 +32,7 @@ fn requests_are_batched_and_correct() {
     let svc = Service::start(ServiceConfig {
         artifact_dir: None,
         queue_cap: 512,
-        policy: BatchPolicy { max_batch: 25, window: Duration::from_micros(300) },
+        policy: BatchPolicy { max_batch: 25, window: Duration::from_micros(300), ..Default::default() },
         ..ServiceConfig::default()
     });
     let p = pipeline();
@@ -65,7 +65,7 @@ fn single_item_latency_path_works() {
     let svc = Service::start(ServiceConfig {
         artifact_dir: None,
         queue_cap: 16,
-        policy: BatchPolicy { max_batch: 50, window: Duration::from_micros(100) },
+        policy: BatchPolicy { max_batch: 50, window: Duration::from_micros(100), ..Default::default() },
         ..ServiceConfig::default()
     });
     let p = pipeline();
@@ -86,7 +86,7 @@ fn param_divergent_requests_in_one_window_stay_correct() {
     let svc = Service::start(ServiceConfig {
         artifact_dir: None,
         queue_cap: 64,
-        policy: BatchPolicy { max_batch: 16, window: Duration::from_millis(20) },
+        policy: BatchPolicy { max_batch: 16, window: Duration::from_millis(20), ..Default::default() },
         engine: EngineSelect::HostFused,
         ..ServiceConfig::default()
     });
@@ -116,7 +116,7 @@ fn reduce_chains_are_servable_traffic() {
     let svc = Service::start(ServiceConfig {
         artifact_dir: None,
         queue_cap: 64,
-        policy: BatchPolicy { max_batch: 8, window: Duration::from_micros(200) },
+        policy: BatchPolicy { max_batch: 8, window: Duration::from_micros(200), ..Default::default() },
         engine: EngineSelect::HostFused,
         ..ServiceConfig::default()
     });
@@ -157,7 +157,7 @@ fn signature_divergent_window_is_served_by_the_divergent_tier_in_one_pass() {
     let svc = Service::start(ServiceConfig {
         artifact_dir: None,
         queue_cap: 64,
-        policy: BatchPolicy { max_batch: 32, window: Duration::from_millis(25) },
+        policy: BatchPolicy { max_batch: 32, window: Duration::from_millis(25), ..Default::default() },
         engine: EngineSelect::HostFused,
         ..ServiceConfig::default()
     });
@@ -220,7 +220,7 @@ fn backpressure_rejects_when_full() {
     let svc = Service::start(ServiceConfig {
         artifact_dir: None,
         queue_cap: 2,
-        policy: BatchPolicy { max_batch: 64, window: Duration::from_secs(5) },
+        policy: BatchPolicy { max_batch: 64, window: Duration::from_secs(5), ..Default::default() },
         ..ServiceConfig::default()
     });
     let p = pipeline();
@@ -239,7 +239,7 @@ fn mixed_streams_are_not_cross_batched() {
     let svc = Service::start(ServiceConfig {
         artifact_dir: None,
         queue_cap: 512,
-        policy: BatchPolicy { max_batch: 16, window: Duration::from_micros(300) },
+        policy: BatchPolicy { max_batch: 16, window: Duration::from_micros(300), ..Default::default() },
         ..ServiceConfig::default()
     });
     // stream A: CMSD u8->f32; stream B: plain mul f32->f32 (interp tier)
@@ -272,7 +272,7 @@ fn shutdown_drains_pending_work() {
         artifact_dir: None,
         queue_cap: 512,
         // huge window: requests would sit forever without the drain
-        policy: BatchPolicy { max_batch: 64, window: Duration::from_secs(60) },
+        policy: BatchPolicy { max_batch: 64, window: Duration::from_secs(60), ..Default::default() },
         ..ServiceConfig::default()
     });
     let p = pipeline();
@@ -301,7 +301,7 @@ fn shutdown_under_load_resolves_every_reply() {
         artifact_dir: None,
         queue_cap: 4,
         // huge window: nothing launches until the drain
-        policy: BatchPolicy { max_batch: 64, window: Duration::from_secs(60) },
+        policy: BatchPolicy { max_batch: 64, window: Duration::from_secs(60), ..Default::default() },
         engine: EngineSelect::HostFused,
         ..ServiceConfig::default()
     });
@@ -338,7 +338,7 @@ fn structured_chains_are_servable_traffic() {
     let svc = Service::start(ServiceConfig {
         artifact_dir: None,
         queue_cap: 64,
-        policy: BatchPolicy { max_batch: 8, window: Duration::from_micros(200) },
+        policy: BatchPolicy { max_batch: 8, window: Duration::from_micros(200), ..Default::default() },
         engine: EngineSelect::HostFused,
         ..ServiceConfig::default()
     });
@@ -400,7 +400,7 @@ fn canonicalizing_ingress_serves_equivalent_chains_from_one_cached_plan() {
         artifact_dir: None,
         queue_cap: 128,
         // one generous window so the whole burst schedules together
-        policy: BatchPolicy { max_batch: 32, window: Duration::from_millis(250) },
+        policy: BatchPolicy { max_batch: 32, window: Duration::from_millis(250), ..Default::default() },
         engine: EngineSelect::HostFused,
         canonicalize: true,
         ..ServiceConfig::default()
@@ -436,7 +436,7 @@ fn canonicalizing_ingress_serves_equivalent_chains_from_one_cached_plan() {
     let svc = Service::start(ServiceConfig {
         artifact_dir: None,
         queue_cap: 128,
-        policy: BatchPolicy { max_batch: 32, window: Duration::from_millis(250) },
+        policy: BatchPolicy { max_batch: 32, window: Duration::from_millis(250), ..Default::default() },
         engine: EngineSelect::HostFused,
         ..ServiceConfig::default()
     });
@@ -463,13 +463,134 @@ fn canonicalizing_ingress_serves_equivalent_chains_from_one_cached_plan() {
 }
 
 #[test]
+fn sub_window_deadline_is_served_not_expired() {
+    // THE deadline-blind-batcher regression: a deadline (100us) shorter
+    // than the batch window (500us) on an otherwise idle service. The old
+    // batcher woke only at window fires, so every such request expired
+    // unserved no matter how idle the machine was. The deadline-aware
+    // batcher wakes at min(window fire, deadline - slack) and pops the
+    // request while it is still live.
+    let svc = Service::start(ServiceConfig {
+        artifact_dir: None,
+        queue_cap: 64,
+        policy: BatchPolicy { max_batch: 50, window: Duration::from_micros(500), ..Default::default() },
+        engine: EngineSelect::HostFused,
+        ..ServiceConfig::default()
+    });
+    let p = Chain::read::<U8>(&[8, 8]).map(Mul(2.0)).cast::<F32>().write().into_pipeline();
+    let item = Tensor::from_u8(&vec![3u8; 64], &[1, 8, 8]);
+    // warm up: backend construction + plan compile happen before any
+    // deadline is on the clock
+    let w = svc.submit(p.clone(), item.clone()).unwrap();
+    let _ = w.recv();
+
+    // wall-clock tightness (100us end to end) can lose to scheduling noise
+    // on a loaded runner, so a few attempts are allowed — the broken
+    // batcher failed ALL of them, deterministically
+    let mut served = 0;
+    for i in 0..20 {
+        let rx = svc
+            .submit_with_deadline(p.clone(), item.clone(), Duration::from_micros(100))
+            .unwrap();
+        match rx.recv().expect("service alive") {
+            Ok(out) => {
+                assert_eq!(out, fkl::hostref::run_pipeline(&p, &item), "attempt {i}");
+                served += 1;
+            }
+            Err(e) => assert!(
+                matches!(
+                    e,
+                    fkl::coordinator::ServeError::Shed | fkl::coordinator::ServeError::Expired
+                ),
+                "attempt {i}: unexpected error {e}"
+            ),
+        }
+    }
+    assert!(
+        served >= 1,
+        "an idle service must serve sub-window deadlines (0/20 made it — the \
+         batcher is deadline-blind again)"
+    );
+    svc.shutdown();
+}
+
+#[test]
+fn requests_aged_past_deadline_in_the_ingress_channel_are_shed_not_expired() {
+    // The DOA boundary regression: admission control once compared the
+    // deadline against `req.enqueued` instead of `Instant::now()`, so a
+    // request whose deadline lapsed while it waited in the ingress channel
+    // slipped past the shed check, wasted a batcher wake, and came back
+    // `Expired`. The fix sheds it at ingest. Construction: a huge request
+    // occupies the single service thread, the deadlined victim ages in the
+    // channel behind it.
+    let svc = Service::start(ServiceConfig {
+        artifact_dir: None,
+        queue_cap: 64,
+        policy: BatchPolicy { max_batch: 1, window: Duration::from_micros(100), ..Default::default() },
+        engine: EngineSelect::HostFused,
+        ..ServiceConfig::default()
+    });
+    let slow = Chain::read::<F32>(&[4096, 2048])
+        .map(Mul(1.01))
+        .map(Add(0.5))
+        .map(Sub(0.25))
+        .map(Div(1.7))
+        .map(Mul(0.99))
+        .write()
+        .into_pipeline();
+    let slow_item = Tensor::from_f32(&vec![1.0f32; 4096 * 2048], &[1, 4096, 2048]);
+    let quick = Chain::read::<U8>(&[8, 8]).map(Mul(2.0)).cast::<F32>().write().into_pipeline();
+    let quick_item = Tensor::from_u8(&vec![3u8; 64], &[1, 8, 8]);
+
+    let mut shed_seen = false;
+    for attempt in 0..5 {
+        let slow_rx = svc.submit(slow.clone(), slow_item.clone()).unwrap();
+        // let the service thread pick the slow launch up, then park the
+        // victim in the channel where its 500us deadline lapses
+        std::thread::sleep(Duration::from_millis(1));
+        let rx = svc
+            .submit_with_deadline(quick.clone(), quick_item.clone(), Duration::from_micros(500))
+            .unwrap();
+        match rx.recv().expect("service alive") {
+            // the boundary under test: aged-in-channel means SHED (typed,
+            // at ingest) — never Expired (which would mean it got queued)
+            Err(fkl::coordinator::ServeError::Shed) => shed_seen = true,
+            Err(fkl::coordinator::ServeError::Expired) => {
+                panic!("attempt {attempt}: aged-in-channel request was queued then expired")
+            }
+            Ok(_) => {} // lost the race to a fast machine; try again
+            Err(e) => panic!("attempt {attempt}: unexpected error {e}"),
+        }
+        let _ = slow_rx.recv();
+        if shed_seen {
+            break;
+        }
+    }
+    assert!(shed_seen, "the slow launch never aged the victim — shed path untested");
+
+    // the shed satellite: shed requests record latency like every other
+    // resolution, so admission churn stays visible in the distribution
+    let m = svc.metrics().unwrap();
+    assert!(m.shed >= 1, "shed counter advanced");
+    assert_eq!(m.expired, 0, "nothing took the expired path");
+    assert!(
+        m.latency_hist.count() >= m.completed + m.shed,
+        "shed requests record latency: {} observations < {} + {}",
+        m.latency_hist.count(),
+        m.completed,
+        m.shed
+    );
+    svc.shutdown();
+}
+
+#[test]
 fn host_backend_batches_any_stream_with_exact_numerics() {
     // pinned host engine: a stream no artifact family covers (exotic shape,
     // u8 out) is still HF-batched and must be BIT-equal to the oracle
     let svc = Service::start(ServiceConfig {
         artifact_dir: None,
         queue_cap: 512,
-        policy: BatchPolicy { max_batch: 16, window: Duration::from_micros(300) },
+        policy: BatchPolicy { max_batch: 16, window: Duration::from_micros(300), ..Default::default() },
         engine: EngineSelect::HostFused,
         ..ServiceConfig::default()
     });

@@ -92,7 +92,7 @@ fn coordinator_survives_failing_requests() {
     let svc = Service::start(ServiceConfig {
         artifact_dir: None,
         queue_cap: 64,
-        policy: BatchPolicy { max_batch: 8, window: Duration::from_micros(100) },
+        policy: BatchPolicy { max_batch: 8, window: Duration::from_micros(100), ..Default::default() },
         engine: EngineSelect::Xla,
         ..ServiceConfig::default()
     });

@@ -37,7 +37,7 @@ fn two_at_a_time(faults: &str, breaker: BreakerPolicy) -> Service {
     Service::start(ServiceConfig {
         artifact_dir: None,
         queue_cap: 64,
-        policy: BatchPolicy { max_batch: 2, window: Duration::from_secs(600) },
+        policy: BatchPolicy { max_batch: 2, window: Duration::from_secs(600), ..Default::default() },
         engine: EngineSelect::HostFused,
         breaker,
         faults: Some(FaultPlan::parse(faults).expect("valid fault spec")),
@@ -74,7 +74,7 @@ fn service_config_does_not_read_the_environment() {
     let svc = Service::start(ServiceConfig {
         artifact_dir: None,
         queue_cap: 8,
-        policy: BatchPolicy { max_batch: 2, window: Duration::from_secs(600) },
+        policy: BatchPolicy { max_batch: 2, window: Duration::from_secs(600), ..Default::default() },
         engine: EngineSelect::HostFused,
         ..ServiceConfig::default()
     });
@@ -232,7 +232,7 @@ fn divergent_window_item_fault_fails_alone_through_the_service() {
     let svc = Service::start(ServiceConfig {
         artifact_dir: None,
         queue_cap: 64,
-        policy: BatchPolicy { max_batch: 8, window: Duration::from_millis(50) },
+        policy: BatchPolicy { max_batch: 8, window: Duration::from_millis(50), ..Default::default() },
         engine: EngineSelect::HostFused,
         faults: Some(FaultPlan::parse("sig=add,tier=any,launch=0,action=panic").unwrap()),
         ..ServiceConfig::default()
@@ -260,7 +260,7 @@ fn supervisor_rebuilds_a_backend_whose_construction_panics() {
     let svc = Service::start(ServiceConfig {
         artifact_dir: None,
         queue_cap: 8,
-        policy: BatchPolicy { max_batch: 2, window: Duration::from_secs(600) },
+        policy: BatchPolicy { max_batch: 2, window: Duration::from_secs(600), ..Default::default() },
         engine: EngineSelect::HostFused,
         faults: Some(FaultPlan::parse("tier=build,launch=0..2,action=panic").unwrap()),
         max_build_retries: 2,
@@ -280,7 +280,7 @@ fn exhausted_supervisor_poisons_the_service_with_typed_unavailable() {
     let svc = Service::start(ServiceConfig {
         artifact_dir: None,
         queue_cap: 8,
-        policy: BatchPolicy { max_batch: 2, window: Duration::from_secs(600) },
+        policy: BatchPolicy { max_batch: 2, window: Duration::from_secs(600), ..Default::default() },
         engine: EngineSelect::HostFused,
         faults: Some(FaultPlan::parse("tier=build,action=panic").unwrap()),
         max_build_retries: 1,
@@ -301,34 +301,69 @@ fn exhausted_supervisor_poisons_the_service_with_typed_unavailable() {
 
 #[test]
 fn deadlines_shed_at_ingress_and_expire_at_pop() {
-    // fresh service: the cost EWMA is zero, so ONLY dead-on-arrival
-    // requests shed — everything here is deterministic
+    // Shed vs Expired boundary: Shed = admission control refused it at
+    // ingest (judged against Instant::now() — a request that aged past its
+    // deadline in the ingress channel counts); Expired = it was queued live
+    // and the deadline passed before its group launched.
     let svc = Service::start(ServiceConfig {
         artifact_dir: None,
         queue_cap: 64,
-        policy: BatchPolicy { max_batch: 64, window: Duration::from_millis(2) },
+        policy: BatchPolicy { max_batch: 3, window: Duration::from_secs(600), ..Default::default() },
         engine: EngineSelect::HostFused,
         ..ServiceConfig::default()
     });
     let p = add_pipeline();
+    // warm up: backend construction happens before any deadline is ticking
+    let warm: Vec<_> = (0..3).map(|i| svc.submit(mul_pipeline(), item(9 + i)).unwrap()).collect();
+    for rx in warm {
+        rx.recv().unwrap().expect("warmup serves");
+    }
+
     // dead on arrival -> shed at ingress, before ever queueing
     let doa = svc.submit_with_deadline(p.clone(), item(1), Duration::ZERO).unwrap();
     assert!(matches!(doa.recv().unwrap(), Err(ServeError::Shed)));
-    // a 1ns deadline outlives ingress (EWMA=0 admits it) but is long gone
-    // when the 2ms window pops -> expired at pop time, never served
-    let e1 = svc.submit_with_deadline(p.clone(), item(2), Duration::from_nanos(1)).unwrap();
-    let e2 = svc.submit_with_deadline(p.clone(), item(3), Duration::from_nanos(1)).unwrap();
-    // generous deadlines ride the same group and serve with margin to spare
-    let g1 = svc.submit_with_deadline(p.clone(), item(4), Duration::from_secs(600)).unwrap();
-    let g2 = svc.submit_with_deadline(p.clone(), item(5), Duration::from_secs(600)).unwrap();
-    assert!(matches!(e1.recv().unwrap(), Err(ServeError::Expired)));
-    assert!(matches!(e2.recv().unwrap(), Err(ServeError::Expired)));
-    assert_eq!(g1.recv().unwrap().unwrap(), fkl::hostref::run_pipeline(&p, &item(4)));
-    assert_eq!(g2.recv().unwrap().unwrap(), fkl::hostref::run_pipeline(&p, &item(5)));
+    // a 1ns deadline always lapses during the channel hop: also SHED (the
+    // DOA check judges against now, not the enqueue instant — the old
+    // enqueued-time check let these through to die as Expired later)
+    let nano = svc.submit_with_deadline(p.clone(), item(2), Duration::from_nanos(1)).unwrap();
+    assert!(matches!(nano.recv().unwrap(), Err(ServeError::Shed)));
+
+    // deterministic Expired: the victim (stream Y, tight deadline) and a
+    // generous rider are queued LIVE but the group stays under max_batch, so
+    // it can only pop on the victim's deadline wake; meanwhile three big
+    // blockers FILL stream X, which pops immediately and occupies the
+    // single service thread far longer than the victim's deadline. All
+    // items are pre-built so the submits land within microseconds.
+    let slow = Chain::read::<F32>(&[2048, 4096])
+        .map(Mul(1.01))
+        .map(Add(0.5))
+        .map(Mul(0.99))
+        .write()
+        .into_pipeline();
+    let big = vec![1.0f32; 2048 * 4096];
+    let blocker_items: Vec<Tensor> =
+        (0..3).map(|_| Tensor::from_f32(&big, &[1, 2048, 4096])).collect();
+    let victim =
+        svc.submit_with_deadline(p.clone(), item(3), Duration::from_millis(5)).unwrap();
+    // the rider shares the victim's group, pops with it, and serves
+    let rider = svc.submit_with_deadline(p.clone(), item(4), Duration::from_secs(600)).unwrap();
+    let blockers: Vec<_> =
+        blocker_items.into_iter().map(|t| svc.submit(slow.clone(), t).unwrap()).collect();
+    assert!(matches!(victim.recv().unwrap(), Err(ServeError::Expired)));
+    assert_eq!(rider.recv().unwrap().unwrap(), fkl::hostref::run_pipeline(&p, &item(4)));
+    for rx in blockers {
+        rx.recv().unwrap().expect("blocker serves");
+    }
+
     let m = svc.metrics().unwrap();
-    assert_eq!((m.shed, m.expired, m.completed), (1, 2, 2));
-    assert_eq!(m.deadline_margin.count, 2, "margins recorded for served deadline requests");
-    assert!(m.est_item_us > 0.0, "the admission EWMA learned from the served launch");
+    assert_eq!((m.shed, m.expired, m.completed), (1 + 1, 1, 3 + 3 + 1));
+    assert_eq!(m.deadline_margin.count, 1, "margin recorded for the served deadline request");
+    assert!(m.est_item_us > 0.0, "the admission EWMA learned from the served launches");
+    // shed and expired requests record latency like every other resolution
+    assert!(
+        m.latency_hist.count() >= m.completed + m.shed + m.expired,
+        "every resolution observes latency"
+    );
     svc.shutdown();
 }
 
@@ -337,7 +372,7 @@ fn default_deadline_applies_to_plain_submit() {
     let svc = Service::start(ServiceConfig {
         artifact_dir: None,
         queue_cap: 8,
-        policy: BatchPolicy { max_batch: 64, window: Duration::from_millis(2) },
+        policy: BatchPolicy { max_batch: 64, window: Duration::from_millis(2), ..Default::default() },
         engine: EngineSelect::HostFused,
         default_deadline: Some(Duration::ZERO),
         ..ServiceConfig::default()

@@ -117,6 +117,7 @@ fn prop_batcher_conserves_requests() {
         let mut b = Batcher::new(BatchPolicy {
             max_batch,
             window: Duration::from_millis(rng.range_u64(0, 5)),
+            ..Default::default()
         });
         let n = rng.usize(1, 60);
         let n_streams = rng.usize(1, 4);

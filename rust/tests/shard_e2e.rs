@@ -1,0 +1,134 @@
+//! End-to-end tests for the sharded coordinator: N workers behind the
+//! stream-key-hash router must be observationally identical to the single
+//! worker — same replies bit-for-bit — while the merged metrics stay
+//! internally consistent (per-shard rows sum to the totals).
+
+use std::time::Duration;
+
+use fkl::chain::{Chain, Mul, F32, U8};
+use fkl::coordinator::{BatchPolicy, Service, ServiceConfig};
+use fkl::hostref;
+use fkl::ops::Pipeline;
+use fkl::proplite::Rng;
+use fkl::tensor::Tensor;
+
+fn svc(shards: usize, window: Duration) -> Service {
+    Service::start(ServiceConfig {
+        artifact_dir: None,
+        queue_cap: 512,
+        policy: BatchPolicy { max_batch: 8, window, ..Default::default() },
+        shards,
+        ..ServiceConfig::default()
+    })
+}
+
+/// Four distinct stream keys (the shape is the key): enough for a 4-shard
+/// router to have something to spread.
+fn workload(n: usize) -> Vec<(Pipeline, Tensor)> {
+    let mut rng = Rng::new(41);
+    let pipes: Vec<(usize, Pipeline)> = (0..4)
+        .map(|s| {
+            let w = 10 + s;
+            let p = Chain::read::<U8>(&[10, w])
+                .map(Mul(0.5 + s as f64))
+                .cast::<F32>()
+                .write()
+                .into_pipeline();
+            (w, p)
+        })
+        .collect();
+    (0..n)
+        .map(|i| {
+            let (w, p) = &pipes[i % pipes.len()];
+            (p.clone(), Tensor::from_u8(&rng.vec_u8(10 * w), &[1, 10, *w]))
+        })
+        .collect()
+}
+
+fn serve_all(svc: &Service, reqs: &[(Pipeline, Tensor)]) -> Vec<Tensor> {
+    let rxs: Vec<_> = reqs
+        .iter()
+        .map(|(p, t)| svc.submit(p.clone(), t.clone()).expect("admitted"))
+        .collect();
+    rxs.into_iter()
+        .map(|rx| rx.recv().expect("service alive").expect("request ok"))
+        .collect()
+}
+
+#[test]
+fn sharded_replies_are_bit_equal_to_single_shard_and_oracle() {
+    let reqs = workload(48);
+    let sharded = svc(4, Duration::from_micros(300));
+    let outs4 = serve_all(&sharded, &reqs);
+    sharded.shutdown();
+    let single = svc(1, Duration::from_micros(300));
+    let outs1 = serve_all(&single, &reqs);
+    single.shutdown();
+    for (i, ((p, t), (o4, o1))) in reqs.iter().zip(outs4.iter().zip(&outs1)).enumerate() {
+        let want = hostref::run_pipeline(p, t);
+        assert_eq!(*o4, want, "request {i}: 4-shard reply bit-equal to the oracle");
+        assert_eq!(o4, o1, "request {i}: sharding changes nothing observable");
+    }
+}
+
+#[test]
+fn merged_metrics_rows_sum_to_the_totals() {
+    let reqs = workload(64);
+    let s = svc(4, Duration::from_micros(300));
+    let outs = serve_all(&s, &reqs);
+    assert_eq!(outs.len(), 64);
+    let m = s.metrics().expect("merged snapshot");
+    assert_eq!(m.completed, 64, "all requests served");
+    assert_eq!(m.shards.len(), 4, "one row per shard");
+    for (i, row) in m.shards.iter().enumerate() {
+        assert_eq!(row.shard, i as u64, "rows sorted by shard id");
+        assert_eq!(row.pending, 0, "drained service has no queued work");
+    }
+    let sum: u64 = m.shards.iter().map(|r| r.completed).sum();
+    assert_eq!(sum, m.completed, "per-shard completions sum to the merged total");
+    let occ: f64 = m.shards.iter().map(|r| r.occupancy).sum();
+    assert!((occ - 1.0).abs() < 1e-9, "occupancy shares sum to 1: {occ}");
+    // steal accounting: every steal event moves at least one request, and
+    // the merged counters are the row sums
+    assert!(m.stolen_requests >= m.steals, "steals={} stolen={}", m.steals, m.stolen_requests);
+    let steals: u64 = m.shards.iter().map(|r| r.steals).sum();
+    assert_eq!(steals, m.steals);
+    // latency percentiles survive the histogram merge seam
+    assert!(m.latency.p50 <= m.latency.p99 && m.latency.p99 <= m.latency.p999);
+    assert!(m.latency.max > 0, "64 served requests left a latency distribution");
+    s.shutdown();
+}
+
+#[test]
+fn sharded_shutdown_drains_admitted_work() {
+    // a long window parks everything in the batchers; shutdown must still
+    // resolve every admitted reply (flush serves, never abandons)
+    let reqs = workload(24);
+    let s = svc(4, Duration::from_secs(60));
+    let rxs: Vec<_> = reqs
+        .iter()
+        .map(|(p, t)| s.submit(p.clone(), t.clone()).expect("admitted"))
+        .collect();
+    s.shutdown();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let out = rx.recv().unwrap_or_else(|_| panic!("request {i}: reply dropped"));
+        let (p, t) = &reqs[i];
+        assert_eq!(out.expect("served live"), hostref::run_pipeline(p, t), "request {i}");
+    }
+}
+
+#[test]
+fn snapshot_probes_work_mid_serve_and_repeatedly() {
+    // a snapshot is a control message: it must work while requests flow,
+    // and repeated probes must be monotone in the counters
+    let s = svc(4, Duration::from_micros(200));
+    let reqs = workload(8);
+    let _ = serve_all(&s, &reqs);
+    let m1 = s.metrics().expect("first probe");
+    let _ = serve_all(&s, &reqs);
+    let m2 = s.metrics().expect("second probe");
+    assert_eq!(m1.completed, 8);
+    assert_eq!(m2.completed, 16, "counters accumulate across probes");
+    assert!(m2.latency_hist.count() >= m1.latency_hist.count());
+    s.shutdown();
+}

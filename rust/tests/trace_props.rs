@@ -114,7 +114,7 @@ fn traced_mixed_window_closes_wellformed_span_trees() {
     let svc = Service::start(ServiceConfig {
         artifact_dir: None,
         queue_cap: 64,
-        policy: BatchPolicy { max_batch: 32, window: Duration::from_millis(25) },
+        policy: BatchPolicy { max_batch: 32, window: Duration::from_millis(25), ..Default::default() },
         engine: EngineSelect::HostFused,
         // the `add` stream (and only it) errors at every launch tier
         faults: Some(FaultPlan::parse("sig=add,tier=any,launch=*,action=err").unwrap()),
@@ -241,7 +241,7 @@ fn tracing_off_is_bit_identical_to_tracing_on() {
         let svc = Service::start(ServiceConfig {
             artifact_dir: None,
             queue_cap: 64,
-            policy: BatchPolicy { max_batch: 8, window: Duration::from_micros(200) },
+            policy: BatchPolicy { max_batch: 8, window: Duration::from_micros(200), ..Default::default() },
             engine: EngineSelect::HostFused,
             tracing,
             ..ServiceConfig::default()
@@ -281,7 +281,7 @@ fn fault_injected_stacked_launch_traces_the_error_on_the_launch_span() {
     let svc = Service::start(ServiceConfig {
         artifact_dir: None,
         queue_cap: 16,
-        policy: BatchPolicy { max_batch: 2, window: Duration::from_secs(600) },
+        policy: BatchPolicy { max_batch: 2, window: Duration::from_secs(600), ..Default::default() },
         engine: EngineSelect::HostFused,
         faults: Some(FaultPlan::parse("sig=mul,tier=stacked,launch=0,action=err").unwrap()),
         tracing: Some(tracer.clone()),
@@ -320,7 +320,7 @@ fn fusion_efficiency_reports_the_chain_k_ratio() {
         let svc = Service::start(ServiceConfig {
             artifact_dir: None,
             queue_cap: 64,
-            policy: BatchPolicy { max_batch: 8, window: Duration::from_micros(200) },
+            policy: BatchPolicy { max_batch: 8, window: Duration::from_micros(200), ..Default::default() },
             engine: EngineSelect::HostFused,
             ..ServiceConfig::default()
         });
@@ -361,7 +361,7 @@ fn metrics_snapshot_json_matches_the_counters() {
     let svc = Service::start(ServiceConfig {
         artifact_dir: None,
         queue_cap: 64,
-        policy: BatchPolicy { max_batch: 8, window: Duration::from_micros(200) },
+        policy: BatchPolicy { max_batch: 8, window: Duration::from_micros(200), ..Default::default() },
         engine: EngineSelect::HostFused,
         ..ServiceConfig::default()
     });
